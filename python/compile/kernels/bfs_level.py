@@ -1,0 +1,140 @@
+"""L1: the GPUBFS level-expansion hot spot as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernel's
+thread↔column mapping becomes a **tile of columns in VMEM** — the grid
+iterates column blocks of size ``BC``; each grid step loads its ``(BC,)``
+slice of ``bfs_array`` and its dense ``(BC, K)`` ELL neighbor block (the
+TPU analogue of coalesced loads), gathers ``rmatch``/``bfs_array`` for the
+neighbors (the random-access part the C2050 did through L2), and emits
+per-edge *messages*:
+
+    target row (or NR for dead slots) , claiming column (or NC)
+
+The cross-block scatter-min that picks one winning column per row — the
+serialization of the CUDA write race — runs as an XLA segment-min outside
+the kernel ([`bfs_level`]), where the TPU compiler handles it natively.
+All shapes static; ``interpret=True`` everywhere (the CPU PJRT plugin
+cannot run Mosaic custom-calls).
+
+VMEM budget per grid step: BC·4 (bfs slice) + BC·K·4 (adj block)
++ NR·4 + NC·4 (full match/level arrays) bytes — e.g. 4096² bucket with
+K=16, BC=256: 256·4 + 16 KiB + 2·16 KiB ≈ 50 KiB, far under the ~16 MiB
+VMEM of a TPU core; the block size could grow 64× before pressure.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import L0
+
+DEFAULT_BLOCK_COLS = 256
+
+
+def _bfs_gather_kernel(level_ref, bfs_blk_ref, adj_blk_ref, bfs_full_ref,
+                       rmatch_ref, out_row_ref, out_col_ref):
+    """One grid step = one column tile.
+
+    Inputs:
+      level_ref:   (1,)    current BFS level (SMEM-like scalar input)
+      bfs_blk_ref: (BC,)   bfs_array slice for this tile
+      adj_blk_ref: (BC,K)  ELL rows for this tile (-1 pad)
+      bfs_full_ref:(NC,)   full bfs_array (for the col_match visited test)
+      rmatch_ref:  (NR,)   full rmatch
+    Outputs (this tile's message block):
+      out_row_ref: (BC,K)  target row, NR where no message
+      out_col_ref: (BC,K)  claiming column (global id), NC where none
+    """
+    level = level_ref[0]
+    bc, k = adj_blk_ref.shape
+    nc = bfs_full_ref.shape[0]
+    nr = rmatch_ref.shape[0]
+    blk = pl.program_id(0)
+
+    bfs_blk = bfs_blk_ref[...]
+    adj = adj_blk_ref[...]
+    rmatch = rmatch_ref[...]
+    bfs_full = bfs_full_ref[...]
+
+    active = bfs_blk == level  # (BC,)
+    valid = (adj >= 0) & active[:, None]  # (BC,K)
+    safe_rows = jnp.where(valid, adj, 0)
+    col_match = rmatch[safe_rows]  # gather (BC,K)
+    # a message is useful iff the row is free (endpoint) or its matched
+    # column is still unvisited — the kernel pre-filters so the global
+    # reduction only sees live edges (this is the win over doing it all
+    # in XLA: the gather + filter runs tile-local in VMEM)
+    cm_safe = jnp.where(col_match >= 0, col_match, 0)
+    useful = valid & (
+        (col_match == -1) | ((col_match >= 0) & (bfs_full[cm_safe] == L0 - 1))
+    )
+    global_cols = (
+        blk * bc + jax.lax.broadcasted_iota(jnp.int32, (bc, k), 0)
+    )
+    out_row_ref[...] = jnp.where(useful, adj, nr).astype(jnp.int32)
+    out_col_ref[...] = jnp.where(useful, global_cols, nc).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols",))
+def bfs_level(adj, bfs_array, rmatch, predecessor, level,
+              block_cols=DEFAULT_BLOCK_COLS):
+    """GPUBFS level expansion: Pallas gather/filter kernel + XLA scatter-min.
+
+    Same signature/semantics as `ref.bfs_level_ref` (min-col serialization).
+    NC must be a multiple of `block_cols` (the AOT buckets guarantee it).
+    """
+    nc, k = adj.shape
+    nr = rmatch.shape[0]
+    # shrink the tile until it divides NC (buckets are powers of two, so
+    # this only triggers for small ad-hoc shapes in tests)
+    while nc % block_cols != 0:
+        block_cols //= 2
+    grid = nc // block_cols
+
+    level_arr = jnp.asarray(level, dtype=jnp.int32).reshape((1,))
+    out_shape = (
+        jax.ShapeDtypeStruct((nc, k), jnp.int32),
+        jax.ShapeDtypeStruct((nc, k), jnp.int32),
+    )
+    msg_rows, msg_cols = pl.pallas_call(
+        _bfs_gather_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                # level
+            pl.BlockSpec((block_cols,), lambda i: (i,)),       # bfs slice
+            pl.BlockSpec((block_cols, k), lambda i: (i, 0)),   # adj tile
+            pl.BlockSpec((nc,), lambda i: (0,)),               # bfs full
+            pl.BlockSpec((nr,), lambda i: (0,)),               # rmatch
+        ],
+        out_specs=(
+            pl.BlockSpec((block_cols, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_cols, k), lambda i: (i, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(level_arr, bfs_array, adj, bfs_array, rmatch)
+
+    # ---- global winner selection (XLA scatter-min) ----
+    inf_col = jnp.int32(nc)
+    winner = (
+        jnp.full((nr + 1,), inf_col, dtype=jnp.int32)
+        .at[msg_rows.ravel()]
+        .min(msg_cols.ravel())
+    )[:nr]
+    reached = winner < inf_col
+
+    col_match = jnp.where(reached, rmatch, jnp.int32(-3))
+    is_endpoint = col_match == -1
+    is_matched = col_match >= 0
+    # the kernel already filtered visited columns, so every matched message
+    # row claims its column
+    bfs_next = bfs_array.at[jnp.where(is_matched, col_match, nc)].set(
+        jnp.asarray(level, jnp.int32) + 1, mode="drop"
+    )
+    pred_next = jnp.where(is_endpoint | is_matched, winner, predecessor)
+    rmatch_next = jnp.where(is_endpoint, jnp.int32(-2), rmatch)
+    vertex_inserted = jnp.any(is_matched)
+    aug_found = jnp.any(is_endpoint)
+    return bfs_next, rmatch_next, pred_next, vertex_inserted, aug_found

@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for the L1 kernels.
+
+Deterministic, race-free reformulation of the paper's GPUBFS level kernel
+(Algorithm 2) over an ELL-packed adjacency:
+
+* the CUDA race "several frontier columns claim the same row" is resolved
+  by the **minimum column index** (one of the legal serializations of the
+  hardware race — see DESIGN.md §Hardware-Adaptation);
+* all shapes are static: ``adj`` is ``(NC, K)`` int32 with ``-1`` padding,
+  ``K >= max column degree``.
+
+Conventions (identical to the paper / rust side):
+  rmatch[r] = c (matched), -1 (free), -2 (augmenting-path endpoint)
+  bfs_array[c] = L0-1 (matched, unvisited), L0 (BFS root), level+1 (claimed)
+"""
+
+import jax.numpy as jnp
+
+L0 = 2  # BFS start level; live levels stay positive (paper §3)
+
+
+def bfs_level_ref(adj, bfs_array, rmatch, predecessor, level):
+    """One GPUBFS level expansion; the min-col-wins serialization.
+
+    Args:
+      adj:        (NC, K) int32, row ids, -1 padding.
+      bfs_array:  (NC,)   int32.
+      rmatch:     (NR,)   int32.
+      predecessor:(NR,)   int32.
+      level:      scalar  int32, current BFS level.
+
+    Returns:
+      (bfs_array', rmatch', predecessor', vertex_inserted, aug_found)
+    """
+    nc, k = adj.shape
+    nr = rmatch.shape[0]
+    inf_col = jnp.int32(nc)  # > any real column id
+
+    active = bfs_array == level  # (NC,)
+    valid = (adj >= 0) & active[:, None]  # (NC, K)
+    # rows with an already-found endpoint (-2) are not re-claimed; free (-1)
+    # and matched (>=0) rows are both candidates at this stage.
+    safe_rows = jnp.where(valid, adj, nr).astype(jnp.int32)  # pad -> NR slot
+    col_ids = jnp.broadcast_to(
+        jnp.arange(nc, dtype=jnp.int32)[:, None], (nc, k)
+    )
+    cand_cols = jnp.where(valid, col_ids, inf_col)
+
+    # winner column per row: scatter-min into an (NR+1,) buffer
+    winner = (
+        jnp.full((nr + 1,), inf_col, dtype=jnp.int32)
+        .at[safe_rows.ravel()]
+        .min(cand_cols.ravel())
+    )[:nr]
+    reached = winner < inf_col  # (NR,)
+
+    col_match = jnp.where(reached, rmatch, jnp.int32(-3))  # -3 = untouched
+    is_endpoint = col_match == -1
+    is_matched = col_match >= 0
+    cm_idx = jnp.where(is_matched, col_match, 0)
+    unvisited = is_matched & (bfs_array[cm_idx] == L0 - 1)
+
+    # claim the matched columns of newly-reached rows
+    bfs_next = bfs_array.at[jnp.where(unvisited, col_match, nc)].set(
+        level + 1, mode="drop"
+    )
+    pred_next = jnp.where(is_endpoint | unvisited, winner, predecessor)
+    rmatch_next = jnp.where(is_endpoint, jnp.int32(-2), rmatch)
+
+    vertex_inserted = jnp.any(unvisited)
+    aug_found = jnp.any(is_endpoint)
+    return bfs_next, rmatch_next, pred_next, vertex_inserted, aug_found
+
+
+def init_bfs_array_ref(cmatch):
+    """INITBFSARRAY: L0-1 for matched columns, L0 for unmatched."""
+    return jnp.where(cmatch > -1, jnp.int32(L0 - 1), jnp.int32(L0))
+
+
+def fixmatching_ref(rmatch, cmatch):
+    """FIXMATCHING: clear -2 sentinels and dangling pointers (both sides),
+    keeping exactly the mutually-consistent pairs."""
+    nr = rmatch.shape[0]
+    nc = cmatch.shape[0]
+    r_ids = jnp.arange(nr, dtype=jnp.int32)
+    c_ids = jnp.arange(nc, dtype=jnp.int32)
+    r_ok = (rmatch >= 0) & (cmatch[jnp.clip(rmatch, 0, nc - 1)] == r_ids)
+    rmatch_f = jnp.where(r_ok, rmatch, jnp.int32(-1))
+    c_ok = (cmatch >= 0) & (rmatch_f[jnp.clip(cmatch, 0, nr - 1)] == c_ids)
+    cmatch_f = jnp.where(c_ok, cmatch, jnp.int32(-1))
+    return rmatch_f, cmatch_f

@@ -1,0 +1,154 @@
+"""L2: the paper's full GPU matching algorithm (APFB / APsB) as a single
+JAX program — `lax.while_loop`s around the L1 Pallas level kernel, the
+lockstep ALTERNATE, and FIXMATCHING — so the *entire* matching phase AOT-
+lowers to one HLO module that the Rust runtime executes with Python gone.
+
+Determinism: every CUDA race is resolved min-index (see kernels/ref.py);
+ALTERNATE advances all augmenting paths in exact lockstep, so per phase the
+shallowest path of every BFS tree completes (the progress argument in
+DESIGN.md §6), bounding the outer loop by NC+2 phases.
+
+Conventions as everywhere: rmatch/cmatch with -1 free, -2 endpoint
+sentinel; bfs_array levels starting at L0 = 2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import bfs_level as bfs_level_mod
+from .kernels.ref import L0, bfs_level_ref, fixmatching_ref, init_bfs_array_ref
+
+
+def _bfs_phase(adj, rmatch, cmatch, use_pallas, shortest):
+    """One combined-BFS phase from all unmatched columns.
+
+    Returns (rmatch', predecessor, aug_found, launches)."""
+    nc, _ = adj.shape
+    nr = rmatch.shape[0]
+    bfs_array = init_bfs_array_ref(cmatch)
+    predecessor = jnp.full((nr,), -1, dtype=jnp.int32)
+
+    step = bfs_level_mod.bfs_level if use_pallas else bfs_level_ref
+
+    def cond(state):
+        _, _, _, _, vi, aug, level = state
+        go = vi
+        if shortest:  # APsB: stop at the first level with a path
+            go = go & jnp.logical_not(aug)
+        # level bound: alternating BFS depth can't exceed nc+2
+        return go & (level < L0 + nc + 2)
+
+    def body(state):
+        bfs, rm, pred, launches, _, aug, level = state
+        bfs2, rm2, pred2, vi2, aug2 = step(adj, bfs, rm, pred, level)
+        return (bfs2, rm2, pred2, launches + 1, vi2, aug | aug2, level + 1)
+
+    init = (
+        bfs_array,
+        rmatch,
+        predecessor,
+        jnp.int32(0),
+        jnp.bool_(True),
+        jnp.bool_(False),
+        jnp.int32(L0),
+    )
+    # do-while: run the first level unconditionally via init vi=True
+    _, rm, pred, launches, _, aug, _ = lax.while_loop(cond, body, init)
+    return rm, pred, aug, launches
+
+
+def _alternate_lockstep(rmatch, cmatch, predecessor):
+    """ALTERNATE (Algorithm 3) with all endpoint threads advancing in exact
+    lockstep; column-claim races resolved min-row. Returns (rmatch',
+    cmatch')."""
+    nr = rmatch.shape[0]
+    nc = cmatch.shape[0]
+    inf_row = jnp.int32(nr)
+
+    # one logical thread per endpoint row
+    row_ids = jnp.arange(nr, dtype=jnp.int32)
+    row_vertex = jnp.where(rmatch == -2, row_ids, jnp.int32(-1))
+
+    def cond(state):
+        rv, _, _, it = state
+        return jnp.any(rv >= 0) & (it < nr + nc + 2)
+
+    def body(state):
+        rv, rm, cm, it = state
+        active0 = rv >= 0
+        rv_safe = jnp.where(active0, rv, 0)
+        mc = predecessor[rv_safe]  # matched_col, line 6
+        active1 = active0 & (mc >= 0)
+        mc_safe = jnp.where(active1, mc, 0)
+        mr = cm[mc_safe]  # matched_row, line 7
+        mr_safe = jnp.clip(mr, 0, nr - 1)
+        # line 8: column already claimed by another alternation
+        stop = (mr > -1) & (predecessor[mr_safe] == mc)
+        act = active1 & ~stop
+
+        # writes (lines 10-11): all active lanes write rmatch; the column
+        # write is won by the minimum row_vertex (one legal serialization)
+        rm2 = rm.at[jnp.where(act, rv_safe, nr)].set(
+            jnp.where(act, mc, 0), mode="drop"
+        )
+        col_winner = (
+            jnp.full((nc + 1,), inf_row, dtype=jnp.int32)
+            .at[jnp.where(act, mc_safe, nc)]
+            .min(jnp.where(act, rv_safe, inf_row))
+        )[:nc]
+        cm2 = jnp.where(col_winner < inf_row, col_winner, cm)
+
+        # line 12: advance (root reached when mr == -1)
+        rv2 = jnp.where(act & (mr != -1), mr, jnp.int32(-1))
+        return (rv2, rm2, cm2, it + 1)
+
+    _, rm, cm, _ = lax.while_loop(
+        cond, body, (row_vertex, rmatch, cmatch, jnp.int32(0))
+    )
+    return rm, cm
+
+
+def _matching_phase_loop(adj, rmatch, cmatch, use_pallas, shortest):
+    """The outer Algorithm-1 loop. Returns (rmatch, cmatch, phases,
+    launches)."""
+    nc, _ = adj.shape
+
+    def cond(state):
+        _, _, aug, phases, _ = state
+        return aug & (phases < nc + 2)
+
+    def body(state):
+        rm, cm, _, phases, launches = state
+        rm1, pred, aug, l1 = _bfs_phase(adj, rm, cm, use_pallas, shortest)
+        rm2, cm2 = _alternate_lockstep(rm1, cm, pred)
+        rm3, cm3 = fixmatching_ref(rm2, cm2)
+        return (rm3, cm3, aug, phases + 1, launches + l1)
+
+    rm, cm, _, phases, launches = lax.while_loop(
+        cond,
+        body,
+        (rmatch, cmatch, jnp.bool_(True), jnp.int32(0), jnp.int32(0)),
+    )
+    return rm, cm, phases, launches
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "shortest"))
+def apfb_full(adj, rmatch, cmatch, use_pallas=True, shortest=False):
+    """APFB (shortest=False) / APsB (shortest=True) end to end.
+
+    Args:
+      adj:    (NC, K) int32 ELL adjacency, -1 padding, K >= max col degree.
+      rmatch: (NR,) int32 initial matching (e.g. from the cheap heuristic).
+      cmatch: (NC,) int32.
+
+    Returns:
+      (rmatch, cmatch, phases, bfs_launches) — a *maximum* matching.
+    """
+    return _matching_phase_loop(adj, rmatch, cmatch, use_pallas, shortest)
+
+
+def cardinality(cmatch):
+    return jnp.sum(cmatch >= 0)

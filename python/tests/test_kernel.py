@@ -1,0 +1,180 @@
+"""L1 correctness: the Pallas bfs_level kernel against the pure-jnp oracle
+(kernels/ref.py), swept over shapes, densities, matching states, and levels
+with hypothesis."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    L0,
+    bfs_level_ref,
+    fixmatching_ref,
+    init_bfs_array_ref,
+)
+from compile.kernels.bfs_level import bfs_level
+
+
+def random_instance(rng, nc, nr, k, match_frac=0.0, endpoint_frac=0.0):
+    """A random ELL graph plus a consistent partial matching state."""
+    adj = np.full((nc, k), -1, np.int32)
+    for c in range(nc):
+        deg = rng.integers(0, min(k, nr) + 1)
+        if deg:
+            rows = np.sort(rng.choice(nr, size=deg, replace=False))
+            adj[c, :deg] = rows
+    rmatch = np.full(nr, -1, np.int32)
+    cmatch = np.full(nc, -1, np.int32)
+    # random consistent matching over existing edges
+    for c in rng.permutation(nc):
+        if rng.random() < match_frac:
+            rows = adj[c][adj[c] >= 0]
+            rows = [r for r in rows if rmatch[r] == -1]
+            if rows:
+                r = int(rng.choice(rows))
+                rmatch[r] = c
+                cmatch[c] = r
+    # sprinkle endpoint sentinels on some free rows (mid-phase state)
+    for r in range(nr):
+        if rmatch[r] == -1 and rng.random() < endpoint_frac:
+            rmatch[r] = -2
+    return adj, rmatch, cmatch
+
+
+def run_both(adj, bfs, rmatch, pred, level, block_cols=256):
+    ref = bfs_level_ref(
+        jnp.array(adj), jnp.array(bfs), jnp.array(rmatch), jnp.array(pred),
+        jnp.int32(level),
+    )
+    pal = bfs_level(
+        jnp.array(adj), jnp.array(bfs), jnp.array(rmatch), jnp.array(pred),
+        jnp.int32(level), block_cols=block_cols,
+    )
+    return ref, pal
+
+
+def assert_same(ref, pal):
+    names = ["bfs_array", "rmatch", "predecessor", "vertex_inserted", "aug_found"]
+    for a, b, n in zip(ref, pal, names):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=n)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nc=st.integers(1, 48),
+    nr=st.integers(1, 48),
+    k=st.integers(1, 6),
+    match_frac=st.floats(0.0, 1.0),
+    endpoint_frac=st.floats(0.0, 0.4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref_first_level(nc, nr, k, match_frac, endpoint_frac, seed):
+    rng = np.random.default_rng(seed)
+    adj, rmatch, cmatch = random_instance(rng, nc, nr, k, match_frac, endpoint_frac)
+    bfs = np.asarray(init_bfs_array_ref(jnp.array(cmatch)))
+    pred = np.full(nr, -1, np.int32)
+    ref, pal = run_both(adj, bfs, rmatch, pred, L0)
+    assert_same(ref, pal)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nc=st.integers(4, 32),
+    nr=st.integers(4, 32),
+    k=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref_across_levels(nc, nr, k, seed):
+    """Run a whole phase level by level, comparing after every launch."""
+    rng = np.random.default_rng(seed)
+    adj, rmatch, cmatch = random_instance(rng, nc, nr, k, match_frac=0.6)
+    bfs_r = jnp.array(np.asarray(init_bfs_array_ref(jnp.array(cmatch))))
+    bfs_p = bfs_r
+    rm_r = rm_p = jnp.array(rmatch)
+    pred_r = pred_p = jnp.full((nr,), -1, jnp.int32)
+    for level in range(L0, L0 + nc + 2):
+        ref = bfs_level_ref(jnp.array(adj), bfs_r, rm_r, pred_r, jnp.int32(level))
+        pal = bfs_level(jnp.array(adj), bfs_p, rm_p, pred_p, jnp.int32(level))
+        assert_same(ref, pal)
+        bfs_r, rm_r, pred_r, vi, _ = ref
+        bfs_p, rm_p, pred_p, _, _ = pal
+        if not bool(vi):
+            break
+
+
+@pytest.mark.parametrize("block_cols", [1, 2, 8, 64, 256])
+def test_block_size_invariance(block_cols):
+    """The tile size is a performance knob — results must be identical."""
+    rng = np.random.default_rng(1234)
+    adj, rmatch, cmatch = random_instance(rng, 64, 64, 4, match_frac=0.5)
+    bfs = np.asarray(init_bfs_array_ref(jnp.array(cmatch)))
+    pred = np.full(64, -1, np.int32)
+    ref, pal = run_both(adj, bfs, rmatch, pred, L0, block_cols=block_cols)
+    assert_same(ref, pal)
+
+
+def test_empty_graph():
+    adj = np.full((4, 2), -1, np.int32)
+    rmatch = np.full(3, -1, np.int32)
+    bfs = np.full(4, L0, np.int32)
+    pred = np.full(3, -1, np.int32)
+    ref, pal = run_both(adj, bfs, rmatch, pred, L0)
+    assert_same(ref, pal)
+    assert not bool(ref[3]) and not bool(ref[4])
+
+
+def test_min_col_wins_determinism():
+    """Two frontier columns adjacent to the same free row: the smaller
+    column id must claim it (the chosen serialization)."""
+    adj = np.array([[0], [0]], np.int32)  # c0 and c1 both adjacent to r0
+    rmatch = np.array([-1], np.int32)
+    bfs = np.array([L0, L0], np.int32)
+    pred = np.array([-1], np.int32)
+    ref, pal = run_both(adj, bfs, rmatch, pred, L0)
+    assert_same(ref, pal)
+    assert np.asarray(ref[2])[0] == 0  # predecessor = min col
+    assert np.asarray(ref[1])[0] == -2
+
+
+def test_visited_columns_not_reclaimed():
+    """A matched column already at a BFS level must not be claimed again."""
+    # c0 free -> r0 matched to c1 (bfs_array[c1] visited already)
+    adj = np.array([[0], [-1]], np.int32)
+    rmatch = np.array([1], np.int32)
+    bfs = np.array([L0, L0 + 1], np.int32)  # c1 already claimed
+    pred = np.array([-1], np.int32)
+    ref, pal = run_both(adj, bfs, rmatch, pred, L0)
+    assert_same(ref, pal)
+    assert np.asarray(ref[0])[1] == L0 + 1  # unchanged
+    assert not bool(ref[3])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nr=st.integers(1, 40),
+    nc=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fixmatching_keeps_only_consistent_pairs(nr, nc, seed):
+    rng = np.random.default_rng(seed)
+    rmatch = rng.integers(-2, nc, size=nr).astype(np.int32)
+    cmatch = rng.integers(-2, nr, size=nc).astype(np.int32)
+    cmatch[cmatch == -2] = -1  # cmatch never carries the -2 sentinel
+    rm, cm = fixmatching_ref(jnp.array(rmatch), jnp.array(cmatch))
+    rm, cm = np.asarray(rm), np.asarray(cm)
+    for r in range(nr):
+        if rm[r] >= 0:
+            assert cm[rm[r]] == r
+        else:
+            assert rm[r] == -1
+    for c in range(nc):
+        if cm[c] >= 0:
+            assert rm[cm[c]] == c
+        else:
+            assert cm[c] == -1
+    # every pair that was consistent beforehand survives
+    for r in range(nr):
+        c = rmatch[r]
+        if c >= 0 and cmatch[c] == r:
+            assert rm[r] == c and cm[c] == r

@@ -1,0 +1,171 @@
+"""L2 correctness: the full JAX APFB/APsB matcher against
+scipy.sparse.csgraph.maximum_bipartite_matching (an independent
+Hopcroft–Karp), over hypothesis-generated graphs and structured cases."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import maximum_bipartite_matching
+
+from compile import model
+
+
+def make_ell(rng, nc, nr, k):
+    adj = np.full((nc, k), -1, np.int32)
+    edges = set()
+    for c in range(nc):
+        deg = rng.integers(0, min(k, nr) + 1)
+        if deg:
+            rows = np.sort(rng.choice(nr, size=deg, replace=False))
+            adj[c, :deg] = rows
+            for r in rows:
+                edges.add((int(r), c))
+    return adj, edges
+
+
+def scipy_opt(edges, nr, nc):
+    if not edges:
+        return 0
+    rows = [e[0] for e in edges]
+    cols = [e[1] for e in edges]
+    m = csr_matrix((np.ones(len(rows)), (rows, cols)), shape=(nr, nc))
+    return int((maximum_bipartite_matching(m, perm_type="column") >= 0).sum())
+
+
+def check_valid(rm, cm, edges):
+    for c in range(len(cm)):
+        if cm[c] >= 0:
+            assert rm[cm[c]] == c, f"col {c} inconsistent"
+            assert (int(cm[c]), c) in edges, f"({cm[c]},{c}) not an edge"
+        else:
+            assert cm[c] == -1
+    for r in range(len(rm)):
+        if rm[r] >= 0:
+            assert cm[rm[r]] == r, f"row {r} inconsistent"
+        else:
+            assert rm[r] == -1, f"row {r} leftover sentinel {rm[r]}"
+
+
+def run_model(adj, nr, use_pallas=True, shortest=False, init=None):
+    nc = adj.shape[0]
+    rmatch = np.full(nr, -1, np.int32)
+    cmatch = np.full(nc, -1, np.int32)
+    if init is not None:
+        for r, c in init:
+            rmatch[r] = c
+            cmatch[c] = r
+    rm, cm, phases, launches = model.apfb_full(
+        jnp.array(adj), jnp.array(rmatch), jnp.array(cmatch),
+        use_pallas=use_pallas, shortest=shortest,
+    )
+    return np.asarray(rm), np.asarray(cm), int(phases), int(launches)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nc=st.integers(1, 32),
+    nr=st.integers(1, 32),
+    k=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_apfb_optimal_vs_scipy(nc, nr, k, seed):
+    rng = np.random.default_rng(seed)
+    adj, edges = make_ell(rng, nc, nr, k)
+    rm, cm, _, _ = run_model(adj, nr)
+    check_valid(rm, cm, edges)
+    assert (cm >= 0).sum() == scipy_opt(edges, nr, nc)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nc=st.integers(2, 24),
+    nr=st.integers(2, 24),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_apsb_optimal_vs_scipy(nc, nr, k, seed):
+    """shortest=True is Algorithm 1 verbatim (APsB)."""
+    rng = np.random.default_rng(seed)
+    adj, edges = make_ell(rng, nc, nr, k)
+    rm, cm, _, _ = run_model(adj, nr, shortest=True)
+    check_valid(rm, cm, edges)
+    assert (cm >= 0).sum() == scipy_opt(edges, nr, nc)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nc=st.integers(2, 24),
+    nr=st.integers(2, 24),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_apfb_with_greedy_init(nc, nr, k, seed):
+    """Starting from a cheap greedy matching must give the same optimum."""
+    rng = np.random.default_rng(seed)
+    adj, edges = make_ell(rng, nc, nr, k)
+    # greedy init
+    rmatch = np.full(nr, -1, np.int32)
+    init = []
+    for c in range(nc):
+        for r in adj[c]:
+            if r >= 0 and rmatch[r] == -1:
+                rmatch[r] = c
+                init.append((int(r), c))
+                break
+    rm, cm, _, _ = run_model(adj, nr, init=init)
+    check_valid(rm, cm, edges)
+    assert (cm >= 0).sum() == scipy_opt(edges, nr, nc)
+
+
+def test_pallas_and_ref_paths_agree():
+    rng = np.random.default_rng(7)
+    adj, edges = make_ell(rng, 40, 40, 4)
+    rm1, cm1, p1, l1 = run_model(adj, 40, use_pallas=True)
+    rm2, cm2, p2, l2 = run_model(adj, 40, use_pallas=False)
+    np.testing.assert_array_equal(rm1, rm2)
+    np.testing.assert_array_equal(cm1, cm2)
+    assert (p1, l1) == (p2, l2)
+
+
+def test_perfect_matching_planted():
+    n = 64
+    rng = np.random.default_rng(3)
+    perm = rng.permutation(n)
+    k = 4
+    adj = np.full((n, k), -1, np.int32)
+    for c in range(n):
+        extras = rng.choice(n, size=k - 1, replace=False)
+        rows = np.unique(np.concatenate([[perm[c]], extras]))[:k]
+        adj[c, : len(rows)] = np.sort(rows)
+    rm, cm, _, _ = run_model(adj, n)
+    assert (cm >= 0).sum() == n
+
+
+def test_empty_and_star():
+    # no edges at all
+    adj = np.full((5, 2), -1, np.int32)
+    rm, cm, phases, _ = run_model(adj, 5)
+    assert (cm >= 0).sum() == 0
+    # star: every column adjacent to the single row
+    adj = np.zeros((6, 1), np.int32)
+    rm, cm, _, _ = run_model(adj, 1)
+    assert (cm >= 0).sum() == 1
+
+
+def test_phase_and_launch_counters_populated():
+    rng = np.random.default_rng(11)
+    adj, _ = make_ell(rng, 32, 32, 3)
+    _, _, phases, launches = run_model(adj, 32)
+    assert phases >= 1
+    assert launches >= phases  # at least one BFS launch per phase
+
+
+@pytest.mark.parametrize("nc,nr", [(8, 32), (32, 8), (1, 16), (16, 1)])
+def test_rectangular_shapes(nc, nr):
+    rng = np.random.default_rng(nc * 100 + nr)
+    adj, edges = make_ell(rng, nc, nr, 3)
+    rm, cm, _, _ = run_model(adj, nr)
+    check_valid(rm, cm, edges)
+    assert (cm >= 0).sum() == scipy_opt(edges, nr, nc)

@@ -1,0 +1,104 @@
+//! Ablations of the design choices DESIGN.md calls out (§4 text claims
+//! plus our own knobs):
+//!
+//! * CT vs MT thread mapping (paper: "CT always increases performance")
+//! * GPUBFS-WR vs GPUBFS (paper: "GPUBFS-WR is always faster")
+//! * write-arbitration order (Forward/Reverse/Shuffled) — result must stay
+//!   optimal, work may shift (robustness of FIXMATCHING)
+//! * init heuristic (none / cheap / Karp–Sipser) on end-to-end time
+
+mod common;
+
+use bimatch::gpu::{ApDriver, BfsKernel, GpuConfig, GpuMatcher, ThreadMapping, WriteOrder};
+use bimatch::graph::gen::Family;
+use bimatch::matching::init::InitHeuristic;
+use bimatch::matching::reference_max_cardinality;
+use bimatch::MatchingAlgorithm;
+use bimatch::util::table::Table;
+use bimatch::util::timer::Timer;
+
+fn main() {
+    let e = common::env();
+    // > 65 536 columns so the CT grid actually amortizes (the paper's
+    // CT-vs-MT effect only exists beyond the constant grid size)
+    let n = if e.scale.name() == "large" { 300_000 } else { 100_000 };
+    let graphs: Vec<(String, bimatch::graph::BipartiteCsr)> = [Family::Kron, Family::Road, Family::Banded]
+        .iter()
+        .map(|f| (f.name().to_string(), f.generate(n, 11)))
+        .collect();
+
+    // ---- CT vs MT and WR vs plain (modeled device ms) ----
+    let mut t = Table::new(vec!["graph", "BFS-MT", "BFS-CT", "WR-MT", "WR-CT", "CT gain", "WR gain"]);
+    for (name, g) in &graphs {
+        let init = InitHeuristic::Cheap.run(g);
+        let mut dev = Vec::new();
+        for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
+            for mapping in [ThreadMapping::Mt, ThreadMapping::Ct] {
+                let cfg = GpuConfig { driver: ApDriver::Apfb, kernel, mapping, ..Default::default() };
+                let (r, clock) = GpuMatcher::new(cfg).run_with_clock(g, init.clone());
+                r.matching.certify(g).unwrap();
+                dev.push(clock.as_device_ms());
+            }
+        }
+        t.row(vec![
+            name.clone(),
+            format!("{:.2}", dev[0]),
+            format!("{:.2}", dev[1]),
+            format!("{:.2}", dev[2]),
+            format!("{:.2}", dev[3]),
+            format!("{:.2}x", dev[2] / dev[3].max(1e-9)), // WR: MT/CT
+            format!("{:.2}x", dev[1] / dev[3].max(1e-9)), // CT: plain/WR
+        ]);
+    }
+    common::emit("Ablation A1a — mapping & kernel (modeled device ms, APFB)", &t.render());
+
+    // ---- write-order robustness ----
+    let mut t = Table::new(vec!["graph", "order", "card ok", "fixes", "fallbacks", "wall s"]);
+    for (name, g) in &graphs {
+        let want = reference_max_cardinality(g);
+        for (oname, order) in [
+            ("forward", WriteOrder::Forward),
+            ("reverse", WriteOrder::Reverse),
+            ("shuffled", WriteOrder::Shuffled),
+        ] {
+            let cfg = GpuConfig { write_order: order, seed: 0xAB1E, ..Default::default() };
+            let init = InitHeuristic::Cheap.run(g);
+            let timer = Timer::start();
+            let r = GpuMatcher::new(cfg).run(g, init);
+            let wall = timer.elapsed_secs();
+            r.matching.certify(g).unwrap();
+            t.row(vec![
+                name.clone(),
+                oname.into(),
+                (r.matching.cardinality() == want).to_string(),
+                r.stats.fixes.to_string(),
+                r.stats.fallbacks.to_string(),
+                format!("{wall:.4}"),
+            ]);
+        }
+    }
+    common::emit("Ablation A1b — write-arbitration order", &t.render());
+
+    // ---- init heuristic ablation (end-to-end = init + matching) ----
+    let mut t = Table::new(vec!["graph", "init", "init card", "final card", "init s", "match s"]);
+    for (name, g) in &graphs {
+        for h in [InitHeuristic::None, InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
+            let t0 = Timer::start();
+            let init = h.run(g);
+            let t_init = t0.elapsed_secs();
+            let init_card = init.cardinality();
+            let t1 = Timer::start();
+            let r = GpuMatcher::default().run(g, init);
+            let t_match = t1.elapsed_secs();
+            t.row(vec![
+                name.clone(),
+                h.name().into(),
+                init_card.to_string(),
+                r.matching.cardinality().to_string(),
+                format!("{t_init:.4}"),
+                format!("{t_match:.4}"),
+            ]);
+        }
+    }
+    common::emit("Ablation A1c — initialization heuristic", &t.render());
+}

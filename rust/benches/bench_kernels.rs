@@ -1,0 +1,155 @@
+//! Kernel microbenchmarks (§Perf instrumentation): per-kernel wall-clock
+//! of the native simulator's hot paths, plus the XLA-artifact level kernel
+//! when `artifacts/` is present — quantifying the host↔device boundary
+//! cost that DESIGN.md §Perf discusses.
+
+mod common;
+
+use bimatch::gpu::device::DeviceClock;
+use bimatch::gpu::kernels::{alternate, fixmatching, gpubfs, gpubfs_wr, init_bfs_array, GpuState, LaunchCfg, L0};
+use bimatch::gpu::{ThreadMapping, WriteOrder};
+use bimatch::graph::gen::Family;
+use bimatch::matching::init::InitHeuristic;
+use bimatch::matching::Matching;
+use bimatch::runtime::Engine;
+use bimatch::util::table::Table;
+use bimatch::util::timer::Timer;
+use std::sync::Arc;
+
+fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // one warmup, then best-of-reps (microbench convention)
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_secs());
+    }
+    best
+}
+
+fn main() {
+    let e = common::env();
+    let n = if e.scale.name() == "large" { 40_000 } else { 10_000 };
+    let g = Family::Kron.generate(n, 5);
+    let init = InitHeuristic::Cheap.run(&g);
+    let cfg = LaunchCfg { mapping: ThreadMapping::Ct, order: WriteOrder::Forward, seed: 0 };
+    let mut t = Table::new(vec!["kernel", "best secs", "per edge ns"]);
+    let edges = g.n_edges() as f64;
+
+    // INITBFSARRAY
+    let mut st = GpuState::new(&g, &init);
+    let mut clock = DeviceClock::default();
+    let secs = bench(5, || init_bfs_array(&mut st, cfg, true, &mut clock));
+    t.row(vec!["init_bfs_array".into(), format!("{secs:.6}"), format!("{:.1}", secs * 1e9 / edges)]);
+
+    // GPUBFS first level (full frontier)
+    init_bfs_array(&mut st, cfg, false, &mut clock);
+    let base = st.clone();
+    let secs = bench(5, || {
+        st = base.clone();
+        gpubfs(&g, &mut st, L0, cfg, &mut clock);
+    });
+    t.row(vec!["gpubfs (level L0)".into(), format!("{secs:.6}"), format!("{:.1}", secs * 1e9 / edges)]);
+
+    // GPUBFS-WR first level
+    let mut st2 = GpuState::new(&g, &init);
+    init_bfs_array(&mut st2, cfg, true, &mut clock);
+    let base2 = st2.clone();
+    let secs = bench(5, || {
+        st2 = base2.clone();
+        gpubfs_wr(&g, &mut st2, L0, cfg, false, &mut clock);
+    });
+    t.row(vec!["gpubfs_wr (level L0)".into(), format!("{secs:.6}"), format!("{:.1}", secs * 1e9 / edges)]);
+
+    // ALTERNATE + FIXMATCHING on a real mid-phase state
+    let mut st3 = GpuState::new(&g, &init);
+    init_bfs_array(&mut st3, cfg, false, &mut clock);
+    let mut level = L0;
+    loop {
+        st3.vertex_inserted = false;
+        gpubfs(&g, &mut st3, level, cfg, &mut clock);
+        if !st3.vertex_inserted {
+            break;
+        }
+        level += 1;
+    }
+    let base3 = st3.clone();
+    let secs = bench(5, || {
+        st3 = base3.clone();
+        alternate(&mut st3, cfg, None, &mut clock);
+    });
+    t.row(vec!["alternate (full phase)".into(), format!("{secs:.6}"), format!("{:.1}", secs * 1e9 / edges)]);
+    let base4 = st3.clone();
+    let secs = bench(5, || {
+        st3 = base4.clone();
+        fixmatching(&mut st3, cfg, &mut clock);
+    });
+    t.row(vec!["fixmatching".into(), format!("{secs:.6}"), format!("{:.1}", secs * 1e9 / edges)]);
+
+    // cheap init for reference
+    let secs = bench(5, || {
+        let _ = InitHeuristic::Cheap.run(&g);
+    });
+    t.row(vec!["cheap init (host)".into(), format!("{secs:.6}"), format!("{:.1}", secs * 1e9 / edges)]);
+
+    common::emit("kernel microbenchmarks (native simulator)", &t.render());
+
+    // XLA artifact path, if built
+    match Engine::open_default() {
+        Ok(engine) => {
+            let engine = Arc::new(engine);
+            let mut t = Table::new(vec!["xla path", "secs", "note"]);
+            let small = Family::Uniform.generate(900, 3);
+            let sinit = InitHeuristic::Cheap.run(&small);
+            let m = bimatch::gpu::xla_backend::XlaApfbMatcher::new(engine.clone());
+            match m.try_run(&small, &sinit) {
+                Ok(_) => {
+                    // compile is cached now; time pure execution
+                    let secs = bench(3, || {
+                        let _ = m.try_run(&small, &sinit);
+                    });
+                    t.row(vec![
+                        "apfb_full artifact (n=900)".into(),
+                        format!("{secs:.4}"),
+                        "full matching on PJRT".into(),
+                    ]);
+                }
+                Err(err) => {
+                    t.row(vec!["apfb_full artifact".into(), "-".into(), format!("{err}")]);
+                }
+            }
+            let h = bimatch::gpu::xla_backend::XlaHybridMatcher::new(engine);
+            match h.try_run(&small, &sinit) {
+                Ok(r) => {
+                    let secs = bench(3, || {
+                        let _ = h.try_run(&small, &sinit);
+                    });
+                    t.row(vec![
+                        format!("bfs_level hybrid ({} launches)", r.stats.bfs_kernel_launches),
+                        format!("{secs:.4}"),
+                        "per-level host<->device".into(),
+                    ]);
+                }
+                Err(err) => {
+                    t.row(vec!["bfs_level hybrid".into(), "-".into(), format!("{err}")]);
+                }
+            }
+            // native matcher on the same small graph, for the boundary-cost
+            // comparison
+            let native = bimatch::gpu::GpuMatcher::default();
+            use bimatch::MatchingAlgorithm;
+            let secs = bench(3, || {
+                let _ = native.run(&small, sinit.clone());
+            });
+            t.row(vec!["native simulator (same graph)".into(), format!("{secs:.4}"), String::new()]);
+            common::emit("XLA artifact path", &t.render());
+        }
+        Err(e) => {
+            common::emit(
+                "XLA artifact path",
+                &format!("artifacts not available ({e:#}); run `make artifacts` first\n"),
+            );
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Table 1 — geometric mean running time of the 8 GPU variants
+//! (APFB/APsB × GPUBFS/GPUBFS-WR × MT/CT) on the four instance sets
+//! O_S1, O_HardestK, RCP_S1, RCP_HardestK.
+//!
+//! Two tables are printed: modeled device time (the cost model that
+//! stands in for the C2050 — this is where the paper's CT>MT and WR>plain
+//! orderings live) and host wall-clock of the simulator.
+//!
+//! Expected shape (paper §4): CT ≤ MT per variant; GPUBFS-WR ≤ GPUBFS;
+//! APFB ≤ APsB overall; APFB-GPUBFS-WR-CT best overall.
+
+mod common;
+
+use bimatch::gpu::GpuConfig;
+use bimatch::harness::report::geomean_over;
+use bimatch::util::table::Table;
+
+fn main() {
+    let mut e = common::env();
+    println!(
+        "Table 1 reproduction (scale={}, S1 threshold={}s)",
+        e.scale.name(),
+        common::s1_threshold()
+    );
+    let (o_s1, o_hard, r_s1, r_hard) = common::paper_sets(&mut e);
+    let variants: Vec<String> = GpuConfig::all_variants()
+        .iter()
+        .map(|c| format!("gpu:{}", c.name()))
+        .collect();
+
+    // measure all variants on the union of the sets
+    let mut all_instances = Vec::new();
+    for set in [&o_s1, &o_hard, &r_s1, &r_hard] {
+        for i in set.iter() {
+            if !all_instances.contains(i) {
+                all_instances.push(*i);
+            }
+        }
+    }
+    let algo_names: Vec<&str> = variants.iter().map(|s| s.as_str()).collect();
+    let records = e.evaluator.sweep(&all_instances, &algo_names);
+
+    let sets = [
+        ("O_S1", common::names(&o_s1)),
+        ("O_Hardest", common::names(&o_hard)),
+        ("RCP_S1", common::names(&r_s1)),
+        ("RCP_Hardest", common::names(&r_hard)),
+    ];
+
+    for (title, use_device) in [("modeled device ms", true), ("host wall-clock s", false)] {
+        let mut t = Table::new(vec![
+            "set", "|set|",
+            "APFB-BFS-MT", "APFB-BFS-CT", "APFB-WR-MT", "APFB-WR-CT",
+            "APsB-BFS-MT", "APsB-BFS-CT", "APsB-WR-MT", "APsB-WR-CT",
+        ]);
+        for (set_name, insts) in &sets {
+            let mut row = vec![set_name.to_string(), insts.len().to_string()];
+            for v in [
+                "gpu:APFB-GPUBFS-MT", "gpu:APFB-GPUBFS-CT",
+                "gpu:APFB-GPUBFS-WR-MT", "gpu:APFB-GPUBFS-WR-CT",
+                "gpu:APsB-GPUBFS-MT", "gpu:APsB-GPUBFS-CT",
+                "gpu:APsB-GPUBFS-WR-MT", "gpu:APsB-GPUBFS-WR-CT",
+            ] {
+                let g = geomean_over(&records, v, insts, |r| {
+                    if use_device { r.device_ms } else { r.wall_secs }
+                });
+                row.push(format!("{g:.3}"));
+            }
+            t.row(row);
+        }
+        common::emit(
+            &format!("Table 1 ({title})"),
+            &format!("geomean {title} per GPU variant\n{}", t.render()),
+        );
+    }
+
+    // the paper's qualitative claims, checked programmatically
+    let union_names: Vec<String> = all_instances.iter().map(|i| i.name()).collect();
+    let dev = |v: &str| geomean_over(&records, v, &union_names, |r| r.device_ms);
+    let mut claims = String::new();
+    for (a, b, what) in [
+        ("gpu:APFB-GPUBFS-WR-CT", "gpu:APFB-GPUBFS-WR-MT", "CT<=MT (APFB-WR)"),
+        ("gpu:APFB-GPUBFS-CT", "gpu:APFB-GPUBFS-MT", "CT<=MT (APFB)"),
+        ("gpu:APsB-GPUBFS-WR-CT", "gpu:APsB-GPUBFS-WR-MT", "CT<=MT (APsB-WR)"),
+        ("gpu:APFB-GPUBFS-WR-CT", "gpu:APFB-GPUBFS-CT", "WR<=plain (APFB,CT)"),
+        ("gpu:APsB-GPUBFS-WR-CT", "gpu:APsB-GPUBFS-CT", "WR<=plain (APsB,CT)"),
+        ("gpu:APFB-GPUBFS-WR-CT", "gpu:APsB-GPUBFS-WR-CT", "APFB<=APsB (WR,CT)"),
+    ] {
+        let (da, db) = (dev(a), dev(b));
+        claims.push_str(&format!(
+            "{what}: {da:.3} vs {db:.3} -> {}\n",
+            if da <= db * 1.05 { "HOLDS" } else { "VIOLATED" }
+        ));
+    }
+    common::emit("Table 1 qualitative claims", &claims);
+}

@@ -1,0 +1,74 @@
+#![allow(dead_code)]
+//! Shared plumbing for the bench binaries (criterion is unavailable
+//! offline; each bench is a plain `main` that prints its table/figure and
+//! appends a Markdown copy to `target/bimatch_eval/report.md`).
+
+use bimatch::harness::{catalog, Evaluator, Instance, Scale, Subsets};
+use std::io::Write;
+
+/// Threshold (seconds) for the "S1" subsets, scaled to this testbed: the
+/// paper used 1 s on 2009-era Xeons with million-edge graphs; the small
+/// catalog runs ~100× smaller.
+pub fn s1_threshold() -> f64 {
+    std::env::var("BIMATCH_S1_THRESH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.010)
+}
+
+/// Hardest-K set size (paper: 20 of 70; we keep the same ~30% ratio).
+pub fn hardest_k(total: usize) -> usize {
+    (total * 2 / 7).max(4)
+}
+
+pub struct Env {
+    pub scale: Scale,
+    pub evaluator: Evaluator,
+    pub original: Vec<Instance>,
+    pub rcp: Vec<Instance>,
+}
+
+pub fn env() -> Env {
+    let scale = Scale::from_env();
+    let evaluator = Evaluator::new(scale);
+    Env {
+        scale,
+        original: catalog::original(scale),
+        rcp: catalog::rcp(scale),
+        evaluator,
+    }
+}
+
+/// Build the paper's four instance sets: (O_S1, O_HardestK, RCP_S1,
+/// RCP_HardestK).
+pub fn paper_sets(e: &mut Env) -> (Vec<Instance>, Vec<Instance>, Vec<Instance>, Vec<Instance>) {
+    let subs_o = Subsets::compute(&mut e.evaluator, &e.original);
+    let subs_r = Subsets::compute(&mut e.evaluator, &e.rcp);
+    let t = s1_threshold();
+    let k_o = hardest_k(e.original.len());
+    let k_r = hardest_k(e.rcp.len());
+    (
+        subs_o.s1(&e.original, t),
+        subs_o.hardest(&e.original, k_o),
+        subs_r.s1(&e.rcp, t),
+        subs_r.hardest(&e.rcp, k_r),
+    )
+}
+
+#[allow(dead_code)]
+pub fn names(instances: &[Instance]) -> Vec<String> {
+    instances.iter().map(|i| i.name()).collect()
+}
+
+/// Print to stdout and append to the markdown report.
+pub fn emit(section: &str, body: &str) {
+    println!("{body}");
+    let _ = std::fs::create_dir_all("target/bimatch_eval");
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("target/bimatch_eval/report.md")
+    {
+        let _ = writeln!(f, "\n## {section}\n\n```\n{body}\n```");
+    }
+}

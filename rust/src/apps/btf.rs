@@ -1,0 +1,204 @@
+//! Block-triangular form (BTF) of a sparse square matrix — the paper's
+//! motivating application (§1): "bipartite matching algorithms are used to
+//! see if the associated coefficient matrix is reducible; if so,
+//! substantial savings in computational requirements can be achieved."
+//!
+//! Pipeline: maximum transversal (any matcher from the registry) puts
+//! nonzeros on the diagonal; Tarjan's SCC over the matched digraph yields
+//! the diagonal blocks (the fine Dulmage–Mendelsohn decomposition for the
+//! structurally-nonsingular case).
+
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::Matching;
+
+/// Result of the BTF analysis.
+#[derive(Debug, Clone)]
+pub struct Btf {
+    /// diagonal block sizes in topological order of the condensation
+    pub block_sizes: Vec<usize>,
+    /// column → block id
+    pub block_of: Vec<u32>,
+    /// |maximum transversal| (== n iff structurally nonsingular)
+    pub transversal: usize,
+}
+
+impl Btf {
+    pub fn n_blocks(&self) -> usize {
+        self.block_sizes.len()
+    }
+
+    pub fn is_reducible(&self) -> bool {
+        self.block_sizes.len() > 1
+    }
+
+    /// Dense-LU cost-model savings of factoring per block: n³ / Σ bᵢ³.
+    pub fn lu_savings(&self, n: usize) -> f64 {
+        let full = (n as f64).powi(3);
+        let btf: f64 = self.block_sizes.iter().map(|&b| (b as f64).powi(3)).sum();
+        if btf == 0.0 {
+            1.0
+        } else {
+            full / btf
+        }
+    }
+}
+
+/// Compute the BTF of the (square, structurally nonsingular) matrix whose
+/// bipartite graph is `g`, given a *maximum* matching. Returns None when
+/// the transversal is deficient (matrix structurally singular — no BTF).
+pub fn btf(g: &BipartiteCsr, m: &Matching) -> Option<Btf> {
+    if g.nr != g.nc {
+        return None;
+    }
+    let n = g.nc;
+    let card = m.cardinality();
+    if card != n {
+        return None;
+    }
+
+    // Tarjan SCC, iterative. Digraph on columns: u → v iff the row matched
+    // to u has a nonzero in column v.
+    const UNSEEN: u32 = u32::MAX;
+    let mut index = vec![UNSEEN; n];
+    let mut low = vec![0u32; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mut call: Vec<(u32, u32)> = Vec::new();
+    let mut next_index = 0u32;
+    let mut block_sizes = Vec::new();
+    let mut block_of = vec![0u32; n];
+
+    for root in 0..n {
+        if index[root] != UNSEEN {
+            continue;
+        }
+        call.push((root as u32, 0));
+        while let Some(&mut (vu, ref mut ci)) = call.last_mut() {
+            let v = vu as usize;
+            if *ci == 0 {
+                index[v] = next_index;
+                low[v] = next_index;
+                next_index += 1;
+                stack.push(vu);
+                on_stack[v] = true;
+            }
+            let r = m.cmatch[v] as usize;
+            let children = g.row_neighbors(r);
+            let mut advanced = false;
+            while (*ci as usize) < children.len() {
+                let w = children[*ci as usize] as usize;
+                *ci += 1;
+                if w == v {
+                    continue;
+                }
+                if index[w] == UNSEEN {
+                    call.push((w as u32, 0));
+                    advanced = true;
+                    break;
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            }
+            if advanced {
+                continue;
+            }
+            if low[v] == index[v] {
+                let bid = block_sizes.len() as u32;
+                let mut size = 0usize;
+                loop {
+                    let w = stack.pop().unwrap();
+                    on_stack[w as usize] = false;
+                    block_of[w as usize] = bid;
+                    size += 1;
+                    if w == vu {
+                        break;
+                    }
+                }
+                block_sizes.push(size);
+            }
+            call.pop();
+            if let Some(&mut (p, _)) = call.last_mut() {
+                let p = p as usize;
+                low[p] = low[p].min(low[v]);
+            }
+        }
+    }
+    Some(Btf { block_sizes, block_of, transversal: card })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::seq::Hk;
+    use crate::MatchingAlgorithm;
+
+    fn max_matching(g: &BipartiteCsr) -> Matching {
+        Hk.run(g, Matching::empty(g.nr, g.nc)).matching
+    }
+
+    #[test]
+    fn diagonal_matrix_fully_reducible() {
+        let g = from_edges(4, 4, &[(0, 0), (1, 1), (2, 2), (3, 3)]);
+        let b = btf(&g, &max_matching(&g)).unwrap();
+        assert_eq!(b.n_blocks(), 4);
+        assert!(b.is_reducible());
+        assert!(b.lu_savings(4) > 1.0);
+        assert_eq!(b.block_sizes, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn full_cycle_irreducible() {
+        // circulant: A[i][i] and A[i][(i+1)%n] — one big SCC
+        let n = 5;
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            edges.push((i, i));
+            edges.push((i, (i + 1) % n as u32));
+        }
+        let g = from_edges(n, n, &edges);
+        let b = btf(&g, &max_matching(&g)).unwrap();
+        assert_eq!(b.n_blocks(), 1);
+        assert!(!b.is_reducible());
+        assert_eq!(b.block_sizes, vec![n]);
+    }
+
+    #[test]
+    fn upper_triangular_block_structure() {
+        // two 2x2 dense blocks + coupling block0 -> block1 only
+        let edges = [
+            (0, 0), (0, 1), (1, 0), (1, 1), // block {0,1}
+            (2, 2), (2, 3), (3, 2), (3, 3), // block {2,3}
+            (0, 2), // coupling (upper)
+        ];
+        let g = from_edges(4, 4, &edges);
+        let b = btf(&g, &max_matching(&g)).unwrap();
+        assert_eq!(b.n_blocks(), 2);
+        let mut sizes = b.block_sizes.clone();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![2, 2]);
+        // columns within the same dense block share a block id
+        assert_eq!(b.block_of[0], b.block_of[1]);
+        assert_eq!(b.block_of[2], b.block_of[3]);
+        assert_ne!(b.block_of[0], b.block_of[2]);
+    }
+
+    #[test]
+    fn singular_matrix_rejected() {
+        // column 1 empty -> deficient transversal
+        let g = from_edges(2, 2, &[(0, 0), (1, 0)]);
+        assert!(btf(&g, &max_matching(&g)).is_none());
+        // rectangular rejected
+        let r = from_edges(2, 3, &[(0, 0), (1, 1), (0, 2)]);
+        assert!(btf(&r, &max_matching(&r)).is_none());
+    }
+
+    #[test]
+    fn block_sizes_sum_to_n() {
+        let g = crate::graph::gen::banded(300, 6, 0.5, 3);
+        if let Some(b) = btf(&g, &max_matching(&g)) {
+            assert_eq!(b.block_sizes.iter().sum::<usize>(), 300);
+            assert_eq!(b.block_of.len(), 300);
+        }
+    }
+}

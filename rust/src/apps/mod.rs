@@ -1,0 +1,7 @@
+//! Downstream applications of maximum bipartite matching — the uses the
+//! paper's introduction motivates. Currently: block-triangular form for
+//! sparse direct solvers ([`btf`]).
+
+pub mod btf;
+
+pub use btf::{btf, Btf};

@@ -1,0 +1,328 @@
+//! Command-line interface (hand-rolled parser; clap is unavailable
+//! offline). `bimatch help` prints usage.
+
+use crate::coordinator::job::{GraphSource, MatchJob};
+use crate::coordinator::{registry, Executor, Metrics, Server};
+use crate::graph::gen::Family;
+use crate::harness::{catalog, Scale};
+use crate::matching::init::InitHeuristic;
+use crate::runtime::Engine;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub const USAGE: &str = "\
+bimatch — GPU-accelerated maximum cardinality bipartite matching (Deveci et al. 2013)
+
+USAGE:
+  bimatch run   (--family <name> --n <int> [--seed <int>] [--permute] | --mtx <path>)
+                [--algo <name>|auto] [--init none|cheap|ks] [--no-certify]
+  bimatch gen    --family <name> --n <int> [--seed <int>] [--permute] --out <path.mtx>
+  bimatch verify --mtx <path>          cross-check several algorithms on a file
+  bimatch serve  [--addr <ip:port>]    TCP line-protocol matching service
+  bimatch algos                        list registered algorithms
+  bimatch catalog                      list the benchmark instance catalog
+  bimatch artifacts-check              compile every artifact on the PJRT client
+  bimatch help
+
+Generator families: road delaunay hugetrace rgg kron social amazon web banded uniform";
+
+/// Parse `--key value` / `--flag` style arguments.
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut map = HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let boolean = matches!(key, "permute" | "no-certify" | "help");
+            if !boolean && i + 1 < args.len() {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "1".into());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (map, positional)
+}
+
+fn engine_if_available() -> Option<Arc<Engine>> {
+    Engine::open_default().ok().map(Arc::new)
+}
+
+pub fn main_with_args(args: Vec<String>) -> i32 {
+    let Some(cmd) = args.first().cloned() else {
+        println!("{USAGE}");
+        return 2;
+    };
+    let (flags, _) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "gen" => cmd_gen(&flags),
+        "verify" => cmd_verify(&flags),
+        "serve" => cmd_serve(&flags),
+        "algos" => {
+            for n in registry::all_names() {
+                println!("{n}");
+            }
+            0
+        }
+        "catalog" => {
+            let scale = Scale::from_env();
+            for i in catalog::original(scale).iter().chain(catalog::rcp(scale).iter()) {
+                println!("{}", i.name());
+            }
+            0
+        }
+        "artifacts-check" => cmd_artifacts_check(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command {other}\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn source_from_flags(flags: &HashMap<String, String>) -> Result<GraphSource, String> {
+    if let Some(path) = flags.get("mtx") {
+        return Ok(GraphSource::MtxFile(path.clone()));
+    }
+    let family = flags
+        .get("family")
+        .and_then(|f| Family::from_name(f))
+        .ok_or("missing or unknown --family (see `bimatch help`)")?;
+    let n: usize = flags
+        .get("n")
+        .ok_or("missing --n")?
+        .parse()
+        .map_err(|e| format!("bad --n: {e}"))?;
+    let seed: u64 = flags
+        .get("seed")
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(|e| format!("bad --seed: {e}"))?
+        .unwrap_or(1);
+    Ok(GraphSource::Generate { family, n, seed, permute: flags.contains_key("permute") })
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> i32 {
+    let source = match source_from_flags(flags) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut job = MatchJob::new(0, source);
+    if let Some(algo) = flags.get("algo") {
+        if algo != "auto" {
+            job = job.with_algo(algo);
+        }
+    }
+    if let Some(init) = flags.get("init") {
+        match InitHeuristic::from_name(init) {
+            Some(h) => job.init = h,
+            None => {
+                eprintln!("unknown --init {init}");
+                return 2;
+            }
+        }
+    }
+    job.certify = !flags.contains_key("no-certify");
+    let exec = Executor::new(engine_if_available(), Arc::new(Metrics::new()));
+    let o = exec.execute(&job);
+    match o.error {
+        Some(e) => {
+            eprintln!("ERROR: {e}");
+            1
+        }
+        None => {
+            println!(
+                "graph: {} rows x {} cols, {} edges\nalgorithm: {}\ninit cardinality: {}\n\
+                 maximum matching: {}{}\nload {:.4}s  init {:.4}s  match {:.4}s  ({} phases)",
+                o.nr,
+                o.nc,
+                o.n_edges,
+                o.algo,
+                o.init_cardinality,
+                o.cardinality,
+                if o.certified { " (certified maximum)" } else { "" },
+                o.t_load,
+                o.t_init,
+                o.t_match,
+                o.phases,
+            );
+            0
+        }
+    }
+}
+
+fn cmd_gen(flags: &HashMap<String, String>) -> i32 {
+    let source = match source_from_flags(flags) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let Some(out) = flags.get("out") else {
+        eprintln!("missing --out");
+        return 2;
+    };
+    let GraphSource::Generate { family, n, seed, permute } = source else {
+        eprintln!("gen requires --family/--n, not --mtx");
+        return 2;
+    };
+    let g = family.generate(n, seed);
+    let g = if permute { crate::graph::random_permute(&g, seed ^ 0x5EED) } else { g };
+    match crate::graph::mtx::write_mtx(&g, std::path::Path::new(out)) {
+        Ok(()) => {
+            println!("wrote {} ({} x {}, {} edges)", out, g.nr, g.nc, g.n_edges());
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) -> i32 {
+    let Some(path) = flags.get("mtx") else {
+        eprintln!("verify requires --mtx <path>");
+        return 2;
+    };
+    let g = match crate::graph::mtx::read_mtx(std::path::Path::new(path)) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("read failed: {e}");
+            return 1;
+        }
+    };
+    let init = InitHeuristic::Cheap.run(&g);
+    let mut card = None;
+    for name in ["hk", "pfp", "pr", "gpu:APFB-GPUBFS-WR-CT", "p-dbfs"] {
+        let algo = registry::build(name, None).unwrap();
+        let r = algo.run(&g, init.clone());
+        if let Err(e) = r.matching.certify(&g) {
+            eprintln!("{name}: CERTIFICATION FAILED: {e}");
+            return 1;
+        }
+        let c = r.matching.cardinality();
+        println!("{name}: cardinality {c} (certified)");
+        if let Some(prev) = card {
+            if prev != c {
+                eprintln!("DISAGREEMENT: {prev} vs {c}");
+                return 1;
+            }
+        }
+        card = Some(c);
+    }
+    println!("all algorithms agree");
+    0
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let default_addr = "127.0.0.1:7700".to_string();
+    let addr = flags.get("addr").unwrap_or(&default_addr);
+    match Server::bind(addr, engine_if_available()) {
+        Ok(server) => {
+            println!("bimatch service listening on {}", server.local_addr().unwrap());
+            println!("protocol: MATCH family=<f> n=<n> [seed=..] [permute=0|1] [algo=..] | ALGOS | STATS | QUIT");
+            if let Err(e) = server.serve() {
+                eprintln!("serve error: {e}");
+                return 1;
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("bind {addr} failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts_check() -> i32 {
+    match Engine::open_default() {
+        Ok(engine) => {
+            println!("PJRT platform: {}", engine.platform());
+            let names: Vec<String> =
+                engine.manifest().artifacts.iter().map(|a| a.name.clone()).collect();
+            for name in names {
+                match engine.load(&name) {
+                    Ok(e) => println!("  {} ({}x{} k={}) compiled OK", name, e.meta.nc, e.meta.nr, e.meta.k),
+                    Err(err) => {
+                        eprintln!("  {name}: FAILED: {err:#}");
+                        return 1;
+                    }
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable: {e:#}\nrun `make artifacts` first");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn parse_flags_mixed() {
+        let args: Vec<String> = ["--family", "kron", "--n", "100", "--permute", "pos"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (map, positional) = parse_flags(&args);
+        assert_eq!(map.get("family").unwrap(), "kron");
+        assert_eq!(map.get("n").unwrap(), "100");
+        assert_eq!(map.get("permute").unwrap(), "1");
+        assert_eq!(positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn run_command_end_to_end() {
+        let code = cmd_run(&flags(&[("family", "uniform"), ("n", "300"), ("algo", "hk")]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn run_command_bad_family() {
+        assert_eq!(cmd_run(&flags(&[("family", "bogus"), ("n", "10")])), 2);
+    }
+
+    #[test]
+    fn gen_verify_roundtrip() {
+        let dir = std::env::temp_dir().join("bimatch_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.mtx");
+        let code = cmd_gen(&flags(&[
+            ("family", "banded"),
+            ("n", "300"),
+            ("seed", "5"),
+            ("out", path.to_str().unwrap()),
+        ]));
+        assert_eq!(code, 0);
+        let code = cmd_verify(&flags(&[("mtx", path.to_str().unwrap())]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn unknown_command_usage() {
+        assert_eq!(main_with_args(vec!["wat".into()]), 2);
+        assert_eq!(main_with_args(vec![]), 2);
+    }
+}

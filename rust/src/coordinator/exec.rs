@@ -1,0 +1,194 @@
+//! Job execution: graph acquisition → cheap init → routing → matching →
+//! certification → outcome. Shared by the worker pool and the TCP server.
+
+use super::job::{AlgoChoice, GraphSource, MatchJob, MatchOutcome};
+use super::metrics::Metrics;
+use super::registry;
+use super::router;
+use crate::graph::csr::BipartiteCsr;
+use crate::runtime::Engine;
+use crate::util::timer::Timer;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Stateless executor (cheap to clone across workers).
+#[derive(Clone)]
+pub struct Executor {
+    pub engine: Option<Arc<Engine>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Executor {
+    pub fn new(engine: Option<Arc<Engine>>, metrics: Arc<Metrics>) -> Self {
+        Self { engine, metrics }
+    }
+
+    fn acquire(&self, source: &GraphSource) -> Result<Arc<BipartiteCsr>, String> {
+        match source {
+            GraphSource::Generate { family, n, seed, permute } => {
+                let g = family.generate(*n, *seed);
+                Ok(Arc::new(if *permute {
+                    crate::graph::random_permute(&g, seed.wrapping_add(0x5EED))
+                } else {
+                    g
+                }))
+            }
+            GraphSource::MtxFile(path) => crate::graph::mtx::read_mtx(std::path::Path::new(path))
+                .map(Arc::new)
+                .map_err(|e| format!("reading {path}: {e}")),
+            GraphSource::InMemory(g) => Ok(g.clone()),
+        }
+    }
+
+    pub fn execute(&self, job: &MatchJob) -> MatchOutcome {
+        let total = Timer::start();
+        let mut out = MatchOutcome {
+            job_id: job.id,
+            algo: String::new(),
+            nr: 0,
+            nc: 0,
+            n_edges: 0,
+            cardinality: 0,
+            init_cardinality: 0,
+            certified: false,
+            t_load: 0.0,
+            t_init: 0.0,
+            t_match: 0.0,
+            phases: 0,
+            error: None,
+        };
+        let g = match self.acquire(&job.source) {
+            Ok(g) => g,
+            Err(e) => {
+                out.error = Some(e);
+                self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                return out;
+            }
+        };
+        out.t_load = total.elapsed_secs();
+        out.nr = g.nr;
+        out.nc = g.nc;
+        out.n_edges = g.n_edges();
+
+        let t_init = Timer::start();
+        let init = job.init.run(&g);
+        out.t_init = t_init.elapsed_secs();
+        out.init_cardinality = init.cardinality();
+
+        let name = match &job.algo {
+            AlgoChoice::Auto => router::route_graph(&g).to_string(),
+            AlgoChoice::Named(n) => n.clone(),
+        };
+        let Some(algo) = registry::build(&name, self.engine.clone()) else {
+            out.error = Some(format!("unknown algorithm {name}"));
+            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            return out;
+        };
+        out.algo = algo.name();
+
+        let t_match = Timer::start();
+        let result = algo.run(&g, init);
+        out.t_match = t_match.elapsed_secs();
+        out.cardinality = result.matching.cardinality();
+        out.phases = result.stats.phases;
+
+        if job.certify {
+            match result.matching.certify(&g) {
+                Ok(()) => out.certified = true,
+                Err(e) => {
+                    out.error = Some(format!("certification failed: {e}"));
+                    self.metrics.certify_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+
+        self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .edges_processed
+            .fetch_add(out.n_edges as u64, Ordering::Relaxed);
+        self.metrics
+            .matched_total
+            .fetch_add(out.cardinality as u64, Ordering::Relaxed);
+        self.metrics.observe_latency(total.elapsed_secs());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::MatchJob;
+    use crate::graph::gen::Family;
+
+    fn exec() -> Executor {
+        Executor::new(None, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn executes_generated_job_auto_routing() {
+        let job = MatchJob::new(
+            1,
+            GraphSource::Generate { family: Family::Uniform, n: 500, seed: 2, permute: false },
+        );
+        let out = exec().execute(&job);
+        assert!(out.error.is_none(), "{:?}", out.error);
+        assert!(out.certified);
+        assert!(out.cardinality > 0);
+        assert!(out.cardinality >= out.init_cardinality);
+        assert!(!out.algo.is_empty());
+    }
+
+    #[test]
+    fn named_algorithm_respected() {
+        let job = MatchJob::new(
+            2,
+            GraphSource::Generate { family: Family::Banded, n: 300, seed: 1, permute: true },
+        )
+        .with_algo("hkdw");
+        let out = exec().execute(&job);
+        assert_eq!(out.algo, "hkdw");
+        assert!(out.certified);
+    }
+
+    #[test]
+    fn unknown_algorithm_is_error() {
+        let job = MatchJob::new(
+            3,
+            GraphSource::Generate { family: Family::Uniform, n: 50, seed: 1, permute: false },
+        )
+        .with_algo("bogus");
+        let out = exec().execute(&job);
+        assert!(out.error.as_deref().unwrap_or("").contains("unknown"));
+    }
+
+    #[test]
+    fn missing_mtx_is_error_not_panic() {
+        let job = MatchJob::new(4, GraphSource::MtxFile("/no/such/file.mtx".into()));
+        let out = exec().execute(&job);
+        assert!(out.error.is_some());
+    }
+
+    #[test]
+    fn in_memory_source() {
+        let g = Arc::new(crate::graph::from_edges(2, 2, &[(0, 0), (1, 1)]));
+        let job = MatchJob::new(5, GraphSource::InMemory(g)).with_algo("bfs");
+        let out = exec().execute(&job);
+        assert_eq!(out.cardinality, 2);
+        assert!(out.certified);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        for i in 0..3 {
+            let job = MatchJob::new(
+                i,
+                GraphSource::Generate { family: Family::Uniform, n: 100, seed: i, permute: false },
+            );
+            e.execute(&job);
+        }
+        assert_eq!(metrics.completed(), 3);
+        assert!(metrics.mean_latency() > 0.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Job and result types for the matching service.
+
+use crate::graph::csr::BipartiteCsr;
+use crate::graph::gen::Family;
+use crate::matching::init::InitHeuristic;
+use std::sync::Arc;
+
+/// Where the job's graph comes from.
+#[derive(Debug, Clone)]
+pub enum GraphSource {
+    /// synthetic: family, n, seed, permuted?
+    Generate { family: Family, n: usize, seed: u64, permute: bool },
+    /// a MatrixMarket file on disk
+    MtxFile(String),
+    /// an already-built graph (in-process callers)
+    InMemory(Arc<BipartiteCsr>),
+}
+
+/// Which matcher to use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AlgoChoice {
+    /// let the router pick based on graph features
+    Auto,
+    /// a registry name, e.g. "hk", "pfp", "gpu:APFB-GPUBFS-WR-CT",
+    /// "xla:apfb-full"
+    Named(String),
+}
+
+/// One matching request.
+#[derive(Debug, Clone)]
+pub struct MatchJob {
+    pub id: u64,
+    pub source: GraphSource,
+    pub algo: AlgoChoice,
+    pub init: InitHeuristic,
+    /// verify validity+maximality before reporting (costs one BFS)
+    pub certify: bool,
+}
+
+impl MatchJob {
+    pub fn new(id: u64, source: GraphSource) -> Self {
+        Self { id, source, algo: AlgoChoice::Auto, init: InitHeuristic::Cheap, certify: true }
+    }
+
+    pub fn with_algo(mut self, name: &str) -> Self {
+        self.algo = AlgoChoice::Named(name.to_string());
+        self
+    }
+}
+
+/// Outcome of one job.
+#[derive(Debug, Clone)]
+pub struct MatchOutcome {
+    pub job_id: u64,
+    pub algo: String,
+    pub nr: usize,
+    pub nc: usize,
+    pub n_edges: usize,
+    pub cardinality: usize,
+    pub init_cardinality: usize,
+    pub certified: bool,
+    /// seconds: graph acquisition, init heuristic, matching, total
+    pub t_load: f64,
+    pub t_init: f64,
+    pub t_match: f64,
+    pub phases: u64,
+    pub error: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_builder() {
+        let j = MatchJob::new(
+            7,
+            GraphSource::Generate { family: Family::Kron, n: 100, seed: 1, permute: false },
+        )
+        .with_algo("hk");
+        assert_eq!(j.id, 7);
+        assert_eq!(j.algo, AlgoChoice::Named("hk".into()));
+        assert!(j.certify);
+    }
+}

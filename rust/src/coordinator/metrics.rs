@@ -1,0 +1,119 @@
+//! Service metrics: counters and a log2-bucketed latency histogram,
+//! lock-free on the hot path (atomics only).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const N_BUCKETS: usize = 32; // 2^-20s (≈1µs) … 2^11s, log2 steps
+
+#[derive(Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub certify_failures: AtomicU64,
+    pub edges_processed: AtomicU64,
+    pub matched_total: AtomicU64,
+    latency: [AtomicU64; N_BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(secs: f64) -> usize {
+        let us = (secs * 1e6).max(1.0);
+        (us.log2() as usize).min(N_BUCKETS - 1)
+    }
+
+    pub fn observe_latency(&self, secs: f64) {
+        self.latency[Self::bucket(secs)].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us
+            .fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// approximate quantile from the log2 histogram (upper bucket bound)
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        let total: u64 = self.latency.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.latency.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (2f64.powi(i as i32 + 1)) / 1e6; // upper bound, secs
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        let n = self.completed();
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "jobs: submitted={} completed={} failed={} | matched={} edges={} | \
+             latency mean={:.4}s p50≤{:.4}s p95≤{:.4}s p99≤{:.4}s",
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.completed(),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.matched_total.load(Ordering::Relaxed),
+            self.edges_processed.load(Ordering::Relaxed),
+            self.mean_latency(),
+            self.latency_quantile(0.50),
+            self.latency_quantile(0.95),
+            self.latency_quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_monotone() {
+        assert!(Metrics::bucket(0.000001) <= Metrics::bucket(0.001));
+        assert!(Metrics::bucket(0.001) <= Metrics::bucket(1.0));
+        assert!(Metrics::bucket(1e9) < N_BUCKETS);
+    }
+
+    #[test]
+    fn quantiles_and_mean() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.observe_latency(0.001);
+        }
+        for _ in 0..10 {
+            m.observe_latency(1.0);
+        }
+        m.jobs_completed.store(100, Ordering::Relaxed);
+        let p50 = m.latency_quantile(0.5);
+        let p99 = m.latency_quantile(0.99);
+        assert!(p50 < 0.01, "p50 {p50}");
+        assert!(p99 >= 1.0, "p99 {p99}");
+        let mean = m.mean_latency();
+        assert!((0.05..0.3).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile(0.5), 0.0);
+        assert_eq!(m.mean_latency(), 0.0);
+        assert!(m.report().contains("completed=0"));
+    }
+}

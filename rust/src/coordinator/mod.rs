@@ -1,0 +1,19 @@
+//! The L3 coordinator: a matching *service* around the algorithm library —
+//! job queue with backpressure, worker pool, feature-based algorithm
+//! routing (the paper's "GPU wins except banded originals" finding as
+//! policy), metrics, and a TCP line-protocol front end.
+
+pub mod exec;
+pub mod job;
+pub mod metrics;
+pub mod queue;
+pub mod registry;
+pub mod router;
+pub mod server;
+pub mod service;
+
+pub use exec::Executor;
+pub use job::{AlgoChoice, GraphSource, MatchJob, MatchOutcome};
+pub use metrics::Metrics;
+pub use server::Server;
+pub use service::Service;

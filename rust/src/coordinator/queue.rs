@@ -1,0 +1,165 @@
+//! Bounded MPMC job queue with blocking push (backpressure) and pop,
+//! built on Mutex + Condvar (no crossbeam-channel offline). Close-able:
+//! after `close()`, pops drain the remaining items then return None.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(capacity), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Block until there is room (backpressure); Err if closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push; Err if full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available; None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = BoundedQueue::new(1);
+        q.try_push(1).unwrap();
+        assert!(q.try_push(2).is_err());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert!(q.push(2).is_err());
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(1)); // blocks
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "producer must be blocked");
+        assert_eq!(q.pop(), Some(0));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let n_items = 200;
+        let consumed = Arc::new(Mutex::new(Vec::new()));
+        std::thread::scope(|s| {
+            for p in 0..4 {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..n_items / 4 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                });
+            }
+            for _ in 0..3 {
+                let q = q.clone();
+                let consumed = consumed.clone();
+                s.spawn(move || {
+                    while let Some(v) = q.pop() {
+                        consumed.lock().unwrap().push(v);
+                    }
+                });
+            }
+            // let producers finish, then close
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            q.close();
+        });
+        let got = consumed.lock().unwrap();
+        assert_eq!(got.len(), n_items as usize);
+    }
+}

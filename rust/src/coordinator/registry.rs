@@ -1,0 +1,96 @@
+//! Name → algorithm registry: every matcher in the library (sequential,
+//! multicore, the 8 GPU variants, XLA-backed) constructible from its
+//! stable string name. The CLI, router, server protocol, and bench harness
+//! all resolve algorithms through here.
+
+use crate::gpu::{GpuConfig, GpuMatcher};
+use crate::matching::algo::MatchingAlgorithm;
+use crate::multicore::{PDbfs, PHk, PPfp};
+use crate::runtime::Engine;
+use crate::seq;
+use crate::util::pool::default_threads;
+use std::sync::Arc;
+
+/// All registry names (GPU variants use the paper's naming).
+pub fn all_names() -> Vec<String> {
+    let mut names: Vec<String> = vec![
+        "hk".into(),
+        "hkdw".into(),
+        "pfp".into(),
+        "dfs".into(),
+        "bfs".into(),
+        "pr".into(),
+        "p-hk".into(),
+        "p-pfp".into(),
+        "p-dbfs".into(),
+        "xla:apfb-full".into(),
+        "xla:bfs-level-hybrid".into(),
+    ];
+    for cfg in GpuConfig::all_variants() {
+        names.push(format!("gpu:{}", cfg.name()));
+    }
+    names
+}
+
+/// Build an algorithm by name. `engine` is required for "xla:*" names.
+pub fn build(name: &str, engine: Option<Arc<Engine>>) -> Option<Box<dyn MatchingAlgorithm>> {
+    let nt = default_threads();
+    Some(match name {
+        "hk" => Box::new(seq::Hk),
+        "hkdw" => Box::new(seq::Hkdw),
+        "pfp" => Box::new(seq::Pfp),
+        "dfs" => Box::new(seq::DfsLookahead),
+        "bfs" => Box::new(seq::BfsSimple),
+        "pr" => Box::new(seq::PushRelabel),
+        "p-hk" => Box::new(PHk { nthreads: nt }),
+        "p-pfp" => Box::new(PPfp { nthreads: nt }),
+        "p-dbfs" => Box::new(PDbfs { nthreads: nt }),
+        "gpu" => Box::new(GpuMatcher::default()), // paper's best variant
+        "xla:apfb-full" => {
+            Box::new(crate::gpu::xla_backend::XlaApfbMatcher::new(engine?))
+        }
+        "xla:bfs-level-hybrid" => {
+            Box::new(crate::gpu::xla_backend::XlaHybridMatcher::new(engine?))
+        }
+        _ => {
+            let variant = name.strip_prefix("gpu:")?;
+            let cfg = GpuConfig::from_name(variant)?;
+            Box::new(GpuMatcher::new(cfg))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::matching::Matching;
+
+    #[test]
+    fn every_registered_name_builds_and_runs() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2), (0, 1)]);
+        for name in all_names() {
+            if name.starts_with("xla:") {
+                // requires an engine + artifacts; covered in rust/tests/
+                assert!(build(&name, None).is_none());
+                continue;
+            }
+            let algo = build(&name, None).unwrap_or_else(|| panic!("{name} not buildable"));
+            let r = algo.run(&g, Matching::empty(3, 3));
+            r.matching.certify(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(r.matching.cardinality(), 3, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_names_rejected() {
+        assert!(build("nope", None).is_none());
+        assert!(build("gpu:NOPE", None).is_none());
+    }
+
+    #[test]
+    fn shorthand_gpu_is_paper_best() {
+        let a = build("gpu", None).unwrap();
+        assert_eq!(a.name(), "gpu:APFB-GPUBFS-WR-CT");
+    }
+}

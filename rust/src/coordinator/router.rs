@@ -1,0 +1,124 @@
+//! Algorithm auto-selection, operationalizing the paper's experimental
+//! findings (§4): the GPU algorithm (APFB-GPUBFS-WR-CT) wins in the
+//! majority of cases, *except* on matrices whose original ordering makes
+//! DFS+lookahead nearly free (narrow banded structure — Hamrle3 finishes
+//! in 0.04 s under PFP vs 1.36 s on the GPU). The router measures cheap
+//! structural features and picks accordingly.
+
+use crate::graph::csr::BipartiteCsr;
+
+/// Cheap structural features (O(sampled edges)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphFeatures {
+    pub nr: usize,
+    pub nc: usize,
+    pub n_edges: usize,
+    pub avg_col_degree: f64,
+    pub max_col_degree: usize,
+    /// mean normalized |r/nr - c/nc| over sampled edges: ~0 for banded /
+    /// diagonal-dominant orderings, ~1/3 for random permutations
+    pub bandedness: f64,
+    /// max/avg degree ratio (skew; power-law graphs are large)
+    pub degree_skew: f64,
+}
+
+pub fn features(g: &BipartiteCsr) -> GraphFeatures {
+    let n_edges = g.n_edges();
+    let avg = g.avg_col_degree();
+    let maxd = g.max_col_degree();
+    // sample up to 4096 edges evenly for the bandedness estimate
+    let mut band_sum = 0.0;
+    let mut samples = 0usize;
+    if n_edges > 0 && g.nr > 0 && g.nc > 0 {
+        let step = (n_edges / 4096).max(1);
+        let mut c = 0usize;
+        let mut idx = 0usize;
+        while idx < n_edges {
+            while g.cxadj[c + 1] as usize <= idx {
+                c += 1;
+            }
+            let r = g.cadj[idx] as usize;
+            band_sum += (r as f64 / g.nr as f64 - c as f64 / g.nc as f64).abs();
+            samples += 1;
+            idx += step;
+        }
+    }
+    GraphFeatures {
+        nr: g.nr,
+        nc: g.nc,
+        n_edges,
+        avg_col_degree: avg,
+        max_col_degree: maxd,
+        bandedness: if samples > 0 { band_sum / samples as f64 } else { 0.0 },
+        degree_skew: if avg > 0.0 { maxd as f64 / avg } else { 0.0 },
+    }
+}
+
+/// Pick a registry name for the graph.
+pub fn route(f: &GraphFeatures) -> &'static str {
+    if f.n_edges == 0 {
+        return "dfs"; // trivial
+    }
+    // tiny problems: sequential DFS beats any launch overhead
+    if f.n_edges < 20_000 {
+        return "pfp";
+    }
+    // banded original orderings: PFP's lookahead resolves almost every
+    // column instantly (the paper's Hamrle3 case)
+    if f.bandedness < 0.02 && f.degree_skew < 8.0 {
+        return "pfp";
+    }
+    // everything else: the paper's winning GPU variant
+    "gpu:APFB-GPUBFS-WR-CT"
+}
+
+/// Convenience: features + route in one call.
+pub fn route_graph(g: &BipartiteCsr) -> &'static str {
+    route(&features(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::Family;
+
+    #[test]
+    fn features_sane_on_banded() {
+        let g = crate::graph::gen::banded(3000, 12, 0.5, 3);
+        let f = features(&g);
+        assert!(f.bandedness < 0.02, "banded bandedness = {}", f.bandedness);
+        assert!(f.degree_skew < 8.0);
+    }
+
+    #[test]
+    fn features_sane_on_permuted() {
+        let g = crate::graph::gen::banded(3000, 12, 0.5, 3);
+        let p = crate::graph::random_permute(&g, 7);
+        let f = features(&p);
+        assert!(f.bandedness > 0.1, "permuted bandedness = {}", f.bandedness);
+    }
+
+    #[test]
+    fn router_prefers_pfp_on_banded_gpu_on_permuted() {
+        let g = crate::graph::gen::banded(8000, 16, 0.6, 5);
+        assert_eq!(route_graph(&g), "pfp");
+        let p = crate::graph::random_permute(&g, 11);
+        assert_eq!(route_graph(&p), "gpu:APFB-GPUBFS-WR-CT");
+    }
+
+    #[test]
+    fn router_gpu_on_powerlaw() {
+        let g = Family::Kron.generate(8192, 3);
+        if g.n_edges() >= 20_000 {
+            assert_eq!(route_graph(&g), "gpu:APFB-GPUBFS-WR-CT");
+        }
+    }
+
+    #[test]
+    fn router_trivial_cases() {
+        let empty = crate::graph::from_edges(4, 4, &[]);
+        assert_eq!(route_graph(&empty), "dfs");
+        let small = crate::graph::from_edges(3, 3, &[(0, 0), (1, 1)]);
+        assert_eq!(route_graph(&small), "pfp");
+    }
+}

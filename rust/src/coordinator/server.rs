@@ -1,0 +1,232 @@
+//! Line-protocol TCP front end for the matching service (no tokio offline;
+//! std::net + one thread per connection, bounded by the accept loop).
+//!
+//! Protocol (one request per line, one reply per line):
+//!
+//! ```text
+//! MATCH family=<name> n=<int> seed=<int> [permute=0|1] [algo=<name>] [init=<name>]
+//! MATCH mtx=<path> [algo=<name>]
+//! ALGOS                       → ALGOS <name> <name> ...
+//! STATS                       → STATS <metrics report>
+//! QUIT
+//! ```
+//!
+//! Replies: `OK id=<id> algo=<name> nr=.. nc=.. edges=.. card=.. t_match=..`
+//! or `ERR <message>`.
+
+use super::exec::Executor;
+use super::job::{AlgoChoice, GraphSource, MatchJob};
+use super::metrics::Metrics;
+use super::registry;
+use crate::graph::gen::Family;
+use crate::matching::init::InitHeuristic;
+use crate::runtime::Engine;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub struct Server {
+    listener: TcpListener,
+    executor: Executor,
+    next_id: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (use port 0 for an ephemeral port in tests).
+    pub fn bind(addr: &str, engine: Option<Arc<Engine>>) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self {
+            listener,
+            executor: Executor::new(engine, Arc::new(Metrics::new())),
+            next_id: Arc::new(AtomicU64::new(1)),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// A handle that makes `serve` return after the in-flight accept.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept loop; returns when the stop handle is set (checked between
+    /// connections — send any request to unblock accept).
+    pub fn serve(&self) -> std::io::Result<()> {
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let stream = conn?;
+            let executor = self.executor.clone();
+            let next_id = self.next_id.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, executor, next_id);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    executor: Executor,
+    next_id: Arc<AtomicU64>,
+) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let reply = match handle_line(line.trim(), &executor, &next_id) {
+            Command::Reply(s) => s,
+            Command::Quit => return Ok(()),
+        };
+        stream.write_all(reply.as_bytes())?;
+        stream.write_all(b"\n")?;
+    }
+}
+
+enum Command {
+    Reply(String),
+    Quit,
+}
+
+fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command {
+    let mut parts = line.split_whitespace();
+    match parts.next() {
+        Some("QUIT") => Command::Quit,
+        Some("ALGOS") => Command::Reply(format!("ALGOS {}", registry::all_names().join(" "))),
+        Some("STATS") => Command::Reply(format!("STATS {}", executor.metrics.report())),
+        Some("MATCH") => {
+            let kv: Vec<(&str, &str)> =
+                parts.filter_map(|p| p.split_once('=')).collect();
+            match parse_match(&kv, next_id) {
+                Ok(job) => {
+                    let o = executor.execute(&job);
+                    match o.error {
+                        Some(e) => Command::Reply(format!("ERR {e}")),
+                        None => Command::Reply(format!(
+                            "OK id={} algo={} nr={} nc={} edges={} card={} certified={} \
+                             t_load={:.6} t_match={:.6}",
+                            o.job_id, o.algo, o.nr, o.nc, o.n_edges, o.cardinality,
+                            o.certified as u8, o.t_load, o.t_match
+                        )),
+                    }
+                }
+                Err(e) => Command::Reply(format!("ERR {e}")),
+            }
+        }
+        Some(other) => Command::Reply(format!("ERR unknown command {other}")),
+        None => Command::Reply("ERR empty request".into()),
+    }
+}
+
+fn parse_match(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
+    let get = |k: &str| kv.iter().find(|(key, _)| *key == k).map(|(_, v)| *v);
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let source = if let Some(path) = get("mtx") {
+        GraphSource::MtxFile(path.to_string())
+    } else {
+        let family = get("family")
+            .and_then(Family::from_name)
+            .ok_or("missing/unknown family=")?;
+        let n: usize = get("n")
+            .ok_or("missing n=")?
+            .parse()
+            .map_err(|e| format!("bad n: {e}"))?;
+        let seed: u64 = get("seed").unwrap_or("0").parse().map_err(|e| format!("bad seed: {e}"))?;
+        let permute = get("permute").unwrap_or("0") == "1";
+        GraphSource::Generate { family, n, seed, permute }
+    };
+    let mut job = MatchJob::new(id, source);
+    if let Some(a) = get("algo") {
+        if a != "auto" {
+            job.algo = AlgoChoice::Named(a.to_string());
+        }
+    }
+    if let Some(i) = get("init") {
+        job.init = InitHeuristic::from_name(i).ok_or(format!("unknown init {i}"))?;
+    }
+    Ok(job)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn start_server() -> (std::net::SocketAddr, Arc<AtomicBool>) {
+        let server = Server::bind("127.0.0.1:0", None).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        std::thread::spawn(move || server.serve());
+        (addr, stop)
+    }
+
+    fn roundtrip(addr: std::net::SocketAddr, req: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+
+    #[test]
+    fn match_request_roundtrip() {
+        let (addr, _stop) = start_server();
+        let reply = roundtrip(addr, "MATCH family=uniform n=200 seed=3 algo=hk");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains("algo=hk"));
+        assert!(reply.contains("certified=1"));
+    }
+
+    #[test]
+    fn auto_routing_over_tcp() {
+        let (addr, _stop) = start_server();
+        let reply = roundtrip(addr, "MATCH family=banded n=400 seed=1");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains("card="));
+    }
+
+    #[test]
+    fn algos_and_stats() {
+        let (addr, _stop) = start_server();
+        let reply = roundtrip(addr, "ALGOS");
+        assert!(reply.contains("hk") && reply.contains("gpu:APFB-GPUBFS-WR-CT"));
+        let reply = roundtrip(addr, "STATS");
+        assert!(reply.starts_with("STATS "));
+    }
+
+    #[test]
+    fn errors_reported() {
+        let (addr, _stop) = start_server();
+        assert!(roundtrip(addr, "MATCH family=nope n=10").starts_with("ERR"));
+        assert!(roundtrip(addr, "MATCH family=uniform").starts_with("ERR"));
+        assert!(roundtrip(addr, "BOGUS").starts_with("ERR"));
+        assert!(roundtrip(addr, "MATCH family=uniform n=50 algo=wat").starts_with("ERR"));
+    }
+
+    #[test]
+    fn multiple_requests_one_connection() {
+        let (addr, _stop) = start_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"MATCH family=uniform n=100 seed=1 algo=bfs\nMATCH family=uniform n=100 seed=2 algo=dfs\nQUIT\n")
+            .unwrap();
+        let r = BufReader::new(s);
+        let lines: Vec<String> = r.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines.iter().all(|l| l.starts_with("OK ")));
+        // ids must differ
+        assert_ne!(lines[0], lines[1]);
+    }
+}

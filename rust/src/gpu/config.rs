@@ -1,0 +1,161 @@
+//! Configuration of the eight GPU algorithm variants (§4 of the paper):
+//! driver (APFB/APsB) × BFS kernel (GPUBFS/GPUBFS-WR) × thread mapping
+//! (CT/MT).
+
+/// Outer driver loop (Algorithm 1 and its no-early-exit variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ApDriver {
+    /// "Augmenting Paths to the Full Bottom": keep expanding BFS levels
+    /// until the frontier is exhausted (GPU analogue of HKDW).
+    Apfb,
+    /// "Shortest Augmenting Paths": break out of the BFS as soon as any
+    /// augmenting path is found (GPU analogue of HK). Algorithm 1 verbatim.
+    Apsb,
+}
+
+/// Single-level BFS kernel flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BfsKernel {
+    /// Algorithm 2: plain level expansion.
+    GpuBfs,
+    /// Algorithm 4: carries `root` down the tree; trees whose root already
+    /// has an augmenting path stop expanding (early exit).
+    GpuBfsWr,
+}
+
+/// Thread→column assignment policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ThreadMapping {
+    /// Constant threads: fixed 256×256 grid, each thread owns
+    /// ceil(nc / 65536) strided columns (coalesced).
+    Ct,
+    /// Max threads: one column per thread (min(nc, arch max)).
+    Mt,
+}
+
+pub const CT_THREADS: usize = 256 * 256;
+pub const WARP_SIZE: usize = 32;
+
+impl ThreadMapping {
+    /// Total thread count for a kernel over `n` items.
+    pub fn total_threads(&self, n: usize) -> usize {
+        match self {
+            ThreadMapping::Ct => CT_THREADS,
+            ThreadMapping::Mt => n.max(1),
+        }
+    }
+}
+
+/// How simultaneous conflicting writes are arbitrated by the simulator —
+/// each order is one legal serialization of the CUDA race (DESIGN.md §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum WriteOrder {
+    /// ascending thread id (default; min-index winner on last write wins
+    /// semantics corresponds to max-index... order of iteration)
+    #[default]
+    Forward,
+    /// descending thread id
+    Reverse,
+    /// seeded pseudo-random interleaving
+    Shuffled,
+}
+
+/// Full variant configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GpuConfig {
+    pub driver: ApDriver,
+    pub kernel: BfsKernel,
+    pub mapping: ThreadMapping,
+    pub write_order: WriteOrder,
+    /// seed for `WriteOrder::Shuffled`
+    pub seed: u64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        // the paper's overall winner: APFB + GPUBFS-WR + CT
+        Self {
+            driver: ApDriver::Apfb,
+            kernel: BfsKernel::GpuBfsWr,
+            mapping: ThreadMapping::Ct,
+            write_order: WriteOrder::Forward,
+            seed: 0,
+        }
+    }
+}
+
+impl GpuConfig {
+    /// All eight paper variants (Table 1), default write order.
+    pub fn all_variants() -> Vec<GpuConfig> {
+        let mut out = Vec::with_capacity(8);
+        for driver in [ApDriver::Apfb, ApDriver::Apsb] {
+            for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
+                for mapping in [ThreadMapping::Mt, ThreadMapping::Ct] {
+                    out.push(GpuConfig {
+                        driver,
+                        kernel,
+                        mapping,
+                        write_order: WriteOrder::Forward,
+                        seed: 0,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Short name matching the paper's terminology, e.g.
+    /// "APFB-GPUBFS-WR-CT".
+    pub fn name(&self) -> String {
+        format!(
+            "{}-{}-{}",
+            match self.driver {
+                ApDriver::Apfb => "APFB",
+                ApDriver::Apsb => "APsB",
+            },
+            match self.kernel {
+                BfsKernel::GpuBfs => "GPUBFS",
+                BfsKernel::GpuBfsWr => "GPUBFS-WR",
+            },
+            match self.mapping {
+                ThreadMapping::Ct => "CT",
+                ThreadMapping::Mt => "MT",
+            }
+        )
+    }
+
+    /// Parse "APFB-GPUBFS-WR-CT"-style names.
+    pub fn from_name(s: &str) -> Option<GpuConfig> {
+        GpuConfig::all_variants().into_iter().find(|c| c.name() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_distinct_variants() {
+        let v = GpuConfig::all_variants();
+        assert_eq!(v.len(), 8);
+        let names: std::collections::HashSet<_> = v.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), 8);
+        assert!(names.contains("APFB-GPUBFS-WR-CT"));
+        assert!(names.contains("APsB-GPUBFS-MT"));
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for c in GpuConfig::all_variants() {
+            assert_eq!(GpuConfig::from_name(&c.name()), Some(c));
+        }
+        assert_eq!(GpuConfig::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn thread_counts() {
+        assert_eq!(ThreadMapping::Ct.total_threads(10), CT_THREADS);
+        assert_eq!(ThreadMapping::Mt.total_threads(10), 10);
+        assert_eq!(ThreadMapping::Mt.total_threads(0), 1);
+    }
+}

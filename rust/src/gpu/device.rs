@@ -1,0 +1,349 @@
+//! The device execution model: how the simulator schedules the paper's
+//! CUDA kernels on the host, and the abstract cost model that stands in
+//! for GPU wall-clock (DESIGN.md §2).
+//!
+//! *Scheduling.* A kernel launch over `n` items with `T` total threads is
+//! executed as one legal serialization of the GPU's interleaving: items are
+//! visited warp-by-warp in the configured [`WriteOrder`]. Intra-warp
+//! lockstep (read-all-then-write-all), which is what produces the paper's
+//! ALTERNATE inconsistencies, is provided separately by [`WarpStepper`].
+//!
+//! *Cost model.* Each launch is charged
+//! `LAUNCH_OVERHEAD + #active_warps·WARP_COST + Σ_warp max_lane(work)`
+//! where a lane's work is `THREAD_SETUP + Σ items (ITEM_COST +
+//! edges·EDGE_COST)`. The warp-max term models SIMD divergence; the
+//! per-thread setup term is what makes CT (few threads, many items each)
+//! cheaper than MT (one item per thread) exactly as the paper observes.
+
+use super::config::{ThreadMapping, WriteOrder, WARP_SIZE};
+use crate::util::rng::Xoshiro256;
+
+/// Abstract device-cycle accounting (arbitrary units; the harness reports
+/// ratios, never absolute values). Two views of the same work:
+/// * `cycles` — **serial** warp-sum (a single SM issuing one warp at a
+///   time): the right metric for comparing *configurations* (CT vs MT,
+///   WR vs plain) because it is deterministic and schedule-free.
+/// * `parallel_cycles` — the warp work divided by the device's concurrent
+///   warp throughput ([`PARALLEL_WARPS`], a C2050-like 14 SMs × 4
+///   effective resident warps), floored by the critical path (the most
+///   expensive single warp). This is the stand-in for GPU wall-clock in
+///   the cross-hardware figures (DESIGN.md §2).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceClock {
+    pub cycles: u64,
+    pub parallel_cycles: u64,
+    pub launches: u64,
+}
+
+pub const LAUNCH_OVERHEAD: u64 = 4_000;
+pub const WARP_COST: u64 = 16;
+pub const THREAD_SETUP: u64 = 4;
+pub const ITEM_COST: u64 = 2;
+pub const EDGE_COST: u64 = 1;
+/// concurrent warp slots the parallel model assumes (14 SMs × 4 effective)
+pub const PARALLEL_WARPS: u64 = 56;
+
+impl DeviceClock {
+    pub fn charge_launch(&mut self) {
+        self.cycles += LAUNCH_OVERHEAD;
+        self.parallel_cycles += LAUNCH_OVERHEAD;
+        self.launches += 1;
+    }
+
+    /// Charge one kernel launch's warp work to both views.
+    pub fn charge_warp_work(&mut self, warp_sum: u64, max_warp: u64) {
+        self.cycles += warp_sum;
+        self.parallel_cycles += (warp_sum / PARALLEL_WARPS).max(max_warp);
+    }
+
+    /// Serial-model "device milliseconds" (1 GHz nominal clock).
+    pub fn as_device_ms(&self) -> f64 {
+        self.cycles as f64 / 1e6
+    }
+
+    /// Parallel-model "device milliseconds" (1 GHz nominal clock).
+    pub fn as_parallel_ms(&self) -> f64 {
+        self.parallel_cycles as f64 / 1e6
+    }
+}
+
+/// Iterate the columns assigned to thread `tid` under the paper's strided
+/// `getProcessCount` scheme: `col = i·T + tid`.
+#[inline]
+pub fn thread_items(tid: usize, total_threads: usize, n: usize) -> impl Iterator<Item = usize> {
+    (0..)
+        .map(move |i| i * total_threads + tid)
+        .take_while(move |&c| c < n)
+}
+
+/// One kernel launch: visit all `n` items in warp order, calling
+/// `body(item) -> edges_scanned`, and charge the cost model. The `order`
+/// picks which serialization of the race the simulator realizes.
+pub fn launch<F>(
+    clock: &mut DeviceClock,
+    mapping: ThreadMapping,
+    order: WriteOrder,
+    seed: u64,
+    n: usize,
+    mut body: F,
+) where
+    F: FnMut(usize) -> u64,
+{
+    clock.charge_launch();
+    let total = mapping.total_threads(n);
+    // threads with tid >= n own no items under the strided assignment
+    // (their first candidate item is already `tid >= n`), so whole warps
+    // beyond ceil(min(total, n)/WARP) can be skipped without touching the
+    // cost model — inactive warps are never charged anyway. This is the
+    // simulator's biggest hot-path win for small graphs under CT
+    // (EXPERIMENTS.md §Perf).
+    let n_warps = total.min(n.max(1)).div_ceil(WARP_SIZE);
+    // §Perf: Forward/Reverse iterate directly — materializing the warp
+    // order (one Vec per launch, hundreds of launches per phase) showed up
+    // as the #2 allocation site in the level loop.
+    let mut shuffled: Vec<usize> = Vec::new();
+    let warp_at = |i: usize, shuffled: &[usize]| -> usize {
+        match order {
+            WriteOrder::Forward => i,
+            WriteOrder::Reverse => n_warps - 1 - i,
+            WriteOrder::Shuffled => shuffled[i],
+        }
+    };
+    if order == WriteOrder::Shuffled {
+        shuffled = (0..n_warps).collect();
+        Xoshiro256::new(seed ^ clock.launches).shuffle(&mut shuffled);
+    }
+    let mut warp_sum = 0u64;
+    let mut max_warp = 0u64;
+    for i in 0..n_warps {
+        let w = warp_at(i, &shuffled);
+        let mut warp_max: u64 = 0;
+        let mut warp_active = false;
+        for lane in 0..WARP_SIZE {
+            let tid = w * WARP_SIZE + lane;
+            if tid >= total {
+                break;
+            }
+            let mut lane_work: u64 = 0;
+            let mut any = false;
+            for item in thread_items(tid, total, n) {
+                any = true;
+                let edges = body(item);
+                lane_work += ITEM_COST + edges * EDGE_COST;
+            }
+            if any {
+                lane_work += THREAD_SETUP;
+                warp_active = true;
+            }
+            warp_max = warp_max.max(lane_work);
+        }
+        if warp_active {
+            let cost = WARP_COST + warp_max;
+            warp_sum += cost;
+            max_warp = max_warp.max(cost);
+        }
+    }
+    clock.charge_warp_work(warp_sum, max_warp);
+}
+
+/// Lockstep executor for ALTERNATE: all lanes of a warp perform a *read*
+/// step against the same memory snapshot logic, then their writes are
+/// applied in lane order — reproducing the paper's intra-warp
+/// inconsistency ("the if-check will not hold for both threads, and their
+/// row vertices will be written on cmatch; only one will be successful").
+///
+/// Threads are the active items (e.g. endpoint rows); each is stepped
+/// until every thread reports completion.
+pub struct WarpStepper {
+    pub order: WriteOrder,
+    pub seed: u64,
+}
+
+/// Outcome of one lockstep read-step of a single lane.
+pub enum StepPlan<W> {
+    /// thread finished
+    Done,
+    /// thread wants to apply `write` then continue
+    Write(W),
+}
+
+impl WarpStepper {
+    /// Drive `threads` (item payloads) in warps of `WARP_SIZE` against a
+    /// shared memory `mem`. `read_step(mem, thread)` plans a write from
+    /// the current memory; `apply(mem, thread, plan)` commits it and
+    /// returns whether the thread continues. Cost: each lockstep round
+    /// charges like one item per lane.
+    pub fn run<T, M, R, A, W>(
+        &self,
+        clock: &mut DeviceClock,
+        threads: &mut [T],
+        mem: &mut M,
+        mut read_step: R,
+        mut apply: A,
+    ) where
+        R: FnMut(&M, &T) -> StepPlan<W>,
+        A: FnMut(&mut M, &mut T, W) -> bool,
+    {
+        clock.charge_launch();
+        let n = threads.len();
+        if n == 0 {
+            return;
+        }
+        let n_warps = n.div_ceil(WARP_SIZE);
+        let warp_order: Vec<usize> = match self.order {
+            WriteOrder::Forward => (0..n_warps).collect(),
+            WriteOrder::Reverse => (0..n_warps).rev().collect(),
+            WriteOrder::Shuffled => {
+                let mut v: Vec<usize> = (0..n_warps).collect();
+                Xoshiro256::new(self.seed).shuffle(&mut v);
+                v
+            }
+        };
+        let mut alive: Vec<bool> = vec![true; n];
+        // warps run until all their lanes retire; warps are scheduled
+        // round-robin in warp_order (one lockstep round each) so long
+        // chains in different warps interleave, like resident warps on an
+        // SM.
+        let mut any_alive = true;
+        while any_alive {
+            any_alive = false;
+            // one global round: every warp performs one lockstep step; the
+            // parallel model charges the max warp cost of the round
+            let mut round_sum = 0u64;
+            let mut round_max = 0u64;
+            for &w in &warp_order {
+                let lo = w * WARP_SIZE;
+                let hi = ((w + 1) * WARP_SIZE).min(n);
+                // read phase: plan all lanes against the same memory state
+                let mut plans: Vec<(usize, W)> = Vec::with_capacity(hi - lo);
+                let mut round_work = 0u64;
+                for i in lo..hi {
+                    if !alive[i] {
+                        continue;
+                    }
+                    round_work += ITEM_COST;
+                    match read_step(mem, &threads[i]) {
+                        StepPlan::Done => alive[i] = false,
+                        StepPlan::Write(wr) => plans.push((i, wr)),
+                    }
+                }
+                // write phase: commit in lane order
+                for (i, wr) in plans {
+                    if !apply(mem, &mut threads[i], wr) {
+                        alive[i] = false;
+                    }
+                }
+                if round_work > 0 {
+                    let cost = WARP_COST + round_work;
+                    round_sum += cost;
+                    round_max = round_max.max(cost);
+                }
+                any_alive |= alive[lo..hi].iter().any(|&a| a);
+            }
+            clock.charge_warp_work(round_sum, round_max);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::config::ThreadMapping;
+
+    #[test]
+    fn thread_items_strided() {
+        let items: Vec<usize> = thread_items(1, 4, 10).collect();
+        assert_eq!(items, vec![1, 5, 9]);
+        let none: Vec<usize> = thread_items(7, 8, 5).collect();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn launch_visits_every_item_once() {
+        for mapping in [ThreadMapping::Ct, ThreadMapping::Mt] {
+            for order in [WriteOrder::Forward, WriteOrder::Reverse, WriteOrder::Shuffled] {
+                let n = 1000;
+                let mut clock = DeviceClock::default();
+                let mut seen = vec![0u32; n];
+                launch(&mut clock, mapping, order, 42, n, |i| {
+                    seen[i] += 1;
+                    1
+                });
+                assert!(seen.iter().all(|&s| s == 1), "{mapping:?} {order:?}");
+                assert_eq!(clock.launches, 1);
+                assert!(clock.cycles > LAUNCH_OVERHEAD);
+            }
+        }
+    }
+
+    #[test]
+    fn ct_cheaper_than_mt_on_large_n() {
+        // the paper's CT-beats-MT observation must hold in the cost model
+        let n = 300_000;
+        let mut ct = DeviceClock::default();
+        launch(&mut ct, ThreadMapping::Ct, WriteOrder::Forward, 0, n, |_| 2);
+        let mut mt = DeviceClock::default();
+        launch(&mut mt, ThreadMapping::Mt, WriteOrder::Forward, 0, n, |_| 2);
+        assert!(
+            ct.cycles < mt.cycles,
+            "CT {} should be < MT {}",
+            ct.cycles,
+            mt.cycles
+        );
+    }
+
+    #[test]
+    fn reverse_order_flips_visit_sequence() {
+        let n = 64;
+        let mut fwd_order = Vec::new();
+        let mut clock = DeviceClock::default();
+        launch(&mut clock, ThreadMapping::Mt, WriteOrder::Forward, 0, n, |i| {
+            fwd_order.push(i);
+            0
+        });
+        let mut rev_order = Vec::new();
+        launch(&mut clock, ThreadMapping::Mt, WriteOrder::Reverse, 0, n, |i| {
+            rev_order.push(i);
+            0
+        });
+        assert_ne!(fwd_order, rev_order);
+        let mut r = rev_order.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn warp_stepper_lockstep_races() {
+        // 33 threads all try to claim slot 0 (CAS-less write): in lockstep,
+        // every lane of warp 0 reads "free" and plans a write; lane order
+        // decides; threads in warp 1 see the committed value and stop.
+        let mut slot = -1i64;
+        let mut threads: Vec<i64> = (0..33).collect();
+        let mut claims = 0usize;
+        let stepper = WarpStepper { order: WriteOrder::Forward, seed: 0 };
+        let mut clock = DeviceClock::default();
+        // plan: if slot free, write my id; else done.
+        // apply: last writer wins; count every commit.
+        stepper.run(
+            &mut clock,
+            &mut threads,
+            &mut slot,
+            |slot, &t| {
+                if *slot == -1 {
+                    StepPlan::Write(t)
+                } else {
+                    StepPlan::Done
+                }
+            },
+            |slot, _t, w| {
+                *slot = w;
+                claims += 1;
+                false
+            },
+        );
+        // all 32 lanes of warp 0 raced and wrote (the paper's
+        // inconsistency); thread 32 in warp 1 observed the winner and quit.
+        assert_eq!(claims, 32);
+        assert_eq!(slot, 31); // last lane's write wins under Forward order
+    }
+}

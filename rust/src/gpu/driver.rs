@@ -1,0 +1,296 @@
+//! The outer driver loops (paper Algorithm 1 and its APFB variant) tying
+//! the kernels together, exposed through the common
+//! [`MatchingAlgorithm`] interface as [`GpuMatcher`].
+
+use super::config::{ApDriver, BfsKernel, GpuConfig};
+use super::device::DeviceClock;
+use super::kernels::{
+    alternate, fixmatching, gpubfs, gpubfs_wr, init_bfs_array, wr_chosen_endpoints, GpuState,
+    LaunchCfg, L0,
+};
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::{Matching, UNMATCHED};
+
+/// One of the eight paper variants as a ready-to-run matcher.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GpuMatcher {
+    pub config: GpuConfig,
+}
+
+impl GpuMatcher {
+    pub fn new(config: GpuConfig) -> Self {
+        Self { config }
+    }
+
+    /// Run and also return the device clock (for the modeled-time tables).
+    pub fn run_with_clock(&self, g: &BipartiteCsr, init: Matching) -> (RunResult, DeviceClock) {
+        let cfg = LaunchCfg {
+            mapping: self.config.mapping,
+            order: self.config.write_order,
+            seed: self.config.seed,
+        };
+        let with_root = self.config.kernel == BfsKernel::GpuBfsWr;
+        // the APsB-GPUBFS-WR improvement (endpoint encoding + restricted
+        // ALTERNATE) — the paper enables it only for that combination
+        let improved_wr = with_root && self.config.driver == ApDriver::Apsb;
+
+        let mut state = GpuState::new(g, &init);
+        let mut clock = DeviceClock::default();
+        let mut stats = RunStats::default();
+
+        loop {
+            // ---- one phase: combined BFS over all unmatched columns ----
+            init_bfs_array(&mut state, cfg, with_root, &mut clock);
+            state.augmenting_path_found = false;
+            let mut bfs_level = L0;
+            let mut launches = 0u32;
+            loop {
+                state.vertex_inserted = false;
+                let scanned = match self.config.kernel {
+                    BfsKernel::GpuBfs => gpubfs(g, &mut state, bfs_level, cfg, &mut clock),
+                    BfsKernel::GpuBfsWr => {
+                        gpubfs_wr(g, &mut state, bfs_level, cfg, improved_wr, &mut clock)
+                    }
+                };
+                stats.edges_scanned += scanned;
+                launches += 1;
+                // Algorithm 1 lines 8–10: APsB stops at the first level
+                // with an augmenting path; APFB keeps going to the bottom.
+                if self.config.driver == ApDriver::Apsb && state.augmenting_path_found {
+                    break;
+                }
+                if !state.vertex_inserted {
+                    break;
+                }
+                bfs_level += 1;
+            }
+            stats.record_phase(launches);
+            if !state.augmenting_path_found {
+                break; // Berge: no augmenting path ⇒ maximum
+            }
+
+            // ---- speculative augmentation + repair ----
+            let before = state.cardinality();
+            if improved_wr {
+                let chosen = wr_chosen_endpoints(&state);
+                alternate(&mut state, cfg, Some(chosen), &mut clock);
+            } else {
+                alternate(&mut state, cfg, None, &mut clock);
+            }
+            stats.fixes += fixmatching(&mut state, cfg, &mut clock);
+            let after = state.cardinality();
+            stats.augmentations += after.saturating_sub(before) as u64;
+
+            // Safety net (not in the paper, which relies on favorable
+            // schedules): if this phase's speculative alternation made no
+            // net progress, realize one augmenting path sequentially so
+            // the outer loop provably terminates.
+            if after <= before {
+                if augment_one_sequential(g, &mut state) {
+                    stats.fallbacks += 1;
+                    stats.augmentations += 1;
+                } else {
+                    break; // no augmenting path actually remains
+                }
+            }
+        }
+
+        stats.device_cycles = clock.cycles;
+        stats.device_parallel_cycles = clock.parallel_cycles;
+        let m = state.to_matching();
+        (RunResult::with_stats(m, stats), clock)
+    }
+}
+
+impl MatchingAlgorithm for GpuMatcher {
+    fn name(&self) -> String {
+        format!("gpu:{}", self.config.name())
+    }
+
+    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+        self.run_with_clock(g, init).0
+    }
+}
+
+/// Host-side single BFS augmentation used only by the no-progress safety
+/// net. Finds and flips one shortest augmenting path.
+fn augment_one_sequential(g: &BipartiteCsr, state: &mut GpuState) -> bool {
+    let nr = state.rmatch.len();
+    let nc = state.cmatch.len();
+    let mut pred = vec![-1i32; nr];
+    let mut cvis = vec![false; nc];
+    let mut rvis = vec![false; nr];
+    let mut frontier: Vec<u32> = Vec::new();
+    for c in 0..nc {
+        if state.cmatch[c] == UNMATCHED && g.col_degree(c) > 0 {
+            cvis[c] = true;
+            frontier.push(c as u32);
+        }
+    }
+    let mut next = Vec::new();
+    let mut endpoint = None;
+    'outer: while !frontier.is_empty() {
+        for &c in &frontier {
+            for &r in g.col_neighbors(c as usize) {
+                let r = r as usize;
+                if rvis[r] {
+                    continue;
+                }
+                rvis[r] = true;
+                pred[r] = c as i32;
+                match state.rmatch[r] {
+                    UNMATCHED => {
+                        endpoint = Some(r);
+                        break 'outer;
+                    }
+                    c2 if c2 >= 0 => {
+                        let c2 = c2 as usize;
+                        if !cvis[c2] {
+                            cvis[c2] = true;
+                            next.push(c2 as u32);
+                        }
+                    }
+                    _ => unreachable!("sentinel after fixmatching"),
+                }
+            }
+        }
+        std::mem::swap(&mut frontier, &mut next);
+        next.clear();
+    }
+    let Some(mut r) = endpoint else { return false };
+    loop {
+        let c = pred[r] as usize;
+        let prev = state.cmatch[c];
+        state.cmatch[c] = r as i32;
+        state.rmatch[r] = c as i32;
+        if prev == UNMATCHED {
+            return true;
+        }
+        r = prev as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::config::WriteOrder;
+    use crate::graph::from_edges;
+    use crate::matching::init::InitHeuristic;
+    use crate::matching::reference_max_cardinality;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn all_eight_variants_small_graph() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
+        for cfg in GpuConfig::all_variants() {
+            let r = GpuMatcher::new(cfg).run(&g, Matching::empty(3, 3));
+            r.matching
+                .certify(&g)
+                .unwrap_or_else(|e| panic!("{}: {e}", cfg.name()));
+            assert_eq!(r.matching.cardinality(), 3, "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn prop_all_variants_match_reference() {
+        forall(Config::cases(12), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            let want = reference_max_cardinality(&g);
+            for cfg in GpuConfig::all_variants() {
+                let r = GpuMatcher::new(cfg).run(&g, Matching::empty(nr, nc));
+                r.matching
+                    .certify(&g)
+                    .map_err(|e| format!("{}: {e}", cfg.name()))?;
+                if r.matching.cardinality() != want {
+                    return Err(format!(
+                        "{}: {} != {want}",
+                        cfg.name(),
+                        r.matching.cardinality()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_write_orders_all_valid() {
+        forall(Config::cases(10), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 20);
+            let g = from_edges(nr, nc, &edges);
+            let want = reference_max_cardinality(&g);
+            for order in [WriteOrder::Forward, WriteOrder::Reverse, WriteOrder::Shuffled] {
+                let cfg = GpuConfig { write_order: order, seed: rng.next_u64(), ..Default::default() };
+                let r = GpuMatcher::new(cfg).run(&g, Matching::empty(nr, nc));
+                r.matching.certify(&g).map_err(|e| format!("{order:?}: {e}"))?;
+                if r.matching.cardinality() != want {
+                    return Err(format!("{order:?} suboptimal"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn variants_on_generated_families_with_init() {
+        for fam in [
+            crate::graph::gen::Family::Road,
+            crate::graph::gen::Family::Kron,
+            crate::graph::gen::Family::Banded,
+        ] {
+            let g = fam.generate(600, 17);
+            let want = reference_max_cardinality(&g);
+            let init = InitHeuristic::Cheap.run(&g);
+            for cfg in GpuConfig::all_variants() {
+                let r = GpuMatcher::new(cfg).run(&g, init.clone());
+                r.matching
+                    .certify(&g)
+                    .unwrap_or_else(|e| panic!("{} on {}: {e}", cfg.name(), fam.name()));
+                assert_eq!(r.matching.cardinality(), want, "{} on {}", cfg.name(), fam.name());
+            }
+        }
+    }
+
+    #[test]
+    fn apsb_records_more_phases_fewer_levels_per_phase() {
+        // APsB stops each phase at the first augmenting level, so its
+        // launches-per-phase must not exceed APFB's on the same graph.
+        let g = crate::graph::gen::Family::Delaunay.generate(900, 23);
+        let init = InitHeuristic::Cheap.run(&g);
+        let apfb = GpuMatcher::new(GpuConfig {
+            driver: ApDriver::Apfb,
+            ..Default::default()
+        })
+        .run(&g, init.clone());
+        let apsb = GpuMatcher::new(GpuConfig {
+            driver: ApDriver::Apsb,
+            ..Default::default()
+        })
+        .run(&g, init);
+        assert!(apsb.stats.phases >= apfb.stats.phases);
+        let max_apsb = apsb.stats.launches_per_phase.iter().max().copied().unwrap_or(0);
+        let max_apfb = apfb.stats.launches_per_phase.iter().max().copied().unwrap_or(0);
+        assert!(max_apsb <= max_apfb);
+    }
+
+    #[test]
+    fn device_cycles_recorded() {
+        let g = crate::graph::gen::Family::Uniform.generate(400, 3);
+        let (r, clock) =
+            GpuMatcher::default().run_with_clock(&g, Matching::empty(g.nr, g.nc));
+        assert!(r.stats.device_cycles > 0);
+        assert_eq!(r.stats.device_cycles, clock.cycles);
+        assert!(clock.launches > 0);
+    }
+
+    #[test]
+    fn empty_and_edgeless_graphs() {
+        let g = from_edges(5, 5, &[]);
+        for cfg in GpuConfig::all_variants() {
+            let r = GpuMatcher::new(cfg).run(&g, Matching::empty(5, 5));
+            assert_eq!(r.matching.cardinality(), 0);
+        }
+    }
+}

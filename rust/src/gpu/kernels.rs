@@ -1,0 +1,477 @@
+//! The paper's device kernels (Algorithms 2–4 plus the init and fix
+//! kernels), executed on the [`super::device`] model.
+//!
+//! All array/sentinel conventions match the paper exactly:
+//! * `rmatch[r] = -1` unmatched, `-2` = endpoint of a discovered
+//!   augmenting path (set by the BFS kernels, consumed by ALTERNATE).
+//! * `bfs_array[c] = L0-1` for matched (unvisited) columns, `L0` for
+//!   unmatched columns (BFS start level), `level+1` when claimed.
+//! * GPUBFS-WR: `bfs_array[root] < L0-1` marks a satisfied root. With
+//!   `L0 = 2`, live levels are positive, so the APsB improvement encodes
+//!   the chosen endpoint row as a non-positive value. (We store
+//!   `-(row+1)`, not the paper's `-(row)`: row 0 would collide with the
+//!   plain "satisfied" marker `L0-2 = 0` — an off-by-one latent in the
+//!   paper's description.)
+
+use super::config::{ThreadMapping, WriteOrder};
+use super::device::{launch, DeviceClock, StepPlan, WarpStepper};
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::Matching;
+
+/// BFS start level. The paper's APsB-GPUBFS-WR improvement requires
+/// `L0 = 2` so that `bfs_array` stays positive for live levels.
+pub const L0: i32 = 2;
+
+/// Device-resident state for one matching computation.
+#[derive(Debug, Clone)]
+pub struct GpuState {
+    pub bfs_array: Vec<i32>,
+    pub predecessor: Vec<i32>,
+    pub root: Vec<i32>,
+    pub rmatch: Vec<i32>,
+    pub cmatch: Vec<i32>,
+    pub vertex_inserted: bool,
+    pub augmenting_path_found: bool,
+}
+
+impl GpuState {
+    pub fn new(g: &BipartiteCsr, init: &Matching) -> Self {
+        Self {
+            bfs_array: vec![0; g.nc],
+            predecessor: vec![-1; g.nr],
+            root: vec![-1; g.nc],
+            rmatch: init.rmatch.clone(),
+            cmatch: init.cmatch.clone(),
+            vertex_inserted: false,
+            augmenting_path_found: false,
+        }
+    }
+
+    pub fn cardinality(&self) -> usize {
+        self.cmatch.iter().filter(|&&r| r >= 0).count()
+    }
+
+    /// Extract a host [`Matching`] (must be called only after FIXMATCHING;
+    /// sentinels would fail validation).
+    pub fn to_matching(&self) -> Matching {
+        Matching { rmatch: self.rmatch.clone(), cmatch: self.cmatch.clone() }
+    }
+}
+
+/// Kernel launch parameters shared by every kernel in one run.
+#[derive(Debug, Clone, Copy)]
+pub struct LaunchCfg {
+    pub mapping: ThreadMapping,
+    pub order: WriteOrder,
+    pub seed: u64,
+}
+
+/// INITBFSARRAY (§3): `bfs_array[c] = L0-1` if matched else `L0`; also
+/// resets per-phase arrays (predecessor; root when `with_root`).
+pub fn init_bfs_array(state: &mut GpuState, cfg: LaunchCfg, with_root: bool, clock: &mut DeviceClock) {
+    let nc = state.cmatch.len();
+    let cmatch = &state.cmatch;
+    let bfs_array = &mut state.bfs_array;
+    let root = &mut state.root;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, nc, |c| {
+        if cmatch[c] > -1 {
+            bfs_array[c] = L0 - 1;
+            if with_root {
+                root[c] = -1;
+            }
+        } else {
+            bfs_array[c] = L0;
+            if with_root {
+                root[c] = c as i32;
+            }
+        }
+        0
+    });
+    let nr = state.predecessor.len();
+    let predecessor = &mut state.predecessor;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, nr, |r| {
+        predecessor[r] = -1;
+        0
+    });
+}
+
+/// GPUBFS — Algorithm 2: one level expansion over all columns.
+pub fn gpubfs(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    cfg: LaunchCfg,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let mut edges_total = 0u64;
+    let GpuState { bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, .. } =
+        state;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, g.nc, |col_vertex| {
+        if bfs_array[col_vertex] != bfs_level {
+            return 0;
+        }
+        let mut edges = 0u64;
+        for &nr in g.col_neighbors(col_vertex) {
+            edges += 1;
+            let neighbor_row = nr as usize;
+            let col_match = rmatch[neighbor_row];
+            if col_match > -1 {
+                if bfs_array[col_match as usize] == L0 - 1 {
+                    *vertex_inserted = true;
+                    bfs_array[col_match as usize] = bfs_level + 1;
+                    predecessor[neighbor_row] = col_vertex as i32;
+                }
+            } else if col_match == -1 {
+                rmatch[neighbor_row] = -2;
+                predecessor[neighbor_row] = col_vertex as i32;
+                *augmenting_path_found = true;
+            }
+        }
+        edges_total += edges;
+        edges
+    });
+    edges_total
+}
+
+/// GPUBFS-WR — Algorithm 4: level expansion carrying the `root` array,
+/// with early exit for satisfied roots. `encode_endpoint` enables the
+/// APsB improvement (store the chosen endpoint row in the root's
+/// `bfs_array` slot).
+pub fn gpubfs_wr(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    cfg: LaunchCfg,
+    encode_endpoint: bool,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let mut edges_total = 0u64;
+    let GpuState {
+        bfs_array,
+        predecessor,
+        root,
+        rmatch,
+        vertex_inserted,
+        augmenting_path_found,
+        ..
+    } = state;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, g.nc, |col_vertex| {
+        if bfs_array[col_vertex] != bfs_level {
+            return 0;
+        }
+        let my_root = root[col_vertex];
+        debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
+        if bfs_array[my_root as usize] < L0 - 1 {
+            return 0; // early exit: this tree already found a path
+        }
+        let mut edges = 0u64;
+        for &nr in g.col_neighbors(col_vertex) {
+            edges += 1;
+            let neighbor_row = nr as usize;
+            let col_match = rmatch[neighbor_row];
+            if col_match > -1 {
+                if bfs_array[col_match as usize] == L0 - 1 {
+                    *vertex_inserted = true;
+                    bfs_array[col_match as usize] = bfs_level + 1;
+                    root[col_match as usize] = my_root;
+                    predecessor[neighbor_row] = col_vertex as i32;
+                }
+            } else if col_match == -1 {
+                bfs_array[my_root as usize] = if encode_endpoint {
+                    -(neighbor_row as i32 + 1)
+                } else {
+                    L0 - 2
+                };
+                rmatch[neighbor_row] = -2;
+                predecessor[neighbor_row] = col_vertex as i32;
+                *augmenting_path_found = true;
+            }
+        }
+        edges_total += edges;
+        edges
+    });
+    edges_total
+}
+
+/// ALTERNATE — Algorithm 3, executed in intra-warp lockstep so the
+/// paper's same-warp double-claim inconsistency actually occurs (and is
+/// then repaired by FIXMATCHING). `only_rows` restricts the starting rows
+/// (used by the WR variant); `None` starts from every `rmatch == -2` row.
+pub fn alternate(
+    state: &mut GpuState,
+    cfg: LaunchCfg,
+    only_rows: Option<Vec<u32>>,
+    clock: &mut DeviceClock,
+) {
+    // thread payload: (current row_vertex, steps taken)
+    let max_steps = (state.rmatch.len() + state.cmatch.len() + 2) as u32;
+    let mut threads: Vec<(i32, u32)> = match only_rows {
+        Some(rows) => rows.into_iter().map(|r| (r as i32, 0)).collect(),
+        None => (0..state.rmatch.len())
+            .filter(|&r| state.rmatch[r] == -2)
+            .map(|r| (r as i32, 0))
+            .collect(),
+    };
+    let stepper = WarpStepper { order: cfg.order, seed: cfg.seed };
+    /// the memory the ALTERNATE kernel touches
+    struct Mem<'a> {
+        predecessor: &'a [i32],
+        rmatch: &'a mut [i32],
+        cmatch: &'a mut [i32],
+    }
+    let mut mem = Mem {
+        predecessor: &state.predecessor,
+        rmatch: &mut state.rmatch,
+        cmatch: &mut state.cmatch,
+    };
+    stepper.run(
+        clock,
+        &mut threads,
+        &mut mem,
+        // read phase (one lockstep iteration of the while loop, lines 5–9)
+        |mem, &(row_vertex, steps)| {
+            if row_vertex < 0 || steps >= max_steps {
+                return StepPlan::Done;
+            }
+            let matched_col = mem.predecessor[row_vertex as usize];
+            if matched_col < 0 {
+                return StepPlan::Done; // stale/cleared predecessor guard
+            }
+            let matched_row = mem.cmatch[matched_col as usize];
+            // paper line 8: another alternation already claimed this column
+            if matched_row > -1 && mem.predecessor[matched_row as usize] == matched_col {
+                return StepPlan::Done;
+            }
+            StepPlan::Write((matched_col, matched_row))
+        },
+        // write phase (lines 10–12), applied in lane order
+        |mem, t, (matched_col, matched_row)| {
+            let (row_vertex, steps) = *t;
+            mem.cmatch[matched_col as usize] = row_vertex;
+            mem.rmatch[row_vertex as usize] = matched_col;
+            *t = (matched_row, steps + 1);
+            matched_row != -1
+        },
+    );
+}
+
+/// Starting rows for the APsB-GPUBFS-WR improved ALTERNATE: only the row
+/// encoded in its root's `bfs_array` slot alternates; every other
+/// `rmatch == -2` row is left for FIXMATCHING to reset.
+pub fn wr_chosen_endpoints(state: &GpuState) -> Vec<u32> {
+    (0..state.rmatch.len())
+        .filter(|&r| {
+            if state.rmatch[r] != -2 {
+                return false;
+            }
+            let c = state.predecessor[r];
+            if c < 0 {
+                return false;
+            }
+            let rt = state.root[c as usize];
+            if rt < 0 {
+                return false;
+            }
+            state.bfs_array[rt as usize] == -(r as i32 + 1)
+        })
+        .map(|r| r as u32)
+        .collect()
+}
+
+/// FIXMATCHING (§3): clear leftover `-2` sentinels and dangling pointers,
+/// keeping exactly the mutually-consistent pairs. Two passes: rows against
+/// cmatch, then columns against the repaired rmatch. Returns #resets.
+pub fn fixmatching(state: &mut GpuState, cfg: LaunchCfg, clock: &mut DeviceClock) -> u64 {
+    let mut fixes = 0u64;
+    {
+        let GpuState { rmatch, cmatch, .. } = state;
+        let nr = rmatch.len();
+        launch(clock, cfg.mapping, cfg.order, cfg.seed, nr, |r| {
+            let c = rmatch[r];
+            if c == -2 || (c >= 0 && cmatch[c as usize] != r as i32) {
+                rmatch[r] = -1;
+                fixes += 1;
+            }
+            0
+        });
+    }
+    {
+        let GpuState { rmatch, cmatch, .. } = state;
+        let nc = cmatch.len();
+        launch(clock, cfg.mapping, cfg.order, cfg.seed, nc, |c| {
+            let r = cmatch[c];
+            if r >= 0 && rmatch[r as usize] != c as i32 {
+                cmatch[c] = -1;
+                fixes += 1;
+            }
+            0
+        });
+    }
+    fixes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::gpu::config::{ThreadMapping, WriteOrder};
+
+    fn cfg() -> LaunchCfg {
+        LaunchCfg { mapping: ThreadMapping::Mt, order: WriteOrder::Forward, seed: 0 }
+    }
+
+    fn fresh(g: &BipartiteCsr, init: &Matching) -> (GpuState, DeviceClock) {
+        (GpuState::new(g, init), DeviceClock::default())
+    }
+
+    #[test]
+    fn init_bfs_array_levels() {
+        let g = from_edges(2, 3, &[(0, 0), (1, 1), (0, 2)]);
+        let mut init = Matching::empty(2, 3);
+        init.join(1, 1);
+        let (mut st, mut clock) = fresh(&g, &init);
+        init_bfs_array(&mut st, cfg(), true, &mut clock);
+        assert_eq!(st.bfs_array, vec![L0, L0 - 1, L0]);
+        assert_eq!(st.root, vec![0, -1, 2]);
+        assert!(st.predecessor.iter().all(|&p| p == -1));
+    }
+
+    #[test]
+    fn gpubfs_finds_direct_augmenting_path() {
+        // unmatched c0 adjacent to free r0
+        let g = from_edges(1, 1, &[(0, 0)]);
+        let (mut st, mut clock) = fresh(&g, &Matching::empty(1, 1));
+        init_bfs_array(&mut st, cfg(), false, &mut clock);
+        gpubfs(&g, &mut st, L0, cfg(), &mut clock);
+        assert!(st.augmenting_path_found);
+        assert_eq!(st.rmatch[0], -2);
+        assert_eq!(st.predecessor[0], 0);
+    }
+
+    #[test]
+    fn gpubfs_expands_through_matched_rows() {
+        // c0 free, r0 matched to c1, r1 free: c0-r0 forces c1 into level 3
+        let g = from_edges(2, 2, &[(0, 0), (0, 1), (1, 1)]);
+        let mut init = Matching::empty(2, 2);
+        init.join(0, 1);
+        let (mut st, mut clock) = fresh(&g, &init);
+        init_bfs_array(&mut st, cfg(), false, &mut clock);
+        gpubfs(&g, &mut st, L0, cfg(), &mut clock);
+        assert!(!st.augmenting_path_found);
+        assert!(st.vertex_inserted);
+        assert_eq!(st.bfs_array[1], L0 + 1);
+        st.vertex_inserted = false;
+        gpubfs(&g, &mut st, L0 + 1, cfg(), &mut clock);
+        assert!(st.augmenting_path_found);
+        assert_eq!(st.rmatch[1], -2);
+        assert_eq!(st.predecessor[1], 1);
+    }
+
+    #[test]
+    fn gpubfs_wr_early_exit_stops_tree() {
+        // two columns in the same tree; after the root is satisfied the
+        // other column must not expand.
+        let g = from_edges(3, 2, &[(0, 0), (1, 0), (1, 1), (2, 1)]);
+        let mut init = Matching::empty(3, 2);
+        init.join(1, 1); // c1 matched to r1
+        let (mut st, mut clock) = fresh(&g, &init);
+        init_bfs_array(&mut st, cfg(), true, &mut clock);
+        // level L0: c0 frontier; finds free r0 -> root satisfied
+        gpubfs_wr(&g, &mut st, L0, cfg(), false, &mut clock);
+        assert!(st.augmenting_path_found);
+        assert_eq!(st.bfs_array[0], L0 - 2);
+        // c1 was claimed into the frontier at L0+1 under root 0
+        assert_eq!(st.root[1], 0);
+        let scanned = gpubfs_wr(&g, &mut st, L0 + 1, cfg(), false, &mut clock);
+        assert_eq!(scanned, 0, "satisfied tree must not expand");
+    }
+
+    #[test]
+    fn alternate_realizes_simple_path() {
+        let g = from_edges(1, 1, &[(0, 0)]);
+        let (mut st, mut clock) = fresh(&g, &Matching::empty(1, 1));
+        init_bfs_array(&mut st, cfg(), false, &mut clock);
+        gpubfs(&g, &mut st, L0, cfg(), &mut clock);
+        alternate(&mut st, cfg(), None, &mut clock);
+        fixmatching(&mut st, cfg(), &mut clock);
+        assert_eq!(st.rmatch, vec![0]);
+        assert_eq!(st.cmatch, vec![0]);
+        st.to_matching().certify(&g).unwrap();
+    }
+
+    #[test]
+    fn alternate_flips_length3_path() {
+        // c0 - r0 = c1 - r1 (c0 free, r1 free; r0 matched to c1)
+        let g = from_edges(2, 2, &[(0, 0), (0, 1), (1, 1)]);
+        let mut init = Matching::empty(2, 2);
+        init.join(0, 1);
+        let (mut st, mut clock) = fresh(&g, &init);
+        init_bfs_array(&mut st, cfg(), false, &mut clock);
+        gpubfs(&g, &mut st, L0, cfg(), &mut clock);
+        gpubfs(&g, &mut st, L0 + 1, cfg(), &mut clock);
+        alternate(&mut st, cfg(), None, &mut clock);
+        let fixes = fixmatching(&mut st, cfg(), &mut clock);
+        let m = st.to_matching();
+        m.certify(&g).unwrap();
+        assert_eq!(m.cardinality(), 2);
+        assert_eq!(fixes, 0);
+    }
+
+    #[test]
+    fn conflicting_paths_leave_consistent_state() {
+        // Paper Fig. 1: r0 matched c1; two augmenting paths from c0 end in
+        // r1 and r2; both endpoint threads run in the same warp.
+        let g = from_edges(3, 2, &[(0, 0), (0, 1), (1, 1), (2, 1)]);
+        let mut init = Matching::empty(3, 2);
+        init.join(0, 1);
+        let (mut st, mut clock) = fresh(&g, &init);
+        init_bfs_array(&mut st, cfg(), false, &mut clock);
+        let mut level = L0;
+        loop {
+            st.vertex_inserted = false;
+            gpubfs(&g, &mut st, level, cfg(), &mut clock);
+            if !st.vertex_inserted {
+                break;
+            }
+            level += 1;
+        }
+        assert!(st.augmenting_path_found);
+        // both r1 and r2 are endpoints
+        assert_eq!(st.rmatch[1], -2);
+        assert_eq!(st.rmatch[2], -2);
+        alternate(&mut st, cfg(), None, &mut clock);
+        fixmatching(&mut st, cfg(), &mut clock);
+        let m = st.to_matching();
+        m.validate(&g).unwrap();
+        assert_eq!(m.cardinality(), 2, "one of the two paths must be realized");
+    }
+
+    #[test]
+    fn fixmatching_clears_sentinels_and_dangles() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2)]);
+        let (mut st, mut clock) = fresh(&g, &Matching::empty(3, 3));
+        st.rmatch = vec![-2, 1, 2];
+        st.cmatch = vec![-1, 1, 0]; // (r1,c1) consistent; c2 dangles to r0? no: cmatch[2]=0 but rmatch[0]=-2
+        let fixes = fixmatching(&mut st, cfg(), &mut clock);
+        assert_eq!(st.rmatch, vec![-1, 1, -1]);
+        assert_eq!(st.cmatch, vec![-1, 1, -1]);
+        assert_eq!(fixes, 3);
+    }
+
+    #[test]
+    fn wr_chosen_endpoint_selection() {
+        let g = from_edges(2, 1, &[(0, 0), (1, 0)]);
+        let (mut st, mut clock) = fresh(&g, &Matching::empty(2, 1));
+        init_bfsarray_and_run_wr(&g, &mut st, &mut clock);
+        // both rows flagged -2, but only the encoded one is chosen
+        let chosen = wr_chosen_endpoints(&st);
+        assert_eq!(chosen.len(), 1);
+        let r = chosen[0] as usize;
+        assert_eq!(st.bfs_array[0], -(r as i32 + 1));
+    }
+
+    fn init_bfsarray_and_run_wr(g: &BipartiteCsr, st: &mut GpuState, clock: &mut DeviceClock) {
+        init_bfs_array(st, cfg(), true, clock);
+        gpubfs_wr(g, st, L0, cfg(), true, clock);
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's contribution: GPU maximum-cardinality matching (APFB/APsB
+//! drivers, GPUBFS/GPUBFS-WR kernels, ALTERNATE + FIXMATCHING speculative
+//! augmentation), executed on a deterministic device simulator
+//! ([`device`]) or through AOT-compiled XLA artifacts ([`xla_backend`]).
+
+pub mod config;
+pub mod device;
+pub mod driver;
+pub mod kernels;
+pub mod xla_backend;
+
+pub use config::{ApDriver, BfsKernel, GpuConfig, ThreadMapping, WriteOrder};
+pub use driver::GpuMatcher;

@@ -1,0 +1,123 @@
+//! Edge-list (COO) accumulation and conversion to [`BipartiteCsr`].
+//! Accepts unsorted input with duplicates; dedups on build.
+
+use super::csr::BipartiteCsr;
+
+/// Mutable edge accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    nr: usize,
+    nc: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl EdgeList {
+    pub fn new(nr: usize, nc: usize) -> Self {
+        assert!(nr <= u32::MAX as usize && nc <= u32::MAX as usize);
+        Self { nr, nc, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(nr: usize, nc: usize, cap: usize) -> Self {
+        let mut e = Self::new(nr, nc);
+        e.edges.reserve(cap);
+        e
+    }
+
+    /// Add edge (row r, column c). Out-of-range edges panic in debug and
+    /// are rejected with an assert in release too — generators must be
+    /// in-bounds by construction.
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize) {
+        assert!(r < self.nr && c < self.nc, "edge ({r},{c}) out of {}x{}", self.nr, self.nc);
+        self.edges.push((r as u32, c as u32));
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    pub fn nc(&self) -> usize {
+        self.nc
+    }
+
+    /// Build the CSR graph: sort column-major, dedup, compress.
+    pub fn build(mut self) -> BipartiteCsr {
+        // sort by (c, r) so cadj comes out sorted per column
+        self.edges.sort_unstable_by_key(|&(r, c)| (c, r));
+        self.edges.dedup();
+        let mut cxadj = vec![0u32; self.nc + 1];
+        for &(_, c) in &self.edges {
+            cxadj[c as usize + 1] += 1;
+        }
+        for i in 0..self.nc {
+            cxadj[i + 1] += cxadj[i];
+        }
+        let cadj: Vec<u32> = self.edges.iter().map(|&(r, _)| r).collect();
+        BipartiteCsr::from_col_csr(self.nr, self.nc, cxadj, cadj)
+    }
+}
+
+/// Convenience: build a graph straight from an edge slice.
+pub fn from_edges(nr: usize, nc: usize, edges: &[(u32, u32)]) -> BipartiteCsr {
+    let mut el = EdgeList::with_capacity(nr, nc, edges.len());
+    for &(r, c) in edges {
+        el.add(r as usize, c as usize);
+    }
+    el.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn dedup_and_sort() {
+        let g = from_edges(3, 2, &[(2, 1), (0, 0), (2, 1), (1, 0), (0, 0)]);
+        assert_eq!(g.n_edges(), 3);
+        assert_eq!(g.col_neighbors(0), &[0, 1]);
+        assert_eq!(g.col_neighbors(1), &[2]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn empty_build() {
+        let g = EdgeList::new(4, 5).build();
+        assert_eq!(g.nr, 4);
+        assert_eq!(g.nc, 5);
+        assert_eq!(g.n_edges(), 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn out_of_bounds_panics() {
+        let mut el = EdgeList::new(2, 2);
+        el.add(2, 0);
+    }
+
+    #[test]
+    fn prop_build_roundtrips_edge_set() {
+        forall(Config::cases(40), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 40);
+            let g = from_edges(nr, nc, &edges);
+            g.validate().map_err(|e| format!("invalid: {e}"))?;
+            let mut got = g.edges();
+            got.sort_unstable();
+            let mut want = edges.clone();
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("edge set mismatch: {} vs {}", got.len(), want.len()));
+            }
+            Ok(())
+        });
+    }
+}

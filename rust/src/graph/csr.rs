@@ -1,0 +1,298 @@
+//! Bipartite graph in compressed-sparse-row form, column-major primary —
+//! the paper's `cxadj`/`cadj` arrays (the BFS kernels sweep *column*
+//! vertices). The row-side adjacency (`rxadj`/`radj`) is kept too: the
+//! sequential/multicore baselines (PFP, DFS, HK's DFS phase) walk both
+//! sides.
+//!
+//! In the sparse-matrix reading of the paper, columns are one vertex class
+//! and rows the other; an edge (r, c) is a structural nonzero A[r][c].
+
+use std::fmt;
+
+/// Immutable bipartite graph. Invariants (checked by [`BipartiteCsr::validate`]):
+/// * `cxadj.len() == nc + 1`, `cxadj[0] == 0`, non-decreasing,
+///   `cxadj[nc] == cadj.len()`
+/// * every entry of `cadj` is a valid row id `< nr`
+/// * neighbor lists are sorted and duplicate-free
+/// * row-side arrays are the exact transpose of the column-side ones.
+#[derive(Clone, PartialEq, Eq)]
+pub struct BipartiteCsr {
+    /// number of row vertices
+    pub nr: usize,
+    /// number of column vertices
+    pub nc: usize,
+    /// column pointers, len nc+1
+    pub cxadj: Vec<u32>,
+    /// row ids per column, len = #edges
+    pub cadj: Vec<u32>,
+    /// row pointers, len nr+1 (transpose)
+    pub rxadj: Vec<u32>,
+    /// column ids per row, len = #edges
+    pub radj: Vec<u32>,
+}
+
+impl fmt::Debug for BipartiteCsr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "BipartiteCsr {{ nr: {}, nc: {}, edges: {} }}",
+            self.nr,
+            self.nc,
+            self.n_edges()
+        )
+    }
+}
+
+impl BipartiteCsr {
+    /// Build from column-side CSR arrays; computes the row-side transpose.
+    /// Neighbor lists are sorted; duplicates must already be removed (use
+    /// [`crate::graph::builder::EdgeList`] for raw input).
+    pub fn from_col_csr(nr: usize, nc: usize, cxadj: Vec<u32>, mut cadj: Vec<u32>) -> Self {
+        assert_eq!(cxadj.len(), nc + 1, "cxadj must have nc+1 entries");
+        assert_eq!(*cxadj.last().unwrap() as usize, cadj.len());
+        // sort each neighbor list
+        for c in 0..nc {
+            let (lo, hi) = (cxadj[c] as usize, cxadj[c + 1] as usize);
+            cadj[lo..hi].sort_unstable();
+        }
+        let (rxadj, radj) = transpose(nr, &cxadj, &cadj);
+        let g = Self { nr, nc, cxadj, cadj, rxadj, radj };
+        debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
+        g
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.cadj.len()
+    }
+
+    /// Neighbor rows of column `c`.
+    #[inline]
+    pub fn col_neighbors(&self, c: usize) -> &[u32] {
+        &self.cadj[self.cxadj[c] as usize..self.cxadj[c + 1] as usize]
+    }
+
+    /// Neighbor columns of row `r`.
+    #[inline]
+    pub fn row_neighbors(&self, r: usize) -> &[u32] {
+        &self.radj[self.rxadj[r] as usize..self.rxadj[r + 1] as usize]
+    }
+
+    #[inline]
+    pub fn col_degree(&self, c: usize) -> usize {
+        (self.cxadj[c + 1] - self.cxadj[c]) as usize
+    }
+
+    #[inline]
+    pub fn row_degree(&self, r: usize) -> usize {
+        (self.rxadj[r + 1] - self.rxadj[r]) as usize
+    }
+
+    pub fn max_col_degree(&self) -> usize {
+        (0..self.nc).map(|c| self.col_degree(c)).max().unwrap_or(0)
+    }
+
+    pub fn max_row_degree(&self) -> usize {
+        (0..self.nr).map(|r| self.row_degree(r)).max().unwrap_or(0)
+    }
+
+    /// Average column degree (edges / nc).
+    pub fn avg_col_degree(&self) -> f64 {
+        if self.nc == 0 {
+            0.0
+        } else {
+            self.n_edges() as f64 / self.nc as f64
+        }
+    }
+
+    pub fn has_edge(&self, r: usize, c: usize) -> bool {
+        self.col_neighbors(c).binary_search(&(r as u32)).is_ok()
+    }
+
+    /// Full structural validation; returns a description of the first
+    /// violated invariant.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cxadj.len() != self.nc + 1 {
+            return Err(format!("cxadj len {} != nc+1 {}", self.cxadj.len(), self.nc + 1));
+        }
+        if self.rxadj.len() != self.nr + 1 {
+            return Err(format!("rxadj len {} != nr+1 {}", self.rxadj.len(), self.nr + 1));
+        }
+        if self.cxadj[0] != 0 || self.rxadj[0] != 0 {
+            return Err("pointer arrays must start at 0".into());
+        }
+        if self.cxadj.windows(2).any(|w| w[0] > w[1]) {
+            return Err("cxadj not non-decreasing".into());
+        }
+        if self.rxadj.windows(2).any(|w| w[0] > w[1]) {
+            return Err("rxadj not non-decreasing".into());
+        }
+        if *self.cxadj.last().unwrap() as usize != self.cadj.len() {
+            return Err("cxadj[nc] != |cadj|".into());
+        }
+        if *self.rxadj.last().unwrap() as usize != self.radj.len() {
+            return Err("rxadj[nr] != |radj|".into());
+        }
+        if self.cadj.len() != self.radj.len() {
+            return Err("edge count mismatch between sides".into());
+        }
+        for c in 0..self.nc {
+            let nbrs = self.col_neighbors(c);
+            for w in nbrs.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("col {c} neighbors not strictly sorted"));
+                }
+            }
+            if let Some(&r) = nbrs.last() {
+                if r as usize >= self.nr {
+                    return Err(format!("col {c} references row {r} >= nr {}", self.nr));
+                }
+            }
+        }
+        for r in 0..self.nr {
+            let nbrs = self.row_neighbors(r);
+            for w in nbrs.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} neighbors not strictly sorted"));
+                }
+            }
+            if let Some(&c) = nbrs.last() {
+                if c as usize >= self.nc {
+                    return Err(format!("row {r} references col {c} >= nc {}", self.nc));
+                }
+            }
+        }
+        // transpose consistency
+        let (rx2, ra2) = transpose(self.nr, &self.cxadj, &self.cadj);
+        if rx2 != self.rxadj || ra2 != self.radj {
+            return Err("row-side arrays are not the transpose of column-side".into());
+        }
+        Ok(())
+    }
+
+    /// Edge list (r, c), column-major order.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.n_edges());
+        for c in 0..self.nc {
+            for &r in self.col_neighbors(c) {
+                out.push((r, c as u32));
+            }
+        }
+        out
+    }
+
+    /// Swap the two vertex classes (transpose of the matrix).
+    pub fn transposed(&self) -> BipartiteCsr {
+        BipartiteCsr {
+            nr: self.nc,
+            nc: self.nr,
+            cxadj: self.rxadj.clone(),
+            cadj: self.radj.clone(),
+            rxadj: self.cxadj.clone(),
+            radj: self.cadj.clone(),
+        }
+    }
+}
+
+/// Transpose column-side CSR to row-side CSR (counting sort; output
+/// neighbor lists come out sorted because columns are visited in order).
+fn transpose(nr: usize, cxadj: &[u32], cadj: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let nc = cxadj.len() - 1;
+    let mut rxadj = vec![0u32; nr + 1];
+    for &r in cadj {
+        rxadj[r as usize + 1] += 1;
+    }
+    for i in 0..nr {
+        rxadj[i + 1] += rxadj[i];
+    }
+    let mut radj = vec![0u32; cadj.len()];
+    let mut fill = rxadj.clone();
+    for c in 0..nc {
+        for &r in &cadj[cxadj[c] as usize..cxadj[c + 1] as usize] {
+            let slot = fill[r as usize] as usize;
+            radj[slot] = c as u32;
+            fill[r as usize] += 1;
+        }
+    }
+    (rxadj, radj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> BipartiteCsr {
+        // c0-r0, c0-r1, c1-r1  (the paper's Fig. 1 minus one edge)
+        BipartiteCsr::from_col_csr(2, 2, vec![0, 2, 3], vec![0, 1, 1])
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = path3();
+        assert_eq!(g.n_edges(), 3);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.col_neighbors(0), &[0, 1]);
+        assert_eq!(g.col_neighbors(1), &[1]);
+        assert_eq!(g.row_neighbors(0), &[0]);
+        assert_eq!(g.row_neighbors(1), &[0, 1]);
+    }
+
+    #[test]
+    fn degrees() {
+        let g = path3();
+        assert_eq!(g.col_degree(0), 2);
+        assert_eq!(g.col_degree(1), 1);
+        assert_eq!(g.row_degree(1), 2);
+        assert_eq!(g.max_col_degree(), 2);
+        assert_eq!(g.max_row_degree(), 2);
+        assert!((g.avg_col_degree() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn has_edge() {
+        let g = path3();
+        assert!(g.has_edge(0, 0));
+        assert!(g.has_edge(1, 0));
+        assert!(g.has_edge(1, 1));
+        assert!(!g.has_edge(0, 1));
+    }
+
+    #[test]
+    fn edges_roundtrip() {
+        let g = path3();
+        assert_eq!(g.edges(), vec![(0, 0), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let g = path3();
+        let t = g.transposed();
+        assert!(t.validate().is_ok());
+        assert_eq!(t.transposed(), g);
+        assert_eq!(t.nr, g.nc);
+        assert!(t.has_edge(0, 0) && t.has_edge(0, 1) && t.has_edge(1, 1));
+    }
+
+    #[test]
+    fn unsorted_input_gets_sorted() {
+        let g = BipartiteCsr::from_col_csr(3, 1, vec![0, 3], vec![2, 0, 1]);
+        assert_eq!(g.col_neighbors(0), &[0, 1, 2]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = BipartiteCsr::from_col_csr(0, 0, vec![0], vec![]);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.n_edges(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = BipartiteCsr::from_col_csr(3, 3, vec![0, 0, 1, 1], vec![2]);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.col_degree(0), 0);
+        assert_eq!(g.col_degree(1), 1);
+        assert_eq!(g.row_degree(0), 0);
+        assert_eq!(g.row_degree(2), 1);
+    }
+}

@@ -1,0 +1,194 @@
+//! CSR → ELL packing for the XLA/PJRT backend.
+//!
+//! The Pallas/JAX formulation of the BFS level kernel (L1/L2) operates on a
+//! dense `(nc, K)` neighbor table — the TPU analogue of the paper's
+//! coalesced CUDA loads (see DESIGN.md §Hardware-Adaptation). Columns with
+//! degree > K are split into *replica* columns that share the original
+//! column's identity via `owner`; padding slots hold -1. Shapes are rounded
+//! up to the compiled artifact buckets.
+
+use super::csr::BipartiteCsr;
+
+/// ELL-packed bipartite graph, padded to fixed (possibly bucketed) shape.
+#[derive(Debug, Clone)]
+pub struct EllGraph {
+    /// logical sizes
+    pub nr: usize,
+    pub nc: usize,
+    /// padded sizes (artifact bucket)
+    pub nc_pad: usize,
+    pub nr_pad: usize,
+    /// neighbors per packed column
+    pub k: usize,
+    /// row ids, shape (nc_pad, k) row-major, -1 = empty slot
+    pub adj: Vec<i32>,
+    /// owner[packed_col] = logical column this packed column belongs to,
+    /// -1 for pure padding. A column of degree d occupies ceil(d/k)
+    /// consecutive packed slots.
+    pub owner: Vec<i32>,
+}
+
+impl EllGraph {
+    /// Pack with the given K; no bucket padding (nc_pad = #packed cols,
+    /// nr_pad = nr).
+    pub fn pack(g: &BipartiteCsr, k: usize) -> Self {
+        assert!(k >= 1);
+        // count packed columns: degree-0 columns still occupy one slot so
+        // the owner map stays total.
+        let mut packed_cols = 0usize;
+        for c in 0..g.nc {
+            packed_cols += g.col_degree(c).div_ceil(k).max(1);
+        }
+        let mut adj = vec![-1i32; packed_cols * k];
+        let mut owner = vec![-1i32; packed_cols];
+        let mut slot = 0usize;
+        for c in 0..g.nc {
+            let nbrs = g.col_neighbors(c);
+            let nslots = nbrs.len().div_ceil(k).max(1);
+            for s in 0..nslots {
+                owner[slot] = c as i32;
+                let base = slot * k;
+                for j in 0..k {
+                    let idx = s * k + j;
+                    if idx < nbrs.len() {
+                        adj[base + j] = nbrs[idx] as i32;
+                    }
+                }
+                slot += 1;
+            }
+        }
+        debug_assert_eq!(slot, packed_cols);
+        Self { nr: g.nr, nc: g.nc, nc_pad: packed_cols, nr_pad: g.nr, k, adj, owner }
+    }
+
+    /// Pack and pad up to a compiled bucket shape (nc_bucket, nr_bucket, k).
+    /// Returns None if the graph does not fit the bucket.
+    pub fn pack_bucketed(
+        g: &BipartiteCsr,
+        nc_bucket: usize,
+        nr_bucket: usize,
+        k: usize,
+    ) -> Option<Self> {
+        let mut e = Self::pack(g, k);
+        if e.nc_pad > nc_bucket || e.nr > nr_bucket || g.nc > nc_bucket {
+            return None;
+        }
+        e.adj.resize(nc_bucket * k, -1);
+        e.owner.resize(nc_bucket, -1);
+        e.nc_pad = nc_bucket;
+        e.nr_pad = nr_bucket;
+        Some(e)
+    }
+
+    /// Number of non-padding slots (must equal the edge count).
+    pub fn n_edges(&self) -> usize {
+        self.adj.iter().filter(|&&v| v >= 0).count()
+    }
+
+    /// Neighbors in packed slot `s`.
+    pub fn slot(&self, s: usize) -> &[i32] {
+        &self.adj[s * self.k..(s + 1) * self.k]
+    }
+
+    /// Recover the edge list (r, logical c) — for validation.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.n_edges());
+        for s in 0..self.nc_pad {
+            let c = self.owner[s];
+            if c < 0 {
+                continue;
+            }
+            for &r in self.slot(s) {
+                if r >= 0 {
+                    out.push((r as u32, c as u32));
+                }
+            }
+        }
+        out.sort_unstable_by_key(|&(r, c)| (c, r));
+        out
+    }
+}
+
+/// Choose a K for a graph: a power of two ≥ a high-degree quantile so most
+/// columns fit one slot, capped to keep the dense table small.
+pub fn suggest_k(g: &BipartiteCsr, cap: usize) -> usize {
+    if g.nc == 0 {
+        return 1;
+    }
+    let mut degs: Vec<usize> = (0..g.nc).map(|c| g.col_degree(c)).collect();
+    degs.sort_unstable();
+    let q95 = degs[(g.nc as f64 * 0.95) as usize % g.nc].max(1);
+    let mut k = 1usize;
+    while k < q95 {
+        k <<= 1;
+    }
+    k.min(cap.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn pack_simple() {
+        let g = from_edges(3, 2, &[(0, 0), (1, 0), (2, 0), (1, 1)]);
+        let e = EllGraph::pack(&g, 2);
+        // col0 deg 3 -> 2 slots; col1 deg 1 -> 1 slot
+        assert_eq!(e.nc_pad, 3);
+        assert_eq!(e.owner, vec![0, 0, 1]);
+        assert_eq!(e.slot(0), &[0, 1]);
+        assert_eq!(e.slot(1), &[2, -1]);
+        assert_eq!(e.slot(2), &[1, -1]);
+        assert_eq!(e.n_edges(), 4);
+    }
+
+    #[test]
+    fn degree_zero_columns_keep_slots() {
+        let g = from_edges(2, 3, &[(0, 2)]);
+        let e = EllGraph::pack(&g, 4);
+        assert_eq!(e.nc_pad, 3);
+        assert_eq!(e.owner, vec![0, 1, 2]);
+        assert_eq!(e.n_edges(), 1);
+    }
+
+    #[test]
+    fn bucket_padding() {
+        let g = from_edges(3, 2, &[(0, 0), (2, 1)]);
+        let e = EllGraph::pack_bucketed(&g, 8, 16, 2).unwrap();
+        assert_eq!(e.nc_pad, 8);
+        assert_eq!(e.nr_pad, 16);
+        assert_eq!(e.adj.len(), 16);
+        assert_eq!(e.owner.len(), 8);
+        assert_eq!(e.n_edges(), 2);
+        // too-small bucket is rejected
+        assert!(EllGraph::pack_bucketed(&g, 1, 16, 2).is_none());
+        assert!(EllGraph::pack_bucketed(&g, 8, 2, 2).is_none());
+    }
+
+    #[test]
+    fn prop_pack_preserves_edges() {
+        forall(Config::cases(30), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            for k in [1usize, 2, 5] {
+                let e = EllGraph::pack(&g, k);
+                let mut want = g.edges();
+                want.sort_unstable_by_key(|&(r, c)| (c, r));
+                if e.edges() != want {
+                    return Err(format!("k={k}: edges differ after pack"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn suggest_k_reasonable() {
+        let g = from_edges(10, 4, &[(0, 0), (1, 0), (2, 0), (3, 0), (0, 1), (1, 2), (2, 3)]);
+        let k = suggest_k(&g, 64);
+        assert!(k.is_power_of_two());
+        assert!(k <= 64 && k >= 1);
+    }
+}

@@ -1,0 +1,65 @@
+//! Banded matrix with irregular fill — Hamrle3 stand-in (circuit-simulation
+//! matrix: narrow band, patchy density). Notable in the paper as the
+//! instance where sequential PFP is near-instant (0.04 s) while BFS-heavy
+//! methods pay many iterations (Fig. 2a) — a worst case for APsB/APFB on
+//! original ordering, and much harder for everyone after RCP.
+
+use crate::graph::builder::EdgeList;
+use crate::graph::csr::BipartiteCsr;
+use crate::util::rng::Xoshiro256;
+
+/// `band`: half-bandwidth; `fill`: probability a band slot is a nonzero.
+pub fn banded(n: usize, band: usize, fill: f64, seed: u64) -> BipartiteCsr {
+    let mut rng = Xoshiro256::new(seed);
+    let mut el = EdgeList::with_capacity(n, n, (n as f64 * band as f64 * fill) as usize + n);
+    for i in 0..n {
+        el.add(i, i);
+        // irregular fill: density waves along the band (patchy blocks like
+        // circuit matrices) — modulate fill by a slow sawtooth
+        let local = fill * (0.5 + ((i / 64) % 3) as f64 * 0.35);
+        let lo = i.saturating_sub(band);
+        let hi = (i + band).min(n - 1);
+        for j in lo..=hi {
+            if j != i && rng.gen_bool(local) {
+                el.add(i, j);
+            }
+        }
+    }
+    el.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banded_stays_in_band() {
+        let band = 10;
+        let g = banded(500, band, 0.4, 3);
+        assert!(g.validate().is_ok());
+        for (r, c) in g.edges() {
+            let d = (r as i64 - c as i64).unsigned_abs() as usize;
+            assert!(d <= band, "edge ({r},{c}) outside band");
+        }
+    }
+
+    #[test]
+    fn diagonal_full() {
+        let g = banded(200, 5, 0.2, 1);
+        for i in 0..200 {
+            assert!(g.has_edge(i, i));
+        }
+    }
+
+    #[test]
+    fn fill_controls_density() {
+        let sparse = banded(400, 8, 0.1, 2);
+        let dense = banded(400, 8, 0.8, 2);
+        assert!(dense.n_edges() > 2 * sparse.n_edges());
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(banded(300, 6, 0.3, 9), banded(300, 6, 0.3, 9));
+    }
+}

@@ -1,0 +1,87 @@
+//! Random geometric graph (rgg_n_2_24_s0 stand-in): n points uniform in the
+//! unit square, edge when distance < r. Grid-bucketed neighbor search keeps
+//! generation O(n) for the constant-expected-degree radii we use.
+
+use crate::graph::builder::EdgeList;
+use crate::graph::csr::BipartiteCsr;
+use crate::util::rng::Xoshiro256;
+
+/// `avg_deg` calibrates the radius: E[deg] = n·π·r² ⇒ r = sqrt(avg/(πn)).
+pub fn rgg(n: usize, avg_deg: f64, seed: u64) -> BipartiteCsr {
+    let mut rng = Xoshiro256::new(seed);
+    let r = (avg_deg / (std::f64::consts::PI * n as f64)).sqrt();
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+
+    // bucket grid with cell size >= r so neighbors are within 3x3 cells
+    let cells = ((1.0 / r) as usize).clamp(1, 4096);
+    let cell_of = |p: (f64, f64)| -> (usize, usize) {
+        (
+            ((p.0 * cells as f64) as usize).min(cells - 1),
+            ((p.1 * cells as f64) as usize).min(cells - 1),
+        )
+    };
+    let mut grid: Vec<Vec<u32>> = vec![Vec::new(); cells * cells];
+    for (i, &p) in pts.iter().enumerate() {
+        let (cx, cy) = cell_of(p);
+        grid[cx * cells + cy].push(i as u32);
+    }
+
+    let mut el = EdgeList::with_capacity(n, n, (n as f64 * (avg_deg + 1.0)) as usize);
+    let r2 = r * r;
+    for i in 0..n {
+        let (cx, cy) = cell_of(pts[i]);
+        let x0 = cx.saturating_sub(1);
+        let y0 = cy.saturating_sub(1);
+        for x in x0..=(cx + 1).min(cells - 1) {
+            for y in y0..=(cy + 1).min(cells - 1) {
+                for &j in &grid[x * cells + y] {
+                    let j = j as usize;
+                    if j <= i {
+                        continue;
+                    }
+                    let dx = pts[i].0 - pts[j].0;
+                    let dy = pts[i].1 - pts[j].1;
+                    if dx * dx + dy * dy < r2 {
+                        el.add(i, j);
+                        el.add(j, i);
+                    }
+                }
+            }
+        }
+    }
+    el.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rgg_degree_near_target() {
+        let g = rgg(2000, 4.0, 17);
+        assert!(g.validate().is_ok());
+        // average degree should be in the ballpark of 4
+        let avg = g.avg_col_degree();
+        assert!((2.0..7.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn rgg_symmetric() {
+        let g = rgg(500, 3.0, 23);
+        for (r, c) in g.edges() {
+            assert!(g.has_edge(c as usize, r as usize));
+        }
+    }
+
+    #[test]
+    fn rgg_deterministic() {
+        assert_eq!(rgg(300, 3.0, 5), rgg(300, 3.0, 5));
+    }
+
+    #[test]
+    fn rgg_tiny() {
+        let g = rgg(3, 1.0, 1);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.nr, 3);
+    }
+}

@@ -1,0 +1,165 @@
+//! Mesh-like generators: road networks, triangulations, long traces.
+//! These model the paper's roadNet-CA, delaunay_nXX, hugetrace /
+//! hugebubbles instances: near-planar, bounded degree, huge diameter —
+//! the regime where BFS-based algorithms need many levels and where APFB
+//! vs APsB behaviour diverges (paper Fig. 2b).
+
+use crate::graph::builder::EdgeList;
+use crate::graph::csr::BipartiteCsr;
+use crate::util::rng::Xoshiro256;
+
+/// Adjacency pattern (plus diagonal) of an s×s grid graph with random edge
+/// deletions — a road-network stand-in. `n` is the target vertex count per
+/// side; the realized size is s² for s = ceil(sqrt(n)).
+pub fn grid_road(n: usize, del_p: f64, seed: u64) -> BipartiteCsr {
+    let s = (n as f64).sqrt().ceil() as usize;
+    let nv = s * s;
+    let mut rng = Xoshiro256::new(seed);
+    let mut el = EdgeList::with_capacity(nv, nv, nv * 5);
+    let idx = |x: usize, y: usize| x * s + y;
+    for x in 0..s {
+        for y in 0..s {
+            let v = idx(x, y);
+            // no diagonal: adjacency matrices of road networks have none,
+            // which keeps the cheap-matching init from trivially completing
+            if x + 1 < s && !rng.gen_bool(del_p) {
+                let u = idx(x + 1, y);
+                el.add(v, u);
+                el.add(u, v);
+            }
+            if y + 1 < s && !rng.gen_bool(del_p) {
+                let u = idx(x, y + 1);
+                el.add(v, u);
+                el.add(u, v);
+            }
+        }
+    }
+    el.build()
+}
+
+/// Triangulation-like mesh: grid plus one random diagonal per cell
+/// (delaunay_nXX stand-in — degree ~6, planar).
+pub fn delaunay_like(n: usize, seed: u64) -> BipartiteCsr {
+    let s = (n as f64).sqrt().ceil() as usize;
+    let nv = s * s;
+    let mut rng = Xoshiro256::new(seed);
+    let mut el = EdgeList::with_capacity(nv, nv, nv * 7);
+    let idx = |x: usize, y: usize| x * s + y;
+    for x in 0..s {
+        for y in 0..s {
+            let v = idx(x, y);
+            if x + 1 < s {
+                el.add(v, idx(x + 1, y));
+                el.add(idx(x + 1, y), v);
+            }
+            if y + 1 < s {
+                el.add(v, idx(x, y + 1));
+                el.add(idx(x, y + 1), v);
+            }
+            if x + 1 < s && y + 1 < s {
+                // one diagonal per cell, random orientation
+                let (a, b) = if rng.gen_bool(0.5) {
+                    (idx(x, y), idx(x + 1, y + 1))
+                } else {
+                    (idx(x + 1, y), idx(x, y + 1))
+                };
+                el.add(a, b);
+                el.add(b, a);
+            }
+        }
+    }
+    el.build()
+}
+
+/// Long thin perforated mesh (aspect ratio 16:1) with circular holes —
+/// hugetrace/hugebubbles stand-in. Enormous diameter relative to size.
+pub fn hugetrace(n: usize, hole_p: f64, seed: u64) -> BipartiteCsr {
+    let w = ((n as f64) / 16.0).sqrt().ceil() as usize;
+    let h = w * 16;
+    let nv = w.max(1) * h.max(1);
+    let mut rng = Xoshiro256::new(seed);
+    // punch holes: a vertex keeps its edges unless inside a hole
+    let mut holed = vec![false; nv];
+    let nholes = ((nv as f64) * hole_p / 9.0) as usize;
+    for _ in 0..nholes {
+        let cx = rng.gen_range(w.max(1));
+        let cy = rng.gen_range(h.max(1));
+        for dx in 0..3usize {
+            for dy in 0..3usize {
+                let (x, y) = (cx + dx, cy + dy);
+                if x < w && y < h {
+                    holed[x * h + y] = true;
+                }
+            }
+        }
+    }
+    let mut el = EdgeList::with_capacity(nv, nv, nv * 5);
+    let idx = |x: usize, y: usize| x * h + y;
+    for x in 0..w {
+        for y in 0..h {
+            let v = idx(x, y);
+            if holed[v] {
+                // keep the vertex isolated (hole interior)
+                continue;
+            }
+            if x + 1 < w && !holed[idx(x + 1, y)] {
+                el.add(v, idx(x + 1, y));
+                el.add(idx(x + 1, y), v);
+            }
+            if y + 1 < h && !holed[idx(x, y + 1)] {
+                el.add(v, idx(x, y + 1));
+                el.add(idx(x, y + 1), v);
+            }
+        }
+    }
+    el.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_road_structure() {
+        let g = grid_road(400, 0.1, 3);
+        assert_eq!(g.nr, 400); // 20x20
+        assert!(g.validate().is_ok());
+        // bounded degree: at most 4 grid neighbors
+        assert!(g.max_col_degree() <= 4);
+    }
+
+    #[test]
+    fn grid_road_deletion_rate() {
+        let g_none = grid_road(900, 0.0, 5);
+        let g_half = grid_road(900, 0.5, 5);
+        assert!(g_half.n_edges() < g_none.n_edges());
+    }
+
+    #[test]
+    fn delaunay_has_diagonals() {
+        let g = delaunay_like(100, 11);
+        assert!(g.validate().is_ok());
+        assert!(g.max_col_degree() <= 8); // 4 grid + up to 4 cell diagonals
+        // more edges than the plain grid with same s
+        let grid = grid_road(100, 0.0, 11);
+        assert!(g.n_edges() > grid.n_edges());
+    }
+
+    #[test]
+    fn hugetrace_is_long() {
+        let g = hugetrace(1024, 0.05, 13);
+        assert!(g.validate().is_ok());
+        assert!(g.nr >= 1024);
+        assert!(g.max_col_degree() <= 4);
+    }
+
+    #[test]
+    fn symmetric_patterns() {
+        // all three generators emit symmetric matrices
+        for g in [grid_road(144, 0.2, 1), delaunay_like(144, 1), hugetrace(256, 0.1, 1)] {
+            for (r, c) in g.edges() {
+                assert!(g.has_edge(c as usize, r as usize), "asymmetric edge ({r},{c})");
+            }
+        }
+    }
+}

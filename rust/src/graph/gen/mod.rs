@@ -1,0 +1,139 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates on 70 matrices from the UFL (SuiteSparse) collection
+//! which is not available offline; each generator here is a seeded,
+//! structure-faithful stand-in for one of the paper's instance *classes*
+//! (DESIGN.md §2 documents the substitution). All generators:
+//!
+//! * produce the bipartite row/column graph of a sparse square matrix
+//!   pattern (the paper's setting),
+//! * are deterministic in `(params, seed)`,
+//! * return a validated [`BipartiteCsr`].
+
+pub mod banded;
+pub mod geometric;
+pub mod mesh;
+pub mod powerlaw;
+pub mod random;
+pub mod rmat;
+
+pub use banded::banded;
+pub use geometric::rgg;
+pub use mesh::{delaunay_like, grid_road, hugetrace};
+pub use powerlaw::{chung_lu, pref_attach, web_graph};
+pub use random::uniform_random;
+pub use rmat::rmat;
+
+use super::csr::BipartiteCsr;
+
+/// A named generator family, so the harness catalog can enumerate them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// road-network-like: sparse planar grid with deletions (roadNet-CA)
+    Road,
+    /// triangulation-like mesh (delaunay_nXX)
+    Delaunay,
+    /// long thin perforated mesh (hugetrace / hugebubbles)
+    HugeTrace,
+    /// random geometric graph (rgg_n_2_24_s0)
+    Rgg,
+    /// Kronecker / RMAT power-law (kron_g500-logn21)
+    Kron,
+    /// Chung–Lu power-law (as-Skitter / soc-LiveJournal-ish)
+    Social,
+    /// preferential attachment, low degree (amazon co-purchase)
+    Amazon,
+    /// locality-biased power-law web graph (wb-edu / wikipedia)
+    Web,
+    /// banded with irregular fill (Hamrle3)
+    Banded,
+    /// uniform random (control)
+    Uniform,
+}
+
+impl Family {
+    pub const ALL: [Family; 10] = [
+        Family::Road,
+        Family::Delaunay,
+        Family::HugeTrace,
+        Family::Rgg,
+        Family::Kron,
+        Family::Social,
+        Family::Amazon,
+        Family::Web,
+        Family::Banded,
+        Family::Uniform,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Road => "road",
+            Family::Delaunay => "delaunay",
+            Family::HugeTrace => "hugetrace",
+            Family::Rgg => "rgg",
+            Family::Kron => "kron",
+            Family::Social => "social",
+            Family::Amazon => "amazon",
+            Family::Web => "web",
+            Family::Banded => "banded",
+            Family::Uniform => "uniform",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Family> {
+        Family::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Generate an instance with roughly `n` vertices per side.
+    pub fn generate(&self, n: usize, seed: u64) -> BipartiteCsr {
+        match self {
+            Family::Road => grid_road(n, 0.12, seed),
+            Family::Delaunay => delaunay_like(n, seed),
+            Family::HugeTrace => hugetrace(n, 0.08, seed),
+            Family::Rgg => rgg(n, 2.2, seed),
+            Family::Kron => rmat(n, 8, (0.57, 0.19, 0.19), seed),
+            Family::Social => chung_lu(n, 8.0, 2.3, seed),
+            Family::Amazon => pref_attach(n, 3, seed),
+            Family::Web => web_graph(n, 6.0, seed),
+            Family::Banded => banded(n, 24, 0.35, seed),
+            Family::Uniform => uniform_random(n, n, 5.0, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_families_generate_valid_graphs() {
+        for fam in Family::ALL {
+            let g = fam.generate(500, 42);
+            assert!(g.validate().is_ok(), "{}: {:?}", fam.name(), g.validate());
+            assert!(g.n_edges() > 0, "{} produced empty graph", fam.name());
+            assert!(g.nr >= 250 && g.nc >= 250, "{} too small: {:?}", fam.name(), g);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        for fam in Family::ALL {
+            assert_eq!(fam.generate(300, 7), fam.generate(300, 7), "{}", fam.name());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = Family::Kron.generate(400, 1);
+        let b = Family::Kron.generate(400, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for fam in Family::ALL {
+            assert_eq!(Family::from_name(fam.name()), Some(fam));
+        }
+        assert_eq!(Family::from_name("nope"), None);
+    }
+}

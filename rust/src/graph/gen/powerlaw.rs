@@ -1,0 +1,155 @@
+//! Power-law generators: Chung–Lu (social networks), preferential
+//! attachment (amazon co-purchase), and a locality-biased web graph
+//! (wb-edu / wikipedia stand-ins). These families dominate the paper's
+//! Hardest20 sets and are where PFP's behaviour degrades most under RCP
+//! permutation.
+
+use crate::graph::builder::EdgeList;
+use crate::graph::csr::BipartiteCsr;
+use crate::util::rng::Xoshiro256;
+
+/// Chung–Lu: expected degree of vertex i ∝ (i+1)^(-1/(gamma-1)); edges are
+/// sampled by picking endpoints proportionally to weight via inverse-CDF on
+/// the (closed-form) cumulative weights.
+pub fn chung_lu(n: usize, avg_deg: f64, gamma: f64, seed: u64) -> BipartiteCsr {
+    assert!(gamma > 2.0, "need finite mean");
+    let mut rng = Xoshiro256::new(seed);
+    let beta = 1.0 / (gamma - 1.0);
+    // weights w_i = (i+1)^-beta, cumulative sums for inverse-CDF sampling
+    let mut cum = Vec::with_capacity(n + 1);
+    cum.push(0.0f64);
+    let mut total = 0.0;
+    for i in 0..n {
+        total += ((i + 1) as f64).powf(-beta);
+        cum.push(total);
+    }
+    let m = (n as f64 * avg_deg / 2.0) as usize;
+    let sample = |rng: &mut Xoshiro256| -> usize {
+        let t = rng.next_f64() * total;
+        // binary search for the containing interval
+        match cum.binary_search_by(|x| x.partial_cmp(&t).unwrap()) {
+            Ok(i) => i.min(n - 1),
+            Err(i) => (i - 1).min(n - 1),
+        }
+    };
+    let mut el = EdgeList::with_capacity(n, n, 2 * m + n);
+    for v in 0..n {
+        if rng.gen_bool(0.3) {
+            el.add(v, v);
+        }
+    }
+    for _ in 0..m {
+        let u = sample(&mut rng);
+        let v = sample(&mut rng);
+        el.add(u, v);
+        el.add(v, u);
+    }
+    el.build()
+}
+
+/// Preferential attachment with `k` out-edges per vertex, implemented with
+/// the edge-endpoint-array trick (sampling a uniform endpoint of an
+/// existing edge is proportional-to-degree). Low-degree, long-tailed —
+/// amazon-0505-like.
+pub fn pref_attach(n: usize, k: usize, seed: u64) -> BipartiteCsr {
+    assert!(k >= 1);
+    let mut rng = Xoshiro256::new(seed);
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * k);
+    let mut el = EdgeList::with_capacity(n, n, n * (k + 1));
+    for v in 0..n {
+        if rng.gen_bool(0.5) {
+            el.add(v, v);
+        }
+        let targets = k.min(v);
+        for _ in 0..targets {
+            let t = if endpoints.is_empty() || rng.gen_bool(0.2) {
+                rng.gen_range(v) as u32 // uniform escape keeps graph connected-ish
+            } else {
+                endpoints[rng.gen_range(endpoints.len())]
+            };
+            el.add(v, t as usize);
+            endpoints.push(v as u32);
+            endpoints.push(t);
+        }
+    }
+    el.build()
+}
+
+/// Web-like: power-law out-degree, and targets biased toward nearby ids
+/// (host locality) with occasional global hops — produces the asymmetric,
+/// rectangular-ish structure of crawl matrices.
+pub fn web_graph(n: usize, avg_deg: f64, seed: u64) -> BipartiteCsr {
+    let mut rng = Xoshiro256::new(seed);
+    let mut el = EdgeList::with_capacity(n, n, (n as f64 * (avg_deg + 1.0)) as usize);
+    for v in 0..n {
+        if rng.gen_bool(0.5) {
+            el.add(v, v);
+        }
+        // out-degree: power-law sample in [0, 4*avg)
+        let cap = (4.0 * avg_deg) as usize + 1;
+        let deg = rng.powerlaw(cap, 2.2);
+        for _ in 0..deg {
+            let t = if rng.gen_bool(0.8) {
+                // local: within a window of ±n/64 (same "host")
+                let w = (n / 64).max(4);
+                let lo = v.saturating_sub(w / 2);
+                let hi = (v + w / 2).min(n - 1);
+                lo + rng.gen_range(hi - lo + 1)
+            } else {
+                rng.gen_range(n)
+            };
+            el.add(v, t);
+        }
+    }
+    el.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chung_lu_valid_and_skewed() {
+        let g = chung_lu(2000, 6.0, 2.3, 9);
+        assert!(g.validate().is_ok());
+        let avg = g.avg_col_degree();
+        assert!(g.max_col_degree() as f64 > 3.0 * avg);
+    }
+
+    #[test]
+    fn chung_lu_avg_degree_ballpark() {
+        let g = chung_lu(4000, 8.0, 2.5, 31);
+        let avg = g.avg_col_degree() - 0.3; // minus expected diagonal
+        // dedup removes some multi-edges; allow a generous band
+        assert!((3.0..9.5).contains(&avg), "avg {avg}");
+    }
+
+    #[test]
+    fn pref_attach_low_degree_tail() {
+        let g = pref_attach(3000, 3, 5);
+        assert!(g.validate().is_ok());
+        let avg = g.avg_col_degree();
+        assert!(avg < 9.0, "amazon-like graphs are sparse, got {avg}");
+        assert!(g.max_col_degree() > 3 * 3, "popular targets accumulate column degree");
+    }
+
+    #[test]
+    fn web_graph_asymmetric() {
+        let g = web_graph(2000, 6.0, 77);
+        assert!(g.validate().is_ok());
+        // web matrices are not symmetric
+        let asym = g
+            .edges()
+            .iter()
+            .filter(|&&(r, c)| r != c && !g.has_edge(c as usize, r as usize))
+            .count();
+        assert!(asym > 0, "expected asymmetric structure");
+    }
+
+    #[test]
+    fn all_deterministic() {
+        assert_eq!(chung_lu(500, 4.0, 2.4, 3), chung_lu(500, 4.0, 2.4, 3));
+        assert_eq!(pref_attach(500, 2, 3), pref_attach(500, 2, 3));
+        assert_eq!(web_graph(500, 4.0, 3), web_graph(500, 4.0, 3));
+    }
+}

@@ -1,0 +1,14 @@
+//! Bipartite graph representation, IO, transformations, and synthetic
+//! workload generation.
+
+pub mod builder;
+pub mod csr;
+pub mod ell;
+pub mod gen;
+pub mod mtx;
+pub mod permute;
+
+pub use builder::{from_edges, EdgeList};
+pub use csr::BipartiteCsr;
+pub use ell::EllGraph;
+pub use permute::random_permute;

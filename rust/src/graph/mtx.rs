@@ -1,0 +1,235 @@
+//! MatrixMarket coordinate-format reader/writer.
+//!
+//! The paper evaluates on UFL (SuiteSparse) matrices distributed as `.mtx`
+//! files. The collection is not available offline, so the repo ships
+//! generators instead — but the IO layer is complete so a user *with* the
+//! collection can run the same harness on the real instances
+//! (`bimatch run --mtx path/to/matrix.mtx`).
+//!
+//! Supported: `matrix coordinate {pattern|real|integer|complex}
+//! {general|symmetric|skew-symmetric|hermitian}`. Values are ignored — only
+//! the nonzero *structure* matters for matching. Symmetric variants emit
+//! the mirrored entry (the bipartite row/column classes are distinct, so
+//! A[j][i] is a distinct edge).
+
+use super::builder::EdgeList;
+use super::csr::BipartiteCsr;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum MtxError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("invalid MatrixMarket header: {0}")]
+    Header(String),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric, // covers skew & hermitian for pattern purposes
+}
+
+/// Read a bipartite graph from a MatrixMarket file: rows → row vertices,
+/// columns → column vertices, nonzeros → edges.
+pub fn read_mtx(path: &Path) -> Result<BipartiteCsr, MtxError> {
+    let f = std::fs::File::open(path)?;
+    read_mtx_from(BufReader::new(f))
+}
+
+/// Reader-generic implementation (unit-testable without touching disk).
+pub fn read_mtx_from<R: BufRead>(reader: R) -> Result<BipartiteCsr, MtxError> {
+    let mut lines = reader.lines().enumerate();
+
+    // header line
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| MtxError::Header("empty file".into()))?;
+    let header = header?;
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
+    if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        return Err(MtxError::Header(header));
+    }
+    if h[2] != "coordinate" {
+        return Err(MtxError::Header(format!("only coordinate format supported, got {}", h[2])));
+    }
+    let field = h[3].as_str();
+    if !matches!(field, "pattern" | "real" | "integer" | "complex") {
+        return Err(MtxError::Header(format!("unsupported field type {field}")));
+    }
+    let symmetry = match h.get(4).map(|s| s.as_str()).unwrap_or("general") {
+        "general" => Symmetry::General,
+        "symmetric" | "skew-symmetric" | "hermitian" => Symmetry::Symmetric,
+        other => return Err(MtxError::Header(format!("unsupported symmetry {other}"))),
+    };
+
+    // size line (skipping comments)
+    let mut size_line = None;
+    for (ln, line) in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some((ln, t.to_string()));
+        break;
+    }
+    let (size_ln, size_line) =
+        size_line.ok_or_else(|| MtxError::Header("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| MtxError::Parse { line: size_ln + 1, msg: e.to_string() })?;
+    if dims.len() != 3 {
+        return Err(MtxError::Parse { line: size_ln + 1, msg: "size line needs 3 fields".into() });
+    }
+    let (nr, nc, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut el = EdgeList::with_capacity(nr, nc, nnz);
+    let mut seen = 0usize;
+    for (ln, line) in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let parse = |tok: Option<&str>, ln: usize| -> Result<usize, MtxError> {
+            tok.ok_or(MtxError::Parse { line: ln + 1, msg: "missing index".into() })?
+                .parse::<usize>()
+                .map_err(|e| MtxError::Parse { line: ln + 1, msg: e.to_string() })
+        };
+        let i = parse(it.next(), ln)?;
+        let j = parse(it.next(), ln)?;
+        if i == 0 || j == 0 || i > nr || j > nc {
+            return Err(MtxError::Parse {
+                line: ln + 1,
+                msg: format!("index ({i},{j}) out of 1..={nr} x 1..={nc}"),
+            });
+        }
+        el.add(i - 1, j - 1);
+        if symmetry == Symmetry::Symmetric && i != j {
+            // mirrored structural entry; valid only if square-indexable
+            if j <= nr && i <= nc {
+                el.add(j - 1, i - 1);
+            }
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(MtxError::Parse {
+            line: 0,
+            msg: format!("expected {nnz} entries, found {seen}"),
+        });
+    }
+    Ok(el.build())
+}
+
+/// Write a graph as `pattern general` coordinate MatrixMarket.
+pub fn write_mtx(g: &BipartiteCsr, path: &Path) -> Result<(), MtxError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate pattern general")?;
+    writeln!(f, "% written by bimatch")?;
+    writeln!(f, "{} {} {}", g.nr, g.nc, g.n_edges())?;
+    for c in 0..g.nc {
+        for &r in g.col_neighbors(c) {
+            writeln!(f, "{} {}", r + 1, c + 1)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(s: &str) -> Result<BipartiteCsr, MtxError> {
+        read_mtx_from(Cursor::new(s.as_bytes()))
+    }
+
+    #[test]
+    fn pattern_general() {
+        let g = parse(
+            "%%MatrixMarket matrix coordinate pattern general\n\
+             % a comment\n\
+             3 2 3\n\
+             1 1\n\
+             3 2\n\
+             2 1\n",
+        )
+        .unwrap();
+        assert_eq!((g.nr, g.nc, g.n_edges()), (3, 2, 3));
+        assert!(g.has_edge(0, 0) && g.has_edge(1, 0) && g.has_edge(2, 1));
+    }
+
+    #[test]
+    fn real_values_ignored() {
+        let g = parse(
+            "%%MatrixMarket matrix coordinate real general\n\
+             2 2 2\n\
+             1 1 3.25\n\
+             2 2 -1e-3\n",
+        )
+        .unwrap();
+        assert_eq!(g.n_edges(), 2);
+    }
+
+    #[test]
+    fn symmetric_mirrors() {
+        let g = parse(
+            "%%MatrixMarket matrix coordinate pattern symmetric\n\
+             3 3 2\n\
+             2 1\n\
+             3 3\n",
+        )
+        .unwrap();
+        // (2,1) mirrored to (1,2); diagonal (3,3) not duplicated
+        assert_eq!(g.n_edges(), 3);
+        assert!(g.has_edge(1, 0) && g.has_edge(0, 1) && g.has_edge(2, 2));
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        assert!(matches!(parse("garbage\n1 1 0\n"), Err(MtxError::Header(_))));
+        assert!(matches!(
+            parse("%%MatrixMarket matrix array real general\n1 1 1\n1.0\n"),
+            Err(MtxError::Header(_))
+        ));
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let r = parse(
+            "%%MatrixMarket matrix coordinate pattern general\n\
+             2 2 1\n\
+             3 1\n",
+        );
+        assert!(matches!(r, Err(MtxError::Parse { .. })));
+    }
+
+    #[test]
+    fn nnz_mismatch_rejected() {
+        let r = parse(
+            "%%MatrixMarket matrix coordinate pattern general\n\
+             2 2 2\n\
+             1 1\n",
+        );
+        assert!(matches!(r, Err(MtxError::Parse { .. })));
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let g = crate::graph::builder::from_edges(4, 3, &[(0, 0), (1, 2), (3, 1), (2, 2)]);
+        let dir = std::env::temp_dir().join("bimatch_mtx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.mtx");
+        write_mtx(&g, &path).unwrap();
+        let g2 = read_mtx(&path).unwrap();
+        assert_eq!(g, g2);
+    }
+}

@@ -1,0 +1,96 @@
+//! Random row/column permutation — the paper's RCP instance sets.
+//!
+//! "We also permuted the matrices randomly by rows and columns and included
+//! them as a second set (labeled RCP). These permutations usually render
+//! the problems harder for the augmenting-path-based algorithms." (§4)
+//! Permutation preserves the matching *cardinality* exactly (it is an
+//! isomorphism of the bipartite graph), which the tests assert.
+
+use super::builder::EdgeList;
+use super::csr::BipartiteCsr;
+use crate::util::rng::Xoshiro256;
+
+/// Apply explicit permutations: new_row = rperm[old_row],
+/// new_col = cperm[old_col].
+pub fn permute(g: &BipartiteCsr, rperm: &[u32], cperm: &[u32]) -> BipartiteCsr {
+    assert_eq!(rperm.len(), g.nr);
+    assert_eq!(cperm.len(), g.nc);
+    debug_assert!(is_permutation(rperm) && is_permutation(cperm));
+    let mut el = EdgeList::with_capacity(g.nr, g.nc, g.n_edges());
+    for c in 0..g.nc {
+        for &r in g.col_neighbors(c) {
+            el.add(rperm[r as usize] as usize, cperm[c] as usize);
+        }
+    }
+    el.build()
+}
+
+/// Seeded random row+column permutation (the RCP transform).
+pub fn random_permute(g: &BipartiteCsr, seed: u64) -> BipartiteCsr {
+    let mut rng = Xoshiro256::new(seed);
+    let rperm = rng.permutation(g.nr);
+    let cperm = rng.permutation(g.nc);
+    permute(g, &rperm, &cperm)
+}
+
+fn is_permutation(p: &[u32]) -> bool {
+    let mut seen = vec![false; p.len()];
+    for &v in p {
+        if v as usize >= p.len() || seen[v as usize] {
+            return false;
+        }
+        seen[v as usize] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn identity_permutation_is_noop() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2), (0, 2)]);
+        let id_r: Vec<u32> = (0..3).collect();
+        let id_c: Vec<u32> = (0..3).collect();
+        assert_eq!(permute(&g, &id_r, &id_c), g);
+    }
+
+    #[test]
+    fn explicit_permutation_moves_edges() {
+        let g = from_edges(2, 2, &[(0, 0), (1, 1)]);
+        let p = permute(&g, &[1, 0], &[0, 1]);
+        assert!(p.has_edge(1, 0) && p.has_edge(0, 1));
+        assert!(!p.has_edge(0, 0));
+    }
+
+    #[test]
+    fn random_permute_preserves_counts_and_degrees_multiset() {
+        forall(Config::cases(25), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            let g = from_edges(nr, nc, &edges);
+            let p = random_permute(&g, rng.next_u64());
+            if p.n_edges() != g.n_edges() {
+                return Err("edge count changed".into());
+            }
+            p.validate().map_err(|e| format!("invalid after permute: {e}"))?;
+            let mut dg: Vec<usize> = (0..nc).map(|c| g.col_degree(c)).collect();
+            let mut dp: Vec<usize> = (0..nc).map(|c| p.col_degree(c)).collect();
+            dg.sort_unstable();
+            dp.sort_unstable();
+            if dg != dp {
+                return Err("column degree multiset changed".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let g = from_edges(5, 5, &[(0, 1), (2, 3), (4, 0), (1, 1), (3, 2)]);
+        assert_eq!(random_permute(&g, 99), random_permute(&g, 99));
+        assert_ne!(random_permute(&g, 99), random_permute(&g, 100));
+    }
+}

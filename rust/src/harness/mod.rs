@@ -1,0 +1,11 @@
+//! Evaluation harness: instance catalog ([`catalog`]), measurement runner
+//! with on-disk caching ([`eval`]), and the paper's aggregations
+//! ([`report`]). Each `rust/benches/bench_*.rs` binary regenerates one
+//! table or figure from these pieces.
+
+pub mod catalog;
+pub mod eval;
+pub mod report;
+
+pub use catalog::{Instance, Scale};
+pub use eval::{Evaluator, Record, Subsets};

@@ -1,0 +1,213 @@
+//! Table/figure assembly from evaluation records: the exact aggregations
+//! of the paper's §4 (geometric means over instance sets, speedup
+//! profiles, performance profiles, overall speedup bars).
+
+use super::eval::Record;
+use crate::util::stats::{geomean, performance_profile, speedup_profile, ProfilePoint};
+use std::collections::HashMap;
+
+/// Geomean of a metric over the records of one algorithm restricted to an
+/// instance set.
+pub fn geomean_over(
+    records: &[Record],
+    algo: &str,
+    instances: &[String],
+    metric: impl Fn(&Record) -> f64,
+) -> f64 {
+    let set: std::collections::HashSet<&String> = instances.iter().collect();
+    let vals: Vec<f64> = records
+        .iter()
+        .filter(|r| r.algo == algo && set.contains(&r.instance))
+        .map(metric)
+        .collect();
+    geomean(&vals)
+}
+
+/// speedups[i] = t_ref(i) / t_algo(i) for instances where both exist.
+pub fn speedups(
+    records: &[Record],
+    algo: &str,
+    reference_best_of: &[&str],
+    instances: &[String],
+) -> Vec<f64> {
+    let by_key: HashMap<(&str, &str), f64> = records
+        .iter()
+        .map(|r| ((r.instance.as_str(), r.algo.as_str()), r.wall_secs))
+        .collect();
+    instances
+        .iter()
+        .filter_map(|inst| {
+            let t_ref = reference_best_of
+                .iter()
+                .filter_map(|a| by_key.get(&(inst.as_str(), *a)))
+                .cloned()
+                .fold(f64::INFINITY, f64::min);
+            let t = by_key.get(&(inst.as_str(), algo))?;
+            if t_ref.is_finite() {
+                Some(t_ref / t.max(1e-9))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Fig. 3: log2-scaled speedup profile of each algorithm vs the best
+/// sequential reference.
+pub fn fig3_profiles(
+    records: &[Record],
+    algos: &[&str],
+    seq_refs: &[&str],
+    instances: &[String],
+    xs: &[f64],
+) -> Vec<(String, Vec<ProfilePoint>)> {
+    algos
+        .iter()
+        .map(|a| {
+            let sp = speedups(records, a, seq_refs, instances);
+            (a.to_string(), speedup_profile(&sp, xs))
+        })
+        .collect()
+}
+
+/// Fig. 4: performance profiles of the given algorithms.
+pub fn fig4_profiles(
+    records: &[Record],
+    algos: &[&str],
+    instances: &[String],
+    xs: &[f64],
+) -> Vec<(String, Vec<ProfilePoint>)> {
+    let by_key: HashMap<(&str, &str), f64> = records
+        .iter()
+        .map(|r| ((r.instance.as_str(), r.algo.as_str()), r.wall_secs))
+        .collect();
+    // keep only instances where every algorithm has a record
+    let usable: Vec<&String> = instances
+        .iter()
+        .filter(|i| algos.iter().all(|a| by_key.contains_key(&(i.as_str(), *a))))
+        .collect();
+    let times: Vec<Vec<f64>> = algos
+        .iter()
+        .map(|a| {
+            usable
+                .iter()
+                .map(|i| by_key[&(i.as_str(), *a)])
+                .collect()
+        })
+        .collect();
+    let profs = performance_profile(&times, xs);
+    algos
+        .iter()
+        .map(|a| a.to_string())
+        .zip(profs)
+        .collect()
+}
+
+/// Fig. 5: overall geomean speedup of `algo` w.r.t. each reference.
+pub fn fig5_overall(
+    records: &[Record],
+    algo: &str,
+    refs: &[&str],
+    instances: &[String],
+) -> Vec<(String, f64)> {
+    refs.iter()
+        .map(|r| {
+            let sp = speedups(records, algo, &[*r], instances);
+            (r.to_string(), geomean(&sp))
+        })
+        .collect()
+}
+
+/// Fraction of instances where `algo` beats `other` (paper §4 "faster on
+/// 86% of the original graphs").
+pub fn win_rate(records: &[Record], algo: &str, other: &str, instances: &[String]) -> f64 {
+    let by_key: HashMap<(&str, &str), f64> = records
+        .iter()
+        .map(|r| ((r.instance.as_str(), r.algo.as_str()), r.wall_secs))
+        .collect();
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for inst in instances {
+        if let (Some(a), Some(b)) = (
+            by_key.get(&(inst.as_str(), algo)),
+            by_key.get(&(inst.as_str(), other)),
+        ) {
+            total += 1;
+            if a < b {
+                wins += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        wins as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(instance: &str, algo: &str, secs: f64) -> Record {
+        Record {
+            instance: instance.into(),
+            algo: algo.into(),
+            wall_secs: secs,
+            device_ms: 0.0,
+            device_parallel_ms: 0.0,
+            cardinality: 1,
+            phases: 1,
+        }
+    }
+
+    fn sample() -> (Vec<Record>, Vec<String>) {
+        let records = vec![
+            rec("a", "gpu", 1.0),
+            rec("a", "hk", 4.0),
+            rec("a", "pfp", 2.0),
+            rec("b", "gpu", 2.0),
+            rec("b", "hk", 2.0),
+            rec("b", "pfp", 8.0),
+        ];
+        (records, vec!["a".into(), "b".into()])
+    }
+
+    #[test]
+    fn speedups_vs_best_seq() {
+        let (records, insts) = sample();
+        let sp = speedups(&records, "gpu", &["hk", "pfp"], &insts);
+        // a: best seq = 2.0 → 2x; b: best seq = 2.0 → 1x
+        assert_eq!(sp, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn geomean_over_set() {
+        let (records, insts) = sample();
+        let g = geomean_over(&records, "gpu", &insts, |r| r.wall_secs);
+        assert!((g - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig5_and_winrate() {
+        let (records, insts) = sample();
+        let overall = fig5_overall(&records, "gpu", &["hk", "pfp"], &insts);
+        assert_eq!(overall.len(), 2);
+        assert!(overall.iter().all(|(_, v)| *v >= 1.0));
+        assert_eq!(win_rate(&records, "gpu", "pfp", &insts), 1.0);
+        assert_eq!(win_rate(&records, "gpu", "hk", &insts), 0.5);
+    }
+
+    #[test]
+    fn fig34_shapes() {
+        let (records, insts) = sample();
+        let xs = vec![-1.0, 0.0, 1.0, 2.0];
+        let f3 = fig3_profiles(&records, &["gpu", "hk"], &["hk", "pfp"], &insts, &xs);
+        assert_eq!(f3.len(), 2);
+        assert_eq!(f3[0].1.len(), xs.len());
+        let f4 = fig4_profiles(&records, &["gpu", "hk", "pfp"], &insts, &[1.0, 2.0, 4.0]);
+        assert_eq!(f4.len(), 3);
+        // gpu is within 1x of best on instance a, within 1x on b (tie 2.0)
+        assert!((f4[0].1[0].y - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,33 @@
+//! # bimatch
+//!
+//! A production-quality reproduction of *"GPU accelerated maximum
+//! cardinality matching algorithms for bipartite graphs"* (Deveci, Kaya,
+//! Uçar, Çatalyürek — 2013) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — graph substrate, the paper's GPU algorithms
+//!   (APFB/APsB × GPUBFS/GPUBFS-WR × CT/MT) on a deterministic device
+//!   simulator, sequential (HK, HKDW, PFP, DFS, BFS, push–relabel) and
+//!   multicore (P-HK, P-PFP, P-DBFS) baselines, an evaluation harness that
+//!   regenerates every table/figure of the paper, and a matching-service
+//!   coordinator.
+//! * **L2/L1 (python/, build-time only)** — the same level-expansion
+//!   kernel as a JAX program with a Pallas kernel inside, AOT-lowered to
+//!   HLO text.
+//! * **Runtime** — `runtime::Engine` loads the HLO artifacts through the
+//!   PJRT CPU client (`xla` crate) so the "GPU" path runs with Python
+//!   nowhere on the request path.
+
+pub mod apps;
+pub mod cli;
+pub mod coordinator;
+pub mod gpu;
+pub mod graph;
+pub mod harness;
+pub mod matching;
+pub mod multicore;
+pub mod runtime;
+pub mod seq;
+pub mod util;
+
+pub use matching::algo::{MatchingAlgorithm, RunResult};
+pub use matching::Matching;

@@ -1,0 +1,6 @@
+//! `bimatch` binary entrypoint; all logic lives in [`bimatch::cli`].
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(bimatch::cli::main_with_args(args));
+}

@@ -1,0 +1,97 @@
+//! The algorithm interface shared by sequential, multicore, GPU-simulated,
+//! and XLA-backed matchers, plus the run-record types the evaluation
+//! harness consumes.
+
+use super::Matching;
+use crate::graph::csr::BipartiteCsr;
+
+/// Counters every algorithm reports (zeros where not applicable). These
+/// regenerate the paper's Fig. 2 (kernel launches per phase) and feed the
+/// §Perf analysis.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunStats {
+    /// outer iterations (the `while augmenting_path_found` loop of Alg. 1,
+    /// or phases of HK/HKDW)
+    pub phases: u64,
+    /// single-level BFS sweeps / kernel launches (y-axis of Fig. 2)
+    pub bfs_kernel_launches: u64,
+    /// BFS kernel launches per phase (one entry per outer iteration —
+    /// the exact series plotted in Fig. 2)
+    pub launches_per_phase: Vec<u32>,
+    /// edges scanned (work proxy, robust to the 1-CPU testbed)
+    pub edges_scanned: u64,
+    /// augmenting paths successfully realized
+    pub augmentations: u64,
+    /// rows reset by FIXMATCHING (GPU algorithms only)
+    pub fixes: u64,
+    /// abstract device cycles from the GPU cost model (0 for CPU algos);
+    /// serial single-SM view — see `gpu::device` for the model
+    pub device_cycles: u64,
+    /// parallel-model device cycles (warp work / concurrent warp slots)
+    pub device_parallel_cycles: u64,
+    /// sequential-fallback augmentations (safety net; expected 0)
+    pub fallbacks: u64,
+}
+
+impl RunStats {
+    pub fn record_phase(&mut self, launches_this_phase: u32) {
+        self.phases += 1;
+        self.bfs_kernel_launches += launches_this_phase as u64;
+        self.launches_per_phase.push(launches_this_phase);
+    }
+}
+
+/// Result of one algorithm execution (timing is measured by the caller so
+/// the policy — warmups, repetitions — lives in one place, the harness).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub matching: Matching,
+    pub stats: RunStats,
+}
+
+impl RunResult {
+    pub fn new(matching: Matching) -> Self {
+        Self { matching, stats: RunStats::default() }
+    }
+
+    pub fn with_stats(matching: Matching, stats: RunStats) -> Self {
+        Self { matching, stats }
+    }
+}
+
+/// A maximum-cardinality matching algorithm. `run` must return a matching
+/// that is *maximum* (certified by the test suite), starting from the given
+/// initial matching (the common cheap-matching initialization of §4).
+pub trait MatchingAlgorithm: Send + Sync {
+    /// Stable identifier used by the CLI, the harness, and result files.
+    fn name(&self) -> String;
+
+    /// Compute a maximum matching, extending `init`.
+    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_phase_accumulates() {
+        let mut s = RunStats::default();
+        s.record_phase(3);
+        s.record_phase(5);
+        assert_eq!(s.phases, 2);
+        assert_eq!(s.bfs_kernel_launches, 8);
+        assert_eq!(s.launches_per_phase, vec![3, 5]);
+    }
+
+    #[test]
+    fn run_result_constructors() {
+        let m = Matching::empty(2, 2);
+        let r = RunResult::new(m.clone());
+        assert_eq!(r.stats, RunStats::default());
+        let mut s = RunStats::default();
+        s.augmentations = 4;
+        let r2 = RunResult::with_stats(m, s.clone());
+        assert_eq!(r2.stats, s);
+    }
+}

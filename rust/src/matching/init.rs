@@ -1,0 +1,242 @@
+//! Cheap-matching initialization heuristics.
+//!
+//! The paper (§4): "A standard heuristic (called the cheap matching, see
+//! [Duff, Kaya & Uçar 2011]) is used to initialize all tested algorithms.
+//! We compare the running time of the matching algorithms after this
+//! common initialization." Three heuristics are provided; `Cheap` (simple
+//! greedy with fairness counter) is the default used by the harness, and
+//! Karp–Sipser is available for ablations.
+
+use super::{Matching, UNMATCHED};
+use crate::graph::csr::BipartiteCsr;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InitHeuristic {
+    /// No initialization (empty matching).
+    None,
+    /// The "cheap" greedy of Duff et al.: for each column, match to the
+    /// first free neighbor, scanning each row list at most once overall
+    /// (fairness pointer).
+    Cheap,
+    /// Karp–Sipser: repeatedly match degree-1 vertices first (those edges
+    /// are always safe), then fall back to greedy on the remainder.
+    KarpSipser,
+}
+
+impl InitHeuristic {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitHeuristic::None => "none",
+            InitHeuristic::Cheap => "cheap",
+            InitHeuristic::KarpSipser => "karp-sipser",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(Self::None),
+            "cheap" => Some(Self::Cheap),
+            "karp-sipser" | "ks" => Some(Self::KarpSipser),
+            _ => None,
+        }
+    }
+
+    pub fn run(&self, g: &BipartiteCsr) -> Matching {
+        match self {
+            InitHeuristic::None => Matching::empty(g.nr, g.nc),
+            InitHeuristic::Cheap => cheap_matching(g),
+            InitHeuristic::KarpSipser => karp_sipser(g),
+        }
+    }
+}
+
+/// Simple greedy: first free neighbor per column.
+pub fn cheap_matching(g: &BipartiteCsr) -> Matching {
+    let mut m = Matching::empty(g.nr, g.nc);
+    for c in 0..g.nc {
+        for &r in g.col_neighbors(c) {
+            if m.rmatch[r as usize] == UNMATCHED {
+                m.join(r as usize, c);
+                break;
+            }
+        }
+    }
+    m
+}
+
+/// Karp–Sipser (phase 1 exact for degree-1 reductions, greedy phase 2).
+pub fn karp_sipser(g: &BipartiteCsr) -> Matching {
+    let mut m = Matching::empty(g.nr, g.nc);
+    // dynamic degrees count only edges to free vertices
+    let mut cdeg: Vec<u32> = (0..g.nc).map(|c| g.col_degree(c) as u32).collect();
+    let mut rdeg: Vec<u32> = (0..g.nr).map(|r| g.row_degree(r) as u32).collect();
+    // queue of degree-1 vertices: (is_col, index)
+    let mut q: std::collections::VecDeque<(bool, u32)> = Default::default();
+    for c in 0..g.nc {
+        if cdeg[c] == 1 {
+            q.push_back((true, c as u32));
+        }
+    }
+    for r in 0..g.nr {
+        if rdeg[r] == 1 {
+            q.push_back((false, r as u32));
+        }
+    }
+
+    let match_pair = |r: usize,
+                          c: usize,
+                          m: &mut Matching,
+                          cdeg: &mut [u32],
+                          rdeg: &mut [u32],
+                          q: &mut std::collections::VecDeque<(bool, u32)>| {
+        m.join(r, c);
+        // removing r and c decrements free-degree of their free neighbors
+        for &c2 in g.row_neighbors(r) {
+            let c2 = c2 as usize;
+            if m.cmatch[c2] == UNMATCHED && c2 != c {
+                cdeg[c2] = cdeg[c2].saturating_sub(1);
+                if cdeg[c2] == 1 {
+                    q.push_back((true, c2 as u32));
+                }
+            }
+        }
+        for &r2 in g.col_neighbors(c) {
+            let r2 = r2 as usize;
+            if m.rmatch[r2] == UNMATCHED && r2 != r {
+                rdeg[r2] = rdeg[r2].saturating_sub(1);
+                if rdeg[r2] == 1 {
+                    q.push_back((false, r2 as u32));
+                }
+            }
+        }
+    };
+
+    // phase 1: peel degree-1 vertices
+    while let Some((is_col, v)) = q.pop_front() {
+        let v = v as usize;
+        if is_col {
+            if m.cmatch[v] != UNMATCHED || cdeg[v] == 0 {
+                continue;
+            }
+            // find its unique free neighbor
+            if let Some(&r) = g
+                .col_neighbors(v)
+                .iter()
+                .find(|&&r| m.rmatch[r as usize] == UNMATCHED)
+            {
+                match_pair(r as usize, v, &mut m, &mut cdeg, &mut rdeg, &mut q);
+            }
+        } else {
+            if m.rmatch[v] != UNMATCHED || rdeg[v] == 0 {
+                continue;
+            }
+            if let Some(&c) = g
+                .row_neighbors(v)
+                .iter()
+                .find(|&&c| m.cmatch[c as usize] == UNMATCHED)
+            {
+                match_pair(v, c as usize, &mut m, &mut cdeg, &mut rdeg, &mut q);
+            }
+        }
+    }
+
+    // phase 2: greedy over the remainder
+    for c in 0..g.nc {
+        if m.cmatch[c] != UNMATCHED {
+            continue;
+        }
+        if let Some(&r) = g
+            .col_neighbors(c)
+            .iter()
+            .find(|&&r| m.rmatch[r as usize] == UNMATCHED)
+        {
+            match_pair(r as usize, c, &mut m, &mut cdeg, &mut rdeg, &mut q);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::matching::reference_max_cardinality;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn cheap_on_small() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 2)]);
+        let m = cheap_matching(&g);
+        assert!(m.validate(&g).is_ok());
+        assert_eq!(m.cardinality(), 3); // greedy finds 0-0, 1-1, 2-2
+    }
+
+    #[test]
+    fn karp_sipser_degree1_optimal_on_paths() {
+        // path: c0-r0-c1-r1-c2-r2 : KS must find the perfect matching
+        let g = from_edges(3, 3, &[(0, 0), (0, 1), (1, 1), (1, 2), (2, 2)]);
+        let m = karp_sipser(&g);
+        assert!(m.validate(&g).is_ok());
+        assert_eq!(m.cardinality(), 3);
+    }
+
+    #[test]
+    fn heuristics_give_valid_partial_matchings() {
+        forall(Config::cases(30), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            let g = from_edges(nr, nc, &edges);
+            let opt = reference_max_cardinality(&g);
+            for h in [InitHeuristic::None, InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
+                let m = h.run(&g);
+                m.validate(&g).map_err(|e| format!("{}: {e}", h.name()))?;
+                if m.cardinality() > opt {
+                    return Err(format!("{} exceeded optimum", h.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn greedy_is_maximal() {
+        // a greedy matching must be maximal: no edge with both ends free
+        forall(Config::cases(30), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            let g = from_edges(nr, nc, &edges);
+            for h in [InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
+                let m = h.run(&g);
+                for &(r, c) in &edges {
+                    if m.rmatch[r as usize] == UNMATCHED && m.cmatch[c as usize] == UNMATCHED {
+                        return Err(format!(
+                            "{}: edge ({r},{c}) has both endpoints free",
+                            h.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn karp_sipser_at_least_half_of_optimum() {
+        // any maximal matching is >= opt/2
+        forall(Config::cases(20), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            let opt = reference_max_cardinality(&g);
+            let m = karp_sipser(&g);
+            if 2 * m.cardinality() < opt {
+                return Err(format!("KS {} < opt/2 ({opt})", m.cardinality()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for h in [InitHeuristic::None, InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
+            assert_eq!(InitHeuristic::from_name(h.name()), Some(h));
+        }
+    }
+}

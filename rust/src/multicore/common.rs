@@ -1,0 +1,126 @@
+//! Shared atomic state for the multicore matchers (Azad et al. [1] use
+//! OpenMP + atomics; here: `std::sync::atomic` + the scoped pool).
+
+use crate::matching::{Matching, UNMATCHED};
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+
+/// Matching state accessed concurrently. Rows are *claimed* by CAS on
+/// `rmatch` (free → candidate) exactly as the multicore algorithms of the
+/// paper do, so successful augmentations are vertex-disjoint by
+/// construction.
+pub struct AtomicMatching {
+    pub rmatch: Vec<AtomicI32>,
+    pub cmatch: Vec<AtomicI32>,
+}
+
+impl AtomicMatching {
+    pub fn from(m: &Matching) -> Self {
+        Self {
+            rmatch: m.rmatch.iter().map(|&v| AtomicI32::new(v)).collect(),
+            cmatch: m.cmatch.iter().map(|&v| AtomicI32::new(v)).collect(),
+        }
+    }
+
+    pub fn into_matching(self) -> Matching {
+        Matching {
+            rmatch: self.rmatch.into_iter().map(|a| a.into_inner()).collect(),
+            cmatch: self.cmatch.into_iter().map(|a| a.into_inner()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn rmatch_load(&self, r: usize) -> i32 {
+        self.rmatch[r].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn cmatch_load(&self, c: usize) -> i32 {
+        self.cmatch[c].load(Ordering::Acquire)
+    }
+
+    /// Try to claim free row `r` for column `c`; true on success.
+    #[inline]
+    pub fn try_claim_row(&self, r: usize, c: usize) -> bool {
+        self.rmatch[r]
+            .compare_exchange(UNMATCHED, c as i32, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Unconditional writes used while flipping an augmenting path whose
+    /// vertices the caller exclusively owns.
+    #[inline]
+    pub fn set_pair(&self, r: usize, c: usize) {
+        self.rmatch[r].store(c as i32, Ordering::Release);
+        self.cmatch[c].store(r as i32, Ordering::Release);
+    }
+}
+
+/// Per-vertex claim stamps: CAS from a stale stamp to the current one
+/// claims the vertex for exactly one search in this phase.
+pub struct Stamps {
+    v: Vec<AtomicU32>,
+}
+
+impl Stamps {
+    pub fn new(n: usize) -> Self {
+        Self { v: (0..n).map(|_| AtomicU32::new(0)).collect() }
+    }
+
+    /// Claim vertex `i` under `stamp`; true if this caller won.
+    #[inline]
+    pub fn claim(&self, i: usize, stamp: u32) -> bool {
+        let cur = self.v[i].load(Ordering::Relaxed);
+        if cur >= stamp {
+            return false;
+        }
+        self.v[i]
+            .compare_exchange(cur, stamp, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    #[inline]
+    pub fn is_claimed(&self, i: usize, stamp: u32) -> bool {
+        self.v[i].load(Ordering::Relaxed) >= stamp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::parallel_for;
+
+    #[test]
+    fn atomic_matching_roundtrip() {
+        let mut m = Matching::empty(3, 3);
+        m.join(1, 2);
+        let am = AtomicMatching::from(&m);
+        assert_eq!(am.rmatch_load(1), 2);
+        assert_eq!(am.cmatch_load(2), 1);
+        let back = am.into_matching();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn claim_row_exactly_once() {
+        let m = Matching::empty(1, 8);
+        let am = AtomicMatching::from(&m);
+        let winners = std::sync::atomic::AtomicUsize::new(0);
+        parallel_for(8, 8, |c| {
+            if am.try_claim_row(0, c) {
+                winners.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(winners.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stamps_claim_once_per_stamp() {
+        let s = Stamps::new(4);
+        assert!(s.claim(2, 1));
+        assert!(!s.claim(2, 1));
+        assert!(s.is_claimed(2, 1));
+        // new stamp reopens the vertex
+        assert!(s.claim(2, 2));
+        assert!(!s.is_claimed(3, 1));
+    }
+}

@@ -1,0 +1,17 @@
+//! Multicore matching baselines (Azad et al., IPDPS 2012 — the paper's
+//! P-HK, P-PFP, and P-DBFS comparators), implemented with `std::thread`
+//! scoped pools and atomics.
+//!
+//! NOTE: the evaluation container exposes a single CPU, so wall-clock
+//! *speedups* of these codes are flat here; the algorithms are still the
+//! real parallel formulations (claim-based disjoint searches, CAS row
+//! acquisition) and their work counters feed the harness.
+
+pub mod common;
+pub mod pdbfs;
+pub mod phk;
+pub mod ppfp;
+
+pub use pdbfs::PDbfs;
+pub use phk::PHk;
+pub use ppfp::PPfp;

@@ -1,0 +1,192 @@
+//! P-PFP — multicore Pothen–Fan with fairness (Azad et al. [1]): threads
+//! grab unmatched columns and run DFS+lookahead searches concurrently,
+//! claiming rows with CAS so realized augmenting paths are vertex-disjoint.
+//! Rounds alternate scan direction (fairness); a sequential PFP tail
+//! certifies termination after a zero-augmentation round (claim starvation
+//! cannot hide remaining augmenting paths from the tail).
+//!
+//! In the paper this baseline is more robust to RCP permutation than
+//! P-DBFS but loses to it overall (Fig. 3/4).
+
+use super::common::{AtomicMatching, Stamps};
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::{Matching, UNMATCHED};
+use crate::util::pool::{default_threads, fork_join};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+pub struct PPfp {
+    pub nthreads: usize,
+}
+
+impl Default for PPfp {
+    fn default() -> Self {
+        Self { nthreads: default_threads() }
+    }
+}
+
+impl MatchingAlgorithm for PPfp {
+    fn name(&self) -> String {
+        format!("p-pfp[{}]", self.nthreads)
+    }
+
+    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+        let mut stats = RunStats::default();
+        let am = AtomicMatching::from(&init);
+        let row_claim = Stamps::new(g.nr);
+        let mut stamp = 0u32;
+        let mut forward = true;
+        let mut total_aug = 0u64;
+
+        loop {
+            stamp += 1;
+            let work = AtomicUsize::new(0);
+            let aug = AtomicU64::new(0);
+            let scanned_total = AtomicU64::new(0);
+            let fwd = forward;
+            fork_join(self.nthreads, |_tid| {
+                let mut col_stack: Vec<u32> = Vec::new();
+                let mut row_stack: Vec<u32> = Vec::new();
+                let mut ptr_stack: Vec<u32> = Vec::new();
+                let mut scanned = 0u64;
+                loop {
+                    let c0 = work.fetch_add(1, Ordering::Relaxed);
+                    if c0 >= g.nc {
+                        break;
+                    }
+                    if am.cmatch_load(c0) != UNMATCHED || g.col_degree(c0) == 0 {
+                        continue;
+                    }
+                    if dfs_la_claimed(
+                        g, &am, &row_claim, stamp, c0, fwd,
+                        &mut col_stack, &mut row_stack, &mut ptr_stack, &mut scanned,
+                    ) {
+                        aug.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                scanned_total.fetch_add(scanned, Ordering::Relaxed);
+            });
+            stats.edges_scanned += scanned_total.load(Ordering::Relaxed);
+            stats.record_phase(0);
+            let a = aug.load(Ordering::Relaxed);
+            total_aug += a;
+            if a == 0 {
+                break;
+            }
+            forward = !forward;
+        }
+
+        // sequential tail certifies maximality (and picks up any paths the
+        // claim discipline starved out).
+        let tail = crate::seq::Pfp.run(g, am.into_matching());
+        stats.augmentations = total_aug + tail.stats.augmentations;
+        stats.edges_scanned += tail.stats.edges_scanned;
+        RunResult::with_stats(tail.matching, stats)
+    }
+}
+
+/// DFS with lookahead where rows are claimed (per-round stamps). Unlike the
+/// sequential PFP the claims persist for the whole round — that is exactly
+/// the Azad et al. design: disjointness buys lock-free augmentation at the
+/// cost of possibly starving other searches (fixed by later rounds/tail).
+#[allow(clippy::too_many_arguments)]
+fn dfs_la_claimed(
+    g: &BipartiteCsr,
+    am: &AtomicMatching,
+    row_claim: &Stamps,
+    stamp: u32,
+    c0: usize,
+    forward: bool,
+    col_stack: &mut Vec<u32>,
+    row_stack: &mut Vec<u32>,
+    ptr_stack: &mut Vec<u32>,
+    scanned: &mut u64,
+) -> bool {
+    col_stack.clear();
+    row_stack.clear();
+    ptr_stack.clear();
+    col_stack.push(c0 as u32);
+    ptr_stack.push(0);
+    while let Some(&c) = col_stack.last() {
+        let c = c as usize;
+        let base = g.cxadj[c] as usize;
+        let deg = g.col_degree(c);
+        let mut advanced = false;
+        while (*ptr_stack.last().unwrap() as usize) < deg {
+            let k = *ptr_stack.last().unwrap() as usize;
+            *ptr_stack.last_mut().unwrap() += 1;
+            let idx = if forward { k } else { deg - 1 - k };
+            let r = g.cadj[base + idx] as usize;
+            *scanned += 1;
+            if !row_claim.claim(r, stamp) {
+                continue;
+            }
+            if am.try_claim_row(r, c) {
+                // free row won: flip the private path
+                row_stack.push(r as u32);
+                for i in (0..col_stack.len()).rev() {
+                    am.set_pair(row_stack[i] as usize, col_stack[i] as usize);
+                }
+                return true;
+            }
+            let rm = am.rmatch_load(r);
+            if rm == UNMATCHED {
+                continue;
+            }
+            let c2 = rm as usize;
+            row_stack.push(r as u32);
+            col_stack.push(c2 as u32);
+            ptr_stack.push(0);
+            advanced = true;
+            break;
+        }
+        if !advanced {
+            col_stack.pop();
+            row_stack.pop();
+            ptr_stack.pop();
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::matching::init::InitHeuristic;
+    use crate::matching::reference_max_cardinality;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn ppfp_small() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
+        let r = PPfp { nthreads: 4 }.run(&g, Matching::empty(3, 3));
+        assert_eq!(r.matching.cardinality(), 3);
+        r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn prop_ppfp_matches_reference() {
+        forall(Config::cases(30), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            let g = from_edges(nr, nc, &edges);
+            for nthreads in [1, 4] {
+                let r = PPfp { nthreads }.run(&g, Matching::empty(nr, nc));
+                r.matching.certify(&g).map_err(|e| e.to_string())?;
+                if r.matching.cardinality() != reference_max_cardinality(&g) {
+                    return Err(format!("p-pfp[{nthreads}] suboptimal"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ppfp_permuted_instance() {
+        let g = crate::graph::gen::Family::Banded.generate(700, 13);
+        let p = crate::graph::random_permute(&g, 5);
+        let r = PPfp { nthreads: 4 }.run(&p, InitHeuristic::Cheap.run(&p));
+        r.matching.certify(&p).unwrap();
+        assert_eq!(r.matching.cardinality(), reference_max_cardinality(&p));
+    }
+}

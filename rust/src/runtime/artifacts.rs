@@ -1,0 +1,212 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`). A hand-rolled minimal JSON reader — the
+//! offline environment has no serde_json, and the manifest grammar is a
+//! fixed, flat shape we control end to end.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// one GPUBFS level expansion
+    BfsLevel,
+    /// the full APFB matching loop
+    ApfbFull,
+}
+
+impl ArtifactKind {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "bfs_level" => Some(Self::BfsLevel),
+            "apfb_full" => Some(Self::ApfbFull),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: String,
+    pub nc: usize,
+    pub nr: usize,
+    pub k: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse the fixed manifest shape. Tolerates whitespace/ordering but
+    /// not arbitrary JSON (strings in our grammar never contain escapes).
+    pub fn parse(text: &str) -> Result<Self> {
+        let objs = extract_objects(text, "\"artifacts\"")?;
+        let mut artifacts = Vec::with_capacity(objs.len());
+        for o in objs {
+            let name = get_string(&o, "name")?;
+            let kind_s = get_string(&o, "kind")?;
+            let kind = ArtifactKind::from_str(&kind_s)
+                .ok_or_else(|| anyhow!("unknown artifact kind {kind_s}"))?;
+            artifacts.push(Artifact {
+                name,
+                kind,
+                file: get_string(&o, "file")?,
+                nc: get_usize(&o, "nc")?,
+                nr: get_usize(&o, "nr")?,
+                k: get_usize(&o, "k")?,
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Smallest (by nc then nr then k) artifact of `kind` with
+    /// `nc >= need_nc && nr >= need_nr && k == need_k`. K must match
+    /// exactly: the ELL packer targets the bucket's K.
+    pub fn find_bucket(
+        &self,
+        kind: ArtifactKind,
+        need_nc: usize,
+        need_nr: usize,
+        need_k: usize,
+    ) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.nc >= need_nc && a.nr >= need_nr && a.k == need_k)
+            .min_by_key(|a| (a.nc, a.nr, a.k))
+    }
+
+    /// All distinct (nc, nr, k) bucket shapes present.
+    pub fn buckets(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self.artifacts.iter().map(|a| (a.nc, a.nr, a.k)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Pull out the `{...}` objects inside the array following `key`.
+fn extract_objects(text: &str, key: &str) -> Result<Vec<String>> {
+    let start = text
+        .find(key)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))?;
+    let rest = &text[start..];
+    let open = rest.find('[').ok_or_else(|| anyhow!("no array after {key}"))?;
+    let mut objs = Vec::new();
+    let mut depth = 0usize;
+    let mut obj_start = None;
+    for (i, ch) in rest[open..].char_indices() {
+        match ch {
+            '{' => {
+                if depth == 0 {
+                    obj_start = Some(open + i);
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow!("unbalanced braces"))?;
+                if depth == 0 {
+                    let s = obj_start.take().ok_or_else(|| anyhow!("brace underflow"))?;
+                    objs.push(rest[s..=open + i].to_string());
+                }
+            }
+            ']' if depth == 0 => break,
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        bail!("unterminated object in manifest");
+    }
+    Ok(objs)
+}
+
+fn get_string(obj: &str, key: &str) -> Result<String> {
+    let pat = format!("\"{key}\"");
+    let kpos = obj.find(&pat).ok_or_else(|| anyhow!("missing key {key}"))?;
+    let rest = &obj[kpos + pat.len()..];
+    let colon = rest.find(':').ok_or_else(|| anyhow!("missing : after {key}"))?;
+    let rest = rest[colon + 1..].trim_start();
+    if !rest.starts_with('"') {
+        bail!("key {key} is not a string");
+    }
+    let end = rest[1..]
+        .find('"')
+        .ok_or_else(|| anyhow!("unterminated string for {key}"))?;
+    Ok(rest[1..1 + end].to_string())
+}
+
+fn get_usize(obj: &str, key: &str) -> Result<usize> {
+    let pat = format!("\"{key}\"");
+    let kpos = obj.find(&pat).ok_or_else(|| anyhow!("missing key {key}"))?;
+    let rest = &obj[kpos + pat.len()..];
+    let colon = rest.find(':').ok_or_else(|| anyhow!("missing : after {key}"))?;
+    let rest = rest[colon + 1..].trim_start();
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end]
+        .parse::<usize>()
+        .with_context(|| format!("parsing number for {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "l0": 2,
+      "artifacts": [
+        {"name": "bfs_level_64x64x4", "kind": "bfs_level",
+         "file": "bfs_level_64x64x4.hlo.txt", "nc": 64, "nr": 64, "k": 4,
+         "bytes": 123},
+        {"name": "apfb_full_1024x512x8", "kind": "apfb_full",
+         "file": "apfb_full_1024x512x8.hlo.txt", "nc": 1024, "nr": 512,
+         "k": 8, "bytes": 456}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].name, "bfs_level_64x64x4");
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::BfsLevel);
+        assert_eq!(m.artifacts[1].nc, 1024);
+        assert_eq!(m.artifacts[1].nr, 512);
+        assert_eq!(m.artifacts[1].k, 8);
+    }
+
+    #[test]
+    fn find_bucket_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.find_bucket(ArtifactKind::ApfbFull, 100, 100, 8).unwrap();
+        assert_eq!(a.name, "apfb_full_1024x512x8");
+        // K mismatch -> none
+        assert!(m.find_bucket(ArtifactKind::ApfbFull, 100, 100, 4).is_none());
+        // too big -> none
+        assert!(m.find_bucket(ArtifactKind::BfsLevel, 100, 100, 4).is_none());
+    }
+
+    #[test]
+    fn buckets_deduped() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.buckets(), vec![(64, 64, 4), (1024, 512, 8)]);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! The PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` once, compiles them on the CPU PJRT client, and
+//! executes them from the L3 hot path. Python is never involved at
+//! runtime — the artifacts directory is the entire interface.
+
+use super::artifacts::{Artifact, ArtifactKind, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub meta: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with int32 host buffers; returns the flattened tuple of
+    /// int32 outputs.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<Vec<i32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                lit
+            } else {
+                lit.reshape(dims).context("reshape input literal")?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("pjrt execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("device-to-host transfer")?;
+        // aot.py lowers with return_tuple=True
+        let parts = out.to_tuple().context("decompose output tuple")?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            vecs.push(p.to_vec::<i32>().context("output to_vec")?);
+        }
+        Ok(vecs)
+    }
+}
+
+/// PJRT client + executable cache keyed by artifact name. Compilation
+/// happens once per artifact per process; `run_i32` afterwards is
+/// Python-free and allocation-light.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// SAFETY: the PJRT CPU client is internally synchronized; the xla crate
+// just doesn't mark its opaque handles Send/Sync. We serialize compile
+// calls through the cache mutex and PJRT execute is thread-safe on CPU.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Open the artifacts directory (reads `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, dir: dir.to_path_buf(), cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts location: `$BIMATCH_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("BIMATCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Smallest bucket of `kind` that fits (nc_packed, nr, max_k).
+    pub fn find_bucket(&self, kind: ArtifactKind, nc: usize, nr: usize, k: usize) -> Option<&Artifact> {
+        self.manifest.find_bucket(kind, nc, nr, k)
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let arc = std::sync::Arc::new(Executable { meta, exe });
+        cache.insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // engine tests that need real artifacts live in rust/tests/
+    // xla_roundtrip.rs (they require `make artifacts` to have run); here
+    // only the pure-logic pieces are covered.
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_fails_cleanly() {
+        match Engine::open(Path::new("/definitely/not/here")) {
+            Ok(_) => panic!("open must fail on a missing directory"),
+            Err(err) => assert!(format!("{err:#}").contains("manifest")),
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact discovery ([`artifacts`]) and the compile/execute
+//! engine ([`engine`]). `Engine::open` → `load(name)` → `run_i32(...)`;
+//! see `/opt/xla-example/load_hlo` for the minimal pattern this extends.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{Artifact, ArtifactKind, Manifest};
+pub use engine::{Engine, Executable};

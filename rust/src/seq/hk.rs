@@ -1,0 +1,286 @@
+//! Hopcroft–Karp (the paper's sequential "HK" baseline, [14]).
+//!
+//! Phases of: (1) one combined BFS from all unmatched columns building the
+//! level graph, stopping at the first level that reaches a free row;
+//! (2) a maximal set of vertex-disjoint shortest augmenting paths found by
+//! DFS restricted to the level graph, each augmented. O(√n·τ) total.
+//!
+//! The DFS is iterative (mesh instances have augmenting paths of length
+//! Θ(√n); recursion would overflow the stack) and uses per-column edge
+//! pointers so each phase's DFS is O(τ) amortized.
+
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::{Matching, UNMATCHED};
+
+pub struct Hk;
+
+const UNREACHED: i32 = i32::MAX;
+
+impl MatchingAlgorithm for Hk {
+    fn name(&self) -> String {
+        "hk".into()
+    }
+
+    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+        let mut m = init;
+        let mut stats = RunStats::default();
+        let mut dist = vec![UNREACHED; g.nc];
+        let mut frontier: Vec<u32> = Vec::with_capacity(g.nc);
+        let mut next: Vec<u32> = Vec::with_capacity(g.nc);
+        let mut row_visited = vec![false; g.nr];
+        let mut ptr = vec![0u32; g.nc];
+
+        loop {
+            let levels = bfs_levels(g, &m, &mut dist, &mut frontier, &mut next, &mut stats);
+            let Some(_aug_level) = levels else {
+                break; // no augmenting path: maximum
+            };
+            stats.record_phase(_aug_level + 1);
+
+            // DFS for a maximal set of disjoint shortest augmenting paths
+            row_visited.iter_mut().for_each(|v| *v = false);
+            for c in 0..g.nc {
+                ptr[c] = g.cxadj[c];
+            }
+            for c0 in 0..g.nc {
+                if m.cmatch[c0] != UNMATCHED || dist[c0] != 0 || g.col_degree(c0) == 0 {
+                    continue;
+                }
+                if dfs_augment(g, &mut m, &dist, &mut row_visited, &mut ptr, c0, &mut stats) {
+                    stats.augmentations += 1;
+                }
+            }
+        }
+        RunResult::with_stats(m, stats)
+    }
+}
+
+/// Combined BFS: fills `dist` over columns; returns the level at which a
+/// free row was reached (None if unreachable → matching is maximum).
+pub(crate) fn bfs_levels(
+    g: &BipartiteCsr,
+    m: &Matching,
+    dist: &mut [i32],
+    frontier: &mut Vec<u32>,
+    next: &mut Vec<u32>,
+    stats: &mut RunStats,
+) -> Option<u32> {
+    dist.iter_mut().for_each(|d| *d = UNREACHED);
+    frontier.clear();
+    next.clear();
+    for c in 0..g.nc {
+        if m.cmatch[c] == UNMATCHED && g.col_degree(c) > 0 {
+            dist[c] = 0;
+            frontier.push(c as u32);
+        }
+    }
+    let mut level = 0i32;
+    let mut found = false;
+    while !frontier.is_empty() && !found {
+        for &c in frontier.iter() {
+            for &r in g.col_neighbors(c as usize) {
+                stats.edges_scanned += 1;
+                let rm = m.rmatch[r as usize];
+                if rm == UNMATCHED {
+                    found = true; // shortest level reached; finish this level
+                } else {
+                    let c2 = rm as usize;
+                    if dist[c2] == UNREACHED {
+                        dist[c2] = level + 1;
+                        next.push(c2 as u32);
+                    }
+                }
+            }
+        }
+        std::mem::swap(frontier, next);
+        next.clear();
+        level += 1;
+    }
+    if found {
+        Some(level as u32 - 1)
+    } else {
+        None
+    }
+}
+
+/// Iterative DFS from unmatched column `c0` along the level graph
+/// (dist[c2] == dist[c] + 1), claiming unvisited rows; augments in place on
+/// success. Returns whether a path was augmented.
+fn dfs_augment(
+    g: &BipartiteCsr,
+    m: &mut Matching,
+    dist: &[i32],
+    row_visited: &mut [bool],
+    ptr: &mut [u32],
+    c0: usize,
+    stats: &mut RunStats,
+) -> bool {
+    // stacks hold the current alternating path: col_stack[i] --row_stack[i]--> ...
+    let mut col_stack: Vec<u32> = vec![c0 as u32];
+    let mut row_stack: Vec<u32> = Vec::new();
+    while let Some(&c) = col_stack.last() {
+        let c = c as usize;
+        let mut advanced = false;
+        while ptr[c] < g.cxadj[c + 1] {
+            let r = g.cadj[ptr[c] as usize] as usize;
+            ptr[c] += 1;
+            stats.edges_scanned += 1;
+            if row_visited[r] {
+                continue;
+            }
+            let rm = m.rmatch[r];
+            if rm == UNMATCHED {
+                row_visited[r] = true;
+                // augment along (col_stack, row_stack + r)
+                row_stack.push(r as u32);
+                for i in (0..col_stack.len()).rev() {
+                    let (ci, ri) = (col_stack[i] as usize, row_stack[i] as usize);
+                    m.rmatch[ri] = ci as i32;
+                    m.cmatch[ci] = ri as i32;
+                }
+                return true;
+            }
+            let c2 = rm as usize;
+            if dist[c2] == dist[c] + 1 {
+                // mark visited only when (c, r) is a level-graph edge: a
+                // row belongs to level dist[rmatch[r]] and may legwise be
+                // entered only from level dist-1 columns — marking it on a
+                // failed level check from a *different* level would block
+                // the one legitimate user (this exact bug made the outer
+                // loop spin; see the uniform-300 regression test).
+                row_visited[r] = true;
+                row_stack.push(r as u32);
+                col_stack.push(c2 as u32);
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            col_stack.pop();
+            row_stack.pop();
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::matching::init::InitHeuristic;
+    use crate::matching::reference_max_cardinality;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn hk_small_perfect() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
+        let r = Hk.run(&g, Matching::empty(3, 3));
+        assert_eq!(r.matching.cardinality(), 3);
+        r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn hk_with_cheap_init() {
+        let g = crate::graph::gen::Family::Kron.generate(512, 5);
+        let init = InitHeuristic::Cheap.run(&g);
+        let r = Hk.run(&g, init);
+        r.matching.certify(&g).unwrap();
+        assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
+    }
+
+    #[test]
+    fn hk_empty_graph() {
+        let g = from_edges(4, 4, &[]);
+        let r = Hk.run(&g, Matching::empty(4, 4));
+        assert_eq!(r.matching.cardinality(), 0);
+    }
+
+    #[test]
+    fn hk_long_path_no_stack_overflow() {
+        // path graph of length 20001: worst case for recursive DFS
+        let n = 10_000;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            edges.push((i as u32, i as u32));
+            if i + 1 < n {
+                edges.push((i as u32, i as u32 + 1));
+            }
+        }
+        let g = from_edges(n, n, &edges);
+        let r = Hk.run(&g, Matching::empty(n, n));
+        assert_eq!(r.matching.cardinality(), n);
+        r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn hk_phase_count_sublinear() {
+        // HK's O(sqrt n) phase bound should show: on a 2500-vertex planted
+        // instance, far fewer than 50 phases from a cheap init.
+        let g = crate::graph::gen::random::with_perfect_matching(2500, 2.0, 9);
+        let init = InitHeuristic::Cheap.run(&g);
+        let r = Hk.run(&g, init);
+        assert!(r.stats.phases <= 51, "phases = {}", r.stats.phases);
+        r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn prop_hk_matches_reference() {
+        forall(Config::cases(40), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            let g = from_edges(nr, nc, &edges);
+            let r = Hk.run(&g, Matching::empty(nr, nc));
+            r.matching.certify(&g).map_err(|e| e.to_string())?;
+            let want = reference_max_cardinality(&g);
+            if r.matching.cardinality() != want {
+                return Err(format!("hk {} != ref {want}", r.matching.cardinality()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hk_respects_init() {
+        forall(Config::cases(25), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            for h in [InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
+                let r = Hk.run(&g, h.run(&g));
+                r.matching.certify(&g).map_err(|e| format!("{}: {e}", h.name()))?;
+                if r.matching.cardinality() != reference_max_cardinality(&g) {
+                    return Err("init changed final cardinality".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[cfg(test)]
+mod regression_tests {
+    use super::*;
+    use crate::matching::init::InitHeuristic;
+    use crate::matching::reference_max_cardinality;
+
+    /// Regression: a row adjacent to columns at different BFS levels must
+    /// stay usable by the level-graph edge even after another level's DFS
+    /// scanned (and rejected) it. Before the fix, HK span forever on this
+    /// instance (BFS kept finding a path the DFS could never realize).
+    #[test]
+    fn hk_uniform300_terminates_and_is_optimal() {
+        let g = crate::graph::gen::Family::Uniform.generate(300, 1);
+        let init = InitHeuristic::Cheap.run(&g);
+        let r = Hk.run(&g, init);
+        r.matching.certify(&g).unwrap();
+        assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
+    }
+
+    #[test]
+    fn hk_uniform_sweep_terminates() {
+        for seed in 0..6 {
+            let g = crate::graph::gen::uniform_random(400, 400, 4.5, seed);
+            let r = Hk.run(&g, InitHeuristic::Cheap.run(&g));
+            r.matching.certify(&g).unwrap();
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! HKDW — Hopcroft–Karp with the Duff–Wiberg improvement ([9] in the
+//! paper): after each HK phase (maximal disjoint *shortest* augmenting
+//! paths), run an extra round of unrestricted DFS searches from the rows
+//! that are still unmatched, augmenting along arbitrary-length disjoint
+//! paths. Same O(√n·τ) worst case, better practical behaviour; the paper's
+//! APFB is its GPU analogue.
+
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::{Matching, UNMATCHED};
+
+pub struct Hkdw;
+
+const UNREACHED: i32 = i32::MAX;
+
+impl MatchingAlgorithm for Hkdw {
+    fn name(&self) -> String {
+        "hkdw".into()
+    }
+
+    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+        let mut m = init;
+        let mut stats = RunStats::default();
+        let mut dist = vec![UNREACHED; g.nc];
+        let mut frontier = Vec::with_capacity(g.nc);
+        let mut next = Vec::with_capacity(g.nc);
+        let mut row_visited = vec![false; g.nr];
+        let mut col_visited = vec![false; g.nc];
+        let mut ptr = vec![0u32; g.nc];
+        let mut rptr = vec![0u32; g.nr];
+
+        loop {
+            let levels = super::hk::bfs_levels(g, &m, &mut dist, &mut frontier, &mut next, &mut stats);
+            let Some(aug_level) = levels else { break };
+            stats.record_phase(aug_level + 1);
+
+            // HK phase: disjoint shortest paths (same as seq::hk)
+            row_visited.iter_mut().for_each(|v| *v = false);
+            for c in 0..g.nc {
+                ptr[c] = g.cxadj[c];
+            }
+            for c0 in 0..g.nc {
+                if m.cmatch[c0] != UNMATCHED || dist[c0] != 0 || g.col_degree(c0) == 0 {
+                    continue;
+                }
+                if level_dfs(g, &mut m, &dist, &mut row_visited, &mut ptr, c0, &mut stats) {
+                    stats.augmentations += 1;
+                }
+            }
+
+            // Duff–Wiberg extra pass: unrestricted alternating DFS from the
+            // remaining unmatched *rows*, disjoint via visited marks.
+            col_visited.iter_mut().for_each(|v| *v = false);
+            for r in 0..g.nr {
+                rptr[r] = g.rxadj[r];
+            }
+            for c in 0..g.nc {
+                ptr[c] = g.cxadj[c];
+            }
+            for r0 in 0..g.nr {
+                if m.rmatch[r0] != UNMATCHED || g.row_degree(r0) == 0 {
+                    continue;
+                }
+                if row_dfs(g, &mut m, &mut col_visited, &mut rptr, r0, &mut stats) {
+                    stats.augmentations += 1;
+                }
+            }
+        }
+        RunResult::with_stats(m, stats)
+    }
+}
+
+/// Same level-restricted DFS as seq::hk (duplicated privately to keep the
+/// two algorithms independently readable; both are covered by tests).
+fn level_dfs(
+    g: &BipartiteCsr,
+    m: &mut Matching,
+    dist: &[i32],
+    row_visited: &mut [bool],
+    ptr: &mut [u32],
+    c0: usize,
+    stats: &mut RunStats,
+) -> bool {
+    let mut col_stack: Vec<u32> = vec![c0 as u32];
+    let mut row_stack: Vec<u32> = Vec::new();
+    while let Some(&c) = col_stack.last() {
+        let c = c as usize;
+        let mut advanced = false;
+        while ptr[c] < g.cxadj[c + 1] {
+            let r = g.cadj[ptr[c] as usize] as usize;
+            ptr[c] += 1;
+            stats.edges_scanned += 1;
+            if row_visited[r] {
+                continue;
+            }
+            let rm = m.rmatch[r];
+            if rm == UNMATCHED {
+                row_visited[r] = true;
+                row_stack.push(r as u32);
+                for i in (0..col_stack.len()).rev() {
+                    let (ci, ri) = (col_stack[i] as usize, row_stack[i] as usize);
+                    m.rmatch[ri] = ci as i32;
+                    m.cmatch[ci] = ri as i32;
+                }
+                return true;
+            }
+            let c2 = rm as usize;
+            if dist[c2] == dist[c] + 1 {
+                // level-edge consumption only (see seq::hk::dfs_augment)
+                row_visited[r] = true;
+                row_stack.push(r as u32);
+                col_stack.push(c2 as u32);
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            col_stack.pop();
+            row_stack.pop();
+        }
+    }
+    false
+}
+
+/// Unrestricted alternating DFS from an unmatched row: row → free column?
+/// done; row → matched column → its row, recurse. Disjointness via
+/// col_visited marks shared across the whole Duff–Wiberg pass.
+fn row_dfs(
+    g: &BipartiteCsr,
+    m: &mut Matching,
+    col_visited: &mut [bool],
+    rptr: &mut [u32],
+    r0: usize,
+    stats: &mut RunStats,
+) -> bool {
+    let mut row_stack: Vec<u32> = vec![r0 as u32];
+    let mut col_stack: Vec<u32> = Vec::new();
+    while let Some(&r) = row_stack.last() {
+        let r = r as usize;
+        let mut advanced = false;
+        while rptr[r] < g.rxadj[r + 1] {
+            let c = g.radj[rptr[r] as usize] as usize;
+            rptr[r] += 1;
+            stats.edges_scanned += 1;
+            if col_visited[c] {
+                continue;
+            }
+            col_visited[c] = true;
+            let cm = m.cmatch[c];
+            if cm == UNMATCHED {
+                col_stack.push(c as u32);
+                for i in (0..row_stack.len()).rev() {
+                    let (ri, ci) = (row_stack[i] as usize, col_stack[i] as usize);
+                    m.rmatch[ri] = ci as i32;
+                    m.cmatch[ci] = ri as i32;
+                }
+                return true;
+            }
+            let r2 = cm as usize;
+            col_stack.push(c as u32);
+            row_stack.push(r2 as u32);
+            advanced = true;
+            break;
+        }
+        if !advanced {
+            row_stack.pop();
+            col_stack.pop();
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::matching::init::InitHeuristic;
+    use crate::matching::reference_max_cardinality;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn hkdw_small() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
+        let r = Hkdw.run(&g, Matching::empty(3, 3));
+        assert_eq!(r.matching.cardinality(), 3);
+        r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn hkdw_converges_in_fewer_or_equal_phases_than_hk() {
+        // the DW pass can only help: phases(HKDW) <= phases(HK)
+        for fam in [crate::graph::gen::Family::Delaunay, crate::graph::gen::Family::Social] {
+            let g = fam.generate(900, 3);
+            let init = InitHeuristic::Cheap.run(&g);
+            let hk = super::super::hk::Hk.run(&g, init.clone());
+            let dw = Hkdw.run(&g, init);
+            assert!(
+                dw.stats.phases <= hk.stats.phases,
+                "{}: hkdw {} > hk {}",
+                fam.name(),
+                dw.stats.phases,
+                hk.stats.phases
+            );
+            assert_eq!(dw.matching.cardinality(), hk.matching.cardinality());
+        }
+    }
+
+    #[test]
+    fn prop_hkdw_matches_reference() {
+        forall(Config::cases(40), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            let g = from_edges(nr, nc, &edges);
+            let r = Hkdw.run(&g, Matching::empty(nr, nc));
+            r.matching.certify(&g).map_err(|e| e.to_string())?;
+            if r.matching.cardinality() != reference_max_cardinality(&g) {
+                return Err("hkdw suboptimal".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hkdw_with_inits() {
+        forall(Config::cases(20), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            let r = Hkdw.run(&g, InitHeuristic::KarpSipser.run(&g));
+            r.matching.certify(&g).map_err(|e| e.to_string())?;
+            if r.matching.cardinality() != reference_max_cardinality(&g) {
+                return Err("hkdw+ks suboptimal".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Sequential maximum-cardinality matching algorithms: the paper's two
+//! baselines (HK [14] and PFP [8]), HKDW [9] (which APFB mirrors on the
+//! GPU), plus two extra augmenting-path baselines and a push–relabel
+//! matcher from the second algorithm class the paper surveys.
+
+pub mod bfs;
+pub mod dfs;
+pub mod hk;
+pub mod hkdw;
+pub mod pfp;
+pub mod push_relabel;
+
+pub use bfs::BfsSimple;
+pub use dfs::DfsLookahead;
+pub use hk::Hk;
+pub use hkdw::Hkdw;
+pub use pfp::Pfp;
+pub use push_relabel::PushRelabel;

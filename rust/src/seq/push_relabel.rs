@@ -1,0 +1,137 @@
+//! Push–relabel matcher — the second algorithm class the paper surveys
+//! (Goldberg–Tarjan [12]; bipartite-matching specialization per
+//! Goldberg–Kennedy [11] and Kaya–Langguth–Manne–Uçar [16]).
+//!
+//! FIFO active-column discipline with the *double push* rule: a free column
+//! pushes to its minimum-labeled neighbor row (evicting that row's current
+//! column, which re-enters the queue) and relabels the row to
+//! `second_min + 1`. A column whose minimum neighbor label reaches the
+//! label bound is provably unmatchable and is dropped.
+
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::{Matching, UNMATCHED};
+use std::collections::VecDeque;
+
+pub struct PushRelabel;
+
+impl MatchingAlgorithm for PushRelabel {
+    fn name(&self) -> String {
+        "pr".into()
+    }
+
+    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+        let mut m = init;
+        let mut stats = RunStats::default();
+        // label bound: no simple alternating path is longer than nr+nc
+        let limit: u64 = (g.nr + g.nc + 1) as u64;
+        let mut label = vec![0u64; g.nr];
+        let mut q: VecDeque<u32> = (0..g.nc)
+            .filter(|&c| m.cmatch[c] == UNMATCHED && g.col_degree(c) > 0)
+            .map(|c| c as u32)
+            .collect();
+
+        while let Some(c) = q.pop_front() {
+            let c = c as usize;
+            debug_assert!(m.cmatch[c] == UNMATCHED);
+            // find min and second-min neighbor labels
+            let mut min1 = u64::MAX;
+            let mut min2 = u64::MAX;
+            let mut rmin = usize::MAX;
+            for &r in g.col_neighbors(c) {
+                stats.edges_scanned += 1;
+                let l = label[r as usize];
+                if l < min1 {
+                    min2 = min1;
+                    min1 = l;
+                    rmin = r as usize;
+                } else if l < min2 {
+                    min2 = l;
+                }
+            }
+            if rmin == usize::MAX || min1 >= limit {
+                continue; // unmatchable (or isolated): drop permanently
+            }
+            // double push: evict current occupant (if any), take the row
+            let old = m.rmatch[rmin];
+            if old != UNMATCHED {
+                m.cmatch[old as usize] = UNMATCHED;
+                q.push_back(old as u32);
+            } else {
+                stats.augmentations += 1;
+            }
+            m.rmatch[rmin] = c as i32;
+            m.cmatch[c] = rmin as i32;
+            // relabel
+            label[rmin] = if min2 == u64::MAX { limit } else { min2 } + 1;
+            stats.phases += 1; // count pushes as unit work for reporting
+        }
+        RunResult::with_stats(m, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::matching::init::InitHeuristic;
+    use crate::matching::reference_max_cardinality;
+    use crate::util::qcheck::{arb_bipartite, forall, Config};
+
+    #[test]
+    fn pr_small() {
+        let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
+        let r = PushRelabel.run(&g, Matching::empty(3, 3));
+        assert_eq!(r.matching.cardinality(), 3);
+        r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn pr_deficient_graph() {
+        // K_{1,3} from the row side: 3 columns share one row
+        let g = from_edges(1, 3, &[(0, 0), (0, 1), (0, 2)]);
+        let r = PushRelabel.run(&g, Matching::empty(1, 3));
+        assert_eq!(r.matching.cardinality(), 1);
+        r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn prop_pr_matches_reference() {
+        forall(Config::cases(40), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            let r = PushRelabel.run(&g, Matching::empty(nr, nc));
+            r.matching.certify(&g).map_err(|e| e.to_string())?;
+            if r.matching.cardinality() != reference_max_cardinality(&g) {
+                return Err(format!(
+                    "pr {} != ref {}",
+                    r.matching.cardinality(),
+                    reference_max_cardinality(&g)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pr_with_init() {
+        forall(Config::cases(20), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            let r = PushRelabel.run(&g, InitHeuristic::Cheap.run(&g));
+            r.matching.certify(&g).map_err(|e| e.to_string())?;
+            if r.matching.cardinality() != reference_max_cardinality(&g) {
+                return Err("pr+cheap suboptimal".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pr_on_mesh() {
+        let g = crate::graph::gen::delaunay_like(400, 3);
+        let r = PushRelabel.run(&g, InitHeuristic::Cheap.run(&g));
+        r.matching.certify(&g).unwrap();
+        assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
+    }
+}

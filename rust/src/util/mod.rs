@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-repo because the offline environment
+//! ships no `rand`, `rayon`, `criterion`, or `proptest`: deterministic RNG,
+//! timing, a scoped thread pool, evaluation statistics, a mini
+//! property-testing framework, and ASCII/Markdown table rendering.
+
+pub mod pool;
+pub mod qcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

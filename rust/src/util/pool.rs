@@ -1,0 +1,136 @@
+//! A small fixed-size thread pool with scoped parallel-for, built on
+//! `std::thread::scope`. `rayon` is unavailable offline, and the multicore
+//! baselines (P-HK, P-PFP, P-DBFS) as well as the GPU device simulator need
+//! data-parallel loops, so the repo carries its own.
+//!
+//! Two entry points:
+//!  * [`parallel_for`] — fork/join a range across `nthreads` workers with
+//!    static block-cyclic assignment (matches the paper's CT thread→column
+//!    mapping and OpenMP `schedule(static)` used by Azad et al.).
+//!  * [`parallel_chunks`] — contiguous chunk assignment for cache-friendly
+//!    scans.
+
+/// Number of worker threads to use by default: honours
+/// `BIMATCH_THREADS`, falls back to available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("BIMATCH_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Fork/join: run `body(thread_id)` on `nthreads` scoped threads.
+/// `body` must be `Sync` so all threads can share it; per-thread work
+/// partitioning is the callee's business (pass the thread id).
+pub fn fork_join<F>(nthreads: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    assert!(nthreads >= 1);
+    if nthreads == 1 {
+        body(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for tid in 1..nthreads {
+            let body = &body;
+            s.spawn(move || body(tid));
+        }
+        body(0);
+    });
+}
+
+/// Parallel for over `0..n` with block-cyclic (strided) assignment:
+/// thread `t` visits `t, t+T, t+2T, ...`. This mirrors both the CUDA
+/// coalesced-access pattern in the paper's CT kernels and a round-robin
+/// OpenMP static schedule.
+pub fn parallel_for<F>(nthreads: usize, n: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    fork_join(nthreads, |tid| {
+        let mut i = tid;
+        while i < n {
+            body(i);
+            i += nthreads;
+        }
+    });
+}
+
+/// Parallel for over `0..n` in contiguous chunks (cache-friendly scans).
+pub fn parallel_chunks<F>(nthreads: usize, n: usize, body: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let per = n.div_ceil(nthreads);
+    fork_join(nthreads, |tid| {
+        let lo = tid * per;
+        if lo < n {
+            let hi = (lo + per).min(n);
+            body(lo..hi);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn fork_join_runs_every_thread() {
+        let hits = AtomicUsize::new(0);
+        fork_join(4, |_tid| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn parallel_for_covers_range_exactly_once() {
+        let n = 1000;
+        let marks: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(7, n, |i| {
+            marks[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(marks.iter().all(|m| m.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_covers_range() {
+        let n = 1003;
+        let sum = AtomicU64::new(0);
+        parallel_chunks(5, n, |range| {
+            let local: u64 = range.map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1, 10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn empty_range_ok() {
+        parallel_for(4, 0, |_| panic!("must not be called"));
+        parallel_chunks(4, 0, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal property-based testing framework (no `proptest`/`quickcheck`
+//! offline). Provides seeded case generation, a configurable number of
+//! cases, and greedy shrinking for the integer-vector generators we need.
+//!
+//! Usage:
+//! ```no_run
+//! use bimatch::util::qcheck::{Config, forall};
+//! forall(Config::cases(64), |rng| {
+//!     let n = rng.gen_range(50) + 1;
+//!     // ... build input from rng, return Ok(()) or Err(description)
+//!     if n <= 50 { Ok(()) } else { Err(format!("bad n={n}")) }
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn cases(cases: usize) -> Self {
+        Self { cases, seed: 0xB1A7C4 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run `prop` on `cfg.cases` seeded RNGs; panic with the failing seed and
+/// message on the first failure. Each case gets an independent, derivable
+/// RNG so failures are reproducible by seed.
+pub fn forall<F>(cfg: Config, prop: F)
+where
+    F: Fn(&mut Xoshiro256) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed on case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Shrinkable random bipartite edge list: returns (nr, nc, edges). Sizes are
+/// skewed small; edge count follows density drawn per-case so both sparse
+/// and dense-ish cases occur.
+pub fn arb_bipartite(rng: &mut Xoshiro256, max_side: usize) -> (usize, usize, Vec<(u32, u32)>) {
+    let nr = rng.gen_range(max_side) + 1;
+    let nc = rng.gen_range(max_side) + 1;
+    let max_edges = nr * nc;
+    let density = rng.next_f64() * rng.next_f64(); // bias sparse
+    let m = ((max_edges as f64 * density) as usize).min(max_edges);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        edges.push((rng.gen_range(nr) as u32, rng.gen_range(nc) as u32));
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    (nr, nc, edges)
+}
+
+/// Greedy shrink of a failing edge list against `still_fails`: repeatedly
+/// try dropping halves, then single edges, keeping the input failing.
+pub fn shrink_edges<F>(
+    nr: usize,
+    nc: usize,
+    edges: Vec<(u32, u32)>,
+    still_fails: F,
+) -> Vec<(u32, u32)>
+where
+    F: Fn(usize, usize, &[(u32, u32)]) -> bool,
+{
+    let mut cur = edges;
+    // halve passes
+    let mut progress = true;
+    while progress && cur.len() > 1 {
+        progress = false;
+        let half = cur.len() / 2;
+        for keep_hi in [false, true] {
+            let cand: Vec<_> = if keep_hi {
+                cur[half..].to_vec()
+            } else {
+                cur[..half].to_vec()
+            };
+            if !cand.is_empty() && still_fails(nr, nc, &cand) {
+                cur = cand;
+                progress = true;
+                break;
+            }
+        }
+    }
+    // single-edge drops
+    let mut i = 0;
+    while i < cur.len() {
+        let mut cand = cur.clone();
+        cand.remove(i);
+        if still_fails(nr, nc, &cand) {
+            cur = cand;
+        } else {
+            i += 1;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(Config::cases(16), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(Config::cases(8), |rng| {
+            if rng.gen_range(4) == 3 {
+                Err("hit".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn arb_bipartite_in_bounds() {
+        forall(Config::cases(50), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            for &(r, c) in &edges {
+                if r as usize >= nr || c as usize >= nc {
+                    return Err(format!("edge ({r},{c}) out of bounds {nr}x{nc}"));
+                }
+            }
+            // dedup'd
+            let set: std::collections::HashSet<_> = edges.iter().collect();
+            if set.len() != edges.len() {
+                return Err("duplicate edges".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal_witness() {
+        // failure condition: contains edge (1,1)
+        let edges = vec![(0, 0), (1, 1), (2, 2), (3, 1)];
+        let fails = |_nr: usize, _nc: usize, es: &[(u32, u32)]| es.contains(&(1, 1));
+        let shrunk = shrink_edges(4, 4, edges, fails);
+        assert_eq!(shrunk, vec![(1, 1)]);
+    }
+}

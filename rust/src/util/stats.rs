@@ -1,0 +1,188 @@
+//! Statistics used by the evaluation harness: geometric means (Table 1,
+//! Fig. 5), speedup profiles (Fig. 3) and performance profiles (Fig. 4),
+//! exactly as defined in the paper's §4.
+
+/// Geometric mean of strictly-positive values. Values are clamped below at
+/// `floor` (default 1e-9 s) so a 0-measurement cannot zero the mean.
+pub fn geomean(values: &[f64]) -> f64 {
+    geomean_floor(values, 1e-9)
+}
+
+pub fn geomean_floor(values: &[f64], floor: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = values.iter().map(|&v| v.max(floor).ln()).sum();
+    (s / values.len() as f64).exp()
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+}
+
+pub fn min(values: &[f64]) -> f64 {
+    values.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(values: &[f64]) -> f64 {
+    values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Median (on a copy; not in-place).
+pub fn median(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// One point of a cumulative profile: at threshold `x`, fraction `y` of the
+/// instances satisfy the profile predicate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfilePoint {
+    pub x: f64,
+    pub y: f64,
+}
+
+/// Log2-scaled *speedup profile* (paper Fig. 3). `speedups[i]` is the
+/// speedup of the algorithm on instance `i` w.r.t. the reference. A point
+/// (x, y) means: with probability y the algorithm obtains at least 2^x
+/// speedup. `xs` are the log2-thresholds to evaluate.
+pub fn speedup_profile(speedups: &[f64], xs: &[f64]) -> Vec<ProfilePoint> {
+    let n = speedups.len().max(1) as f64;
+    xs.iter()
+        .map(|&x| {
+            let t = 2f64.powf(x);
+            let y = speedups.iter().filter(|&&s| s >= t).count() as f64 / n;
+            ProfilePoint { x, y }
+        })
+        .collect()
+}
+
+/// *Performance profile* (paper Fig. 4, Dolan–Moré). `times[a][i]` is the
+/// runtime of algorithm `a` on instance `i`. Returns for each algorithm the
+/// fraction of instances on which it is within factor `x` of the per-
+/// instance best, evaluated at each threshold in `xs`.
+pub fn performance_profile(times: &[Vec<f64>], xs: &[f64]) -> Vec<Vec<ProfilePoint>> {
+    if times.is_empty() {
+        return vec![];
+    }
+    let ninst = times[0].len();
+    assert!(times.iter().all(|t| t.len() == ninst), "ragged time matrix");
+    // per-instance best across algorithms
+    let best: Vec<f64> = (0..ninst)
+        .map(|i| times.iter().map(|t| t[i]).fold(f64::INFINITY, f64::min))
+        .collect();
+    times
+        .iter()
+        .map(|t| {
+            xs.iter()
+                .map(|&x| {
+                    let y = (0..ninst)
+                        .filter(|&i| t[i] <= x * best[i].max(1e-12))
+                        .count() as f64
+                        / ninst.max(1) as f64;
+                    ProfilePoint { x, y }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Render a profile as a fixed-width ASCII sparkline-style row (used by the
+/// figure benches to print a terminal-friendly "figure").
+pub fn render_profile_ascii(points: &[ProfilePoint], width: usize) -> String {
+    // sample y at `width` evenly-spaced x positions by nearest point
+    let mut s = String::with_capacity(width);
+    if points.is_empty() {
+        return s;
+    }
+    let chars = [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    for k in 0..width {
+        let idx = k * points.len() / width;
+        let y = points[idx].y.clamp(0.0, 1.0);
+        let c = chars[((y * 8.0).round() as usize).min(8)];
+        s.push(c);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_floor_guards_zero() {
+        let g = geomean(&[0.0, 1.0]);
+        assert!(g > 0.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn speedup_profile_monotone_decreasing() {
+        let sp = vec![0.5, 1.0, 2.0, 4.0, 8.0];
+        let xs: Vec<f64> = (-2..=4).map(|i| i as f64).collect();
+        let prof = speedup_profile(&sp, &xs);
+        for w in prof.windows(2) {
+            assert!(w[1].y <= w[0].y + 1e-12);
+        }
+        // at x=0 (speedup >= 1): 4 of 5 instances
+        let at0 = prof.iter().find(|p| p.x == 0.0).unwrap();
+        assert!((at0.y - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn performance_profile_best_algo_hits_one_at_x1() {
+        // algo0 always best
+        let times = vec![vec![1.0, 1.0, 1.0], vec![2.0, 3.0, 1.5]];
+        let prof = performance_profile(&times, &[1.0, 2.0, 3.0]);
+        assert!((prof[0][0].y - 1.0).abs() < 1e-12);
+        // algo1 within 2x on instances 0 and 2 → 2/3
+        assert!((prof[1][1].y - 2.0 / 3.0).abs() < 1e-12);
+        // everyone within 3x
+        assert!((prof[1][2].y - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn performance_profile_y_monotone_in_x() {
+        let times = vec![vec![1.0, 5.0, 2.0], vec![3.0, 1.0, 4.0]];
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        for prof in performance_profile(&times, &xs) {
+            for w in prof.windows(2) {
+                assert!(w[1].y >= w[0].y - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ascii_render_has_width() {
+        let pts = vec![
+            ProfilePoint { x: 0.0, y: 0.0 },
+            ProfilePoint { x: 1.0, y: 1.0 },
+        ];
+        assert_eq!(render_profile_ascii(&pts, 16).chars().count(), 16);
+    }
+}

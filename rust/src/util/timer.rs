@@ -1,0 +1,114 @@
+//! Wall-clock timing helpers used by the bench harness and the coordinator
+//! metrics. Thin wrappers over `std::time::Instant` with convenience
+//! accumulation, because `criterion` is unavailable offline.
+
+use std::time::{Duration, Instant};
+
+/// One-shot stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulating timer for repeatedly-entered code regions (e.g. "time spent
+/// in BFS kernels across the whole run").
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Accum {
+    total: Duration,
+    count: u64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and add the elapsed duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.total += t.elapsed();
+        self.count += 1;
+        out
+    }
+
+    pub fn add(&mut self, d: Duration) {
+        self.total += d;
+        self.count += 1;
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_secs() / self.count as f64
+        }
+    }
+}
+
+/// Run `f` and return (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_secs();
+        let b = t.elapsed_secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn accum_counts() {
+        let mut a = Accum::new();
+        let mut x = 0u64;
+        for i in 0..5 {
+            x += a.time(|| i);
+        }
+        assert_eq!(x, 10);
+        assert_eq!(a.count(), 5);
+        assert!(a.total_secs() >= 0.0);
+        assert!(a.mean_secs() <= a.total_secs() + 1e-12);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

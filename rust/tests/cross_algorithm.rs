@@ -1,0 +1,100 @@
+//! Cross-algorithm integration: every registered (non-XLA) matcher must
+//! produce a certified maximum matching of identical cardinality on every
+//! generator family, original and RCP-permuted, from every init heuristic.
+
+use bimatch::coordinator::registry;
+use bimatch::graph::gen::Family;
+use bimatch::graph::random_permute;
+use bimatch::matching::init::InitHeuristic;
+use bimatch::matching::{reference_max_cardinality, Matching};
+
+fn non_xla_names() -> Vec<String> {
+    registry::all_names()
+        .into_iter()
+        .filter(|n| !n.starts_with("xla:"))
+        .collect()
+}
+
+#[test]
+fn all_algorithms_agree_on_all_families() {
+    for family in Family::ALL {
+        let g = family.generate(700, 33);
+        let want = reference_max_cardinality(&g);
+        let init = InitHeuristic::Cheap.run(&g);
+        for name in non_xla_names() {
+            let algo = registry::build(&name, None).unwrap();
+            let r = algo.run(&g, init.clone());
+            r.matching
+                .certify(&g)
+                .unwrap_or_else(|e| panic!("{name} on {}: {e}", family.name()));
+            assert_eq!(
+                r.matching.cardinality(),
+                want,
+                "{name} on {}",
+                family.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_algorithms_agree_on_permuted_instances() {
+    for family in [Family::Banded, Family::Kron, Family::Road] {
+        let g = random_permute(&family.generate(600, 5), 99);
+        let want = reference_max_cardinality(&g);
+        for name in non_xla_names() {
+            let algo = registry::build(&name, None).unwrap();
+            let r = algo.run(&g, Matching::empty(g.nr, g.nc));
+            r.matching.certify(&g).unwrap();
+            assert_eq!(r.matching.cardinality(), want, "{name} on {} rcp", family.name());
+        }
+    }
+}
+
+#[test]
+fn init_heuristics_never_change_the_answer() {
+    let g = Family::Social.generate(900, 8);
+    let want = reference_max_cardinality(&g);
+    for init in [InitHeuristic::None, InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
+        for name in ["hk", "pfp", "pr", "gpu:APFB-GPUBFS-WR-CT", "p-dbfs"] {
+            let algo = registry::build(name, None).unwrap();
+            let r = algo.run(&g, init.run(&g));
+            r.matching.certify(&g).unwrap();
+            assert_eq!(r.matching.cardinality(), want, "{name} from {}", init.name());
+        }
+    }
+}
+
+#[test]
+fn rectangular_and_degenerate_graphs() {
+    use bimatch::graph::gen::random::uniform_random;
+    let cases = [
+        uniform_random(50, 500, 2.0, 1),   // wide
+        uniform_random(500, 50, 10.0, 2),  // tall
+        uniform_random(1, 1, 1.0, 3),      // tiny
+        bimatch::graph::from_edges(10, 10, &[]), // empty
+    ];
+    for (i, g) in cases.iter().enumerate() {
+        let want = reference_max_cardinality(g);
+        for name in non_xla_names() {
+            let algo = registry::build(&name, None).unwrap();
+            let r = algo.run(g, Matching::empty(g.nr, g.nc));
+            r.matching.certify(g).unwrap_or_else(|e| panic!("{name} case {i}: {e}"));
+            assert_eq!(r.matching.cardinality(), want, "{name} case {i}");
+        }
+    }
+}
+
+#[test]
+fn permutation_invariance_of_cardinality() {
+    // the matching cardinality is a graph invariant; every algorithm must
+    // report the same value before and after RCP
+    let g = Family::Amazon.generate(800, 4);
+    let p = random_permute(&g, 1234);
+    for name in ["hk", "gpu:APFB-GPUBFS-WR-CT", "p-pfp"] {
+        let algo = registry::build(name, None).unwrap();
+        let a = algo.run(&g, Matching::empty(g.nr, g.nc)).matching.cardinality();
+        let b = algo.run(&p, Matching::empty(p.nr, p.nc)).matching.cardinality();
+        assert_eq!(a, b, "{name}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Coordinator integration: service batches, routing behaviour, failure
+//! injection, and the TCP server against a live socket.
+
+use bimatch::coordinator::job::{AlgoChoice, GraphSource, MatchJob};
+use bimatch::coordinator::{Server, Service};
+use bimatch::graph::gen::Family;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn gen_job(id: u64, family: Family, n: usize, permute: bool) -> MatchJob {
+    MatchJob::new(id, GraphSource::Generate { family, n, seed: id + 1, permute })
+}
+
+#[test]
+fn service_runs_mixed_trace_certified() {
+    let svc = Service::start(2, 8, None);
+    let mut jobs = Vec::new();
+    for (i, family) in Family::ALL.iter().enumerate() {
+        jobs.push(gen_job(i as u64, *family, 600, i % 2 == 0));
+    }
+    let (outcomes, metrics) = svc.run_batch(jobs);
+    assert_eq!(outcomes.len(), Family::ALL.len());
+    for o in &outcomes {
+        assert!(o.error.is_none(), "{:?}", o.error);
+        assert!(o.certified);
+        assert!(o.cardinality >= o.init_cardinality);
+    }
+    assert_eq!(metrics.completed(), Family::ALL.len() as u64);
+    assert_eq!(metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn router_sends_banded_to_pfp_and_permuted_to_gpu() {
+    let svc = Service::start(1, 4, None);
+    let jobs = vec![
+        gen_job(0, Family::Banded, 9_000, false),
+        gen_job(1, Family::Banded, 9_000, true),
+    ];
+    let (outcomes, _) = svc.run_batch(jobs);
+    assert_eq!(outcomes[0].algo, "pfp", "banded original should route to pfp");
+    assert_eq!(
+        outcomes[1].algo, "gpu:APFB-GPUBFS-WR-CT",
+        "banded RCP should route to the GPU algorithm"
+    );
+}
+
+#[test]
+fn failure_injection_bad_algo_and_missing_file() {
+    let svc = Service::start(2, 4, None);
+    let mut bad_algo = gen_job(0, Family::Uniform, 200, false);
+    bad_algo.algo = AlgoChoice::Named("no-such-algo".into());
+    let missing = MatchJob::new(1, GraphSource::MtxFile("/nope.mtx".into()));
+    let good = gen_job(2, Family::Uniform, 200, false);
+    let (outcomes, metrics) = svc.run_batch(vec![bad_algo, missing, good]);
+    assert!(outcomes[0].error.is_some());
+    assert!(outcomes[1].error.is_some());
+    assert!(outcomes[2].error.is_none() && outcomes[2].certified);
+    assert_eq!(metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed), 2);
+}
+
+#[test]
+fn tcp_server_full_session() {
+    let server = Server::bind("127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.serve());
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    let reqs = [
+        "ALGOS",
+        "MATCH family=uniform n=400 seed=1 algo=hk init=ks",
+        "MATCH family=delaunay n=400 seed=2 permute=1",
+        "STATS",
+    ];
+    for r in reqs {
+        s.write_all(r.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+    }
+    let reader = BufReader::new(s.try_clone().unwrap());
+    let lines: Vec<String> = reader.lines().take(4).map(|l| l.unwrap()).collect();
+    assert!(lines[0].starts_with("ALGOS ") && lines[0].contains("p-dbfs"));
+    assert!(lines[1].starts_with("OK ") && lines[1].contains("algo=hk"));
+    assert!(lines[2].starts_with("OK ") && lines[2].contains("certified=1"));
+    assert!(lines[3].starts_with("STATS ") && lines[3].contains("completed=2"));
+    s.write_all(b"QUIT\n").unwrap();
+}
+
+#[test]
+fn concurrent_tcp_clients() {
+    let server = Server::bind("127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.serve());
+    std::thread::scope(|scope| {
+        for i in 0..4 {
+            scope.spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let req = format!("MATCH family=uniform n=300 seed={i} algo=bfs\n");
+                s.write_all(req.as_bytes()).unwrap();
+                let mut line = String::new();
+                BufReader::new(s).read_line(&mut line).unwrap();
+                assert!(line.starts_with("OK "), "{line}");
+            });
+        }
+    });
+}

@@ -1,0 +1,124 @@
+//! Rust↔XLA round-trip integration: load the AOT artifacts through the
+//! PJRT engine and verify the L1/L2 programs agree with the native Rust
+//! algorithms. Requires `make artifacts` (tests self-skip with a clear
+//! message when artifacts are absent — CI runs them after the Makefile
+//! target).
+
+use bimatch::gpu::xla_backend::{XlaApfbMatcher, XlaHybridMatcher};
+use bimatch::graph::gen::Family;
+use bimatch::matching::init::InitHeuristic;
+use bimatch::matching::{reference_max_cardinality, Matching};
+use bimatch::runtime::{ArtifactKind, Engine};
+use bimatch::MatchingAlgorithm;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    match Engine::open_default() {
+        Ok(e) => Some(Arc::new(e)),
+        Err(err) => {
+            eprintln!("SKIP (run `make artifacts`): {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_both_kinds_per_bucket() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest();
+    assert!(!m.buckets().is_empty());
+    for (nc, nr, k) in m.buckets() {
+        assert!(m.find_bucket(ArtifactKind::BfsLevel, nc, nr, k).is_some());
+        assert!(m.find_bucket(ArtifactKind::ApfbFull, nc, nr, k).is_some());
+    }
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let Some(engine) = engine() else { return };
+    let names: Vec<String> = engine.manifest().artifacts.iter().map(|a| a.name.clone()).collect();
+    for name in names {
+        let exe = engine.load(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(exe.meta.name, name);
+    }
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let Some(engine) = engine() else { return };
+    let name = &engine.manifest().artifacts[0].name.clone();
+    let a = engine.load(name).unwrap();
+    let b = engine.load(name).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
+}
+
+#[test]
+fn xla_apfb_matches_reference_on_families() {
+    let Some(engine) = engine() else { return };
+    let matcher = XlaApfbMatcher::new(engine);
+    for family in [Family::Uniform, Family::Road, Family::Banded] {
+        let g = family.generate(900, 21);
+        if g.nc > 1024 || g.nr > 1024 || g.max_col_degree() > 8 {
+            // uniform/road/banded at n=900 fit the small bucket; guard
+            // against generator drift
+            continue;
+        }
+        let init = InitHeuristic::Cheap.run(&g);
+        let r = matcher.try_run(&g, &init).unwrap();
+        r.matching.certify(&g).unwrap_or_else(|e| panic!("{}: {e}", family.name()));
+        assert_eq!(
+            r.matching.cardinality(),
+            reference_max_cardinality(&g),
+            "{}",
+            family.name()
+        );
+        assert!(r.stats.phases >= 1);
+    }
+}
+
+#[test]
+fn xla_apfb_from_empty_init() {
+    let Some(engine) = engine() else { return };
+    let matcher = XlaApfbMatcher::new(engine);
+    let g = Family::Uniform.generate(800, 5);
+    let r = matcher.try_run(&g, &Matching::empty(g.nr, g.nc)).unwrap();
+    r.matching.certify(&g).unwrap();
+    assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
+}
+
+#[test]
+fn xla_hybrid_matches_native() {
+    let Some(engine) = engine() else { return };
+    let hybrid = XlaHybridMatcher::new(engine);
+    let g = Family::Uniform.generate(700, 13);
+    let init = InitHeuristic::Cheap.run(&g);
+    let r = hybrid.try_run(&g, &init).unwrap();
+    r.matching.certify(&g).unwrap();
+    assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
+    assert!(r.stats.bfs_kernel_launches >= r.stats.phases);
+}
+
+#[test]
+fn oversized_graph_rejected_cleanly() {
+    let Some(engine) = engine() else { return };
+    let matcher = XlaApfbMatcher::new(engine);
+    // 9000 > the biggest default bucket (4096)
+    let g = Family::Uniform.generate(9000, 1);
+    let err = matcher.try_run(&g, &Matching::empty(g.nr, g.nc));
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("artifact"), "{msg}");
+}
+
+#[test]
+fn registry_builds_xla_matchers_with_engine() {
+    let Some(engine) = engine() else { return };
+    let g = Family::Uniform.generate(600, 7);
+    let init = InitHeuristic::Cheap.run(&g);
+    for name in ["xla:apfb-full", "xla:bfs-level-hybrid"] {
+        let algo = bimatch::coordinator::registry::build(name, Some(engine.clone())).unwrap();
+        let r = algo.run(&g, init.clone());
+        r.matching.certify(&g).unwrap();
+        assert_eq!(r.stats.fallbacks, 0, "{name} must not fall back with artifacts present");
+    }
+}
