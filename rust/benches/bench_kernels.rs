@@ -33,7 +33,7 @@ fn main() {
     let n = if e.scale.name() == "large" { 40_000 } else { 10_000 };
     let g = Family::Kron.generate(n, 5);
     let init = InitHeuristic::Cheap.run(&g);
-    let cfg = LaunchCfg { mapping: ThreadMapping::Ct, order: WriteOrder::Forward, seed: 0 };
+    let cfg = LaunchCfg { mapping: ThreadMapping::Ct, order: WriteOrder::Forward, ..LaunchCfg::default() };
     let mut t = Table::new(vec!["kernel", "best secs", "per edge ns"]);
     let edges = g.n_edges() as f64;
 

@@ -16,6 +16,8 @@ bimatch — GPU-accelerated maximum cardinality bipartite matching (Deveci et al
 USAGE:
   bimatch run   (--family <name> --n <int> [--seed <int>] [--permute] | --mtx <path>)
                 [--algo <name>|auto] [--init none|cheap|ks] [--no-certify]
+                [--frontier fullscan|compacted]   (gpu:* algos; compacted =
+                worklist-driven BFS sweeps, the \"-FC\" registry variants)
   bimatch gen    --family <name> --n <int> [--seed <int>] [--permute] --out <path.mtx>
   bimatch verify --mtx <path>          cross-check several algorithms on a file
   bimatch serve  [--addr <ip:port>]    TCP line-protocol matching service
@@ -24,7 +26,9 @@ USAGE:
   bimatch artifacts-check              compile every artifact on the PJRT client
   bimatch help
 
-Generator families: road delaunay hugetrace rgg kron social amazon web banded uniform";
+Generator families: road delaunay hugetrace rgg kron social amazon web banded uniform
+Env: BIMATCH_THREADS (host pool size), BIMATCH_DEVICE_PAR (host threads for the
+GPU simulator's disjoint kernels), BIMATCH_SCALE=small|large (bench catalog)";
 
 /// Parse `--key value` / `--flag` style arguments.
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
@@ -120,10 +124,43 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         }
     };
     let mut job = MatchJob::new(0, source);
-    if let Some(algo) = flags.get("algo") {
-        if algo != "auto" {
-            job = job.with_algo(algo);
+    let mut algo_choice = flags.get("algo").filter(|a| a.as_str() != "auto").cloned();
+    if let Some(mode) = flags.get("frontier") {
+        use crate::gpu::FrontierMode;
+        let Some(fm) = FrontierMode::from_name(mode) else {
+            eprintln!("unknown --frontier {mode} (fullscan|compacted)");
+            return 2;
+        };
+        match algo_choice.take() {
+            // no --algo: auto-routing already picks FullScan names, so
+            // only Compacted needs to pin an algorithm (the paper's best
+            // variant's "-FC" twin)
+            None => {
+                if fm == FrontierMode::Compacted {
+                    algo_choice =
+                        Some(format!("gpu:{}", crate::gpu::GpuConfig::default().compacted().name()));
+                }
+            }
+            // explicit algo: normalize its "-FC" suffix to the requested
+            // mode (either direction); "gpu" is the registry's alias for
+            // the default GPU matcher
+            Some(algo) => {
+                if algo != "gpu" && !algo.starts_with("gpu:") {
+                    eprintln!("--frontier applies to gpu:* algorithms, not {algo}");
+                    return 2;
+                }
+                let default_gpu = format!("gpu:{}", crate::gpu::GpuConfig::default().name());
+                let base = if algo == "gpu" { default_gpu.as_str() } else { algo.as_str() };
+                let stripped = base.strip_suffix("-FC").unwrap_or(base);
+                algo_choice = Some(match fm {
+                    FrontierMode::Compacted => format!("{stripped}-FC"),
+                    FrontierMode::FullScan => stripped.to_string(),
+                });
+            }
         }
+    }
+    if let Some(algo) = algo_choice {
+        job = job.with_algo(&algo);
     }
     if let Some(init) = flags.get("init") {
         match InitHeuristic::from_name(init) {
@@ -302,6 +339,77 @@ mod tests {
     #[test]
     fn run_command_bad_family() {
         assert_eq!(cmd_run(&flags(&[("family", "bogus"), ("n", "10")])), 2);
+    }
+
+    #[test]
+    fn run_command_frontier_compacted() {
+        // default algo rewritten to the -FC twin and executed end-to-end
+        let code = cmd_run(&flags(&[
+            ("family", "banded"),
+            ("n", "400"),
+            ("frontier", "compacted"),
+        ]));
+        assert_eq!(code, 0);
+        // explicit gpu algo picks up the suffix too
+        let code = cmd_run(&flags(&[
+            ("family", "uniform"),
+            ("n", "300"),
+            ("algo", "gpu:APsB-GPUBFS-CT"),
+            ("frontier", "compacted"),
+        ]));
+        assert_eq!(code, 0);
+        // the "gpu" registry alias works with --frontier
+        let code = cmd_run(&flags(&[
+            ("family", "uniform"),
+            ("n", "300"),
+            ("algo", "gpu"),
+            ("frontier", "compacted"),
+        ]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn run_command_frontier_fullscan_keeps_auto_routing() {
+        // fullscan with no --algo must stay auto-routed, not pin a variant
+        let code = cmd_run(&flags(&[
+            ("family", "uniform"),
+            ("n", "300"),
+            ("frontier", "fullscan"),
+        ]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn run_command_frontier_rejects_bad_inputs() {
+        assert_eq!(
+            cmd_run(&flags(&[("family", "uniform"), ("n", "100"), ("frontier", "warp")])),
+            2
+        );
+        // --frontier (either mode) only makes sense for gpu:* algorithms
+        for mode in ["compacted", "fullscan"] {
+            assert_eq!(
+                cmd_run(&flags(&[
+                    ("family", "uniform"),
+                    ("n", "100"),
+                    ("algo", "hk"),
+                    ("frontier", mode),
+                ])),
+                2
+            );
+        }
+    }
+
+    #[test]
+    fn run_command_frontier_fullscan_strips_fc_suffix() {
+        // explicit fullscan overrides an -FC algo name instead of being a
+        // silent no-op
+        let code = cmd_run(&flags(&[
+            ("family", "uniform"),
+            ("n", "300"),
+            ("algo", "gpu:APFB-GPUBFS-WR-CT-FC"),
+            ("frontier", "fullscan"),
+        ]));
+        assert_eq!(code, 0);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Name → algorithm registry: every matcher in the library (sequential,
-//! multicore, the 8 GPU variants, XLA-backed) constructible from its
-//! stable string name. The CLI, router, server protocol, and bench harness
-//! all resolve algorithms through here.
+//! multicore, the 8 GPU variants plus their frontier-compacted "-FC"
+//! twins, XLA-backed) constructible from its stable string name. The CLI,
+//! router, server protocol, and bench harness all resolve algorithms
+//! through here.
 
 use crate::gpu::{GpuConfig, GpuMatcher};
 use crate::matching::algo::MatchingAlgorithm;
@@ -26,7 +27,8 @@ pub fn all_names() -> Vec<String> {
         "xla:apfb-full".into(),
         "xla:bfs-level-hybrid".into(),
     ];
-    for cfg in GpuConfig::all_variants() {
+    // the eight paper variants plus their frontier-compacted "-FC" twins
+    for cfg in GpuConfig::all_variants_with_frontier() {
         names.push(format!("gpu:{}", cfg.name()));
     }
     names
@@ -86,6 +88,16 @@ mod tests {
     fn unknown_names_rejected() {
         assert!(build("nope", None).is_none());
         assert!(build("gpu:NOPE", None).is_none());
+        assert!(build("gpu:NOPE-FC", None).is_none());
+    }
+
+    #[test]
+    fn frontier_variants_registered_and_buildable() {
+        let names = all_names();
+        assert!(names.iter().any(|n| n == "gpu:APFB-GPUBFS-WR-CT-FC"));
+        assert_eq!(names.iter().filter(|n| n.starts_with("gpu:")).count(), 16);
+        let a = build("gpu:APFB-GPUBFS-WR-CT-FC", None).unwrap();
+        assert_eq!(a.name(), "gpu:APFB-GPUBFS-WR-CT-FC");
     }
 
     #[test]

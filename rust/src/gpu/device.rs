@@ -14,6 +14,17 @@
 //! edges·EDGE_COST)`. The warp-max term models SIMD divergence; the
 //! per-thread setup term is what makes CT (few threads, many items each)
 //! cheaper than MT (one item per thread) exactly as the paper observes.
+//!
+//! *Execution modes.* Three launch executors share that cost model:
+//! * [`launch`] — the paper's full-scan sweep over all `n` items;
+//! * [`launch_frontier`] — frontier-compacted sweep over an explicit
+//!   worklist, charged `FRONTIER_ITEM_COST` per live item plus
+//!   `COMPACTION_COST` per next-frontier append (the body reports those),
+//!   so late sparse BFS levels stop paying the `O(nc)` scan floor;
+//! * [`launch_parallel`] — host-parallel execution of per-item-disjoint
+//!   kernels (INITBFSARRAY/FIXMATCHING); modeled cycles are charged
+//!   exactly as the serial [`launch`] would, so the figures stay
+//!   deterministic while wall-clock drops with host threads.
 
 use super::config::{ThreadMapping, WriteOrder, WARP_SIZE};
 use crate::util::rng::Xoshiro256;
@@ -40,6 +51,14 @@ pub const WARP_COST: u64 = 16;
 pub const THREAD_SETUP: u64 = 4;
 pub const ITEM_COST: u64 = 2;
 pub const EDGE_COST: u64 = 1;
+/// Per-item charge of a frontier-compacted launch ([`launch_frontier`]):
+/// one worklist read + the level-check the full scan also pays. Kept equal
+/// to [`ITEM_COST`] so FullScan vs Compacted figures differ only by how
+/// *many* items each launch touches, never by a per-item fudge factor.
+pub const FRONTIER_ITEM_COST: u64 = 2;
+/// Charge per element appended to the next frontier: the atomic queue-tail
+/// increment + coalesced store a real compaction kernel pays.
+pub const COMPACTION_COST: u64 = 1;
 /// concurrent warp slots the parallel model assumes (14 SMs × 4 effective)
 pub const PARALLEL_WARPS: u64 = 56;
 
@@ -144,6 +163,134 @@ pub fn launch<F>(
         }
     }
     clock.charge_warp_work(warp_sum, max_warp);
+}
+
+/// One frontier-compacted kernel launch: visit exactly the columns in
+/// `items` (the current BFS frontier) in warp order, calling
+/// `body(column) -> extra_work_units`, and charge the cost model
+/// `FRONTIER_ITEM_COST` per item plus whatever the body reports (edge
+/// scans weighted by [`EDGE_COST`], next-frontier appends weighted by
+/// [`COMPACTION_COST`] — the body does the weighting so this executor
+/// stays kernel-agnostic). Per-launch cost is `O(|items| + work(items))`
+/// instead of [`launch`]'s `O(nc)` floor — the whole point of
+/// [`super::config::FrontierMode::Compacted`].
+pub fn launch_frontier<F>(
+    clock: &mut DeviceClock,
+    mapping: ThreadMapping,
+    order: WriteOrder,
+    seed: u64,
+    items: &[u32],
+    mut body: F,
+) where
+    F: FnMut(usize) -> u64,
+{
+    clock.charge_launch();
+    let n = items.len();
+    let total = mapping.total_threads(n);
+    let n_warps = total.min(n.max(1)).div_ceil(WARP_SIZE);
+    let mut shuffled: Vec<usize> = Vec::new();
+    if order == WriteOrder::Shuffled {
+        shuffled = (0..n_warps).collect();
+        Xoshiro256::new(seed ^ clock.launches).shuffle(&mut shuffled);
+    }
+    let warp_at = |i: usize, shuffled: &[usize]| -> usize {
+        match order {
+            WriteOrder::Forward => i,
+            WriteOrder::Reverse => n_warps - 1 - i,
+            WriteOrder::Shuffled => shuffled[i],
+        }
+    };
+    let mut warp_sum = 0u64;
+    let mut max_warp = 0u64;
+    for i in 0..n_warps {
+        let w = warp_at(i, &shuffled);
+        let mut warp_max: u64 = 0;
+        let mut warp_active = false;
+        for lane in 0..WARP_SIZE {
+            let tid = w * WARP_SIZE + lane;
+            if tid >= total {
+                break;
+            }
+            let mut lane_work: u64 = 0;
+            let mut any = false;
+            for idx in thread_items(tid, total, n) {
+                any = true;
+                let work = body(items[idx] as usize);
+                lane_work += FRONTIER_ITEM_COST + work;
+            }
+            if any {
+                lane_work += THREAD_SETUP;
+                warp_active = true;
+            }
+            warp_max = warp_max.max(lane_work);
+        }
+        if warp_active {
+            let cost = WARP_COST + warp_max;
+            warp_sum += cost;
+            max_warp = max_warp.max(cost);
+        }
+    }
+    clock.charge_warp_work(warp_sum, max_warp);
+}
+
+/// Exact cost [`launch`] charges for a zero-edge body over `n` items —
+/// order-independent, so [`launch_parallel`] can charge it without
+/// serializing.
+fn warp_cost_uniform(total: usize, n: usize) -> (u64, u64) {
+    let n_warps = total.min(n.max(1)).div_ceil(WARP_SIZE);
+    let mut warp_sum = 0u64;
+    let mut max_warp = 0u64;
+    for w in 0..n_warps {
+        let mut warp_max: u64 = 0;
+        let mut warp_active = false;
+        for lane in 0..WARP_SIZE {
+            let tid = w * WARP_SIZE + lane;
+            if tid >= total {
+                break;
+            }
+            // strided assignment: items tid, tid+total, ... below n
+            let count = if tid < n { ((n - tid - 1) / total + 1) as u64 } else { 0 };
+            let mut lane_work = count * ITEM_COST;
+            if count > 0 {
+                lane_work += THREAD_SETUP;
+                warp_active = true;
+            }
+            warp_max = warp_max.max(lane_work);
+        }
+        if warp_active {
+            let cost = WARP_COST + warp_max;
+            warp_sum += cost;
+            max_warp = max_warp.max(cost);
+        }
+    }
+    (warp_sum, max_warp)
+}
+
+/// Parallel host execution of a *per-item-disjoint* kernel (INITBFSARRAY,
+/// FIXMATCHING): `body(item)` runs on `nthreads` host threads via the
+/// scoped pool, while the device clock is charged exactly what the serial
+/// [`launch`] would charge for a zero-edge body — modeled cycles stay
+/// deterministic and independent of host parallelism; only wall-clock
+/// changes. The caller guarantees `body` writes disjoint indices (use
+/// [`crate::util::pool::SharedSlice`]); write order is immaterial for such
+/// kernels, which is why no [`WriteOrder`] parameter exists here.
+pub fn launch_parallel<F>(
+    clock: &mut DeviceClock,
+    mapping: ThreadMapping,
+    n: usize,
+    nthreads: usize,
+    body: F,
+) where
+    F: Fn(usize) + Sync,
+{
+    clock.charge_launch();
+    let (warp_sum, max_warp) = warp_cost_uniform(mapping.total_threads(n), n);
+    clock.charge_warp_work(warp_sum, max_warp);
+    crate::util::pool::parallel_chunks(nthreads.max(1), n, |range| {
+        for i in range {
+            body(i);
+        }
+    });
 }
 
 /// Lockstep executor for ALTERNATE: all lanes of a warp perform a *read*
@@ -310,6 +457,91 @@ mod tests {
         let mut r = rev_order.clone();
         r.sort_unstable();
         assert_eq!(r, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn launch_frontier_visits_exactly_the_items() {
+        for mapping in [ThreadMapping::Ct, ThreadMapping::Mt] {
+            for order in [WriteOrder::Forward, WriteOrder::Reverse, WriteOrder::Shuffled] {
+                let items: Vec<u32> = vec![5, 1, 9, 42, 7];
+                let mut clock = DeviceClock::default();
+                let mut seen = vec![0u32; 64];
+                launch_frontier(&mut clock, mapping, order, 3, &items, |c| {
+                    seen[c] += 1;
+                    1
+                });
+                for (c, &count) in seen.iter().enumerate() {
+                    let expect = u32::from(items.contains(&(c as u32)));
+                    assert_eq!(count, expect, "{mapping:?} {order:?} col {c}");
+                }
+                assert_eq!(clock.launches, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn launch_frontier_empty_is_cheap_and_safe() {
+        let mut clock = DeviceClock::default();
+        launch_frontier(&mut clock, ThreadMapping::Ct, WriteOrder::Forward, 0, &[], |_| {
+            panic!("empty frontier must not invoke the body")
+        });
+        assert_eq!(clock.cycles, LAUNCH_OVERHEAD);
+    }
+
+    #[test]
+    fn sparse_frontier_launch_beats_full_scan() {
+        // 100k columns, 64 live: the full scan pays ITEM_COST for every
+        // column; the compacted launch only touches the worklist.
+        let n = 100_000;
+        let live: Vec<u32> = (0..64u32).map(|i| i * 1000).collect();
+        let is_live = |c: usize| c % 1000 == 0 && c < 64_000;
+        let mut full = DeviceClock::default();
+        launch(&mut full, ThreadMapping::Ct, WriteOrder::Forward, 0, n, |c| {
+            if is_live(c) {
+                3
+            } else {
+                0
+            }
+        });
+        let mut fc = DeviceClock::default();
+        launch_frontier(&mut fc, ThreadMapping::Ct, WriteOrder::Forward, 0, &live, |c| {
+            assert!(is_live(c));
+            3 * EDGE_COST + COMPACTION_COST
+        });
+        assert!(
+            fc.cycles * 10 < full.cycles,
+            "compacted {} should be well under full {}",
+            fc.cycles,
+            full.cycles
+        );
+    }
+
+    #[test]
+    fn launch_parallel_matches_serial_cost_and_effect() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        for mapping in [ThreadMapping::Ct, ThreadMapping::Mt] {
+            for n in [0usize, 1, 33, 1000, 70_000] {
+                let mut serial = DeviceClock::default();
+                let mut seen = vec![0u32; n];
+                launch(&mut serial, mapping, WriteOrder::Forward, 0, n, |i| {
+                    seen[i] += 1;
+                    0
+                });
+                for nthreads in [1usize, 4] {
+                    let mut par = DeviceClock::default();
+                    let pseen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+                    launch_parallel(&mut par, mapping, n, nthreads, |i| {
+                        pseen[i].fetch_add(1, Ordering::Relaxed);
+                    });
+                    assert_eq!(
+                        par.cycles, serial.cycles,
+                        "{mapping:?} n={n} t={nthreads}: modeled cycles must not depend on host threads"
+                    );
+                    assert_eq!(par.parallel_cycles, serial.parallel_cycles);
+                    assert!(pseen.iter().all(|a| a.load(Ordering::Relaxed) == 1) || n == 0);
+                }
+            }
+        }
     }
 
     #[test]

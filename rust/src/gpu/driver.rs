@@ -1,12 +1,26 @@
 //! The outer driver loops (paper Algorithm 1 and its APFB variant) tying
 //! the kernels together, exposed through the common
 //! [`MatchingAlgorithm`] interface as [`GpuMatcher`].
+//!
+//! Two execution-mode knobs ride on top of the paper's eight variants:
+//! * [`FrontierMode::Compacted`] swaps the full-`nc` BFS sweeps for
+//!   worklist-driven ones (`gpubfs_frontier`/`gpubfs_wr_frontier`); the
+//!   driver owns the frontier lifecycle — built by
+//!   `init_bfs_array_frontier` each phase, consumed/produced per level,
+//!   discarded on the APsB early break. `RunStats::frontier_peak` /
+//!   `frontier_total` record what the worklist saved.
+//! * `GpuConfig::device_parallelism` executes the per-item-disjoint
+//!   kernels on host threads (same results, same modeled cycles).
+//!
+//! The matching cardinality is maintained incrementally (seeded from the
+//! initial matching, updated from FIXMATCHING's piggybacked count and the
+//! safety net) instead of the former two `O(nc)` scans per phase.
 
-use super::config::{ApDriver, BfsKernel, GpuConfig};
+use super::config::{ApDriver, BfsKernel, FrontierMode, GpuConfig};
 use super::device::DeviceClock;
 use super::kernels::{
-    alternate, fixmatching, gpubfs, gpubfs_wr, init_bfs_array, wr_chosen_endpoints, GpuState,
-    LaunchCfg, L0,
+    alternate, fixmatching, gpubfs, gpubfs_frontier, gpubfs_wr, gpubfs_wr_frontier,
+    init_bfs_array, init_bfs_array_frontier, wr_chosen_endpoints, GpuState, LaunchCfg, L0,
 };
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
@@ -29,28 +43,67 @@ impl GpuMatcher {
             mapping: self.config.mapping,
             order: self.config.write_order,
             seed: self.config.seed,
+            par_threads: self.config.effective_device_parallelism(),
         };
         let with_root = self.config.kernel == BfsKernel::GpuBfsWr;
         // the APsB-GPUBFS-WR improvement (endpoint encoding + restricted
         // ALTERNATE) — the paper enables it only for that combination
         let improved_wr = with_root && self.config.driver == ApDriver::Apsb;
+        let compacted = self.config.frontier == FrontierMode::Compacted;
 
         let mut state = GpuState::new(g, &init);
         let mut clock = DeviceClock::default();
         let mut stats = RunStats::default();
+        // Incrementally maintained |M|: seeded once from the initial
+        // matching, then updated from FIXMATCHING's piggybacked count and
+        // the safety net — no per-phase O(nc) scans.
+        let mut cardinality = init.cardinality();
+        let mut frontier: Vec<u32> = Vec::new();
+        let mut next_frontier: Vec<u32> = Vec::new();
 
         loop {
             // ---- one phase: combined BFS over all unmatched columns ----
-            init_bfs_array(&mut state, cfg, with_root, &mut clock);
+            if compacted {
+                init_bfs_array_frontier(&mut state, cfg, with_root, &mut frontier, &mut clock);
+            } else {
+                init_bfs_array(&mut state, cfg, with_root, &mut clock);
+            }
             state.augmenting_path_found = false;
             let mut bfs_level = L0;
             let mut launches = 0u32;
             loop {
                 state.vertex_inserted = false;
-                let scanned = match self.config.kernel {
-                    BfsKernel::GpuBfs => gpubfs(g, &mut state, bfs_level, cfg, &mut clock),
-                    BfsKernel::GpuBfsWr => {
-                        gpubfs_wr(g, &mut state, bfs_level, cfg, improved_wr, &mut clock)
+                let scanned = if compacted {
+                    stats.frontier_total += frontier.len() as u64;
+                    stats.frontier_peak = stats.frontier_peak.max(frontier.len() as u64);
+                    next_frontier.clear();
+                    match self.config.kernel {
+                        BfsKernel::GpuBfs => gpubfs_frontier(
+                            g,
+                            &mut state,
+                            bfs_level,
+                            &frontier,
+                            &mut next_frontier,
+                            cfg,
+                            &mut clock,
+                        ),
+                        BfsKernel::GpuBfsWr => gpubfs_wr_frontier(
+                            g,
+                            &mut state,
+                            bfs_level,
+                            &frontier,
+                            &mut next_frontier,
+                            cfg,
+                            improved_wr,
+                            &mut clock,
+                        ),
+                    }
+                } else {
+                    match self.config.kernel {
+                        BfsKernel::GpuBfs => gpubfs(g, &mut state, bfs_level, cfg, &mut clock),
+                        BfsKernel::GpuBfsWr => {
+                            gpubfs_wr(g, &mut state, bfs_level, cfg, improved_wr, &mut clock)
+                        }
                     }
                 };
                 stats.edges_scanned += scanned;
@@ -63,6 +116,9 @@ impl GpuMatcher {
                 if !state.vertex_inserted {
                     break;
                 }
+                if compacted {
+                    std::mem::swap(&mut frontier, &mut next_frontier);
+                }
                 bfs_level += 1;
             }
             stats.record_phase(launches);
@@ -71,15 +127,18 @@ impl GpuMatcher {
             }
 
             // ---- speculative augmentation + repair ----
-            let before = state.cardinality();
+            let before = cardinality;
             if improved_wr {
                 let chosen = wr_chosen_endpoints(&state);
                 alternate(&mut state, cfg, Some(chosen), &mut clock);
             } else {
                 alternate(&mut state, cfg, None, &mut clock);
             }
-            stats.fixes += fixmatching(&mut state, cfg, &mut clock);
-            let after = state.cardinality();
+            let (fixes, after) = fixmatching(&mut state, cfg, &mut clock);
+            stats.fixes += fixes;
+            let after = after as usize;
+            debug_assert_eq!(after, state.cardinality(), "incremental |M| diverged");
+            cardinality = after;
             stats.augmentations += after.saturating_sub(before) as u64;
 
             // Safety net (not in the paper, which relies on favorable
@@ -90,6 +149,7 @@ impl GpuMatcher {
                 if augment_one_sequential(g, &mut state) {
                     stats.fallbacks += 1;
                     stats.augmentations += 1;
+                    cardinality += 1;
                 } else {
                     break; // no augmenting path actually remains
                 }
@@ -273,6 +333,102 @@ mod tests {
         let max_apsb = apsb.stats.launches_per_phase.iter().max().copied().unwrap_or(0);
         let max_apfb = apfb.stats.launches_per_phase.iter().max().copied().unwrap_or(0);
         assert!(max_apsb <= max_apfb);
+    }
+
+    #[test]
+    fn prop_frontier_modes_reach_reference_cardinality() {
+        // FullScan and Compacted must agree (with the reference oracle) on
+        // random bipartite graphs, for both drivers and both kernels.
+        forall(Config::cases(10), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            let want = reference_max_cardinality(&g);
+            for driver in [ApDriver::Apfb, ApDriver::Apsb] {
+                for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
+                    for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
+                        let cfg = GpuConfig { driver, kernel, frontier, ..Default::default() };
+                        let r = GpuMatcher::new(cfg).run(&g, Matching::empty(nr, nc));
+                        r.matching
+                            .certify(&g)
+                            .map_err(|e| format!("{}: {e}", cfg.name()))?;
+                        if r.matching.cardinality() != want {
+                            return Err(format!(
+                                "{}: {} != {want}",
+                                cfg.name(),
+                                r.matching.cardinality()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frontier_modes_agree_on_all_generator_families() {
+        for fam in crate::graph::gen::Family::ALL {
+            let g = fam.generate(500, 11);
+            let init = InitHeuristic::Cheap.run(&g);
+            let want = reference_max_cardinality(&g);
+            for driver in [ApDriver::Apfb, ApDriver::Apsb] {
+                let base = GpuConfig { driver, ..Default::default() };
+                for cfg in [base, base.compacted()] {
+                    let r = GpuMatcher::new(cfg).run(&g, init.clone());
+                    r.matching
+                        .certify(&g)
+                        .unwrap_or_else(|e| panic!("{} on {}: {e}", cfg.name(), fam.name()));
+                    assert_eq!(
+                        r.matching.cardinality(),
+                        want,
+                        "{} on {}",
+                        cfg.name(),
+                        fam.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compacted_reduces_scan_cost_on_sparse_family() {
+        // sparse road mesh: late BFS levels carry a handful of live
+        // columns, exactly where the O(nc) full-scan floor hurts
+        let g = crate::graph::gen::Family::Road.generate(4000, 7);
+        let init = InitHeuristic::Cheap.run(&g);
+        let full = GpuMatcher::default().run(&g, init.clone());
+        let fc = GpuMatcher::new(GpuConfig::default().compacted()).run(&g, init);
+        assert_eq!(full.matching.cardinality(), fc.matching.cardinality());
+        assert!(fc.stats.frontier_peak > 0);
+        assert!(fc.stats.frontier_peak <= g.nc as u64);
+        assert!(fc.stats.frontier_total >= fc.stats.frontier_peak);
+        assert_eq!(full.stats.frontier_peak, 0, "FullScan must not report frontiers");
+        assert_eq!(full.stats.frontier_total, 0);
+        assert!(
+            fc.stats.device_cycles < full.stats.device_cycles,
+            "compacted {} must undercut full scan {}",
+            fc.stats.device_cycles,
+            full.stats.device_cycles
+        );
+        assert!(fc.stats.device_parallel_cycles < full.stats.device_parallel_cycles);
+    }
+
+    #[test]
+    fn device_parallelism_changes_nothing_observable() {
+        let g = crate::graph::gen::Family::Banded.generate(800, 3);
+        let init = InitHeuristic::Cheap.run(&g);
+        for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
+            let serial = GpuMatcher::new(GpuConfig { frontier, ..Default::default() })
+                .run(&g, init.clone());
+            let par = GpuMatcher::new(GpuConfig {
+                frontier,
+                device_parallelism: 4,
+                ..Default::default()
+            })
+            .run(&g, init.clone());
+            assert_eq!(serial.matching, par.matching, "{frontier:?}");
+            assert_eq!(serial.stats, par.stats, "{frontier:?}");
+        }
     }
 
     #[test]

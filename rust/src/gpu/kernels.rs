@@ -1,6 +1,14 @@
 //! The paper's device kernels (Algorithms 2–4 plus the init and fix
 //! kernels), executed on the [`super::device`] model.
 //!
+//! Each BFS kernel has a frontier-compacted twin (`*_frontier`) for
+//! [`super::config::FrontierMode::Compacted`]: identical per-column body,
+//! but the launch covers an explicit worklist and emits the next one, so
+//! sparse late levels stop paying the `O(nc)` scan floor. INITBFSARRAY
+//! and FIXMATCHING — whose writes are per-index disjoint — additionally
+//! run host-parallel when `LaunchCfg::par_threads > 1`, with modeled
+//! cycles unchanged.
+//!
 //! All array/sentinel conventions match the paper exactly:
 //! * `rmatch[r] = -1` unmatched, `-2` = endpoint of a discovered
 //!   augmenting path (set by the BFS kernels, consumed by ALTERNATE).
@@ -14,9 +22,14 @@
 //!   paper's description.)
 
 use super::config::{ThreadMapping, WriteOrder};
-use super::device::{launch, DeviceClock, StepPlan, WarpStepper};
+use super::device::{
+    launch, launch_frontier, launch_parallel, DeviceClock, StepPlan, WarpStepper,
+    COMPACTION_COST, EDGE_COST,
+};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::Matching;
+use crate::util::pool::SharedSlice;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// BFS start level. The paper's APsB-GPUBFS-WR improvement requires
 /// `L0 = 2` so that `bfs_array` stays positive for live levels.
@@ -64,12 +77,55 @@ pub struct LaunchCfg {
     pub mapping: ThreadMapping,
     pub order: WriteOrder,
     pub seed: u64,
+    /// host threads for the per-item-disjoint kernels (INITBFSARRAY,
+    /// FIXMATCHING); 1 = serial. Modeled cycles and results are identical
+    /// for every value.
+    pub par_threads: usize,
+}
+
+impl Default for LaunchCfg {
+    fn default() -> Self {
+        Self { mapping: ThreadMapping::Ct, order: WriteOrder::Forward, seed: 0, par_threads: 1 }
+    }
 }
 
 /// INITBFSARRAY (§3): `bfs_array[c] = L0-1` if matched else `L0`; also
-/// resets per-phase arrays (predecessor; root when `with_root`).
+/// resets per-phase arrays (predecessor; root when `with_root`). Writes
+/// are per-index disjoint, so `cfg.par_threads > 1` executes on the host
+/// pool via [`launch_parallel`] — same result, same modeled cycles, less
+/// wall-clock.
 pub fn init_bfs_array(state: &mut GpuState, cfg: LaunchCfg, with_root: bool, clock: &mut DeviceClock) {
     let nc = state.cmatch.len();
+    if cfg.par_threads > 1 {
+        {
+            let cmatch: &[i32] = &state.cmatch;
+            let bfs = SharedSlice::new(&mut state.bfs_array);
+            let rootw = SharedSlice::new(&mut state.root);
+            launch_parallel(clock, cfg.mapping, nc, cfg.par_threads, |c| {
+                // SAFETY: each index `c` is written by exactly one thread.
+                unsafe {
+                    if cmatch[c] > -1 {
+                        bfs.set(c, L0 - 1);
+                        if with_root {
+                            rootw.set(c, -1);
+                        }
+                    } else {
+                        bfs.set(c, L0);
+                        if with_root {
+                            rootw.set(c, c as i32);
+                        }
+                    }
+                }
+            });
+        }
+        let nr = state.predecessor.len();
+        let pred = SharedSlice::new(&mut state.predecessor);
+        launch_parallel(clock, cfg.mapping, nr, cfg.par_threads, |r| {
+            // SAFETY: disjoint per-index writes.
+            unsafe { pred.set(r, -1) }
+        });
+        return;
+    }
     let cmatch = &state.cmatch;
     let bfs_array = &mut state.bfs_array;
     let root = &mut state.root;
@@ -87,6 +143,52 @@ pub fn init_bfs_array(state: &mut GpuState, cfg: LaunchCfg, with_root: bool, clo
         }
         0
     });
+    let nr = state.predecessor.len();
+    let predecessor = &mut state.predecessor;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, nr, |r| {
+        predecessor[r] = -1;
+        0
+    });
+}
+
+/// INITBFSARRAY for [`super::config::FrontierMode::Compacted`]: the same
+/// per-column init as [`init_bfs_array`], additionally emitting the
+/// initial frontier (every unmatched column) into `frontier` (cleared
+/// first, so the driver's buffer and its capacity are reused every phase).
+/// The appends are charged [`COMPACTION_COST`] apiece on top of the scan.
+/// Runs serially regardless of `par_threads` so the worklist order — which
+/// seeds the simulated write races downstream — is deterministic.
+pub fn init_bfs_array_frontier(
+    state: &mut GpuState,
+    cfg: LaunchCfg,
+    with_root: bool,
+    frontier: &mut Vec<u32>,
+    clock: &mut DeviceClock,
+) {
+    let nc = state.cmatch.len();
+    frontier.clear();
+    {
+        let cmatch = &state.cmatch;
+        let bfs_array = &mut state.bfs_array;
+        let root = &mut state.root;
+        launch(clock, cfg.mapping, cfg.order, cfg.seed, nc, |c| {
+            if cmatch[c] > -1 {
+                bfs_array[c] = L0 - 1;
+                if with_root {
+                    root[c] = -1;
+                }
+            } else {
+                bfs_array[c] = L0;
+                if with_root {
+                    root[c] = c as i32;
+                }
+                frontier.push(c as u32);
+            }
+            0
+        });
+    }
+    // bulk charge for building the initial worklist
+    clock.charge_warp_work(frontier.len() as u64 * COMPACTION_COST, 0);
     let nr = state.predecessor.len();
     let predecessor = &mut state.predecessor;
     launch(clock, cfg.mapping, cfg.order, cfg.seed, nr, |r| {
@@ -129,6 +231,52 @@ pub fn gpubfs(
         }
         edges_total += edges;
         edges
+    });
+    edges_total
+}
+
+/// GPUBFS over an explicit frontier ([`super::config::FrontierMode::Compacted`]):
+/// the same per-column body as [`gpubfs`], but the launch covers only the
+/// live columns of this level and appends each newly claimed column to
+/// `next` — per-launch work is `O(|frontier| + edges(frontier))` instead
+/// of `O(nc)`. Appends are charged [`COMPACTION_COST`], edge scans
+/// [`EDGE_COST`]. Returns edges scanned.
+pub fn gpubfs_frontier(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    frontier: &[u32],
+    next: &mut Vec<u32>,
+    cfg: LaunchCfg,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let mut edges_total = 0u64;
+    let GpuState { bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, .. } =
+        state;
+    launch_frontier(clock, cfg.mapping, cfg.order, cfg.seed, frontier, |col_vertex| {
+        debug_assert_eq!(bfs_array[col_vertex], bfs_level, "stale frontier entry");
+        let mut edges = 0u64;
+        let mut appended = 0u64;
+        for &nr in g.col_neighbors(col_vertex) {
+            edges += 1;
+            let neighbor_row = nr as usize;
+            let col_match = rmatch[neighbor_row];
+            if col_match > -1 {
+                if bfs_array[col_match as usize] == L0 - 1 {
+                    *vertex_inserted = true;
+                    bfs_array[col_match as usize] = bfs_level + 1;
+                    predecessor[neighbor_row] = col_vertex as i32;
+                    next.push(col_match as u32);
+                    appended += 1;
+                }
+            } else if col_match == -1 {
+                rmatch[neighbor_row] = -2;
+                predecessor[neighbor_row] = col_vertex as i32;
+                *augmenting_path_found = true;
+            }
+        }
+        edges_total += edges;
+        edges * EDGE_COST + appended * COMPACTION_COST
     });
     edges_total
 }
@@ -189,6 +337,70 @@ pub fn gpubfs_wr(
         }
         edges_total += edges;
         edges
+    });
+    edges_total
+}
+
+/// GPUBFS-WR over an explicit frontier: [`gpubfs_wr`]'s body (root
+/// carrying, satisfied-tree early exit, optional endpoint encoding) on a
+/// compacted worklist, appending claimed columns to `next`. Returns edges
+/// scanned.
+#[allow(clippy::too_many_arguments)]
+pub fn gpubfs_wr_frontier(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    frontier: &[u32],
+    next: &mut Vec<u32>,
+    cfg: LaunchCfg,
+    encode_endpoint: bool,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let mut edges_total = 0u64;
+    let GpuState {
+        bfs_array,
+        predecessor,
+        root,
+        rmatch,
+        vertex_inserted,
+        augmenting_path_found,
+        ..
+    } = state;
+    launch_frontier(clock, cfg.mapping, cfg.order, cfg.seed, frontier, |col_vertex| {
+        debug_assert_eq!(bfs_array[col_vertex], bfs_level, "stale frontier entry");
+        let my_root = root[col_vertex];
+        debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
+        if bfs_array[my_root as usize] < L0 - 1 {
+            return 0; // early exit: this tree already found a path
+        }
+        let mut edges = 0u64;
+        let mut appended = 0u64;
+        for &nr in g.col_neighbors(col_vertex) {
+            edges += 1;
+            let neighbor_row = nr as usize;
+            let col_match = rmatch[neighbor_row];
+            if col_match > -1 {
+                if bfs_array[col_match as usize] == L0 - 1 {
+                    *vertex_inserted = true;
+                    bfs_array[col_match as usize] = bfs_level + 1;
+                    root[col_match as usize] = my_root;
+                    predecessor[neighbor_row] = col_vertex as i32;
+                    next.push(col_match as u32);
+                    appended += 1;
+                }
+            } else if col_match == -1 {
+                bfs_array[my_root as usize] = if encode_endpoint {
+                    -(neighbor_row as i32 + 1)
+                } else {
+                    L0 - 2
+                };
+                rmatch[neighbor_row] = -2;
+                predecessor[neighbor_row] = col_vertex as i32;
+                *augmenting_path_found = true;
+            }
+        }
+        edges_total += edges;
+        edges * EDGE_COST + appended * COMPACTION_COST
     });
     edges_total
 }
@@ -280,9 +492,17 @@ pub fn wr_chosen_endpoints(state: &GpuState) -> Vec<u32> {
 
 /// FIXMATCHING (§3): clear leftover `-2` sentinels and dangling pointers,
 /// keeping exactly the mutually-consistent pairs. Two passes: rows against
-/// cmatch, then columns against the repaired rmatch. Returns #resets.
-pub fn fixmatching(state: &mut GpuState, cfg: LaunchCfg, clock: &mut DeviceClock) -> u64 {
+/// cmatch, then columns against the repaired rmatch. Returns
+/// `(resets, cardinality)` — the second pass already scans every column,
+/// so the post-repair matching cardinality rides along for free and the
+/// driver needs no separate `O(nc)` count. Writes are per-index disjoint,
+/// so `cfg.par_threads > 1` runs both passes on the host pool.
+pub fn fixmatching(state: &mut GpuState, cfg: LaunchCfg, clock: &mut DeviceClock) -> (u64, u64) {
+    if cfg.par_threads > 1 {
+        return fixmatching_par(state, cfg, clock);
+    }
     let mut fixes = 0u64;
+    let mut matched = 0u64;
     {
         let GpuState { rmatch, cmatch, .. } = state;
         let nr = rmatch.len();
@@ -300,24 +520,73 @@ pub fn fixmatching(state: &mut GpuState, cfg: LaunchCfg, clock: &mut DeviceClock
         let nc = cmatch.len();
         launch(clock, cfg.mapping, cfg.order, cfg.seed, nc, |c| {
             let r = cmatch[c];
-            if r >= 0 && rmatch[r as usize] != c as i32 {
-                cmatch[c] = -1;
-                fixes += 1;
+            if r >= 0 {
+                if rmatch[r as usize] != c as i32 {
+                    cmatch[c] = -1;
+                    fixes += 1;
+                } else {
+                    matched += 1;
+                }
             }
             0
         });
     }
-    fixes
+    (fixes, matched)
+}
+
+/// Host-parallel FIXMATCHING: pass 1 writes only `rmatch[r]` (reads of
+/// `cmatch` are un-mutated this pass), pass 2 writes only `cmatch[c]`
+/// against the now-frozen `rmatch` — both per-index disjoint, with the
+/// counters in atomics. Same `(resets, cardinality)` and modeled cycles
+/// as the serial path.
+fn fixmatching_par(state: &mut GpuState, cfg: LaunchCfg, clock: &mut DeviceClock) -> (u64, u64) {
+    let fixes = AtomicU64::new(0);
+    let matched = AtomicU64::new(0);
+    {
+        let cmatch: &[i32] = &state.cmatch;
+        let nr = state.rmatch.len();
+        let rm = SharedSlice::new(&mut state.rmatch);
+        launch_parallel(clock, cfg.mapping, nr, cfg.par_threads, |r| {
+            // SAFETY: only index `r` of rmatch is touched by this thread.
+            unsafe {
+                let c = rm.get(r);
+                if c == -2 || (c >= 0 && cmatch[c as usize] != r as i32) {
+                    rm.set(r, -1);
+                    fixes.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        });
+    }
+    {
+        let rmatch: &[i32] = &state.rmatch;
+        let nc = state.cmatch.len();
+        let cm = SharedSlice::new(&mut state.cmatch);
+        launch_parallel(clock, cfg.mapping, nc, cfg.par_threads, |c| {
+            // SAFETY: only index `c` of cmatch is touched by this thread.
+            unsafe {
+                let r = cm.get(c);
+                if r >= 0 {
+                    if rmatch[r as usize] != c as i32 {
+                        cm.set(c, -1);
+                        fixes.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        matched.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        });
+    }
+    (fixes.into_inner(), matched.into_inner())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::from_edges;
-    use crate::gpu::config::{ThreadMapping, WriteOrder};
+    use crate::gpu::config::ThreadMapping;
 
     fn cfg() -> LaunchCfg {
-        LaunchCfg { mapping: ThreadMapping::Mt, order: WriteOrder::Forward, seed: 0 }
+        LaunchCfg { mapping: ThreadMapping::Mt, ..LaunchCfg::default() }
     }
 
     fn fresh(g: &BipartiteCsr, init: &Matching) -> (GpuState, DeviceClock) {
@@ -410,11 +679,12 @@ mod tests {
         gpubfs(&g, &mut st, L0, cfg(), &mut clock);
         gpubfs(&g, &mut st, L0 + 1, cfg(), &mut clock);
         alternate(&mut st, cfg(), None, &mut clock);
-        let fixes = fixmatching(&mut st, cfg(), &mut clock);
+        let (fixes, card) = fixmatching(&mut st, cfg(), &mut clock);
         let m = st.to_matching();
         m.certify(&g).unwrap();
         assert_eq!(m.cardinality(), 2);
         assert_eq!(fixes, 0);
+        assert_eq!(card, 2, "fixmatching must report the post-repair cardinality");
     }
 
     #[test]
@@ -452,10 +722,11 @@ mod tests {
         let (mut st, mut clock) = fresh(&g, &Matching::empty(3, 3));
         st.rmatch = vec![-2, 1, 2];
         st.cmatch = vec![-1, 1, 0]; // (r1,c1) consistent; c2 dangles to r0? no: cmatch[2]=0 but rmatch[0]=-2
-        let fixes = fixmatching(&mut st, cfg(), &mut clock);
+        let (fixes, card) = fixmatching(&mut st, cfg(), &mut clock);
         assert_eq!(st.rmatch, vec![-1, 1, -1]);
         assert_eq!(st.cmatch, vec![-1, 1, -1]);
         assert_eq!(fixes, 3);
+        assert_eq!(card, 1);
     }
 
     #[test]
@@ -473,5 +744,117 @@ mod tests {
     fn init_bfsarray_and_run_wr(g: &BipartiteCsr, st: &mut GpuState, clock: &mut DeviceClock) {
         init_bfs_array(st, cfg(), true, clock);
         gpubfs_wr(g, st, L0, cfg(), true, clock);
+    }
+
+    #[test]
+    fn init_bfs_array_frontier_matches_plain() {
+        let g = from_edges(2, 3, &[(0, 0), (1, 1), (0, 2)]);
+        let mut init = Matching::empty(2, 3);
+        init.join(1, 1);
+        let (mut plain, mut c1) = fresh(&g, &init);
+        init_bfs_array(&mut plain, cfg(), true, &mut c1);
+        let (mut fc, mut c2) = fresh(&g, &init);
+        let mut frontier = vec![99, 99]; // stale contents must be cleared
+        init_bfs_array_frontier(&mut fc, cfg(), true, &mut frontier, &mut c2);
+        assert_eq!(frontier, vec![0, 2], "initial frontier = unmatched columns in order");
+        assert_eq!(fc.bfs_array, plain.bfs_array);
+        assert_eq!(fc.root, plain.root);
+        assert_eq!(fc.predecessor, plain.predecessor);
+        assert!(c2.cycles > c1.cycles, "worklist build must cost extra");
+    }
+
+    #[test]
+    fn gpubfs_frontier_matches_full_scan_on_race_free_graph() {
+        // c0 free, r0 matched to c1, r1 free: no write races, so the two
+        // modes must produce bit-identical device state level by level.
+        let g = from_edges(2, 2, &[(0, 0), (0, 1), (1, 1)]);
+        let mut init = Matching::empty(2, 2);
+        init.join(0, 1);
+
+        let (mut full, mut cf) = fresh(&g, &init);
+        init_bfs_array(&mut full, cfg(), false, &mut cf);
+        let (mut fc, mut cc) = fresh(&g, &init);
+        let mut frontier: Vec<u32> = Vec::new();
+        init_bfs_array_frontier(&mut fc, cfg(), false, &mut frontier, &mut cc);
+        assert_eq!(frontier, vec![0]);
+
+        let mut next: Vec<u32> = Vec::new();
+        let mut level = L0;
+        loop {
+            full.vertex_inserted = false;
+            let e_full = gpubfs(&g, &mut full, level, cfg(), &mut cf);
+            fc.vertex_inserted = false;
+            next.clear();
+            let e_fc = gpubfs_frontier(&g, &mut fc, level, &frontier, &mut next, cfg(), &mut cc);
+            assert_eq!(e_full, e_fc, "level {level}: same edges scanned");
+            assert_eq!(fc.bfs_array, full.bfs_array, "level {level}");
+            assert_eq!(fc.predecessor, full.predecessor, "level {level}");
+            assert_eq!(fc.rmatch, full.rmatch, "level {level}");
+            assert_eq!(fc.vertex_inserted, full.vertex_inserted);
+            assert_eq!(fc.augmenting_path_found, full.augmenting_path_found);
+            if !full.vertex_inserted {
+                break;
+            }
+            std::mem::swap(&mut frontier, &mut next);
+            level += 1;
+        }
+        assert!(fc.augmenting_path_found);
+        // (cost wins need nc >> |frontier|; see sparse_frontier_launch_beats_
+        // full_scan and the driver-level cost test — this graph is too tiny)
+        assert!(cc.launches == cf.launches);
+    }
+
+    #[test]
+    fn gpubfs_wr_frontier_early_exit_stops_tree() {
+        // mirror of gpubfs_wr_early_exit_stops_tree through the worklist
+        let g = from_edges(3, 2, &[(0, 0), (1, 0), (1, 1), (2, 1)]);
+        let mut init = Matching::empty(3, 2);
+        init.join(1, 1);
+        let (mut st, mut clock) = fresh(&g, &init);
+        let mut frontier: Vec<u32> = Vec::new();
+        init_bfs_array_frontier(&mut st, cfg(), true, &mut frontier, &mut clock);
+        assert_eq!(frontier, vec![0]);
+        let mut next: Vec<u32> = Vec::new();
+        gpubfs_wr_frontier(&g, &mut st, L0, &frontier, &mut next, cfg(), false, &mut clock);
+        assert!(st.augmenting_path_found);
+        assert_eq!(st.bfs_array[0], L0 - 2);
+        assert_eq!(next, vec![1], "claimed column compacted into the next frontier");
+        assert_eq!(st.root[1], 0);
+        let frontier = next;
+        let mut next: Vec<u32> = Vec::new();
+        let scanned =
+            gpubfs_wr_frontier(&g, &mut st, L0 + 1, &frontier, &mut next, cfg(), false, &mut clock);
+        assert_eq!(scanned, 0, "satisfied tree must not expand");
+        assert!(next.is_empty());
+    }
+
+    #[test]
+    fn parallel_init_and_fix_match_serial() {
+        let g = from_edges(4, 4, &[(0, 0), (1, 0), (1, 1), (2, 2), (3, 3), (0, 3)]);
+        let mut init = Matching::empty(4, 4);
+        init.join(1, 1);
+        init.join(2, 2);
+        let par = LaunchCfg { par_threads: 4, ..cfg() };
+
+        let (mut a, mut ca) = fresh(&g, &init);
+        init_bfs_array(&mut a, cfg(), true, &mut ca);
+        let (mut b, mut cb) = fresh(&g, &init);
+        init_bfs_array(&mut b, par, true, &mut cb);
+        assert_eq!(a.bfs_array, b.bfs_array);
+        assert_eq!(a.root, b.root);
+        assert_eq!(a.predecessor, b.predecessor);
+        assert_eq!(ca.cycles, cb.cycles, "modeled cycles must not depend on host threads");
+
+        // seed both with the same inconsistent speculative state
+        for st in [&mut a, &mut b] {
+            st.rmatch = vec![-2, 1, 2, -1];
+            st.cmatch = vec![-1, 1, 0, 3];
+        }
+        let (fx_a, card_a) = fixmatching(&mut a, cfg(), &mut ca);
+        let (fx_b, card_b) = fixmatching(&mut b, par, &mut cb);
+        assert_eq!(a.rmatch, b.rmatch);
+        assert_eq!(a.cmatch, b.cmatch);
+        assert_eq!((fx_a, card_a), (fx_b, card_b));
+        assert_eq!(ca.cycles, cb.cycles);
     }
 }

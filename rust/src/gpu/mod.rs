@@ -2,6 +2,13 @@
 //! drivers, GPUBFS/GPUBFS-WR kernels, ALTERNATE + FIXMATCHING speculative
 //! augmentation), executed on a deterministic device simulator
 //! ([`device`]) or through AOT-compiled XLA artifacts ([`xla_backend`]).
+//!
+//! Beyond the paper's eight variants, every driver supports
+//! [`FrontierMode::Compacted`]: worklist-driven BFS sweeps whose per-launch
+//! cost is `O(|frontier| + edges(frontier))` rather than the paper's
+//! `O(nc)` full scan (named with an "-FC" suffix, e.g.
+//! "APFB-GPUBFS-WR-CT-FC"), and host-parallel execution of the
+//! per-item-disjoint kernels (`GpuConfig::device_parallelism`).
 
 pub mod config;
 pub mod device;
@@ -9,5 +16,5 @@ pub mod driver;
 pub mod kernels;
 pub mod xla_backend;
 
-pub use config::{ApDriver, BfsKernel, GpuConfig, ThreadMapping, WriteOrder};
+pub use config::{ApDriver, BfsKernel, FrontierMode, GpuConfig, ThreadMapping, WriteOrder};
 pub use driver::GpuMatcher;

@@ -145,11 +145,14 @@ impl XlaHybridMatcher {
         let cfg = LaunchCfg {
             mapping: ThreadMapping::Ct,
             order: WriteOrder::Forward,
-            seed: 0,
+            ..LaunchCfg::default()
         };
         let mut clock = DeviceClock::default();
         let mut stats = RunStats::default();
         let mut state = GpuState::new(g, init);
+        // incremental |M| (same scheme as the native driver): seeded once,
+        // then carried via FIXMATCHING's piggybacked count
+        let mut cardinality = init.cardinality();
 
         loop {
             // host INITBFSARRAY equivalents on padded buffers
@@ -199,10 +202,12 @@ impl XlaHybridMatcher {
             // phase with the simulator's ALTERNATE + FIXMATCHING
             state.rmatch.copy_from_slice(&rmatch[..g.nr]);
             state.predecessor.copy_from_slice(&pred[..g.nr]);
-            let before = state.cardinality();
+            let before = cardinality;
             alternate(&mut state, cfg, None, &mut clock);
-            stats.fixes += fixmatching(&mut state, cfg, &mut clock);
-            let after = state.cardinality();
+            let (fixes, after) = fixmatching(&mut state, cfg, &mut clock);
+            stats.fixes += fixes;
+            let after = after as usize;
+            cardinality = after;
             stats.augmentations += after.saturating_sub(before) as u64;
             if after <= before {
                 // same safety net as the native driver

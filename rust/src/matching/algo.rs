@@ -31,6 +31,12 @@ pub struct RunStats {
     pub device_parallel_cycles: u64,
     /// sequential-fallback augmentations (safety net; expected 0)
     pub fallbacks: u64,
+    /// largest BFS frontier a compacted sweep consumed (0 under FullScan)
+    pub frontier_peak: u64,
+    /// total frontier items consumed across all compacted sweeps — the
+    /// per-item scan work a FullScan run would have paid `nc` per launch
+    /// for (0 under FullScan)
+    pub frontier_total: u64,
 }
 
 impl RunStats {

@@ -79,6 +79,61 @@ where
     });
 }
 
+/// A `&mut [T]` that can be shared across the scoped pool for kernels
+/// whose writes are *per-index disjoint* (each index written by at most
+/// one thread). The GPU simulator's INITBFSARRAY/FIXMATCHING parallel
+/// paths use this; the borrow keeps the underlying slice exclusively
+/// reserved for the wrapper's lifetime.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is index-disjoint by the `set`/`get` contract below; the
+// wrapper owns the unique borrow of the slice.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `v` at `i`.
+    ///
+    /// # Safety
+    /// `i < self.len()`, and no other thread may concurrently read or
+    /// write index `i`.
+    #[inline]
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// Read the value at `i`.
+    ///
+    /// # Safety
+    /// `i < self.len()`, and no other thread may concurrently write
+    /// index `i`.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +187,18 @@ mod tests {
     #[test]
     fn default_threads_at_least_one() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_parallel_writes() {
+        let n = 512;
+        let mut data = vec![0u32; n];
+        let shared = SharedSlice::new(&mut data);
+        parallel_for(4, n, |i| unsafe {
+            shared.set(i, i as u32 + 1);
+        });
+        assert_eq!(shared.len(), n);
+        assert!(!shared.is_empty());
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
     }
 }

@@ -1,0 +1,127 @@
+//! Offline stand-in for the `anyhow` crate: the subset this repository
+//! uses (`anyhow!`, `bail!`, `Context`, `Result`) with the same observable
+//! formatting contract — `{}` prints the outermost message, `{:#}` prints
+//! the whole context chain joined by `": "`.
+
+use std::fmt;
+
+/// Error with a context chain; `msgs[0]` is the outermost message.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    fn wrap<C: fmt::Display>(context: C, inner: String) -> Error {
+        Error { msgs: vec![context.to_string(), inner] }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs.join(": "))
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error or a missing value, as in `anyhow`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        // `{:#}` so wrapping our own Error keeps its full chain
+        self.map_err(|e| Error::wrap(context, format!("{e:#}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::wrap(f(), format!("{e:#}")))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("inner {}", 7))
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn chain_of_three() {
+        let e = fails().context("mid").context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: mid: inner 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing x");
+        assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert!(f(0).is_err());
+        assert_eq!(f(2).unwrap(), 2);
+    }
+}

@@ -1,0 +1,36 @@
+//! Offline stand-in for the `log` crate: the five level macros, printing
+//! `LEVEL message` lines to stderr (no logger registry — the binary has a
+//! single consumer, the terminal).
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { eprintln!("ERROR {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { eprintln!("WARN {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { eprintln!("INFO {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if std::env::var("BIMATCH_DEBUG").is_ok() {
+            eprintln!("DEBUG {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if std::env::var("BIMATCH_TRACE").is_ok() {
+            eprintln!("TRACE {}", format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,115 @@
+//! Offline stub of the `xla` PJRT bindings. The build environment ships no
+//! libxla, so [`PjRtClient::cpu`] reports "unavailable" and every caller
+//! takes its documented fallback path (the native device simulator). The
+//! API surface mirrors the subset `bimatch::runtime` uses, so swapping the
+//! real crate back in is a one-line Cargo change.
+
+use std::fmt;
+
+/// Stub error: a message, Display + Debug like the real crate's error.
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: offline xla stub (libxla not present in this build)";
+
+/// Host literal (opaque in the stub; buffers never reach a device).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal> {
+        Ok(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Device-side buffer handle (never constructed by the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the stub; callers fall back to the native simulator.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err}").contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_roundtrip_is_inert() {
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[3]).is_ok());
+    }
+}
