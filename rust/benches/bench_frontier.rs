@@ -1,12 +1,17 @@
-//! Frontier-compaction ablation: FullScan (the paper's all-`nc` kernel
-//! launches) vs Compacted (worklist-driven sweeps) across every generator
-//! family, for the two headline drivers. Reports modeled device time
-//! (serial and parallel views), edges scanned, the frontier sizes the
-//! compacted run actually consumed, and wall-clock — and asserts the two
-//! modes reach identical cardinality on every instance.
+//! Frontier-compaction × execution-mode ablation: {FullScan, Compacted}
+//! × {serial, device-parallel} across every generator family, for the
+//! two headline drivers. FullScan is the paper's all-`nc` kernel launch
+//! (plus ALTERNATE's all-`nr` endpoint scan); Compacted drives both from
+//! worklists; the parallel cells run every kernel on host threads with
+//! the racy ones going through the atomic CAS substrate (CAS charges
+//! included in their modeled time). Reports modeled device time, edges
+//! scanned, the worklist sizes the compacted runs consumed, and
+//! wall-clock — and asserts all four cells reach identical cardinality
+//! on every instance, backing the router's promotion of the "-FC" twin
+//! to default GPU pick.
 //!
-//! Run with: `cargo bench --bench bench_frontier` (BIMATCH_SCALE=large for
-//! the bigger catalog sizes).
+//! Run with: `cargo bench --bench bench_frontier` (BIMATCH_SCALE=large
+//! for the bigger catalog sizes, BIMATCH_SMOKE=1 for the CI-sized run).
 
 mod common;
 
@@ -17,17 +22,25 @@ use bimatch::util::table::Table;
 use bimatch::util::timer::Timer;
 use bimatch::MatchingAlgorithm;
 
+const PAR_THREADS: usize = 4;
+
 struct ModeRun {
     device_ms: f64,
     device_parallel_ms: f64,
     edges: u64,
+    launches: u64,
     frontier_peak: u64,
     frontier_total: u64,
+    endpoints_total: u64,
     wall: f64,
     cardinality: usize,
 }
 
-fn run_mode(cfg: GpuConfig, g: &bimatch::graph::BipartiteCsr, init: &bimatch::matching::Matching) -> ModeRun {
+fn run_mode(
+    cfg: GpuConfig,
+    g: &bimatch::graph::BipartiteCsr,
+    init: &bimatch::matching::Matching,
+) -> ModeRun {
     let t = Timer::start();
     let r = GpuMatcher::new(cfg).run(g, init.clone());
     let wall = t.elapsed_secs();
@@ -35,8 +48,10 @@ fn run_mode(cfg: GpuConfig, g: &bimatch::graph::BipartiteCsr, init: &bimatch::ma
         device_ms: r.stats.device_cycles as f64 / 1e6,
         device_parallel_ms: r.stats.device_parallel_cycles as f64 / 1e6,
         edges: r.stats.edges_scanned,
+        launches: r.stats.bfs_kernel_launches,
         frontier_peak: r.stats.frontier_peak,
         frontier_total: r.stats.frontier_total,
+        endpoints_total: r.stats.endpoints_total,
         wall,
         cardinality: r.matching.cardinality(),
     }
@@ -44,22 +59,30 @@ fn run_mode(cfg: GpuConfig, g: &bimatch::graph::BipartiteCsr, init: &bimatch::ma
 
 fn main() {
     let e = common::env();
-    let n = if e.scale.name() == "large" { 16_000 } else { 4_000 };
+    let n = if std::env::var("BIMATCH_SMOKE").is_ok() {
+        800
+    } else if e.scale.name() == "large" {
+        16_000
+    } else {
+        4_000
+    };
     let drivers = [(ApDriver::Apfb, "APFB"), (ApDriver::Apsb, "APsB")];
 
     let mut t = Table::new(vec![
         "family",
         "driver",
         "|M|",
-        "dev ms FS",
-        "dev ms FC",
+        "FS ms",
+        "FS-par ms",
+        "FC ms",
+        "FC-par ms",
         "FS/FC",
         "edges FS",
-        "edges FC",
         "peak |F|",
         "total |F|",
+        "endpts",
         "wall FS s",
-        "wall FC s",
+        "wall FC-par s",
     ]);
     let mut fc_wins = 0usize;
     let mut fc_parallel_wins = 0usize;
@@ -71,12 +94,21 @@ fn main() {
         for (driver, dname) in drivers {
             let base = GpuConfig { driver, ..GpuConfig::default() };
             let fs = run_mode(base, &g, &init);
+            let fsp = run_mode(GpuConfig { device_parallelism: PAR_THREADS, ..base }, &g, &init);
             let fc = run_mode(base.compacted(), &g, &init);
-            assert_eq!(
-                fs.cardinality, fc.cardinality,
-                "{dname} on {}: modes must agree",
-                fam.name()
+            let fcp = run_mode(
+                GpuConfig { device_parallelism: PAR_THREADS, ..base.compacted() },
+                &g,
+                &init,
             );
+            for (mode, r) in [("FS-par", &fsp), ("FC", &fc), ("FC-par", &fcp)] {
+                assert_eq!(
+                    fs.cardinality,
+                    r.cardinality,
+                    "{dname} on {}: {mode} must reach the serial FullScan cardinality",
+                    fam.name()
+                );
+            }
             total += 1;
             if fc.device_ms < fs.device_ms {
                 fc_wins += 1;
@@ -84,19 +116,37 @@ fn main() {
             if fc.device_parallel_ms < fs.device_parallel_ms {
                 fc_parallel_wins += 1;
             }
+            // the acceptance bar for the "-FC" router promotion: on
+            // every family where the frontier actually shrinks (average
+            // consumed frontier under half the graph's real nc per
+            // launch — generators don't always produce nc == n),
+            // Compacted+parallel must stay at or under FullScan serial
+            // even after paying its CAS charges
+            let shrank = fc.frontier_total * 2 < fc.launches * g.nc as u64;
+            if shrank {
+                assert!(
+                    fcp.device_ms <= fs.device_ms,
+                    "{dname} on {}: FC-par {:.3} ms must not exceed FS serial {:.3} ms",
+                    fam.name(),
+                    fcp.device_ms,
+                    fs.device_ms
+                );
+            }
             t.row(vec![
                 fam.name().to_string(),
                 dname.to_string(),
                 fs.cardinality.to_string(),
                 format!("{:.3}", fs.device_ms),
+                format!("{:.3}", fsp.device_ms),
                 format!("{:.3}", fc.device_ms),
+                format!("{:.3}", fcp.device_ms),
                 format!("{:.2}x", fs.device_ms / fc.device_ms.max(1e-9)),
                 fs.edges.to_string(),
-                fc.edges.to_string(),
                 fc.frontier_peak.to_string(),
                 fc.frontier_total.to_string(),
+                fc.endpoints_total.to_string(),
                 format!("{:.4}", fs.wall),
-                format!("{:.4}", fc.wall),
+                format!("{:.4}", fcp.wall),
             ]);
         }
     }
@@ -104,11 +154,16 @@ fn main() {
     let mut body = t.render();
     body.push_str(&format!(
         "\nCompacted wins modeled device time on {fc_wins}/{total} (family, driver) cells \
-         (parallel view: {fc_parallel_wins}/{total}) at n={n}; identical cardinality on all.\n\
-         peak/total |F| are the worklist sizes the compacted sweeps consumed — the\n\
-         full-scan runs paid nc={n}-ish per launch regardless.",
+         (device-parallel view: {fc_parallel_wins}/{total}) at n={n}; identical cardinality on\n\
+         all cells including the host-parallel (atomic CAS) runs with {PAR_THREADS} threads.\n\
+         peak/total |F| and endpts are the worklist sizes the compacted sweeps and the\n\
+         compacted ALTERNATE consumed — the full-scan runs paid nc={n}-ish per BFS launch\n\
+         and nr per ALTERNATE regardless.",
     ));
-    common::emit("frontier compaction ablation (FullScan vs Compacted)", &body);
+    common::emit(
+        "frontier compaction x execution mode ablation (FullScan/Compacted x serial/parallel)",
+        &body,
+    );
 
     assert!(
         fc_wins > 0,

@@ -17,7 +17,13 @@ USAGE:
   bimatch run   (--family <name> --n <int> [--seed <int>] [--permute] | --mtx <path>)
                 [--algo <name>|auto] [--init none|cheap|ks] [--no-certify]
                 [--frontier fullscan|compacted]   (gpu:* algos; compacted =
-                worklist-driven BFS sweeps, the \"-FC\" registry variants)
+                worklist-driven BFS sweeps + endpoint-list ALTERNATE, the
+                \"-FC\" registry variants — now the router's default GPU
+                pick. The flag overrides the mode of whichever gpu:*
+                variant runs, named or auto-routed; CPU-routed graphs
+                keep their pfp/dfs pick, so `--frontier fullscan` forces
+                the paper-faithful variant only where a GPU algorithm
+                actually runs)
   bimatch gen    --family <name> --n <int> [--seed <int>] [--permute] --out <path.mtx>
   bimatch verify --mtx <path>          cross-check several algorithms on a file
   bimatch serve  [--addr <ip:port>]    TCP line-protocol matching service
@@ -27,8 +33,11 @@ USAGE:
   bimatch help
 
 Generator families: road delaunay hugetrace rgg kron social amazon web banded uniform
-Env: BIMATCH_THREADS (host pool size), BIMATCH_DEVICE_PAR (host threads for the
-GPU simulator's disjoint kernels), BIMATCH_SCALE=small|large (bench catalog)";
+Env: BIMATCH_THREADS (host pool size), BIMATCH_DEVICE_PAR (host threads for ALL
+GPU-simulator kernels: disjoint ones run bit-identically, racy ones — BFS
+sweeps, ALTERNATE — go through the atomic CAS path with identical final
+cardinality; combines freely with either --frontier mode),
+BIMATCH_SCALE=small|large (bench catalog)";
 
 /// Parse `--key value` / `--flag` style arguments.
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
@@ -124,40 +133,26 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         }
     };
     let mut job = MatchJob::new(0, source);
-    let mut algo_choice = flags.get("algo").filter(|a| a.as_str() != "auto").cloned();
+    let algo_choice = flags.get("algo").filter(|a| a.as_str() != "auto").cloned();
     if let Some(mode) = flags.get("frontier") {
         use crate::gpu::FrontierMode;
         let Some(fm) = FrontierMode::from_name(mode) else {
             eprintln!("unknown --frontier {mode} (fullscan|compacted)");
             return 2;
         };
-        match algo_choice.take() {
-            // no --algo: auto-routing already picks FullScan names, so
-            // only Compacted needs to pin an algorithm (the paper's best
-            // variant's "-FC" twin)
-            None => {
-                if fm == FrontierMode::Compacted {
-                    algo_choice =
-                        Some(format!("gpu:{}", crate::gpu::GpuConfig::default().compacted().name()));
-                }
-            }
-            // explicit algo: normalize its "-FC" suffix to the requested
-            // mode (either direction); "gpu" is the registry's alias for
-            // the default GPU matcher
-            Some(algo) => {
-                if algo != "gpu" && !algo.starts_with("gpu:") {
-                    eprintln!("--frontier applies to gpu:* algorithms, not {algo}");
-                    return 2;
-                }
-                let default_gpu = format!("gpu:{}", crate::gpu::GpuConfig::default().name());
-                let base = if algo == "gpu" { default_gpu.as_str() } else { algo.as_str() };
-                let stripped = base.strip_suffix("-FC").unwrap_or(base);
-                algo_choice = Some(match fm {
-                    FrontierMode::Compacted => format!("{stripped}-FC"),
-                    FrontierMode::FullScan => stripped.to_string(),
-                });
+        // with an explicit algo, --frontier only makes sense for gpu:*
+        // names ("gpu" is the registry alias for the default variant)
+        if let Some(algo) = &algo_choice {
+            if algo != "gpu" && !algo.starts_with("gpu:") {
+                eprintln!("--frontier applies to gpu:* algorithms, not {algo}");
+                return 2;
             }
         }
+        // the override is applied by the executor *after* routing: a GPU
+        // pick (named or auto-routed, including the router's new "-FC"
+        // default) gets its "-FC" suffix normalized to the requested
+        // mode, while CPU-routed graphs keep their pfp/dfs pick
+        job = job.with_frontier(fm);
     }
     if let Some(algo) = algo_choice {
         job = job.with_algo(&algo);
@@ -369,8 +364,10 @@ mod tests {
     }
 
     #[test]
-    fn run_command_frontier_fullscan_keeps_auto_routing() {
-        // fullscan with no --algo must stay auto-routed, not pin a variant
+    fn run_command_frontier_fullscan_keeps_cpu_routing() {
+        // the frontier override rides on the routed pick: a graph the
+        // router sends to pfp/dfs stays there; only GPU picks get their
+        // "-FC" suffix normalized (exercised in coordinator::exec tests)
         let code = cmd_run(&flags(&[
             ("family", "uniform"),
             ("n", "300"),

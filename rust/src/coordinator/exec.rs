@@ -75,10 +75,29 @@ impl Executor {
         out.t_init = t_init.elapsed_secs();
         out.init_cardinality = init.cardinality();
 
-        let name = match &job.algo {
+        let mut name = match &job.algo {
             AlgoChoice::Auto => router::route_graph(&g).to_string(),
             AlgoChoice::Named(n) => n.clone(),
         };
+        // frontier override: normalize the "-FC" suffix of a GPU pick to
+        // the requested mode, after routing — CPU picks stay untouched,
+        // so `--frontier fullscan` overrides the router's "-FC" default
+        // without forcing a GPU algorithm onto pfp/dfs-routed graphs
+        if let Some(fm) = job.frontier {
+            if name == "gpu" || name.starts_with("gpu:") {
+                use crate::gpu::{FrontierMode, GpuConfig};
+                let base = if name == "gpu" {
+                    format!("gpu:{}", GpuConfig::default().name())
+                } else {
+                    name.clone()
+                };
+                let stripped = base.strip_suffix("-FC").unwrap_or(&base);
+                name = match fm {
+                    FrontierMode::Compacted => format!("{stripped}-FC"),
+                    FrontierMode::FullScan => stripped.to_string(),
+                };
+            }
+        }
         let Some(algo) = registry::build(&name, self.engine.clone()) else {
             out.error = Some(format!("unknown algorithm {name}"));
             self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
@@ -96,8 +115,14 @@ impl Executor {
             match result.matching.certify(&g) {
                 Ok(()) => out.certified = true,
                 Err(e) => {
+                    // a job whose result fails certification is a *failed*
+                    // job: it must not count as completed nor contribute
+                    // its (untrusted) cardinality to matched_total, so
+                    // `submitted == completed + failed` stays an invariant
                     out.error = Some(format!("certification failed: {e}"));
                     self.metrics.certify_failures.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    return out;
                 }
             }
         }
@@ -169,6 +194,29 @@ mod tests {
     }
 
     #[test]
+    fn frontier_override_normalizes_gpu_picks_only() {
+        use crate::gpu::FrontierMode;
+        let mk = |seed| {
+            MatchJob::new(
+                seed,
+                GraphSource::Generate { family: Family::Uniform, n: 200, seed, permute: false },
+            )
+        };
+        // explicit "gpu" alias + compacted → the "-FC" twin runs
+        let out = exec().execute(&mk(0).with_algo("gpu").with_frontier(FrontierMode::Compacted));
+        assert_eq!(out.algo, "gpu:APFB-GPUBFS-WR-CT-FC");
+        assert!(out.certified);
+        // an "-FC" name + fullscan override → suffix stripped
+        let job = mk(1).with_algo("gpu:APsB-GPUBFS-CT-FC").with_frontier(FrontierMode::FullScan);
+        let out = exec().execute(&job);
+        assert_eq!(out.algo, "gpu:APsB-GPUBFS-CT");
+        // CPU picks are untouched by the override
+        let out = exec().execute(&mk(2).with_algo("pfp").with_frontier(FrontierMode::Compacted));
+        assert_eq!(out.algo, "pfp");
+        assert!(out.certified);
+    }
+
+    #[test]
     fn in_memory_source() {
         let g = Arc::new(crate::graph::from_edges(2, 2, &[(0, 0), (1, 1)]));
         let job = MatchJob::new(5, GraphSource::InMemory(g)).with_algo("bfs");
@@ -190,5 +238,37 @@ mod tests {
         }
         assert_eq!(metrics.completed(), 3);
         assert!(metrics.mean_latency() > 0.0);
+    }
+
+    #[test]
+    fn failed_jobs_do_not_pollute_completion_metrics() {
+        // every failure path (acquire, unknown algo) must land in
+        // jobs_failed and leave jobs_completed / matched_total untouched,
+        // so submitted == completed + failed stays an invariant (the
+        // certification-failure path shares the same early return)
+        use std::sync::atomic::Ordering;
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        let bad_algo = MatchJob::new(
+            0,
+            GraphSource::Generate { family: Family::Uniform, n: 100, seed: 1, permute: false },
+        )
+        .with_algo("no-such-algo");
+        let missing = MatchJob::new(1, GraphSource::MtxFile("/no/such/file.mtx".into()));
+        let good = MatchJob::new(
+            2,
+            GraphSource::Generate { family: Family::Uniform, n: 100, seed: 2, permute: false },
+        );
+        for job in [&bad_algo, &missing, &good] {
+            e.execute(job);
+        }
+        assert_eq!(metrics.completed(), 1);
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 2);
+        let good_card = e.execute(&good).cardinality as u64;
+        assert_eq!(
+            metrics.matched_total.load(Ordering::Relaxed),
+            2 * good_card,
+            "only certified-complete jobs contribute to matched_total"
+        );
     }
 }

@@ -35,15 +35,32 @@ pub struct MatchJob {
     pub init: InitHeuristic,
     /// verify validity+maximality before reporting (costs one BFS)
     pub certify: bool,
+    /// frontier-mode override applied *after* routing: when the resolved
+    /// algorithm is a `gpu:*` variant, its "-FC" suffix is normalized to
+    /// this mode; CPU picks (pfp/dfs/...) are left untouched. `None`
+    /// keeps whatever the router or the caller named.
+    pub frontier: Option<crate::gpu::FrontierMode>,
 }
 
 impl MatchJob {
     pub fn new(id: u64, source: GraphSource) -> Self {
-        Self { id, source, algo: AlgoChoice::Auto, init: InitHeuristic::Cheap, certify: true }
+        Self {
+            id,
+            source,
+            algo: AlgoChoice::Auto,
+            init: InitHeuristic::Cheap,
+            certify: true,
+            frontier: None,
+        }
     }
 
     pub fn with_algo(mut self, name: &str) -> Self {
         self.algo = AlgoChoice::Named(name.to_string());
+        self
+    }
+
+    pub fn with_frontier(mut self, mode: crate::gpu::FrontierMode) -> Self {
+        self.frontier = Some(mode);
         self
     }
 }

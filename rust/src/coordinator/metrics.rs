@@ -3,7 +3,12 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-const N_BUCKETS: usize = 32; // 2^-20s (≈1µs) … 2^11s, log2 steps
+// Bucket `i` counts latencies in `[2^i, 2^{i+1})` µs; bucket 0 also
+// absorbs every sub-µs sample and bucket 31 everything above. The real
+// span is therefore 1 µs … 2^31 µs (≈ 36 min) — *not* the 2^-20 s …
+// 2^11 s a symmetric-around-1s reading would suggest: `bucket()` clamps
+// to ≥ 1 µs, so there are no sub-µs buckets.
+const N_BUCKETS: usize = 32;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -22,6 +27,9 @@ impl Metrics {
         Self::default()
     }
 
+    /// Bucket index for a latency: `floor(log2(µs))`, clamped into
+    /// `[0, N_BUCKETS)` — sub-µs samples land in bucket 0, everything
+    /// ≥ 2^31 µs in the last bucket.
     fn bucket(secs: f64) -> usize {
         let us = (secs * 1e6).max(1.0);
         (us.log2() as usize).min(N_BUCKETS - 1)
@@ -37,13 +45,17 @@ impl Metrics {
         self.jobs_completed.load(Ordering::Relaxed)
     }
 
-    /// approximate quantile from the log2 histogram (upper bucket bound)
+    /// approximate quantile from the log2 histogram (upper bucket bound).
+    /// `q = 0.0` returns the first *non-empty* bucket's bound (the
+    /// minimum observed latency's bucket), not bucket 0's.
     pub fn latency_quantile(&self, q: f64) -> f64 {
         let total: u64 = self.latency.iter().map(|b| b.load(Ordering::Relaxed)).sum();
         if total == 0 {
             return 0.0;
         }
-        let target = ((total as f64) * q).ceil() as u64;
+        // q=0 would otherwise make target 0 and `seen >= 0` trivially
+        // true at bucket 0 even when that bucket is empty
+        let target = (((total as f64) * q).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, b) in self.latency.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
@@ -89,6 +101,26 @@ mod tests {
         assert!(Metrics::bucket(0.000001) <= Metrics::bucket(0.001));
         assert!(Metrics::bucket(0.001) <= Metrics::bucket(1.0));
         assert!(Metrics::bucket(1e9) < N_BUCKETS);
+    }
+
+    #[test]
+    fn bucket_bounds_match_documented_span() {
+        // bucket i = [2^i, 2^{i+1}) µs; sub-µs clamps into bucket 0
+        assert_eq!(Metrics::bucket(1e-9), 0, "sub-µs samples land in bucket 0");
+        assert_eq!(Metrics::bucket(1.0e-6), 0);
+        assert_eq!(Metrics::bucket(1.5e-6), 0);
+        assert_eq!(Metrics::bucket(2.0e-6), 1);
+        assert_eq!(Metrics::bucket(1.0), 19, "1 s = 10^6 µs → bucket floor(log2 1e6)");
+        assert_eq!(Metrics::bucket(1e12), N_BUCKETS - 1, "overflow clamps to the last bucket");
+    }
+
+    #[test]
+    fn quantile_zero_lands_on_first_nonempty_bucket() {
+        let m = Metrics::new();
+        m.observe_latency(1.0); // bucket 19 only; buckets 0..19 empty
+        let q0 = m.latency_quantile(0.0);
+        assert!(q0 >= 1.0, "q=0 must report the min sample's bucket, got {q0}");
+        assert_eq!(m.latency_quantile(0.0), m.latency_quantile(1.0));
     }
 
     #[test]

@@ -121,31 +121,51 @@ mod tests {
 
     #[test]
     fn backpressure_blocks_until_pop() {
+        // deflaked: no wall-clock sleep. `started` is a rendezvous; once
+        // the producer is at (or past) the push call, `pushed` *cannot*
+        // be set until we pop — the queue is full and push only returns
+        // after enqueueing — so the assertions are deterministic.
+        use std::sync::atomic::{AtomicBool, Ordering};
         let q = Arc::new(BoundedQueue::new(1));
         q.push(0).unwrap();
-        let q2 = q.clone();
-        let h = std::thread::spawn(move || q2.push(1)); // blocks
-        std::thread::sleep(std::time::Duration::from_millis(30));
+        let started = Arc::new(AtomicBool::new(false));
+        let pushed = Arc::new(AtomicBool::new(false));
+        let (q2, s2, p2) = (q.clone(), started.clone(), pushed.clone());
+        let h = std::thread::spawn(move || {
+            s2.store(true, Ordering::SeqCst);
+            q2.push(1).unwrap(); // blocks: capacity 1, queue full
+            p2.store(true, Ordering::SeqCst);
+        });
+        while !started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        assert!(!pushed.load(Ordering::SeqCst), "push cannot complete before the pop");
         assert_eq!(q.len(), 1, "producer must be blocked");
         assert_eq!(q.pop(), Some(0));
-        h.join().unwrap().unwrap();
+        h.join().unwrap();
+        assert!(pushed.load(Ordering::SeqCst));
         assert_eq!(q.pop(), Some(1));
     }
 
     #[test]
     fn mpmc_all_items_delivered() {
+        // deflaked: join the producers before closing instead of hoping a
+        // fixed sleep outlasts them — under load the old 100 ms window
+        // closed the queue early and dropped items.
         let q = Arc::new(BoundedQueue::new(8));
         let n_items = 200;
         let consumed = Arc::new(Mutex::new(Vec::new()));
         std::thread::scope(|s| {
-            for p in 0..4 {
-                let q = q.clone();
-                s.spawn(move || {
-                    for i in 0..n_items / 4 {
-                        q.push(p * 1000 + i).unwrap();
-                    }
-                });
-            }
+            let producers: Vec<_> = (0..4)
+                .map(|p| {
+                    let q = q.clone();
+                    s.spawn(move || {
+                        for i in 0..n_items / 4 {
+                            q.push(p * 1000 + i).unwrap();
+                        }
+                    })
+                })
+                .collect();
             for _ in 0..3 {
                 let q = q.clone();
                 let consumed = consumed.clone();
@@ -155,11 +175,15 @@ mod tests {
                     }
                 });
             }
-            // let producers finish, then close
-            std::thread::sleep(std::time::Duration::from_millis(100));
+            for h in producers {
+                h.join().unwrap();
+            }
             q.close();
         });
-        let got = consumed.lock().unwrap();
-        assert_eq!(got.len(), n_items as usize);
+        let mut got = consumed.lock().unwrap().clone();
+        assert_eq!(got.len(), n_items as usize, "no item dropped or delivered twice");
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n_items as usize, "all delivered items distinct");
     }
 }

@@ -1,8 +1,9 @@
 //! Name → algorithm registry: every matcher in the library (sequential,
 //! multicore, the 8 GPU variants plus their frontier-compacted "-FC"
-//! twins, XLA-backed) constructible from its stable string name. The CLI,
-//! router, server protocol, and bench harness all resolve algorithms
-//! through here.
+//! twins — worklist-driven BFS sweeps *and* endpoint-list ALTERNATE, the
+//! router's default GPU pick — XLA-backed) constructible from its stable
+//! string name. The CLI, router, server protocol, and bench harness all
+//! resolve algorithms through here.
 
 use crate::gpu::{GpuConfig, GpuMatcher};
 use crate::matching::algo::MatchingAlgorithm;

@@ -68,8 +68,12 @@ pub fn route(f: &GraphFeatures) -> &'static str {
     if f.bandedness < 0.02 && f.degree_skew < 8.0 {
         return "pfp";
     }
-    // everything else: the paper's winning GPU variant
-    "gpu:APFB-GPUBFS-WR-CT"
+    // everything else: the paper's winning GPU variant, in its
+    // frontier-compacted form — worklist-driven BFS sweeps and endpoint-
+    // list ALTERNATE undercut the full-scan twin's modeled device time
+    // wherever late BFS levels go sparse (bench_frontier ablates the
+    // promotion across every generator family)
+    "gpu:APFB-GPUBFS-WR-CT-FC"
 }
 
 /// Convenience: features + route in one call.
@@ -103,15 +107,25 @@ mod tests {
         let g = crate::graph::gen::banded(8000, 16, 0.6, 5);
         assert_eq!(route_graph(&g), "pfp");
         let p = crate::graph::random_permute(&g, 11);
-        assert_eq!(route_graph(&p), "gpu:APFB-GPUBFS-WR-CT");
+        assert_eq!(route_graph(&p), "gpu:APFB-GPUBFS-WR-CT-FC");
     }
 
     #[test]
     fn router_gpu_on_powerlaw() {
         let g = Family::Kron.generate(8192, 3);
         if g.n_edges() >= 20_000 {
-            assert_eq!(route_graph(&g), "gpu:APFB-GPUBFS-WR-CT");
+            assert_eq!(route_graph(&g), "gpu:APFB-GPUBFS-WR-CT-FC");
         }
+    }
+
+    #[test]
+    fn router_default_gpu_pick_is_frontier_compacted() {
+        // the promotion: whatever graph lands on the GPU must get the
+        // "-FC" twin, and that name must be buildable from the registry
+        let g = crate::graph::random_permute(&crate::graph::gen::banded(8000, 16, 0.6, 5), 3);
+        let name = route_graph(&g);
+        assert!(name.ends_with("-FC"), "GPU default must be frontier-compacted, got {name}");
+        assert!(crate::coordinator::registry::build(name, None).is_some());
     }
 
     #[test]
@@ -120,5 +134,77 @@ mod tests {
         assert_eq!(route_graph(&empty), "dfs");
         let small = crate::graph::from_edges(3, 3, &[(0, 0), (1, 1)]);
         assert_eq!(route_graph(&small), "pfp");
+    }
+
+    #[test]
+    fn auto_routed_algorithm_reaches_reference_on_every_family() {
+        // whatever the router picks — pfp, dfs, or the new "-FC" GPU
+        // default — must reach the reference cardinality on every
+        // generator family, both original and permuted orderings
+        use crate::matching::{reference_max_cardinality, Matching};
+        let mut gpu_fc_routed = 0usize;
+        for fam in Family::ALL {
+            for permute in [false, true] {
+                // n=3000 pushes the denser families over the router's
+                // 20k-edge floor so the "-FC" GPU default is genuinely
+                // exercised, while the sparse ones still land on pfp/dfs
+                let g = fam.generate(3000, 19);
+                let g = if permute { crate::graph::random_permute(&g, 23) } else { g };
+                let want = reference_max_cardinality(&g);
+                let name = route_graph(&g);
+                if name.ends_with("-FC") {
+                    gpu_fc_routed += 1;
+                }
+                let algo = crate::coordinator::registry::build(name, None)
+                    .unwrap_or_else(|| panic!("routed name {name} not buildable"));
+                let r = algo.run(&g, Matching::empty(g.nr, g.nc));
+                r.matching
+                    .certify(&g)
+                    .unwrap_or_else(|e| panic!("{name} on {} permute={permute}: {e}", fam.name()));
+                assert_eq!(
+                    r.matching.cardinality(),
+                    want,
+                    "{name} on {} permute={permute}",
+                    fam.name()
+                );
+            }
+        }
+        assert!(gpu_fc_routed > 0, "at least one instance must exercise the -FC GPU default");
+    }
+
+    #[test]
+    fn prop_auto_routed_reaches_reference_on_random_graphs() {
+        use crate::matching::{reference_max_cardinality, Matching};
+        use crate::util::qcheck::{arb_bipartite, forall, Config};
+        forall(Config::cases(24), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 30);
+            let g = crate::graph::from_edges(nr, nc, &edges);
+            let want = reference_max_cardinality(&g);
+            let name = route_graph(&g);
+            let algo = crate::coordinator::registry::build(name, None)
+                .ok_or_else(|| format!("routed name {name} not buildable"))?;
+            let r = algo.run(&g, Matching::empty(nr, nc));
+            r.matching.certify(&g).map_err(|e| format!("{name}: {e}"))?;
+            if r.matching.cardinality() != want {
+                return Err(format!("{name}: {} != {want}", r.matching.cardinality()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fullscan_runs_report_zero_frontier_stats() {
+        // regression: the worklist counters must stay untouched when the
+        // FullScan variants run — the compacted path must not leak its
+        // bookkeeping into the paper-faithful mode
+        use crate::matching::Matching;
+        let g = Family::Road.generate(1200, 3);
+        for name in ["gpu:APFB-GPUBFS-WR-CT", "gpu:APsB-GPUBFS-MT"] {
+            let algo = crate::coordinator::registry::build(name, None).unwrap();
+            let r = algo.run(&g, Matching::empty(g.nr, g.nc));
+            assert_eq!(r.stats.frontier_peak, 0, "{name}");
+            assert_eq!(r.stats.frontier_total, 0, "{name}");
+            assert_eq!(r.stats.endpoints_total, 0, "{name}");
+        }
     }
 }

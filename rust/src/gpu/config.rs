@@ -62,16 +62,20 @@ pub enum WriteOrder {
     Shuffled,
 }
 
-/// How each BFS sweep finds its current-level columns.
+/// How each kernel finds its live items — BFS sweeps *and* ALTERNATE.
 ///
 /// The paper's kernels launch over *all* `nc` columns every level and let
 /// inactive threads bail (`bfs_array[col] != bfs_level`), so a late level
-/// with 3 live columns still pays an `O(nc)` scan. `Compacted` keeps an
-/// explicit frontier array instead: each sweep consumes the current
-/// frontier and emits the next one, so per-launch work is
-/// `O(|frontier| + edges(frontier))`. `FullScan` stays the default for
-/// paper-faithful reproduction runs; both modes provably reach the same
-/// cardinality (see the property tests in `gpu::driver`).
+/// with 3 live columns still pays an `O(nc)` scan — and ALTERNATE pays
+/// the analogous `O(nr)` scan selecting its `-2` endpoint rows.
+/// `Compacted` keeps explicit worklists instead: each sweep consumes the
+/// current frontier and emits the next one (per-launch work
+/// `O(|frontier| + edges(frontier))`), and the sweeps also emit the
+/// endpoint worklist ALTERNATE consumes directly. `FullScan` stays the
+/// `GpuConfig` default for paper-faithful reproduction runs — the
+/// coordinator's router picks the `-FC` twin for auto-routed GPU work —
+/// and both modes provably reach the same cardinality (see the property
+/// tests in `gpu::driver`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum FrontierMode {
     /// Paper-faithful: every kernel launch covers all `nc` columns.
@@ -108,11 +112,16 @@ pub struct GpuConfig {
     pub write_order: WriteOrder,
     /// seed for `WriteOrder::Shuffled`
     pub seed: u64,
-    /// full-scan (paper) vs frontier-compacted BFS sweeps
+    /// full-scan (paper) vs worklist-compacted kernels (BFS + ALTERNATE)
     pub frontier: FrontierMode,
-    /// host threads executing per-item-disjoint kernels (INITBFSARRAY,
-    /// FIXMATCHING); 1 = serial. Results and modeled cycles are identical
-    /// for every value — only wall-clock changes.
+    /// host threads executing the simulator's kernels; 1 = serial. The
+    /// per-item-disjoint kernels (INITBFSARRAY, FIXMATCHING) keep
+    /// identical results and modeled cycles at any value; the racy ones
+    /// (BFS sweeps, ALTERNATE) run through the atomic CAS substrate —
+    /// claim winners follow the host schedule (one legal serialization of
+    /// the CUDA race) and modeled cycles gain the CAS charges, while the
+    /// final matching cardinality stays schedule-independent
+    /// (property-tested in `gpu::driver`).
     pub device_parallelism: usize,
 }
 
@@ -164,11 +173,12 @@ impl GpuConfig {
         GpuConfig { frontier: FrontierMode::Compacted, ..self }
     }
 
-    /// Effective host-thread count for the per-item-disjoint kernels: an
-    /// explicit `device_parallelism > 1` wins; otherwise the
-    /// `BIMATCH_DEVICE_PAR` environment variable supplies the default, so
-    /// registry-built matchers (CLI, server, harness) can opt in without
-    /// new names. Falls back to 1 (serial).
+    /// Effective host-thread count for the simulator's kernels (disjoint
+    /// *and* racy — see `device_parallelism`): an explicit
+    /// `device_parallelism > 1` wins; otherwise the `BIMATCH_DEVICE_PAR`
+    /// environment variable supplies the default, so registry-built
+    /// matchers (CLI, server, harness) can opt in without new names.
+    /// Falls back to 1 (serial).
     pub fn effective_device_parallelism(&self) -> usize {
         if self.device_parallelism > 1 {
             return self.device_parallelism;

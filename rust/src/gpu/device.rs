@@ -15,7 +15,7 @@
 //! per-thread setup term is what makes CT (few threads, many items each)
 //! cheaper than MT (one item per thread) exactly as the paper observes.
 //!
-//! *Execution modes.* Three launch executors share that cost model:
+//! *Execution modes.* Five launch executors share that cost model:
 //! * [`launch`] — the paper's full-scan sweep over all `n` items;
 //! * [`launch_frontier`] — frontier-compacted sweep over an explicit
 //!   worklist, charged `FRONTIER_ITEM_COST` per live item plus
@@ -24,7 +24,17 @@
 //! * [`launch_parallel`] — host-parallel execution of per-item-disjoint
 //!   kernels (INITBFSARRAY/FIXMATCHING); modeled cycles are charged
 //!   exactly as the serial [`launch`] would, so the figures stay
-//!   deterministic while wall-clock drops with host threads.
+//!   deterministic while wall-clock drops with host threads;
+//! * [`launch_parallel_racy`] / [`launch_frontier_parallel`] — host-
+//!   parallel execution of the *racy* kernels (GPUBFS, GPUBFS-WR and
+//!   their frontier twins) over [`crate::util::pool::AtomicCells`] views:
+//!   claims go through CAS (charged [`CAS_COST`] apiece, reported by the
+//!   body), per-item work is recorded into a per-item slot and folded
+//!   into the warp cost model after the join, and worklist output is
+//!   merged from per-thread buffers in host-thread-id order. Which thread
+//!   wins a claim is a legal schedule of the CUDA race, so results are
+//!   schedule-independent exactly where the paper's semantics require it
+//!   (final cardinality), not bitwise.
 
 use super::config::{ThreadMapping, WriteOrder, WARP_SIZE};
 use crate::util::rng::Xoshiro256;
@@ -59,6 +69,13 @@ pub const FRONTIER_ITEM_COST: u64 = 2;
 /// Charge per element appended to the next frontier: the atomic queue-tail
 /// increment + coalesced store a real compaction kernel pays.
 pub const COMPACTION_COST: u64 = 1;
+/// Charge per compare-and-swap (or atomic exchange) a racy kernel issues
+/// under parallel execution ([`launch_parallel_racy`] and friends): the
+/// L2 atomic round-trip a lock-free claim pays on real hardware. The
+/// serial executors simulate the same races by write-order arbitration
+/// and therefore never pay it — the parallel views are charged honestly
+/// rather than pretending atomics are free.
+pub const CAS_COST: u64 = 2;
 /// concurrent warp slots the parallel model assumes (14 SMs × 4 effective)
 pub const PARALLEL_WARPS: u64 = 56;
 
@@ -233,10 +250,19 @@ pub fn launch_frontier<F>(
     clock.charge_warp_work(warp_sum, max_warp);
 }
 
-/// Exact cost [`launch`] charges for a zero-edge body over `n` items —
-/// order-independent, so [`launch_parallel`] can charge it without
-/// serializing.
-fn warp_cost_uniform(total: usize, n: usize) -> (u64, u64) {
+/// Fold per-item work into the launch cost model: lane work is
+/// `Σ items (per_item + work(item)) + THREAD_SETUP`, warps charge
+/// `WARP_COST + max_lane`. This reproduces exactly what [`launch`]
+/// (`per_item = ITEM_COST`, `work = edges·EDGE_COST`) or
+/// [`launch_frontier`] (`per_item = FRONTIER_ITEM_COST`) would have
+/// charged for the same per-item work, independent of execution order —
+/// which is what lets the parallel racy executors run bodies on host
+/// threads and settle the bill deterministically afterwards, and what
+/// the uniform-scan charges below reuse with zero work.
+fn fold_lane_cost<W>(total: usize, n: usize, per_item: u64, work: W) -> (u64, u64)
+where
+    W: Fn(usize) -> u64,
+{
     let n_warps = total.min(n.max(1)).div_ceil(WARP_SIZE);
     let mut warp_sum = 0u64;
     let mut max_warp = 0u64;
@@ -248,10 +274,13 @@ fn warp_cost_uniform(total: usize, n: usize) -> (u64, u64) {
             if tid >= total {
                 break;
             }
-            // strided assignment: items tid, tid+total, ... below n
-            let count = if tid < n { ((n - tid - 1) / total + 1) as u64 } else { 0 };
-            let mut lane_work = count * ITEM_COST;
-            if count > 0 {
+            let mut lane_work: u64 = 0;
+            let mut any = false;
+            for item in thread_items(tid, total, n) {
+                any = true;
+                lane_work += per_item + work(item);
+            }
+            if any {
                 lane_work += THREAD_SETUP;
                 warp_active = true;
             }
@@ -264,6 +293,113 @@ fn warp_cost_uniform(total: usize, n: usize) -> (u64, u64) {
         }
     }
     (warp_sum, max_warp)
+}
+
+/// Exact cost [`launch`] charges for a zero-edge body over `n` items —
+/// order-independent, so [`launch_parallel`] can charge it without
+/// serializing.
+fn warp_cost_uniform(total: usize, n: usize) -> (u64, u64) {
+    fold_lane_cost(total, n, ITEM_COST, |_| 0)
+}
+
+/// Charge the cost of a zero-edge device sweep over `n` items *without*
+/// a separate launch: used for selection scans that ride inside another
+/// kernel's launch (e.g. ALTERNATE scanning all rows for `-2` endpoints
+/// under `FrontierMode::FullScan` — the scan the compacted endpoint
+/// worklist eliminates).
+pub fn charge_uniform_scan(clock: &mut DeviceClock, mapping: ThreadMapping, n: usize) {
+    let (warp_sum, max_warp) = warp_cost_uniform(mapping.total_threads(n), n);
+    clock.charge_warp_work(warp_sum, max_warp);
+}
+
+/// The worklist counterpart of [`charge_uniform_scan`]: a zero-work
+/// frontier-shaped sweep over `n_items` entries (charged
+/// [`FRONTIER_ITEM_COST`] apiece under the full warp model), e.g. the
+/// compacted ALTERNATE's chosen-endpoint filter reading the endpoint
+/// worklist.
+pub fn charge_frontier_scan(clock: &mut DeviceClock, mapping: ThreadMapping, n_items: usize) {
+    let (warp_sum, max_warp) =
+        fold_lane_cost(mapping.total_threads(n_items), n_items, FRONTIER_ITEM_COST, |_| 0);
+    clock.charge_warp_work(warp_sum, max_warp);
+}
+
+/// Parallel host execution of a *racy* kernel (GPUBFS, GPUBFS-WR): the
+/// body runs over all `n` items on `nthreads` host threads (contiguous
+/// chunks), mutating shared state through
+/// [`crate::util::pool::AtomicCells`] CAS/swap claims, and returns its
+/// weighted work units (`EDGE_COST` per edge, [`CAS_COST`] per atomic it
+/// issued, ...). Work is recorded per item and folded into the serial
+/// warp cost model after the join, so modeled cycles are a deterministic
+/// function of the per-item work even though host scheduling is not.
+/// `body(host_tid, item)` receives the host-thread id so kernels can keep
+/// per-thread output buffers and merge them deterministically by id.
+/// No [`WriteOrder`] applies: claim arbitration is the hardware race
+/// itself, and any interleaving is one of the legal schedules the serial
+/// orders enumerate.
+pub fn launch_parallel_racy<F>(
+    clock: &mut DeviceClock,
+    mapping: ThreadMapping,
+    n: usize,
+    nthreads: usize,
+    body: F,
+) where
+    F: Fn(usize, usize) -> u64 + Sync,
+{
+    clock.charge_launch();
+    let nthreads = nthreads.max(1);
+    let mut work = vec![0u64; n];
+    {
+        let w = crate::util::pool::SharedSlice::new(&mut work);
+        let per = n.div_ceil(nthreads).max(1);
+        crate::util::pool::fork_join(nthreads, |tid| {
+            let lo = (tid * per).min(n);
+            let hi = ((tid + 1) * per).min(n);
+            for item in lo..hi {
+                let units = body(tid, item);
+                // SAFETY: index `item` belongs to this thread's chunk only.
+                unsafe { w.set(item, units) };
+            }
+        });
+    }
+    let (warp_sum, max_warp) =
+        fold_lane_cost(mapping.total_threads(n), n, ITEM_COST, |item| work[item]);
+    clock.charge_warp_work(warp_sum, max_warp);
+}
+
+/// [`launch_parallel_racy`] over an explicit frontier worklist: visits
+/// exactly `items`, charges [`FRONTIER_ITEM_COST`] per item plus the work
+/// the body reports (which should include [`COMPACTION_COST`] per
+/// worklist append and [`CAS_COST`] per atomic, like the serial
+/// [`launch_frontier`] bodies do).
+pub fn launch_frontier_parallel<F>(
+    clock: &mut DeviceClock,
+    mapping: ThreadMapping,
+    items: &[u32],
+    nthreads: usize,
+    body: F,
+) where
+    F: Fn(usize, usize) -> u64 + Sync,
+{
+    clock.charge_launch();
+    let n = items.len();
+    let nthreads = nthreads.max(1);
+    let mut work = vec![0u64; n];
+    {
+        let w = crate::util::pool::SharedSlice::new(&mut work);
+        let per = n.div_ceil(nthreads).max(1);
+        crate::util::pool::fork_join(nthreads, |tid| {
+            let lo = (tid * per).min(n);
+            let hi = ((tid + 1) * per).min(n);
+            for idx in lo..hi {
+                let units = body(tid, items[idx] as usize);
+                // SAFETY: index `idx` belongs to this thread's chunk only.
+                unsafe { w.set(idx, units) };
+            }
+        });
+    }
+    let (warp_sum, max_warp) =
+        fold_lane_cost(mapping.total_threads(n), n, FRONTIER_ITEM_COST, |idx| work[idx]);
+    clock.charge_warp_work(warp_sum, max_warp);
 }
 
 /// Parallel host execution of a *per-item-disjoint* kernel (INITBFSARRAY,
@@ -542,6 +678,69 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn launch_parallel_racy_matches_serial_cost_for_cas_free_body() {
+        // a body that issues no atomics must cost exactly what the serial
+        // launch charges for the same per-item edge counts
+        use std::sync::atomic::{AtomicU32, Ordering};
+        for mapping in [ThreadMapping::Ct, ThreadMapping::Mt] {
+            for n in [0usize, 1, 33, 1000, 70_000] {
+                let mut serial = DeviceClock::default();
+                launch(&mut serial, mapping, WriteOrder::Forward, 0, n, |i| (i % 3) as u64);
+                for nthreads in [1usize, 4] {
+                    let mut par = DeviceClock::default();
+                    let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+                    launch_parallel_racy(&mut par, mapping, n, nthreads, |_tid, i| {
+                        seen[i].fetch_add(1, Ordering::Relaxed);
+                        (i % 3) as u64 * EDGE_COST
+                    });
+                    assert_eq!(par.cycles, serial.cycles, "{mapping:?} n={n} t={nthreads}");
+                    assert_eq!(par.parallel_cycles, serial.parallel_cycles);
+                    assert!(seen.iter().all(|a| a.load(Ordering::Relaxed) == 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn launch_frontier_parallel_matches_serial_frontier_cost() {
+        let items: Vec<u32> = (0..777u32).map(|i| i * 3).collect();
+        for mapping in [ThreadMapping::Ct, ThreadMapping::Mt] {
+            let mut serial = DeviceClock::default();
+            launch_frontier(&mut serial, mapping, WriteOrder::Forward, 0, &items, |c| {
+                (c % 5) as u64
+            });
+            let mut par = DeviceClock::default();
+            launch_frontier_parallel(&mut par, mapping, &items, 4, |_tid, c| (c % 5) as u64);
+            assert_eq!(par.cycles, serial.cycles, "{mapping:?}");
+            assert_eq!(par.parallel_cycles, serial.parallel_cycles);
+        }
+    }
+
+    #[test]
+    fn charge_uniform_scan_costs_like_zero_edge_launch_body() {
+        let n = 5000;
+        let mut scan = DeviceClock::default();
+        scan.charge_launch();
+        charge_uniform_scan(&mut scan, ThreadMapping::Ct, n);
+        let mut full = DeviceClock::default();
+        launch(&mut full, ThreadMapping::Ct, WriteOrder::Forward, 0, n, |_| 0);
+        assert_eq!(scan.cycles, full.cycles);
+        assert_eq!(scan.parallel_cycles, full.parallel_cycles);
+    }
+
+    #[test]
+    fn charge_frontier_scan_costs_like_zero_work_frontier_launch() {
+        let items: Vec<u32> = (0..777u32).collect();
+        let mut scan = DeviceClock::default();
+        scan.charge_launch();
+        charge_frontier_scan(&mut scan, ThreadMapping::Ct, items.len());
+        let mut launched = DeviceClock::default();
+        launch_frontier(&mut launched, ThreadMapping::Ct, WriteOrder::Forward, 0, &items, |_| 0);
+        assert_eq!(scan.cycles, launched.cycles);
+        assert_eq!(scan.parallel_cycles, launched.parallel_cycles);
     }
 
     #[test]

@@ -4,23 +4,30 @@
 //!
 //! Two execution-mode knobs ride on top of the paper's eight variants:
 //! * [`FrontierMode::Compacted`] swaps the full-`nc` BFS sweeps for
-//!   worklist-driven ones (`gpubfs_frontier`/`gpubfs_wr_frontier`); the
-//!   driver owns the frontier lifecycle — built by
-//!   `init_bfs_array_frontier` each phase, consumed/produced per level,
-//!   discarded on the APsB early break. `RunStats::frontier_peak` /
-//!   `frontier_total` record what the worklist saved.
-//! * `GpuConfig::device_parallelism` executes the per-item-disjoint
-//!   kernels on host threads (same results, same modeled cycles).
+//!   worklist-driven ones (`gpubfs_frontier`/`gpubfs_wr_frontier`) *and*
+//!   hands ALTERNATE the endpoint worklist those sweeps emit, skipping
+//!   the all-rows selection scan. The driver owns both worklist
+//!   lifecycles — built/cleared each phase, consumed per level (frontier)
+//!   or per phase (endpoints). `RunStats::{frontier_peak, frontier_total,
+//!   endpoints_total}` record what the worklists saved.
+//! * `GpuConfig::device_parallelism` executes *every* kernel on host
+//!   threads: the per-item-disjoint ones with unchanged results and
+//!   cycles, the racy ones (BFS sweeps, ALTERNATE) through the atomic
+//!   CAS substrate in `gpu::device` — claim winners follow the host
+//!   schedule (one legal serialization of the CUDA race), modeled cycles
+//!   gain the CAS charges, and the final cardinality is
+//!   schedule-independent (property-tested against serial).
 //!
 //! The matching cardinality is maintained incrementally (seeded from the
 //! initial matching, updated from FIXMATCHING's piggybacked count and the
 //! safety net) instead of the former two `O(nc)` scans per phase.
 
 use super::config::{ApDriver, BfsKernel, FrontierMode, GpuConfig};
-use super::device::DeviceClock;
+use super::device::{charge_frontier_scan, charge_uniform_scan, DeviceClock};
 use super::kernels::{
     alternate, fixmatching, gpubfs, gpubfs_frontier, gpubfs_wr, gpubfs_wr_frontier,
-    init_bfs_array, init_bfs_array_frontier, wr_chosen_endpoints, GpuState, LaunchCfg, L0,
+    init_bfs_array, init_bfs_array_frontier, wr_chosen_endpoints, wr_chosen_endpoints_from,
+    GpuState, LaunchCfg, L0,
 };
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
@@ -60,11 +67,15 @@ impl GpuMatcher {
         let mut cardinality = init.cardinality();
         let mut frontier: Vec<u32> = Vec::new();
         let mut next_frontier: Vec<u32> = Vec::new();
+        // endpoint rows flagged `-2` this phase, compacted by the frontier
+        // BFS kernels so ALTERNATE skips its all-rows selection scan
+        let mut endpoints: Vec<u32> = Vec::new();
 
         loop {
             // ---- one phase: combined BFS over all unmatched columns ----
             if compacted {
                 init_bfs_array_frontier(&mut state, cfg, with_root, &mut frontier, &mut clock);
+                endpoints.clear();
             } else {
                 init_bfs_array(&mut state, cfg, with_root, &mut clock);
             }
@@ -84,6 +95,7 @@ impl GpuMatcher {
                             bfs_level,
                             &frontier,
                             &mut next_frontier,
+                            &mut endpoints,
                             cfg,
                             &mut clock,
                         ),
@@ -93,6 +105,7 @@ impl GpuMatcher {
                             bfs_level,
                             &frontier,
                             &mut next_frontier,
+                            &mut endpoints,
                             cfg,
                             improved_wr,
                             &mut clock,
@@ -128,9 +141,24 @@ impl GpuMatcher {
 
             // ---- speculative augmentation + repair ----
             let before = cardinality;
+            if compacted {
+                stats.endpoints_total += endpoints.len() as u64;
+            }
             if improved_wr {
-                let chosen = wr_chosen_endpoints(&state);
-                alternate(&mut state, cfg, Some(chosen), &mut clock);
+                let chosen = if compacted {
+                    // filter the endpoint worklist instead of scanning
+                    // all nr rows — charged under the same warp model as
+                    // the FullScan selection so the two branches stay
+                    // comparable in both cycle views
+                    charge_frontier_scan(&mut clock, cfg.mapping, endpoints.len());
+                    wr_chosen_endpoints_from(&state, &endpoints)
+                } else {
+                    charge_uniform_scan(&mut clock, cfg.mapping, g.nr);
+                    wr_chosen_endpoints(&state)
+                };
+                alternate(&mut state, cfg, Some(chosen.as_slice()), &mut clock);
+            } else if compacted {
+                alternate(&mut state, cfg, Some(endpoints.as_slice()), &mut clock);
             } else {
                 alternate(&mut state, cfg, None, &mut clock);
             }
@@ -402,8 +430,10 @@ mod tests {
         assert!(fc.stats.frontier_peak > 0);
         assert!(fc.stats.frontier_peak <= g.nc as u64);
         assert!(fc.stats.frontier_total >= fc.stats.frontier_peak);
+        assert!(fc.stats.endpoints_total > 0, "compacted ALTERNATE must consume the worklist");
         assert_eq!(full.stats.frontier_peak, 0, "FullScan must not report frontiers");
         assert_eq!(full.stats.frontier_total, 0);
+        assert_eq!(full.stats.endpoints_total, 0);
         assert!(
             fc.stats.device_cycles < full.stats.device_cycles,
             "compacted {} must undercut full scan {}",
@@ -414,21 +444,63 @@ mod tests {
     }
 
     #[test]
-    fn device_parallelism_changes_nothing_observable() {
+    fn device_parallelism_preserves_cardinality_all_modes() {
+        // the atomic path may pick different claim winners (and pays the
+        // CAS charges), but the cardinality it reaches must match serial
+        // for every driver × kernel × frontier mode
         let g = crate::graph::gen::Family::Banded.generate(800, 3);
         let init = InitHeuristic::Cheap.run(&g);
-        for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
-            let serial = GpuMatcher::new(GpuConfig { frontier, ..Default::default() })
-                .run(&g, init.clone());
-            let par = GpuMatcher::new(GpuConfig {
-                frontier,
-                device_parallelism: 4,
-                ..Default::default()
-            })
-            .run(&g, init.clone());
-            assert_eq!(serial.matching, par.matching, "{frontier:?}");
-            assert_eq!(serial.stats, par.stats, "{frontier:?}");
+        for driver in [ApDriver::Apfb, ApDriver::Apsb] {
+            for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
+                for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
+                    let base = GpuConfig { driver, kernel, frontier, ..Default::default() };
+                    let serial = GpuMatcher::new(base).run(&g, init.clone());
+                    let par = GpuMatcher::new(GpuConfig { device_parallelism: 4, ..base })
+                        .run(&g, init.clone());
+                    par.matching
+                        .certify(&g)
+                        .unwrap_or_else(|e| panic!("{} parallel: {e}", base.name()));
+                    assert_eq!(
+                        serial.matching.cardinality(),
+                        par.matching.cardinality(),
+                        "{} serial vs parallel",
+                        base.name()
+                    );
+                }
+            }
         }
+    }
+
+    #[test]
+    fn prop_parallel_equals_serial_cardinality_every_variant() {
+        // the tentpole qcheck: parallel ≡ serial cardinality for every
+        // driver × kernel × frontier mode on random bipartite graphs
+        forall(Config::cases(8), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 22);
+            let g = from_edges(nr, nc, &edges);
+            for driver in [ApDriver::Apfb, ApDriver::Apsb] {
+                for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
+                    for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
+                        let base = GpuConfig { driver, kernel, frontier, ..Default::default() };
+                        let s = GpuMatcher::new(base).run(&g, Matching::empty(nr, nc));
+                        let p = GpuMatcher::new(GpuConfig { device_parallelism: 3, ..base })
+                            .run(&g, Matching::empty(nr, nc));
+                        p.matching
+                            .certify(&g)
+                            .map_err(|e| format!("{} parallel: {e}", base.name()))?;
+                        if s.matching.cardinality() != p.matching.cardinality() {
+                            return Err(format!(
+                                "{}: serial {} != parallel {}",
+                                base.name(),
+                                s.matching.cardinality(),
+                                p.matching.cardinality()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

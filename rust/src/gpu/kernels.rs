@@ -3,11 +3,21 @@
 //!
 //! Each BFS kernel has a frontier-compacted twin (`*_frontier`) for
 //! [`super::config::FrontierMode::Compacted`]: identical per-column body,
-//! but the launch covers an explicit worklist and emits the next one, so
-//! sparse late levels stop paying the `O(nc)` scan floor. INITBFSARRAY
-//! and FIXMATCHING — whose writes are per-index disjoint — additionally
-//! run host-parallel when `LaunchCfg::par_threads > 1`, with modeled
-//! cycles unchanged.
+//! but the launch covers an explicit worklist and emits the next one —
+//! plus the endpoint worklist (rows newly flagged `-2`) that lets the
+//! compacted ALTERNATE skip its all-rows selection scan — so sparse late
+//! levels stop paying the `O(nc)`/`O(nr)` scan floors.
+//!
+//! Every kernel runs host-parallel when `LaunchCfg::par_threads > 1`:
+//! INITBFSARRAY and FIXMATCHING (per-index-disjoint writes) keep modeled
+//! cycles bit-identical to serial, while the racy kernels — GPUBFS,
+//! GPUBFS-WR, their frontier twins, and ALTERNATE — go through the
+//! atomic substrate ([`crate::util::pool::AtomicCells`], CAS claims
+//! charged [`CAS_COST`]). Claim winners then depend on the host schedule,
+//! which is one legal serialization of the CUDA race: the per-level claim
+//! *sets* stay deterministic for GPUBFS, and the final matching
+//! cardinality is schedule-independent for all of them (FIXMATCHING plus
+//! the driver's safety net absorb any interleaving).
 //!
 //! All array/sentinel conventions match the paper exactly:
 //! * `rmatch[r] = -1` unmatched, `-2` = endpoint of a discovered
@@ -21,15 +31,16 @@
 //!   plain "satisfied" marker `L0-2 = 0` — an off-by-one latent in the
 //!   paper's description.)
 
-use super::config::{ThreadMapping, WriteOrder};
+use super::config::{ThreadMapping, WriteOrder, WARP_SIZE};
 use super::device::{
-    launch, launch_frontier, launch_parallel, DeviceClock, StepPlan, WarpStepper,
-    COMPACTION_COST, EDGE_COST,
+    charge_uniform_scan, launch, launch_frontier, launch_frontier_parallel, launch_parallel,
+    launch_parallel_racy, DeviceClock, StepPlan, WarpStepper, CAS_COST, COMPACTION_COST,
+    EDGE_COST, ITEM_COST, WARP_COST,
 };
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::Matching;
-use crate::util::pool::SharedSlice;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::pool::{fork_join, AtomicCells, SharedSlice};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// BFS start level. The paper's APsB-GPUBFS-WR improvement requires
 /// `L0 = 2` so that `bfs_array` stays positive for live levels.
@@ -197,7 +208,12 @@ pub fn init_bfs_array_frontier(
     });
 }
 
-/// GPUBFS — Algorithm 2: one level expansion over all columns.
+/// GPUBFS — Algorithm 2: one level expansion over all columns. With
+/// `cfg.par_threads > 1` the expansion runs host-parallel under the
+/// atomic substrate (level claims via CAS, charged [`CAS_COST`]); the
+/// set of columns claimed per level is the same as serial — only which
+/// frontier column wins a claim (the `predecessor` entry) is decided by
+/// the race.
 pub fn gpubfs(
     g: &BipartiteCsr,
     state: &mut GpuState,
@@ -205,6 +221,9 @@ pub fn gpubfs(
     cfg: LaunchCfg,
     clock: &mut DeviceClock,
 ) -> u64 {
+    if cfg.par_threads > 1 {
+        return gpubfs_par(g, state, bfs_level, cfg, clock);
+    }
     let mut edges_total = 0u64;
     let GpuState { bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, .. } =
         state;
@@ -235,21 +254,86 @@ pub fn gpubfs(
     edges_total
 }
 
+/// Host-parallel GPUBFS: the same per-column body as [`gpubfs`], with the
+/// two racy writes turned into atomic claims — `bfs_array[col_match]`
+/// moves `L0-1 → level+1` via CAS (exactly one thread wins and writes the
+/// predecessor), and `rmatch[row]` moves `-1 → -2` via CAS (the winner
+/// records the endpoint's predecessor). Mirrors the serial first-visitor-
+/// wins semantics; losers pay the CAS and move on.
+fn gpubfs_par(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    cfg: LaunchCfg,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let GpuState { bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, .. } =
+        state;
+    let edges_total = AtomicU64::new(0);
+    let vi = AtomicBool::new(false);
+    let apf = AtomicBool::new(false);
+    {
+        let bfs = AtomicCells::new(bfs_array);
+        let pred = AtomicCells::new(predecessor);
+        let rm = AtomicCells::new(rmatch);
+        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, |_tid, col_vertex| {
+            if bfs.load(col_vertex) != bfs_level {
+                return 0;
+            }
+            let mut edges = 0u64;
+            let mut work = 0u64;
+            for &nr in g.col_neighbors(col_vertex) {
+                edges += 1;
+                work += EDGE_COST;
+                let neighbor_row = nr as usize;
+                let col_match = rm.load(neighbor_row);
+                if col_match > -1 {
+                    if bfs.load(col_match as usize) == L0 - 1 {
+                        work += CAS_COST;
+                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                            vi.store(true, Ordering::Relaxed);
+                            pred.store(neighbor_row, col_vertex as i32);
+                        }
+                    }
+                } else if col_match == -1 {
+                    work += CAS_COST;
+                    if rm.cas(neighbor_row, -1, -2) {
+                        pred.store(neighbor_row, col_vertex as i32);
+                        apf.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+            edges_total.fetch_add(edges, Ordering::Relaxed);
+            work
+        });
+    }
+    *vertex_inserted |= vi.into_inner();
+    *augmenting_path_found |= apf.into_inner();
+    edges_total.into_inner()
+}
+
 /// GPUBFS over an explicit frontier ([`super::config::FrontierMode::Compacted`]):
 /// the same per-column body as [`gpubfs`], but the launch covers only the
-/// live columns of this level and appends each newly claimed column to
-/// `next` — per-launch work is `O(|frontier| + edges(frontier))` instead
-/// of `O(nc)`. Appends are charged [`COMPACTION_COST`], edge scans
-/// [`EDGE_COST`]. Returns edges scanned.
+/// live columns of this level, appends each newly claimed column to
+/// `next`, and appends each newly flagged endpoint row (`rmatch → -2`) to
+/// `endpoints` — the worklist the compacted ALTERNATE consumes instead of
+/// scanning all rows. Per-launch work is `O(|frontier| + edges(frontier))`
+/// instead of `O(nc)`. Appends are charged [`COMPACTION_COST`], edge
+/// scans [`EDGE_COST`]. Returns edges scanned.
+#[allow(clippy::too_many_arguments)]
 pub fn gpubfs_frontier(
     g: &BipartiteCsr,
     state: &mut GpuState,
     bfs_level: i32,
     frontier: &[u32],
     next: &mut Vec<u32>,
+    endpoints: &mut Vec<u32>,
     cfg: LaunchCfg,
     clock: &mut DeviceClock,
 ) -> u64 {
+    if cfg.par_threads > 1 {
+        return gpubfs_frontier_par(g, state, bfs_level, frontier, next, endpoints, cfg, clock);
+    }
     let mut edges_total = 0u64;
     let GpuState { bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, .. } =
         state;
@@ -273,12 +357,99 @@ pub fn gpubfs_frontier(
                 rmatch[neighbor_row] = -2;
                 predecessor[neighbor_row] = col_vertex as i32;
                 *augmenting_path_found = true;
+                endpoints.push(neighbor_row as u32);
+                appended += 1;
             }
         }
         edges_total += edges;
         edges * EDGE_COST + appended * COMPACTION_COST
     });
     edges_total
+}
+
+/// Per-host-thread output buffers for the parallel frontier kernels; one
+/// slot per host thread, merged into the shared worklists in thread-id
+/// order after the join so the merge is deterministic given the claim
+/// outcomes.
+#[derive(Default)]
+struct FrontierBufs {
+    next: Vec<u32>,
+    endpoints: Vec<u32>,
+}
+
+fn merge_frontier_bufs(bufs: Vec<FrontierBufs>, next: &mut Vec<u32>, endpoints: &mut Vec<u32>) {
+    for b in bufs {
+        next.extend_from_slice(&b.next);
+        endpoints.extend_from_slice(&b.endpoints);
+    }
+}
+
+/// Host-parallel frontier GPUBFS: CAS level claims as in [`gpubfs_par`],
+/// with claimed columns / flagged endpoints appended to per-thread
+/// buffers and merged by host-thread id.
+#[allow(clippy::too_many_arguments)]
+fn gpubfs_frontier_par(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    frontier: &[u32],
+    next: &mut Vec<u32>,
+    endpoints: &mut Vec<u32>,
+    cfg: LaunchCfg,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let nthreads = cfg.par_threads.max(1);
+    let mut bufs: Vec<FrontierBufs> = (0..nthreads).map(|_| FrontierBufs::default()).collect();
+    let edges_total = AtomicU64::new(0);
+    let vi = AtomicBool::new(false);
+    let apf = AtomicBool::new(false);
+    {
+        let GpuState { bfs_array, predecessor, rmatch, .. } = state;
+        let bfs = AtomicCells::new(bfs_array);
+        let pred = AtomicCells::new(predecessor);
+        let rm = AtomicCells::new(rmatch);
+        let out = SharedSlice::new(&mut bufs);
+        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, |tid, col_vertex| {
+            debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
+            let mut edges = 0u64;
+            let mut work = 0u64;
+            for &nr in g.col_neighbors(col_vertex) {
+                edges += 1;
+                work += EDGE_COST;
+                let neighbor_row = nr as usize;
+                let col_match = rm.load(neighbor_row);
+                if col_match > -1 {
+                    if bfs.load(col_match as usize) == L0 - 1 {
+                        work += CAS_COST;
+                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                            vi.store(true, Ordering::Relaxed);
+                            pred.store(neighbor_row, col_vertex as i32);
+                            // SAFETY: slot `tid` is only touched by this
+                            // host thread.
+                            unsafe { out.get_mut(tid) }.next.push(col_match as u32);
+                            work += COMPACTION_COST;
+                        }
+                    }
+                } else if col_match == -1 {
+                    work += CAS_COST;
+                    if rm.cas(neighbor_row, -1, -2) {
+                        pred.store(neighbor_row, col_vertex as i32);
+                        apf.store(true, Ordering::Relaxed);
+                        // SAFETY: slot `tid` is only touched by this host
+                        // thread.
+                        unsafe { out.get_mut(tid) }.endpoints.push(neighbor_row as u32);
+                        work += COMPACTION_COST;
+                    }
+                }
+            }
+            edges_total.fetch_add(edges, Ordering::Relaxed);
+            work
+        });
+    }
+    merge_frontier_bufs(bufs, next, endpoints);
+    state.vertex_inserted |= vi.into_inner();
+    state.augmenting_path_found |= apf.into_inner();
+    edges_total.into_inner()
 }
 
 /// GPUBFS-WR — Algorithm 4: level expansion carrying the `root` array,
@@ -293,6 +464,9 @@ pub fn gpubfs_wr(
     encode_endpoint: bool,
     clock: &mut DeviceClock,
 ) -> u64 {
+    if cfg.par_threads > 1 {
+        return gpubfs_wr_par(g, state, bfs_level, cfg, encode_endpoint, clock);
+    }
     let mut edges_total = 0u64;
     let GpuState {
         bfs_array,
@@ -341,10 +515,89 @@ pub fn gpubfs_wr(
     edges_total
 }
 
+/// Host-parallel GPUBFS-WR: [`gpubfs_wr`]'s body under the atomic
+/// substrate. Level claims and endpoint flags go through CAS as in
+/// [`gpubfs_par`]; the claim winner also installs the root. The
+/// endpoint encoding (`bfs_array[root] ← -(row+1)`) is a plain racy
+/// store whose last writer wins — the same arbitration the serial
+/// write orders enumerate — and the satisfied-tree early exit reads
+/// whatever encoding is visible, which only ever *prunes* work the
+/// serial schedule might still have done.
+fn gpubfs_wr_par(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    cfg: LaunchCfg,
+    encode_endpoint: bool,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let GpuState {
+        bfs_array,
+        predecessor,
+        root,
+        rmatch,
+        vertex_inserted,
+        augmenting_path_found,
+        ..
+    } = state;
+    let edges_total = AtomicU64::new(0);
+    let vi = AtomicBool::new(false);
+    let apf = AtomicBool::new(false);
+    {
+        let bfs = AtomicCells::new(bfs_array);
+        let pred = AtomicCells::new(predecessor);
+        let rt = AtomicCells::new(root);
+        let rm = AtomicCells::new(rmatch);
+        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, |_tid, col_vertex| {
+            if bfs.load(col_vertex) != bfs_level {
+                return 0;
+            }
+            let my_root = rt.load(col_vertex);
+            debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
+            if bfs.load(my_root as usize) < L0 - 1 {
+                return 0; // early exit: this tree already found a path
+            }
+            let mut edges = 0u64;
+            let mut work = 0u64;
+            for &nr in g.col_neighbors(col_vertex) {
+                edges += 1;
+                work += EDGE_COST;
+                let neighbor_row = nr as usize;
+                let col_match = rm.load(neighbor_row);
+                if col_match > -1 {
+                    if bfs.load(col_match as usize) == L0 - 1 {
+                        work += CAS_COST;
+                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                            vi.store(true, Ordering::Relaxed);
+                            rt.store(col_match as usize, my_root);
+                            pred.store(neighbor_row, col_vertex as i32);
+                        }
+                    }
+                } else if col_match == -1 {
+                    work += CAS_COST;
+                    if rm.cas(neighbor_row, -1, -2) {
+                        pred.store(neighbor_row, col_vertex as i32);
+                        bfs.store(
+                            my_root as usize,
+                            if encode_endpoint { -(neighbor_row as i32 + 1) } else { L0 - 2 },
+                        );
+                        apf.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+            edges_total.fetch_add(edges, Ordering::Relaxed);
+            work
+        });
+    }
+    *vertex_inserted |= vi.into_inner();
+    *augmenting_path_found |= apf.into_inner();
+    edges_total.into_inner()
+}
+
 /// GPUBFS-WR over an explicit frontier: [`gpubfs_wr`]'s body (root
 /// carrying, satisfied-tree early exit, optional endpoint encoding) on a
-/// compacted worklist, appending claimed columns to `next`. Returns edges
-/// scanned.
+/// compacted worklist, appending claimed columns to `next` and newly
+/// flagged endpoint rows to `endpoints`. Returns edges scanned.
 #[allow(clippy::too_many_arguments)]
 pub fn gpubfs_wr_frontier(
     g: &BipartiteCsr,
@@ -352,10 +605,24 @@ pub fn gpubfs_wr_frontier(
     bfs_level: i32,
     frontier: &[u32],
     next: &mut Vec<u32>,
+    endpoints: &mut Vec<u32>,
     cfg: LaunchCfg,
     encode_endpoint: bool,
     clock: &mut DeviceClock,
 ) -> u64 {
+    if cfg.par_threads > 1 {
+        return gpubfs_wr_frontier_par(
+            g,
+            state,
+            bfs_level,
+            frontier,
+            next,
+            endpoints,
+            cfg,
+            encode_endpoint,
+            clock,
+        );
+    }
     let mut edges_total = 0u64;
     let GpuState {
         bfs_array,
@@ -397,6 +664,8 @@ pub fn gpubfs_wr_frontier(
                 rmatch[neighbor_row] = -2;
                 predecessor[neighbor_row] = col_vertex as i32;
                 *augmenting_path_found = true;
+                endpoints.push(neighbor_row as u32);
+                appended += 1;
             }
         }
         edges_total += edges;
@@ -405,25 +674,120 @@ pub fn gpubfs_wr_frontier(
     edges_total
 }
 
+/// Host-parallel frontier GPUBFS-WR: [`gpubfs_wr_par`]'s atomic claims on
+/// a compacted worklist, with per-thread output buffers merged by
+/// host-thread id.
+#[allow(clippy::too_many_arguments)]
+fn gpubfs_wr_frontier_par(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    frontier: &[u32],
+    next: &mut Vec<u32>,
+    endpoints: &mut Vec<u32>,
+    cfg: LaunchCfg,
+    encode_endpoint: bool,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let nthreads = cfg.par_threads.max(1);
+    let mut bufs: Vec<FrontierBufs> = (0..nthreads).map(|_| FrontierBufs::default()).collect();
+    let edges_total = AtomicU64::new(0);
+    let vi = AtomicBool::new(false);
+    let apf = AtomicBool::new(false);
+    {
+        let GpuState { bfs_array, predecessor, root, rmatch, .. } = state;
+        let bfs = AtomicCells::new(bfs_array);
+        let pred = AtomicCells::new(predecessor);
+        let rt = AtomicCells::new(root);
+        let rm = AtomicCells::new(rmatch);
+        let out = SharedSlice::new(&mut bufs);
+        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, |tid, col_vertex| {
+            debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
+            let my_root = rt.load(col_vertex);
+            debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
+            if bfs.load(my_root as usize) < L0 - 1 {
+                return 0; // early exit: this tree already found a path
+            }
+            let mut edges = 0u64;
+            let mut work = 0u64;
+            for &nr in g.col_neighbors(col_vertex) {
+                edges += 1;
+                work += EDGE_COST;
+                let neighbor_row = nr as usize;
+                let col_match = rm.load(neighbor_row);
+                if col_match > -1 {
+                    if bfs.load(col_match as usize) == L0 - 1 {
+                        work += CAS_COST;
+                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                            vi.store(true, Ordering::Relaxed);
+                            rt.store(col_match as usize, my_root);
+                            pred.store(neighbor_row, col_vertex as i32);
+                            // SAFETY: slot `tid` is only touched by this
+                            // host thread.
+                            unsafe { out.get_mut(tid) }.next.push(col_match as u32);
+                            work += COMPACTION_COST;
+                        }
+                    }
+                } else if col_match == -1 {
+                    work += CAS_COST;
+                    if rm.cas(neighbor_row, -1, -2) {
+                        pred.store(neighbor_row, col_vertex as i32);
+                        bfs.store(
+                            my_root as usize,
+                            if encode_endpoint { -(neighbor_row as i32 + 1) } else { L0 - 2 },
+                        );
+                        apf.store(true, Ordering::Relaxed);
+                        // SAFETY: slot `tid` is only touched by this host
+                        // thread.
+                        unsafe { out.get_mut(tid) }.endpoints.push(neighbor_row as u32);
+                        work += COMPACTION_COST;
+                    }
+                }
+            }
+            edges_total.fetch_add(edges, Ordering::Relaxed);
+            work
+        });
+    }
+    merge_frontier_bufs(bufs, next, endpoints);
+    state.vertex_inserted |= vi.into_inner();
+    state.augmenting_path_found |= apf.into_inner();
+    edges_total.into_inner()
+}
+
 /// ALTERNATE — Algorithm 3, executed in intra-warp lockstep so the
 /// paper's same-warp double-claim inconsistency actually occurs (and is
 /// then repaired by FIXMATCHING). `only_rows` restricts the starting rows
-/// (used by the WR variant); `None` starts from every `rmatch == -2` row.
+/// (the WR variant's chosen endpoints, or the compacted endpoint worklist
+/// the frontier BFS kernels emitted); `None` starts from every
+/// `rmatch == -2` row, which on device means a kernel scanning all `nr`
+/// rows — that selection scan is charged here (it rides inside the
+/// ALTERNATE launch), and is exactly the cost
+/// [`super::config::FrontierMode::Compacted`] eliminates by handing over
+/// the worklist. With `cfg.par_threads > 1` the alternation runs
+/// host-parallel and lock-free: column claims become atomic exchanges
+/// (charged [`CAS_COST`]) instead of lockstep write-order arbitration.
 pub fn alternate(
     state: &mut GpuState,
     cfg: LaunchCfg,
-    only_rows: Option<Vec<u32>>,
+    only_rows: Option<&[u32]>,
     clock: &mut DeviceClock,
 ) {
     // thread payload: (current row_vertex, steps taken)
     let max_steps = (state.rmatch.len() + state.cmatch.len() + 2) as u32;
     let mut threads: Vec<(i32, u32)> = match only_rows {
-        Some(rows) => rows.into_iter().map(|r| (r as i32, 0)).collect(),
-        None => (0..state.rmatch.len())
-            .filter(|&r| state.rmatch[r] == -2)
-            .map(|r| (r as i32, 0))
-            .collect(),
+        Some(rows) => rows.iter().map(|&r| (r as i32, 0)).collect(),
+        None => {
+            charge_uniform_scan(clock, cfg.mapping, state.rmatch.len());
+            (0..state.rmatch.len())
+                .filter(|&r| state.rmatch[r] == -2)
+                .map(|r| (r as i32, 0))
+                .collect()
+        }
     };
+    if cfg.par_threads > 1 {
+        alternate_atomic(state, cfg, threads, max_steps, clock);
+        return;
+    }
     let stepper = WarpStepper { order: cfg.order, seed: cfg.seed };
     /// the memory the ALTERNATE kernel touches
     struct Mem<'a> {
@@ -467,26 +831,139 @@ pub fn alternate(
     );
 }
 
+/// Host-parallel lock-free ALTERNATE: warps are distributed over host
+/// threads in contiguous chunks; within a warp, lanes still advance in
+/// lockstep rounds, but a lane's column claim is an atomic exchange —
+/// `cmatch[col].swap(row)` hands the displaced row to exactly one thread,
+/// which chases it, exactly the CAS discipline a real lock-free ALTERNATE
+/// kernel uses. Each step charges `ITEM_COST + CAS_COST`; per-warp round
+/// costs are recorded into per-warp slots and folded after the join so
+/// the bill is a deterministic function of the steps actually taken.
+fn alternate_atomic(
+    state: &mut GpuState,
+    cfg: LaunchCfg,
+    mut threads: Vec<(i32, u32)>,
+    max_steps: u32,
+    clock: &mut DeviceClock,
+) {
+    clock.charge_launch();
+    let n = threads.len();
+    if n == 0 {
+        return;
+    }
+    let n_warps = n.div_ceil(WARP_SIZE);
+    let mut warp_cost = vec![0u64; n_warps];
+    {
+        let GpuState { predecessor, rmatch, cmatch, .. } = state;
+        let pred = AtomicCells::new(predecessor);
+        let rm = AtomicCells::new(rmatch);
+        let cm = AtomicCells::new(cmatch);
+        let costs = SharedSlice::new(&mut warp_cost);
+        let payload = SharedSlice::new(&mut threads);
+        let nthreads = cfg.par_threads.max(1);
+        let per = n_warps.div_ceil(nthreads).max(1);
+        fork_join(nthreads, |tid| {
+            let wlo = (tid * per).min(n_warps);
+            let whi = ((tid + 1) * per).min(n_warps);
+            for w in wlo..whi {
+                let lo = w * WARP_SIZE;
+                let hi = ((w + 1) * WARP_SIZE).min(n);
+                let mut alive = vec![true; hi - lo];
+                let mut cost = 0u64;
+                loop {
+                    // one lockstep round over this warp's live lanes
+                    let mut round_work = 0u64;
+                    for (k, i) in (lo..hi).enumerate() {
+                        if !alive[k] {
+                            continue;
+                        }
+                        round_work += ITEM_COST;
+                        // SAFETY: payload `i` belongs to this warp, which
+                        // is owned by this host thread.
+                        let t = unsafe { payload.get_mut(i) };
+                        let (row_vertex, steps) = *t;
+                        if row_vertex < 0 || steps >= max_steps {
+                            alive[k] = false;
+                            continue;
+                        }
+                        let matched_col = pred.load(row_vertex as usize);
+                        if matched_col < 0 {
+                            alive[k] = false; // stale/cleared predecessor guard
+                            continue;
+                        }
+                        let matched_row = cm.load(matched_col as usize);
+                        // paper line 8: another alternation already
+                        // claimed this column
+                        if matched_row > -1 && pred.load(matched_row as usize) == matched_col {
+                            alive[k] = false;
+                            continue;
+                        }
+                        // lock-free claim (lines 10–12): exchange the
+                        // column's row and chase whatever we displaced
+                        round_work += CAS_COST;
+                        let displaced = cm.swap(matched_col as usize, row_vertex);
+                        rm.store(row_vertex as usize, matched_col);
+                        *t = (displaced, steps + 1);
+                        if displaced == -1 {
+                            alive[k] = false; // free column: path realized
+                        }
+                    }
+                    if round_work > 0 {
+                        cost += WARP_COST + round_work;
+                    }
+                    if !alive.iter().any(|&a| a) {
+                        break;
+                    }
+                }
+                // SAFETY: slot `w` belongs to this host thread's chunk.
+                unsafe { costs.set(w, cost) };
+            }
+        });
+    }
+    let warp_sum: u64 = warp_cost.iter().sum();
+    let max_warp = warp_cost.iter().max().copied().unwrap_or(0);
+    clock.charge_warp_work(warp_sum, max_warp);
+}
+
+/// The APsB-GPUBFS-WR chosen-endpoint predicate: row `r` alternates iff
+/// it is flagged (`rmatch == -2`) and its root's `bfs_array` slot encodes
+/// exactly `r` (the improvement stores `-(r+1)` there).
+fn is_chosen_endpoint(state: &GpuState, r: usize) -> bool {
+    if state.rmatch[r] != -2 {
+        return false;
+    }
+    let c = state.predecessor[r];
+    if c < 0 {
+        return false;
+    }
+    let rt = state.root[c as usize];
+    if rt < 0 {
+        return false;
+    }
+    state.bfs_array[rt as usize] == -(r as i32 + 1)
+}
+
 /// Starting rows for the APsB-GPUBFS-WR improved ALTERNATE: only the row
 /// encoded in its root's `bfs_array` slot alternates; every other
-/// `rmatch == -2` row is left for FIXMATCHING to reset.
+/// `rmatch == -2` row is left for FIXMATCHING to reset. Scans all rows —
+/// the FullScan selection; callers in compacted mode should filter the
+/// endpoint worklist via [`wr_chosen_endpoints_from`] instead.
 pub fn wr_chosen_endpoints(state: &GpuState) -> Vec<u32> {
     (0..state.rmatch.len())
-        .filter(|&r| {
-            if state.rmatch[r] != -2 {
-                return false;
-            }
-            let c = state.predecessor[r];
-            if c < 0 {
-                return false;
-            }
-            let rt = state.root[c as usize];
-            if rt < 0 {
-                return false;
-            }
-            state.bfs_array[rt as usize] == -(r as i32 + 1)
-        })
+        .filter(|&r| is_chosen_endpoint(state, r))
         .map(|r| r as u32)
+        .collect()
+}
+
+/// [`wr_chosen_endpoints`] restricted to the compacted endpoint worklist:
+/// every `-2` row was appended to `endpoints` by the frontier BFS kernels
+/// when it was flagged, so filtering the worklist is equivalent to the
+/// all-rows scan at `O(|endpoints|)` cost.
+pub fn wr_chosen_endpoints_from(state: &GpuState, endpoints: &[u32]) -> Vec<u32> {
+    endpoints
+        .iter()
+        .copied()
+        .filter(|&r| is_chosen_endpoint(state, r as usize))
         .collect()
 }
 
@@ -779,13 +1256,23 @@ mod tests {
         assert_eq!(frontier, vec![0]);
 
         let mut next: Vec<u32> = Vec::new();
+        let mut endpoints: Vec<u32> = Vec::new();
         let mut level = L0;
         loop {
             full.vertex_inserted = false;
             let e_full = gpubfs(&g, &mut full, level, cfg(), &mut cf);
             fc.vertex_inserted = false;
             next.clear();
-            let e_fc = gpubfs_frontier(&g, &mut fc, level, &frontier, &mut next, cfg(), &mut cc);
+            let e_fc = gpubfs_frontier(
+                &g,
+                &mut fc,
+                level,
+                &frontier,
+                &mut next,
+                &mut endpoints,
+                cfg(),
+                &mut cc,
+            );
             assert_eq!(e_full, e_fc, "level {level}: same edges scanned");
             assert_eq!(fc.bfs_array, full.bfs_array, "level {level}");
             assert_eq!(fc.predecessor, full.predecessor, "level {level}");
@@ -799,6 +1286,7 @@ mod tests {
             level += 1;
         }
         assert!(fc.augmenting_path_found);
+        assert_eq!(endpoints, vec![1], "flagged row compacted into the endpoint worklist");
         // (cost wins need nc >> |frontier|; see sparse_frontier_launch_beats_
         // full_scan and the driver-level cost test — this graph is too tiny)
         assert!(cc.launches == cf.launches);
@@ -815,17 +1303,143 @@ mod tests {
         init_bfs_array_frontier(&mut st, cfg(), true, &mut frontier, &mut clock);
         assert_eq!(frontier, vec![0]);
         let mut next: Vec<u32> = Vec::new();
-        gpubfs_wr_frontier(&g, &mut st, L0, &frontier, &mut next, cfg(), false, &mut clock);
+        let mut endpoints: Vec<u32> = Vec::new();
+        gpubfs_wr_frontier(
+            &g,
+            &mut st,
+            L0,
+            &frontier,
+            &mut next,
+            &mut endpoints,
+            cfg(),
+            false,
+            &mut clock,
+        );
         assert!(st.augmenting_path_found);
         assert_eq!(st.bfs_array[0], L0 - 2);
         assert_eq!(next, vec![1], "claimed column compacted into the next frontier");
+        assert_eq!(endpoints, vec![0], "flagged row compacted into the endpoint worklist");
         assert_eq!(st.root[1], 0);
         let frontier = next;
         let mut next: Vec<u32> = Vec::new();
-        let scanned =
-            gpubfs_wr_frontier(&g, &mut st, L0 + 1, &frontier, &mut next, cfg(), false, &mut clock);
+        let scanned = gpubfs_wr_frontier(
+            &g,
+            &mut st,
+            L0 + 1,
+            &frontier,
+            &mut next,
+            &mut endpoints,
+            cfg(),
+            false,
+            &mut clock,
+        );
         assert_eq!(scanned, 0, "satisfied tree must not expand");
         assert!(next.is_empty());
+        assert_eq!(endpoints, vec![0]);
+    }
+
+    #[test]
+    fn parallel_gpubfs_claims_same_levels_as_serial() {
+        // which columns get claimed per level is schedule-independent
+        // (claims are first-wins either way); only predecessor winners may
+        // differ — so bfs_array and rmatch must match serial bit-for-bit.
+        let g = crate::graph::gen::Family::Road.generate(900, 5);
+        let init = crate::matching::init::InitHeuristic::Cheap.run(&g);
+        let par = LaunchCfg { par_threads: 4, ..cfg() };
+        let (mut a, mut ca) = fresh(&g, &init);
+        init_bfs_array(&mut a, cfg(), false, &mut ca);
+        let (mut b, mut cb) = fresh(&g, &init);
+        init_bfs_array(&mut b, par, false, &mut cb);
+        let mut level = L0;
+        loop {
+            a.vertex_inserted = false;
+            let ea = gpubfs(&g, &mut a, level, cfg(), &mut ca);
+            b.vertex_inserted = false;
+            let eb = gpubfs(&g, &mut b, level, par, &mut cb);
+            assert_eq!(ea, eb, "level {level}: same edges scanned");
+            assert_eq!(a.bfs_array, b.bfs_array, "level {level}");
+            assert_eq!(a.rmatch, b.rmatch, "level {level}");
+            assert_eq!(a.vertex_inserted, b.vertex_inserted);
+            assert_eq!(a.augmenting_path_found, b.augmenting_path_found);
+            if !a.vertex_inserted {
+                break;
+            }
+            level += 1;
+        }
+        assert!(cb.cycles >= ca.cycles, "the atomic path pays the CAS charges");
+    }
+
+    #[test]
+    fn parallel_frontier_gpubfs_matches_serial_claim_sets() {
+        let g = crate::graph::gen::Family::Banded.generate(700, 9);
+        let init = crate::matching::init::InitHeuristic::Cheap.run(&g);
+        let par = LaunchCfg { par_threads: 4, ..cfg() };
+        let (mut a, mut ca) = fresh(&g, &init);
+        let mut fa: Vec<u32> = Vec::new();
+        init_bfs_array_frontier(&mut a, cfg(), false, &mut fa, &mut ca);
+        let (mut b, mut cb) = fresh(&g, &init);
+        let mut fb: Vec<u32> = Vec::new();
+        init_bfs_array_frontier(&mut b, par, false, &mut fb, &mut cb);
+        assert_eq!(fa, fb);
+        let (mut na, mut ea_pts) = (Vec::new(), Vec::new());
+        let (mut nb, mut eb_pts) = (Vec::new(), Vec::new());
+        let mut level = L0;
+        loop {
+            a.vertex_inserted = false;
+            na.clear();
+            gpubfs_frontier(&g, &mut a, level, &fa, &mut na, &mut ea_pts, cfg(), &mut ca);
+            b.vertex_inserted = false;
+            nb.clear();
+            gpubfs_frontier(&g, &mut b, level, &fb, &mut nb, &mut eb_pts, par, &mut cb);
+            assert_eq!(a.bfs_array, b.bfs_array, "level {level}");
+            assert_eq!(a.rmatch, b.rmatch, "level {level}");
+            // worklists may be permuted by the racy claim winners; the
+            // *sets* must agree
+            let (mut sa, mut sb) = (na.clone(), nb.clone());
+            sa.sort_unstable();
+            sb.sort_unstable();
+            assert_eq!(sa, sb, "level {level}: same claimed columns");
+            if !a.vertex_inserted {
+                break;
+            }
+            std::mem::swap(&mut fa, &mut na);
+            std::mem::swap(&mut fb, &mut nb);
+            level += 1;
+        }
+        let (mut sa, mut sb) = (ea_pts.clone(), eb_pts.clone());
+        sa.sort_unstable();
+        sb.sort_unstable();
+        assert_eq!(sa, sb, "same endpoint rows flagged");
+    }
+
+    #[test]
+    fn parallel_alternate_realizes_paths_and_repairs() {
+        // c0 - r0 = c1 - r1 through the atomic (swap-based) ALTERNATE
+        let g = from_edges(2, 2, &[(0, 0), (0, 1), (1, 1)]);
+        let mut init = Matching::empty(2, 2);
+        init.join(0, 1);
+        let par = LaunchCfg { par_threads: 4, ..cfg() };
+        let (mut st, mut clock) = fresh(&g, &init);
+        init_bfs_array(&mut st, par, false, &mut clock);
+        gpubfs(&g, &mut st, L0, par, &mut clock);
+        gpubfs(&g, &mut st, L0 + 1, par, &mut clock);
+        alternate(&mut st, par, None, &mut clock);
+        let (_, card) = fixmatching(&mut st, par, &mut clock);
+        let m = st.to_matching();
+        m.certify(&g).unwrap();
+        assert_eq!(m.cardinality(), 2);
+        assert_eq!(card, 2);
+    }
+
+    #[test]
+    fn wr_chosen_endpoints_from_matches_full_scan() {
+        let g = from_edges(2, 1, &[(0, 0), (1, 0)]);
+        let (mut st, mut clock) = fresh(&g, &Matching::empty(2, 1));
+        init_bfsarray_and_run_wr(&g, &mut st, &mut clock);
+        let scan = wr_chosen_endpoints(&st);
+        let all_rows: Vec<u32> = (0..2).collect();
+        assert_eq!(wr_chosen_endpoints_from(&st, &all_rows), scan);
+        assert!(wr_chosen_endpoints_from(&st, &[]).is_empty());
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //! Beyond the paper's eight variants, every driver supports
 //! [`FrontierMode::Compacted`]: worklist-driven BFS sweeps whose per-launch
 //! cost is `O(|frontier| + edges(frontier))` rather than the paper's
-//! `O(nc)` full scan (named with an "-FC" suffix, e.g.
-//! "APFB-GPUBFS-WR-CT-FC"), and host-parallel execution of the
-//! per-item-disjoint kernels (`GpuConfig::device_parallelism`).
+//! `O(nc)` full scan, plus an endpoint worklist that lets ALTERNATE skip
+//! its `O(nr)` selection scan (named with an "-FC" suffix, e.g.
+//! "APFB-GPUBFS-WR-CT-FC" — the coordinator router's default GPU pick),
+//! and host-parallel execution of *all* kernels
+//! (`GpuConfig::device_parallelism`): disjoint kernels bit-identically,
+//! racy ones through the atomic CAS substrate in [`device`].
 
 pub mod config;
 pub mod device;

@@ -37,6 +37,10 @@ pub struct RunStats {
     /// per-item scan work a FullScan run would have paid `nc` per launch
     /// for (0 under FullScan)
     pub frontier_total: u64,
+    /// total endpoint-worklist items handed to the compacted ALTERNATE —
+    /// the rows a FullScan run selects with an `O(nr)` scan per phase
+    /// (0 under FullScan)
+    pub endpoints_total: u64,
 }
 
 impl RunStats {

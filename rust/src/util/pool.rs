@@ -9,6 +9,12 @@
 //!    mapping and OpenMP `schedule(static)` used by Azad et al.).
 //!  * [`parallel_chunks`] — contiguous chunk assignment for cache-friendly
 //!    scans.
+//!
+//! Plus two shared-slice views for the pool's unsafe-but-disciplined
+//! access patterns: [`SharedSlice`] (per-index-disjoint writes) and
+//! [`AtomicCells`] (racing CAS/swap claims over an `i32` slice).
+
+use std::sync::atomic::{AtomicI32, Ordering};
 
 /// Number of worker threads to use by default: honours
 /// `BIMATCH_THREADS`, falls back to available parallelism.
@@ -132,12 +138,84 @@ impl<'a, T> SharedSlice<'a, T> {
         debug_assert!(i < self.len);
         *self.ptr.add(i)
     }
+
+    /// Mutable access to the element at `i` (for per-thread accumulation
+    /// buffers indexed by host-thread id).
+    ///
+    /// # Safety
+    /// `i < self.len()`, no other thread may concurrently access index
+    /// `i`, and the caller must not hold two overlapping borrows of the
+    /// same index.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// A `&mut [i32]` viewed as atomic cells, shareable across the scoped
+/// pool for kernels whose writes *race* (GPUBFS level claims, ALTERNATE
+/// column claims). Where [`SharedSlice`] encodes "each index has one
+/// writer", `AtomicCells` encodes "any thread may CAS/swap any index" —
+/// the lock-free discipline the GPU kernels would use on real hardware.
+///
+/// All operations are `Relaxed`: the scoped pool's join provides the
+/// cross-thread happens-before at kernel-launch boundaries, and *within*
+/// a launch the interleaving of claims is exactly the race the simulator
+/// models (any outcome is a legal schedule; FIXMATCHING repairs the rest).
+pub struct AtomicCells<'a> {
+    cells: &'a [AtomicI32],
+}
+
+impl<'a> AtomicCells<'a> {
+    pub fn new(slice: &'a mut [i32]) -> Self {
+        // SAFETY: `AtomicI32` is guaranteed to have the same in-memory
+        // representation as `i32`, and the exclusive borrow rules out any
+        // non-atomic aliasing for the wrapper's lifetime.
+        let cells = unsafe {
+            std::slice::from_raw_parts(slice.as_mut_ptr() as *const AtomicI32, slice.len())
+        };
+        Self { cells }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    #[inline]
+    pub fn load(&self, i: usize) -> i32 {
+        self.cells[i].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn store(&self, i: usize, v: i32) {
+        self.cells[i].store(v, Ordering::Relaxed)
+    }
+
+    /// Atomically replace the value at `i`, returning the previous value.
+    #[inline]
+    pub fn swap(&self, i: usize, v: i32) -> i32 {
+        self.cells[i].swap(v, Ordering::Relaxed)
+    }
+
+    /// Compare-and-swap: set `i` to `new` iff it currently holds
+    /// `current`. Returns whether this thread won the claim.
+    #[inline]
+    pub fn cas(&self, i: usize, current: i32, new: i32) -> bool {
+        self.cells[i].compare_exchange(current, new, Ordering::Relaxed, Ordering::Relaxed).is_ok()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    use std::sync::Mutex;
 
     #[test]
     fn fork_join_runs_every_thread() {
@@ -187,6 +265,43 @@ mod tests {
     #[test]
     fn default_threads_at_least_one() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn atomic_cells_cas_has_exactly_one_winner() {
+        let mut data = vec![-1i32; 4];
+        let cells = AtomicCells::new(&mut data);
+        let wins = AtomicUsize::new(0);
+        fork_join(8, |tid| {
+            if cells.cas(2, -1, tid as i32) {
+                wins.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(wins.load(Ordering::Relaxed), 1, "exactly one CAS must win");
+        assert_eq!(cells.len(), 4);
+        assert!(!cells.is_empty());
+        assert!(cells.load(2) >= 0);
+        assert_eq!(data[0], -1, "untouched cells keep their value");
+    }
+
+    #[test]
+    fn atomic_cells_swap_conserves_values() {
+        // 8 threads swap their id into one cell: every displaced value is
+        // returned to exactly one thread, so {initial} ∪ {ids} minus the
+        // final cell value equals the multiset of returned values.
+        let mut data = vec![-1i32];
+        let cells = AtomicCells::new(&mut data);
+        let got = Mutex::new(Vec::new());
+        fork_join(8, |tid| {
+            let prev = cells.swap(0, tid as i32);
+            got.lock().unwrap().push(prev);
+        });
+        let mut seen = got.into_inner().unwrap();
+        seen.push(cells.load(0));
+        seen.sort_unstable();
+        let mut expect: Vec<i32> = (-1..8).collect();
+        expect.sort_unstable();
+        assert_eq!(seen, expect);
     }
 
     #[test]

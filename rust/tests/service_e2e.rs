@@ -27,6 +27,10 @@ fn service_runs_mixed_trace_certified() {
     }
     assert_eq!(metrics.completed(), Family::ALL.len() as u64);
     assert_eq!(metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(
+        metrics.jobs_submitted.load(std::sync::atomic::Ordering::Relaxed),
+        metrics.completed() + metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed)
+    );
 }
 
 #[test]
@@ -39,8 +43,8 @@ fn router_sends_banded_to_pfp_and_permuted_to_gpu() {
     let (outcomes, _) = svc.run_batch(jobs);
     assert_eq!(outcomes[0].algo, "pfp", "banded original should route to pfp");
     assert_eq!(
-        outcomes[1].algo, "gpu:APFB-GPUBFS-WR-CT",
-        "banded RCP should route to the GPU algorithm"
+        outcomes[1].algo, "gpu:APFB-GPUBFS-WR-CT-FC",
+        "banded RCP should route to the frontier-compacted GPU default"
     );
 }
 
@@ -55,7 +59,18 @@ fn failure_injection_bad_algo_and_missing_file() {
     assert!(outcomes[0].error.is_some());
     assert!(outcomes[1].error.is_some());
     assert!(outcomes[2].error.is_none() && outcomes[2].certified);
-    assert_eq!(metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed), 2);
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 2);
+    assert_eq!(
+        metrics.jobs_submitted.load(Ordering::Relaxed),
+        metrics.completed() + metrics.jobs_failed.load(Ordering::Relaxed),
+        "every submitted job must be accounted as completed or failed"
+    );
+    assert_eq!(
+        metrics.matched_total.load(Ordering::Relaxed),
+        outcomes[2].cardinality as u64,
+        "failed jobs must not contribute to matched_total"
+    );
 }
 
 #[test]
