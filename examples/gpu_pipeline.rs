@@ -66,12 +66,12 @@ fn main() {
 
     // 3. native simulator + sequential reference
     let t = Timer::start();
-    let r3 = GpuMatcher::default().run(&g, init.clone());
+    let r3 = GpuMatcher::default().run_detached(&g, init.clone());
     let t3 = t.elapsed_secs();
     r3.matching.certify(&g).unwrap();
     println!("native simulator   |M| = {} ({:.3}s)", r3.matching.cardinality(), t3);
 
-    let r4 = Hk.run(&g, init);
+    let r4 = Hk.run_detached(&g, init);
     println!("hopcroft-karp      |M| = {}", r4.matching.cardinality());
 
     assert_eq!(r1.matching.cardinality(), r4.matching.cardinality());

@@ -23,7 +23,7 @@ fn main() {
     // 3. the paper's winning GPU algorithm: APFB + GPUBFS-WR + CT
     let gpu = GpuMatcher::default();
     let t = Timer::start();
-    let result = gpu.run(&g, init.clone());
+    let result = gpu.run_detached(&g, init.clone());
     let gpu_secs = t.elapsed_secs();
 
     // 4. certified maximum (validity + Berge maximality)
@@ -40,7 +40,7 @@ fn main() {
 
     // 5. sequential Hopcroft–Karp on the same initialization
     let t = Timer::start();
-    let hk = Hk.run(&g, init);
+    let hk = Hk.run_detached(&g, init);
     let hk_secs = t.elapsed_secs();
     hk.matching.certify(&g).unwrap();
     println!("hk:  |M| = {} in {:.4}s ({} phases)", hk.matching.cardinality(), hk_secs, hk.stats.phases);

@@ -53,7 +53,7 @@ fn main() {
 
     // 1. maximum transversal via the paper's GPU algorithm
     let init = InitHeuristic::KarpSipser.run(&a);
-    let r = GpuMatcher::default().run(&a, init);
+    let r = GpuMatcher::default().run_detached(&a, init);
     r.matching.certify(&a).unwrap();
     println!("maximum transversal: {}/{n}", r.matching.cardinality());
 

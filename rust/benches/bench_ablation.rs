@@ -35,7 +35,11 @@ fn main() {
         for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
             for mapping in [ThreadMapping::Mt, ThreadMapping::Ct] {
                 let cfg = GpuConfig { driver: ApDriver::Apfb, kernel, mapping, ..Default::default() };
-                let (r, clock) = GpuMatcher::new(cfg).run_with_clock(g, init.clone());
+                let (r, clock) = GpuMatcher::new(cfg).run_with_clock(
+                    g,
+                    init.clone(),
+                    &mut bimatch::matching::algo::RunCtx::detached(),
+                );
                 r.matching.certify(g).unwrap();
                 dev.push(clock.as_device_ms());
             }
@@ -64,7 +68,7 @@ fn main() {
             let cfg = GpuConfig { write_order: order, seed: 0xAB1E, ..Default::default() };
             let init = InitHeuristic::Cheap.run(g);
             let timer = Timer::start();
-            let r = GpuMatcher::new(cfg).run(g, init);
+            let r = GpuMatcher::new(cfg).run_detached(g, init);
             let wall = timer.elapsed_secs();
             r.matching.certify(g).unwrap();
             t.row(vec![
@@ -88,7 +92,7 @@ fn main() {
             let t_init = t0.elapsed_secs();
             let init_card = init.cardinality();
             let t1 = Timer::start();
-            let r = GpuMatcher::default().run(g, init);
+            let r = GpuMatcher::default().run_detached(g, init);
             let t_match = t1.elapsed_secs();
             t.row(vec![
                 name.clone(),

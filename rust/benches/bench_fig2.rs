@@ -21,7 +21,7 @@ fn series(driver: ApDriver, g: &bimatch::graph::BipartiteCsr) -> Vec<u32> {
         ..Default::default()
     };
     let init = InitHeuristic::Cheap.run(g);
-    let r = GpuMatcher::new(cfg).run(g, init);
+    let r = GpuMatcher::new(cfg).run_detached(g, init);
     r.stats.launches_per_phase
 }
 

@@ -42,7 +42,7 @@ fn run_mode(
     init: &bimatch::matching::Matching,
 ) -> ModeRun {
     let t = Timer::start();
-    let r = GpuMatcher::new(cfg).run(g, init.clone());
+    let r = GpuMatcher::new(cfg).run_detached(g, init.clone());
     let wall = t.elapsed_secs();
     ModeRun {
         device_ms: r.stats.device_cycles as f64 / 1e6,

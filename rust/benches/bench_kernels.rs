@@ -140,7 +140,7 @@ fn main() {
             let native = bimatch::gpu::GpuMatcher::default();
             use bimatch::MatchingAlgorithm;
             let secs = bench(3, || {
-                let _ = native.run(&small, sinit.clone());
+                let _ = native.run_detached(&small, sinit.clone());
             });
             t.row(vec!["native simulator (same graph)".into(), format!("{secs:.4}"), String::new()]);
             common::emit("XLA artifact path", &t.render());

@@ -134,7 +134,7 @@ mod tests {
     use crate::MatchingAlgorithm;
 
     fn max_matching(g: &BipartiteCsr) -> Matching {
-        Hk.run(g, Matching::empty(g.nr, g.nc)).matching
+        Hk.run_detached(g, Matching::empty(g.nr, g.nc)).matching
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! offline). `bimatch help` prints usage.
 
 use crate::coordinator::job::{GraphSource, MatchJob};
-use crate::coordinator::{registry, Executor, Metrics, Server};
+use crate::coordinator::{registry, AlgoSpec, Executor, Metrics, Server};
 use crate::graph::gen::Family;
 use crate::harness::{catalog, Scale};
 use crate::matching::init::InitHeuristic;
@@ -16,11 +16,15 @@ bimatch — GPU-accelerated maximum cardinality bipartite matching (Deveci et al
 USAGE:
   bimatch run   (--family <name> --n <int> [--seed <int>] [--permute] | --mtx <path>)
                 [--algo <name>|auto] [--init none|cheap|ks] [--no-certify]
+                [--timeout-ms <int>]   (deadline over the whole job — load,
+                init, matching; a tripped run fails with a distinct
+                timeout error instead of returning a possibly
+                non-maximum matching)
                 [--frontier fullscan|compacted]   (gpu:* algos; compacted =
                 worklist-driven BFS sweeps + endpoint-list ALTERNATE, the
-                \"-FC\" registry variants — now the router's default GPU
-                pick. The flag overrides the mode of whichever gpu:*
-                variant runs, named or auto-routed; CPU-routed graphs
+                \"-FC\" registry variants — the router's default GPU
+                pick. The flag edits the frontier field of whichever
+                gpu:* spec runs, named or auto-routed; CPU-routed graphs
                 keep their pfp/dfs pick, so `--frontier fullscan` forces
                 the paper-faithful variant only where a GPU algorithm
                 actually runs)
@@ -28,10 +32,15 @@ USAGE:
   bimatch verify --mtx <path>          cross-check several algorithms on a file
   bimatch serve  [--addr <ip:port>]    TCP line-protocol matching service
   bimatch algos                        list registered algorithms
+                (also: bimatch --list-algos — CI diffs this against the
+                registry-names.txt golden file)
   bimatch catalog                      list the benchmark instance catalog
   bimatch artifacts-check              compile every artifact on the PJRT client
   bimatch help
 
+Algorithm names are the AlgoSpec wire format: sequential (hk hkdw pfp dfs bfs
+pr), multicore with optional thread count (p-hk p-pfp p-dbfs, e.g. p-dbfs@4),
+gpu:<VARIANT>[-FC], xla:apfb-full, xla:bfs-level-hybrid; `gpu` = paper's best.
 Generator families: road delaunay hugetrace rgg kron social amazon web banded uniform
 Env: BIMATCH_THREADS (host pool size), BIMATCH_DEVICE_PAR (host threads for ALL
 GPU-simulator kernels: disjoint ones run bit-identically, racy ones — BFS
@@ -77,7 +86,7 @@ pub fn main_with_args(args: Vec<String>) -> i32 {
         "gen" => cmd_gen(&flags),
         "verify" => cmd_verify(&flags),
         "serve" => cmd_serve(&flags),
-        "algos" => {
+        "algos" | "--list-algos" => {
             for n in registry::all_names() {
                 println!("{n}");
             }
@@ -133,35 +142,53 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         }
     };
     let mut job = MatchJob::new(0, source);
-    let algo_choice = flags.get("algo").filter(|a| a.as_str() != "auto").cloned();
+    // parse --algo at the CLI boundary: malformed names never build a job
+    let spec = match flags.get("algo").filter(|a| a.as_str() != "auto") {
+        Some(name) => match name.parse::<AlgoSpec>() {
+            Ok(spec) => Some(spec),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
     if let Some(mode) = flags.get("frontier") {
         use crate::gpu::FrontierMode;
         let Some(fm) = FrontierMode::from_name(mode) else {
             eprintln!("unknown --frontier {mode} (fullscan|compacted)");
             return 2;
         };
-        // with an explicit algo, --frontier only makes sense for gpu:*
-        // names ("gpu" is the registry alias for the default variant)
-        if let Some(algo) = &algo_choice {
-            if algo != "gpu" && !algo.starts_with("gpu:") {
-                eprintln!("--frontier applies to gpu:* algorithms, not {algo}");
+        // with an explicit algo, --frontier only makes sense for GPU specs
+        if let Some(spec) = &spec {
+            if !spec.is_gpu() {
+                eprintln!("--frontier applies to gpu:* algorithms, not {spec}");
                 return 2;
             }
         }
-        // the override is applied by the executor *after* routing: a GPU
-        // pick (named or auto-routed, including the router's new "-FC"
-        // default) gets its "-FC" suffix normalized to the requested
-        // mode, while CPU-routed graphs keep their pfp/dfs pick
+        // the override is applied by the executor *after* routing, as a
+        // typed field edit: a GPU spec (named or auto-routed, including
+        // the router's "-FC" default) gets the requested frontier mode,
+        // while CPU-routed graphs keep their pfp/dfs pick
         job = job.with_frontier(fm);
     }
-    if let Some(algo) = algo_choice {
-        job = job.with_algo(&algo);
+    if let Some(spec) = spec {
+        job = job.with_spec(spec);
     }
     if let Some(init) = flags.get("init") {
         match InitHeuristic::from_name(init) {
             Some(h) => job.init = h,
             None => {
                 eprintln!("unknown --init {init}");
+                return 2;
+            }
+        }
+    }
+    if let Some(t) = flags.get("timeout-ms") {
+        match t.parse::<u64>() {
+            Ok(ms) => job = job.with_timeout_ms(ms),
+            Err(e) => {
+                eprintln!("bad --timeout-ms: {e}");
                 return 2;
             }
         }
@@ -240,8 +267,8 @@ fn cmd_verify(flags: &HashMap<String, String>) -> i32 {
     let init = InitHeuristic::Cheap.run(&g);
     let mut card = None;
     for name in ["hk", "pfp", "pr", "gpu:APFB-GPUBFS-WR-CT", "p-dbfs"] {
-        let algo = registry::build(name, None).unwrap();
-        let r = algo.run(&g, init.clone());
+        let algo = registry::build_named(name, None).unwrap();
+        let r = algo.run_detached(&g, init.clone());
         if let Err(e) = r.matching.certify(&g) {
             eprintln!("{name}: CERTIFICATION FAILED: {e}");
             return 1;
@@ -407,6 +434,34 @@ mod tests {
             ("frontier", "fullscan"),
         ]));
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn run_command_timeout_ms() {
+        // generous deadline: normal completion
+        let code = cmd_run(&flags(&[("family", "uniform"), ("n", "200"), ("timeout-ms", "60000")]));
+        assert_eq!(code, 0);
+        // zero deadline: the run trips at its first checkpoint and the
+        // CLI reports the distinct timeout failure
+        let code = cmd_run(&flags(&[("family", "uniform"), ("n", "200"), ("timeout-ms", "0")]));
+        assert_eq!(code, 1);
+        // malformed value rejected before any work
+        assert_eq!(
+            cmd_run(&flags(&[("family", "uniform"), ("n", "100"), ("timeout-ms", "soon")])),
+            2
+        );
+    }
+
+    #[test]
+    fn run_command_rejects_malformed_algo() {
+        assert_eq!(
+            cmd_run(&flags(&[("family", "uniform"), ("n", "100"), ("algo", "gpu:NOPE-FC")])),
+            2
+        );
+        assert_eq!(
+            cmd_run(&flags(&[("family", "uniform"), ("n", "100"), ("algo", "p-hk@0")])),
+            2
+        );
     }
 
     #[test]

@@ -1,26 +1,55 @@
 //! Job execution: graph acquisition → cheap init → routing → matching →
 //! certification → outcome. Shared by the worker pool and the TCP server.
+//!
+//! The executor owns the serving-layer context every run gets: a shared
+//! [`WorkspacePool`] (scratch buffers reused across jobs), a
+//! [`CancelToken`] covering all in-flight runs, and the per-job deadline
+//! (`MatchJob::timeout`, measured from the start of execution). A tripped
+//! run is a *distinct* failure ([`JobError::DeadlineExceeded`] /
+//! [`JobError::Cancelled`]) — never a silently suboptimal answer.
 
-use super::job::{AlgoChoice, GraphSource, MatchJob, MatchOutcome};
+use super::job::{AlgoChoice, GraphSource, JobError, MatchJob, MatchOutcome};
 use super::metrics::Metrics;
 use super::registry;
 use super::router;
 use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{CancelToken, RunCtx, RunOutcome};
 use crate::runtime::Engine;
+use crate::util::pool::WorkspacePool;
 use crate::util::timer::Timer;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Instant;
 
-/// Stateless executor (cheap to clone across workers).
+/// Stateless-per-job executor (cheap to clone across workers; clones share
+/// the workspace pool and the cancellation token).
 #[derive(Clone)]
 pub struct Executor {
     pub engine: Option<Arc<Engine>>,
     pub metrics: Arc<Metrics>,
+    pool: Arc<WorkspacePool>,
+    cancel: CancelToken,
 }
 
 impl Executor {
     pub fn new(engine: Option<Arc<Engine>>, metrics: Arc<Metrics>) -> Self {
-        Self { engine, metrics }
+        Self {
+            engine,
+            metrics,
+            pool: Arc::new(WorkspacePool::new()),
+            cancel: CancelToken::new(),
+        }
+    }
+
+    /// The shared scratch-buffer pool (observability + tests).
+    pub fn workspace_pool(&self) -> &Arc<WorkspacePool> {
+        &self.pool
+    }
+
+    /// Token cancelling every in-flight and future run of this executor
+    /// (and its clones) at the next inter-phase checkpoint.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
     }
 
     fn acquire(&self, source: &GraphSource) -> Result<Arc<BipartiteCsr>, String> {
@@ -42,6 +71,8 @@ impl Executor {
 
     pub fn execute(&self, job: &MatchJob) -> MatchOutcome {
         let total = Timer::start();
+        // the deadline covers the whole job: load + init + matching
+        let deadline = job.timeout.map(|budget| Instant::now() + budget);
         let mut out = MatchOutcome {
             job_id: job.id,
             algo: String::new(),
@@ -55,13 +86,19 @@ impl Executor {
             t_init: 0.0,
             t_match: 0.0,
             phases: 0,
+            frontier_peak: 0,
+            endpoints_total: 0,
+            device_parallel_cycles: 0,
             error: None,
+        };
+        let fail = |out: &mut MatchOutcome, err: JobError| {
+            out.error = Some(err);
+            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
         };
         let g = match self.acquire(&job.source) {
             Ok(g) => g,
             Err(e) => {
-                out.error = Some(e);
-                self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                fail(&mut out, JobError::Load(e));
                 return out;
             }
         };
@@ -75,41 +112,50 @@ impl Executor {
         out.t_init = t_init.elapsed_secs();
         out.init_cardinality = init.cardinality();
 
-        let mut name = match &job.algo {
-            AlgoChoice::Auto => router::route_graph(&g).to_string(),
-            AlgoChoice::Named(n) => n.clone(),
+        let mut spec = match &job.algo {
+            AlgoChoice::Auto => router::route_graph(&g),
+            AlgoChoice::Spec(s) => *s,
         };
-        // frontier override: normalize the "-FC" suffix of a GPU pick to
-        // the requested mode, after routing — CPU picks stay untouched,
-        // so `--frontier fullscan` overrides the router's "-FC" default
-        // without forcing a GPU algorithm onto pfp/dfs-routed graphs
+        // frontier override as a typed field edit, applied *after* routing:
+        // a GPU pick (named or auto-routed) gets the requested mode while
+        // CPU-routed graphs keep their pfp/dfs pick — so `--frontier
+        // fullscan` forces the paper-faithful variant only where a GPU
+        // algorithm actually runs
         if let Some(fm) = job.frontier {
-            if name == "gpu" || name.starts_with("gpu:") {
-                use crate::gpu::{FrontierMode, GpuConfig};
-                let base = if name == "gpu" {
-                    format!("gpu:{}", GpuConfig::default().name())
-                } else {
-                    name.clone()
-                };
-                let stripped = base.strip_suffix("-FC").unwrap_or(&base);
-                name = match fm {
-                    FrontierMode::Compacted => format!("{stripped}-FC"),
-                    FrontierMode::FullScan => stripped.to_string(),
-                };
-            }
+            spec.set_frontier(fm);
         }
-        let Some(algo) = registry::build(&name, self.engine.clone()) else {
-            out.error = Some(format!("unknown algorithm {name}"));
-            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        out.algo = spec.to_string();
+        let Some(algo) = registry::build(&spec, self.engine.clone()) else {
+            fail(&mut out, JobError::Unavailable(registry::unavailable_msg(&spec)));
             return out;
         };
         out.algo = algo.name();
 
+        let mut ctx = RunCtx::new(self.pool.clone()).with_cancel(self.cancel.clone());
+        ctx.set_deadline(deadline);
         let t_match = Timer::start();
-        let result = algo.run(&g, init);
+        let result = algo.run(&g, init, &mut ctx);
         out.t_match = t_match.elapsed_secs();
         out.cardinality = result.matching.cardinality();
         out.phases = result.stats.phases;
+        out.frontier_peak = result.stats.frontier_peak;
+        out.endpoints_total = result.stats.endpoints_total;
+        out.device_parallel_cycles = result.stats.device_parallel_cycles;
+
+        match result.outcome {
+            RunOutcome::Complete => {}
+            RunOutcome::DeadlineExceeded => {
+                let timeout_ms = job.timeout.map(|d| d.as_millis() as u64).unwrap_or(0);
+                self.metrics.jobs_timed_out.fetch_add(1, Ordering::Relaxed);
+                fail(&mut out, JobError::DeadlineExceeded { timeout_ms });
+                return out;
+            }
+            RunOutcome::Cancelled => {
+                self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                fail(&mut out, JobError::Cancelled);
+                return out;
+            }
+        }
 
         if job.certify {
             match result.matching.certify(&g) {
@@ -119,9 +165,8 @@ impl Executor {
                     // job: it must not count as completed nor contribute
                     // its (untrusted) cardinality to matched_total, so
                     // `submitted == completed + failed` stays an invariant
-                    out.error = Some(format!("certification failed: {e}"));
                     self.metrics.certify_failures.fetch_add(1, Ordering::Relaxed);
-                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    fail(&mut out, JobError::Certify(e));
                     return out;
                 }
             }
@@ -176,21 +221,23 @@ mod tests {
     }
 
     #[test]
-    fn unknown_algorithm_is_error() {
+    fn unavailable_backend_is_a_distinct_error() {
+        // xla specs parse fine but cannot build without an engine
         let job = MatchJob::new(
             3,
             GraphSource::Generate { family: Family::Uniform, n: 50, seed: 1, permute: false },
         )
-        .with_algo("bogus");
+        .with_algo("xla:apfb-full");
         let out = exec().execute(&job);
-        assert!(out.error.as_deref().unwrap_or("").contains("unknown"));
+        assert!(matches!(out.error, Some(JobError::Unavailable(_))), "{:?}", out.error);
+        assert_eq!(out.algo, "xla:apfb-full");
     }
 
     #[test]
     fn missing_mtx_is_error_not_panic() {
         let job = MatchJob::new(4, GraphSource::MtxFile("/no/such/file.mtx".into()));
         let out = exec().execute(&job);
-        assert!(out.error.is_some());
+        assert!(matches!(out.error, Some(JobError::Load(_))));
     }
 
     #[test]
@@ -206,7 +253,7 @@ mod tests {
         let out = exec().execute(&mk(0).with_algo("gpu").with_frontier(FrontierMode::Compacted));
         assert_eq!(out.algo, "gpu:APFB-GPUBFS-WR-CT-FC");
         assert!(out.certified);
-        // an "-FC" name + fullscan override → suffix stripped
+        // an "-FC" name + fullscan override → compaction disabled
         let job = mk(1).with_algo("gpu:APsB-GPUBFS-CT-FC").with_frontier(FrontierMode::FullScan);
         let out = exec().execute(&job);
         assert_eq!(out.algo, "gpu:APsB-GPUBFS-CT");
@@ -242,7 +289,7 @@ mod tests {
 
     #[test]
     fn failed_jobs_do_not_pollute_completion_metrics() {
-        // every failure path (acquire, unknown algo) must land in
+        // every failure path (acquire, unbuildable algo) must land in
         // jobs_failed and leave jobs_completed / matched_total untouched,
         // so submitted == completed + failed stays an invariant (the
         // certification-failure path shares the same early return)
@@ -253,7 +300,7 @@ mod tests {
             0,
             GraphSource::Generate { family: Family::Uniform, n: 100, seed: 1, permute: false },
         )
-        .with_algo("no-such-algo");
+        .with_algo("xla:apfb-full"); // no engine → unavailable
         let missing = MatchJob::new(1, GraphSource::MtxFile("/no/such/file.mtx".into()));
         let good = MatchJob::new(
             2,
@@ -269,6 +316,68 @@ mod tests {
             metrics.matched_total.load(Ordering::Relaxed),
             2 * good_card,
             "only certified-complete jobs contribute to matched_total"
+        );
+    }
+
+    #[test]
+    fn timed_out_job_fails_distinctly() {
+        // a zero deadline trips at the first inter-phase checkpoint, for
+        // every backend the job could route to
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        let job = MatchJob::new(
+            9,
+            GraphSource::Generate { family: Family::Uniform, n: 800, seed: 3, permute: false },
+        )
+        .with_algo("hk")
+        .with_timeout_ms(0);
+        let out = e.execute(&job);
+        assert_eq!(out.error, Some(JobError::DeadlineExceeded { timeout_ms: 0 }));
+        assert!(!out.certified);
+        assert_eq!(metrics.jobs_timed_out.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.completed(), 0);
+    }
+
+    #[test]
+    fn cancelled_executor_fails_jobs_distinctly() {
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        e.cancel_token().cancel();
+        let job = MatchJob::new(
+            10,
+            GraphSource::Generate { family: Family::Uniform, n: 400, seed: 1, permute: false },
+        )
+        .with_algo("pfp");
+        let out = e.execute(&job);
+        assert_eq!(out.error, Some(JobError::Cancelled));
+        assert_eq!(metrics.jobs_cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn workspace_pool_reused_across_jobs() {
+        // the acceptance bar for workspace reuse: a second same-size job
+        // through the same executor leases the first job's buffers
+        let e = exec();
+        let mk = |id| {
+            MatchJob::new(
+                id,
+                GraphSource::Generate { family: Family::Uniform, n: 400, seed: 7, permute: false },
+            )
+            .with_algo("gpu:APFB-GPUBFS-WR-CT-FC")
+        };
+        let out = e.execute(&mk(0));
+        assert!(out.certified, "{:?}", out.error);
+        assert_eq!(e.workspace_pool().reuses(), 0, "first job allocates fresh");
+        let returned = e.workspace_pool().returns();
+        assert!(returned > 0, "buffers must come back to the pool");
+        let out = e.execute(&mk(1));
+        assert!(out.certified);
+        assert!(
+            e.workspace_pool().reuses() >= 3,
+            "second same-size job must lease the first job's buffers, reuses={}",
+            e.workspace_pool().reuses()
         );
     }
 }

@@ -1,9 +1,11 @@
 //! Job and result types for the matching service.
 
+use super::spec::AlgoSpec;
 use crate::graph::csr::BipartiteCsr;
 use crate::graph::gen::Family;
 use crate::matching::init::InitHeuristic;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Where the job's graph comes from.
 #[derive(Debug, Clone)]
@@ -17,13 +19,13 @@ pub enum GraphSource {
 }
 
 /// Which matcher to use.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AlgoChoice {
     /// let the router pick based on graph features
     Auto,
-    /// a registry name, e.g. "hk", "pfp", "gpu:APFB-GPUBFS-WR-CT",
-    /// "xla:apfb-full"
-    Named(String),
+    /// a typed spec, e.g. parsed from "hk", "p-dbfs@4",
+    /// "gpu:APFB-GPUBFS-WR-CT", "xla:apfb-full"
+    Spec(AlgoSpec),
 }
 
 /// One matching request.
@@ -36,10 +38,16 @@ pub struct MatchJob {
     /// verify validity+maximality before reporting (costs one BFS)
     pub certify: bool,
     /// frontier-mode override applied *after* routing: when the resolved
-    /// algorithm is a `gpu:*` variant, its "-FC" suffix is normalized to
-    /// this mode; CPU picks (pfp/dfs/...) are left untouched. `None`
-    /// keeps whatever the router or the caller named.
+    /// spec is a GPU variant, its `frontier` field is set to this mode
+    /// (a typed edit — see `AlgoSpec::set_frontier`); CPU picks
+    /// (pfp/dfs/...) are left untouched. `None` keeps whatever the router
+    /// or the caller specified.
     pub frontier: Option<crate::gpu::FrontierMode>,
+    /// overall deadline measured from the start of execution (graph
+    /// acquisition included). A job that trips it fails with
+    /// [`JobError::DeadlineExceeded`] instead of serving a possibly
+    /// non-maximum matching.
+    pub timeout: Option<Duration>,
 }
 
 impl MatchJob {
@@ -51,17 +59,62 @@ impl MatchJob {
             init: InitHeuristic::Cheap,
             certify: true,
             frontier: None,
+            timeout: None,
         }
     }
 
-    pub fn with_algo(mut self, name: &str) -> Self {
-        self.algo = AlgoChoice::Named(name.to_string());
+    /// Pick a matcher by registry name. Panics on a malformed name —
+    /// parse with `AlgoSpec::from_str` first (as the server and CLI do)
+    /// when the name comes from untrusted input.
+    pub fn with_algo(self, name: &str) -> Self {
+        let spec: AlgoSpec = name.parse().unwrap_or_else(|e| panic!("{e}"));
+        self.with_spec(spec)
+    }
+
+    pub fn with_spec(mut self, spec: AlgoSpec) -> Self {
+        self.algo = AlgoChoice::Spec(spec);
         self
     }
 
     pub fn with_frontier(mut self, mode: crate::gpu::FrontierMode) -> Self {
         self.frontier = Some(mode);
         self
+    }
+
+    pub fn with_timeout_ms(mut self, ms: u64) -> Self {
+        self.timeout = Some(Duration::from_millis(ms));
+        self
+    }
+}
+
+/// Why a job failed — typed so callers (and the TCP protocol) can
+/// distinguish a tripped deadline from a bad request or a certification
+/// failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// graph acquisition failed (generator/mtx errors)
+    Load(String),
+    /// the spec is known but cannot be built (xla without artifacts)
+    Unavailable(String),
+    /// the run completed but its result failed certification
+    Certify(String),
+    /// the run tripped its deadline at an inter-phase checkpoint
+    DeadlineExceeded { timeout_ms: u64 },
+    /// the run observed its cancellation token
+    Cancelled,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Load(e) => write!(f, "load failed: {e}"),
+            JobError::Unavailable(e) => write!(f, "algorithm unavailable: {e}"),
+            JobError::Certify(e) => write!(f, "certification failed: {e}"),
+            JobError::DeadlineExceeded { timeout_ms } => {
+                write!(f, "timeout: exceeded the {timeout_ms} ms deadline")
+            }
+            JobError::Cancelled => write!(f, "cancelled"),
+        }
     }
 }
 
@@ -81,12 +134,20 @@ pub struct MatchOutcome {
     pub t_init: f64,
     pub t_match: f64,
     pub phases: u64,
-    pub error: Option<String>,
+    /// largest BFS frontier a compacted sweep consumed (0 under FullScan
+    /// and for CPU algorithms) — lets remote clients observe compaction
+    pub frontier_peak: u64,
+    /// endpoint-worklist items the compacted ALTERNATE consumed
+    pub endpoints_total: u64,
+    /// parallel-model device cycles (0 for CPU algorithms)
+    pub device_parallel_cycles: u64,
+    pub error: Option<JobError>,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::spec::SeqKind;
 
     #[test]
     fn job_builder() {
@@ -94,9 +155,30 @@ mod tests {
             7,
             GraphSource::Generate { family: Family::Kron, n: 100, seed: 1, permute: false },
         )
-        .with_algo("hk");
+        .with_algo("hk")
+        .with_timeout_ms(250);
         assert_eq!(j.id, 7);
-        assert_eq!(j.algo, AlgoChoice::Named("hk".into()));
+        assert_eq!(j.algo, AlgoChoice::Spec(AlgoSpec::Seq(SeqKind::Hk)));
+        assert_eq!(j.timeout, Some(Duration::from_millis(250)));
         assert!(j.certify);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown algorithm")]
+    fn with_algo_panics_on_malformed_name() {
+        let _ = MatchJob::new(
+            0,
+            GraphSource::Generate { family: Family::Kron, n: 10, seed: 1, permute: false },
+        )
+        .with_algo("no-such-algo");
+    }
+
+    #[test]
+    fn job_error_display_is_distinct() {
+        let t = JobError::DeadlineExceeded { timeout_ms: 5 }.to_string();
+        assert!(t.starts_with("timeout:"), "{t}");
+        assert!(t.contains("5 ms"));
+        assert_eq!(JobError::Cancelled.to_string(), "cancelled");
+        assert!(JobError::Load("x".into()).to_string().contains("load failed"));
     }
 }

@@ -16,6 +16,10 @@ pub struct Metrics {
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
     pub certify_failures: AtomicU64,
+    /// jobs that tripped their deadline (also counted in `jobs_failed`)
+    pub jobs_timed_out: AtomicU64,
+    /// jobs abandoned via cancellation (also counted in `jobs_failed`)
+    pub jobs_cancelled: AtomicU64,
     pub edges_processed: AtomicU64,
     pub matched_total: AtomicU64,
     latency: [AtomicU64; N_BUCKETS],
@@ -77,11 +81,14 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} | matched={} edges={} | \
+            "jobs: submitted={} completed={} failed={} timeout={} cancelled={} | \
+             matched={} edges={} | \
              latency mean={:.4}s p50≤{:.4}s p95≤{:.4}s p99≤{:.4}s",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.completed(),
             self.jobs_failed.load(Ordering::Relaxed),
+            self.jobs_timed_out.load(Ordering::Relaxed),
+            self.jobs_cancelled.load(Ordering::Relaxed),
             self.matched_total.load(Ordering::Relaxed),
             self.edges_processed.load(Ordering::Relaxed),
             self.mean_latency(),

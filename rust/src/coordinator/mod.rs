@@ -11,9 +11,11 @@ pub mod registry;
 pub mod router;
 pub mod server;
 pub mod service;
+pub mod spec;
 
 pub use exec::Executor;
-pub use job::{AlgoChoice, GraphSource, MatchJob, MatchOutcome};
+pub use job::{AlgoChoice, GraphSource, JobError, MatchJob, MatchOutcome};
 pub use metrics::Metrics;
 pub use server::Server;
 pub use service::Service;
+pub use spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};

@@ -1,10 +1,15 @@
-//! Name → algorithm registry: every matcher in the library (sequential,
-//! multicore, the 8 GPU variants plus their frontier-compacted "-FC"
-//! twins — worklist-driven BFS sweeps *and* endpoint-list ALTERNATE, the
-//! router's default GPU pick — XLA-backed) constructible from its stable
-//! string name. The CLI, router, server protocol, and bench harness all
-//! resolve algorithms through here.
+//! [`AlgoSpec`] → algorithm registry: every matcher in the library
+//! (sequential, multicore, the 8 GPU variants plus their
+//! frontier-compacted "-FC" twins, XLA-backed) constructible from its
+//! typed spec — and hence from its stable string name via
+//! `AlgoSpec::from_str`. The CLI, router, server protocol, and bench
+//! harness all resolve algorithms through here.
+//!
+//! Registry-name stability is an enforced invariant: `all_names()` must
+//! match the checked-in `rust/registry-names.txt` golden file (unit test
+//! below; CI additionally diffs the file against `bimatch --list-algos`).
 
+use super::spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};
 use crate::gpu::{GpuConfig, GpuMatcher};
 use crate::matching::algo::MatchingAlgorithm;
 use crate::multicore::{PDbfs, PHk, PPfp};
@@ -13,54 +18,69 @@ use crate::seq;
 use crate::util::pool::default_threads;
 use std::sync::Arc;
 
-/// All registry names (GPU variants use the paper's naming).
-pub fn all_names() -> Vec<String> {
-    let mut names: Vec<String> = vec![
-        "hk".into(),
-        "hkdw".into(),
-        "pfp".into(),
-        "dfs".into(),
-        "bfs".into(),
-        "pr".into(),
-        "p-hk".into(),
-        "p-pfp".into(),
-        "p-dbfs".into(),
-        "xla:apfb-full".into(),
-        "xla:bfs-level-hybrid".into(),
-    ];
+/// Every registered spec (GPU variants use the paper's naming).
+pub fn all_specs() -> Vec<AlgoSpec> {
+    let mut specs: Vec<AlgoSpec> = SeqKind::ALL.into_iter().map(AlgoSpec::Seq).collect();
+    specs.extend(
+        MulticoreKind::ALL
+            .into_iter()
+            .map(|kind| AlgoSpec::Multicore { kind, threads: None }),
+    );
+    specs.extend(XlaKind::ALL.into_iter().map(AlgoSpec::Xla));
     // the eight paper variants plus their frontier-compacted "-FC" twins
-    for cfg in GpuConfig::all_variants_with_frontier() {
-        names.push(format!("gpu:{}", cfg.name()));
-    }
-    names
+    specs.extend(GpuConfig::all_variants_with_frontier().into_iter().map(AlgoSpec::Gpu));
+    specs
 }
 
-/// Build an algorithm by name. `engine` is required for "xla:*" names.
-pub fn build(name: &str, engine: Option<Arc<Engine>>) -> Option<Box<dyn MatchingAlgorithm>> {
-    let nt = default_threads();
-    Some(match name {
-        "hk" => Box::new(seq::Hk),
-        "hkdw" => Box::new(seq::Hkdw),
-        "pfp" => Box::new(seq::Pfp),
-        "dfs" => Box::new(seq::DfsLookahead),
-        "bfs" => Box::new(seq::BfsSimple),
-        "pr" => Box::new(seq::PushRelabel),
-        "p-hk" => Box::new(PHk { nthreads: nt }),
-        "p-pfp" => Box::new(PPfp { nthreads: nt }),
-        "p-dbfs" => Box::new(PDbfs { nthreads: nt }),
-        "gpu" => Box::new(GpuMatcher::default()), // paper's best variant
-        "xla:apfb-full" => {
+/// All registry names — `all_specs()` through the stable wire format.
+pub fn all_names() -> Vec<String> {
+    all_specs().iter().map(|s| s.to_string()).collect()
+}
+
+/// Build an algorithm from its spec. Returns `None` only for `Xla(_)`
+/// specs without an engine (artifacts absent).
+pub fn build(spec: &AlgoSpec, engine: Option<Arc<Engine>>) -> Option<Box<dyn MatchingAlgorithm>> {
+    Some(match *spec {
+        AlgoSpec::Seq(SeqKind::Hk) => Box::new(seq::Hk),
+        AlgoSpec::Seq(SeqKind::Hkdw) => Box::new(seq::Hkdw),
+        AlgoSpec::Seq(SeqKind::Pfp) => Box::new(seq::Pfp),
+        AlgoSpec::Seq(SeqKind::Dfs) => Box::new(seq::DfsLookahead),
+        AlgoSpec::Seq(SeqKind::Bfs) => Box::new(seq::BfsSimple),
+        AlgoSpec::Seq(SeqKind::Pr) => Box::new(seq::PushRelabel),
+        AlgoSpec::Multicore { kind, threads } => {
+            let nthreads = threads.unwrap_or_else(default_threads);
+            match kind {
+                MulticoreKind::Hk => Box::new(PHk { nthreads }),
+                MulticoreKind::Pfp => Box::new(PPfp { nthreads }),
+                MulticoreKind::Dbfs => Box::new(PDbfs { nthreads }),
+            }
+        }
+        AlgoSpec::Gpu(cfg) => Box::new(GpuMatcher::new(cfg)),
+        AlgoSpec::Xla(XlaKind::ApfbFull) => {
             Box::new(crate::gpu::xla_backend::XlaApfbMatcher::new(engine?))
         }
-        "xla:bfs-level-hybrid" => {
+        AlgoSpec::Xla(XlaKind::BfsLevelHybrid) => {
             Box::new(crate::gpu::xla_backend::XlaHybridMatcher::new(engine?))
         }
-        _ => {
-            let variant = name.strip_prefix("gpu:")?;
-            let cfg = GpuConfig::from_name(variant)?;
-            Box::new(GpuMatcher::new(cfg))
-        }
     })
+}
+
+/// The operator-facing message for a spec that parses but cannot build —
+/// shared by every surface (CLI, server, service) so the guidance never
+/// drifts between them.
+pub fn unavailable_msg(spec: &AlgoSpec) -> String {
+    format!("{spec} requires an XLA engine (run `make artifacts`)")
+}
+
+/// Parse-and-build convenience for callers holding a wire name (CLI,
+/// harness). The error distinguishes "no such algorithm" from "algorithm
+/// known but unavailable" (xla without artifacts).
+pub fn build_named(
+    name: &str,
+    engine: Option<Arc<Engine>>,
+) -> Result<Box<dyn MatchingAlgorithm>, String> {
+    let spec: AlgoSpec = name.parse()?;
+    build(&spec, engine).ok_or_else(|| unavailable_msg(&spec))
 }
 
 #[cfg(test)]
@@ -70,26 +90,29 @@ mod tests {
     use crate::matching::Matching;
 
     #[test]
-    fn every_registered_name_builds_and_runs() {
+    fn every_registered_spec_builds_and_runs() {
         let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2), (0, 1)]);
-        for name in all_names() {
-            if name.starts_with("xla:") {
+        for spec in all_specs() {
+            if spec.is_xla() {
                 // requires an engine + artifacts; covered in rust/tests/
-                assert!(build(&name, None).is_none());
+                assert!(build(&spec, None).is_none());
                 continue;
             }
-            let algo = build(&name, None).unwrap_or_else(|| panic!("{name} not buildable"));
-            let r = algo.run(&g, Matching::empty(3, 3));
-            r.matching.certify(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
-            assert_eq!(r.matching.cardinality(), 3, "{name}");
+            let algo = build(&spec, None).unwrap_or_else(|| panic!("{spec} not buildable"));
+            let r = algo.run_detached(&g, Matching::empty(3, 3));
+            r.matching.certify(&g).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(r.matching.cardinality(), 3, "{spec}");
+            assert!(r.is_complete(), "{spec}");
         }
     }
 
     #[test]
-    fn unknown_names_rejected() {
-        assert!(build("nope", None).is_none());
-        assert!(build("gpu:NOPE", None).is_none());
-        assert!(build("gpu:NOPE-FC", None).is_none());
+    fn build_named_distinguishes_unknown_from_unavailable() {
+        assert!(build_named("hk", None).is_ok());
+        let unknown = build_named("nope", None).unwrap_err();
+        assert!(unknown.contains("unknown algorithm"), "{unknown}");
+        let unavailable = build_named("xla:apfb-full", None).unwrap_err();
+        assert!(unavailable.contains("XLA engine"), "{unavailable}");
     }
 
     #[test]
@@ -97,13 +120,31 @@ mod tests {
         let names = all_names();
         assert!(names.iter().any(|n| n == "gpu:APFB-GPUBFS-WR-CT-FC"));
         assert_eq!(names.iter().filter(|n| n.starts_with("gpu:")).count(), 16);
-        let a = build("gpu:APFB-GPUBFS-WR-CT-FC", None).unwrap();
+        let a = build_named("gpu:APFB-GPUBFS-WR-CT-FC", None).unwrap();
         assert_eq!(a.name(), "gpu:APFB-GPUBFS-WR-CT-FC");
     }
 
     #[test]
     fn shorthand_gpu_is_paper_best() {
-        let a = build("gpu", None).unwrap();
+        let a = build_named("gpu", None).unwrap();
         assert_eq!(a.name(), "gpu:APFB-GPUBFS-WR-CT");
+    }
+
+    #[test]
+    fn explicit_thread_count_respected() {
+        let a = build_named("p-dbfs@3", None).unwrap();
+        assert_eq!(a.name(), "p-dbfs@3");
+    }
+
+    /// The back-compat contract of the AlgoSpec redesign: the registry
+    /// names are frozen in a golden file. Regenerate deliberately with
+    /// `cargo run --release -- --list-algos > registry-names.txt` when a
+    /// PR intentionally adds algorithms; CI diffs the same file against
+    /// the binary's output.
+    #[test]
+    fn registry_names_match_golden_file() {
+        let golden = include_str!("../../registry-names.txt");
+        let actual = all_names().join("\n") + "\n";
+        assert_eq!(actual, golden, "registry names drifted from registry-names.txt");
     }
 }

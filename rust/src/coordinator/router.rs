@@ -5,6 +5,8 @@
 //! in 0.04 s under PFP vs 1.36 s on the GPU). The router measures cheap
 //! structural features and picks accordingly.
 
+use super::spec::{AlgoSpec, SeqKind};
+use crate::gpu::GpuConfig;
 use crate::graph::csr::BipartiteCsr;
 
 /// Cheap structural features (O(sampled edges)).
@@ -54,30 +56,30 @@ pub fn features(g: &BipartiteCsr) -> GraphFeatures {
     }
 }
 
-/// Pick a registry name for the graph.
-pub fn route(f: &GraphFeatures) -> &'static str {
+/// Pick a typed spec for the graph.
+pub fn route(f: &GraphFeatures) -> AlgoSpec {
     if f.n_edges == 0 {
-        return "dfs"; // trivial
+        return AlgoSpec::Seq(SeqKind::Dfs); // trivial
     }
     // tiny problems: sequential DFS beats any launch overhead
     if f.n_edges < 20_000 {
-        return "pfp";
+        return AlgoSpec::Seq(SeqKind::Pfp);
     }
     // banded original orderings: PFP's lookahead resolves almost every
     // column instantly (the paper's Hamrle3 case)
     if f.bandedness < 0.02 && f.degree_skew < 8.0 {
-        return "pfp";
+        return AlgoSpec::Seq(SeqKind::Pfp);
     }
     // everything else: the paper's winning GPU variant, in its
     // frontier-compacted form — worklist-driven BFS sweeps and endpoint-
     // list ALTERNATE undercut the full-scan twin's modeled device time
     // wherever late BFS levels go sparse (bench_frontier ablates the
     // promotion across every generator family)
-    "gpu:APFB-GPUBFS-WR-CT-FC"
+    AlgoSpec::Gpu(GpuConfig::default().compacted())
 }
 
 /// Convenience: features + route in one call.
-pub fn route_graph(g: &BipartiteCsr) -> &'static str {
+pub fn route_graph(g: &BipartiteCsr) -> AlgoSpec {
     route(&features(g))
 }
 
@@ -105,35 +107,40 @@ mod tests {
     #[test]
     fn router_prefers_pfp_on_banded_gpu_on_permuted() {
         let g = crate::graph::gen::banded(8000, 16, 0.6, 5);
-        assert_eq!(route_graph(&g), "pfp");
+        assert_eq!(route_graph(&g), AlgoSpec::Seq(SeqKind::Pfp));
         let p = crate::graph::random_permute(&g, 11);
-        assert_eq!(route_graph(&p), "gpu:APFB-GPUBFS-WR-CT-FC");
+        assert_eq!(route_graph(&p).to_string(), "gpu:APFB-GPUBFS-WR-CT-FC");
     }
 
     #[test]
     fn router_gpu_on_powerlaw() {
         let g = Family::Kron.generate(8192, 3);
         if g.n_edges() >= 20_000 {
-            assert_eq!(route_graph(&g), "gpu:APFB-GPUBFS-WR-CT-FC");
+            assert_eq!(route_graph(&g).to_string(), "gpu:APFB-GPUBFS-WR-CT-FC");
         }
     }
 
     #[test]
     fn router_default_gpu_pick_is_frontier_compacted() {
         // the promotion: whatever graph lands on the GPU must get the
-        // "-FC" twin, and that name must be buildable from the registry
+        // compacted frontier mode — a typed field now, not a "-FC"
+        // suffix — and that spec must be buildable from the registry
+        use crate::gpu::FrontierMode;
         let g = crate::graph::random_permute(&crate::graph::gen::banded(8000, 16, 0.6, 5), 3);
-        let name = route_graph(&g);
-        assert!(name.ends_with("-FC"), "GPU default must be frontier-compacted, got {name}");
-        assert!(crate::coordinator::registry::build(name, None).is_some());
+        let spec = route_graph(&g);
+        let AlgoSpec::Gpu(cfg) = spec else {
+            panic!("permuted banded must route to the GPU, got {spec}")
+        };
+        assert_eq!(cfg.frontier, FrontierMode::Compacted);
+        assert!(crate::coordinator::registry::build(&spec, None).is_some());
     }
 
     #[test]
     fn router_trivial_cases() {
         let empty = crate::graph::from_edges(4, 4, &[]);
-        assert_eq!(route_graph(&empty), "dfs");
+        assert_eq!(route_graph(&empty), AlgoSpec::Seq(SeqKind::Dfs));
         let small = crate::graph::from_edges(3, 3, &[(0, 0), (1, 1)]);
-        assert_eq!(route_graph(&small), "pfp");
+        assert_eq!(route_graph(&small), AlgoSpec::Seq(SeqKind::Pfp));
     }
 
     #[test]
@@ -151,20 +158,20 @@ mod tests {
                 let g = fam.generate(3000, 19);
                 let g = if permute { crate::graph::random_permute(&g, 23) } else { g };
                 let want = reference_max_cardinality(&g);
-                let name = route_graph(&g);
-                if name.ends_with("-FC") {
+                let spec = route_graph(&g);
+                if spec.is_gpu() {
                     gpu_fc_routed += 1;
                 }
-                let algo = crate::coordinator::registry::build(name, None)
-                    .unwrap_or_else(|| panic!("routed name {name} not buildable"));
-                let r = algo.run(&g, Matching::empty(g.nr, g.nc));
+                let algo = crate::coordinator::registry::build(&spec, None)
+                    .unwrap_or_else(|| panic!("routed spec {spec} not buildable"));
+                let r = algo.run_detached(&g, Matching::empty(g.nr, g.nc));
                 r.matching
                     .certify(&g)
-                    .unwrap_or_else(|e| panic!("{name} on {} permute={permute}: {e}", fam.name()));
+                    .unwrap_or_else(|e| panic!("{spec} on {} permute={permute}: {e}", fam.name()));
                 assert_eq!(
                     r.matching.cardinality(),
                     want,
-                    "{name} on {} permute={permute}",
+                    "{spec} on {} permute={permute}",
                     fam.name()
                 );
             }
@@ -180,13 +187,13 @@ mod tests {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = crate::graph::from_edges(nr, nc, &edges);
             let want = reference_max_cardinality(&g);
-            let name = route_graph(&g);
-            let algo = crate::coordinator::registry::build(name, None)
-                .ok_or_else(|| format!("routed name {name} not buildable"))?;
-            let r = algo.run(&g, Matching::empty(nr, nc));
-            r.matching.certify(&g).map_err(|e| format!("{name}: {e}"))?;
+            let spec = route_graph(&g);
+            let algo = crate::coordinator::registry::build(&spec, None)
+                .ok_or_else(|| format!("routed spec {spec} not buildable"))?;
+            let r = algo.run_detached(&g, Matching::empty(nr, nc));
+            r.matching.certify(&g).map_err(|e| format!("{spec}: {e}"))?;
             if r.matching.cardinality() != want {
-                return Err(format!("{name}: {} != {want}", r.matching.cardinality()));
+                return Err(format!("{spec}: {} != {want}", r.matching.cardinality()));
             }
             Ok(())
         });
@@ -200,8 +207,8 @@ mod tests {
         use crate::matching::Matching;
         let g = Family::Road.generate(1200, 3);
         for name in ["gpu:APFB-GPUBFS-WR-CT", "gpu:APsB-GPUBFS-MT"] {
-            let algo = crate::coordinator::registry::build(name, None).unwrap();
-            let r = algo.run(&g, Matching::empty(g.nr, g.nc));
+            let algo = crate::coordinator::registry::build_named(name, None).unwrap();
+            let r = algo.run_detached(&g, Matching::empty(g.nr, g.nc));
             assert_eq!(r.stats.frontier_peak, 0, "{name}");
             assert_eq!(r.stats.frontier_total, 0, "{name}");
             assert_eq!(r.stats.endpoints_total, 0, "{name}");

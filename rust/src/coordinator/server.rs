@@ -4,20 +4,34 @@
 //! Protocol (one request per line, one reply per line):
 //!
 //! ```text
-//! MATCH family=<name> n=<int> seed=<int> [permute=0|1] [algo=<name>] [init=<name>]
-//! MATCH mtx=<path> [algo=<name>]
+//! MATCH family=<name> n=<int> seed=<int> [permute=0|1] [algo=<name>]
+//!       [init=<name>] [timeout_ms=<int>]
+//! MATCH mtx=<path> [algo=<name>] [timeout_ms=<int>]
 //! ALGOS                       → ALGOS <name> <name> ...
 //! STATS                       → STATS <metrics report>
 //! QUIT
 //! ```
 //!
-//! Replies: `OK id=<id> algo=<name> nr=.. nc=.. edges=.. card=.. t_match=..`
-//! or `ERR <message>`.
+//! `algo=` accepts any registry name (`AlgoSpec` wire format, including
+//! `p-hk@<threads>`); malformed names are rejected before execution.
+//! `timeout_ms=` sets a deadline over the whole job (load + init +
+//! matching); a tripped job replies `ERR timeout: ...` — a distinct
+//! failure, never a silently suboptimal matching.
+//!
+//! Replies:
+//! `OK id=<id> algo=<name> nr=.. nc=.. edges=.. card=.. certified=0|1
+//!  t_load=.. t_match=.. frontier_peak=.. endpoints=.. devpar_cycles=..`
+//! or `ERR <message>`. The last three OK fields expose the
+//! frontier-compaction counters (`RunStats::{frontier_peak,
+//! endpoints_total, device_parallel_cycles}`) so remote clients can
+//! observe compaction behaviour; all three are 0 for CPU algorithms and
+//! for FullScan GPU runs.
 
 use super::exec::Executor;
-use super::job::{AlgoChoice, GraphSource, MatchJob};
+use super::job::{GraphSource, MatchJob};
 use super::metrics::Metrics;
 use super::registry;
+use super::spec::AlgoSpec;
 use crate::graph::gen::Family;
 use crate::matching::init::InitHeuristic;
 use crate::runtime::Engine;
@@ -115,9 +129,20 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
                         Some(e) => Command::Reply(format!("ERR {e}")),
                         None => Command::Reply(format!(
                             "OK id={} algo={} nr={} nc={} edges={} card={} certified={} \
-                             t_load={:.6} t_match={:.6}",
-                            o.job_id, o.algo, o.nr, o.nc, o.n_edges, o.cardinality,
-                            o.certified as u8, o.t_load, o.t_match
+                             t_load={:.6} t_match={:.6} frontier_peak={} endpoints={} \
+                             devpar_cycles={}",
+                            o.job_id,
+                            o.algo,
+                            o.nr,
+                            o.nc,
+                            o.n_edges,
+                            o.cardinality,
+                            o.certified as u8,
+                            o.t_load,
+                            o.t_match,
+                            o.frontier_peak,
+                            o.endpoints_total,
+                            o.device_parallel_cycles
                         )),
                     }
                 }
@@ -149,11 +174,18 @@ fn parse_match(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, Str
     let mut job = MatchJob::new(id, source);
     if let Some(a) = get("algo") {
         if a != "auto" {
-            job.algo = AlgoChoice::Named(a.to_string());
+            // parse at the wire boundary: malformed names never reach
+            // the executor
+            let spec: AlgoSpec = a.parse()?;
+            job = job.with_spec(spec);
         }
     }
     if let Some(i) = get("init") {
         job.init = InitHeuristic::from_name(i).ok_or(format!("unknown init {i}"))?;
+    }
+    if let Some(t) = get("timeout_ms") {
+        let ms: u64 = t.parse().map_err(|e| format!("bad timeout_ms: {e}"))?;
+        job = job.with_timeout_ms(ms);
     }
     Ok(job)
 }
@@ -214,6 +246,56 @@ mod tests {
         assert!(roundtrip(addr, "MATCH family=uniform").starts_with("ERR"));
         assert!(roundtrip(addr, "BOGUS").starts_with("ERR"));
         assert!(roundtrip(addr, "MATCH family=uniform n=50 algo=wat").starts_with("ERR"));
+        // malformed specs are rejected at the wire boundary
+        assert!(roundtrip(addr, "MATCH family=uniform n=50 algo=gpu:NOPE-FC").starts_with("ERR"));
+        assert!(roundtrip(addr, "MATCH family=uniform n=50 algo=p-hk@0").starts_with("ERR"));
+        assert!(roundtrip(addr, "MATCH family=uniform n=50 timeout_ms=abc").starts_with("ERR"));
+    }
+
+    #[test]
+    fn ok_reply_exposes_compaction_counters() {
+        let (addr, _stop) = start_server();
+        // a compacted GPU run reports non-zero worklist counters
+        let reply =
+            roundtrip(addr, "MATCH family=road n=2000 seed=3 algo=gpu:APFB-GPUBFS-WR-CT-FC");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains(" frontier_peak="), "{reply}");
+        assert!(reply.contains(" endpoints="), "{reply}");
+        assert!(reply.contains(" devpar_cycles="), "{reply}");
+        let field = |name: &str| -> u64 {
+            reply
+                .split_whitespace()
+                .find_map(|kv| kv.strip_prefix(name))
+                .unwrap_or_else(|| panic!("{name} missing in {reply}"))
+                .parse()
+                .unwrap()
+        };
+        assert!(field("frontier_peak=") > 0, "{reply}");
+        assert!(field("endpoints=") > 0, "{reply}");
+        assert!(field("devpar_cycles=") > 0, "{reply}");
+        // a CPU run reports zeros for all three
+        let reply = roundtrip(addr, "MATCH family=uniform n=200 seed=1 algo=hk");
+        assert!(reply.contains("frontier_peak=0"), "{reply}");
+        assert!(reply.contains("endpoints=0"), "{reply}");
+        assert!(reply.contains("devpar_cycles=0"), "{reply}");
+    }
+
+    #[test]
+    fn timeout_ms_surfaces_as_distinct_timeout_error() {
+        let (addr, _stop) = start_server();
+        // deadline already expired when the matcher hits its first
+        // checkpoint → the deadline-tripped job travels the whole
+        // TCP path as a distinct "timeout" failure
+        let reply = roundtrip(addr, "MATCH family=uniform n=20000 seed=1 algo=hk timeout_ms=0");
+        assert!(reply.starts_with("ERR timeout:"), "{reply}");
+        // 1 ms against a graph whose generation alone exceeds it: the
+        // deadline covers the whole job, so the first checkpoint trips
+        let reply = roundtrip(addr, "MATCH family=uniform n=60000 seed=1 algo=hk timeout_ms=1");
+        assert!(reply.starts_with("ERR timeout:"), "{reply}");
+        // a generous deadline does not interfere
+        let reply =
+            roundtrip(addr, "MATCH family=uniform n=300 seed=1 algo=hk timeout_ms=60000");
+        assert!(reply.starts_with("OK "), "{reply}");
     }
 
     #[test]

@@ -6,6 +6,7 @@ use super::exec::Executor;
 use super::job::{MatchJob, MatchOutcome};
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
+use crate::matching::algo::CancelToken;
 use crate::runtime::Engine;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -14,23 +15,27 @@ pub struct Service {
     jobs: Arc<BoundedQueue<MatchJob>>,
     results: Arc<BoundedQueue<MatchOutcome>>,
     pub metrics: Arc<Metrics>,
+    cancel: CancelToken,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Service {
     /// Start `n_workers` workers. `queue_depth` bounds in-flight jobs
-    /// (submit blocks beyond it — backpressure).
+    /// (submit blocks beyond it — backpressure). Workers share one
+    /// executor clone-family: one workspace pool, one cancellation token.
     pub fn start(n_workers: usize, queue_depth: usize, engine: Option<Arc<Engine>>) -> Self {
         assert!(n_workers >= 1);
         let jobs: Arc<BoundedQueue<MatchJob>> = Arc::new(BoundedQueue::new(queue_depth));
         let results: Arc<BoundedQueue<MatchOutcome>> =
             Arc::new(BoundedQueue::new(queue_depth.max(1024)));
         let metrics = Arc::new(Metrics::new());
+        let executor = Executor::new(engine, metrics.clone());
+        let cancel = executor.cancel_token();
         let mut workers = Vec::with_capacity(n_workers);
         for wid in 0..n_workers {
             let jobs = jobs.clone();
             let results = results.clone();
-            let executor = Executor::new(engine.clone(), metrics.clone());
+            let executor = executor.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bimatch-worker-{wid}"))
@@ -44,15 +49,34 @@ impl Service {
                     .expect("spawn worker"),
             );
         }
-        Self { jobs, results, metrics, workers }
+        Self { jobs, results, metrics, cancel, workers }
     }
 
     /// Submit a job (blocks when the queue is full). Err after shutdown.
+    /// Only jobs that actually enter the queue count as submitted — a
+    /// post-shutdown submit returns `Err(job)` with the counter rolled
+    /// back, keeping `submitted == completed + failed` an invariant. The
+    /// counter is bumped *before* the push (and undone on rejection) so a
+    /// fast worker can never make `completed + failed` overtake
+    /// `submitted` mid-submit.
     pub fn submit(&self, job: MatchJob) -> Result<(), MatchJob> {
-        self.metrics
-            .jobs_submitted
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.jobs.push(job)
+        use std::sync::atomic::Ordering;
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        match self.jobs.push(job) {
+            Ok(()) => Ok(()),
+            Err(job) => {
+                self.metrics.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
+                Err(job)
+            }
+        }
+    }
+
+    /// Cancel every in-flight run (they fail with `JobError::Cancelled` at
+    /// their next inter-phase checkpoint). Queued-but-unstarted jobs fail
+    /// the same way when a worker picks them up — use before `shutdown`
+    /// to drain a service fast without waiting out long matchings.
+    pub fn cancel_inflight(&self) {
+        self.cancel.cancel();
     }
 
     /// Blocking receive of the next outcome (None after shutdown+drain).
@@ -143,10 +167,48 @@ mod tests {
     }
 
     #[test]
+    fn rejected_submit_does_not_inflate_the_submitted_counter() {
+        // regression: submit used to count BEFORE pushing, so a
+        // post-shutdown submit returned Err(job) but still bumped
+        // jobs_submitted, breaking submitted == completed + failed
+        use std::sync::atomic::Ordering;
+        let svc = Service::start(1, 2, None);
+        svc.jobs.close();
+        assert!(svc.submit(gen_job(0, 100)).is_err());
+        assert_eq!(
+            svc.metrics.jobs_submitted.load(Ordering::Relaxed),
+            0,
+            "a rejected submit must not count as submitted"
+        );
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.jobs_submitted.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.completed() + metrics.jobs_failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
     fn errors_are_reported_not_dropped() {
         let svc = Service::start(1, 2, None);
-        let (outcomes, _) = svc.run_batch(vec![gen_job(0, 100).with_algo("missing-algo")]);
+        // an xla job without an engine fails at build time
+        let (outcomes, _) = svc.run_batch(vec![gen_job(0, 100).with_algo("xla:apfb-full")]);
         assert_eq!(outcomes.len(), 1);
         assert!(outcomes[0].error.is_some());
+    }
+
+    #[test]
+    fn cancel_inflight_fails_jobs_as_cancelled() {
+        use crate::coordinator::job::JobError;
+        let svc = Service::start(2, 8, None);
+        svc.cancel_inflight();
+        let (outcomes, metrics) = svc.run_batch((0..4).map(|i| gen_job(i, 400)).collect());
+        assert_eq!(outcomes.len(), 4);
+        for o in &outcomes {
+            assert_eq!(o.error, Some(JobError::Cancelled), "job {}", o.job_id);
+        }
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.jobs_cancelled.load(Ordering::Relaxed), 4);
+        assert_eq!(
+            metrics.jobs_submitted.load(Ordering::Relaxed),
+            metrics.completed() + metrics.jobs_failed.load(Ordering::Relaxed)
+        );
     }
 }

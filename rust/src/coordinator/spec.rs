@@ -1,0 +1,281 @@
+//! Typed algorithm specification — the coordinator's dispatch currency.
+//!
+//! Every matcher the registry can build is named by an [`AlgoSpec`];
+//! the stringly registry names ("hk", "p-dbfs", "gpu:APFB-GPUBFS-WR-CT-FC",
+//! "xla:apfb-full") remain the stable wire/CLI format via `FromStr` and
+//! `Display`, which round-trip every registry name. Configuration edits
+//! that used to be string surgery (rewriting the "-FC" suffix to change
+//! the frontier mode) are typed field edits here ([`AlgoSpec::set_frontier`]).
+//!
+//! Extensions over the legacy names: multicore specs can carry an explicit
+//! thread count on the wire as `p-hk@8` / `p-pfp@4` / `p-dbfs@2`
+//! (omitted = the worker default), and `gpu` stays the alias for the
+//! paper's best variant.
+
+use crate::gpu::{FrontierMode, GpuConfig};
+use std::fmt;
+use std::str::FromStr;
+
+/// Sequential baselines (see `crate::seq`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SeqKind {
+    Hk,
+    Hkdw,
+    Pfp,
+    Dfs,
+    Bfs,
+    Pr,
+}
+
+impl SeqKind {
+    pub const ALL: [SeqKind; 6] =
+        [SeqKind::Hk, SeqKind::Hkdw, SeqKind::Pfp, SeqKind::Dfs, SeqKind::Bfs, SeqKind::Pr];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeqKind::Hk => "hk",
+            SeqKind::Hkdw => "hkdw",
+            SeqKind::Pfp => "pfp",
+            SeqKind::Dfs => "dfs",
+            SeqKind::Bfs => "bfs",
+            SeqKind::Pr => "pr",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<SeqKind> {
+        SeqKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// Multicore baselines (see `crate::multicore`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MulticoreKind {
+    Hk,
+    Pfp,
+    Dbfs,
+}
+
+impl MulticoreKind {
+    pub const ALL: [MulticoreKind; 3] =
+        [MulticoreKind::Hk, MulticoreKind::Pfp, MulticoreKind::Dbfs];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MulticoreKind::Hk => "p-hk",
+            MulticoreKind::Pfp => "p-pfp",
+            MulticoreKind::Dbfs => "p-dbfs",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<MulticoreKind> {
+        MulticoreKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// XLA-backed matchers (see `crate::gpu::xla_backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum XlaKind {
+    ApfbFull,
+    BfsLevelHybrid,
+}
+
+impl XlaKind {
+    pub const ALL: [XlaKind; 2] = [XlaKind::ApfbFull, XlaKind::BfsLevelHybrid];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            XlaKind::ApfbFull => "apfb-full",
+            XlaKind::BfsLevelHybrid => "bfs-level-hybrid",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<XlaKind> {
+        XlaKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// A fully specified matcher. `Display`/`FromStr` are the wire format;
+/// `registry::build` turns a spec into a ready-to-run
+/// `Box<dyn MatchingAlgorithm>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoSpec {
+    Seq(SeqKind),
+    /// `threads: None` = the worker default (`BIMATCH_THREADS` or the
+    /// machine's available parallelism), resolved at build time.
+    Multicore { kind: MulticoreKind, threads: Option<usize> },
+    Gpu(GpuConfig),
+    Xla(XlaKind),
+}
+
+impl AlgoSpec {
+    /// The typed replacement for the old "-FC"-suffix string surgery:
+    /// set the frontier mode of a GPU spec; a no-op on CPU/XLA specs.
+    pub fn set_frontier(&mut self, mode: FrontierMode) {
+        if let AlgoSpec::Gpu(cfg) = self {
+            cfg.frontier = mode;
+        }
+    }
+
+    /// Builder-style [`AlgoSpec::set_frontier`].
+    pub fn with_frontier(mut self, mode: FrontierMode) -> Self {
+        self.set_frontier(mode);
+        self
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        matches!(self, AlgoSpec::Gpu(_))
+    }
+
+    pub fn is_xla(&self) -> bool {
+        matches!(self, AlgoSpec::Xla(_))
+    }
+}
+
+impl fmt::Display for AlgoSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AlgoSpec::Seq(k) => f.write_str(k.name()),
+            AlgoSpec::Multicore { kind, threads: None } => f.write_str(kind.name()),
+            AlgoSpec::Multicore { kind, threads: Some(n) } => write!(f, "{}@{n}", kind.name()),
+            AlgoSpec::Gpu(cfg) => write!(f, "gpu:{}", cfg.name()),
+            AlgoSpec::Xla(k) => write!(f, "xla:{}", k.name()),
+        }
+    }
+}
+
+impl FromStr for AlgoSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        if s == "gpu" {
+            // registry alias for the paper's overall winner
+            return Ok(AlgoSpec::Gpu(GpuConfig::default()));
+        }
+        if let Some(v) = s.strip_prefix("gpu:") {
+            return GpuConfig::from_name(v)
+                .map(AlgoSpec::Gpu)
+                .ok_or_else(|| format!("unknown gpu variant {v:?} (see `bimatch algos`)"));
+        }
+        if let Some(v) = s.strip_prefix("xla:") {
+            return XlaKind::from_name(v)
+                .map(AlgoSpec::Xla)
+                .ok_or_else(|| format!("unknown xla program {v:?} (see `bimatch algos`)"));
+        }
+        let (base, threads) = match s.split_once('@') {
+            Some((base, t)) => {
+                let n: usize =
+                    t.parse().map_err(|_| format!("bad thread count {t:?} in {s:?}"))?;
+                if n == 0 {
+                    return Err(format!("thread count must be >= 1 in {s:?}"));
+                }
+                (base, Some(n))
+            }
+            None => (s, None),
+        };
+        if let Some(kind) = MulticoreKind::from_name(base) {
+            return Ok(AlgoSpec::Multicore { kind, threads });
+        }
+        if threads.is_some() {
+            return Err(format!(
+                "{base:?} is not a multicore algorithm; \"@threads\" applies to p-hk/p-pfp/p-dbfs"
+            ));
+        }
+        SeqKind::from_name(s)
+            .map(AlgoSpec::Seq)
+            .ok_or_else(|| format!("unknown algorithm {s:?} (see `bimatch algos`)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry;
+
+    /// Satellite: the redesign preserves the wire format — parse∘print is
+    /// the identity on every registry name, and print∘parse is the
+    /// identity on every spec.
+    #[test]
+    fn prop_every_registry_name_roundtrips() {
+        for name in registry::all_names() {
+            let spec: AlgoSpec = name.parse().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.to_string(), name, "Display must reproduce the registry name");
+            let again: AlgoSpec = spec.to_string().parse().unwrap();
+            assert_eq!(again, spec, "{name}: from_str(to_string(spec)) != spec");
+        }
+    }
+
+    /// Same property over the full spec space, including explicit thread
+    /// counts and every GPU variant (not just the registry's defaults).
+    #[test]
+    fn prop_every_spec_roundtrips_through_its_name() {
+        let mut specs: Vec<AlgoSpec> = Vec::new();
+        specs.extend(SeqKind::ALL.into_iter().map(AlgoSpec::Seq));
+        for kind in MulticoreKind::ALL {
+            for threads in [None, Some(1), Some(2), Some(7), Some(64)] {
+                specs.push(AlgoSpec::Multicore { kind, threads });
+            }
+        }
+        specs.extend(GpuConfig::all_variants_with_frontier().into_iter().map(AlgoSpec::Gpu));
+        specs.extend(XlaKind::ALL.into_iter().map(AlgoSpec::Xla));
+        assert!(specs.len() > 30);
+        for spec in specs {
+            let parsed: AlgoSpec = spec.to_string().parse().unwrap_or_else(|e| {
+                panic!("{spec} did not parse back: {e}");
+            });
+            assert_eq!(parsed, spec);
+        }
+    }
+
+    #[test]
+    fn malformed_names_rejected() {
+        for bad in [
+            "",
+            "nope",
+            "gpu:",
+            "gpu:NOPE",
+            "gpu:NOPE-FC",
+            "gpu:APFB-GPUBFS-WR-CT-FC-FC",
+            "xla:",
+            "xla:nope",
+            "p-hk@0",
+            "p-hk@x",
+            "p-hk@",
+            "p-hk@-3",
+            "hk@4",
+            "p-nope@4",
+        ] {
+            assert!(bad.parse::<AlgoSpec>().is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn gpu_alias_is_paper_best() {
+        let spec: AlgoSpec = "gpu".parse().unwrap();
+        assert_eq!(spec, AlgoSpec::Gpu(GpuConfig::default()));
+        assert_eq!(spec.to_string(), "gpu:APFB-GPUBFS-WR-CT");
+    }
+
+    #[test]
+    fn multicore_thread_counts_on_the_wire() {
+        let spec: AlgoSpec = "p-dbfs@8".parse().unwrap();
+        assert_eq!(spec, AlgoSpec::Multicore { kind: MulticoreKind::Dbfs, threads: Some(8) });
+        assert_eq!(spec.to_string(), "p-dbfs@8");
+        let spec: AlgoSpec = "p-dbfs".parse().unwrap();
+        assert_eq!(spec, AlgoSpec::Multicore { kind: MulticoreKind::Dbfs, threads: None });
+    }
+
+    #[test]
+    fn frontier_edit_is_typed_not_string_surgery() {
+        let mut spec: AlgoSpec = "gpu:APFB-GPUBFS-WR-CT".parse().unwrap();
+        spec.set_frontier(FrontierMode::Compacted);
+        assert_eq!(spec.to_string(), "gpu:APFB-GPUBFS-WR-CT-FC");
+        let spec = spec.with_frontier(FrontierMode::FullScan);
+        assert_eq!(spec.to_string(), "gpu:APFB-GPUBFS-WR-CT");
+        // no-op on CPU specs
+        let mut cpu: AlgoSpec = "pfp".parse().unwrap();
+        cpu.set_frontier(FrontierMode::Compacted);
+        assert_eq!(cpu.to_string(), "pfp");
+        assert!(!cpu.is_gpu());
+        assert!("xla:apfb-full".parse::<AlgoSpec>().unwrap().is_xla());
+    }
+}

@@ -215,16 +215,11 @@ impl GpuConfig {
         )
     }
 
-    /// Parse "APFB-GPUBFS-WR-CT"-style names (with optional "-FC" suffix).
+    /// Parse "APFB-GPUBFS-WR-CT"-style names (with optional "-FC" suffix):
+    /// the exact inverse of [`GpuConfig::name`], resolved against the 16
+    /// registered variants — no suffix surgery.
     pub fn from_name(s: &str) -> Option<GpuConfig> {
-        let (base, frontier) = match s.strip_suffix("-FC") {
-            Some(b) => (b, FrontierMode::Compacted),
-            None => (s, FrontierMode::FullScan),
-        };
-        GpuConfig::all_variants()
-            .into_iter()
-            .find(|c| c.name() == base)
-            .map(|c| GpuConfig { frontier, ..c })
+        GpuConfig::all_variants_with_frontier().into_iter().find(|c| c.name() == s)
     }
 }
 

@@ -30,7 +30,7 @@ use super::kernels::{
     GpuState, LaunchCfg, L0,
 };
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 
 /// One of the eight paper variants as a ready-to-run matcher.
@@ -45,7 +45,15 @@ impl GpuMatcher {
     }
 
     /// Run and also return the device clock (for the modeled-time tables).
-    pub fn run_with_clock(&self, g: &BipartiteCsr, init: Matching) -> (RunResult, DeviceClock) {
+    /// Device arrays and worklists are leased from `ctx`'s workspace pool;
+    /// the deadline/cancellation checkpoint sits at the top of each phase
+    /// (between kernel sequences, never inside one).
+    pub fn run_with_clock(
+        &self,
+        g: &BipartiteCsr,
+        init: Matching,
+        ctx: &mut RunCtx,
+    ) -> (RunResult, DeviceClock) {
         let cfg = LaunchCfg {
             mapping: self.config.mapping,
             order: self.config.write_order,
@@ -58,20 +66,35 @@ impl GpuMatcher {
         let improved_wr = with_root && self.config.driver == ApDriver::Apsb;
         let compacted = self.config.frontier == FrontierMode::Compacted;
 
-        let mut state = GpuState::new(g, &init);
+        let mut state = GpuState::new_in(g, &init, ctx.pool());
         let mut clock = DeviceClock::default();
-        let mut stats = RunStats::default();
         // Incrementally maintained |M|: seeded once from the initial
         // matching, then updated from FIXMATCHING's piggybacked count and
         // the safety net — no per-phase O(nc) scans.
         let mut cardinality = init.cardinality();
-        let mut frontier: Vec<u32> = Vec::new();
-        let mut next_frontier: Vec<u32> = Vec::new();
-        // endpoint rows flagged `-2` this phase, compacted by the frontier
-        // BFS kernels so ALTERNATE skips its all-rows selection scan
-        let mut endpoints: Vec<u32> = Vec::new();
+        // worklists live only in Compacted mode: lease size-fitted buffers
+        // there (frontier/next bounded by nc; the endpoint list — the rows
+        // flagged `-2` that the compacted ALTERNATE consumes — by nr), and
+        // keep FullScan runs off the pool entirely so they neither pop
+        // shelved buffers they never push to nor inflate reuses()
+        let (mut frontier, mut next_frontier, mut endpoints) = if compacted {
+            (
+                ctx.lease_worklist_u32(g.nc),
+                ctx.lease_worklist_u32(g.nc),
+                ctx.lease_worklist_u32(g.nr),
+            )
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+        let mut outcome = RunOutcome::Complete;
 
         loop {
+            // checkpoint at the phase boundary: the state is sentinel-free
+            // here, so an interrupted run still hands back a valid matching
+            if let Some(trip) = ctx.checkpoint() {
+                outcome = trip;
+                break;
+            }
             // ---- one phase: combined BFS over all unmatched columns ----
             if compacted {
                 init_bfs_array_frontier(&mut state, cfg, with_root, &mut frontier, &mut clock);
@@ -85,8 +108,9 @@ impl GpuMatcher {
             loop {
                 state.vertex_inserted = false;
                 let scanned = if compacted {
-                    stats.frontier_total += frontier.len() as u64;
-                    stats.frontier_peak = stats.frontier_peak.max(frontier.len() as u64);
+                    ctx.stats.frontier_total += frontier.len() as u64;
+                    ctx.stats.frontier_peak =
+                        ctx.stats.frontier_peak.max(frontier.len() as u64);
                     next_frontier.clear();
                     match self.config.kernel {
                         BfsKernel::GpuBfs => gpubfs_frontier(
@@ -119,7 +143,7 @@ impl GpuMatcher {
                         }
                     }
                 };
-                stats.edges_scanned += scanned;
+                ctx.stats.edges_scanned += scanned;
                 launches += 1;
                 // Algorithm 1 lines 8–10: APsB stops at the first level
                 // with an augmenting path; APFB keeps going to the bottom.
@@ -134,7 +158,7 @@ impl GpuMatcher {
                 }
                 bfs_level += 1;
             }
-            stats.record_phase(launches);
+            ctx.stats.record_phase(launches);
             if !state.augmenting_path_found {
                 break; // Berge: no augmenting path ⇒ maximum
             }
@@ -142,7 +166,7 @@ impl GpuMatcher {
             // ---- speculative augmentation + repair ----
             let before = cardinality;
             if compacted {
-                stats.endpoints_total += endpoints.len() as u64;
+                ctx.stats.endpoints_total += endpoints.len() as u64;
             }
             if improved_wr {
                 let chosen = if compacted {
@@ -163,11 +187,11 @@ impl GpuMatcher {
                 alternate(&mut state, cfg, None, &mut clock);
             }
             let (fixes, after) = fixmatching(&mut state, cfg, &mut clock);
-            stats.fixes += fixes;
+            ctx.stats.fixes += fixes;
             let after = after as usize;
             debug_assert_eq!(after, state.cardinality(), "incremental |M| diverged");
             cardinality = after;
-            stats.augmentations += after.saturating_sub(before) as u64;
+            ctx.stats.augmentations += after.saturating_sub(before) as u64;
 
             // Safety net (not in the paper, which relies on favorable
             // schedules): if this phase's speculative alternation made no
@@ -175,8 +199,8 @@ impl GpuMatcher {
             // the outer loop provably terminates.
             if after <= before {
                 if augment_one_sequential(g, &mut state) {
-                    stats.fallbacks += 1;
-                    stats.augmentations += 1;
+                    ctx.stats.fallbacks += 1;
+                    ctx.stats.augmentations += 1;
                     cardinality += 1;
                 } else {
                     break; // no augmenting path actually remains
@@ -184,10 +208,15 @@ impl GpuMatcher {
             }
         }
 
-        stats.device_cycles = clock.cycles;
-        stats.device_parallel_cycles = clock.parallel_cycles;
-        let m = state.to_matching();
-        (RunResult::with_stats(m, stats), clock)
+        ctx.stats.device_cycles += clock.cycles;
+        ctx.stats.device_parallel_cycles += clock.parallel_cycles;
+        if compacted {
+            ctx.give_u32(frontier);
+            ctx.give_u32(next_frontier);
+            ctx.give_u32(endpoints);
+        }
+        let m = state.release(ctx.pool());
+        (ctx.finish_with(m, outcome), clock)
     }
 }
 
@@ -196,8 +225,8 @@ impl MatchingAlgorithm for GpuMatcher {
         format!("gpu:{}", self.config.name())
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
-        self.run_with_clock(g, init).0
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
+        self.run_with_clock(g, init, ctx).0
     }
 }
 
@@ -272,7 +301,7 @@ mod tests {
     fn all_eight_variants_small_graph() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
         for cfg in GpuConfig::all_variants() {
-            let r = GpuMatcher::new(cfg).run(&g, Matching::empty(3, 3));
+            let r = GpuMatcher::new(cfg).run_detached(&g, Matching::empty(3, 3));
             r.matching
                 .certify(&g)
                 .unwrap_or_else(|e| panic!("{}: {e}", cfg.name()));
@@ -287,7 +316,7 @@ mod tests {
             let g = from_edges(nr, nc, &edges);
             let want = reference_max_cardinality(&g);
             for cfg in GpuConfig::all_variants() {
-                let r = GpuMatcher::new(cfg).run(&g, Matching::empty(nr, nc));
+                let r = GpuMatcher::new(cfg).run_detached(&g, Matching::empty(nr, nc));
                 r.matching
                     .certify(&g)
                     .map_err(|e| format!("{}: {e}", cfg.name()))?;
@@ -311,7 +340,7 @@ mod tests {
             let want = reference_max_cardinality(&g);
             for order in [WriteOrder::Forward, WriteOrder::Reverse, WriteOrder::Shuffled] {
                 let cfg = GpuConfig { write_order: order, seed: rng.next_u64(), ..Default::default() };
-                let r = GpuMatcher::new(cfg).run(&g, Matching::empty(nr, nc));
+                let r = GpuMatcher::new(cfg).run_detached(&g, Matching::empty(nr, nc));
                 r.matching.certify(&g).map_err(|e| format!("{order:?}: {e}"))?;
                 if r.matching.cardinality() != want {
                     return Err(format!("{order:?} suboptimal"));
@@ -332,7 +361,7 @@ mod tests {
             let want = reference_max_cardinality(&g);
             let init = InitHeuristic::Cheap.run(&g);
             for cfg in GpuConfig::all_variants() {
-                let r = GpuMatcher::new(cfg).run(&g, init.clone());
+                let r = GpuMatcher::new(cfg).run_detached(&g, init.clone());
                 r.matching
                     .certify(&g)
                     .unwrap_or_else(|e| panic!("{} on {}: {e}", cfg.name(), fam.name()));
@@ -351,12 +380,12 @@ mod tests {
             driver: ApDriver::Apfb,
             ..Default::default()
         })
-        .run(&g, init.clone());
+        .run_detached(&g, init.clone());
         let apsb = GpuMatcher::new(GpuConfig {
             driver: ApDriver::Apsb,
             ..Default::default()
         })
-        .run(&g, init);
+        .run_detached(&g, init);
         assert!(apsb.stats.phases >= apfb.stats.phases);
         let max_apsb = apsb.stats.launches_per_phase.iter().max().copied().unwrap_or(0);
         let max_apfb = apfb.stats.launches_per_phase.iter().max().copied().unwrap_or(0);
@@ -375,7 +404,7 @@ mod tests {
                 for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
                     for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
                         let cfg = GpuConfig { driver, kernel, frontier, ..Default::default() };
-                        let r = GpuMatcher::new(cfg).run(&g, Matching::empty(nr, nc));
+                        let r = GpuMatcher::new(cfg).run_detached(&g, Matching::empty(nr, nc));
                         r.matching
                             .certify(&g)
                             .map_err(|e| format!("{}: {e}", cfg.name()))?;
@@ -402,7 +431,7 @@ mod tests {
             for driver in [ApDriver::Apfb, ApDriver::Apsb] {
                 let base = GpuConfig { driver, ..Default::default() };
                 for cfg in [base, base.compacted()] {
-                    let r = GpuMatcher::new(cfg).run(&g, init.clone());
+                    let r = GpuMatcher::new(cfg).run_detached(&g, init.clone());
                     r.matching
                         .certify(&g)
                         .unwrap_or_else(|e| panic!("{} on {}: {e}", cfg.name(), fam.name()));
@@ -424,8 +453,8 @@ mod tests {
         // columns, exactly where the O(nc) full-scan floor hurts
         let g = crate::graph::gen::Family::Road.generate(4000, 7);
         let init = InitHeuristic::Cheap.run(&g);
-        let full = GpuMatcher::default().run(&g, init.clone());
-        let fc = GpuMatcher::new(GpuConfig::default().compacted()).run(&g, init);
+        let full = GpuMatcher::default().run_detached(&g, init.clone());
+        let fc = GpuMatcher::new(GpuConfig::default().compacted()).run_detached(&g, init);
         assert_eq!(full.matching.cardinality(), fc.matching.cardinality());
         assert!(fc.stats.frontier_peak > 0);
         assert!(fc.stats.frontier_peak <= g.nc as u64);
@@ -454,9 +483,9 @@ mod tests {
             for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
                 for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
                     let base = GpuConfig { driver, kernel, frontier, ..Default::default() };
-                    let serial = GpuMatcher::new(base).run(&g, init.clone());
+                    let serial = GpuMatcher::new(base).run_detached(&g, init.clone());
                     let par = GpuMatcher::new(GpuConfig { device_parallelism: 4, ..base })
-                        .run(&g, init.clone());
+                        .run_detached(&g, init.clone());
                     par.matching
                         .certify(&g)
                         .unwrap_or_else(|e| panic!("{} parallel: {e}", base.name()));
@@ -482,9 +511,9 @@ mod tests {
                 for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
                     for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
                         let base = GpuConfig { driver, kernel, frontier, ..Default::default() };
-                        let s = GpuMatcher::new(base).run(&g, Matching::empty(nr, nc));
+                        let s = GpuMatcher::new(base).run_detached(&g, Matching::empty(nr, nc));
                         let p = GpuMatcher::new(GpuConfig { device_parallelism: 3, ..base })
-                            .run(&g, Matching::empty(nr, nc));
+                            .run_detached(&g, Matching::empty(nr, nc));
                         p.matching
                             .certify(&g)
                             .map_err(|e| format!("{} parallel: {e}", base.name()))?;
@@ -504,10 +533,44 @@ mod tests {
     }
 
     #[test]
+    fn gpu_run_honours_ctx_interruption_and_reuses_workspaces() {
+        let g = crate::graph::gen::Family::Uniform.generate(600, 5);
+        let init = InitHeuristic::Cheap.run(&g);
+        // pre-cancelled token: trips at the first phase checkpoint, and the
+        // returned matching is still the (valid) initial one
+        let mut ctx = RunCtx::detached();
+        ctx.cancel_token().cancel();
+        let r = GpuMatcher::default().run(&g, init.clone(), &mut ctx);
+        assert_eq!(r.outcome, RunOutcome::Cancelled);
+        r.matching.validate(&g).unwrap();
+        assert_eq!(r.matching.cardinality(), init.cardinality());
+        // expired deadline behaves the same, tagged differently
+        let mut ctx = RunCtx::detached().with_deadline_in(std::time::Duration::ZERO);
+        let r = GpuMatcher::default().run(&g, init.clone(), &mut ctx);
+        assert_eq!(r.outcome, RunOutcome::DeadlineExceeded);
+        // workspace reuse: a second same-size job leases the first job's
+        // buffers (bfs_array/predecessor/root + the worklists)
+        let pool = std::sync::Arc::new(crate::util::pool::WorkspacePool::new());
+        let r1 = GpuMatcher::default().run(&g, init.clone(), &mut RunCtx::new(pool.clone()));
+        assert!(r1.is_complete());
+        assert_eq!(pool.reuses(), 0);
+        let r2 = GpuMatcher::default().run(&g, init, &mut RunCtx::new(pool.clone()));
+        assert!(
+            pool.reuses() >= 3,
+            "second run must lease the first run's device arrays, reuses={}",
+            pool.reuses()
+        );
+        assert_eq!(r1.matching.cardinality(), r2.matching.cardinality());
+    }
+
+    #[test]
     fn device_cycles_recorded() {
         let g = crate::graph::gen::Family::Uniform.generate(400, 3);
-        let (r, clock) =
-            GpuMatcher::default().run_with_clock(&g, Matching::empty(g.nr, g.nc));
+        let (r, clock) = GpuMatcher::default().run_with_clock(
+            &g,
+            Matching::empty(g.nr, g.nc),
+            &mut RunCtx::detached(),
+        );
         assert!(r.stats.device_cycles > 0);
         assert_eq!(r.stats.device_cycles, clock.cycles);
         assert!(clock.launches > 0);
@@ -517,7 +580,7 @@ mod tests {
     fn empty_and_edgeless_graphs() {
         let g = from_edges(5, 5, &[]);
         for cfg in GpuConfig::all_variants() {
-            let r = GpuMatcher::new(cfg).run(&g, Matching::empty(5, 5));
+            let r = GpuMatcher::new(cfg).run_detached(&g, Matching::empty(5, 5));
             assert_eq!(r.matching.cardinality(), 0);
         }
     }

@@ -71,6 +71,36 @@ impl GpuState {
         }
     }
 
+    /// Like [`GpuState::new`], but the per-run device arrays come from a
+    /// [`WorkspacePool`] lease — the driver's path, so worker threads stop
+    /// re-allocating `bfs_array`/`predecessor`/`root` on every job. Pair
+    /// with [`GpuState::release`].
+    pub fn new_in(
+        g: &BipartiteCsr,
+        init: &Matching,
+        pool: &crate::util::pool::WorkspacePool,
+    ) -> Self {
+        Self {
+            bfs_array: pool.lease_i32(g.nc, 0),
+            predecessor: pool.lease_i32(g.nr, -1),
+            root: pool.lease_i32(g.nc, -1),
+            rmatch: init.rmatch.clone(),
+            cmatch: init.cmatch.clone(),
+            vertex_inserted: false,
+            augmenting_path_found: false,
+        }
+    }
+
+    /// Give the leased device arrays back to `pool` and move the matching
+    /// out (must be called only after FIXMATCHING, like
+    /// [`GpuState::to_matching`]).
+    pub fn release(self, pool: &crate::util::pool::WorkspacePool) -> Matching {
+        pool.give_i32(self.bfs_array);
+        pool.give_i32(self.predecessor);
+        pool.give_i32(self.root);
+        Matching { rmatch: self.rmatch, cmatch: self.cmatch }
+    }
+
     pub fn cardinality(&self) -> usize {
         self.cmatch.iter().filter(|&&r| r >= 0).count()
     }

@@ -19,7 +19,7 @@ use super::config::{ThreadMapping, WriteOrder};
 use super::device::DeviceClock;
 use super::kernels::{alternate, fixmatching, GpuState, LaunchCfg, L0};
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunResult, RunStats};
 use crate::matching::Matching;
 use crate::runtime::{Artifact, ArtifactKind, Engine};
 use anyhow::{anyhow, Result};
@@ -112,7 +112,12 @@ impl MatchingAlgorithm for XlaApfbMatcher {
         "xla:apfb-full".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
+        // the whole matching runs as ONE compiled program, so the only
+        // inter-phase checkpoint is before launch
+        if let Some(trip) = ctx.checkpoint() {
+            return ctx.finish_with(init, trip);
+        }
         match self.try_run(g, &init) {
             Ok(r) => r,
             Err(e) => {
@@ -120,7 +125,7 @@ impl MatchingAlgorithm for XlaApfbMatcher {
                 // native simulator so the service keeps answering; the
                 // fallback is visible in the stats.
                 log::warn!("xla backend unavailable ({e:#}); using native GPU simulator");
-                let mut r = super::driver::GpuMatcher::default().run(g, init);
+                let mut r = super::driver::GpuMatcher::default().run(g, init, &mut ctx.fork());
                 r.stats.fallbacks += 1;
                 r
             }
@@ -139,6 +144,17 @@ impl XlaHybridMatcher {
     }
 
     pub fn try_run(&self, g: &BipartiteCsr, init: &Matching) -> Result<RunResult> {
+        self.try_run_ctx(g, init, &mut RunCtx::detached())
+    }
+
+    /// Context-aware variant: the deadline/cancellation checkpoint sits at
+    /// the top of each phase (one `bfs_level` program execution sequence).
+    pub fn try_run_ctx(
+        &self,
+        g: &BipartiteCsr,
+        init: &Matching,
+        ctx: &mut RunCtx,
+    ) -> Result<RunResult> {
         let art = pick_bucket(&self.engine, ArtifactKind::BfsLevel, g)?;
         let adj = pack_for_bucket(g, art)?;
         let exe = self.engine.load(&art.name)?;
@@ -155,6 +171,11 @@ impl XlaHybridMatcher {
         let mut cardinality = init.cardinality();
 
         loop {
+            if let Some(trip) = ctx.checkpoint() {
+                stats.device_cycles = clock.cycles;
+                stats.device_parallel_cycles = clock.parallel_cycles;
+                return Ok(RunResult { matching: state.to_matching(), stats, outcome: trip });
+            }
             // host INITBFSARRAY equivalents on padded buffers
             let mut bfs: Vec<i32> = (0..art.nc)
                 .map(|c| {
@@ -212,11 +233,11 @@ impl XlaHybridMatcher {
             if after <= before {
                 // same safety net as the native driver
                 let m = state.to_matching();
-                let tail = crate::seq::Hk.run(g, m);
+                let tail = crate::seq::Hk.run(g, m, &mut ctx.fork());
                 stats.fallbacks += 1;
                 stats.device_cycles = clock.cycles;
                 stats.device_parallel_cycles = clock.parallel_cycles;
-                return Ok(RunResult::with_stats(tail.matching, stats));
+                return Ok(RunResult { matching: tail.matching, stats, outcome: tail.outcome });
             }
         }
         stats.device_cycles = clock.cycles;
@@ -230,12 +251,12 @@ impl MatchingAlgorithm for XlaHybridMatcher {
         "xla:bfs-level-hybrid".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
-        match self.try_run(g, &init) {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
+        match self.try_run_ctx(g, &init, &mut ctx.fork()) {
             Ok(r) => r,
             Err(e) => {
                 log::warn!("xla hybrid unavailable ({e:#}); using native GPU simulator");
-                let mut r = super::driver::GpuMatcher::default().run(g, init);
+                let mut r = super::driver::GpuMatcher::default().run(g, init, &mut ctx.fork());
                 r.stats.fallbacks += 1;
                 r
             }

@@ -9,6 +9,7 @@
 
 use super::catalog::{Instance, Scale};
 use crate::coordinator::registry;
+use crate::matching::algo::RunCtx;
 use crate::matching::init::InitHeuristic;
 use crate::util::timer::Timer;
 use std::collections::HashMap;
@@ -99,10 +100,14 @@ impl Evaluator {
         }
         let g = inst.build();
         let init = InitHeuristic::Cheap.run(&g);
-        let algo = registry::build(algo_name, None)
-            .unwrap_or_else(|| panic!("unknown algorithm {algo_name}"));
+        let algo = registry::build_named(algo_name, None).unwrap_or_else(|e| panic!("{e}"));
+        // every measured cell gets a FRESH context: sharing a workspace
+        // pool across measurements would make wall-clock records
+        // order-dependent (the first algorithm on a size pays all the
+        // allocations, later ones run warm), biasing the paper tables
+        let mut ctx = RunCtx::detached();
         let t = Timer::start();
-        let result = algo.run(&g, init);
+        let result = algo.run(&g, init, &mut ctx);
         let wall = t.elapsed_secs();
         if self.verify {
             result

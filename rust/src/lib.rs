@@ -16,6 +16,48 @@
 //! * **Runtime** — `runtime::Engine` loads the HLO artifacts through the
 //!   PJRT CPU client (`xla` crate) so the "GPU" path runs with Python
 //!   nowhere on the request path.
+//!
+//! ## The typed execution API
+//!
+//! Algorithm dispatch is typed end to end:
+//!
+//! * [`AlgoSpec`] names a matcher — `Seq(SeqKind)`, `Multicore { kind,
+//!   threads }`, `Gpu(GpuConfig)`, or `Xla(XlaKind)`. Its
+//!   `FromStr`/`Display` impls are the stable wire/CLI format
+//!   (`"hk"`, `"p-dbfs@4"`, `"gpu:APFB-GPUBFS-WR-CT-FC"`,
+//!   `"xla:apfb-full"`), round-tripping every registry name;
+//!   `coordinator::registry::build` turns a spec into a runnable matcher
+//!   and `coordinator::router::route` returns one. Configuration edits
+//!   (e.g. the frontier-mode override) are typed field edits, not string
+//!   surgery.
+//! * Every run executes against a [`RunCtx`] carrying what a serving
+//!   layer needs: a [`util::pool::WorkspacePool`] (size-keyed scratch
+//!   reuse — `bfs_array`/frontier/visited buffers survive across jobs), a
+//!   deadline plus a [`CancelToken`] that matchers check **between
+//!   phases**, and the [`matching::algo::RunStats`] sink. A tripped run
+//!   returns a *valid* (but possibly non-maximum) matching tagged
+//!   [`RunOutcome::DeadlineExceeded`] / [`RunOutcome::Cancelled`]; the
+//!   coordinator surfaces it as a distinct job failure
+//!   (`coordinator::job::JobError`) and the TCP server replies
+//!   `ERR timeout: ...` (`MATCH ... timeout_ms=<int>`).
+//! * One-shot callers use [`MatchingAlgorithm::run_detached`], which
+//!   supplies a throwaway context.
+//!
+//! ## Layer map
+//!
+//! `graph` (CSR substrate + generators + MatrixMarket IO) → `matching`
+//! (representation, certification, the algorithm trait + `RunCtx`) →
+//! matchers (`seq`, `multicore`, `gpu` simulator + `gpu::xla_backend`) →
+//! `coordinator` (typed registry/router, executor, worker-pool service,
+//! TCP server) — with `harness` (paper tables/figures) and `apps` (BTF)
+//! on the side.
+//!
+//! ## Verifying
+//!
+//! The tier-1 gate is `cargo build --release && cargo test -q` (run from
+//! `rust/`). Registry-name stability is enforced by a golden-file test
+//! against `rust/registry-names.txt` and a CI diff of
+//! `bimatch --list-algos` output.
 
 pub mod apps;
 pub mod cli;
@@ -29,5 +71,7 @@ pub mod runtime;
 pub mod seq;
 pub mod util;
 
-pub use matching::algo::{MatchingAlgorithm, RunResult};
+pub use coordinator::spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};
+pub use matching::algo::{CancelToken, MatchingAlgorithm, RunCtx, RunOutcome, RunResult};
 pub use matching::Matching;
+pub use util::pool::WorkspacePool;

@@ -1,9 +1,25 @@
 //! The algorithm interface shared by sequential, multicore, GPU-simulated,
 //! and XLA-backed matchers, plus the run-record types the evaluation
 //! harness consumes.
+//!
+//! Every run executes against a [`RunCtx`], which carries the three things
+//! a serving layer needs and the bare `(graph, init)` signature cannot
+//! express:
+//! * a [`WorkspacePool`] — size-keyed scratch-buffer reuse, so worker
+//!   threads stop re-allocating `bfs_array`/frontier/visited vectors on
+//!   every job;
+//! * a deadline and a [`CancelToken`] — matchers call
+//!   [`RunCtx::checkpoint`] between phases and return early with a
+//!   [`RunOutcome::DeadlineExceeded`]/[`RunOutcome::Cancelled`] result
+//!   (whose matching is valid but possibly not maximum);
+//! * the stats sink ([`RunCtx::stats`]) the run records its counters into.
 
 use super::Matching;
 use crate::graph::csr::BipartiteCsr;
+use crate::util::pool::WorkspacePool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Counters every algorithm reports (zeros where not applicable). These
 /// regenerate the paper's Fig. 2 (kernel launches per phase) and feed the
@@ -51,33 +67,215 @@ impl RunStats {
     }
 }
 
+/// How a run ended. Anything other than [`RunOutcome::Complete`] means the
+/// returned matching is *valid* (certifiable structure) but has no
+/// maximality guarantee — the coordinator reports such jobs as distinct
+/// failures rather than serving a silently suboptimal answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RunOutcome {
+    /// ran to completion; the matching is maximum (algorithm contract)
+    #[default]
+    Complete,
+    /// the context's deadline passed at an inter-phase checkpoint
+    DeadlineExceeded,
+    /// the context's cancellation token tripped
+    Cancelled,
+}
+
+impl RunOutcome {
+    pub fn is_complete(&self) -> bool {
+        matches!(self, RunOutcome::Complete)
+    }
+}
+
+/// Cooperative cancellation handle. Cloning shares the flag; any clone can
+/// cancel, and every matcher observes it at its next inter-phase
+/// checkpoint. The coordinator hands one to every in-flight run so a
+/// draining service can abandon work it no longer needs.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-run execution context: workspace pool, deadline, cancellation, and
+/// the stats sink. One `RunCtx` serves one `run` call; the pool inside is
+/// shared (via `Arc`) across many contexts, which is where cross-job
+/// buffer reuse comes from.
+pub struct RunCtx {
+    pool: Arc<WorkspacePool>,
+    deadline: Option<Instant>,
+    cancel: CancelToken,
+    /// Counters the running algorithm records into; `finish`/`finish_with`
+    /// move them into the returned [`RunResult`].
+    pub stats: RunStats,
+}
+
+impl RunCtx {
+    pub fn new(pool: Arc<WorkspacePool>) -> Self {
+        Self { pool, deadline: None, cancel: CancelToken::new(), stats: RunStats::default() }
+    }
+
+    /// A throwaway context: private pool, no deadline, fresh token. What
+    /// [`MatchingAlgorithm::run_detached`] uses.
+    pub fn detached() -> Self {
+        Self::new(Arc::new(WorkspacePool::new()))
+    }
+
+    /// Set the deadline `budget` from now.
+    pub fn with_deadline_in(mut self, budget: Duration) -> Self {
+        self.deadline = Some(Instant::now() + budget);
+        self
+    }
+
+    pub fn set_deadline(&mut self, deadline: Option<Instant>) {
+        self.deadline = deadline;
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = token;
+        self
+    }
+
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    pub fn pool(&self) -> &WorkspacePool {
+        &self.pool
+    }
+
+    /// Sub-context for a nested matcher (the fallback tails some matchers
+    /// run): shares the pool, deadline, and cancellation token, but
+    /// collects its own stats so the caller controls the merge.
+    pub fn fork(&self) -> RunCtx {
+        RunCtx {
+            pool: self.pool.clone(),
+            deadline: self.deadline,
+            cancel: self.cancel.clone(),
+            stats: RunStats::default(),
+        }
+    }
+
+    /// Deadline/cancellation check — matchers call this between phases
+    /// (never inside a kernel) and return early with the reported outcome.
+    /// Cancellation wins over an expired deadline when both hold.
+    pub fn checkpoint(&self) -> Option<RunOutcome> {
+        if self.cancel.is_cancelled() {
+            return Some(RunOutcome::Cancelled);
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return Some(RunOutcome::DeadlineExceeded);
+            }
+        }
+        None
+    }
+
+    pub fn take_stats(&mut self) -> RunStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Seal a completed run: moves the recorded stats into the result.
+    pub fn finish(&mut self, matching: Matching) -> RunResult {
+        self.finish_with(matching, RunOutcome::Complete)
+    }
+
+    /// Seal a run with an explicit outcome (tripped deadline/cancellation).
+    pub fn finish_with(&mut self, matching: Matching, outcome: RunOutcome) -> RunResult {
+        RunResult { matching, stats: self.take_stats(), outcome }
+    }
+
+    // -- workspace leases (delegates to the shared pool) ------------------
+
+    pub fn lease_i32(&self, len: usize, fill: i32) -> Vec<i32> {
+        self.pool.lease_i32(len, fill)
+    }
+
+    pub fn give_i32(&self, v: Vec<i32>) {
+        self.pool.give_i32(v)
+    }
+
+    pub fn lease_u32(&self, len: usize, fill: u32) -> Vec<u32> {
+        self.pool.lease_u32(len, fill)
+    }
+
+    pub fn give_u32(&self, v: Vec<u32>) {
+        self.pool.give_u32(v)
+    }
+
+    pub fn lease_bool(&self, len: usize, fill: bool) -> Vec<bool> {
+        self.pool.lease_bool(len, fill)
+    }
+
+    pub fn give_bool(&self, v: Vec<bool>) {
+        self.pool.give_bool(v)
+    }
+
+    /// Lease an *empty* worklist with at least `cap_hint` capacity. The
+    /// hint makes the pool pick a size-fitted buffer — leasing at length
+    /// 0 would grab the smallest shelved one, which the first pushes of a
+    /// large run immediately outgrow — and nothing is filled (worklists
+    /// only ever push).
+    pub fn lease_worklist_u32(&self, cap_hint: usize) -> Vec<u32> {
+        self.pool.lease_u32_worklist(cap_hint)
+    }
+}
+
 /// Result of one algorithm execution (timing is measured by the caller so
 /// the policy — warmups, repetitions — lives in one place, the harness).
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub matching: Matching,
     pub stats: RunStats,
+    /// `Complete`, or how the run was interrupted (see [`RunOutcome`]).
+    pub outcome: RunOutcome,
 }
 
 impl RunResult {
     pub fn new(matching: Matching) -> Self {
-        Self { matching, stats: RunStats::default() }
+        Self { matching, stats: RunStats::default(), outcome: RunOutcome::Complete }
     }
 
     pub fn with_stats(matching: Matching, stats: RunStats) -> Self {
-        Self { matching, stats }
+        Self { matching, stats, outcome: RunOutcome::Complete }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.outcome.is_complete()
     }
 }
 
 /// A maximum-cardinality matching algorithm. `run` must return a matching
 /// that is *maximum* (certified by the test suite), starting from the given
-/// initial matching (the common cheap-matching initialization of §4).
+/// initial matching (the common cheap-matching initialization of §4) —
+/// unless the context trips first, in which case the run returns its
+/// best-so-far valid matching tagged with the interrupting [`RunOutcome`].
 pub trait MatchingAlgorithm: Send + Sync {
     /// Stable identifier used by the CLI, the harness, and result files.
     fn name(&self) -> String;
 
-    /// Compute a maximum matching, extending `init`.
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult;
+    /// Compute a maximum matching extending `init`: scratch buffers come
+    /// from `ctx`'s workspace pool, counters go to `ctx.stats`, and the
+    /// context's deadline/cancellation is honoured between phases.
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult;
+
+    /// Convenience wrapper: run with a throwaway context (private pool, no
+    /// deadline). One-shot callers, tests, and benches use this.
+    fn run_detached(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+        self.run(g, init, &mut RunCtx::detached())
+    }
 }
 
 #[cfg(test)]
@@ -99,9 +297,71 @@ mod tests {
         let m = Matching::empty(2, 2);
         let r = RunResult::new(m.clone());
         assert_eq!(r.stats, RunStats::default());
+        assert!(r.is_complete());
         let mut s = RunStats::default();
         s.augmentations = 4;
         let r2 = RunResult::with_stats(m, s.clone());
         assert_eq!(r2.stats, s);
+        assert_eq!(r2.outcome, RunOutcome::Complete);
+    }
+
+    #[test]
+    fn checkpoint_clear_by_default() {
+        let ctx = RunCtx::detached();
+        assert_eq!(ctx.checkpoint(), None);
+    }
+
+    #[test]
+    fn checkpoint_reports_cancellation() {
+        let ctx = RunCtx::detached();
+        let token = ctx.cancel_token();
+        assert_eq!(ctx.checkpoint(), None);
+        token.cancel();
+        assert_eq!(ctx.checkpoint(), Some(RunOutcome::Cancelled));
+        assert!(token.is_cancelled());
+    }
+
+    #[test]
+    fn checkpoint_reports_expired_deadline() {
+        let ctx = RunCtx::detached().with_deadline_in(std::time::Duration::ZERO);
+        assert_eq!(ctx.checkpoint(), Some(RunOutcome::DeadlineExceeded));
+        let mut ctx = RunCtx::detached().with_deadline_in(std::time::Duration::from_secs(3600));
+        assert_eq!(ctx.checkpoint(), None);
+        ctx.set_deadline(None);
+        assert_eq!(ctx.checkpoint(), None);
+    }
+
+    #[test]
+    fn cancellation_wins_over_deadline() {
+        let ctx = RunCtx::detached().with_deadline_in(std::time::Duration::ZERO);
+        ctx.cancel_token().cancel();
+        assert_eq!(ctx.checkpoint(), Some(RunOutcome::Cancelled));
+    }
+
+    #[test]
+    fn fork_shares_pool_and_token_but_not_stats() {
+        let mut ctx = RunCtx::detached().with_deadline_in(std::time::Duration::from_secs(3600));
+        ctx.stats.augmentations = 5;
+        let sub = ctx.fork();
+        assert_eq!(sub.stats, RunStats::default());
+        assert_eq!(sub.checkpoint(), None);
+        ctx.cancel_token().cancel();
+        assert_eq!(sub.checkpoint(), Some(RunOutcome::Cancelled), "token is shared");
+        // pool is shared: a buffer given back via the fork is leasable here
+        sub.give_i32(vec![0; 64]);
+        let _ = ctx.lease_i32(64, -1);
+        assert_eq!(ctx.pool().reuses(), 1);
+    }
+
+    #[test]
+    fn finish_moves_stats_and_sets_outcome() {
+        let mut ctx = RunCtx::detached();
+        ctx.stats.record_phase(2);
+        let r = ctx.finish(Matching::empty(1, 1));
+        assert_eq!(r.stats.phases, 1);
+        assert!(r.is_complete());
+        assert_eq!(ctx.stats, RunStats::default(), "finish drains the sink");
+        let r2 = ctx.finish_with(Matching::empty(1, 1), RunOutcome::DeadlineExceeded);
+        assert!(!r2.is_complete());
     }
 }

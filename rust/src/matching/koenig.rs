@@ -109,7 +109,7 @@ mod tests {
     #[test]
     fn koenig_on_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let m = Hk.run(&g, Matching::empty(3, 3)).matching;
+        let m = Hk.run_detached(&g, Matching::empty(3, 3)).matching;
         let cover = certify_with_cover(&g, &m).unwrap();
         assert_eq!(cover.size(), 3);
     }
@@ -118,7 +118,7 @@ mod tests {
     fn koenig_on_star() {
         // K_{1,4}: cover = the single row, |M| = 1
         let g = from_edges(1, 4, &[(0, 0), (0, 1), (0, 2), (0, 3)]);
-        let m = Hk.run(&g, Matching::empty(1, 4)).matching;
+        let m = Hk.run_detached(&g, Matching::empty(1, 4)).matching;
         let cover = certify_with_cover(&g, &m).unwrap();
         assert_eq!(cover.size(), 1);
         assert_eq!(cover.rows, vec![0]);
@@ -140,7 +140,7 @@ mod tests {
         forall(Config::cases(40), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
-            let m = Hk.run(&g, Matching::empty(nr, nc)).matching;
+            let m = Hk.run_detached(&g, Matching::empty(nr, nc)).matching;
             let cover = certify_with_cover(&g, &m).map_err(|e| e)?;
             if cover.size() != m.cardinality() {
                 return Err("König equality violated".into());

@@ -10,7 +10,7 @@
 
 use super::common::{AtomicMatching, Stamps};
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 use crate::util::pool::{default_threads, fork_join};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -27,11 +27,11 @@ impl Default for PDbfs {
 
 impl MatchingAlgorithm for PDbfs {
     fn name(&self) -> String {
-        format!("p-dbfs[{}]", self.nthreads)
+        // the AlgoSpec wire format with an explicit thread count
+        format!("p-dbfs@{}", self.nthreads)
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
-        let mut stats = RunStats::default();
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let am = AtomicMatching::from(&init);
         let col_claim = Stamps::new(g.nc);
         let row_claim = Stamps::new(g.nr);
@@ -39,6 +39,10 @@ impl MatchingAlgorithm for PDbfs {
         let total_aug = AtomicU64::new(0);
 
         loop {
+            if let Some(trip) = ctx.checkpoint() {
+                ctx.stats.augmentations = total_aug.load(Ordering::Relaxed);
+                return ctx.finish_with(am.into_matching(), trip);
+            }
             stamp += 1;
             let work = AtomicUsize::new(0);
             let round_aug = AtomicU64::new(0);
@@ -81,10 +85,10 @@ impl MatchingAlgorithm for PDbfs {
                 }
                 edges_scanned.fetch_add(scanned, Ordering::Relaxed);
             });
-            stats.edges_scanned += edges_scanned.load(Ordering::Relaxed);
+            ctx.stats.edges_scanned += edges_scanned.load(Ordering::Relaxed);
             let aug = round_aug.load(Ordering::Relaxed);
             total_aug.fetch_add(aug, Ordering::Relaxed);
-            stats.record_phase(1);
+            ctx.stats.record_phase(1);
             if aug == 0 {
                 break; // starvation or true maximality — certified below
             }
@@ -94,10 +98,10 @@ impl MatchingAlgorithm for PDbfs {
         // augmenting paths; HK from the current matching finishes the job
         // and proves maximality (cheap — few unmatched columns remain).
         let m = am.into_matching();
-        let tail = crate::seq::Hk.run(g, m);
-        stats.augmentations = total_aug.load(Ordering::Relaxed) + tail.stats.augmentations;
-        stats.edges_scanned += tail.stats.edges_scanned;
-        RunResult::with_stats(tail.matching, stats)
+        let tail = crate::seq::Hk.run(g, m, &mut ctx.fork());
+        ctx.stats.augmentations = total_aug.load(Ordering::Relaxed) + tail.stats.augmentations;
+        ctx.stats.edges_scanned += tail.stats.edges_scanned;
+        ctx.finish_with(tail.matching, tail.outcome)
     }
 }
 
@@ -159,7 +163,7 @@ mod tests {
     #[test]
     fn pdbfs_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = PDbfs { nthreads: 4 }.run(&g, Matching::empty(3, 3));
+        let r = PDbfs { nthreads: 4 }.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -170,7 +174,7 @@ mod tests {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
             for nthreads in [1, 4] {
-                let r = PDbfs { nthreads }.run(&g, Matching::empty(nr, nc));
+                let r = PDbfs { nthreads }.run_detached(&g, Matching::empty(nr, nc));
                 r.matching.certify(&g).map_err(|e| e.to_string())?;
                 if r.matching.cardinality() != reference_max_cardinality(&g) {
                     return Err(format!("p-dbfs[{nthreads}] suboptimal"));
@@ -185,7 +189,7 @@ mod tests {
         for fam in [crate::graph::gen::Family::Road, crate::graph::gen::Family::Social] {
             let g = fam.generate(800, 11);
             let init = InitHeuristic::Cheap.run(&g);
-            let r = PDbfs { nthreads: 4 }.run(&g, init);
+            let r = PDbfs { nthreads: 4 }.run_detached(&g, init);
             r.matching.certify(&g).unwrap();
             assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
         }

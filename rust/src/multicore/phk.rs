@@ -7,7 +7,7 @@
 
 use super::common::{AtomicMatching, Stamps};
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 use crate::util::pool::{default_threads, fork_join, parallel_chunks};
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, AtomicUsize, Ordering};
@@ -27,11 +27,11 @@ const UNREACHED: i32 = i32::MAX;
 
 impl MatchingAlgorithm for PHk {
     fn name(&self) -> String {
-        format!("p-hk[{}]", self.nthreads)
+        // the AlgoSpec wire format with an explicit thread count
+        format!("p-hk@{}", self.nthreads)
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
-        let mut stats = RunStats::default();
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let am = AtomicMatching::from(&init);
         let dist: Vec<AtomicI32> = (0..g.nc).map(|_| AtomicI32::new(UNREACHED)).collect();
         let row_claim = Stamps::new(g.nr);
@@ -39,6 +39,10 @@ impl MatchingAlgorithm for PHk {
         let mut total_aug = 0u64;
 
         loop {
+            if let Some(trip) = ctx.checkpoint() {
+                ctx.stats.augmentations = total_aug;
+                return ctx.finish_with(am.into_matching(), trip);
+            }
             // ---- parallel level-synchronous BFS ----
             parallel_chunks(self.nthreads, g.nc, |range| {
                 for c in range {
@@ -107,11 +111,11 @@ impl MatchingAlgorithm for PHk {
                 found = found_flag.load(Ordering::Relaxed);
                 level += 1;
             }
-            stats.edges_scanned += edges_scanned.load(Ordering::Relaxed);
+            ctx.stats.edges_scanned += edges_scanned.load(Ordering::Relaxed);
             if !found {
                 break; // certified maximum: no augmenting path exists
             }
-            stats.record_phase(launches);
+            ctx.stats.record_phase(launches);
 
             // ---- parallel disjoint shortest-path DFS ----
             stamp += 1;
@@ -146,14 +150,14 @@ impl MatchingAlgorithm for PHk {
             // progress and hence termination.
             if aug.load(Ordering::Relaxed) == 0 {
                 let m = am.into_matching();
-                let tail = crate::seq::Hk.run(g, m);
-                stats.augmentations = total_aug + tail.stats.augmentations;
-                stats.edges_scanned += tail.stats.edges_scanned;
-                return RunResult::with_stats(tail.matching, stats);
+                let tail = crate::seq::Hk.run(g, m, &mut ctx.fork());
+                ctx.stats.augmentations = total_aug + tail.stats.augmentations;
+                ctx.stats.edges_scanned += tail.stats.edges_scanned;
+                return ctx.finish_with(tail.matching, tail.outcome);
             }
         }
-        stats.augmentations = total_aug;
-        RunResult::with_stats(am.into_matching(), stats)
+        ctx.stats.augmentations = total_aug;
+        ctx.finish(am.into_matching())
     }
 }
 
@@ -230,7 +234,7 @@ mod tests {
     #[test]
     fn phk_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = PHk { nthreads: 4 }.run(&g, Matching::empty(3, 3));
+        let r = PHk { nthreads: 4 }.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -241,7 +245,7 @@ mod tests {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
             for nthreads in [1, 4] {
-                let r = PHk { nthreads }.run(&g, Matching::empty(nr, nc));
+                let r = PHk { nthreads }.run_detached(&g, Matching::empty(nr, nc));
                 r.matching.certify(&g).map_err(|e| e.to_string())?;
                 if r.matching.cardinality() != reference_max_cardinality(&g) {
                     return Err(format!("p-hk[{nthreads}] suboptimal"));
@@ -254,7 +258,7 @@ mod tests {
     #[test]
     fn phk_on_mesh_with_init() {
         let g = crate::graph::gen::delaunay_like(900, 5);
-        let r = PHk { nthreads: 4 }.run(&g, InitHeuristic::Cheap.run(&g));
+        let r = PHk { nthreads: 4 }.run_detached(&g, InitHeuristic::Cheap.run(&g));
         r.matching.certify(&g).unwrap();
         assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
     }

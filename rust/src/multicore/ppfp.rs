@@ -10,7 +10,7 @@
 
 use super::common::{AtomicMatching, Stamps};
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 use crate::util::pool::{default_threads, fork_join};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -27,11 +27,11 @@ impl Default for PPfp {
 
 impl MatchingAlgorithm for PPfp {
     fn name(&self) -> String {
-        format!("p-pfp[{}]", self.nthreads)
+        // the AlgoSpec wire format with an explicit thread count
+        format!("p-pfp@{}", self.nthreads)
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
-        let mut stats = RunStats::default();
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let am = AtomicMatching::from(&init);
         let row_claim = Stamps::new(g.nr);
         let mut stamp = 0u32;
@@ -39,6 +39,10 @@ impl MatchingAlgorithm for PPfp {
         let mut total_aug = 0u64;
 
         loop {
+            if let Some(trip) = ctx.checkpoint() {
+                ctx.stats.augmentations = total_aug;
+                return ctx.finish_with(am.into_matching(), trip);
+            }
             stamp += 1;
             let work = AtomicUsize::new(0);
             let aug = AtomicU64::new(0);
@@ -66,8 +70,8 @@ impl MatchingAlgorithm for PPfp {
                 }
                 scanned_total.fetch_add(scanned, Ordering::Relaxed);
             });
-            stats.edges_scanned += scanned_total.load(Ordering::Relaxed);
-            stats.record_phase(0);
+            ctx.stats.edges_scanned += scanned_total.load(Ordering::Relaxed);
+            ctx.stats.record_phase(0);
             let a = aug.load(Ordering::Relaxed);
             total_aug += a;
             if a == 0 {
@@ -78,10 +82,10 @@ impl MatchingAlgorithm for PPfp {
 
         // sequential tail certifies maximality (and picks up any paths the
         // claim discipline starved out).
-        let tail = crate::seq::Pfp.run(g, am.into_matching());
-        stats.augmentations = total_aug + tail.stats.augmentations;
-        stats.edges_scanned += tail.stats.edges_scanned;
-        RunResult::with_stats(tail.matching, stats)
+        let tail = crate::seq::Pfp.run(g, am.into_matching(), &mut ctx.fork());
+        ctx.stats.augmentations = total_aug + tail.stats.augmentations;
+        ctx.stats.edges_scanned += tail.stats.edges_scanned;
+        ctx.finish_with(tail.matching, tail.outcome)
     }
 }
 
@@ -160,7 +164,7 @@ mod tests {
     #[test]
     fn ppfp_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = PPfp { nthreads: 4 }.run(&g, Matching::empty(3, 3));
+        let r = PPfp { nthreads: 4 }.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -171,7 +175,7 @@ mod tests {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
             for nthreads in [1, 4] {
-                let r = PPfp { nthreads }.run(&g, Matching::empty(nr, nc));
+                let r = PPfp { nthreads }.run_detached(&g, Matching::empty(nr, nc));
                 r.matching.certify(&g).map_err(|e| e.to_string())?;
                 if r.matching.cardinality() != reference_max_cardinality(&g) {
                     return Err(format!("p-pfp[{nthreads}] suboptimal"));
@@ -185,7 +189,7 @@ mod tests {
     fn ppfp_permuted_instance() {
         let g = crate::graph::gen::Family::Banded.generate(700, 13);
         let p = crate::graph::random_permute(&g, 5);
-        let r = PPfp { nthreads: 4 }.run(&p, InitHeuristic::Cheap.run(&p));
+        let r = PPfp { nthreads: 4 }.run_detached(&p, InitHeuristic::Cheap.run(&p));
         r.matching.certify(&p).unwrap();
         assert_eq!(r.matching.cardinality(), reference_max_cardinality(&p));
     }

@@ -4,7 +4,7 @@
 //! multicore baseline.
 
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 
 pub struct BfsSimple;
@@ -14,18 +14,24 @@ impl MatchingAlgorithm for BfsSimple {
         "bfs".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let mut m = init;
-        let mut stats = RunStats::default();
         // predecessor[r] = column from which row r was reached
-        let mut pred = vec![-1i32; g.nr];
-        let mut visited = vec![u32::MAX; g.nc];
-        let mut rvisited = vec![u32::MAX; g.nr];
-        let mut frontier: Vec<u32> = Vec::new();
-        let mut next: Vec<u32> = Vec::new();
+        let mut pred = ctx.lease_i32(g.nr, -1);
+        let mut visited = ctx.lease_u32(g.nc, u32::MAX);
+        let mut rvisited = ctx.lease_u32(g.nr, u32::MAX);
+        let mut frontier = ctx.lease_worklist_u32(g.nc);
+        let mut next = ctx.lease_worklist_u32(g.nc);
         let mut stamp = 0u32;
+        let mut outcome = RunOutcome::Complete;
 
         for c0 in 0..g.nc {
+            if (c0 & super::dfs::CHECKPOINT_MASK) == 0 {
+                if let Some(trip) = ctx.checkpoint() {
+                    outcome = trip;
+                    break;
+                }
+            }
             if m.cmatch[c0] != UNMATCHED || g.col_degree(c0) == 0 {
                 continue;
             }
@@ -45,7 +51,7 @@ impl MatchingAlgorithm for BfsSimple {
                 for &c in &frontier {
                     for &r in g.col_neighbors(c as usize) {
                         let r = r as usize;
-                        stats.edges_scanned += 1;
+                        ctx.stats.edges_scanned += 1;
                         if rvisited[r] == stamp {
                             continue;
                         }
@@ -66,7 +72,7 @@ impl MatchingAlgorithm for BfsSimple {
                 std::mem::swap(&mut frontier, &mut next);
                 next.clear();
             }
-            stats.record_phase(launches);
+            ctx.stats.record_phase(launches);
             if let Some(mut r) = endpoint {
                 // walk predecessors back to c0, flipping edges
                 loop {
@@ -79,10 +85,15 @@ impl MatchingAlgorithm for BfsSimple {
                     }
                     r = prev_r as usize;
                 }
-                stats.augmentations += 1;
+                ctx.stats.augmentations += 1;
             }
         }
-        RunResult::with_stats(m, stats)
+        ctx.give_i32(pred);
+        ctx.give_u32(visited);
+        ctx.give_u32(rvisited);
+        ctx.give_u32(frontier);
+        ctx.give_u32(next);
+        ctx.finish_with(m, outcome)
     }
 }
 
@@ -96,7 +107,7 @@ mod tests {
     #[test]
     fn bfs_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = BfsSimple.run(&g, Matching::empty(3, 3));
+        let r = BfsSimple.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -107,7 +118,7 @@ mod tests {
         let g = from_edges(2, 2, &[(0, 0), (1, 0), (0, 1)]);
         let mut init = Matching::empty(2, 2);
         init.join(0, 0);
-        let r = BfsSimple.run(&g, init);
+        let r = BfsSimple.run_detached(&g, init);
         assert_eq!(r.matching.cardinality(), 2);
         r.matching.certify(&g).unwrap();
     }
@@ -117,7 +128,7 @@ mod tests {
         forall(Config::cases(40), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
-            let r = BfsSimple.run(&g, Matching::empty(nr, nc));
+            let r = BfsSimple.run_detached(&g, Matching::empty(nr, nc));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             if r.matching.cardinality() != reference_max_cardinality(&g) {
                 return Err("bfs suboptimal".into());
@@ -129,7 +140,7 @@ mod tests {
     #[test]
     fn stats_populated() {
         let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2)]);
-        let r = BfsSimple.run(&g, Matching::empty(3, 3));
+        let r = BfsSimple.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.stats.augmentations, 3);
         assert!(r.stats.bfs_kernel_launches >= 3);
     }

@@ -3,8 +3,13 @@
 //! family; single pass over columns, O(n·τ) worst case.
 
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult, RunStats};
 use crate::matching::{Matching, UNMATCHED};
+
+/// Deadline/cancellation check cadence for the single-pass matchers: the
+/// context is consulted every this-many column searches (an inter-"phase"
+/// granularity — never inside a search).
+pub(crate) const CHECKPOINT_MASK: usize = 1023;
 
 pub struct DfsLookahead;
 
@@ -13,26 +18,34 @@ impl MatchingAlgorithm for DfsLookahead {
         "dfs".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let mut m = init;
-        let mut stats = RunStats::default();
-        let mut look = vec![0u32; g.nc];
+        let mut look = ctx.lease_u32(g.nc, 0);
         for c in 0..g.nc {
             look[c] = g.cxadj[c];
         }
-        let mut visited = vec![u32::MAX; g.nr];
+        let mut visited = ctx.lease_u32(g.nr, u32::MAX);
         let mut stamp = 0u32;
+        let mut outcome = RunOutcome::Complete;
         for c0 in 0..g.nc {
+            if (c0 & CHECKPOINT_MASK) == 0 {
+                if let Some(trip) = ctx.checkpoint() {
+                    outcome = trip;
+                    break;
+                }
+            }
             if m.cmatch[c0] != UNMATCHED || g.col_degree(c0) == 0 {
                 continue;
             }
             stamp = stamp.wrapping_add(1);
-            if search(g, &mut m, &mut look, &mut visited, stamp, c0, &mut stats) {
-                stats.augmentations += 1;
+            if search(g, &mut m, &mut look, &mut visited, stamp, c0, &mut ctx.stats) {
+                ctx.stats.augmentations += 1;
             }
         }
-        stats.record_phase(0);
-        RunResult::with_stats(m, stats)
+        ctx.stats.record_phase(0);
+        ctx.give_u32(look);
+        ctx.give_u32(visited);
+        ctx.finish_with(m, outcome)
     }
 }
 
@@ -115,7 +128,7 @@ mod tests {
     #[test]
     fn dfs_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = DfsLookahead.run(&g, Matching::empty(3, 3));
+        let r = DfsLookahead.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -125,7 +138,7 @@ mod tests {
         forall(Config::cases(40), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
-            let r = DfsLookahead.run(&g, Matching::empty(nr, nc));
+            let r = DfsLookahead.run_detached(&g, Matching::empty(nr, nc));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             if r.matching.cardinality() != reference_max_cardinality(&g) {
                 return Err("dfs suboptimal".into());
@@ -145,7 +158,7 @@ mod tests {
             }
         }
         let g = from_edges(n, n, &edges);
-        let r = DfsLookahead.run(&g, Matching::empty(n, n));
+        let r = DfsLookahead.run_detached(&g, Matching::empty(n, n));
         assert_eq!(r.matching.cardinality(), n);
     }
 }

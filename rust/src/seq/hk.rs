@@ -10,7 +10,7 @@
 //! pointers so each phase's DFS is O(τ) amortized.
 
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult, RunStats};
 use crate::matching::{Matching, UNMATCHED};
 
 pub struct Hk;
@@ -22,21 +22,25 @@ impl MatchingAlgorithm for Hk {
         "hk".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let mut m = init;
-        let mut stats = RunStats::default();
-        let mut dist = vec![UNREACHED; g.nc];
-        let mut frontier: Vec<u32> = Vec::with_capacity(g.nc);
-        let mut next: Vec<u32> = Vec::with_capacity(g.nc);
-        let mut row_visited = vec![false; g.nr];
-        let mut ptr = vec![0u32; g.nc];
+        let mut dist = ctx.lease_i32(g.nc, UNREACHED);
+        let mut frontier = ctx.lease_worklist_u32(g.nc);
+        let mut next = ctx.lease_worklist_u32(g.nc);
+        let mut row_visited = ctx.lease_bool(g.nr, false);
+        let mut ptr = ctx.lease_u32(g.nc, 0);
 
+        let mut outcome = RunOutcome::Complete;
         loop {
-            let levels = bfs_levels(g, &m, &mut dist, &mut frontier, &mut next, &mut stats);
+            if let Some(trip) = ctx.checkpoint() {
+                outcome = trip;
+                break;
+            }
+            let levels = bfs_levels(g, &m, &mut dist, &mut frontier, &mut next, &mut ctx.stats);
             let Some(_aug_level) = levels else {
                 break; // no augmenting path: maximum
             };
-            stats.record_phase(_aug_level + 1);
+            ctx.stats.record_phase(_aug_level + 1);
 
             // DFS for a maximal set of disjoint shortest augmenting paths
             row_visited.iter_mut().for_each(|v| *v = false);
@@ -47,12 +51,18 @@ impl MatchingAlgorithm for Hk {
                 if m.cmatch[c0] != UNMATCHED || dist[c0] != 0 || g.col_degree(c0) == 0 {
                     continue;
                 }
-                if dfs_augment(g, &mut m, &dist, &mut row_visited, &mut ptr, c0, &mut stats) {
+                let stats = &mut ctx.stats;
+                if dfs_augment(g, &mut m, &dist, &mut row_visited, &mut ptr, c0, stats) {
                     stats.augmentations += 1;
                 }
             }
         }
-        RunResult::with_stats(m, stats)
+        ctx.give_i32(dist);
+        ctx.give_u32(frontier);
+        ctx.give_u32(next);
+        ctx.give_bool(row_visited);
+        ctx.give_u32(ptr);
+        ctx.finish_with(m, outcome)
     }
 }
 
@@ -175,7 +185,7 @@ mod tests {
     #[test]
     fn hk_small_perfect() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = Hk.run(&g, Matching::empty(3, 3));
+        let r = Hk.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -184,7 +194,7 @@ mod tests {
     fn hk_with_cheap_init() {
         let g = crate::graph::gen::Family::Kron.generate(512, 5);
         let init = InitHeuristic::Cheap.run(&g);
-        let r = Hk.run(&g, init);
+        let r = Hk.run_detached(&g, init);
         r.matching.certify(&g).unwrap();
         assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
     }
@@ -192,7 +202,7 @@ mod tests {
     #[test]
     fn hk_empty_graph() {
         let g = from_edges(4, 4, &[]);
-        let r = Hk.run(&g, Matching::empty(4, 4));
+        let r = Hk.run_detached(&g, Matching::empty(4, 4));
         assert_eq!(r.matching.cardinality(), 0);
     }
 
@@ -208,7 +218,7 @@ mod tests {
             }
         }
         let g = from_edges(n, n, &edges);
-        let r = Hk.run(&g, Matching::empty(n, n));
+        let r = Hk.run_detached(&g, Matching::empty(n, n));
         assert_eq!(r.matching.cardinality(), n);
         r.matching.certify(&g).unwrap();
     }
@@ -219,9 +229,46 @@ mod tests {
         // instance, far fewer than 50 phases from a cheap init.
         let g = crate::graph::gen::random::with_perfect_matching(2500, 2.0, 9);
         let init = InitHeuristic::Cheap.run(&g);
-        let r = Hk.run(&g, init);
+        let r = Hk.run_detached(&g, init);
         assert!(r.stats.phases <= 51, "phases = {}", r.stats.phases);
         r.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn hk_honours_cancellation_between_phases() {
+        let g = crate::graph::gen::Family::Uniform.generate(400, 2);
+        let mut ctx = RunCtx::detached();
+        ctx.cancel_token().cancel();
+        let r = Hk.run(&g, Matching::empty(g.nr, g.nc), &mut ctx);
+        assert_eq!(r.outcome, RunOutcome::Cancelled);
+        r.matching.validate(&g).unwrap(); // valid, just not necessarily maximum
+        assert_eq!(r.matching.cardinality(), 0, "cancelled before the first phase");
+    }
+
+    #[test]
+    fn hk_honours_expired_deadline() {
+        let g = crate::graph::gen::Family::Uniform.generate(400, 2);
+        let mut ctx = RunCtx::detached().with_deadline_in(std::time::Duration::ZERO);
+        let r = Hk.run(&g, Matching::empty(g.nr, g.nc), &mut ctx);
+        assert_eq!(r.outcome, RunOutcome::DeadlineExceeded);
+        r.matching.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn hk_leases_workspaces_from_the_ctx_pool() {
+        let g = crate::graph::gen::Family::Uniform.generate(300, 3);
+        let pool = std::sync::Arc::new(crate::util::pool::WorkspacePool::new());
+        let r1 = Hk.run(&g, Matching::empty(g.nr, g.nc), &mut RunCtx::new(pool.clone()));
+        assert_eq!(pool.reuses(), 0, "first run has nothing to reuse");
+        let returned = pool.returns();
+        assert!(returned >= 5, "run must give its scratch buffers back");
+        let r2 = Hk.run(&g, Matching::empty(g.nr, g.nc), &mut RunCtx::new(pool.clone()));
+        assert!(
+            pool.reuses() >= 5,
+            "second same-size run must lease the first run's buffers, reuses={}",
+            pool.reuses()
+        );
+        assert_eq!(r1.matching.cardinality(), r2.matching.cardinality());
     }
 
     #[test]
@@ -229,7 +276,7 @@ mod tests {
         forall(Config::cases(40), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
-            let r = Hk.run(&g, Matching::empty(nr, nc));
+            let r = Hk.run_detached(&g, Matching::empty(nr, nc));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             let want = reference_max_cardinality(&g);
             if r.matching.cardinality() != want {
@@ -245,7 +292,7 @@ mod tests {
             let (nr, nc, edges) = arb_bipartite(rng, 25);
             let g = from_edges(nr, nc, &edges);
             for h in [InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
-                let r = Hk.run(&g, h.run(&g));
+                let r = Hk.run_detached(&g, h.run(&g));
                 r.matching.certify(&g).map_err(|e| format!("{}: {e}", h.name()))?;
                 if r.matching.cardinality() != reference_max_cardinality(&g) {
                     return Err("init changed final cardinality".into());
@@ -270,7 +317,7 @@ mod regression_tests {
     fn hk_uniform300_terminates_and_is_optimal() {
         let g = crate::graph::gen::Family::Uniform.generate(300, 1);
         let init = InitHeuristic::Cheap.run(&g);
-        let r = Hk.run(&g, init);
+        let r = Hk.run_detached(&g, init);
         r.matching.certify(&g).unwrap();
         assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
     }
@@ -279,7 +326,7 @@ mod regression_tests {
     fn hk_uniform_sweep_terminates() {
         for seed in 0..6 {
             let g = crate::graph::gen::uniform_random(400, 400, 4.5, seed);
-            let r = Hk.run(&g, InitHeuristic::Cheap.run(&g));
+            let r = Hk.run_detached(&g, InitHeuristic::Cheap.run(&g));
             r.matching.certify(&g).unwrap();
         }
     }

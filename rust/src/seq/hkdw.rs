@@ -6,7 +6,7 @@
 //! APFB is its GPU analogue.
 
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult, RunStats};
 use crate::matching::{Matching, UNMATCHED};
 
 pub struct Hkdw;
@@ -18,21 +18,26 @@ impl MatchingAlgorithm for Hkdw {
         "hkdw".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let mut m = init;
-        let mut stats = RunStats::default();
-        let mut dist = vec![UNREACHED; g.nc];
-        let mut frontier = Vec::with_capacity(g.nc);
-        let mut next = Vec::with_capacity(g.nc);
-        let mut row_visited = vec![false; g.nr];
-        let mut col_visited = vec![false; g.nc];
-        let mut ptr = vec![0u32; g.nc];
-        let mut rptr = vec![0u32; g.nr];
+        let mut dist = ctx.lease_i32(g.nc, UNREACHED);
+        let mut frontier = ctx.lease_worklist_u32(g.nc);
+        let mut next = ctx.lease_worklist_u32(g.nc);
+        let mut row_visited = ctx.lease_bool(g.nr, false);
+        let mut col_visited = ctx.lease_bool(g.nc, false);
+        let mut ptr = ctx.lease_u32(g.nc, 0);
+        let mut rptr = ctx.lease_u32(g.nr, 0);
 
+        let mut outcome = RunOutcome::Complete;
         loop {
-            let levels = super::hk::bfs_levels(g, &m, &mut dist, &mut frontier, &mut next, &mut stats);
+            if let Some(trip) = ctx.checkpoint() {
+                outcome = trip;
+                break;
+            }
+            let levels =
+                super::hk::bfs_levels(g, &m, &mut dist, &mut frontier, &mut next, &mut ctx.stats);
             let Some(aug_level) = levels else { break };
-            stats.record_phase(aug_level + 1);
+            ctx.stats.record_phase(aug_level + 1);
 
             // HK phase: disjoint shortest paths (same as seq::hk)
             row_visited.iter_mut().for_each(|v| *v = false);
@@ -43,8 +48,8 @@ impl MatchingAlgorithm for Hkdw {
                 if m.cmatch[c0] != UNMATCHED || dist[c0] != 0 || g.col_degree(c0) == 0 {
                     continue;
                 }
-                if level_dfs(g, &mut m, &dist, &mut row_visited, &mut ptr, c0, &mut stats) {
-                    stats.augmentations += 1;
+                if level_dfs(g, &mut m, &dist, &mut row_visited, &mut ptr, c0, &mut ctx.stats) {
+                    ctx.stats.augmentations += 1;
                 }
             }
 
@@ -61,12 +66,19 @@ impl MatchingAlgorithm for Hkdw {
                 if m.rmatch[r0] != UNMATCHED || g.row_degree(r0) == 0 {
                     continue;
                 }
-                if row_dfs(g, &mut m, &mut col_visited, &mut rptr, r0, &mut stats) {
-                    stats.augmentations += 1;
+                if row_dfs(g, &mut m, &mut col_visited, &mut rptr, r0, &mut ctx.stats) {
+                    ctx.stats.augmentations += 1;
                 }
             }
         }
-        RunResult::with_stats(m, stats)
+        ctx.give_i32(dist);
+        ctx.give_u32(frontier);
+        ctx.give_u32(next);
+        ctx.give_bool(row_visited);
+        ctx.give_bool(col_visited);
+        ctx.give_u32(ptr);
+        ctx.give_u32(rptr);
+        ctx.finish_with(m, outcome)
     }
 }
 
@@ -181,7 +193,7 @@ mod tests {
     #[test]
     fn hkdw_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = Hkdw.run(&g, Matching::empty(3, 3));
+        let r = Hkdw.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -192,8 +204,8 @@ mod tests {
         for fam in [crate::graph::gen::Family::Delaunay, crate::graph::gen::Family::Social] {
             let g = fam.generate(900, 3);
             let init = InitHeuristic::Cheap.run(&g);
-            let hk = super::super::hk::Hk.run(&g, init.clone());
-            let dw = Hkdw.run(&g, init);
+            let hk = super::super::hk::Hk.run_detached(&g, init.clone());
+            let dw = Hkdw.run_detached(&g, init);
             assert!(
                 dw.stats.phases <= hk.stats.phases,
                 "{}: hkdw {} > hk {}",
@@ -210,7 +222,7 @@ mod tests {
         forall(Config::cases(40), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
-            let r = Hkdw.run(&g, Matching::empty(nr, nc));
+            let r = Hkdw.run_detached(&g, Matching::empty(nr, nc));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             if r.matching.cardinality() != reference_max_cardinality(&g) {
                 return Err("hkdw suboptimal".into());
@@ -224,7 +236,7 @@ mod tests {
         forall(Config::cases(20), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 25);
             let g = from_edges(nr, nc, &edges);
-            let r = Hkdw.run(&g, InitHeuristic::KarpSipser.run(&g));
+            let r = Hkdw.run_detached(&g, InitHeuristic::KarpSipser.run(&g));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             if r.matching.cardinality() != reference_max_cardinality(&g) {
                 return Err("hkdw+ks suboptimal".into());

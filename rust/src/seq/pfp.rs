@@ -8,7 +8,7 @@
 //! each column's list for a *free* row at most once over the whole run.
 
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult, RunStats};
 use crate::matching::{Matching, UNMATCHED};
 
 pub struct Pfp;
@@ -18,18 +18,22 @@ impl MatchingAlgorithm for Pfp {
         "pfp".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let mut m = init;
-        let mut stats = RunStats::default();
         // lookahead pointers persist across the whole run (amortized O(τ))
-        let mut look = vec![0u32; g.nc];
+        let mut look = ctx.lease_u32(g.nc, 0);
         for c in 0..g.nc {
             look[c] = g.cxadj[c];
         }
-        let mut visited = vec![u32::MAX; g.nr];
+        let mut visited = ctx.lease_u32(g.nr, u32::MAX);
         let mut stamp = 0u32;
         let mut forward = true;
+        let mut outcome = RunOutcome::Complete;
         loop {
+            if let Some(trip) = ctx.checkpoint() {
+                outcome = trip;
+                break;
+            }
             let mut augmented_this_phase = 0u64;
             let mut unmatched_remaining = 0u64;
             for c0 in 0..g.nc {
@@ -37,21 +41,24 @@ impl MatchingAlgorithm for Pfp {
                     continue;
                 }
                 stamp = stamp.wrapping_add(1);
-                if dfs_lookahead(g, &mut m, &mut look, &mut visited, stamp, c0, forward, &mut stats)
-                {
+                if dfs_lookahead(
+                    g, &mut m, &mut look, &mut visited, stamp, c0, forward, &mut ctx.stats,
+                ) {
                     augmented_this_phase += 1;
-                    stats.augmentations += 1;
+                    ctx.stats.augmentations += 1;
                 } else {
                     unmatched_remaining += 1;
                 }
             }
-            stats.record_phase(0); // PFP has no BFS kernels; phases only
+            ctx.stats.record_phase(0); // PFP has no BFS kernels; phases only
             if augmented_this_phase == 0 || unmatched_remaining == 0 {
                 break;
             }
             forward = !forward; // fairness: flip scan direction
         }
-        RunResult::with_stats(m, stats)
+        ctx.give_u32(look);
+        ctx.give_u32(visited);
+        ctx.finish_with(m, outcome)
     }
 }
 
@@ -157,7 +164,7 @@ mod tests {
     #[test]
     fn pfp_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = Pfp.run(&g, Matching::empty(3, 3));
+        let r = Pfp.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -168,7 +175,7 @@ mod tests {
         // (0.04 s vs 12.61 s for HK); sanity: it must still be optimal.
         let g = crate::graph::gen::banded(2000, 12, 0.4, 5);
         let init = InitHeuristic::Cheap.run(&g);
-        let r = Pfp.run(&g, init);
+        let r = Pfp.run_detached(&g, init);
         r.matching.certify(&g).unwrap();
     }
 
@@ -177,7 +184,7 @@ mod tests {
         forall(Config::cases(40), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 30);
             let g = from_edges(nr, nc, &edges);
-            let r = Pfp.run(&g, Matching::empty(nr, nc));
+            let r = Pfp.run_detached(&g, Matching::empty(nr, nc));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             if r.matching.cardinality() != reference_max_cardinality(&g) {
                 return Err(format!(
@@ -196,7 +203,7 @@ mod tests {
             let (nr, nc, edges) = arb_bipartite(rng, 25);
             let g = from_edges(nr, nc, &edges);
             for h in [InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
-                let r = Pfp.run(&g, h.run(&g));
+                let r = Pfp.run_detached(&g, h.run(&g));
                 r.matching.certify(&g).map_err(|e| e.to_string())?;
                 if r.matching.cardinality() != reference_max_cardinality(&g) {
                     return Err("pfp suboptimal with init".into());
@@ -217,7 +224,7 @@ mod tests {
             }
         }
         let g = from_edges(n, n, &edges);
-        let r = Pfp.run(&g, Matching::empty(n, n));
+        let r = Pfp.run_detached(&g, Matching::empty(n, n));
         assert_eq!(r.matching.cardinality(), n);
     }
 }

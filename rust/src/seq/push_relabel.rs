@@ -9,7 +9,7 @@
 //! label bound is provably unmatchable and is dropped.
 
 use crate::graph::csr::BipartiteCsr;
-use crate::matching::algo::{MatchingAlgorithm, RunResult, RunStats};
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 use std::collections::VecDeque;
 
@@ -20,9 +20,8 @@ impl MatchingAlgorithm for PushRelabel {
         "pr".into()
     }
 
-    fn run(&self, g: &BipartiteCsr, init: Matching) -> RunResult {
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
         let mut m = init;
-        let mut stats = RunStats::default();
         // label bound: no simple alternating path is longer than nr+nc
         let limit: u64 = (g.nr + g.nc + 1) as u64;
         let mut label = vec![0u64; g.nr];
@@ -31,7 +30,18 @@ impl MatchingAlgorithm for PushRelabel {
             .map(|c| c as u32)
             .collect();
 
+        let mut outcome = RunOutcome::Complete;
+        let mut pops = 0usize;
         while let Some(c) = q.pop_front() {
+            // the queue discipline has no phases; checkpoint every batch
+            // of pushes instead (matching stays consistent pair-wise)
+            if (pops & super::dfs::CHECKPOINT_MASK) == 0 {
+                if let Some(trip) = ctx.checkpoint() {
+                    outcome = trip;
+                    break;
+                }
+            }
+            pops += 1;
             let c = c as usize;
             debug_assert!(m.cmatch[c] == UNMATCHED);
             // find min and second-min neighbor labels
@@ -39,7 +49,7 @@ impl MatchingAlgorithm for PushRelabel {
             let mut min2 = u64::MAX;
             let mut rmin = usize::MAX;
             for &r in g.col_neighbors(c) {
-                stats.edges_scanned += 1;
+                ctx.stats.edges_scanned += 1;
                 let l = label[r as usize];
                 if l < min1 {
                     min2 = min1;
@@ -58,15 +68,15 @@ impl MatchingAlgorithm for PushRelabel {
                 m.cmatch[old as usize] = UNMATCHED;
                 q.push_back(old as u32);
             } else {
-                stats.augmentations += 1;
+                ctx.stats.augmentations += 1;
             }
             m.rmatch[rmin] = c as i32;
             m.cmatch[c] = rmin as i32;
             // relabel
             label[rmin] = if min2 == u64::MAX { limit } else { min2 } + 1;
-            stats.phases += 1; // count pushes as unit work for reporting
+            ctx.stats.phases += 1; // count pushes as unit work for reporting
         }
-        RunResult::with_stats(m, stats)
+        ctx.finish_with(m, outcome)
     }
 }
 
@@ -81,7 +91,7 @@ mod tests {
     #[test]
     fn pr_small() {
         let g = from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
-        let r = PushRelabel.run(&g, Matching::empty(3, 3));
+        let r = PushRelabel.run_detached(&g, Matching::empty(3, 3));
         assert_eq!(r.matching.cardinality(), 3);
         r.matching.certify(&g).unwrap();
     }
@@ -90,7 +100,7 @@ mod tests {
     fn pr_deficient_graph() {
         // K_{1,3} from the row side: 3 columns share one row
         let g = from_edges(1, 3, &[(0, 0), (0, 1), (0, 2)]);
-        let r = PushRelabel.run(&g, Matching::empty(1, 3));
+        let r = PushRelabel.run_detached(&g, Matching::empty(1, 3));
         assert_eq!(r.matching.cardinality(), 1);
         r.matching.certify(&g).unwrap();
     }
@@ -100,7 +110,7 @@ mod tests {
         forall(Config::cases(40), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 25);
             let g = from_edges(nr, nc, &edges);
-            let r = PushRelabel.run(&g, Matching::empty(nr, nc));
+            let r = PushRelabel.run_detached(&g, Matching::empty(nr, nc));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             if r.matching.cardinality() != reference_max_cardinality(&g) {
                 return Err(format!(
@@ -118,7 +128,7 @@ mod tests {
         forall(Config::cases(20), |rng| {
             let (nr, nc, edges) = arb_bipartite(rng, 25);
             let g = from_edges(nr, nc, &edges);
-            let r = PushRelabel.run(&g, InitHeuristic::Cheap.run(&g));
+            let r = PushRelabel.run_detached(&g, InitHeuristic::Cheap.run(&g));
             r.matching.certify(&g).map_err(|e| e.to_string())?;
             if r.matching.cardinality() != reference_max_cardinality(&g) {
                 return Err("pr+cheap suboptimal".into());
@@ -130,7 +140,7 @@ mod tests {
     #[test]
     fn pr_on_mesh() {
         let g = crate::graph::gen::delaunay_like(400, 3);
-        let r = PushRelabel.run(&g, InitHeuristic::Cheap.run(&g));
+        let r = PushRelabel.run_detached(&g, InitHeuristic::Cheap.run(&g));
         r.matching.certify(&g).unwrap();
         assert_eq!(r.matching.cardinality(), reference_max_cardinality(&g));
     }

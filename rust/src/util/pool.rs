@@ -12,9 +12,15 @@
 //!
 //! Plus two shared-slice views for the pool's unsafe-but-disciplined
 //! access patterns: [`SharedSlice`] (per-index-disjoint writes) and
-//! [`AtomicCells`] (racing CAS/swap claims over an `i32` slice).
+//! [`AtomicCells`] (racing CAS/swap claims over an `i32` slice) — and the
+//! [`WorkspacePool`], a size-keyed shelf of scratch buffers that lets the
+//! coordinator's worker threads reuse `bfs_array`/frontier/visited vectors
+//! across jobs instead of re-allocating them per run (see
+//! `matching::algo::RunCtx`).
 
-use std::sync::atomic::{AtomicI32, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads to use by default: honours
 /// `BIMATCH_THREADS`, falls back to available parallelism.
@@ -211,6 +217,153 @@ impl<'a> AtomicCells<'a> {
     }
 }
 
+/// Retention bound per typed shelf: a long-running service that sees many
+/// distinct graph sizes must not accumulate every buffer size it has ever
+/// allocated. When a shelf is full, `give` evicts the *smallest* shelved
+/// buffer (large ones are the expensive ones to re-allocate) before
+/// shelving the newcomer.
+const SHELF_CAP: usize = 32;
+
+/// One type's shelf of returned buffers, keyed by capacity. A lease takes
+/// the smallest shelved buffer whose capacity covers the request (so a
+/// worker that alternates between graph sizes still reuses instead of
+/// allocating), clears it, and refills it to the requested length.
+struct Shelf<T> {
+    inner: Mutex<ShelfInner<T>>,
+}
+
+struct ShelfInner<T> {
+    by_cap: BTreeMap<usize, Vec<Vec<T>>>,
+    count: usize,
+}
+
+impl<T> Default for Shelf<T> {
+    fn default() -> Self {
+        Self { inner: Mutex::new(ShelfInner { by_cap: BTreeMap::new(), count: 0 }) }
+    }
+}
+
+impl<T: Clone> Shelf<T> {
+    fn lease(&self, len: usize) -> Option<Vec<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        let (&cap, _) = inner.by_cap.range(len..).next()?;
+        let bucket = inner.by_cap.get_mut(&cap).expect("bucket exists");
+        let v = bucket.pop().expect("buckets are non-empty by invariant");
+        if bucket.is_empty() {
+            inner.by_cap.remove(&cap);
+        }
+        inner.count -= 1;
+        Some(v)
+    }
+
+    fn give(&self, v: Vec<T>) {
+        if v.capacity() == 0 {
+            return; // nothing worth shelving
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.count >= SHELF_CAP {
+            let (&cap, _) = inner.by_cap.iter().next().expect("count > 0 implies non-empty");
+            if v.capacity() <= cap {
+                // the newcomer is the cheapest of the lot to re-create:
+                // drop it rather than evicting a larger buffer
+                return;
+            }
+            // evict the smallest shelved buffer to bound retention
+            let bucket = inner.by_cap.get_mut(&cap).expect("bucket exists");
+            bucket.pop();
+            if bucket.is_empty() {
+                inner.by_cap.remove(&cap);
+            }
+            inner.count -= 1;
+        }
+        inner.by_cap.entry(v.capacity()).or_default().push(v);
+        inner.count += 1;
+    }
+}
+
+/// A shared pool of size-keyed scratch buffers. Algorithms lease their
+/// per-run arrays (`bfs_array`, frontiers, visited marks, DFS pointers)
+/// through `RunCtx` and give them back when the run ends; the service's
+/// worker threads thereby stop paying an allocation + page-fault tax on
+/// every job. Thread-safe (mutex per element type — leases are per *run*,
+/// not per kernel launch, so contention is negligible).
+///
+/// Leased buffers arrive cleared and filled with the requested value;
+/// `reuses()` counts leases served from the shelf rather than a fresh
+/// allocation (the workspace-reuse tests assert on it).
+#[derive(Default)]
+pub struct WorkspacePool {
+    i32s: Shelf<i32>,
+    u32s: Shelf<u32>,
+    bools: Shelf<bool>,
+    leases: AtomicU64,
+    reuses: AtomicU64,
+    returns: AtomicU64,
+}
+
+macro_rules! lease_give {
+    ($lease:ident, $give:ident, $t:ty, $shelf:ident) => {
+        pub fn $lease(&self, len: usize, fill: $t) -> Vec<$t> {
+            self.leases.fetch_add(1, Ordering::Relaxed);
+            match self.$shelf.lease(len) {
+                Some(mut v) => {
+                    self.reuses.fetch_add(1, Ordering::Relaxed);
+                    v.clear();
+                    v.resize(len, fill);
+                    v
+                }
+                None => vec![fill; len],
+            }
+        }
+
+        pub fn $give(&self, v: Vec<$t>) {
+            self.returns.fetch_add(1, Ordering::Relaxed);
+            self.$shelf.give(v);
+        }
+    };
+}
+
+impl WorkspacePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    lease_give!(lease_i32, give_i32, i32, i32s);
+    lease_give!(lease_u32, give_u32, u32, u32s);
+    lease_give!(lease_bool, give_bool, bool, bools);
+
+    /// Lease an *empty* u32 buffer with at least `cap_hint` capacity —
+    /// the worklist path: no fill (callers only push), but still a
+    /// size-fitted shelf pick so the first pushes of a large run don't
+    /// immediately outgrow a tiny reused buffer.
+    pub fn lease_u32_worklist(&self, cap_hint: usize) -> Vec<u32> {
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        match self.u32s.lease(cap_hint) {
+            Some(mut v) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            None => Vec::with_capacity(cap_hint),
+        }
+    }
+
+    /// Total lease calls served (shelf hits + fresh allocations).
+    pub fn leases(&self) -> u64 {
+        self.leases.load(Ordering::Relaxed)
+    }
+
+    /// Leases served by reusing a previously returned buffer.
+    pub fn reuses(&self) -> u64 {
+        self.reuses.load(Ordering::Relaxed)
+    }
+
+    /// Buffers given back so far.
+    pub fn returns(&self) -> u64 {
+        self.returns.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +455,81 @@ mod tests {
         let mut expect: Vec<i32> = (-1..8).collect();
         expect.sort_unstable();
         assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn workspace_pool_reuses_returned_buffers() {
+        let pool = WorkspacePool::new();
+        let a = pool.lease_i32(100, -1);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&x| x == -1));
+        assert_eq!(pool.leases(), 1);
+        assert_eq!(pool.reuses(), 0, "first lease must be a fresh allocation");
+        let cap = a.capacity();
+        pool.give_i32(a);
+        let b = pool.lease_i32(100, 7);
+        assert_eq!(pool.reuses(), 1, "same-size lease must come from the shelf");
+        assert_eq!(b.capacity(), cap);
+        assert!(b.iter().all(|&x| x == 7), "reused buffers must arrive refilled");
+    }
+
+    #[test]
+    fn workspace_pool_smaller_request_reuses_larger_buffer() {
+        let pool = WorkspacePool::new();
+        pool.give_u32(Vec::with_capacity(512));
+        let v = pool.lease_u32(64, 0);
+        assert_eq!(v.len(), 64);
+        assert_eq!(pool.reuses(), 1);
+        // a request larger than anything shelved allocates fresh
+        let w = pool.lease_u32(1024, 0);
+        assert_eq!(w.len(), 1024);
+        assert_eq!(pool.reuses(), 1);
+    }
+
+    #[test]
+    fn workspace_pool_typed_shelves_are_independent() {
+        let pool = WorkspacePool::new();
+        pool.give_bool(vec![true; 32]);
+        assert_eq!(pool.returns(), 1);
+        // i32 lease must not consume the bool shelf
+        let v = pool.lease_i32(8, 0);
+        assert_eq!(v.len(), 8);
+        assert_eq!(pool.reuses(), 0);
+        let b = pool.lease_bool(32, false);
+        assert_eq!(pool.reuses(), 1);
+        assert!(b.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn workspace_pool_zero_capacity_returns_are_dropped() {
+        let pool = WorkspacePool::new();
+        pool.give_u32(Vec::new());
+        let v = pool.lease_u32(0, 0);
+        assert!(v.is_empty());
+        assert_eq!(pool.reuses(), 0, "an empty vec is not worth shelving");
+    }
+
+    #[test]
+    fn workspace_pool_retention_is_bounded() {
+        // a service seeing ever-new sizes must not hoard every buffer it
+        // ever allocated: the shelf evicts smallest-first past SHELF_CAP
+        let pool = WorkspacePool::new();
+        for len in 1..=(SHELF_CAP + 10) {
+            pool.give_i32(vec![0; len]);
+        }
+        // the small sizes were evicted; the large ones are still leasable
+        let v = pool.lease_i32(SHELF_CAP + 10, 0);
+        assert_eq!(v.len(), SHELF_CAP + 10);
+        assert_eq!(pool.reuses(), 1, "largest buffer must survive eviction");
+        pool.give_i32(v); // shelf is full again
+        // a full shelf drops a small newcomer instead of evicting a
+        // larger (more expensive to re-create) buffer for it
+        pool.give_i32(vec![0; 2]);
+        let small = pool.lease_i32(1, 0);
+        assert!(
+            small.capacity() > 2,
+            "the tiny newcomer must not displace larger shelved buffers"
+        );
     }
 
     #[test]

@@ -3,16 +3,15 @@
 //! generator family, original and RCP-permuted, from every init heuristic.
 
 use bimatch::coordinator::registry;
+use bimatch::coordinator::spec::AlgoSpec;
 use bimatch::graph::gen::Family;
 use bimatch::graph::random_permute;
 use bimatch::matching::init::InitHeuristic;
 use bimatch::matching::{reference_max_cardinality, Matching};
+use bimatch::MatchingAlgorithm;
 
-fn non_xla_names() -> Vec<String> {
-    registry::all_names()
-        .into_iter()
-        .filter(|n| !n.starts_with("xla:"))
-        .collect()
+fn non_xla_specs() -> Vec<AlgoSpec> {
+    registry::all_specs().into_iter().filter(|s| !s.is_xla()).collect()
 }
 
 #[test]
@@ -21,16 +20,16 @@ fn all_algorithms_agree_on_all_families() {
         let g = family.generate(700, 33);
         let want = reference_max_cardinality(&g);
         let init = InitHeuristic::Cheap.run(&g);
-        for name in non_xla_names() {
-            let algo = registry::build(&name, None).unwrap();
-            let r = algo.run(&g, init.clone());
+        for spec in non_xla_specs() {
+            let algo = registry::build(&spec, None).unwrap();
+            let r = algo.run_detached(&g, init.clone());
             r.matching
                 .certify(&g)
-                .unwrap_or_else(|e| panic!("{name} on {}: {e}", family.name()));
+                .unwrap_or_else(|e| panic!("{spec} on {}: {e}", family.name()));
             assert_eq!(
                 r.matching.cardinality(),
                 want,
-                "{name} on {}",
+                "{spec} on {}",
                 family.name()
             );
         }
@@ -42,11 +41,11 @@ fn all_algorithms_agree_on_permuted_instances() {
     for family in [Family::Banded, Family::Kron, Family::Road] {
         let g = random_permute(&family.generate(600, 5), 99);
         let want = reference_max_cardinality(&g);
-        for name in non_xla_names() {
-            let algo = registry::build(&name, None).unwrap();
-            let r = algo.run(&g, Matching::empty(g.nr, g.nc));
+        for spec in non_xla_specs() {
+            let algo = registry::build(&spec, None).unwrap();
+            let r = algo.run_detached(&g, Matching::empty(g.nr, g.nc));
             r.matching.certify(&g).unwrap();
-            assert_eq!(r.matching.cardinality(), want, "{name} on {} rcp", family.name());
+            assert_eq!(r.matching.cardinality(), want, "{spec} on {} rcp", family.name());
         }
     }
 }
@@ -57,8 +56,8 @@ fn init_heuristics_never_change_the_answer() {
     let want = reference_max_cardinality(&g);
     for init in [InitHeuristic::None, InitHeuristic::Cheap, InitHeuristic::KarpSipser] {
         for name in ["hk", "pfp", "pr", "gpu:APFB-GPUBFS-WR-CT", "p-dbfs"] {
-            let algo = registry::build(name, None).unwrap();
-            let r = algo.run(&g, init.run(&g));
+            let algo = registry::build_named(name, None).unwrap();
+            let r = algo.run_detached(&g, init.run(&g));
             r.matching.certify(&g).unwrap();
             assert_eq!(r.matching.cardinality(), want, "{name} from {}", init.name());
         }
@@ -76,11 +75,11 @@ fn rectangular_and_degenerate_graphs() {
     ];
     for (i, g) in cases.iter().enumerate() {
         let want = reference_max_cardinality(g);
-        for name in non_xla_names() {
-            let algo = registry::build(&name, None).unwrap();
-            let r = algo.run(g, Matching::empty(g.nr, g.nc));
-            r.matching.certify(g).unwrap_or_else(|e| panic!("{name} case {i}: {e}"));
-            assert_eq!(r.matching.cardinality(), want, "{name} case {i}");
+        for spec in non_xla_specs() {
+            let algo = registry::build(&spec, None).unwrap();
+            let r = algo.run_detached(g, Matching::empty(g.nr, g.nc));
+            r.matching.certify(g).unwrap_or_else(|e| panic!("{spec} case {i}: {e}"));
+            assert_eq!(r.matching.cardinality(), want, "{spec} case {i}");
         }
     }
 }
@@ -92,9 +91,9 @@ fn permutation_invariance_of_cardinality() {
     let g = Family::Amazon.generate(800, 4);
     let p = random_permute(&g, 1234);
     for name in ["hk", "gpu:APFB-GPUBFS-WR-CT", "p-pfp"] {
-        let algo = registry::build(name, None).unwrap();
-        let a = algo.run(&g, Matching::empty(g.nr, g.nc)).matching.cardinality();
-        let b = algo.run(&p, Matching::empty(p.nr, p.nc)).matching.cardinality();
+        let algo = registry::build_named(name, None).unwrap();
+        let a = algo.run_detached(&g, Matching::empty(g.nr, g.nc)).matching.cardinality();
+        let b = algo.run_detached(&p, Matching::empty(p.nr, p.nc)).matching.cardinality();
         assert_eq!(a, b, "{name}");
     }
 }

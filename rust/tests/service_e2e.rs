@@ -1,7 +1,7 @@
 //! Coordinator integration: service batches, routing behaviour, failure
 //! injection, and the TCP server against a live socket.
 
-use bimatch::coordinator::job::{AlgoChoice, GraphSource, MatchJob};
+use bimatch::coordinator::job::{GraphSource, JobError, MatchJob};
 use bimatch::coordinator::{Server, Service};
 use bimatch::graph::gen::Family;
 use std::io::{BufRead, BufReader, Write};
@@ -51,8 +51,8 @@ fn router_sends_banded_to_pfp_and_permuted_to_gpu() {
 #[test]
 fn failure_injection_bad_algo_and_missing_file() {
     let svc = Service::start(2, 4, None);
-    let mut bad_algo = gen_job(0, Family::Uniform, 200, false);
-    bad_algo.algo = AlgoChoice::Named("no-such-algo".into());
+    // an xla spec without an engine is the build-time failure path
+    let bad_algo = gen_job(0, Family::Uniform, 200, false).with_algo("xla:apfb-full");
     let missing = MatchJob::new(1, GraphSource::MtxFile("/nope.mtx".into()));
     let good = gen_job(2, Family::Uniform, 200, false);
     let (outcomes, metrics) = svc.run_batch(vec![bad_algo, missing, good]);
@@ -70,6 +70,30 @@ fn failure_injection_bad_algo_and_missing_file() {
         metrics.matched_total.load(Ordering::Relaxed),
         outcomes[2].cardinality as u64,
         "failed jobs must not contribute to matched_total"
+    );
+}
+
+#[test]
+fn deadline_and_cancellation_through_the_service() {
+    // zero-deadline jobs fail with the distinct timeout error while a
+    // sibling job without a deadline completes normally
+    let svc = Service::start(2, 4, None);
+    let timed = gen_job(0, Family::Uniform, 500, false).with_timeout_ms(0);
+    let fine = gen_job(1, Family::Uniform, 500, false);
+    let (outcomes, metrics) = svc.run_batch(vec![timed, fine]);
+    assert_eq!(
+        outcomes[0].error,
+        Some(JobError::DeadlineExceeded { timeout_ms: 0 }),
+        "{:?}",
+        outcomes[0].error
+    );
+    assert!(!outcomes[0].certified);
+    assert!(outcomes[1].error.is_none() && outcomes[1].certified);
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.jobs_timed_out.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        metrics.jobs_submitted.load(Ordering::Relaxed),
+        metrics.completed() + metrics.jobs_failed.load(Ordering::Relaxed)
     );
 }
 

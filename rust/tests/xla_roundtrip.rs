@@ -116,8 +116,9 @@ fn registry_builds_xla_matchers_with_engine() {
     let g = Family::Uniform.generate(600, 7);
     let init = InitHeuristic::Cheap.run(&g);
     for name in ["xla:apfb-full", "xla:bfs-level-hybrid"] {
-        let algo = bimatch::coordinator::registry::build(name, Some(engine.clone())).unwrap();
-        let r = algo.run(&g, init.clone());
+        let algo =
+            bimatch::coordinator::registry::build_named(name, Some(engine.clone())).unwrap();
+        let r = algo.run_detached(&g, init.clone());
         r.matching.certify(&g).unwrap();
         assert_eq!(r.stats.fallbacks, 0, "{name} must not fall back with artifacts present");
     }
