@@ -1,9 +1,11 @@
 //! End-to-end system driver (EXPERIMENTS.md §End-to-end): the coordinator
 //! serving a realistic 200-job trace that mixes every generator family,
 //! original and RCP-permuted instances, explicit algorithm choices and
-//! auto-routing — with every result certified. Reports throughput, latency
-//! quantiles, per-algorithm win counts, and the headline GPU-vs-sequential
-//! speedup on this trace. Also exercises the TCP front end.
+//! auto-routing — with every result certified, under a batch-wide
+//! deadline. Reports throughput, latency quantiles, per-algorithm win
+//! counts, and the headline GPU-vs-sequential speedup on this trace. Also
+//! exercises the TCP front end, including the incremental verbs
+//! (LOAD/UPDATE/MATCH name=/DROP).
 //!
 //! Run with: `cargo run --release --example end_to_end`
 
@@ -50,17 +52,26 @@ fn main() {
         jobs.push(job);
     }
 
-    // ---- run through the service ----
+    // ---- run through the service, under a batch-wide deadline ----
+    // (the budget is generous — it exists to prove the whole trace runs
+    // under one absolute deadline; a tripped job would surface as a
+    // distinct DeadlineExceeded failure below, never a silently
+    // suboptimal matching)
     let workers = bimatch::util::pool::default_threads();
     let svc = Service::start(workers, 16, engine.clone());
     let t = Timer::start();
-    let (outcomes, metrics) = svc.run_batch(jobs);
+    let (outcomes, metrics) = svc.run_batch_with_timeout_ms(jobs, 600_000);
     let wall = t.elapsed_secs();
 
     assert_eq!(outcomes.len(), 200);
     let failed: Vec<_> = outcomes.iter().filter(|o| o.error.is_some()).collect();
     assert!(failed.is_empty(), "failures: {failed:?}");
     assert!(outcomes.iter().all(|o| o.certified), "every job must be certified maximum");
+    assert_eq!(
+        metrics.jobs_timed_out.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "the 10-minute batch budget must not trip on this trace"
+    );
 
     println!("\n=== trace results ===");
     println!("{}", metrics.report());
@@ -120,6 +131,29 @@ fn main() {
         println!("  {line}");
         assert!(line.starts_with("OK") || line.starts_with("STATS"), "{line}");
         if i == 3 {
+            break;
+        }
+    }
+
+    // ---- incremental verbs: a graph living server-side across requests ----
+    println!("\n=== incremental (LOAD/UPDATE/MATCH/DROP) ===");
+    for req in [
+        "LOAD name=live family=road n=3000 seed=5",
+        "MATCH name=live",
+        "UPDATE name=live addcols=0;1;2 del=0:0",
+        "MATCH name=live",
+        "STATS",
+        "DROP name=live",
+    ] {
+        s.write_all(req.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+    }
+    let reader = BufReader::new(s.try_clone().unwrap());
+    for (i, line) in reader.lines().enumerate() {
+        let line = line.unwrap();
+        println!("  {line}");
+        assert!(line.starts_with("OK") || line.starts_with("STATS"), "{line}");
+        if i == 5 {
             break;
         }
     }

@@ -1,0 +1,178 @@
+//! Incremental repair vs from-scratch recompute: the dynamic subsystem's
+//! headline claim. For each family × batch size, a maintained maximum
+//! matching is hit with a delta batch (half deletions of *matched* edges,
+//! half random insertions), then maximality is restored two ways:
+//!
+//! * **repair** — `dynamic::repair` warm-started from the maintained
+//!   matching, seeded from the exposed columns, on the compacted-frontier
+//!   GPU driver (`gpu:APFB-GPUBFS-WR-CT-FC`);
+//! * **recompute** — the same driver from a fresh cheap-init on the
+//!   mutated graph (what a stateless service pays per request).
+//!
+//! Reported cost is modeled device cycles (the simulator's wall-clock
+//! stand-in; host-side patching is outside the device model for both
+//! sides). The bench asserts repair ≡ recompute cardinality on every
+//! cell, and that repair's modeled cost undercuts recompute on every
+//! family for small batches (≤1% of edges) — the acceptance bar for the
+//! subsystem.
+//!
+//! Run with: `cargo bench --bench bench_dynamic` (BIMATCH_SCALE=large for
+//! bigger instances, BIMATCH_SMOKE=1 for the CI-sized run).
+
+mod common;
+
+use bimatch::coordinator::spec::AlgoSpec;
+use bimatch::dynamic::{repair, DeltaBatch, DynamicGraph};
+use bimatch::gpu::{GpuConfig, GpuMatcher};
+use bimatch::graph::gen::Family;
+use bimatch::matching::init::InitHeuristic;
+use bimatch::util::rng::Xoshiro256;
+use bimatch::util::table::Table;
+use bimatch::util::timer::Timer;
+use bimatch::{MatchingAlgorithm, RunCtx};
+
+const FAMILIES: [Family; 3] = [Family::Road, Family::Kron, Family::Uniform];
+const FRACTIONS: [f64; 3] = [0.001, 0.01, 0.05];
+
+fn main() {
+    let e = common::env();
+    let n = if std::env::var("BIMATCH_SMOKE").is_ok() {
+        800
+    } else if e.scale.name() == "large" {
+        16_000
+    } else {
+        4_000
+    };
+    let spec: AlgoSpec = "gpu:APFB-GPUBFS-WR-CT-FC".parse().unwrap();
+    let matcher = GpuMatcher::new(GpuConfig::default().compacted());
+
+    let mut t = Table::new(vec![
+        "family",
+        "batch",
+        "frac",
+        "|M| before",
+        "|M| after",
+        "seeds",
+        "repair Mcyc",
+        "recompute Mcyc",
+        "speedup",
+        "repair phases",
+        "recomp phases",
+        "wall repair s",
+        "wall recomp s",
+    ]);
+    let mut small_batch_cells = 0usize;
+
+    for fam in FAMILIES {
+        // the acceptance bar is per family: every family must contribute
+        // at least one measurable small-batch cell where repair wins
+        let mut family_cells = 0usize;
+        let base = fam.generate(n, 13);
+        let edges_total = base.n_edges();
+        // the maintained maximum the service would be holding
+        let maintained = matcher
+            .run_detached(&base, InitHeuristic::Cheap.run(&base))
+            .matching;
+        maintained.certify(&base).expect("maintained matching must be maximum");
+
+        for frac in FRACTIONS {
+            let k = ((edges_total as f64 * frac / 2.0) as usize).max(1);
+            let mut rng = Xoshiro256::new(0xDE17A ^ (k as u64));
+            // k deletions of matched edges, spread across the columns
+            let matched: Vec<usize> =
+                (0..base.nc).filter(|&c| maintained.cmatch[c] >= 0).collect();
+            let stride = (matched.len() / k.min(matched.len()).max(1)).max(1);
+            let mut batch = DeltaBatch::new();
+            for &c in matched.iter().step_by(stride).take(k) {
+                batch = batch.delete(maintained.cmatch[c] as u32, c as u32);
+            }
+            // k random insertions (existing pairs become rejected no-ops)
+            for _ in 0..k {
+                batch = batch.insert(rng.gen_range(base.nr) as u32, rng.gen_range(base.nc) as u32);
+            }
+
+            let mut dg = DynamicGraph::new(base.clone());
+            let report = dg.apply(&batch);
+            let g = dg.snapshot();
+
+            let wall_repair = Timer::start();
+            let mut ctx = RunCtx::detached();
+            let summary = repair(&g, maintained.clone(), &report, &spec, None, &mut ctx)
+                .expect("repair must run");
+            let wall_repair = wall_repair.elapsed_secs();
+            summary.result.matching.certify(&g).expect("repair must restore maximality");
+
+            let wall_recompute = Timer::start();
+            let cheap = InitHeuristic::Cheap.run(&g);
+            let cheap_card = cheap.cardinality();
+            let recomputed = matcher.run_detached(&g, cheap);
+            let wall_recompute = wall_recompute.elapsed_secs();
+            recomputed.matching.certify(&g).expect("recompute must be maximum");
+
+            assert_eq!(
+                summary.result.matching.cardinality(),
+                recomputed.matching.cardinality(),
+                "{} frac={frac}: repair and recompute must agree",
+                fam.name()
+            );
+
+            let rc = summary.result.stats.device_cycles;
+            let fc = recomputed.stats.device_cycles;
+            // repair wins when the maintained matching's deficiency
+            // (≈ the batch) undercuts cheap-init's; when a degenerate
+            // instance leaves recompute with ~no augmentation work the
+            // comparison is meaningless — reported, never silently capped
+            let recompute_deficiency = recomputed.matching.cardinality() - cheap_card;
+            if frac <= 0.01 {
+                if recompute_deficiency > 2 * k {
+                    small_batch_cells += 1;
+                    family_cells += 1;
+                    assert!(
+                        rc < fc,
+                        "{} frac={frac}: repair {rc} cycles must undercut recompute {fc}",
+                        fam.name()
+                    );
+                } else {
+                    println!(
+                        "note: {} frac={frac} skipped the win assert — cheap-init \
+                         deficiency {recompute_deficiency} is within the batch size {k}",
+                        fam.name()
+                    );
+                }
+            }
+            t.row(vec![
+                fam.name().to_string(),
+                format!("{}", 2 * k),
+                format!("{:.3}%", frac * 100.0),
+                maintained.cardinality().to_string(),
+                summary.result.matching.cardinality().to_string(),
+                summary.seeds.to_string(),
+                format!("{:.3}", rc as f64 / 1e6),
+                format!("{:.3}", fc as f64 / 1e6),
+                format!("{:.1}x", fc as f64 / rc.max(1) as f64),
+                summary.result.stats.phases.to_string(),
+                recomputed.stats.phases.to_string(),
+                format!("{wall_repair:.4}"),
+                format!("{wall_recompute:.4}"),
+            ]);
+        }
+        assert!(
+            family_cells >= 1,
+            "{}: no measurable small-batch cell — the per-family acceptance bar \
+             cannot be evaluated",
+            fam.name()
+        );
+    }
+
+    let mut body = t.render();
+    body.push_str(&format!(
+        "\nSmall batches (≤1% of edges): repair beat recompute on all \
+         {small_batch_cells} measurable cells at n={n} (asserted — the dynamic\n\
+         subsystem's acceptance bar; degenerate cells where cheap-init had no\n\
+         deficiency to speak of are reported above and excluded). Repair = seeded\n\
+         compacted-frontier augmentation warm-started from the maintained matching;\n\
+         recompute = cheap-init + full run on the mutated graph. Cycles are the\n\
+         serial device model in Mcycles.",
+    ));
+    common::emit("incremental repair vs from-scratch recompute (bench_dynamic)", &body);
+}

@@ -31,6 +31,12 @@ USAGE:
   bimatch gen    --family <name> --n <int> [--seed <int>] [--permute] --out <path.mtx>
   bimatch verify --mtx <path>          cross-check several algorithms on a file
   bimatch serve  [--addr <ip:port>]    TCP line-protocol matching service
+                (one-shot MATCH plus the incremental verbs: LOAD name=…
+                installs a graph server-side, UPDATE name=… add=r:c,…
+                del=r:c,… addcols=r;r|… applies a delta batch and repairs
+                the maintained matching via seeded augmentation, MATCH
+                name=… re-serves the cached maximum, DROP name=… evicts;
+                GRAPHS lists stored graphs — see coordinator::server docs)
   bimatch algos                        list registered algorithms
                 (also: bimatch --list-algos — CI diffs this against the
                 registry-names.txt golden file)
@@ -293,7 +299,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     match Server::bind(addr, engine_if_available()) {
         Ok(server) => {
             println!("bimatch service listening on {}", server.local_addr().unwrap());
-            println!("protocol: MATCH family=<f> n=<n> [seed=..] [permute=0|1] [algo=..] | ALGOS | STATS | QUIT");
+            println!(
+                "protocol: MATCH family=<f> n=<n> [seed=..] [permute=0|1] [algo=..] | \
+                 LOAD name=<g> family=..|mtx=.. | UPDATE name=<g> [add=r:c,..] [del=r:c,..] \
+                 [addcols=r;r|..] | MATCH name=<g> | DROP name=<g> | ALGOS | GRAPHS | STATS | QUIT"
+            );
             if let Err(e) = server.serve() {
                 eprintln!("serve error: {e}");
                 return 1;

@@ -3,17 +3,29 @@
 //!
 //! The executor owns the serving-layer context every run gets: a shared
 //! [`WorkspacePool`] (scratch buffers reused across jobs), a
-//! [`CancelToken`] covering all in-flight runs, and the per-job deadline
-//! (`MatchJob::timeout`, measured from the start of execution). A tripped
-//! run is a *distinct* failure ([`JobError::DeadlineExceeded`] /
+//! [`CancelToken`] covering all in-flight runs, the per-job deadline
+//! (`MatchJob::timeout` measured from the start of execution, and/or the
+//! absolute `MatchJob::deadline` a batch-wide budget sets — the earlier
+//! instant wins), and the [`GraphStore`] behind the incremental verbs. A
+//! tripped run is a *distinct* failure ([`JobError::DeadlineExceeded`] /
 //! [`JobError::Cancelled`]) — never a silently suboptimal answer.
+//!
+//! Four job ops share the pipeline (see [`JobOp`]): `Match` (one-shot or
+//! against a stored graph, warm-started from its cached matching),
+//! `Load`/`DropGraph` (store lifecycle), and `Update` — apply a
+//! [`crate::dynamic::DeltaBatch`] and restore maximality through
+//! [`crate::dynamic::repair`], under the same metrics, deadline,
+//! cancellation, and certification regime as a match.
 
-use super::job::{AlgoChoice, GraphSource, JobError, MatchJob, MatchOutcome};
+use super::job::{AlgoChoice, GraphSource, JobError, JobOp, MatchJob, MatchOutcome, UpdateStats};
 use super::metrics::Metrics;
 use super::registry;
 use super::router;
+use super::store::{CachedMatching, GraphStore, StoreEntry};
+use crate::dynamic::{self, DeltaBatch};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::algo::{CancelToken, RunCtx, RunOutcome};
+use crate::matching::Matching;
 use crate::runtime::Engine;
 use crate::util::pool::WorkspacePool;
 use crate::util::timer::Timer;
@@ -22,13 +34,29 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Stateless-per-job executor (cheap to clone across workers; clones share
-/// the workspace pool and the cancellation token).
+/// the workspace pool, the cancellation token, and the graph store).
 #[derive(Clone)]
 pub struct Executor {
     pub engine: Option<Arc<Engine>>,
     pub metrics: Arc<Metrics>,
     pool: Arc<WorkspacePool>,
     cancel: CancelToken,
+    store: Arc<GraphStore>,
+}
+
+/// The effective deadline for a job: `timeout` measured from `start`,
+/// capped by the absolute `deadline` when both are set; plus the budget
+/// (in ms, as of `start`) reported by a tripped job's error.
+fn effective_deadline(job: &MatchJob, start: Instant) -> (Option<Instant>, u64) {
+    let from_timeout = job.timeout.map(|b| start + b);
+    let deadline = match (from_timeout, job.deadline) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    };
+    let budget_ms = deadline
+        .map(|d| d.saturating_duration_since(start).as_millis() as u64)
+        .unwrap_or(0);
+    (deadline, budget_ms)
 }
 
 impl Executor {
@@ -38,12 +66,19 @@ impl Executor {
             metrics,
             pool: Arc::new(WorkspacePool::new()),
             cancel: CancelToken::new(),
+            store: Arc::new(GraphStore::new()),
         }
     }
 
     /// The shared scratch-buffer pool (observability + tests).
     pub fn workspace_pool(&self) -> &Arc<WorkspacePool> {
         &self.pool
+    }
+
+    /// The graph store behind `LOAD`/`UPDATE`/`MATCH name=…`/`DROP`,
+    /// shared by every clone of this executor.
+    pub fn store(&self) -> &Arc<GraphStore> {
+        &self.store
     }
 
     /// Token cancelling every in-flight and future run of this executor
@@ -66,15 +101,15 @@ impl Executor {
                 .map(Arc::new)
                 .map_err(|e| format!("reading {path}: {e}")),
             GraphSource::InMemory(g) => Ok(g.clone()),
+            GraphSource::Stored(name) => {
+                Err(format!("no stored graph named {name:?} here — use MATCH name=… paths"))
+            }
         }
     }
 
-    pub fn execute(&self, job: &MatchJob) -> MatchOutcome {
-        let total = Timer::start();
-        // the deadline covers the whole job: load + init + matching
-        let deadline = job.timeout.map(|budget| Instant::now() + budget);
-        let mut out = MatchOutcome {
-            job_id: job.id,
+    fn blank(job_id: u64) -> MatchOutcome {
+        MatchOutcome {
+            job_id,
             algo: String::new(),
             nr: 0,
             nc: 0,
@@ -89,31 +124,19 @@ impl Executor {
             frontier_peak: 0,
             endpoints_total: 0,
             device_parallel_cycles: 0,
+            update: None,
             error: None,
-        };
-        let fail = |out: &mut MatchOutcome, err: JobError| {
-            out.error = Some(err);
-            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-        };
-        let g = match self.acquire(&job.source) {
-            Ok(g) => g,
-            Err(e) => {
-                fail(&mut out, JobError::Load(e));
-                return out;
-            }
-        };
-        out.t_load = total.elapsed_secs();
-        out.nr = g.nr;
-        out.nc = g.nc;
-        out.n_edges = g.n_edges();
+        }
+    }
 
-        let t_init = Timer::start();
-        let init = job.init.run(&g);
-        out.t_init = t_init.elapsed_secs();
-        out.init_cardinality = init.cardinality();
+    fn fail(&self, out: &mut MatchOutcome, err: JobError) {
+        out.error = Some(err);
+        self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
 
+    fn resolve_spec(&self, job: &MatchJob, g: &BipartiteCsr) -> super::spec::AlgoSpec {
         let mut spec = match &job.algo {
-            AlgoChoice::Auto => router::route_graph(&g),
+            AlgoChoice::Auto => router::route_graph(g),
             AlgoChoice::Spec(s) => *s,
         };
         // frontier override as a typed field edit, applied *after* routing:
@@ -124,9 +147,71 @@ impl Executor {
         if let Some(fm) = job.frontier {
             spec.set_frontier(fm);
         }
+        spec
+    }
+
+    pub fn execute(&self, job: &MatchJob) -> MatchOutcome {
+        match &job.op {
+            JobOp::Match => self.execute_match(job),
+            JobOp::Load { name } => self.execute_load(job, name),
+            JobOp::Update { name, batch } => self.execute_update(job, name, batch),
+            JobOp::DropGraph { name } => self.execute_drop(job, name),
+        }
+    }
+
+    fn execute_match(&self, job: &MatchJob) -> MatchOutcome {
+        let total = Timer::start();
+        // the deadline covers the whole job: load + init + matching
+        let (deadline, budget_ms) = effective_deadline(job, Instant::now());
+        let mut out = Self::blank(job.id);
+        // acquisition; a stored graph also brings its entry handle,
+        // version, and cached matching (the warm start that makes repeat
+        // MATCHes one quiet phase) — the handle is kept so the write-back
+        // below targets exactly the incarnation this snapshot came from
+        let mut stored: Option<(Arc<std::sync::Mutex<StoreEntry>>, u64)> = None;
+        let mut warm: Option<Matching> = None;
+        let g = match &job.source {
+            GraphSource::Stored(name) => match self.store.graph_for_match(name) {
+                Some(view) => {
+                    warm = view.cached.map(|c| c.matching);
+                    stored = Some((view.entry, view.version));
+                    view.graph
+                }
+                None => {
+                    self.fail(
+                        &mut out,
+                        JobError::Load(format!("no stored graph named {name:?} (LOAD it first)")),
+                    );
+                    return out;
+                }
+            },
+            other => match self.acquire(other) {
+                Ok(g) => g,
+                Err(e) => {
+                    self.fail(&mut out, JobError::Load(e));
+                    return out;
+                }
+            },
+        };
+        out.t_load = total.elapsed_secs();
+        out.nr = g.nr;
+        out.nc = g.nc;
+        out.n_edges = g.n_edges();
+
+        let t_init = Timer::start();
+        let init = match warm {
+            // the store guards versions, but sizes are re-checked here at
+            // the trust boundary rather than assumed
+            Some(m) if m.nr() == g.nr && m.nc() == g.nc => m,
+            _ => job.init.run(&g),
+        };
+        out.t_init = t_init.elapsed_secs();
+        out.init_cardinality = init.cardinality();
+
+        let spec = self.resolve_spec(job, &g);
         out.algo = spec.to_string();
         let Some(algo) = registry::build(&spec, self.engine.clone()) else {
-            fail(&mut out, JobError::Unavailable(registry::unavailable_msg(&spec)));
+            self.fail(&mut out, JobError::Unavailable(registry::unavailable_msg(&spec)));
             return out;
         };
         out.algo = algo.name();
@@ -145,14 +230,13 @@ impl Executor {
         match result.outcome {
             RunOutcome::Complete => {}
             RunOutcome::DeadlineExceeded => {
-                let timeout_ms = job.timeout.map(|d| d.as_millis() as u64).unwrap_or(0);
                 self.metrics.jobs_timed_out.fetch_add(1, Ordering::Relaxed);
-                fail(&mut out, JobError::DeadlineExceeded { timeout_ms });
+                self.fail(&mut out, JobError::DeadlineExceeded { timeout_ms: budget_ms });
                 return out;
             }
             RunOutcome::Cancelled => {
                 self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
-                fail(&mut out, JobError::Cancelled);
+                self.fail(&mut out, JobError::Cancelled);
                 return out;
             }
         }
@@ -166,13 +250,232 @@ impl Executor {
                     // its (untrusted) cardinality to matched_total, so
                     // `submitted == completed + failed` stays an invariant
                     self.metrics.certify_failures.fetch_add(1, Ordering::Relaxed);
-                    fail(&mut out, JobError::Certify(e));
+                    self.fail(&mut out, JobError::Certify(e));
                     return out;
                 }
             }
         }
 
+        // a successful stored-graph match becomes the new cache, written
+        // through the entry handle captured at read time (see
+        // `GraphStore::cache_into` for why never by name). A concurrent
+        // UPDATE moves the version and wins (its repair is newer); the
+        // matching is moved, not cloned (nothing reads it past this
+        // point).
+        if let Some((entry, version)) = stored {
+            GraphStore::cache_into(&entry, result.matching, version);
+        }
+
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .edges_processed
+            .fetch_add(out.n_edges as u64, Ordering::Relaxed);
+        self.metrics
+            .matched_total
+            .fetch_add(out.cardinality as u64, Ordering::Relaxed);
+        self.metrics.observe_latency(total.elapsed_secs());
+        out
+    }
+
+    fn execute_load(&self, job: &MatchJob, name: &str) -> MatchOutcome {
+        let total = Timer::start();
+        let mut out = Self::blank(job.id);
+        if matches!(job.source, GraphSource::Stored(_)) {
+            self.fail(
+                &mut out,
+                JobError::Load("LOAD needs a concrete graph source (family/n or mtx)".into()),
+            );
+            return out;
+        }
+        let g = match self.acquire(&job.source) {
+            Ok(g) => g,
+            Err(e) => {
+                self.fail(&mut out, JobError::Load(e));
+                return out;
+            }
+        };
+        out.t_load = total.elapsed_secs();
+        out.nr = g.nr;
+        out.nc = g.nc;
+        out.n_edges = g.n_edges();
+        self.store.load(name, g);
+        self.metrics.graphs_loaded.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.observe_latency(total.elapsed_secs());
+        out
+    }
+
+    fn execute_drop(&self, job: &MatchJob, name: &str) -> MatchOutcome {
+        let total = Timer::start();
+        let mut out = Self::blank(job.id);
+        if !self.store.drop_graph(name) {
+            self.fail(&mut out, JobError::Load(format!("no stored graph named {name:?}")));
+            return out;
+        }
+        self.metrics.graphs_dropped.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.observe_latency(total.elapsed_secs());
+        out
+    }
+
+    fn execute_update(&self, job: &MatchJob, name: &str, batch: &DeltaBatch) -> MatchOutcome {
+        let total = Timer::start();
+        let (deadline, budget_ms) = effective_deadline(job, Instant::now());
+        let mut out = Self::blank(job.id);
+        let Some(entry) = self.store.entry(name) else {
+            self.fail(
+                &mut out,
+                JobError::Load(format!("no stored graph named {name:?} (LOAD it first)")),
+            );
+            return out;
+        };
+        // the entry lock is held across apply + repair: updates to one
+        // graph serialize (the cache is only meaningful under per-graph
+        // ordering) while other graphs keep flowing
+        let mut e = entry.lock().unwrap();
+        // resolve AND validate the spec before mutating anything: an
+        // unbuildable spec (xla without an engine) must reply ERR with the
+        // stored graph untouched — a half-applied update behind an error
+        // reply would desynchronize client and server views. GPU specs
+        // skip the probe (repair constructs them directly, and they always
+        // build); for the rest the probe is a Box of a unit struct.
+        let spec = self.resolve_spec(job, &e.graph.snapshot());
+        out.algo = spec.to_string();
+        if !matches!(spec, super::spec::AlgoSpec::Gpu(_))
+            && registry::build(&spec, self.engine.clone()).is_none()
+        {
+            self.fail(&mut out, JobError::Unavailable(registry::unavailable_msg(&spec)));
+            return out;
+        }
+        // UPDATE is transactional: ERR means the stored graph did NOT
+        // advance. The pre-batch state is cheap to keep (Arc'd base CSR +
+        // the overlay maps + one matching clone) and is restored on every
+        // failure path below, so wire clients can always retry an ERR'd
+        // batch without double-applying it.
+        let graph_backup = e.graph.clone();
+        let cached_prev = e.matching.take();
+
+        let report = e.graph.apply(batch);
+        let g = e.graph.snapshot();
+        out.t_load = total.elapsed_secs();
+        out.nr = g.nr;
+        out.nc = g.nc;
+        out.n_edges = g.n_edges();
+        let mut update = UpdateStats {
+            inserted: report.inserted.len() as u64,
+            deleted: report.deleted.len() as u64,
+            cols_added: report.added_cols.len() as u64,
+            rejected: report.rejected as u64,
+            rebuilt: report.rebuilt,
+            ..UpdateStats::default()
+        };
+
+        let t_init = Timer::start();
+        // warm start: the maintained matching, or a fresh init heuristic
+        // the first time this graph is ever matched
+        let prev = match &cached_prev {
+            Some(c) => c.matching.clone(),
+            None => job.init.run(&g),
+        };
+        out.t_init = t_init.elapsed_secs();
+
+        let mut ctx = RunCtx::new(self.pool.clone()).with_cancel(self.cancel.clone());
+        ctx.set_deadline(deadline);
+        let t_match = Timer::start();
+        // with buildability checked above, this Err is the defensive
+        // matching/graph-shape mismatch only — unreachable from the store
+        // flow, where the matching is maintained under this entry's lock
+        let summary =
+            match dynamic::repair(&g, prev, &report, &spec, self.engine.clone(), &mut ctx) {
+                Ok(s) => s,
+                Err(msg) => {
+                    e.graph = graph_backup;
+                    e.matching = cached_prev;
+                    out.update = Some(update);
+                    self.fail(&mut out, JobError::Unavailable(msg));
+                    return out;
+                }
+            };
+        out.t_match = t_match.elapsed_secs();
+        update.seeds = summary.seeds as u64;
+        update.dropped = summary.dropped as u64;
+        update.joined = summary.joined as u64;
+        out.update = Some(update);
+        out.init_cardinality = summary.start_cardinality;
+        let result = summary.result;
+        out.cardinality = result.matching.cardinality();
+        out.phases = result.stats.phases;
+        out.frontier_peak = result.stats.frontier_peak;
+        out.endpoints_total = result.stats.endpoints_total;
+        out.device_parallel_cycles = result.stats.device_parallel_cycles;
+
+        // decide the fate under the entry lock so the rollback can never
+        // clobber a concurrent update's work (updates to one graph
+        // serialize on this lock)
+        let complete = result.outcome == RunOutcome::Complete;
+        let certify_err = if complete && job.certify {
+            result.matching.certify(&g).err()
+        } else {
+            None
+        };
+        if !complete || certify_err.is_some() {
+            e.graph = graph_backup;
+            e.matching = cached_prev;
+            drop(e);
+            match result.outcome {
+                RunOutcome::DeadlineExceeded => {
+                    self.metrics.jobs_timed_out.fetch_add(1, Ordering::Relaxed);
+                    self.fail(&mut out, JobError::DeadlineExceeded { timeout_ms: budget_ms });
+                }
+                RunOutcome::Cancelled => {
+                    self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                    self.fail(&mut out, JobError::Cancelled);
+                }
+                RunOutcome::Complete => {
+                    // certification failed: the graph state is fine but
+                    // the repaired matching is untrusted — roll back
+                    // rather than serve or cache it
+                    self.metrics.certify_failures.fetch_add(1, Ordering::Relaxed);
+                    self.fail(
+                        &mut out,
+                        JobError::Certify(certify_err.expect("checked above")),
+                    );
+                }
+            }
+            return out;
+        }
+        out.certified = job.certify;
+
+        // success: the batch is durable — per-graph stats and the new
+        // maintained matching land together
+        e.stats.updates += 1;
+        e.stats.edges_inserted += update.inserted;
+        e.stats.edges_deleted += update.deleted;
+        e.stats.cols_added += update.cols_added;
+        e.stats.repairs += 1;
+        let version = e.graph.version();
+        e.matching = Some(CachedMatching { matching: result.matching, version });
+        drop(e);
+
+        // a concurrent DROP or re-LOAD may have unmapped this entry while
+        // the repair ran: the work landed on an orphan, and the client
+        // must not be told the stored graph advanced. (If the entry is
+        // still mapped here, any later drop linearizes *after* this
+        // update.)
+        let still_mapped =
+            self.store.entry(name).is_some_and(|cur| Arc::ptr_eq(&cur, &entry));
+        if !still_mapped {
+            self.fail(
+                &mut out,
+                JobError::Load(format!(
+                    "stored graph {name:?} was dropped or replaced mid-update"
+                )),
+            );
+            return out;
+        }
+
+        self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_updated.fetch_add(1, Ordering::Relaxed);
         self.metrics
             .edges_processed
             .fetch_add(out.n_edges as u64, Ordering::Relaxed);
@@ -206,6 +509,7 @@ mod tests {
         assert!(out.cardinality > 0);
         assert!(out.cardinality >= out.init_cardinality);
         assert!(!out.algo.is_empty());
+        assert!(out.update.is_none(), "match jobs carry no update stats");
     }
 
     #[test]
@@ -340,6 +644,38 @@ mod tests {
     }
 
     #[test]
+    fn absolute_deadline_caps_the_job_like_a_timeout() {
+        // the batch-wide budget path: an already-expired absolute deadline
+        // trips exactly like timeout_ms=0, with the distinct error
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        let job = MatchJob::new(
+            11,
+            GraphSource::Generate { family: Family::Uniform, n: 800, seed: 3, permute: false },
+        )
+        .with_algo("hk")
+        .with_deadline_at(Instant::now());
+        let out = e.execute(&job);
+        assert_eq!(out.error, Some(JobError::DeadlineExceeded { timeout_ms: 0 }));
+        assert_eq!(metrics.jobs_timed_out.load(Ordering::Relaxed), 1);
+        // and the earlier of {timeout, deadline} wins: a generous timeout
+        // cannot rescue an expired absolute deadline
+        let job = MatchJob::new(
+            12,
+            GraphSource::Generate { family: Family::Uniform, n: 800, seed: 3, permute: false },
+        )
+        .with_algo("hk")
+        .with_timeout_ms(60_000)
+        .with_deadline_at(Instant::now());
+        let out = e.execute(&job);
+        assert!(
+            matches!(out.error, Some(JobError::DeadlineExceeded { .. })),
+            "{:?}",
+            out.error
+        );
+    }
+
+    #[test]
     fn cancelled_executor_fails_jobs_distinctly() {
         let metrics = Arc::new(Metrics::new());
         let e = Executor::new(None, metrics.clone());
@@ -379,5 +715,168 @@ mod tests {
             "second same-size job must lease the first job's buffers, reuses={}",
             e.workspace_pool().reuses()
         );
+    }
+
+    // ---- incremental verbs through the executor --------------------------
+
+    fn load_job(id: u64, name: &str, n: usize, seed: u64) -> MatchJob {
+        MatchJob::load_graph(
+            id,
+            name,
+            GraphSource::Generate { family: Family::Uniform, n, seed, permute: false },
+        )
+    }
+
+    #[test]
+    fn load_update_match_drop_lifecycle() {
+        use crate::dynamic::DeltaBatch;
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        // LOAD
+        let out = e.execute(&load_job(1, "g", 400, 7));
+        assert!(out.error.is_none(), "{:?}", out.error);
+        assert!(out.n_edges > 0);
+        assert_eq!(e.store().len(), 1);
+        // MATCH against the stored graph (cold: no cached matching yet)
+        let cold = e.execute(&MatchJob::new(2, GraphSource::Stored("g".into())));
+        assert!(cold.certified, "{:?}", cold.error);
+        assert!(cold.cardinality > 0);
+        // MATCH again: warm-started from the cache, so init == answer and
+        // the run closes in a quiet phase
+        let warm = e.execute(&MatchJob::new(3, GraphSource::Stored("g".into())));
+        assert!(warm.certified);
+        assert_eq!(warm.cardinality, cold.cardinality);
+        assert_eq!(
+            warm.init_cardinality, cold.cardinality,
+            "second MATCH must start from the cached maximum"
+        );
+        // UPDATE: delete a matched edge and insert nothing — repair runs
+        let (r, c) = {
+            let view = e.store().graph_for_match("g").unwrap();
+            let m = view.cached.expect("cache must exist after a certified MATCH").matching;
+            let c = (0..m.nc()).find(|&c| m.cmatch[c] >= 0).unwrap();
+            (m.cmatch[c] as u32, c as u32)
+        };
+        let out = e.execute(&MatchJob::update_graph(4, "g", DeltaBatch::new().delete(r, c)));
+        assert!(out.error.is_none(), "{:?}", out.error);
+        assert!(out.certified);
+        let up = out.update.expect("update jobs must carry update stats");
+        assert_eq!(up.deleted, 1);
+        assert_eq!(up.dropped, 1, "the deleted edge was matched");
+        assert!(up.seeds >= 1);
+        assert_eq!(metrics.jobs_updated.load(Ordering::Relaxed), 1);
+        // the repaired cardinality is within 1 of the old one and MATCH
+        // now serves it warm
+        assert!(out.cardinality + 1 >= cold.cardinality);
+        let after = e.execute(&MatchJob::new(5, GraphSource::Stored("g".into())));
+        assert_eq!(after.init_cardinality, out.cardinality);
+        // DROP
+        let out = e.execute(&MatchJob::drop_graph(6, "g"));
+        assert!(out.error.is_none());
+        assert!(e.store().is_empty());
+        // every verb was a completed job; nothing failed
+        assert_eq!(metrics.completed(), 6);
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.graphs_loaded.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.graphs_dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_stored_graph_is_a_load_error() {
+        use crate::dynamic::DeltaBatch;
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        for job in [
+            MatchJob::new(0, GraphSource::Stored("nope".into())),
+            MatchJob::update_graph(1, "nope", DeltaBatch::new().insert(0, 0)),
+            MatchJob::drop_graph(2, "nope"),
+        ] {
+            let out = e.execute(&job);
+            assert!(matches!(out.error, Some(JobError::Load(_))), "{:?}", out.error);
+        }
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.completed(), 0);
+    }
+
+    #[test]
+    fn unbuildable_update_spec_leaves_the_stored_graph_untouched() {
+        // regression: an ERR reply must mean "nothing happened" — an xla
+        // UPDATE without an engine used to apply the batch (and discard
+        // the cached matching) before discovering the spec can't build
+        use crate::dynamic::DeltaBatch;
+        let e = exec();
+        e.execute(&load_job(0, "g", 200, 1));
+        let match_out = e.execute(&MatchJob::new(1, GraphSource::Stored("g".into())));
+        assert!(match_out.certified);
+        let before = e.store().graph_for_match("g").unwrap();
+        let out = e.execute(
+            &MatchJob::update_graph(2, "g", DeltaBatch::new().add_column(vec![0]))
+                .with_algo("xla:apfb-full"),
+        );
+        assert!(matches!(out.error, Some(JobError::Unavailable(_))), "{:?}", out.error);
+        let after = e.store().graph_for_match("g").unwrap();
+        assert_eq!(before.version, after.version, "a failed UPDATE must not advance the version");
+        assert_eq!(before.graph.nc, after.graph.nc, "the column must not have been appended");
+        assert_eq!(
+            before.cached.map(|c| c.matching),
+            after.cached.map(|c| c.matching),
+            "the warm-start cache must survive a rejected UPDATE"
+        );
+    }
+
+    #[test]
+    fn update_repair_matches_fresh_reference() {
+        use crate::dynamic::DeltaBatch;
+        let e = exec();
+        e.execute(&load_job(0, "g", 300, 3));
+        e.execute(&MatchJob::new(1, GraphSource::Stored("g".into())));
+        // batch: a few deletions + insertions + one appended column
+        let m = e.store().graph_for_match("g").unwrap().cached.unwrap().matching;
+        let mut batch = DeltaBatch::new().add_column(vec![0, 1, 2]);
+        let mut deleted = 0;
+        for c in 0..m.nc() {
+            if m.cmatch[c] >= 0 && deleted < 3 {
+                batch = batch.delete(m.cmatch[c] as u32, c as u32);
+                deleted += 1;
+            }
+        }
+        let out = e.execute(&MatchJob::update_graph(2, "g", batch));
+        assert!(out.certified, "{:?}", out.error);
+        // certification already proves maximality; double-check against
+        // the from-scratch oracle on the mutated graph
+        let g = e.store().graph_for_match("g").unwrap().graph;
+        assert_eq!(out.cardinality, crate::matching::reference_max_cardinality(&g));
+    }
+
+    #[test]
+    fn update_with_zero_deadline_rolls_back_the_batch() {
+        // UPDATE is transactional: a deadline-tripped repair must reply
+        // with the distinct timeout error AND restore the pre-batch graph
+        // and matching, so wire clients can retry the identical batch
+        // without double-applying it
+        use crate::dynamic::DeltaBatch;
+        let metrics = Arc::new(Metrics::new());
+        let e = Executor::new(None, metrics.clone());
+        e.execute(&load_job(0, "g", 400, 9));
+        e.execute(&MatchJob::new(1, GraphSource::Stored("g".into())));
+        let view = e.store().graph_for_match("g").unwrap();
+        let (g_before, v_before) = (view.graph.clone(), view.version);
+        let m = view.cached.unwrap().matching;
+        let c = (0..m.nc()).find(|&c| m.cmatch[c] >= 0).unwrap();
+        let batch = DeltaBatch::new()
+            .delete(m.cmatch[c] as u32, c as u32)
+            .add_column(vec![0, 1]);
+        let out = e.execute(&MatchJob::update_graph(2, "g", batch).with_timeout_ms(0));
+        assert_eq!(out.error, Some(JobError::DeadlineExceeded { timeout_ms: 0 }));
+        assert_eq!(metrics.jobs_timed_out.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.jobs_updated.load(Ordering::Relaxed), 0);
+        // the batch was rolled back wholesale: same version, same shape,
+        // and the old maximum still cached as the warm start
+        let view = e.store().graph_for_match("g").unwrap();
+        assert_eq!(view.version, v_before, "rollback must restore the graph version");
+        assert_eq!(view.graph.nc, g_before.nc, "the appended column must be gone");
+        assert_eq!(view.graph.n_edges(), g_before.n_edges());
+        let cached = view.cached.expect("the pre-update cache must survive");
+        assert_eq!(cached.matching, m);
     }
 }

@@ -1,11 +1,12 @@
 //! Job and result types for the matching service.
 
 use super::spec::AlgoSpec;
+use crate::dynamic::DeltaBatch;
 use crate::graph::csr::BipartiteCsr;
 use crate::graph::gen::Family;
 use crate::matching::init::InitHeuristic;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Where the job's graph comes from.
 #[derive(Debug, Clone)]
@@ -16,6 +17,25 @@ pub enum GraphSource {
     MtxFile(String),
     /// an already-built graph (in-process callers)
     InMemory(Arc<BipartiteCsr>),
+    /// a named graph held by the executor's
+    /// [`super::store::GraphStore`] (`LOAD` it first)
+    Stored(String),
+}
+
+/// What the job does. `Match` is the classic one-shot request; the other
+/// three are the incremental-subsystem verbs, routed through the same
+/// executor so metrics, deadlines, and cancellation apply uniformly.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub enum JobOp {
+    /// compute a maximum matching of the job's graph
+    #[default]
+    Match,
+    /// install the job's graph into the store under `name`
+    Load { name: String },
+    /// apply a delta batch to stored graph `name` and repair its matching
+    Update { name: String, batch: DeltaBatch },
+    /// evict stored graph `name`
+    DropGraph { name: String },
 }
 
 /// Which matcher to use.
@@ -32,6 +52,8 @@ pub enum AlgoChoice {
 #[derive(Debug, Clone)]
 pub struct MatchJob {
     pub id: u64,
+    /// what to do (default [`JobOp::Match`])
+    pub op: JobOp,
     pub source: GraphSource,
     pub algo: AlgoChoice,
     pub init: InitHeuristic,
@@ -48,19 +70,52 @@ pub struct MatchJob {
     /// [`JobError::DeadlineExceeded`] instead of serving a possibly
     /// non-maximum matching.
     pub timeout: Option<Duration>,
+    /// absolute deadline (batch-wide budgets — see
+    /// `Service::run_batch_with_timeout_ms`); when both this and
+    /// `timeout` are set the earlier instant wins.
+    pub deadline: Option<Instant>,
 }
 
 impl MatchJob {
     pub fn new(id: u64, source: GraphSource) -> Self {
         Self {
             id,
+            op: JobOp::Match,
             source,
             algo: AlgoChoice::Auto,
             init: InitHeuristic::Cheap,
             certify: true,
             frontier: None,
             timeout: None,
+            deadline: None,
         }
+    }
+
+    /// A `LOAD`: acquire the graph from `source` and store it as `name`.
+    pub fn load_graph(id: u64, name: impl Into<String>, source: GraphSource) -> Self {
+        let mut j = Self::new(id, source);
+        j.op = JobOp::Load { name: name.into() };
+        j
+    }
+
+    /// An `UPDATE`: apply `batch` to stored graph `name` and repair.
+    /// The name in `op` is authoritative — `source` is set to
+    /// `Stored(name)` purely so Debug output and generic source
+    /// inspection show where the graph lives; the executor reads the op.
+    pub fn update_graph(id: u64, name: impl Into<String>, batch: DeltaBatch) -> Self {
+        let name = name.into();
+        let mut j = Self::new(id, GraphSource::Stored(name.clone()));
+        j.op = JobOp::Update { name, batch };
+        j
+    }
+
+    /// A `DROP`: evict stored graph `name` (as with
+    /// [`MatchJob::update_graph`], the op's name is authoritative).
+    pub fn drop_graph(id: u64, name: impl Into<String>) -> Self {
+        let name = name.into();
+        let mut j = Self::new(id, GraphSource::Stored(name.clone()));
+        j.op = JobOp::DropGraph { name };
+        j
     }
 
     /// Pick a matcher by registry name. Panics on a malformed name —
@@ -83,6 +138,13 @@ impl MatchJob {
 
     pub fn with_timeout_ms(mut self, ms: u64) -> Self {
         self.timeout = Some(Duration::from_millis(ms));
+        self
+    }
+
+    /// Cap the job by an absolute instant (kept if earlier than an
+    /// already-set deadline).
+    pub fn with_deadline_at(mut self, at: Instant) -> Self {
+        self.deadline = Some(self.deadline.map_or(at, |d| d.min(at)));
         self
     }
 }
@@ -118,6 +180,26 @@ impl std::fmt::Display for JobError {
     }
 }
 
+/// What an [`JobOp::Update`] did, attached to its [`MatchOutcome`] so the
+/// server can report the delta's effect alongside the repaired matching.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UpdateStats {
+    /// net edges inserted / deleted by the batch
+    pub inserted: u64,
+    pub deleted: u64,
+    pub cols_added: u64,
+    /// out-of-range or no-op delta elements dropped
+    pub rejected: u64,
+    /// columns the seeded repair phase started from
+    pub seeds: u64,
+    /// matched edges severed by deletions
+    pub dropped: u64,
+    /// insertions matched directly (both endpoints free)
+    pub joined: u64,
+    /// whether this batch tripped an overlay→CSR rebuild
+    pub rebuilt: bool,
+}
+
 /// Outcome of one job.
 #[derive(Debug, Clone)]
 pub struct MatchOutcome {
@@ -141,6 +223,8 @@ pub struct MatchOutcome {
     pub endpoints_total: u64,
     /// parallel-model device cycles (0 for CPU algorithms)
     pub device_parallel_cycles: u64,
+    /// present exactly for [`JobOp::Update`] jobs
+    pub update: Option<UpdateStats>,
     pub error: Option<JobError>,
 }
 
@@ -171,6 +255,33 @@ mod tests {
             GraphSource::Generate { family: Family::Kron, n: 10, seed: 1, permute: false },
         )
         .with_algo("no-such-algo");
+    }
+
+    #[test]
+    fn op_constructors_carry_names() {
+        use crate::dynamic::DeltaBatch;
+        let j = MatchJob::load_graph(1, "g", GraphSource::MtxFile("/x.mtx".into()));
+        assert_eq!(j.op, JobOp::Load { name: "g".into() });
+        let j = MatchJob::update_graph(2, "g", DeltaBatch::new().insert(0, 0));
+        assert!(matches!(&j.op, JobOp::Update { name, batch } if name == "g" && batch.len() == 1));
+        assert!(matches!(&j.source, GraphSource::Stored(n) if n == "g"));
+        let j = MatchJob::drop_graph(3, "g");
+        assert_eq!(j.op, JobOp::DropGraph { name: "g".into() });
+        assert_eq!(MatchJob::new(0, GraphSource::MtxFile("/x".into())).op, JobOp::Match);
+    }
+
+    #[test]
+    fn deadline_at_keeps_the_earlier_instant() {
+        let now = Instant::now();
+        let later = now + Duration::from_secs(60);
+        let j = MatchJob::new(0, GraphSource::MtxFile("/x".into()))
+            .with_deadline_at(later)
+            .with_deadline_at(now);
+        assert_eq!(j.deadline, Some(now));
+        let j = MatchJob::new(0, GraphSource::MtxFile("/x".into()))
+            .with_deadline_at(now)
+            .with_deadline_at(later);
+        assert_eq!(j.deadline, Some(now), "a later cap must not loosen the deadline");
     }
 
     #[test]

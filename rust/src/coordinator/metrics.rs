@@ -20,6 +20,12 @@ pub struct Metrics {
     pub jobs_timed_out: AtomicU64,
     /// jobs abandoned via cancellation (also counted in `jobs_failed`)
     pub jobs_cancelled: AtomicU64,
+    /// successful `UPDATE` jobs (also counted in `jobs_completed`)
+    pub jobs_updated: AtomicU64,
+    /// successful `LOAD` jobs (graphs installed into the store)
+    pub graphs_loaded: AtomicU64,
+    /// successful `DROP` jobs (graphs evicted from the store)
+    pub graphs_dropped: AtomicU64,
     pub edges_processed: AtomicU64,
     pub matched_total: AtomicU64,
     latency: [AtomicU64; N_BUCKETS],
@@ -79,9 +85,15 @@ impl Metrics {
         }
     }
 
+    /// The wire report behind the server's `STATS` verb. Every counter the
+    /// executor maintains is on it — including the failure-mode split
+    /// (`timeout=`/`cancelled=`, which are *also* inside `failed=`) and
+    /// the incremental-subsystem counters (`updated=` successful UPDATE
+    /// jobs, `graphs loaded=`/`dropped=` store traffic).
     pub fn report(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} timeout={} cancelled={} | \
+            "jobs: submitted={} completed={} failed={} timeout={} cancelled={} updated={} | \
+             graphs: loaded={} dropped={} | \
              matched={} edges={} | \
              latency mean={:.4}s p50≤{:.4}s p95≤{:.4}s p99≤{:.4}s",
             self.jobs_submitted.load(Ordering::Relaxed),
@@ -89,6 +101,9 @@ impl Metrics {
             self.jobs_failed.load(Ordering::Relaxed),
             self.jobs_timed_out.load(Ordering::Relaxed),
             self.jobs_cancelled.load(Ordering::Relaxed),
+            self.jobs_updated.load(Ordering::Relaxed),
+            self.graphs_loaded.load(Ordering::Relaxed),
+            self.graphs_dropped.load(Ordering::Relaxed),
             self.matched_total.load(Ordering::Relaxed),
             self.edges_processed.load(Ordering::Relaxed),
             self.mean_latency(),
@@ -154,5 +169,24 @@ mod tests {
         assert_eq!(m.latency_quantile(0.5), 0.0);
         assert_eq!(m.mean_latency(), 0.0);
         assert!(m.report().contains("completed=0"));
+    }
+
+    #[test]
+    fn report_exposes_every_failure_and_update_counter() {
+        // regression for the "counted but not reported" gap: the wire
+        // report must carry the timeout/cancelled split and the
+        // incremental-subsystem counters verbatim
+        let m = Metrics::new();
+        m.jobs_timed_out.store(3, Ordering::Relaxed);
+        m.jobs_cancelled.store(2, Ordering::Relaxed);
+        m.jobs_updated.store(7, Ordering::Relaxed);
+        m.graphs_loaded.store(4, Ordering::Relaxed);
+        m.graphs_dropped.store(1, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("timeout=3"), "{r}");
+        assert!(r.contains("cancelled=2"), "{r}");
+        assert!(r.contains("updated=7"), "{r}");
+        assert!(r.contains("loaded=4"), "{r}");
+        assert!(r.contains("dropped=1"), "{r}");
     }
 }

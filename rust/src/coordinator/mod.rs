@@ -1,7 +1,8 @@
 //! The L3 coordinator: a matching *service* around the algorithm library —
 //! job queue with backpressure, worker pool, feature-based algorithm
 //! routing (the paper's "GPU wins except banded originals" finding as
-//! policy), metrics, and a TCP line-protocol front end.
+//! policy), metrics, a server-side graph store for the incremental
+//! (online-matching) verbs, and a TCP line-protocol front end.
 
 pub mod exec;
 pub mod job;
@@ -12,10 +13,12 @@ pub mod router;
 pub mod server;
 pub mod service;
 pub mod spec;
+pub mod store;
 
 pub use exec::Executor;
-pub use job::{AlgoChoice, GraphSource, JobError, MatchJob, MatchOutcome};
+pub use job::{AlgoChoice, GraphSource, JobError, JobOp, MatchJob, MatchOutcome, UpdateStats};
 pub use metrics::Metrics;
 pub use server::Server;
 pub use service::Service;
 pub use spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};
+pub use store::GraphStore;

@@ -7,7 +7,13 @@
 //! MATCH family=<name> n=<int> seed=<int> [permute=0|1] [algo=<name>]
 //!       [init=<name>] [timeout_ms=<int>]
 //! MATCH mtx=<path> [algo=<name>] [timeout_ms=<int>]
+//! MATCH name=<graph> [algo=<name>] [timeout_ms=<int>]
+//! LOAD  name=<graph> (family=… n=… [seed=…] [permute=0|1] | mtx=<path>)
+//! UPDATE name=<graph> [add=r:c,r:c,…] [del=r:c,…] [addcols=r;r|r|…]
+//!        [algo=<name>] [timeout_ms=<int>]
+//! DROP  name=<graph>
 //! ALGOS                       → ALGOS <name> <name> ...
+//! GRAPHS                      → GRAPHS <name> <name> ...
 //! STATS                       → STATS <metrics report>
 //! QUIT
 //! ```
@@ -15,8 +21,19 @@
 //! `algo=` accepts any registry name (`AlgoSpec` wire format, including
 //! `p-hk@<threads>`); malformed names are rejected before execution.
 //! `timeout_ms=` sets a deadline over the whole job (load + init +
-//! matching); a tripped job replies `ERR timeout: ...` — a distinct
-//! failure, never a silently suboptimal matching.
+//! matching — and for `UPDATE`, apply + repair); a tripped job replies
+//! `ERR timeout: ...` — a distinct failure, never a silently suboptimal
+//! matching.
+//!
+//! The incremental verbs hold graphs server-side
+//! ([`super::store::GraphStore`]): `LOAD` installs a graph under a name,
+//! `UPDATE` ships a delta batch (`add`/`del` are comma-separated
+//! `row:col` edges, `addcols` appends columns as `|`-separated
+//! `;`-lists of neighbor rows) and repairs the maintained matching via
+//! seeded augmentation, and `MATCH name=…` re-serves the cached maximum
+//! (warm start — one quiet phase). The `STATS` report covers them
+//! (`updated=`, `graphs: loaded=/dropped=`) next to the failure split
+//! (`timeout=`, `cancelled=`).
 //!
 //! Replies:
 //! `OK id=<id> algo=<name> nr=.. nc=.. edges=.. card=.. certified=0|1
@@ -25,13 +42,18 @@
 //! frontier-compaction counters (`RunStats::{frontier_peak,
 //! endpoints_total, device_parallel_cycles}`) so remote clients can
 //! observe compaction behaviour; all three are 0 for CPU algorithms and
-//! for FullScan GPU runs.
+//! for FullScan GPU runs. `LOAD`/`DROP` reply
+//! `OK id=<id> name=<graph> nr=.. nc=.. edges=..` /
+//! `OK id=<id> name=<graph> dropped=1`; `UPDATE` appends
+//! `inserted= deleted= cols_added= rejected= seeds= dropped= joined=
+//! rebuilt=` to the standard OK fields.
 
 use super::exec::Executor;
-use super::job::{GraphSource, MatchJob};
+use super::job::{GraphSource, MatchJob, MatchOutcome};
 use super::metrics::Metrics;
 use super::registry;
 use super::spec::AlgoSpec;
+use crate::dynamic::DeltaBatch;
 use crate::graph::gen::Family;
 use crate::matching::init::InitHeuristic;
 use crate::runtime::Engine;
@@ -115,79 +137,165 @@ enum Command {
 
 fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command {
     let mut parts = line.split_whitespace();
-    match parts.next() {
-        Some("QUIT") => Command::Quit,
-        Some("ALGOS") => Command::Reply(format!("ALGOS {}", registry::all_names().join(" "))),
-        Some("STATS") => Command::Reply(format!("STATS {}", executor.metrics.report())),
-        Some("MATCH") => {
-            let kv: Vec<(&str, &str)> =
-                parts.filter_map(|p| p.split_once('=')).collect();
-            match parse_match(&kv, next_id) {
-                Ok(job) => {
-                    let o = executor.execute(&job);
-                    match o.error {
-                        Some(e) => Command::Reply(format!("ERR {e}")),
-                        None => Command::Reply(format!(
-                            "OK id={} algo={} nr={} nc={} edges={} card={} certified={} \
-                             t_load={:.6} t_match={:.6} frontier_peak={} endpoints={} \
-                             devpar_cycles={}",
-                            o.job_id,
-                            o.algo,
-                            o.nr,
-                            o.nc,
-                            o.n_edges,
-                            o.cardinality,
-                            o.certified as u8,
-                            o.t_load,
-                            o.t_match,
-                            o.frontier_peak,
-                            o.endpoints_total,
-                            o.device_parallel_cycles
-                        )),
-                    }
-                }
-                Err(e) => Command::Reply(format!("ERR {e}")),
+    let verb = parts.next();
+    match verb {
+        Some("QUIT") => return Command::Quit,
+        Some("ALGOS") => {
+            return Command::Reply(format!("ALGOS {}", registry::all_names().join(" ")))
+        }
+        Some("GRAPHS") => {
+            let names = executor.store().names();
+            return Command::Reply(if names.is_empty() {
+                "GRAPHS".into()
+            } else {
+                format!("GRAPHS {}", names.join(" "))
+            });
+        }
+        Some("STATS") => return Command::Reply(format!("STATS {}", executor.metrics.report())),
+        Some("MATCH" | "LOAD" | "UPDATE" | "DROP") => {}
+        Some(other) => return Command::Reply(format!("ERR unknown command {other}")),
+        None => return Command::Reply("ERR empty request".into()),
+    }
+    let verb = verb.expect("matched above");
+    let kv: Vec<(&str, &str)> = parts.filter_map(|p| p.split_once('=')).collect();
+    let parsed = match verb {
+        "MATCH" => parse_match(&kv, next_id),
+        "LOAD" => parse_load(&kv, next_id),
+        "UPDATE" => parse_update(&kv, next_id),
+        "DROP" => parse_drop(&kv, next_id),
+        _ => unreachable!("verb filtered above"),
+    };
+    match parsed {
+        Ok(job) => {
+            let o = executor.execute(&job);
+            match &o.error {
+                Some(e) => Command::Reply(format!("ERR {e}")),
+                None => Command::Reply(render_ok(&job, &o)),
             }
         }
-        Some(other) => Command::Reply(format!("ERR unknown command {other}")),
-        None => Command::Reply("ERR empty request".into()),
+        Err(e) => Command::Reply(format!("ERR {e}")),
     }
 }
 
-fn parse_match(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
-    let get = |k: &str| kv.iter().find(|(key, _)| *key == k).map(|(_, v)| *v);
-    let id = next_id.fetch_add(1, Ordering::Relaxed);
-    let source = if let Some(path) = get("mtx") {
-        GraphSource::MtxFile(path.to_string())
-    } else {
-        let family = get("family")
-            .and_then(Family::from_name)
-            .ok_or("missing/unknown family=")?;
-        let n: usize = get("n")
-            .ok_or("missing n=")?
-            .parse()
-            .map_err(|e| format!("bad n: {e}"))?;
-        let seed: u64 = get("seed").unwrap_or("0").parse().map_err(|e| format!("bad seed: {e}"))?;
-        let permute = get("permute").unwrap_or("0") == "1";
-        GraphSource::Generate { family, n, seed, permute }
-    };
-    let mut job = MatchJob::new(id, source);
-    if let Some(a) = get("algo") {
+fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
+    use super::job::JobOp;
+    match &job.op {
+        JobOp::Load { name } => {
+            format!("OK id={} name={} nr={} nc={} edges={}", o.job_id, name, o.nr, o.nc, o.n_edges)
+        }
+        JobOp::DropGraph { name } => format!("OK id={} name={} dropped=1", o.job_id, name),
+        JobOp::Match | JobOp::Update { .. } => {
+            let mut s = format!(
+                "OK id={} algo={} nr={} nc={} edges={} card={} certified={} \
+                 t_load={:.6} t_match={:.6} frontier_peak={} endpoints={} \
+                 devpar_cycles={}",
+                o.job_id,
+                o.algo,
+                o.nr,
+                o.nc,
+                o.n_edges,
+                o.cardinality,
+                o.certified as u8,
+                o.t_load,
+                o.t_match,
+                o.frontier_peak,
+                o.endpoints_total,
+                o.device_parallel_cycles
+            );
+            if let (JobOp::Update { name, .. }, Some(u)) = (&job.op, &o.update) {
+                s.push_str(&format!(
+                    " name={} inserted={} deleted={} cols_added={} rejected={} seeds={} \
+                     dropped={} joined={} rebuilt={}",
+                    name,
+                    u.inserted,
+                    u.deleted,
+                    u.cols_added,
+                    u.rejected,
+                    u.seeds,
+                    u.dropped,
+                    u.joined,
+                    u.rebuilt as u8
+                ));
+            }
+            s
+        }
+    }
+}
+
+fn get<'a>(kv: &[(&'a str, &'a str)], k: &str) -> Option<&'a str> {
+    kv.iter().find(|(key, _)| *key == k).map(|(_, v)| *v)
+}
+
+/// The `family=`/`n=`/`mtx=` graph-source fields shared by MATCH and LOAD.
+fn parse_source(kv: &[(&str, &str)]) -> Result<GraphSource, String> {
+    if let Some(path) = get(kv, "mtx") {
+        return Ok(GraphSource::MtxFile(path.to_string()));
+    }
+    let family = get(kv, "family")
+        .and_then(Family::from_name)
+        .ok_or("missing/unknown family=")?;
+    let n: usize = get(kv, "n")
+        .ok_or("missing n=")?
+        .parse()
+        .map_err(|e| format!("bad n: {e}"))?;
+    let seed: u64 =
+        get(kv, "seed").unwrap_or("0").parse().map_err(|e| format!("bad seed: {e}"))?;
+    let permute = get(kv, "permute").unwrap_or("0") == "1";
+    Ok(GraphSource::Generate { family, n, seed, permute })
+}
+
+/// The `algo=`/`init=`/`timeout_ms=` execution fields shared by MATCH and
+/// UPDATE. Parsed at the wire boundary: malformed values never reach the
+/// executor.
+fn apply_exec_fields(mut job: MatchJob, kv: &[(&str, &str)]) -> Result<MatchJob, String> {
+    if let Some(a) = get(kv, "algo") {
         if a != "auto" {
-            // parse at the wire boundary: malformed names never reach
-            // the executor
             let spec: AlgoSpec = a.parse()?;
             job = job.with_spec(spec);
         }
     }
-    if let Some(i) = get("init") {
+    if let Some(i) = get(kv, "init") {
         job.init = InitHeuristic::from_name(i).ok_or(format!("unknown init {i}"))?;
     }
-    if let Some(t) = get("timeout_ms") {
+    if let Some(t) = get(kv, "timeout_ms") {
         let ms: u64 = t.parse().map_err(|e| format!("bad timeout_ms: {e}"))?;
         job = job.with_timeout_ms(ms);
     }
     Ok(job)
+}
+
+fn parse_match(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    // `name=` targets a stored graph; otherwise the classic one-shot
+    // sources apply
+    let source = match get(kv, "name") {
+        Some(name) => GraphSource::Stored(name.to_string()),
+        None => parse_source(kv)?,
+    };
+    apply_exec_fields(MatchJob::new(id, source), kv)
+}
+
+fn parse_load(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let name = get(kv, "name").ok_or("LOAD requires name=")?;
+    let source = parse_source(kv)?;
+    Ok(MatchJob::load_graph(id, name, source))
+}
+
+fn parse_update(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let name = get(kv, "name").ok_or("UPDATE requires name=")?;
+    let batch = DeltaBatch::from_wire(get(kv, "add"), get(kv, "del"), get(kv, "addcols"))?;
+    if batch.is_empty() {
+        return Err("empty UPDATE (set add=, del=, or addcols=)".into());
+    }
+    apply_exec_fields(MatchJob::update_graph(id, name, batch), kv)
+}
+
+fn parse_drop(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let name = get(kv, "name").ok_or("DROP requires name=")?;
+    Ok(MatchJob::drop_graph(id, name))
 }
 
 #[cfg(test)]
@@ -296,6 +404,74 @@ mod tests {
         let reply =
             roundtrip(addr, "MATCH family=uniform n=300 seed=1 algo=hk timeout_ms=60000");
         assert!(reply.starts_with("OK "), "{reply}");
+    }
+
+    #[test]
+    fn load_update_match_drop_verbs() {
+        let (addr, _stop) = start_server();
+        // LOAD
+        let reply = roundtrip(addr, "LOAD name=g family=uniform n=300 seed=4");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains("name=g"), "{reply}");
+        assert!(reply.contains("edges="), "{reply}");
+        let reply = roundtrip(addr, "GRAPHS");
+        assert_eq!(reply, "GRAPHS g");
+        // MATCH by name (cold)
+        let reply = roundtrip(addr, "MATCH name=g");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains("certified=1"), "{reply}");
+        // UPDATE: append a column wired to three rows; repair runs
+        let reply = roundtrip(addr, "UPDATE name=g addcols=0;1;2");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains(" name=g"), "{reply}");
+        assert!(reply.contains("cols_added=1"), "{reply}");
+        assert!(reply.contains("certified=1"), "{reply}");
+        assert!(reply.contains(" seeds="), "{reply}");
+        // UPDATE with edge ops
+        let reply = roundtrip(addr, "UPDATE name=g del=0:0 add=0:1");
+        assert!(reply.starts_with("OK "), "{reply}");
+        // STATS shows the update/store counters and the failure split
+        let reply = roundtrip(addr, "STATS");
+        assert!(reply.contains("updated=2"), "{reply}");
+        assert!(reply.contains("loaded=1"), "{reply}");
+        assert!(reply.contains("timeout=0"), "{reply}");
+        assert!(reply.contains("cancelled=0"), "{reply}");
+        // DROP
+        let reply = roundtrip(addr, "DROP name=g");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains("dropped=1"), "{reply}");
+        assert_eq!(roundtrip(addr, "GRAPHS"), "GRAPHS");
+    }
+
+    #[test]
+    fn incremental_verb_errors() {
+        let (addr, _stop) = start_server();
+        // unknown names
+        assert!(roundtrip(addr, "MATCH name=ghost").starts_with("ERR"));
+        assert!(roundtrip(addr, "UPDATE name=ghost add=0:0").starts_with("ERR"));
+        assert!(roundtrip(addr, "DROP name=ghost").starts_with("ERR"));
+        // missing/malformed fields rejected at the wire boundary
+        assert!(roundtrip(addr, "LOAD family=uniform n=100").starts_with("ERR"));
+        assert!(roundtrip(addr, "LOAD name=g family=nope n=100").starts_with("ERR"));
+        assert!(roundtrip(addr, "UPDATE add=0:0").starts_with("ERR"));
+        let _ = roundtrip(addr, "LOAD name=g family=uniform n=100 seed=1");
+        assert!(roundtrip(addr, "UPDATE name=g").starts_with("ERR"), "empty update");
+        assert!(roundtrip(addr, "UPDATE name=g add=0-0").starts_with("ERR"));
+        assert!(roundtrip(addr, "UPDATE name=g addcols=x").starts_with("ERR"));
+        assert!(roundtrip(addr, "UPDATE name=g add=0:1 algo=wat").starts_with("ERR"));
+    }
+
+    #[test]
+    fn stats_reports_timeout_split_over_the_wire() {
+        // satellite regression: jobs_timed_out / jobs_cancelled travel the
+        // STATS reply with real values, not just the counters
+        let (addr, _stop) = start_server();
+        let reply = roundtrip(addr, "MATCH family=uniform n=20000 seed=1 algo=hk timeout_ms=0");
+        assert!(reply.starts_with("ERR timeout:"), "{reply}");
+        let reply = roundtrip(addr, "STATS");
+        assert!(reply.contains("timeout=1"), "{reply}");
+        assert!(reply.contains("cancelled=0"), "{reply}");
+        assert!(reply.contains("failed=1"), "{reply}");
     }
 
     #[test]

@@ -6,16 +6,19 @@ use super::exec::Executor;
 use super::job::{MatchJob, MatchOutcome};
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
+use super::store::GraphStore;
 use crate::matching::algo::CancelToken;
 use crate::runtime::Engine;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 pub struct Service {
     jobs: Arc<BoundedQueue<MatchJob>>,
     results: Arc<BoundedQueue<MatchOutcome>>,
     pub metrics: Arc<Metrics>,
     cancel: CancelToken,
+    store: Arc<GraphStore>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -31,6 +34,7 @@ impl Service {
         let metrics = Arc::new(Metrics::new());
         let executor = Executor::new(engine, metrics.clone());
         let cancel = executor.cancel_token();
+        let store = executor.store().clone();
         let mut workers = Vec::with_capacity(n_workers);
         for wid in 0..n_workers {
             let jobs = jobs.clone();
@@ -49,7 +53,13 @@ impl Service {
                     .expect("spawn worker"),
             );
         }
-        Self { jobs, results, metrics, cancel, workers }
+        Self { jobs, results, metrics, cancel, store, workers }
+    }
+
+    /// The graph store shared by this service's workers — `LOAD`ed graphs
+    /// live here across jobs (observability + tests).
+    pub fn store(&self) -> &Arc<GraphStore> {
+        &self.store
     }
 
     /// Submit a job (blocks when the queue is full). Err after shutdown.
@@ -93,6 +103,23 @@ impl Service {
         }
         self.results.close();
         self.metrics.clone()
+    }
+
+    /// [`Service::run_batch`] under one *batch-wide* deadline: every job
+    /// is capped by the same absolute instant, `budget_ms` from now (an
+    /// already-set earlier per-job deadline is kept). Jobs that can't make
+    /// the cut fail with [`super::job::JobError::DeadlineExceeded`] —
+    /// the whole batch still returns, each outcome tagged.
+    pub fn run_batch_with_timeout_ms(
+        self,
+        mut batch: Vec<MatchJob>,
+        budget_ms: u64,
+    ) -> (Vec<MatchOutcome>, Arc<Metrics>) {
+        let deadline = Instant::now() + Duration::from_millis(budget_ms);
+        for job in &mut batch {
+            job.deadline = Some(job.deadline.map_or(deadline, |d| d.min(deadline)));
+        }
+        self.run_batch(batch)
     }
 
     /// Convenience: run a batch of jobs to completion, returning outcomes
@@ -192,6 +219,73 @@ mod tests {
         let (outcomes, _) = svc.run_batch(vec![gen_job(0, 100).with_algo("xla:apfb-full")]);
         assert_eq!(outcomes.len(), 1);
         assert!(outcomes[0].error.is_some());
+    }
+
+    #[test]
+    fn batch_wide_deadline_trips_as_deadline_exceeded() {
+        // ROADMAP follow-up regression: a batch-wide budget of zero must
+        // fail every job with the distinct DeadlineExceeded error (not
+        // Cancelled, not a silently suboptimal answer) and count each
+        // under jobs_timed_out
+        use crate::coordinator::job::JobError;
+        use std::sync::atomic::Ordering;
+        let svc = Service::start(2, 8, None);
+        let jobs: Vec<MatchJob> = (0..4).map(|i| gen_job(i, 600)).collect();
+        let (outcomes, metrics) = svc.run_batch_with_timeout_ms(jobs, 0);
+        assert_eq!(outcomes.len(), 4);
+        for o in &outcomes {
+            assert!(
+                matches!(o.error, Some(JobError::DeadlineExceeded { .. })),
+                "job {}: {:?}",
+                o.job_id,
+                o.error
+            );
+            assert!(!o.certified);
+        }
+        assert_eq!(metrics.jobs_timed_out.load(Ordering::Relaxed), 4);
+        assert_eq!(
+            metrics.jobs_submitted.load(Ordering::Relaxed),
+            metrics.completed() + metrics.jobs_failed.load(Ordering::Relaxed)
+        );
+        // a generous batch budget does not interfere
+        let svc = Service::start(2, 8, None);
+        let (outcomes, metrics) =
+            svc.run_batch_with_timeout_ms((0..3).map(|i| gen_job(i, 300)).collect(), 120_000);
+        assert!(outcomes.iter().all(|o| o.error.is_none()), "{outcomes:?}");
+        assert_eq!(metrics.jobs_timed_out.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stored_graphs_flow_through_the_worker_pool() {
+        // LOAD → MATCH → UPDATE → MATCH → DROP as queued jobs: the store
+        // is shared by every worker's executor clone. One worker keeps the
+        // verbs ordered (with several, a MATCH could race ahead of its
+        // LOAD — callers sequence dependent verbs themselves).
+        use crate::coordinator::job::{GraphSource, MatchJob};
+        use crate::dynamic::DeltaBatch;
+        use std::sync::atomic::Ordering;
+        let svc = Service::start(1, 8, None);
+        let jobs = vec![
+            MatchJob::load_graph(
+                0,
+                "t",
+                GraphSource::Generate { family: Family::Uniform, n: 300, seed: 5, permute: false },
+            ),
+            MatchJob::new(1, GraphSource::Stored("t".into())),
+            MatchJob::update_graph(2, "t", DeltaBatch::new().add_column(vec![0, 1, 2])),
+            MatchJob::new(3, GraphSource::Stored("t".into())),
+            MatchJob::drop_graph(4, "t"),
+        ];
+        assert!(svc.store().is_empty());
+        let (outcomes, metrics) = svc.run_batch(jobs);
+        assert_eq!(outcomes.len(), 5);
+        for o in &outcomes {
+            assert!(o.error.is_none(), "job {}: {:?}", o.job_id, o.error);
+        }
+        assert!(outcomes[1].certified && outcomes[3].certified);
+        assert_eq!(metrics.jobs_updated.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.graphs_loaded.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.graphs_dropped.load(Ordering::Relaxed), 1);
     }
 
     #[test]

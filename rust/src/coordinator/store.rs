@@ -1,0 +1,233 @@
+//! Server-side graph store: named [`DynamicGraph`] handles with a cached
+//! matching and per-graph statistics. This is what makes the incremental
+//! subsystem reachable over the wire — `LOAD` installs a graph once,
+//! `UPDATE` ships [`crate::dynamic::DeltaBatch`]es against it, `MATCH`
+//! re-serves the cached maximum in one quiet phase, `DROP` evicts.
+//!
+//! Locking is two-level: a short-lived map lock resolves names to
+//! entries, and each entry carries its own mutex held for the duration of
+//! an update's apply + repair — so long repairs on one graph never block
+//! traffic on another, and updates to one graph serialize (the matching
+//! cache is only meaningful under per-graph ordering).
+
+use crate::dynamic::{DeltaBatch, DynamicGraph};
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::Matching;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The maintained *maximum* matching for one stored graph, keyed to the
+/// graph version it was computed against (a stale version is never served
+/// as a warm start — `UPDATE` is the only path that advances both
+/// together, and interrupted updates roll back rather than cache partial
+/// results, so a cached matching is always a completed maximum).
+#[derive(Debug, Clone)]
+pub struct CachedMatching {
+    pub matching: Matching,
+    /// `DynamicGraph::version` at computation time
+    pub version: u64,
+}
+
+/// Per-graph lifetime counters, reported by the server's `STATS`-adjacent
+/// update replies and asserted by the e2e tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GraphStats {
+    pub updates: u64,
+    pub edges_inserted: u64,
+    pub edges_deleted: u64,
+    pub cols_added: u64,
+    pub repairs: u64,
+}
+
+/// One stored graph: overlay graph + cached matching + stats.
+#[derive(Debug)]
+pub struct StoreEntry {
+    pub graph: DynamicGraph,
+    pub matching: Option<CachedMatching>,
+    pub stats: GraphStats,
+}
+
+/// One consistent read of a stored graph for a `MATCH name=…`: the entry
+/// handle (so a successful result can be written back through the exact
+/// incarnation the snapshot came from, version-guarded), the live CSR,
+/// its version, and the warm-start matching (withheld when stale).
+pub struct MatchView {
+    pub entry: Arc<Mutex<StoreEntry>>,
+    pub graph: Arc<BipartiteCsr>,
+    pub version: u64,
+    pub cached: Option<CachedMatching>,
+}
+
+/// Name → entry map. Cheap to clone the handles out of; see module docs
+/// for the locking discipline.
+#[derive(Default)]
+pub struct GraphStore {
+    inner: Mutex<HashMap<String, Arc<Mutex<StoreEntry>>>>,
+    /// every `load` takes a fresh 2^32-wide version range, so two
+    /// incarnations of the same name can never present the same graph
+    /// version (the guard [`GraphStore::cache_into`] relies on)
+    next_version_base: std::sync::atomic::AtomicU64,
+}
+
+impl GraphStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install (or replace) a named graph. Replacement discards the old
+    /// entry wholesale — cached matching and stats included — because a
+    /// re-`LOAD` is a new graph, not an update. Returns whether a
+    /// previous entry was replaced.
+    pub fn load(&self, name: &str, g: Arc<BipartiteCsr>) -> bool {
+        let base = self
+            .next_version_base
+            .fetch_add(1 << 32, std::sync::atomic::Ordering::Relaxed);
+        let entry = Arc::new(Mutex::new(StoreEntry {
+            graph: DynamicGraph::from_arc(g).with_version_base(base),
+            matching: None,
+            stats: GraphStats::default(),
+        }));
+        self.inner.lock().unwrap().insert(name.to_string(), entry).is_some()
+    }
+
+    /// Remove a named graph. Returns whether it existed.
+    pub fn drop_graph(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().remove(name).is_some()
+    }
+
+    /// The entry handle for `name` (callers lock it themselves — the
+    /// executor's `UPDATE` path holds it across apply + repair).
+    pub fn entry(&self, name: &str) -> Option<Arc<Mutex<StoreEntry>>> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    /// Everything a `MATCH name=…` needs, under one short entry lock —
+    /// see [`MatchView`]. A matching cached against any *other* version
+    /// is withheld — it may reference edges that no longer exist
+    /// (`UPDATE` is the only flow that advances the graph, and it
+    /// re-caches in the same lock, so in practice the versions only
+    /// diverge if an entry is mutated by hand).
+    pub fn graph_for_match(&self, name: &str) -> Option<MatchView> {
+        let entry = self.entry(name)?;
+        let (graph, version, cached) = {
+            let mut e = entry.lock().unwrap();
+            let g = e.graph.snapshot();
+            let version = e.graph.version();
+            let cached = e.matching.clone().filter(|c| c.version == version);
+            (g, version, cached)
+        };
+        Some(MatchView { entry, graph, version, cached })
+    }
+
+    /// Write a freshly computed maximum back as `entry`'s cache — only if
+    /// the graph hasn't moved since `version` was read (a concurrent
+    /// `UPDATE` wins; its repaired matching is the newer truth). Takes the
+    /// entry *handle*, never a name: re-resolving by name could hand a
+    /// racing re-`LOAD`'s fresh incarnation a matching computed on a graph
+    /// it never held (the version ranges are disjoint, so that write would
+    /// be rejected anyway — but writing through the handle makes the
+    /// target unambiguous: an orphaned entry absorbs the write harmlessly).
+    pub fn cache_into(entry: &Arc<Mutex<StoreEntry>>, matching: Matching, version: u64) {
+        let mut e = entry.lock().unwrap();
+        if e.graph.version() == version {
+            e.matching = Some(CachedMatching { matching, version });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored graph names, sorted (for `GRAPHS`-style listings and tests).
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+
+    fn g22() -> Arc<BipartiteCsr> {
+        Arc::new(from_edges(2, 2, &[(0, 0), (1, 1)]))
+    }
+
+    #[test]
+    fn load_match_drop_lifecycle() {
+        let store = GraphStore::new();
+        assert!(store.is_empty());
+        assert!(!store.load("a", g22()), "first load is not a replacement");
+        let v_first = store.graph_for_match("a").unwrap().version;
+        assert!(store.load("a", g22()), "second load replaces");
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.names(), vec!["a".to_string()]);
+        let view = store.graph_for_match("a").unwrap();
+        let (g, version, cached) = (view.graph, view.version, view.cached);
+        assert_eq!((g.nr, g.nc), (2, 2));
+        assert_ne!(
+            version, v_first,
+            "every incarnation must live in its own version range"
+        );
+        assert!(cached.is_none());
+        assert!(store.drop_graph("a"));
+        assert!(!store.drop_graph("a"));
+        assert!(store.graph_for_match("a").is_none());
+        assert!(store.entry("nope").is_none());
+    }
+
+    #[test]
+    fn cache_into_is_version_guarded() {
+        let store = GraphStore::new();
+        store.load("g", g22());
+        let entry = store.entry("g").unwrap();
+        let v0 = entry.lock().unwrap().graph.version();
+        let m = Matching::from_cmatch(2, vec![0, 1]);
+        GraphStore::cache_into(&entry, m.clone(), v0);
+        let cached = store.graph_for_match("g").unwrap().cached.unwrap();
+        assert_eq!(cached.matching, m);
+        // a write against a stale version must be ignored
+        entry
+            .lock()
+            .unwrap()
+            .graph
+            .apply(&crate::dynamic::DeltaBatch::new().delete(0, 0));
+        GraphStore::cache_into(&entry, Matching::empty(2, 2), v0);
+        let view = store.graph_for_match("g").unwrap();
+        assert_eq!(view.version, v0 + 1);
+        assert!(
+            view.cached.is_none(),
+            "a matching cached for an older graph version must be withheld"
+        );
+        // replacement clears the cache
+        store.load("g", g22());
+        assert!(store.graph_for_match("g").unwrap().cached.is_none());
+    }
+
+    #[test]
+    fn reload_cannot_be_poisoned_by_the_old_incarnations_matching() {
+        // regression: version 0 used to recur on every re-LOAD, so a
+        // MATCH racing a re-LOAD could cache the OLD graph's matching as
+        // the NEW graph's warm start — version ranges are now disjoint,
+        // and write-backs go through the entry handle captured at read
+        // time, so a racing writer's result lands on the orphan
+        let store = GraphStore::new();
+        store.load("g", g22());
+        let old_entry = store.entry("g").unwrap();
+        let v_old = old_entry.lock().unwrap().graph.version();
+        store.load("g", g22());
+        GraphStore::cache_into(&old_entry, Matching::from_cmatch(2, vec![0, 1]), v_old);
+        let view = store.graph_for_match("g").unwrap();
+        assert_ne!(v_old, view.version);
+        assert!(
+            view.cached.is_none(),
+            "a write-back against the old incarnation must not reach the new one"
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! Delta batches: the unit of change an online client ships to a stored
+//! graph. Three op kinds cover the workload the service sees — edge
+//! insertion, edge deletion, and column (vertex) addition — batched so the
+//! repair machinery amortizes one seeded augmentation pass over the whole
+//! batch instead of paying per-edge.
+//!
+//! The wire format (server `UPDATE` verb) is deliberately flat:
+//! `add=r:c,r:c del=r:c addcols=r;r|r` — comma-separated `row:col` pairs
+//! for edges, and `|`-separated `;`-lists of neighbor rows for new
+//! columns (an empty segment adds an isolated column).
+
+/// One mutation of a stored bipartite graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeltaOp {
+    /// Add edge (r, c). A no-op if the edge already exists.
+    InsertEdge { r: u32, c: u32 },
+    /// Remove edge (r, c). A no-op if the edge does not exist.
+    DeleteEdge { r: u32, c: u32 },
+    /// Append a new column vertex adjacent to `rows` (may be empty).
+    /// The new column's id is the graph's `nc` at application time.
+    AddColumn { rows: Vec<u32> },
+}
+
+/// An ordered batch of mutations, applied atomically to a
+/// [`super::DynamicGraph`] (one [`super::ApplyReport`] out, one repair).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DeltaBatch {
+    pub ops: Vec<DeltaOp>,
+}
+
+impl DeltaBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(mut self, r: u32, c: u32) -> Self {
+        self.ops.push(DeltaOp::InsertEdge { r, c });
+        self
+    }
+
+    pub fn delete(mut self, r: u32, c: u32) -> Self {
+        self.ops.push(DeltaOp::DeleteEdge { r, c });
+        self
+    }
+
+    pub fn add_column(mut self, rows: Vec<u32>) -> Self {
+        self.ops.push(DeltaOp::AddColumn { rows });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Build a batch from the server's `UPDATE` fields. `None` fields and
+    /// empty strings contribute nothing; malformed fields are rejected
+    /// whole (the request never reaches the store half-parsed).
+    pub fn from_wire(
+        add: Option<&str>,
+        del: Option<&str>,
+        addcols: Option<&str>,
+    ) -> Result<DeltaBatch, String> {
+        let mut batch = DeltaBatch::new();
+        for (r, c) in parse_edge_pairs(add.unwrap_or(""))? {
+            batch.ops.push(DeltaOp::InsertEdge { r, c });
+        }
+        for (r, c) in parse_edge_pairs(del.unwrap_or(""))? {
+            batch.ops.push(DeltaOp::DeleteEdge { r, c });
+        }
+        if let Some(cols) = addcols {
+            for rows in parse_columns(cols)? {
+                batch.ops.push(DeltaOp::AddColumn { rows });
+            }
+        }
+        Ok(batch)
+    }
+}
+
+/// Parse `"r:c,r:c,..."` (empty string → no pairs).
+pub fn parse_edge_pairs(s: &str) -> Result<Vec<(u32, u32)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        if part.is_empty() {
+            continue;
+        }
+        let (r, c) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad edge {part:?} (want row:col)"))?;
+        let r: u32 = r.parse().map_err(|_| format!("bad row in {part:?}"))?;
+        let c: u32 = c.parse().map_err(|_| format!("bad col in {part:?}"))?;
+        out.push((r, c));
+    }
+    Ok(out)
+}
+
+/// Parse `"r;r|r|..."`: one new column per `|`-segment, each a
+/// `;`-separated neighbor-row list (an empty segment is an isolated
+/// column). An empty string adds nothing.
+pub fn parse_columns(s: &str) -> Result<Vec<Vec<u32>>, String> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::new();
+    for seg in s.split('|') {
+        let mut rows = Vec::new();
+        for tok in seg.split(';') {
+            if tok.is_empty() {
+                continue;
+            }
+            rows.push(tok.parse::<u32>().map_err(|_| format!("bad row {tok:?} in addcols"))?);
+        }
+        out.push(rows);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_ops_in_order() {
+        let b = DeltaBatch::new().insert(1, 2).delete(3, 4).add_column(vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert_eq!(b.ops[0], DeltaOp::InsertEdge { r: 1, c: 2 });
+        assert_eq!(b.ops[1], DeltaOp::DeleteEdge { r: 3, c: 4 });
+        assert_eq!(b.ops[2], DeltaOp::AddColumn { rows: vec![0, 1] });
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let b = DeltaBatch::from_wire(Some("0:1,2:3"), Some("4:5"), Some("1;2|3|")).unwrap();
+        assert_eq!(
+            b.ops,
+            vec![
+                DeltaOp::InsertEdge { r: 0, c: 1 },
+                DeltaOp::InsertEdge { r: 2, c: 3 },
+                DeltaOp::DeleteEdge { r: 4, c: 5 },
+                DeltaOp::AddColumn { rows: vec![1, 2] },
+                DeltaOp::AddColumn { rows: vec![3] },
+                DeltaOp::AddColumn { rows: vec![] },
+            ]
+        );
+    }
+
+    #[test]
+    fn wire_empty_fields_are_empty_batches() {
+        assert!(DeltaBatch::from_wire(None, None, None).unwrap().is_empty());
+        assert!(DeltaBatch::from_wire(Some(""), Some(""), None).unwrap().is_empty());
+    }
+
+    #[test]
+    fn wire_malformed_rejected() {
+        assert!(DeltaBatch::from_wire(Some("1-2"), None, None).is_err());
+        assert!(DeltaBatch::from_wire(Some("x:1"), None, None).is_err());
+        assert!(DeltaBatch::from_wire(None, Some("1:y"), None).is_err());
+        assert!(DeltaBatch::from_wire(None, None, Some("1;q")).is_err());
+    }
+
+    #[test]
+    fn parse_columns_isolated() {
+        assert_eq!(parse_columns("").unwrap(), Vec::<Vec<u32>>::new());
+        // a single empty segment is one isolated column
+        let two = parse_columns("|").unwrap();
+        assert_eq!(two, vec![Vec::<u32>::new(), Vec::<u32>::new()]);
+    }
+}

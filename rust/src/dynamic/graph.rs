@@ -1,0 +1,433 @@
+//! A mutable adjacency overlay over an immutable [`BipartiteCsr`] base.
+//!
+//! `BipartiteCsr` is the right shape for the kernels (dense pointer
+//! arrays, both-side transpose) and exactly the wrong shape for edits, so
+//! the dynamic layer splits the two concerns: the `base` snapshot stays
+//! frozen while per-column insert/delete sets absorb churn. The *live*
+//! graph is `base ∖ deleted ∪ inserted`; [`DynamicGraph::snapshot`]
+//! materializes (and memoizes) it as a CSR for the matchers, and once the
+//! overlay grows past a threshold fraction of the base the whole thing is
+//! rebuilt into a fresh base — the classic log-structured trade: O(batch)
+//! edits, O(E) compaction amortized over many batches.
+
+use super::delta::{DeltaBatch, DeltaOp};
+use crate::graph::builder::EdgeList;
+use crate::graph::csr::BipartiteCsr;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+/// Overlay compaction threshold: rebuild the base CSR when the overlay
+/// holds more than this fraction of the base's edges.
+pub const DEFAULT_REBUILD_THRESHOLD: f64 = 0.25;
+
+/// Net effect of one [`DynamicGraph::apply`] call, *relative to the graph
+/// as it stood before the batch* (an edge inserted and then deleted by
+/// the same batch appears in neither list). This is what
+/// [`super::repair`] seeds from.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ApplyReport {
+    /// edges present after the batch that were absent before, `(r, c)`
+    pub inserted: Vec<(u32, u32)>,
+    /// edges absent after the batch that were present before, `(r, c)`
+    pub deleted: Vec<(u32, u32)>,
+    /// ids of columns appended by the batch
+    pub added_cols: Vec<u32>,
+    /// ops (or rows of an `AddColumn`) dropped as out-of-range or no-ops
+    pub rejected: usize,
+    /// whether this apply tripped a base rebuild
+    pub rebuilt: bool,
+}
+
+impl ApplyReport {
+    /// Nothing changed structurally (every op was a no-op or rejected).
+    pub fn is_noop(&self) -> bool {
+        self.inserted.is_empty() && self.deleted.is_empty() && self.added_cols.is_empty()
+    }
+}
+
+/// A server-resident mutable bipartite graph: frozen CSR base + overlay.
+#[derive(Debug, Clone)]
+pub struct DynamicGraph {
+    base: Arc<BipartiteCsr>,
+    /// col → rows added on top of the base (includes all edges of columns
+    /// appended past `base.nc`)
+    ins: BTreeMap<u32, BTreeSet<u32>>,
+    /// col → base rows masked out
+    del: BTreeMap<u32, BTreeSet<u32>>,
+    ins_count: usize,
+    del_count: usize,
+    nr: usize,
+    nc: usize,
+    /// bumped on every structural change; cached matchings are keyed on it
+    version: u64,
+    rebuilds: u64,
+    rebuild_threshold: f64,
+    /// memoized live-CSR materialization, invalidated by `apply`
+    cache: Option<Arc<BipartiteCsr>>,
+}
+
+impl DynamicGraph {
+    pub fn new(base: BipartiteCsr) -> Self {
+        Self::from_arc(Arc::new(base))
+    }
+
+    pub fn from_arc(base: Arc<BipartiteCsr>) -> Self {
+        let (nr, nc) = (base.nr, base.nc);
+        Self {
+            base,
+            ins: BTreeMap::new(),
+            del: BTreeMap::new(),
+            ins_count: 0,
+            del_count: 0,
+            nr,
+            nc,
+            version: 0,
+            rebuilds: 0,
+            rebuild_threshold: DEFAULT_REBUILD_THRESHOLD,
+            cache: None,
+        }
+    }
+
+    pub fn with_rebuild_threshold(mut self, threshold: f64) -> Self {
+        self.rebuild_threshold = threshold.max(0.0);
+        self
+    }
+
+    /// Start the structural version counter at `base`. The graph store
+    /// hands every `LOAD` a distinct base so versions never collide
+    /// across re-loads of the same name — a matching cached against the
+    /// old incarnation can then never pass the new one's version guard.
+    pub fn with_version_base(mut self, base: u64) -> Self {
+        self.version = base;
+        self
+    }
+
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    pub fn nc(&self) -> usize {
+        self.nc
+    }
+
+    /// Live edge count (base minus masked plus overlay).
+    pub fn n_edges(&self) -> usize {
+        self.base.n_edges() - self.del_count + self.ins_count
+    }
+
+    /// Structural version; bumped by every [`DynamicGraph::apply`] that
+    /// changes anything.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Overlay size (inserted + masked edges) — what the rebuild
+    /// threshold is measured against.
+    pub fn overlay_edits(&self) -> usize {
+        self.ins_count + self.del_count
+    }
+
+    /// Live membership test.
+    pub fn has_edge(&self, r: u32, c: u32) -> bool {
+        if (r as usize) >= self.nr || (c as usize) >= self.nc {
+            return false;
+        }
+        if let Some(set) = self.ins.get(&c) {
+            if set.contains(&r) {
+                return true;
+            }
+        }
+        if (c as usize) < self.base.nc && self.base.has_edge(r as usize, c as usize) {
+            return !self.del.get(&c).is_some_and(|s| s.contains(&r));
+        }
+        false
+    }
+
+    /// Apply a batch in op order; returns the *net* structural change.
+    /// Out-of-range edges (and rows of an `AddColumn`) are counted under
+    /// `rejected` rather than failing the batch — the service treats a
+    /// delta stream as best-effort per element, all-or-nothing per field
+    /// parse (see `DeltaBatch::from_wire`).
+    pub fn apply(&mut self, batch: &DeltaBatch) -> ApplyReport {
+        let mut net_ins: BTreeSet<(u32, u32)> = BTreeSet::new();
+        let mut net_del: BTreeSet<(u32, u32)> = BTreeSet::new();
+        let mut added_cols = Vec::new();
+        let mut rejected = 0usize;
+        for op in &batch.ops {
+            match op {
+                DeltaOp::InsertEdge { r, c } => {
+                    let (r, c) = (*r, *c);
+                    if (r as usize) >= self.nr || (c as usize) >= self.nc || self.has_edge(r, c) {
+                        rejected += 1;
+                        continue;
+                    }
+                    self.insert_live(r, c);
+                    // net bookkeeping: re-inserting an edge this batch
+                    // deleted restores the pre-batch state
+                    if !net_del.remove(&(r, c)) {
+                        net_ins.insert((r, c));
+                    }
+                }
+                DeltaOp::DeleteEdge { r, c } => {
+                    let (r, c) = (*r, *c);
+                    if !self.has_edge(r, c) {
+                        rejected += 1;
+                        continue;
+                    }
+                    self.delete_live(r, c);
+                    if !net_ins.remove(&(r, c)) {
+                        net_del.insert((r, c));
+                    }
+                }
+                DeltaOp::AddColumn { rows } => {
+                    let c = self.nc as u32;
+                    self.nc += 1;
+                    let mut set = BTreeSet::new();
+                    for &r in rows {
+                        if (r as usize) < self.nr {
+                            if set.insert(r) {
+                                net_ins.insert((r, c));
+                            }
+                        } else {
+                            rejected += 1;
+                        }
+                    }
+                    self.ins_count += set.len();
+                    self.ins.insert(c, set);
+                    added_cols.push(c);
+                }
+            }
+        }
+        let changed = !(net_ins.is_empty() && net_del.is_empty() && added_cols.is_empty());
+        let mut report = ApplyReport {
+            inserted: net_ins.into_iter().collect(),
+            deleted: net_del.into_iter().collect(),
+            added_cols,
+            rejected,
+            rebuilt: false,
+        };
+        if changed {
+            self.version += 1;
+            self.cache = None;
+            report.rebuilt = self.maybe_rebuild();
+        }
+        report
+    }
+
+    fn insert_live(&mut self, r: u32, c: u32) {
+        // a masked base edge comes back by unmasking; anything else goes
+        // into the overlay
+        if (c as usize) < self.base.nc && self.base.has_edge(r as usize, c as usize) {
+            let set = self.del.get_mut(&c).expect("absent base edge must be masked");
+            assert!(set.remove(&r), "absent base edge must be masked");
+            if set.is_empty() {
+                self.del.remove(&c);
+            }
+            self.del_count -= 1;
+        } else if self.ins.entry(c).or_default().insert(r) {
+            self.ins_count += 1;
+        }
+    }
+
+    fn delete_live(&mut self, r: u32, c: u32) {
+        if let Some(set) = self.ins.get_mut(&c) {
+            if set.remove(&r) {
+                if set.is_empty() && (c as usize) < self.base.nc {
+                    self.ins.remove(&c);
+                }
+                self.ins_count -= 1;
+                return;
+            }
+        }
+        if self.del.entry(c).or_default().insert(r) {
+            self.del_count += 1;
+        }
+    }
+
+    fn maybe_rebuild(&mut self) -> bool {
+        let budget = (self.base.n_edges().max(64) as f64 * self.rebuild_threshold) as usize;
+        if self.overlay_edits() <= budget {
+            return false;
+        }
+        self.base = Arc::new(self.materialize());
+        self.ins.clear();
+        self.del.clear();
+        self.ins_count = 0;
+        self.del_count = 0;
+        self.rebuilds += 1;
+        true
+    }
+
+    /// Materialize the live graph as a fresh CSR (O(E)).
+    fn materialize(&self) -> BipartiteCsr {
+        let mut el = EdgeList::with_capacity(self.nr, self.nc, self.n_edges());
+        for c in 0..self.nc {
+            let cu = c as u32;
+            if c < self.base.nc {
+                let masked = self.del.get(&cu);
+                for &r in self.base.col_neighbors(c) {
+                    if !masked.is_some_and(|s| s.contains(&r)) {
+                        el.add(r as usize, c);
+                    }
+                }
+            }
+            if let Some(set) = self.ins.get(&cu) {
+                for &r in set {
+                    el.add(r as usize, c);
+                }
+            }
+        }
+        el.build()
+    }
+
+    /// The live graph as a CSR the matchers can run on. Clean graphs hand
+    /// back the base for free; dirty ones materialize once and memoize
+    /// until the next apply.
+    pub fn snapshot(&mut self) -> Arc<BipartiteCsr> {
+        if self.overlay_edits() == 0 && self.nc == self.base.nc {
+            return self.base.clone();
+        }
+        if let Some(c) = &self.cache {
+            return c.clone();
+        }
+        let g = Arc::new(self.materialize());
+        self.cache = Some(g.clone());
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+
+    fn small() -> DynamicGraph {
+        // 3 rows x 3 cols, diagonal + (0,1)
+        DynamicGraph::new(from_edges(3, 3, &[(0, 0), (1, 1), (2, 2), (0, 1)]))
+    }
+
+    #[test]
+    fn insert_delete_roundtrip() {
+        let mut g = small();
+        assert_eq!(g.n_edges(), 4);
+        let rep = g.apply(&DeltaBatch::new().insert(2, 0).delete(0, 1));
+        assert_eq!(rep.inserted, vec![(2, 0)]);
+        assert_eq!(rep.deleted, vec![(0, 1)]);
+        assert_eq!(rep.rejected, 0);
+        assert!(!rep.is_noop());
+        assert_eq!(g.n_edges(), 4);
+        assert!(g.has_edge(2, 0));
+        assert!(!g.has_edge(0, 1));
+        assert_eq!(g.version(), 1);
+        let s = g.snapshot();
+        assert!(s.validate().is_ok());
+        assert!(s.has_edge(2, 0) && !s.has_edge(0, 1));
+        // undo both: back to the base edge set, version still advances
+        let rep = g.apply(&DeltaBatch::new().delete(2, 0).insert(0, 1));
+        assert_eq!(rep.inserted, vec![(0, 1)]);
+        assert_eq!(rep.deleted, vec![(2, 0)]);
+        assert_eq!(g.n_edges(), 4);
+        assert_eq!(g.overlay_edits(), 0, "masking must cancel, not accumulate");
+        assert_eq!(g.version(), 2);
+    }
+
+    #[test]
+    fn net_report_cancels_within_one_batch() {
+        let mut g = small();
+        let rep = g.apply(&DeltaBatch::new().insert(2, 0).delete(2, 0).delete(1, 1).insert(1, 1));
+        assert!(rep.is_noop(), "{rep:?}");
+        assert_eq!(g.n_edges(), 4);
+        assert_eq!(g.overlay_edits(), 0);
+    }
+
+    #[test]
+    fn noops_and_out_of_range_rejected() {
+        let mut g = small();
+        let rep = g.apply(
+            &DeltaBatch::new()
+                .insert(0, 0) // already present
+                .delete(2, 0) // absent
+                .insert(9, 0) // row out of range
+                .delete(0, 9), // col out of range
+        );
+        assert!(rep.is_noop());
+        assert_eq!(rep.rejected, 4);
+        assert_eq!(g.version(), 0, "no structural change, no version bump");
+    }
+
+    #[test]
+    fn add_column_appends_and_dedups() {
+        let mut g = small();
+        let rep = g.apply(&DeltaBatch::new().add_column(vec![1, 0, 1, 7]).add_column(vec![]));
+        assert_eq!(rep.added_cols, vec![3, 4]);
+        assert_eq!(rep.rejected, 1, "row 7 is out of range");
+        assert_eq!(rep.inserted, vec![(0, 3), (1, 3)]);
+        assert_eq!(g.nc(), 5);
+        assert_eq!(g.n_edges(), 6);
+        let s = g.snapshot();
+        assert_eq!(s.nc, 5);
+        assert_eq!(s.col_neighbors(3), &[0, 1]);
+        assert_eq!(s.col_degree(4), 0);
+        assert!(s.validate().is_ok());
+        // edges of a fresh column are live and deletable
+        let rep = g.apply(&DeltaBatch::new().delete(0, 3));
+        assert_eq!(rep.deleted, vec![(0, 3)]);
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn snapshot_is_memoized_and_invalidated() {
+        let mut g = small();
+        // clean: snapshot IS the base (no copy)
+        let s0 = g.snapshot();
+        assert!(Arc::ptr_eq(&s0, &g.snapshot()));
+        g.apply(&DeltaBatch::new().insert(2, 0));
+        let s1 = g.snapshot();
+        assert!(!Arc::ptr_eq(&s0, &s1));
+        assert!(Arc::ptr_eq(&s1, &g.snapshot()), "dirty snapshot must be memoized");
+        g.apply(&DeltaBatch::new().delete(2, 0));
+        let s2 = g.snapshot();
+        assert!(!Arc::ptr_eq(&s1, &s2), "apply must invalidate the memo");
+    }
+
+    #[test]
+    fn threshold_triggers_rebuild() {
+        // tiny threshold: any overlay trips compaction back into the base
+        let mut g = small().with_rebuild_threshold(0.0);
+        let rep = g.apply(&DeltaBatch::new().insert(2, 0).delete(1, 1));
+        assert!(rep.rebuilt);
+        assert_eq!(g.rebuilds(), 1);
+        assert_eq!(g.overlay_edits(), 0, "rebuild folds the overlay into the base");
+        assert!(g.has_edge(2, 0) && !g.has_edge(1, 1));
+        assert_eq!(g.n_edges(), 4);
+        let s = g.snapshot();
+        assert!(s.validate().is_ok());
+        // and with the default threshold a single edit does NOT rebuild
+        let mut g = small();
+        assert!(!g.apply(&DeltaBatch::new().insert(2, 0)).rebuilt);
+        assert_eq!(g.rebuilds(), 0);
+    }
+
+    #[test]
+    fn snapshot_equals_from_scratch_edge_set() {
+        let mut g = small();
+        g.apply(
+            &DeltaBatch::new()
+                .insert(2, 0)
+                .delete(0, 0)
+                .add_column(vec![2])
+                .insert(1, 3), // into the column just added? no: col 3 is the new one
+        );
+        // expected live set: base {(1,1),(2,2),(0,1)} + (2,0) + new col3 {2, 1}
+        let s = g.snapshot();
+        let mut got = s.edges();
+        got.sort_unstable();
+        let mut want = vec![(1, 1), (2, 2), (0, 1), (2, 0), (2, 3), (1, 3)];
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

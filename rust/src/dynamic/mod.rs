@@ -1,0 +1,51 @@
+//! Online (incremental) maximum-cardinality matching: the subsystem that
+//! turns the one-shot pipeline into a *maintained* service — graphs live
+//! server-side ([`crate::coordinator::store::GraphStore`]), clients ship
+//! [`DeltaBatch`] edits, and maximality is restored by [`repair`] instead
+//! of a from-scratch solve.
+//!
+//! ## Why repair seeds from exposed vertices only
+//!
+//! The source paper's §4 initialization discussion is the key observation:
+//! every tested algorithm is run *after* a common cheap-matching
+//! initialization (Duff, Kaya & Uçar's greedy), because the expensive part
+//! of maximum matching is closing the last few percent of deficiency —
+//! the augmenting-path search — not the bulk pairing. Incremental
+//! maintenance is that observation taken to its limit: after a small
+//! batch of edge insertions/deletions, the previous *maximum* matching is
+//! a near-perfect "initialization" for the new graph whose deficiency is
+//! bounded by the batch size (each deleted matched edge exposes one
+//! row/column pair; each insertion can admit at most one new augmenting
+//! path). So the search need not start from all `O(n)` unmatched columns
+//! the way a cheap-init run does — it starts from the handful of columns
+//! the batch actually exposed, which is exactly the shape
+//! [`crate::gpu::FrontierMode::Compacted`]'s worklist kernels are built
+//! for: the seed set becomes the first BFS frontier
+//! ([`crate::gpu::GpuMatcher::run_repair_with_clock`]), and per-launch
+//! work is `O(|seeds| + reached edges)` instead of `O(nc)` (cf. Łupińska's
+//! lock-free augmenting framework and Birn et al.'s batched parallel
+//! matching in PAPERS.md).
+//!
+//! Seeding is an optimization, never the correctness argument: an inserted
+//! edge between two matched vertices can enable an augmenting path whose
+//! endpoints the batch never touched, so every repair closes with full
+//! phases from all unmatched columns until Berge's condition certifies
+//! maximality. `rust/tests/dynamic_repair.rs` pins repair ≡ recompute
+//! across all generator families × backends × frontier modes.
+//!
+//! ## Layer map
+//!
+//! * [`delta`] — [`DeltaOp`]/[`DeltaBatch`] and their wire format;
+//! * [`graph`] — [`DynamicGraph`], the mutable overlay over
+//!   [`crate::graph::csr::BipartiteCsr`] with threshold-triggered rebuild;
+//! * [`repair`] — matching patch-up + seeded augmentation through the
+//!   standard [`crate::matching::algo::RunCtx`] execution API (pool,
+//!   deadline, cancellation all apply).
+
+pub mod delta;
+pub mod graph;
+pub mod repair;
+
+pub use delta::{DeltaBatch, DeltaOp};
+pub use graph::{ApplyReport, DynamicGraph};
+pub use repair::{repair, RepairSummary};

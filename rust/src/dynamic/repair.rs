@@ -1,0 +1,345 @@
+//! Incremental matching repair: after a [`DeltaBatch`] lands, only a few
+//! vertices change matching status, so instead of a from-scratch solve the
+//! maintained matching is patched (deleted matched edges unmatched,
+//! trivially matchable insertions joined) and the augmenting-path search
+//! is *seeded* from exactly the exposed columns — the sweet spot of the
+//! frontier-compacted BFS kernels (paper §4's cheap-init observation taken
+//! to its limit: the init here is the previous maximum matching, so the
+//! deficiency to repair is `O(|batch|)`, not `O(n)`).
+//!
+//! Correctness does not rest on the seeds: a seeded phase that goes quiet
+//! only proves the seeds are exhausted, so the drivers always close with
+//! full phases from every unmatched column until Berge's condition holds
+//! (an inserted edge between two *matched* vertices can enable a path no
+//! exposed vertex is an endpoint of — the closing phase is what catches
+//! it). The property tests in `rust/tests/dynamic_repair.rs` pin repair ≡
+//! recompute across every generator family, batch shape, and backend.
+
+use super::graph::ApplyReport;
+use crate::coordinator::registry;
+use crate::coordinator::spec::AlgoSpec;
+use crate::gpu::GpuMatcher;
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{RunCtx, RunResult};
+use crate::matching::{Matching, UNMATCHED};
+use crate::runtime::Engine;
+use std::sync::Arc;
+
+/// What one [`repair`] call did, beyond the run itself.
+#[derive(Debug, Clone)]
+pub struct RepairSummary {
+    /// the augmentation run (matching, stats, outcome) — same contract as
+    /// [`crate::matching::algo::MatchingAlgorithm::run`]
+    pub result: RunResult,
+    /// columns the seeded first phase started from
+    pub seeds: usize,
+    /// matched edges the deletions severed (each exposes a row + column)
+    pub dropped: usize,
+    /// inserted edges joined directly because both endpoints were free
+    pub joined: usize,
+    /// |M′| after drops and direct joins, before augmentation — the
+    /// repair's true starting point
+    pub start_cardinality: usize,
+}
+
+/// Patch `prev` (the matching maintained for the pre-batch graph) onto the
+/// post-batch graph `g` and restore maximality.
+///
+/// * deleted matched edges are unmatched; their columns seed the search;
+/// * inserted edges with both endpoints free are joined outright;
+/// * inserted edges with a free column seed the search, and appended
+///   columns seed themselves;
+/// * the remaining deficiency is closed by `spec`'s matcher: a GPU spec
+///   goes through [`GpuMatcher::run_repair_with_clock`] (the seed set
+///   becomes the first compacted BFS frontier), any other spec gets a
+///   host-side seeded augmentation pass and then runs normally from the
+///   patched matching — warm-started either way, honouring `ctx`'s
+///   deadline/cancellation and leasing scratch from its pool.
+///
+/// Errors on a `prev` that does not belong to `g`'s row space, and on
+/// specs that cannot build (XLA without an engine).
+pub fn repair(
+    g: &BipartiteCsr,
+    mut prev: Matching,
+    report: &ApplyReport,
+    spec: &AlgoSpec,
+    engine: Option<Arc<Engine>>,
+    ctx: &mut RunCtx,
+) -> Result<RepairSummary, String> {
+    if prev.nr() != g.nr {
+        return Err(format!("matching has {} rows, graph has {}", prev.nr(), g.nr));
+    }
+    if prev.nc() > g.nc {
+        return Err(format!("matching has {} cols, graph has only {}", prev.nc(), g.nc));
+    }
+    prev.cmatch.resize(g.nc, UNMATCHED);
+
+    let mut seeds: Vec<u32> = Vec::new();
+    let mut dropped = 0usize;
+    for &(r, c) in &report.deleted {
+        let (ru, cu) = (r as usize, c as usize);
+        if cu < g.nc && ru < g.nr && prev.cmatch[cu] == r as i32 {
+            prev.cmatch[cu] = UNMATCHED;
+            prev.rmatch[ru] = UNMATCHED;
+            dropped += 1;
+            seeds.push(c);
+        }
+    }
+    // the patched matching must be valid for the new graph before any
+    // kernel consumes it — a cheap structural guarantee at the trust
+    // boundary between store bookkeeping and the matchers
+    prev.validate(g).map_err(|e| format!("patched matching invalid: {e}"))?;
+
+    let mut joined = 0usize;
+    for &(r, c) in &report.inserted {
+        let (ru, cu) = (r as usize, c as usize);
+        if cu >= g.nc || ru >= g.nr {
+            continue; // same tolerance as the deleted-edge loop above
+        }
+        if prev.cmatch[cu] == UNMATCHED {
+            if prev.rmatch[ru] == UNMATCHED {
+                prev.join(ru, cu);
+                joined += 1;
+            } else {
+                seeds.push(c);
+            }
+        }
+        // col matched, row free: only reachable through a closing phase
+    }
+    seeds.extend_from_slice(&report.added_cols);
+    seeds.sort_unstable();
+    seeds.dedup();
+    // the bounds check also covers out-of-range added_cols ids, keeping
+    // the whole report surface panic-free for external callers
+    seeds.retain(|&c| {
+        (c as usize) < g.nc
+            && prev.cmatch[c as usize] == UNMATCHED
+            && g.col_degree(c as usize) > 0
+    });
+
+    let start_cardinality = prev.cardinality();
+    let n_seeds = seeds.len();
+    let result = match spec {
+        AlgoSpec::Gpu(cfg) => GpuMatcher::new(*cfg).run_repair(g, prev, &seeds, ctx),
+        other => {
+            // host-side seeded pass first (counts into ctx's stats sink,
+            // drained by the matcher's finish), then the matcher closes
+            // from the patched matching
+            let seeded_augs = augment_from_seeds(g, &mut prev, &seeds, ctx);
+            ctx.stats.augmentations += seeded_augs;
+            let algo = registry::build(other, engine)
+                .ok_or_else(|| registry::unavailable_msg(other))?;
+            algo.run(g, prev, ctx)
+        }
+    };
+    Ok(RepairSummary { result, seeds: n_seeds, dropped, joined, start_cardinality })
+}
+
+/// Sequential seeded augmentation: one alternating BFS per seed column,
+/// flipping the path if an unmatched row is reached. Scratch is leased
+/// from `ctx`'s pool once; per-seed "visited" state is a version stamp
+/// (bumped between seeds), so a seed's cost is its reached subgraph — not
+/// an `O(nr + nc)` reset — keeping the pass at the
+/// `O(|seeds| + reached edges)` the subsystem promises. The context's
+/// deadline/cancellation is checked between seeds (same inter-phase
+/// discipline as the matchers); a tripped pass stops early and leaves the
+/// follow-up matcher run to report the outcome. Returns the number of
+/// augmentations realized.
+fn augment_from_seeds(g: &BipartiteCsr, m: &mut Matching, seeds: &[u32], ctx: &RunCtx) -> u64 {
+    if seeds.is_empty() {
+        return 0;
+    }
+    // `pred` is only ever read behind a current-stamp `rstamp`, so it
+    // needs no reset at all
+    let mut pred = ctx.lease_i32(g.nr, -1);
+    let mut rstamp = ctx.lease_u32(g.nr, 0);
+    let mut cstamp = ctx.lease_u32(g.nc, 0);
+    let mut frontier = ctx.lease_worklist_u32(g.nc);
+    let mut next = ctx.lease_worklist_u32(g.nc);
+    let mut augmented = 0u64;
+    for (k, &c0) in seeds.iter().enumerate() {
+        if ctx.checkpoint().is_some() {
+            break; // deadline/cancellation: the matcher run reports it
+        }
+        let stamp = k as u32 + 1;
+        let c0 = c0 as usize;
+        if m.cmatch[c0] != UNMATCHED {
+            continue; // an earlier seed's path matched it
+        }
+        frontier.clear();
+        next.clear();
+        frontier.push(c0 as u32);
+        cstamp[c0] = stamp;
+        let mut endpoint = None;
+        'bfs: while !frontier.is_empty() {
+            for &c in &frontier {
+                for &r in g.col_neighbors(c as usize) {
+                    let ru = r as usize;
+                    if rstamp[ru] == stamp {
+                        continue;
+                    }
+                    rstamp[ru] = stamp;
+                    pred[ru] = c as i32;
+                    match m.rmatch[ru] {
+                        UNMATCHED => {
+                            endpoint = Some(ru);
+                            break 'bfs;
+                        }
+                        mc => {
+                            let mc = mc as usize;
+                            if cstamp[mc] != stamp {
+                                cstamp[mc] = stamp;
+                                next.push(mc as u32);
+                            }
+                        }
+                    }
+                }
+            }
+            std::mem::swap(&mut frontier, &mut next);
+            next.clear();
+        }
+        if let Some(mut r) = endpoint {
+            loop {
+                let c = pred[r] as usize;
+                let displaced = m.cmatch[c];
+                m.cmatch[c] = r as i32;
+                m.rmatch[r] = c as i32;
+                if displaced == UNMATCHED {
+                    break;
+                }
+                r = displaced as usize;
+            }
+            augmented += 1;
+        }
+    }
+    ctx.give_i32(pred);
+    ctx.give_u32(rstamp);
+    ctx.give_u32(cstamp);
+    ctx.give_u32(frontier);
+    ctx.give_u32(next);
+    augmented
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamic::{DeltaBatch, DynamicGraph};
+    use crate::graph::from_edges;
+    use crate::matching::reference_max_cardinality;
+
+    fn solve(g: &BipartiteCsr) -> Matching {
+        let algo = registry::build_named("hk", None).unwrap();
+        let m = algo.run_detached(g, Matching::empty(g.nr, g.nc)).matching;
+        m.certify(g).unwrap();
+        m
+    }
+
+    fn spec_cpu() -> AlgoSpec {
+        "pfp".parse().unwrap()
+    }
+
+    fn spec_gpu_fc() -> AlgoSpec {
+        "gpu:APFB-GPUBFS-WR-CT-FC".parse().unwrap()
+    }
+
+    #[test]
+    fn deletion_of_matched_edge_repairs_to_reference() {
+        // path c0-r0-c1-r1-c2-r2: perfect matching; delete a matched edge
+        let base = from_edges(3, 3, &[(0, 0), (0, 1), (1, 1), (1, 2), (2, 2)]);
+        let m = solve(&base);
+        let mut dg = DynamicGraph::new(base);
+        let (r, c) = (m.cmatch[1] as u32, 1u32);
+        let report = dg.apply(&DeltaBatch::new().delete(r, c));
+        let g = dg.snapshot();
+        let want = reference_max_cardinality(&g);
+        for spec in [spec_cpu(), spec_gpu_fc()] {
+            let s = repair(&g, m.clone(), &report, &spec, None, &mut RunCtx::detached())
+                .unwrap();
+            s.result.matching.certify(&g).unwrap();
+            assert_eq!(s.result.matching.cardinality(), want, "{spec}");
+            assert_eq!(s.dropped, 1);
+            assert!(s.seeds >= 1);
+            assert_eq!(s.start_cardinality, m.cardinality() - 1);
+        }
+    }
+
+    #[test]
+    fn insertion_between_matched_vertices_needs_the_closing_phase() {
+        // the seedless adversary: insert an edge whose endpoints are BOTH
+        // matched, creating an augmenting path whose endpoints (free c0,
+        // free r1) are untouched by the batch. Seeding alone cannot find
+        // it; the drivers' closing full phase must.
+        //   edges: (r0,c0) (r0,c1) (r2,c2) (r1,c2), M = {(r0,c1),(r2,c2)}
+        //   — maximum: free c0 reaches only r0, whose tree dead-ends.
+        //   insert (r2,c1): path c0 -r0= c1 -(new)- r2 =c2- r1 (free).
+        let base = from_edges(3, 3, &[(0, 0), (0, 1), (2, 2), (1, 2)]);
+        let mut m = Matching::empty(3, 3);
+        m.join(0, 1);
+        m.join(2, 2);
+        m.certify(&base).unwrap();
+        let mut dg = DynamicGraph::new(base);
+        let report = dg.apply(&DeltaBatch::new().insert(2, 1));
+        let g = dg.snapshot();
+        assert_eq!(reference_max_cardinality(&g), 3);
+        for spec in [spec_cpu(), spec_gpu_fc()] {
+            let s = repair(&g, m.clone(), &report, &spec, None, &mut RunCtx::detached())
+                .unwrap();
+            s.result.matching.certify(&g).unwrap();
+            assert_eq!(s.result.matching.cardinality(), 3, "{spec}");
+            assert_eq!(s.seeds, 0, "both endpoints matched: nothing to seed");
+        }
+    }
+
+    #[test]
+    fn both_free_insertions_join_without_search() {
+        let base = from_edges(2, 2, &[(0, 0)]);
+        let m = solve(&base); // {(r0,c0)}
+        let mut dg = DynamicGraph::new(base);
+        let report = dg.apply(&DeltaBatch::new().insert(1, 1));
+        let g = dg.snapshot();
+        let s = repair(&g, m, &report, &spec_cpu(), None, &mut RunCtx::detached()).unwrap();
+        assert_eq!(s.joined, 1);
+        assert_eq!(s.start_cardinality, 2);
+        assert_eq!(s.result.matching.cardinality(), 2);
+        s.result.matching.certify(&g).unwrap();
+    }
+
+    #[test]
+    fn added_column_seeds_itself() {
+        let base = from_edges(2, 1, &[(0, 0), (1, 0)]);
+        let m = solve(&base); // one of the two rows matched to c0
+        let mut dg = DynamicGraph::new(base);
+        let report = dg.apply(&DeltaBatch::new().add_column(vec![0, 1]));
+        let g = dg.snapshot();
+        for spec in [spec_cpu(), spec_gpu_fc()] {
+            let s = repair(&g, m.clone(), &report, &spec, None, &mut RunCtx::detached())
+                .unwrap();
+            s.result.matching.certify(&g).unwrap();
+            assert_eq!(s.result.matching.cardinality(), 2, "{spec}");
+        }
+    }
+
+    #[test]
+    fn mismatched_matching_rejected() {
+        let g = from_edges(2, 2, &[(0, 0)]);
+        let bad = Matching::empty(3, 2);
+        let report = ApplyReport::default();
+        assert!(repair(&g, bad, &report, &spec_cpu(), None, &mut RunCtx::detached()).is_err());
+    }
+
+    #[test]
+    fn xla_spec_without_engine_is_unavailable() {
+        let g = from_edges(1, 1, &[(0, 0)]);
+        let spec: AlgoSpec = "xla:apfb-full".parse().unwrap();
+        let err = repair(
+            &g,
+            Matching::empty(1, 1),
+            &ApplyReport::default(),
+            &spec,
+            None,
+            &mut RunCtx::detached(),
+        )
+        .unwrap_err();
+        assert!(err.contains("XLA engine"), "{err}");
+    }
+}

@@ -336,20 +336,28 @@ pub fn charge_frontier_scan(clock: &mut DeviceClock, mapping: ThreadMapping, n_i
 /// No [`WriteOrder`] applies: claim arbitration is the hardware race
 /// itself, and any interleaving is one of the legal schedules the serial
 /// orders enumerate.
+///
+/// `work` is the per-item work-unit record, caller-owned so its capacity
+/// survives across the hundreds of launches one run issues (the driver
+/// leases it from the [`crate::util::pool::WorkspacePool`] via `GpuState`
+/// instead of paying a `vec![0u64; n]` allocation per launch); it is
+/// cleared and refilled here, contents on entry don't matter.
 pub fn launch_parallel_racy<F>(
     clock: &mut DeviceClock,
     mapping: ThreadMapping,
     n: usize,
     nthreads: usize,
+    work: &mut Vec<u64>,
     body: F,
 ) where
     F: Fn(usize, usize) -> u64 + Sync,
 {
     clock.charge_launch();
     let nthreads = nthreads.max(1);
-    let mut work = vec![0u64; n];
+    work.clear();
+    work.resize(n, 0);
     {
-        let w = crate::util::pool::SharedSlice::new(&mut work);
+        let w = crate::util::pool::SharedSlice::new(work);
         let per = n.div_ceil(nthreads).max(1);
         crate::util::pool::fork_join(nthreads, |tid| {
             let lo = (tid * per).min(n);
@@ -370,12 +378,14 @@ pub fn launch_parallel_racy<F>(
 /// exactly `items`, charges [`FRONTIER_ITEM_COST`] per item plus the work
 /// the body reports (which should include [`COMPACTION_COST`] per
 /// worklist append and [`CAS_COST`] per atomic, like the serial
-/// [`launch_frontier`] bodies do).
+/// [`launch_frontier`] bodies do). `work` is the caller-owned per-item
+/// record, as in [`launch_parallel_racy`].
 pub fn launch_frontier_parallel<F>(
     clock: &mut DeviceClock,
     mapping: ThreadMapping,
     items: &[u32],
     nthreads: usize,
+    work: &mut Vec<u64>,
     body: F,
 ) where
     F: Fn(usize, usize) -> u64 + Sync,
@@ -383,9 +393,10 @@ pub fn launch_frontier_parallel<F>(
     clock.charge_launch();
     let n = items.len();
     let nthreads = nthreads.max(1);
-    let mut work = vec![0u64; n];
+    work.clear();
+    work.resize(n, 0);
     {
-        let w = crate::util::pool::SharedSlice::new(&mut work);
+        let w = crate::util::pool::SharedSlice::new(work);
         let per = n.div_ceil(nthreads).max(1);
         crate::util::pool::fork_join(nthreads, |tid| {
             let lo = (tid * per).min(n);
@@ -685,6 +696,9 @@ mod tests {
         // a body that issues no atomics must cost exactly what the serial
         // launch charges for the same per-item edge counts
         use std::sync::atomic::{AtomicU32, Ordering};
+        // one scratch buffer reused across every launch: reuse must not
+        // change the bill or the coverage
+        let mut scratch = Vec::new();
         for mapping in [ThreadMapping::Ct, ThreadMapping::Mt] {
             for n in [0usize, 1, 33, 1000, 70_000] {
                 let mut serial = DeviceClock::default();
@@ -692,7 +706,7 @@ mod tests {
                 for nthreads in [1usize, 4] {
                     let mut par = DeviceClock::default();
                     let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-                    launch_parallel_racy(&mut par, mapping, n, nthreads, |_tid, i| {
+                    launch_parallel_racy(&mut par, mapping, n, nthreads, &mut scratch, |_tid, i| {
                         seen[i].fetch_add(1, Ordering::Relaxed);
                         (i % 3) as u64 * EDGE_COST
                     });
@@ -707,13 +721,16 @@ mod tests {
     #[test]
     fn launch_frontier_parallel_matches_serial_frontier_cost() {
         let items: Vec<u32> = (0..777u32).map(|i| i * 3).collect();
+        let mut scratch = Vec::new();
         for mapping in [ThreadMapping::Ct, ThreadMapping::Mt] {
             let mut serial = DeviceClock::default();
             launch_frontier(&mut serial, mapping, WriteOrder::Forward, 0, &items, |c| {
                 (c % 5) as u64
             });
             let mut par = DeviceClock::default();
-            launch_frontier_parallel(&mut par, mapping, &items, 4, |_tid, c| (c % 5) as u64);
+            launch_frontier_parallel(&mut par, mapping, &items, 4, &mut scratch, |_tid, c| {
+                (c % 5) as u64
+            });
             assert_eq!(par.cycles, serial.cycles, "{mapping:?}");
             assert_eq!(par.parallel_cycles, serial.parallel_cycles);
         }

@@ -56,6 +56,13 @@ pub struct GpuState {
     pub cmatch: Vec<i32>,
     pub vertex_inserted: bool,
     pub augmenting_path_found: bool,
+    /// per-item work record for the racy parallel executors
+    /// ([`super::device::launch_parallel_racy`] and the frontier twin):
+    /// kept on the state so one buffer serves every launch of the run
+    /// (and, when leased via [`GpuState::new_in`], every run sharing the
+    /// pool) instead of a fresh `vec![0u64; n]` per launch. Serial runs
+    /// never touch it.
+    pub work: Vec<u64>,
 }
 
 impl GpuState {
@@ -68,6 +75,7 @@ impl GpuState {
             cmatch: init.cmatch.clone(),
             vertex_inserted: false,
             augmenting_path_found: false,
+            work: Vec::new(),
         }
     }
 
@@ -88,6 +96,9 @@ impl GpuState {
             cmatch: init.cmatch.clone(),
             vertex_inserted: false,
             augmenting_path_found: false,
+            // cap hint 0: serial runs stay allocation-free, parallel runs
+            // grow it once and the capacity then circulates via the shelf
+            work: pool.lease_u64_worklist(0),
         }
     }
 
@@ -98,6 +109,7 @@ impl GpuState {
         pool.give_i32(self.bfs_array);
         pool.give_i32(self.predecessor);
         pool.give_i32(self.root);
+        pool.give_u64(self.work);
         Matching { rmatch: self.rmatch, cmatch: self.cmatch }
     }
 
@@ -238,6 +250,68 @@ pub fn init_bfs_array_frontier(
     });
 }
 
+/// INITBFSARRAY for a *seeded* repair phase (`dynamic::repair`): instead
+/// of activating every unmatched column, only the given `seeds` (the
+/// columns a delta batch exposed) enter the BFS at `L0` — every other
+/// column, matched or not, starts at `L0 - 1` so the sweeps never expand
+/// it. Works in both frontier modes: under
+/// [`super::config::FrontierMode::Compacted`] pass `frontier` to receive
+/// the seed worklist (cleared first); under FullScan pass `None` and the
+/// full-scan kernels simply find no non-seed column at `L0`. Seeds that
+/// are out of range or already matched are skipped; duplicates are
+/// idempotent (the `bfs_array` check). Activations are charged
+/// [`COMPACTION_COST`] apiece on top of the reset scan. Serial regardless
+/// of `par_threads`, like [`init_bfs_array_frontier`], so worklist order
+/// is deterministic.
+pub fn init_bfs_array_seeded(
+    state: &mut GpuState,
+    cfg: LaunchCfg,
+    with_root: bool,
+    seeds: &[u32],
+    mut frontier: Option<&mut Vec<u32>>,
+    clock: &mut DeviceClock,
+) {
+    let nc = state.cmatch.len();
+    if let Some(f) = frontier.as_deref_mut() {
+        f.clear();
+    }
+    {
+        let bfs_array = &mut state.bfs_array;
+        let root = &mut state.root;
+        launch(clock, cfg.mapping, cfg.order, cfg.seed, nc, |c| {
+            bfs_array[c] = L0 - 1;
+            if with_root {
+                root[c] = -1;
+            }
+            0
+        });
+    }
+    let mut activated = 0u64;
+    {
+        let GpuState { bfs_array, root, cmatch, .. } = &mut *state;
+        for &c in seeds {
+            let c = c as usize;
+            if c < nc && cmatch[c] == -1 && bfs_array[c] != L0 {
+                bfs_array[c] = L0;
+                if with_root {
+                    root[c] = c as i32;
+                }
+                if let Some(f) = frontier.as_deref_mut() {
+                    f.push(c as u32);
+                }
+                activated += 1;
+            }
+        }
+    }
+    clock.charge_warp_work(activated * COMPACTION_COST, 0);
+    let nr = state.predecessor.len();
+    let predecessor = &mut state.predecessor;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, nr, |r| {
+        predecessor[r] = -1;
+        0
+    });
+}
+
 /// GPUBFS — Algorithm 2: one level expansion over all columns. With
 /// `cfg.par_threads > 1` the expansion runs host-parallel under the
 /// atomic substrate (level claims via CAS, charged [`CAS_COST`]); the
@@ -297,8 +371,9 @@ fn gpubfs_par(
     cfg: LaunchCfg,
     clock: &mut DeviceClock,
 ) -> u64 {
-    let GpuState { bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, .. } =
-        state;
+    let GpuState {
+        bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, work, ..
+    } = state;
     let edges_total = AtomicU64::new(0);
     let vi = AtomicBool::new(false);
     let apf = AtomicBool::new(false);
@@ -306,7 +381,7 @@ fn gpubfs_par(
         let bfs = AtomicCells::new(bfs_array);
         let pred = AtomicCells::new(predecessor);
         let rm = AtomicCells::new(rmatch);
-        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, |_tid, col_vertex| {
+        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, work, |_tid, col_vertex| {
             if bfs.load(col_vertex) != bfs_level {
                 return 0;
             }
@@ -434,12 +509,12 @@ fn gpubfs_frontier_par(
     let vi = AtomicBool::new(false);
     let apf = AtomicBool::new(false);
     {
-        let GpuState { bfs_array, predecessor, rmatch, .. } = state;
+        let GpuState { bfs_array, predecessor, rmatch, work, .. } = state;
         let bfs = AtomicCells::new(bfs_array);
         let pred = AtomicCells::new(predecessor);
         let rm = AtomicCells::new(rmatch);
         let out = SharedSlice::new(&mut bufs);
-        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, |tid, col_vertex| {
+        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, work, |tid, col_vertex| {
             debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
             let mut edges = 0u64;
             let mut work = 0u64;
@@ -568,6 +643,7 @@ fn gpubfs_wr_par(
         rmatch,
         vertex_inserted,
         augmenting_path_found,
+        work,
         ..
     } = state;
     let edges_total = AtomicU64::new(0);
@@ -578,7 +654,7 @@ fn gpubfs_wr_par(
         let pred = AtomicCells::new(predecessor);
         let rt = AtomicCells::new(root);
         let rm = AtomicCells::new(rmatch);
-        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, |_tid, col_vertex| {
+        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, work, |_tid, col_vertex| {
             if bfs.load(col_vertex) != bfs_level {
                 return 0;
             }
@@ -725,13 +801,13 @@ fn gpubfs_wr_frontier_par(
     let vi = AtomicBool::new(false);
     let apf = AtomicBool::new(false);
     {
-        let GpuState { bfs_array, predecessor, root, rmatch, .. } = state;
+        let GpuState { bfs_array, predecessor, root, rmatch, work, .. } = state;
         let bfs = AtomicCells::new(bfs_array);
         let pred = AtomicCells::new(predecessor);
         let rt = AtomicCells::new(root);
         let rm = AtomicCells::new(rmatch);
         let out = SharedSlice::new(&mut bufs);
-        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, |tid, col_vertex| {
+        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, work, |tid, col_vertex| {
             debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
             let my_root = rt.load(col_vertex);
             debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
@@ -1268,6 +1344,40 @@ mod tests {
         assert_eq!(fc.root, plain.root);
         assert_eq!(fc.predecessor, plain.predecessor);
         assert!(c2.cycles > c1.cycles, "worklist build must cost extra");
+    }
+
+    #[test]
+    fn init_bfs_array_seeded_activates_only_live_seeds() {
+        // c0 and c2 unmatched, c1 matched — but only c2 is seeded, so c0
+        // stays dormant (L0-1) even though it is free; matched, duplicate
+        // and out-of-range seeds are skipped
+        let g = from_edges(2, 3, &[(0, 0), (1, 1), (0, 2)]);
+        let mut init = Matching::empty(2, 3);
+        init.join(1, 1);
+        let (mut st, mut clock) = fresh(&g, &init);
+        let mut frontier = vec![7u32]; // stale contents must be cleared
+        init_bfs_array_seeded(
+            &mut st,
+            cfg(),
+            true,
+            &[2, 1, 2, 9],
+            Some(&mut frontier),
+            &mut clock,
+        );
+        assert_eq!(st.bfs_array, vec![L0 - 1, L0 - 1, L0]);
+        assert_eq!(st.root, vec![-1, -1, 2]);
+        assert!(st.predecessor.iter().all(|&p| p == -1));
+        assert_eq!(frontier, vec![2]);
+        // FullScan flavour: no worklist, same bfs_array
+        let (mut st2, mut c2) = fresh(&g, &init);
+        init_bfs_array_seeded(&mut st2, cfg(), false, &[2, 1, 2, 9], None, &mut c2);
+        assert_eq!(st2.bfs_array, st.bfs_array);
+        // empty seed set leaves every column dormant
+        let (mut st3, mut c3) = fresh(&g, &init);
+        let mut f3 = Vec::new();
+        init_bfs_array_seeded(&mut st3, cfg(), false, &[], Some(&mut f3), &mut c3);
+        assert!(st3.bfs_array.iter().all(|&b| b == L0 - 1));
+        assert!(f3.is_empty());
     }
 
     #[test]

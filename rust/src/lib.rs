@@ -48,9 +48,11 @@
 //! `graph` (CSR substrate + generators + MatrixMarket IO) → `matching`
 //! (representation, certification, the algorithm trait + `RunCtx`) →
 //! matchers (`seq`, `multicore`, `gpu` simulator + `gpu::xla_backend`) →
-//! `coordinator` (typed registry/router, executor, worker-pool service,
-//! TCP server) — with `harness` (paper tables/figures) and `apps` (BTF)
-//! on the side.
+//! `dynamic` (online matching: delta batches over a mutable CSR overlay,
+//! seeded incremental repair) → `coordinator` (typed registry/router,
+//! executor, worker-pool service, server-side graph store behind the
+//! `LOAD`/`UPDATE`/`DROP` verbs, TCP server) — with `harness` (paper
+//! tables/figures) and `apps` (BTF) on the side.
 //!
 //! ## Verifying
 //!
@@ -62,6 +64,7 @@
 pub mod apps;
 pub mod cli;
 pub mod coordinator;
+pub mod dynamic;
 pub mod gpu;
 pub mod graph;
 pub mod harness;

@@ -295,6 +295,7 @@ impl<T: Clone> Shelf<T> {
 pub struct WorkspacePool {
     i32s: Shelf<i32>,
     u32s: Shelf<u32>,
+    u64s: Shelf<u64>,
     bools: Shelf<bool>,
     leases: AtomicU64,
     reuses: AtomicU64,
@@ -330,6 +331,7 @@ impl WorkspacePool {
 
     lease_give!(lease_i32, give_i32, i32, i32s);
     lease_give!(lease_u32, give_u32, u32, u32s);
+    lease_give!(lease_u64, give_u64, u64, u64s);
     lease_give!(lease_bool, give_bool, bool, bools);
 
     /// Lease an *empty* u32 buffer with at least `cap_hint` capacity —
@@ -339,6 +341,22 @@ impl WorkspacePool {
     pub fn lease_u32_worklist(&self, cap_hint: usize) -> Vec<u32> {
         self.leases.fetch_add(1, Ordering::Relaxed);
         match self.u32s.lease(cap_hint) {
+            Some(mut v) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            None => Vec::with_capacity(cap_hint),
+        }
+    }
+
+    /// [`WorkspacePool::lease_u32_worklist`] for u64 scratch: an *empty*
+    /// buffer with at least `cap_hint` capacity. The device simulator's
+    /// racy launch executors lease their per-launch work array through
+    /// this (via `GpuState`), instead of `vec![0u64; n]` on every launch.
+    pub fn lease_u64_worklist(&self, cap_hint: usize) -> Vec<u64> {
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        match self.u64s.lease(cap_hint) {
             Some(mut v) => {
                 self.reuses.fetch_add(1, Ordering::Relaxed);
                 v.clear();
@@ -498,6 +516,27 @@ mod tests {
         let b = pool.lease_bool(32, false);
         assert_eq!(pool.reuses(), 1);
         assert!(b.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn workspace_pool_u64_worklist_reuses_capacity() {
+        // the racy-launch work array path: leased empty, given back with
+        // its grown capacity, and served from the shelf next time
+        let pool = WorkspacePool::new();
+        let mut w = pool.lease_u64_worklist(0);
+        assert!(w.is_empty());
+        assert_eq!(pool.reuses(), 0);
+        w.resize(256, 0);
+        let cap = w.capacity();
+        pool.give_u64(w);
+        let again = pool.lease_u64_worklist(64);
+        assert!(again.is_empty(), "worklist leases arrive empty");
+        assert_eq!(again.capacity(), cap);
+        assert_eq!(pool.reuses(), 1);
+        // independent of the u32 shelf
+        let v = pool.lease_u32_worklist(16);
+        assert!(v.is_empty());
+        assert_eq!(pool.reuses(), 1);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! The incremental subsystem's acceptance property: for every generator
+//! family and every update batch, `repair()` lands on exactly the
+//! cardinality a from-scratch run computes on the mutated graph — on the
+//! CPU path and the GPU path, under FullScan and Compacted frontiers —
+//! and the repaired matching certifies (valid + maximum, Berge).
+
+use bimatch::coordinator::registry;
+use bimatch::coordinator::spec::AlgoSpec;
+use bimatch::dynamic::{repair, DeltaBatch, DynamicGraph};
+use bimatch::graph::csr::BipartiteCsr;
+use bimatch::graph::from_edges;
+use bimatch::graph::gen::Family;
+use bimatch::matching::{reference_max_cardinality, Matching};
+use bimatch::util::qcheck::{arb_bipartite, forall, Config};
+use bimatch::util::rng::Xoshiro256;
+use bimatch::{MatchingAlgorithm, RunCtx};
+
+/// The four repair backends the acceptance criterion names: CPU, and GPU
+/// in both frontier modes (plus the APsB/improved-WR driver under
+/// compaction, whose endpoint encoding is the trickiest seeded path).
+fn repair_specs() -> Vec<AlgoSpec> {
+    ["pfp", "gpu:APFB-GPUBFS-WR-CT", "gpu:APFB-GPUBFS-WR-CT-FC", "gpu:APsB-GPUBFS-WR-CT-FC"]
+        .into_iter()
+        .map(|s| s.parse().unwrap())
+        .collect()
+}
+
+fn solve(g: &BipartiteCsr) -> Matching {
+    let algo = registry::build_named("hk", None).unwrap();
+    let m = algo.run_detached(g, Matching::empty(g.nr, g.nc)).matching;
+    m.certify(g).unwrap();
+    m
+}
+
+/// A random batch biased toward the interesting cases: deleting *matched*
+/// edges (exposes vertices), deleting arbitrary edges, inserting random
+/// pairs (duplicates become rejected no-ops), and appending columns.
+fn random_batch(rng: &mut Xoshiro256, g: &BipartiteCsr, m: &Matching, ops: usize) -> DeltaBatch {
+    let edges = g.edges();
+    let mut b = DeltaBatch::new();
+    for _ in 0..ops {
+        match rng.gen_range(5) {
+            0 | 1 => {
+                let matched: Vec<usize> = (0..g.nc).filter(|&c| m.cmatch[c] >= 0).collect();
+                if !matched.is_empty() {
+                    let c = matched[rng.gen_range(matched.len())];
+                    b = b.delete(m.cmatch[c] as u32, c as u32);
+                }
+            }
+            2 => {
+                if !edges.is_empty() {
+                    let (r, c) = edges[rng.gen_range(edges.len())];
+                    b = b.delete(r, c);
+                }
+            }
+            3 => {
+                let r = rng.gen_range(g.nr) as u32;
+                let c = rng.gen_range(g.nc) as u32;
+                b = b.insert(r, c);
+            }
+            _ => {
+                let k = rng.gen_range(3);
+                let rows: Vec<u32> = (0..k).map(|_| rng.gen_range(g.nr) as u32).collect();
+                b = b.add_column(rows);
+            }
+        }
+    }
+    b
+}
+
+/// Apply `batch`, then check every backend repairs `prev` to the
+/// reference cardinality of the mutated graph. Returns the mutated graph
+/// and one repaired matching to continue a maintained chain with.
+fn check_batch(
+    dg: &mut DynamicGraph,
+    prev: &Matching,
+    batch: &DeltaBatch,
+    label: &str,
+) -> (std::sync::Arc<BipartiteCsr>, Matching) {
+    let report = dg.apply(batch);
+    let g = dg.snapshot();
+    let want = reference_max_cardinality(&g);
+    let mut keep = None;
+    for spec in repair_specs() {
+        let s = repair(&g, prev.clone(), &report, &spec, None, &mut RunCtx::detached())
+            .unwrap_or_else(|e| panic!("{label} / {spec}: repair failed: {e}"));
+        s.result
+            .matching
+            .certify(&g)
+            .unwrap_or_else(|e| panic!("{label} / {spec}: {e}"));
+        assert_eq!(
+            s.result.matching.cardinality(),
+            want,
+            "{label} / {spec}: repair != from-scratch reference"
+        );
+        assert!(
+            s.start_cardinality <= s.result.matching.cardinality(),
+            "{label} / {spec}: repair may only grow the matching"
+        );
+        keep = Some(s.result.matching);
+    }
+    (g, keep.expect("at least one spec ran"))
+}
+
+#[test]
+fn repair_equals_recompute_on_every_family() {
+    // every generator family × a maintained chain of update batches
+    for (i, fam) in Family::ALL.iter().enumerate() {
+        let base = fam.generate(240, 7 + i as u64);
+        let mut maintained = solve(&base);
+        let mut dg = DynamicGraph::new(base);
+        let mut rng = Xoshiro256::new(0xD17A_0000 + i as u64);
+        for round in 0..3 {
+            let g_before = dg.snapshot();
+            let batch = random_batch(&mut rng, &g_before, &maintained, 8);
+            let label = format!("{} round {round}", fam.name());
+            let (_, repaired) = check_batch(&mut dg, &maintained, &batch, &label);
+            maintained = repaired;
+        }
+    }
+}
+
+#[test]
+fn prop_repair_equals_recompute_on_random_graphs() {
+    forall(Config::cases(16), |rng| {
+        let (nr, nc, edges) = arb_bipartite(rng, 20);
+        let base = from_edges(nr, nc, &edges);
+        let prev = solve(&base);
+        let mut dg = DynamicGraph::new(base);
+        let g0 = dg.snapshot();
+        let batch = random_batch(rng, &g0, &prev, 6);
+        let report = dg.apply(&batch);
+        let g = dg.snapshot();
+        let want = reference_max_cardinality(&g);
+        for spec in repair_specs() {
+            let s = repair(&g, prev.clone(), &report, &spec, None, &mut RunCtx::detached())
+                .map_err(|e| format!("{spec}: {e}"))?;
+            s.result.matching.certify(&g).map_err(|e| format!("{spec}: {e}"))?;
+            if s.result.matching.cardinality() != want {
+                return Err(format!(
+                    "{spec}: repaired {} != reference {want} (batch {batch:?})",
+                    s.result.matching.cardinality()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn repair_survives_deleting_every_matched_edge() {
+    // the worst batch: sever the entire matching — repair degenerates to
+    // (seeded) recompute and must still land on the reference
+    let base = Family::Kron.generate(300, 5);
+    let prev = solve(&base);
+    let mut batch = DeltaBatch::new();
+    for c in 0..base.nc {
+        if prev.cmatch[c] >= 0 {
+            batch = batch.delete(prev.cmatch[c] as u32, c as u32);
+        }
+    }
+    let mut dg = DynamicGraph::new(base);
+    check_batch(&mut dg, &prev, &batch, "sever-all");
+}
+
+#[test]
+fn repair_chain_through_rebuilds_stays_consistent() {
+    // force aggressive overlay compaction: the rebuild must be invisible
+    // to repair correctness
+    let base = Family::Road.generate(300, 11);
+    let mut maintained = solve(&base);
+    let mut dg = DynamicGraph::new(base).with_rebuild_threshold(0.0);
+    let mut rng = Xoshiro256::new(0xBEEF);
+    for round in 0..4 {
+        let g_before = dg.snapshot();
+        let batch = random_batch(&mut rng, &g_before, &maintained, 5);
+        let label = format!("rebuild round {round}");
+        let (_, repaired) = check_batch(&mut dg, &maintained, &batch, &label);
+        maintained = repaired;
+    }
+    assert!(dg.rebuilds() > 0, "threshold 0 must have forced rebuilds");
+}

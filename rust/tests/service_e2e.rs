@@ -124,6 +124,94 @@ fn tcp_server_full_session() {
 }
 
 #[test]
+fn tcp_incremental_session_load_update_match_stats_drop() {
+    // the acceptance round-trip: LOAD → UPDATE → MATCH → STATS → DROP on
+    // one connection, with update jobs visible in the STATS metrics
+    let server = Server::bind("127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.serve());
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    let reqs = [
+        "LOAD name=live family=kron n=500 seed=9",
+        "MATCH name=live",
+        "UPDATE name=live addcols=0;1;2|4;5",
+        "UPDATE name=live del=0:0 add=1:0,2:3",
+        "MATCH name=live",
+        "STATS",
+        "DROP name=live",
+        "GRAPHS",
+    ];
+    for r in reqs {
+        s.write_all(r.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+    }
+    let reader = BufReader::new(s.try_clone().unwrap());
+    let lines: Vec<String> = reader.lines().take(reqs.len()).map(|l| l.unwrap()).collect();
+    assert_eq!(lines.len(), reqs.len());
+    // LOAD
+    assert!(lines[0].starts_with("OK "), "{}", lines[0]);
+    assert!(lines[0].contains("name=live"), "{}", lines[0]);
+    // first MATCH: certified maximum, establishes the cached matching
+    assert!(lines[1].starts_with("OK ") && lines[1].contains("certified=1"), "{}", lines[1]);
+    let card = |line: &str| -> u64 {
+        line.split_whitespace()
+            .find_map(|kv| kv.strip_prefix("card="))
+            .unwrap_or_else(|| panic!("card= missing in {line}"))
+            .parse()
+            .unwrap()
+    };
+    let card_before = card(&lines[1]);
+    // UPDATE replies carry the delta + repair fields and stay certified
+    for line in [&lines[2], &lines[3]] {
+        assert!(line.starts_with("OK "), "{line}");
+        assert!(line.contains("name=live"), "{line}");
+        assert!(line.contains("certified=1"), "{line}");
+        assert!(line.contains(" inserted="), "{line}");
+        assert!(line.contains(" deleted="), "{line}");
+        assert!(line.contains(" seeds="), "{line}");
+    }
+    assert!(lines[2].contains("cols_added=2"), "{}", lines[2]);
+    // the repaired matching is served warm and moves by at most the batch
+    let card_after = card(&lines[4]);
+    assert!(lines[4].contains("certified=1"), "{}", lines[4]);
+    assert!(card_after + 2 >= card_before, "{card_before} -> {card_after}");
+    // STATS: update jobs visible in metrics, alongside the failure split
+    assert!(lines[5].starts_with("STATS "), "{}", lines[5]);
+    assert!(lines[5].contains("updated=2"), "{}", lines[5]);
+    assert!(lines[5].contains("loaded=1"), "{}", lines[5]);
+    assert!(lines[5].contains("timeout=0"), "{}", lines[5]);
+    assert!(lines[5].contains("cancelled=0"), "{}", lines[5]);
+    // DROP, and the store is empty again
+    assert!(lines[6].starts_with("OK ") && lines[6].contains("dropped=1"), "{}", lines[6]);
+    assert_eq!(lines[7], "GRAPHS");
+    s.write_all(b"QUIT\n").unwrap();
+}
+
+#[test]
+fn batch_wide_deadline_through_the_service() {
+    // satellite regression: a batch-wide budget must trip every job as
+    // the distinct DeadlineExceeded failure
+    let svc = Service::start(2, 4, None);
+    let jobs: Vec<MatchJob> = (0..3).map(|i| gen_job(i, Family::Uniform, 500, false)).collect();
+    let (outcomes, metrics) = svc.run_batch_with_timeout_ms(jobs, 0);
+    for o in &outcomes {
+        assert!(
+            matches!(o.error, Some(JobError::DeadlineExceeded { .. })),
+            "job {}: {:?}",
+            o.job_id,
+            o.error
+        );
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(metrics.jobs_timed_out.load(Ordering::Relaxed), 3);
+    assert_eq!(
+        metrics.jobs_submitted.load(Ordering::Relaxed),
+        metrics.completed() + metrics.jobs_failed.load(Ordering::Relaxed)
+    );
+}
+
+#[test]
 fn concurrent_tcp_clients() {
     let server = Server::bind("127.0.0.1:0", None).unwrap();
     let addr = server.local_addr().unwrap();
