@@ -30,13 +30,22 @@ USAGE:
                 actually runs)
   bimatch gen    --family <name> --n <int> [--seed <int>] [--permute] --out <path.mtx>
   bimatch verify --mtx <path>          cross-check several algorithms on a file
-  bimatch serve  [--addr <ip:port>]    TCP line-protocol matching service
+  bimatch serve  [--addr <ip:port>] [--data-dir <path>] [--max-graphs <n>]
+                TCP line-protocol matching service
                 (one-shot MATCH plus the incremental verbs: LOAD name=…
                 installs a graph server-side, UPDATE name=… add=r:c,…
-                del=r:c,… addcols=r;r|… applies a delta batch and repairs
-                the maintained matching via seeded augmentation, MATCH
-                name=… re-serves the cached maximum, DROP name=… evicts;
-                GRAPHS lists stored graphs — see coordinator::server docs)
+                del=r:c,… addcols=r;r|… addrows=c;c|… applies a delta
+                batch and repairs the maintained matching via seeded
+                augmentation, MATCH name=… re-serves the cached maximum,
+                DROP name=… evicts; GRAPHS lists stored graphs — see
+                coordinator::server docs. --data-dir makes stored graphs
+                durable: UPDATEs hit a per-graph write-ahead log fsync'd
+                before the OK reply, threshold rebuilds piggyback
+                snapshots, restart recovers every graph by replaying the
+                log tail and repairing — not recomputing — its matching,
+                and SAVE name=… forces a snapshot now. --max-graphs caps
+                the in-memory store: LRU graphs are snapshotted to the
+                data dir and transparently reloaded on their next MATCH)
   bimatch algos                        list registered algorithms
                 (also: bimatch --list-algos — CI diffs this against the
                 registry-names.txt golden file)
@@ -296,13 +305,33 @@ fn cmd_verify(flags: &HashMap<String, String>) -> i32 {
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let default_addr = "127.0.0.1:7700".to_string();
     let addr = flags.get("addr").unwrap_or(&default_addr);
-    match Server::bind(addr, engine_if_available()) {
+    let data_dir = flags.get("data-dir").map(std::path::PathBuf::from);
+    let max_graphs = match flags.get("max-graphs").map(|v| v.parse::<usize>()) {
+        Some(Ok(0)) => {
+            eprintln!("--max-graphs must be at least 1");
+            return 2;
+        }
+        Some(Ok(n)) => Some(n),
+        Some(Err(e)) => {
+            eprintln!("bad --max-graphs: {e}");
+            return 2;
+        }
+        None => None,
+    };
+    let durable = data_dir.is_some();
+    match Server::bind_with(addr, engine_if_available(), data_dir, max_graphs) {
         Ok(server) => {
             println!("bimatch service listening on {}", server.local_addr().unwrap());
+            if durable {
+                // recovery already ran inside bind_with
+                let recovered = server.store().len();
+                println!("durability on: {recovered} stored graph(s) recovered from the data dir");
+            }
             println!(
                 "protocol: MATCH family=<f> n=<n> [seed=..] [permute=0|1] [algo=..] | \
                  LOAD name=<g> family=..|mtx=.. | UPDATE name=<g> [add=r:c,..] [del=r:c,..] \
-                 [addcols=r;r|..] | MATCH name=<g> | DROP name=<g> | ALGOS | GRAPHS | STATS | QUIT"
+                 [addcols=r;r|..] [addrows=c;c|..] | MATCH name=<g> | DROP name=<g> | \
+                 SAVE name=<g> | ALGOS | GRAPHS | STATS | QUIT"
             );
             if let Err(e) = server.serve() {
                 eprintln!("serve error: {e}");

@@ -10,12 +10,21 @@
 //! tripped run is a *distinct* failure ([`JobError::DeadlineExceeded`] /
 //! [`JobError::Cancelled`]) — never a silently suboptimal answer.
 //!
-//! Four job ops share the pipeline (see [`JobOp`]): `Match` (one-shot or
+//! Five job ops share the pipeline (see [`JobOp`]): `Match` (one-shot or
 //! against a stored graph, warm-started from its cached matching),
-//! `Load`/`DropGraph` (store lifecycle), and `Update` — apply a
+//! `Load`/`DropGraph` (store lifecycle), `Update` — apply a
 //! [`crate::dynamic::DeltaBatch`] and restore maximality through
 //! [`crate::dynamic::repair`], under the same metrics, deadline,
-//! cancellation, and certification regime as a match.
+//! cancellation, and certification regime as a match — and `Save`
+//! (forced durable snapshot + WAL compaction).
+//!
+//! With a [`Persistence`] attached (`--data-dir`), the store verbs become
+//! durable: a `LOAD` snapshots its base before the graph is visible, a
+//! successful `UPDATE` is fsync'd into the per-graph write-ahead log
+//! before it is acknowledged (a rolled-back one is never logged),
+//! threshold rebuilds piggyback snapshots that compact the log, and
+//! `Stored(name)` misses fall through to disk — the transparent-reload
+//! half of the `--max-graphs` LRU eviction.
 
 use super::job::{AlgoChoice, GraphSource, JobError, JobOp, MatchJob, MatchOutcome, UpdateStats};
 use super::metrics::Metrics;
@@ -26,6 +35,7 @@ use crate::dynamic::{self, DeltaBatch};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::algo::{CancelToken, RunCtx, RunOutcome};
 use crate::matching::Matching;
+use crate::persist::{recover, Persistence, RecoveryReport};
 use crate::runtime::Engine;
 use crate::util::pool::WorkspacePool;
 use crate::util::timer::Timer;
@@ -34,7 +44,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Stateless-per-job executor (cheap to clone across workers; clones share
-/// the workspace pool, the cancellation token, and the graph store).
+/// the workspace pool, the cancellation token, the graph store, and —
+/// when durability is on — the persistence handle).
 #[derive(Clone)]
 pub struct Executor {
     pub engine: Option<Arc<Engine>>,
@@ -42,6 +53,8 @@ pub struct Executor {
     pool: Arc<WorkspacePool>,
     cancel: CancelToken,
     store: Arc<GraphStore>,
+    persist: Option<Arc<Persistence>>,
+    max_graphs: Option<usize>,
 }
 
 /// The effective deadline for a job: `timeout` measured from `start`,
@@ -67,7 +80,126 @@ impl Executor {
             pool: Arc::new(WorkspacePool::new()),
             cancel: CancelToken::new(),
             store: Arc::new(GraphStore::new()),
+            persist: None,
+            max_graphs: None,
         }
+    }
+
+    /// Attach a durability layer (`--data-dir`): from here on, `LOAD`s
+    /// snapshot their base, successful `UPDATE`s hit the write-ahead log
+    /// (fsync'd) before they are acknowledged, threshold rebuilds
+    /// piggyback snapshots, and `DROP`s delete the on-disk state. Attach
+    /// *before* cloning the executor across workers.
+    pub fn with_persistence(mut self, persist: Arc<Persistence>) -> Self {
+        self.persist = Some(persist);
+        self
+    }
+
+    /// Cap the in-memory store at `max` graphs (LRU): a `LOAD` beyond the
+    /// cap evicts the stalest graph — snapshotting it first when
+    /// persistence is on, so a later `MATCH name=` transparently reloads
+    /// it from disk. Without persistence, eviction discards the graph.
+    pub fn with_max_graphs(mut self, max: usize) -> Self {
+        self.max_graphs = Some(max);
+        self
+    }
+
+    /// The durability layer, if one is attached.
+    pub fn persistence(&self) -> Option<&Arc<Persistence>> {
+        self.persist.as_ref()
+    }
+
+    /// Startup recovery: scan the data dir, install every recoverable
+    /// graph (WAL tail replayed, matching restored by seeded repair), and
+    /// fence the version allocator past everything on disk. A no-op
+    /// (empty report) without persistence. Run before accepting traffic.
+    pub fn recover(&self) -> std::io::Result<RecoveryReport> {
+        let Some(p) = &self.persist else {
+            return Ok(RecoveryReport::default());
+        };
+        let report =
+            recover::recover_into(p, &self.store, &self.metrics, self.engine.clone(), &self.pool)?;
+        if let Some(cap) = self.max_graphs {
+            // recovery may have resurrected more graphs than the cap
+            while self.store.len() > cap {
+                let Some(victim) = self.store.lru_victim("") else { break };
+                if !self.evict_graph(&victim) {
+                    break;
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Push `name` out of memory. With persistence, its live state is
+    /// snapshotted (and the WAL compacted) first so nothing is lost and a
+    /// later `MATCH name=` reloads it transparently; a snapshot failure
+    /// vetoes the eviction (memory pressure never wins over durability).
+    /// Returns whether the graph left memory.
+    fn evict_graph(&self, name: &str) -> bool {
+        let Some(entry) = self.store.entry(name) else {
+            return true; // already gone
+        };
+        let mut e = entry.lock().unwrap();
+        if let Some(p) = &self.persist {
+            let g = e.graph.snapshot();
+            let version = e.graph.version();
+            let matching = e
+                .matching
+                .as_ref()
+                .filter(|c| c.version == version)
+                .map(|c| c.matching.clone());
+            if p.record_snapshot(name, &g, version, matching.as_ref()).is_err() {
+                return false;
+            }
+            self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
+        }
+        // remove from the map while still holding the entry lock, so a
+        // racing UPDATE on this graph either committed before us or will
+        // observe itself unmapped
+        self.store.drop_graph(name);
+        drop(e);
+        self.metrics.graphs_evicted.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// After installing `keep`, evict LRU graphs until the cap holds.
+    fn enforce_graph_cap(&self, keep: &str) {
+        let Some(cap) = self.max_graphs else { return };
+        while self.store.len() > cap {
+            let Some(victim) = self.store.lru_victim(keep) else { break };
+            if !self.evict_graph(&victim) {
+                break;
+            }
+        }
+    }
+
+    /// A `Stored(name)` miss falls through to disk: recover the single
+    /// graph (snapshot + WAL tail + seeded repair of its matching) and
+    /// install it — the transparent-reload half of LRU eviction. Counts
+    /// under `graphs_recovered`. The persistence name lock is held across
+    /// recover + install (with a re-check under it) so the reload can
+    /// neither resurrect a concurrently `DROP`ped graph nor overwrite a
+    /// fresh re-`LOAD`'s incarnation with stale disk state — both of
+    /// those serialize on the same lock before touching the files or the
+    /// map.
+    fn reload_from_disk(&self, name: &str) -> Option<Arc<std::sync::Mutex<StoreEntry>>> {
+        let p = self.persist.as_ref()?;
+        let lock = p.name_lock(name);
+        let held = lock.lock().unwrap();
+        // re-check under the lock: a racing LOAD or reload may have
+        // installed the graph while we waited
+        if let Some(entry) = self.store.entry(name) {
+            return Some(entry);
+        }
+        let rec = p.recover_graph_locked(name).ok()??;
+        recover::install_recovered(rec, &self.store, &self.metrics, self.engine.clone(), &self.pool);
+        // the cap sweep happens after releasing the name lock: eviction
+        // snapshots the victim under the *victim's* name lock, and two
+        // reloads evicting each other's graphs must not hold both locks
+        drop(held);
+        self.enforce_graph_cap(name);
+        self.store.entry(name)
     }
 
     /// The shared scratch-buffer pool (observability + tests).
@@ -156,6 +288,7 @@ impl Executor {
             JobOp::Load { name } => self.execute_load(job, name),
             JobOp::Update { name, batch } => self.execute_update(job, name, batch),
             JobOp::DropGraph { name } => self.execute_drop(job, name),
+            JobOp::Save { name } => self.execute_save(job, name),
         }
     }
 
@@ -171,20 +304,30 @@ impl Executor {
         let mut stored: Option<(Arc<std::sync::Mutex<StoreEntry>>, u64)> = None;
         let mut warm: Option<Matching> = None;
         let g = match &job.source {
-            GraphSource::Stored(name) => match self.store.graph_for_match(name) {
-                Some(view) => {
-                    warm = view.cached.map(|c| c.matching);
-                    stored = Some((view.entry, view.version));
-                    view.graph
+            GraphSource::Stored(name) => {
+                // a miss falls through to disk before failing: an LRU-
+                // evicted (or crash-surviving) graph reloads transparently
+                let view = self.store.graph_for_match(name).or_else(|| {
+                    self.reload_from_disk(name)?;
+                    self.store.graph_for_match(name)
+                });
+                match view {
+                    Some(view) => {
+                        warm = view.cached.map(|c| c.matching);
+                        stored = Some((view.entry, view.version));
+                        view.graph
+                    }
+                    None => {
+                        self.fail(
+                            &mut out,
+                            JobError::Load(format!(
+                                "no stored graph named {name:?} (LOAD it first)"
+                            )),
+                        );
+                        return out;
+                    }
                 }
-                None => {
-                    self.fail(
-                        &mut out,
-                        JobError::Load(format!("no stored graph named {name:?} (LOAD it first)")),
-                    );
-                    return out;
-                }
-            },
+            }
             other => match self.acquire(other) {
                 Ok(g) => g,
                 Err(e) => {
@@ -298,7 +441,28 @@ impl Executor {
         out.nr = g.nr;
         out.nc = g.nc;
         out.n_edges = g.n_edges();
-        self.store.load(name, g);
+        // durability before visibility: the base snapshot + WAL reset hit
+        // disk first, so a LOAD the client saw acknowledged can always be
+        // recovered — and a persist failure rejects the LOAD outright
+        // rather than leaving a graph that would silently vanish on crash.
+        // The name lock spans persist + install, so a concurrent DROP or
+        // reload serializes around the whole LOAD instead of interleaving
+        // between its disk and map halves.
+        let base = self.store.allocate_version_base();
+        let name_lock = self.persist.as_ref().map(|p| p.name_lock(name));
+        let name_guard = name_lock.as_ref().map(|l| l.lock().unwrap());
+        if let Some(p) = &self.persist {
+            if let Err(e) = p.record_load_locked(name, &g, base) {
+                self.fail(&mut out, JobError::Load(format!("persisting LOAD failed: {e}")));
+                return out;
+            }
+            self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
+            self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+        }
+        self.store.load_with_base(name, g, base);
+        drop(name_guard);
+        drop(name_lock);
+        self.enforce_graph_cap(name);
         self.metrics.graphs_loaded.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
@@ -308,11 +472,96 @@ impl Executor {
     fn execute_drop(&self, job: &MatchJob, name: &str) -> MatchOutcome {
         let total = Timer::start();
         let mut out = Self::blank(job.id);
-        if !self.store.drop_graph(name) {
+        // lock order (matches UPDATE/SAVE/eviction): entry mutex first,
+        // then the persistence name lock. Holding the entry lock while
+        // unmapping serializes against in-flight UPDATEs (they commit
+        // before us or observe themselves unmapped); holding the name
+        // lock across marker + unmap + deletion keeps a concurrent
+        // transparent reload from resurrecting the graph out of the
+        // not-yet-deleted files.
+        let entry = self.store.entry(name);
+        let entry_guard = entry.as_ref().map(|e| e.lock().unwrap());
+        let in_memory = entry_guard.is_some();
+        let version = entry_guard.as_ref().map(|e| e.graph.version());
+        let name_lock = self.persist.as_ref().map(|p| p.name_lock(name));
+        let name_guard = name_lock.as_ref().map(|l| l.lock().unwrap());
+        let on_disk = self
+            .persist
+            .as_ref()
+            .is_some_and(|p| p.has_state_locked(name));
+        if !in_memory && !on_disk {
             self.fail(&mut out, JobError::Load(format!("no stored graph named {name:?}")));
             return out;
         }
+        if let Some(p) = &self.persist {
+            if on_disk {
+                // the fsync'd marker is the commit point: fail *before*
+                // touching memory if it can't be written (the graph stays
+                // fully intact); after it, file deletion is best-effort —
+                // recovery completes an interrupted drop from the marker
+                if let Err(e) = p.append_drop_marker_locked(name, version) {
+                    self.fail(
+                        &mut out,
+                        JobError::Load(format!("dropping {name:?} on disk failed: {e}")),
+                    );
+                    return out;
+                }
+                self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.store.drop_graph(name);
+        drop(entry_guard);
+        if let Some(p) = &self.persist {
+            if on_disk {
+                p.delete_graph_files_locked(name);
+            }
+        }
+        drop(name_guard);
+        drop(name_lock);
+        if let Some(p) = &self.persist {
+            p.release_name_lock_if_unused(name);
+        }
         self.metrics.graphs_dropped.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.observe_latency(total.elapsed_secs());
+        out
+    }
+
+    fn execute_save(&self, job: &MatchJob, name: &str) -> MatchOutcome {
+        let total = Timer::start();
+        let mut out = Self::blank(job.id);
+        let Some(p) = &self.persist else {
+            self.fail(
+                &mut out,
+                JobError::Unavailable("SAVE requires a data dir (serve --data-dir)".into()),
+            );
+            return out;
+        };
+        let Some(entry) = self.store.entry(name) else {
+            self.fail(
+                &mut out,
+                JobError::Load(format!("no stored graph named {name:?} (LOAD it first)")),
+            );
+            return out;
+        };
+        let mut e = entry.lock().unwrap();
+        let g = e.graph.snapshot();
+        let version = e.graph.version();
+        let matching = e
+            .matching
+            .as_ref()
+            .filter(|c| c.version == version)
+            .map(|c| c.matching.clone());
+        out.nr = g.nr;
+        out.nc = g.nc;
+        out.n_edges = g.n_edges();
+        if let Err(err) = p.record_snapshot(name, &g, version, matching.as_ref()) {
+            drop(e);
+            self.fail(&mut out, JobError::Load(format!("snapshotting {name:?} failed: {err}")));
+            return out;
+        }
+        drop(e);
+        self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
         out
@@ -322,7 +571,8 @@ impl Executor {
         let total = Timer::start();
         let (deadline, budget_ms) = effective_deadline(job, Instant::now());
         let mut out = Self::blank(job.id);
-        let Some(entry) = self.store.entry(name) else {
+        let Some(entry) = self.store.entry(name).or_else(|| self.reload_from_disk(name))
+        else {
             self.fail(
                 &mut out,
                 JobError::Load(format!("no stored graph named {name:?} (LOAD it first)")),
@@ -365,6 +615,7 @@ impl Executor {
             inserted: report.inserted.len() as u64,
             deleted: report.deleted.len() as u64,
             cols_added: report.added_cols.len() as u64,
+            rows_added: report.added_rows.len() as u64,
             rejected: report.rejected as u64,
             rebuilt: report.rebuilt,
             ..UpdateStats::default()
@@ -446,25 +697,24 @@ impl Executor {
         }
         out.certified = job.certify;
 
-        // success: the batch is durable — per-graph stats and the new
-        // maintained matching land together
-        e.stats.updates += 1;
-        e.stats.edges_inserted += update.inserted;
-        e.stats.edges_deleted += update.deleted;
-        e.stats.cols_added += update.cols_added;
-        e.stats.repairs += 1;
-        let version = e.graph.version();
-        e.matching = Some(CachedMatching { matching: result.matching, version });
-        drop(e);
-
         // a concurrent DROP or re-LOAD may have unmapped this entry while
         // the repair ran: the work landed on an orphan, and the client
-        // must not be told the stored graph advanced. (If the entry is
-        // still mapped here, any later drop linearizes *after* this
-        // update.)
+        // must not be told the stored graph advanced — nor may the batch
+        // reach the (deleted or reset) WAL. Checked while still holding
+        // the entry lock: DROP and eviction also take it before
+        // unmapping, so for those the answer cannot flip between here and
+        // commit. A re-LOAD does *not* take the old entry's lock, so an
+        // update that passes this check can still commit concurrently
+        // with a re-LOAD of the name — that interleaving is the valid
+        // linearization "update, then replace", and the update's frame,
+        // if the re-LOAD's WAL reset wins the race, carries the old
+        // incarnation's version and is filtered out by replay.
         let still_mapped =
             self.store.entry(name).is_some_and(|cur| Arc::ptr_eq(&cur, &entry));
         if !still_mapped {
+            e.graph = graph_backup;
+            e.matching = cached_prev;
+            drop(e);
             self.fail(
                 &mut out,
                 JobError::Load(format!(
@@ -473,6 +723,55 @@ impl Executor {
             );
             return out;
         }
+
+        // write-ahead before acknowledgement: the batch's net effect (and
+        // the report it produced) is fsync'd into the WAL under the entry
+        // lock; a failed append rolls the whole update back. The invariant
+        // wire clients get: an acknowledged UPDATE is always recoverable,
+        // an ERR'd one was never persisted. No-op batches (every op
+        // rejected) change nothing and are not logged.
+        if let Some(p) = &self.persist {
+            if !report.is_noop() {
+                if let Err(err) = p.append_update(name, e.graph.version(), &report) {
+                    e.graph = graph_backup;
+                    e.matching = cached_prev;
+                    drop(e);
+                    self.fail(
+                        &mut out,
+                        JobError::Load(format!("WAL append for {name:?} failed: {err}")),
+                    );
+                    return out;
+                }
+                self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        // success: the batch is durable — per-graph stats and the new
+        // maintained matching land together
+        e.stats.updates += 1;
+        e.stats.edges_inserted += update.inserted;
+        e.stats.edges_deleted += update.deleted;
+        e.stats.cols_added += update.cols_added;
+        e.stats.rows_added += update.rows_added;
+        e.stats.repairs += 1;
+        let version = e.graph.version();
+        e.matching = Some(CachedMatching { matching: result.matching, version });
+
+        // snapshot piggyback: a batch that tripped the threshold rebuild
+        // just paid the O(E) CSR materialization, so persisting that CSR
+        // (and compacting the WAL it covers) is marginal cost. Best
+        // effort: on failure the WAL still covers the batch, and the next
+        // rebuild or SAVE retries.
+        if report.rebuilt {
+            if let Some(p) = &self.persist {
+                let g_snap = e.graph.snapshot();
+                let m = e.matching.as_ref().map(|c| c.matching.clone());
+                if p.record_snapshot(name, &g_snap, version, m.as_ref()).is_ok() {
+                    self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        drop(e);
 
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_updated.fetch_add(1, Ordering::Relaxed);
@@ -846,6 +1145,172 @@ mod tests {
         // the from-scratch oracle on the mutated graph
         let g = e.store().graph_for_match("g").unwrap().graph;
         assert_eq!(out.cardinality, crate::matching::reference_max_cardinality(&g));
+    }
+
+    #[test]
+    fn update_rollback_is_byte_for_byte_even_across_a_rebuild() {
+        // satellite regression: a failed UPDATE whose batch tripped the
+        // threshold CSR rebuild mid-apply must restore the pre-batch
+        // DynamicGraph byte-for-byte — original base Arc'd CSR, overlay
+        // maps, version, rebuild counter, memo — not the rebuilt shape.
+        // Both rollback paths that can follow a rebuild are driven: the
+        // deadline trip and the repair-rejection (which shares its
+        // restore code with the certification-failure path).
+        use crate::dynamic::DeltaBatch;
+        let e = exec();
+        e.execute(&load_job(0, "g", 300, 11));
+        e.execute(&MatchJob::new(1, GraphSource::Stored("g".into())));
+        // a batch of fresh edges > 25% of the base trips the rebuild
+        let g = e.store().graph_for_match("g").unwrap().graph;
+        let mut batch = DeltaBatch::new();
+        let mut k = 0usize;
+        'fill: for r in 0..g.nr {
+            for c in 0..g.nc {
+                if !g.has_edge(r, c) {
+                    batch = batch.insert(r as u32, c as u32);
+                    k += 1;
+                    if 2 * k > g.n_edges() {
+                        break 'fill;
+                    }
+                }
+            }
+        }
+        let entry = e.store().entry("g").unwrap();
+        let before = entry.lock().unwrap().graph.clone();
+        {
+            let mut probe = before.clone();
+            assert!(probe.apply(&batch).rebuilt, "batch must trip the rebuild threshold");
+        }
+        // path 1: deadline trips after apply (and after the rebuild)
+        let out =
+            e.execute(&MatchJob::update_graph(2, "g", batch.clone()).with_timeout_ms(0));
+        assert!(matches!(out.error, Some(JobError::DeadlineExceeded { .. })), "{:?}", out.error);
+        let after = entry.lock().unwrap().graph.clone();
+        assert_eq!(before, after, "deadline rollback must be byte-for-byte");
+        // path 2: repair rejects the (poisoned) maintained matching after
+        // the same rebuild-tripping apply
+        let poisoned = {
+            let mut guard = entry.lock().unwrap();
+            let v = guard.graph.version();
+            let bad = CachedMatching {
+                matching: Matching::empty(before.nr() + 5, 1),
+                version: v,
+            };
+            guard.matching = Some(bad.clone());
+            bad
+        };
+        let out = e.execute(&MatchJob::update_graph(3, "g", batch));
+        assert!(matches!(out.error, Some(JobError::Unavailable(_))), "{:?}", out.error);
+        let guard = entry.lock().unwrap();
+        assert_eq!(before, guard.graph, "repair-failure rollback must be byte-for-byte");
+        assert_eq!(
+            guard.matching.as_ref().map(|c| c.version),
+            Some(poisoned.version),
+            "the pre-batch cache (even a poisoned one) is restored wholesale"
+        );
+        assert_eq!(before.rebuilds(), guard.graph.rebuilds());
+    }
+
+    #[test]
+    fn update_with_addrows_flows_through_repair() {
+        use crate::dynamic::DeltaBatch;
+        let e = exec();
+        e.execute(&load_job(0, "g", 300, 13));
+        let cold = e.execute(&MatchJob::new(1, GraphSource::Stored("g".into())));
+        assert!(cold.certified);
+        // append one row wired to three columns and one isolated row
+        let batch = DeltaBatch::new().add_row(vec![0, 1, 2]).add_row(vec![]);
+        let out = e.execute(&MatchJob::update_graph(2, "g", batch));
+        assert!(out.certified, "{:?}", out.error);
+        let up = out.update.expect("update stats");
+        assert_eq!(up.rows_added, 2);
+        assert_eq!(up.inserted, 3);
+        // repair ≡ recompute on the grown graph
+        let g = e.store().graph_for_match("g").unwrap().graph;
+        assert_eq!(g.nr, cold.nr + 2);
+        assert_eq!(out.cardinality, crate::matching::reference_max_cardinality(&g));
+    }
+
+    // ---- durability through the executor ---------------------------------
+
+    fn temp_data_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_exec_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn durable_exec(dir: &std::path::Path) -> Executor {
+        Executor::new(None, Arc::new(Metrics::new()))
+            .with_persistence(Arc::new(crate::persist::Persistence::open(dir).unwrap()))
+    }
+
+    #[test]
+    fn lru_cap_snapshots_and_transparently_reloads() {
+        use crate::coordinator::job::GraphSource;
+        let dir = temp_data_dir("lru");
+        let e = durable_exec(&dir).with_max_graphs(2);
+        e.execute(&load_job(0, "a", 250, 1));
+        let a = e.execute(&MatchJob::new(1, GraphSource::Stored("a".into())));
+        assert!(a.certified);
+        e.execute(&load_job(2, "b", 250, 2));
+        e.execute(&load_job(3, "c", 250, 3));
+        // "a" is the stalest → snapshotted to disk, evicted from memory
+        assert_eq!(e.store().len(), 2);
+        assert_eq!(e.store().names(), vec!["b".to_string(), "c".to_string()]);
+        assert_eq!(e.metrics.graphs_evicted.load(Ordering::Relaxed), 1);
+        // MATCH name=a transparently reloads from disk: identical
+        // cardinality, warm-started from the snapshotted matching
+        let out = e.execute(&MatchJob::new(4, GraphSource::Stored("a".into())));
+        assert!(out.certified, "{:?}", out.error);
+        assert_eq!(out.cardinality, a.cardinality);
+        assert_eq!(
+            out.init_cardinality, a.cardinality,
+            "the reloaded graph must warm-start from its recovered matching"
+        );
+        assert!(e.metrics.graphs_recovered.load(Ordering::Relaxed) >= 1);
+        assert_eq!(e.store().len(), 2, "the reload re-enforces the cap");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_cap_without_persistence_discards() {
+        let e = exec().with_max_graphs(1);
+        e.execute(&load_job(0, "a", 150, 1));
+        e.execute(&load_job(1, "b", 150, 2));
+        assert_eq!(e.store().len(), 1);
+        let out = e.execute(&MatchJob::new(2, GraphSource::Stored("a".into())));
+        assert!(matches!(out.error, Some(JobError::Load(_))), "{:?}", out.error);
+    }
+
+    #[test]
+    fn save_job_snapshots_and_compacts() {
+        use crate::dynamic::DeltaBatch;
+        let dir = temp_data_dir("save");
+        let e = durable_exec(&dir);
+        let p = e.persistence().unwrap().clone();
+        e.execute(&load_job(0, "g", 200, 5));
+        e.execute(&MatchJob::new(1, GraphSource::Stored("g".into())));
+        e.execute(&MatchJob::update_graph(2, "g", DeltaBatch::new().add_column(vec![0, 1])));
+        assert!(e.metrics.wal_appends.load(Ordering::Relaxed) >= 2, "LOAD marker + UPDATE");
+        let out = e.execute(&MatchJob::save_graph(3, "g"));
+        assert!(out.error.is_none(), "{:?}", out.error);
+        assert!(e.metrics.snapshots_written.load(Ordering::Relaxed) >= 2);
+        // compaction: the WAL is empty, the snapshot anchors recovery
+        let (records, torn) = crate::persist::wal::read_wal(&p.wal_path("g")).unwrap();
+        assert!(records.is_empty() && !torn, "SAVE must truncate the WAL");
+        let rec = p.recover_graph("g").unwrap().expect("recoverable after SAVE");
+        assert_eq!(rec.replayed_updates, 0);
+        assert!(rec.matching.is_some(), "SAVE persists the maintained matching");
+        // SAVE without persistence is a distinct, typed refusal
+        let volatile = exec();
+        volatile.execute(&load_job(0, "g", 100, 1));
+        let out = volatile.execute(&MatchJob::save_graph(1, "g"));
+        assert!(matches!(out.error, Some(JobError::Unavailable(_))), "{:?}", out.error);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -36,6 +36,9 @@ pub enum JobOp {
     Update { name: String, batch: DeltaBatch },
     /// evict stored graph `name`
     DropGraph { name: String },
+    /// force a durable snapshot (+ WAL compaction) of stored graph
+    /// `name` — requires the executor to run with a data dir
+    Save { name: String },
 }
 
 /// Which matcher to use.
@@ -118,6 +121,16 @@ impl MatchJob {
         j
     }
 
+    /// A `SAVE`: durably snapshot stored graph `name` and compact its
+    /// write-ahead log now, instead of waiting for the next threshold
+    /// rebuild to piggyback on.
+    pub fn save_graph(id: u64, name: impl Into<String>) -> Self {
+        let name = name.into();
+        let mut j = Self::new(id, GraphSource::Stored(name.clone()));
+        j.op = JobOp::Save { name };
+        j
+    }
+
     /// Pick a matcher by registry name. Panics on a malformed name —
     /// parse with `AlgoSpec::from_str` first (as the server and CLI do)
     /// when the name comes from untrusted input.
@@ -188,6 +201,7 @@ pub struct UpdateStats {
     pub inserted: u64,
     pub deleted: u64,
     pub cols_added: u64,
+    pub rows_added: u64,
     /// out-of-range or no-op delta elements dropped
     pub rejected: u64,
     /// columns the seeded repair phase started from

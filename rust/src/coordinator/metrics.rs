@@ -26,6 +26,17 @@ pub struct Metrics {
     pub graphs_loaded: AtomicU64,
     /// successful `DROP` jobs (graphs evicted from the store)
     pub graphs_dropped: AtomicU64,
+    /// graphs reconstructed from the data dir (startup recovery plus
+    /// transparent reloads of evicted names)
+    pub graphs_recovered: AtomicU64,
+    /// graphs pushed out of memory by the `--max-graphs` LRU cap
+    pub graphs_evicted: AtomicU64,
+    /// write-ahead-log frames fsync'd (LOAD/DROP markers and committed
+    /// UPDATE records)
+    pub wal_appends: AtomicU64,
+    /// snapshot files written (LOAD bases, rebuild piggybacks, `SAVE`,
+    /// eviction)
+    pub snapshots_written: AtomicU64,
     pub edges_processed: AtomicU64,
     pub matched_total: AtomicU64,
     latency: [AtomicU64; N_BUCKETS],
@@ -87,13 +98,15 @@ impl Metrics {
 
     /// The wire report behind the server's `STATS` verb. Every counter the
     /// executor maintains is on it — including the failure-mode split
-    /// (`timeout=`/`cancelled=`, which are *also* inside `failed=`) and
-    /// the incremental-subsystem counters (`updated=` successful UPDATE
-    /// jobs, `graphs loaded=`/`dropped=` store traffic).
+    /// (`timeout=`/`cancelled=`, which are *also* inside `failed=`), the
+    /// incremental-subsystem counters (`updated=` successful UPDATE jobs,
+    /// `graphs loaded=`/`dropped=`/`evicted=`/`recovered=` store traffic)
+    /// and the durability counters (`persist: wal_appends=`/`snapshots=`).
     pub fn report(&self) -> String {
         format!(
             "jobs: submitted={} completed={} failed={} timeout={} cancelled={} updated={} | \
-             graphs: loaded={} dropped={} | \
+             graphs: loaded={} dropped={} evicted={} recovered={} | \
+             persist: wal_appends={} snapshots={} | \
              matched={} edges={} | \
              latency mean={:.4}s p50≤{:.4}s p95≤{:.4}s p99≤{:.4}s",
             self.jobs_submitted.load(Ordering::Relaxed),
@@ -104,6 +117,10 @@ impl Metrics {
             self.jobs_updated.load(Ordering::Relaxed),
             self.graphs_loaded.load(Ordering::Relaxed),
             self.graphs_dropped.load(Ordering::Relaxed),
+            self.graphs_evicted.load(Ordering::Relaxed),
+            self.graphs_recovered.load(Ordering::Relaxed),
+            self.wal_appends.load(Ordering::Relaxed),
+            self.snapshots_written.load(Ordering::Relaxed),
             self.matched_total.load(Ordering::Relaxed),
             self.edges_processed.load(Ordering::Relaxed),
             self.mean_latency(),
@@ -182,11 +199,19 @@ mod tests {
         m.jobs_updated.store(7, Ordering::Relaxed);
         m.graphs_loaded.store(4, Ordering::Relaxed);
         m.graphs_dropped.store(1, Ordering::Relaxed);
+        m.graphs_evicted.store(5, Ordering::Relaxed);
+        m.graphs_recovered.store(6, Ordering::Relaxed);
+        m.wal_appends.store(11, Ordering::Relaxed);
+        m.snapshots_written.store(9, Ordering::Relaxed);
         let r = m.report();
         assert!(r.contains("timeout=3"), "{r}");
         assert!(r.contains("cancelled=2"), "{r}");
         assert!(r.contains("updated=7"), "{r}");
         assert!(r.contains("loaded=4"), "{r}");
         assert!(r.contains("dropped=1"), "{r}");
+        assert!(r.contains("evicted=5"), "{r}");
+        assert!(r.contains("recovered=6"), "{r}");
+        assert!(r.contains("wal_appends=11"), "{r}");
+        assert!(r.contains("snapshots=9"), "{r}");
     }
 }

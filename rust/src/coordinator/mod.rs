@@ -19,6 +19,6 @@ pub use exec::Executor;
 pub use job::{AlgoChoice, GraphSource, JobError, JobOp, MatchJob, MatchOutcome, UpdateStats};
 pub use metrics::Metrics;
 pub use server::Server;
-pub use service::Service;
+pub use service::{Service, ServiceConfig};
 pub use spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};
 pub use store::GraphStore;

@@ -10,8 +10,9 @@
 //! MATCH name=<graph> [algo=<name>] [timeout_ms=<int>]
 //! LOAD  name=<graph> (family=… n=… [seed=…] [permute=0|1] | mtx=<path>)
 //! UPDATE name=<graph> [add=r:c,r:c,…] [del=r:c,…] [addcols=r;r|r|…]
-//!        [algo=<name>] [timeout_ms=<int>]
+//!        [addrows=c;c|c|…] [algo=<name>] [timeout_ms=<int>]
 //! DROP  name=<graph>
+//! SAVE  name=<graph>          durable snapshot + WAL compaction now
 //! ALGOS                       → ALGOS <name> <name> ...
 //! GRAPHS                      → GRAPHS <name> <name> ...
 //! STATS                       → STATS <metrics report>
@@ -28,12 +29,22 @@
 //! The incremental verbs hold graphs server-side
 //! ([`super::store::GraphStore`]): `LOAD` installs a graph under a name,
 //! `UPDATE` ships a delta batch (`add`/`del` are comma-separated
-//! `row:col` edges, `addcols` appends columns as `|`-separated
-//! `;`-lists of neighbor rows) and repairs the maintained matching via
-//! seeded augmentation, and `MATCH name=…` re-serves the cached maximum
-//! (warm start — one quiet phase). The `STATS` report covers them
-//! (`updated=`, `graphs: loaded=/dropped=`) next to the failure split
-//! (`timeout=`, `cancelled=`).
+//! `row:col` edges, `addcols`/`addrows` append columns/rows as
+//! `|`-separated `;`-lists of neighbor ids — clauses apply in the
+//! canonical order `addrows, addcols, add, del`, so an edge clause may
+//! reference a vertex appended by the same request) and repairs the
+//! maintained matching via seeded augmentation, and `MATCH name=…`
+//! re-serves the cached maximum (warm start — one quiet phase). The
+//! `STATS` report covers them (`updated=`, `graphs:
+//! loaded=/dropped=/evicted=/recovered=`) next to the failure split
+//! (`timeout=`, `cancelled=`) and the durability counters (`persist:
+//! wal_appends=/snapshots=`).
+//!
+//! When the server is bound with a data dir ([`Server::bind_with`]),
+//! graphs survive restarts: `LOAD`s and `UPDATE`s are persisted (WAL +
+//! snapshots, fsync'd before the OK reply), startup recovery replays the
+//! log and repairs each matching, and `SAVE name=…` forces a snapshot +
+//! log compaction on demand. See `crate::persist` for the guarantees.
 //!
 //! Replies:
 //! `OK id=<id> algo=<name> nr=.. nc=.. edges=.. card=.. certified=0|1
@@ -42,11 +53,12 @@
 //! frontier-compaction counters (`RunStats::{frontier_peak,
 //! endpoints_total, device_parallel_cycles}`) so remote clients can
 //! observe compaction behaviour; all three are 0 for CPU algorithms and
-//! for FullScan GPU runs. `LOAD`/`DROP` reply
+//! for FullScan GPU runs. `LOAD`/`DROP`/`SAVE` reply
 //! `OK id=<id> name=<graph> nr=.. nc=.. edges=..` /
-//! `OK id=<id> name=<graph> dropped=1`; `UPDATE` appends
-//! `inserted= deleted= cols_added= rejected= seeds= dropped= joined=
-//! rebuilt=` to the standard OK fields.
+//! `OK id=<id> name=<graph> dropped=1` /
+//! `OK id=<id> name=<graph> saved=1`; `UPDATE` appends
+//! `inserted= deleted= cols_added= rows_added= rejected= seeds= dropped=
+//! joined= rebuilt=` to the standard OK fields.
 
 use super::exec::Executor;
 use super::job::{GraphSource, MatchJob, MatchOutcome};
@@ -72,10 +84,35 @@ pub struct Server {
 impl Server {
     /// Bind to `addr` (use port 0 for an ephemeral port in tests).
     pub fn bind(addr: &str, engine: Option<Arc<Engine>>) -> std::io::Result<Self> {
+        Self::bind_with(addr, engine, None, None)
+    }
+
+    /// [`Server::bind`] plus the durability knobs: with `data_dir` the
+    /// store recovers from disk before the listener accepts its first
+    /// connection, and all store traffic is persisted from then on;
+    /// `max_graphs` caps the in-memory store (LRU, snapshot-on-evict).
+    pub fn bind_with(
+        addr: &str,
+        engine: Option<Arc<Engine>>,
+        data_dir: Option<std::path::PathBuf>,
+        max_graphs: Option<usize>,
+    ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
+        let mut executor = Executor::new(engine, Arc::new(Metrics::new()));
+        if let Some(dir) = data_dir {
+            executor = executor
+                .with_persistence(Arc::new(crate::persist::Persistence::open(dir)?));
+        }
+        if let Some(max) = max_graphs {
+            executor = executor.with_max_graphs(max);
+        }
+        // recovery before the first accept: a client connecting right
+        // after bind already sees the restored store (graphs_recovered in
+        // STATS tells it how many came back)
+        executor.recover()?;
         Ok(Self {
             listener,
-            executor: Executor::new(engine, Arc::new(Metrics::new())),
+            executor,
             next_id: Arc::new(AtomicU64::new(1)),
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -83,6 +120,12 @@ impl Server {
 
     pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
         self.listener.local_addr()
+    }
+
+    /// The server-side graph store (observability: the CLI prints how
+    /// many graphs recovery restored before the first accept).
+    pub fn store(&self) -> &Arc<super::store::GraphStore> {
+        self.executor.store()
     }
 
     /// A handle that makes `serve` return after the in-flight accept.
@@ -152,7 +195,7 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
             });
         }
         Some("STATS") => return Command::Reply(format!("STATS {}", executor.metrics.report())),
-        Some("MATCH" | "LOAD" | "UPDATE" | "DROP") => {}
+        Some("MATCH" | "LOAD" | "UPDATE" | "DROP" | "SAVE") => {}
         Some(other) => return Command::Reply(format!("ERR unknown command {other}")),
         None => return Command::Reply("ERR empty request".into()),
     }
@@ -163,6 +206,7 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
         "LOAD" => parse_load(&kv, next_id),
         "UPDATE" => parse_update(&kv, next_id),
         "DROP" => parse_drop(&kv, next_id),
+        "SAVE" => parse_save(&kv, next_id),
         _ => unreachable!("verb filtered above"),
     };
     match parsed {
@@ -184,6 +228,10 @@ fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
             format!("OK id={} name={} nr={} nc={} edges={}", o.job_id, name, o.nr, o.nc, o.n_edges)
         }
         JobOp::DropGraph { name } => format!("OK id={} name={} dropped=1", o.job_id, name),
+        JobOp::Save { name } => format!(
+            "OK id={} name={} saved=1 nr={} nc={} edges={}",
+            o.job_id, name, o.nr, o.nc, o.n_edges
+        ),
         JobOp::Match | JobOp::Update { .. } => {
             let mut s = format!(
                 "OK id={} algo={} nr={} nc={} edges={} card={} certified={} \
@@ -204,12 +252,13 @@ fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
             );
             if let (JobOp::Update { name, .. }, Some(u)) = (&job.op, &o.update) {
                 s.push_str(&format!(
-                    " name={} inserted={} deleted={} cols_added={} rejected={} seeds={} \
-                     dropped={} joined={} rebuilt={}",
+                    " name={} inserted={} deleted={} cols_added={} rows_added={} \
+                     rejected={} seeds={} dropped={} joined={} rebuilt={}",
                     name,
                     u.inserted,
                     u.deleted,
                     u.cols_added,
+                    u.rows_added,
                     u.rejected,
                     u.seeds,
                     u.dropped,
@@ -285,9 +334,14 @@ fn parse_load(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, Stri
 fn parse_update(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
     let id = next_id.fetch_add(1, Ordering::Relaxed);
     let name = get(kv, "name").ok_or("UPDATE requires name=")?;
-    let batch = DeltaBatch::from_wire(get(kv, "add"), get(kv, "del"), get(kv, "addcols"))?;
+    let batch = DeltaBatch::from_wire(
+        get(kv, "add"),
+        get(kv, "del"),
+        get(kv, "addcols"),
+        get(kv, "addrows"),
+    )?;
     if batch.is_empty() {
-        return Err("empty UPDATE (set add=, del=, or addcols=)".into());
+        return Err("empty UPDATE (set add=, del=, addcols=, or addrows=)".into());
     }
     apply_exec_fields(MatchJob::update_graph(id, name, batch), kv)
 }
@@ -296,6 +350,12 @@ fn parse_drop(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, Stri
     let id = next_id.fetch_add(1, Ordering::Relaxed);
     let name = get(kv, "name").ok_or("DROP requires name=")?;
     Ok(MatchJob::drop_graph(id, name))
+}
+
+fn parse_save(kv: &[(&str, &str)], next_id: &AtomicU64) -> Result<MatchJob, String> {
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let name = get(kv, "name").ok_or("SAVE requires name=")?;
+    Ok(MatchJob::save_graph(id, name))
 }
 
 #[cfg(test)]
@@ -459,6 +519,65 @@ mod tests {
         assert!(roundtrip(addr, "UPDATE name=g add=0-0").starts_with("ERR"));
         assert!(roundtrip(addr, "UPDATE name=g addcols=x").starts_with("ERR"));
         assert!(roundtrip(addr, "UPDATE name=g add=0:1 algo=wat").starts_with("ERR"));
+    }
+
+    #[test]
+    fn addrows_and_save_verbs() {
+        let (addr, _stop) = start_server();
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=200 seed=2").starts_with("OK "));
+        // append two rows (one wired to cols 0 and 1, one isolated)
+        let reply = roundtrip(addr, "UPDATE name=g addrows=0;1|");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains("rows_added=2"), "{reply}");
+        assert!(reply.contains("certified=1"), "{reply}");
+        // malformed addrows rejected at the wire boundary
+        assert!(roundtrip(addr, "UPDATE name=g addrows=x").starts_with("ERR"));
+        // SAVE needs a data dir on this (volatile) server — typed refusal
+        assert!(roundtrip(addr, "SAVE name=g").starts_with("ERR"), "volatile SAVE");
+        assert!(roundtrip(addr, "SAVE").starts_with("ERR"), "SAVE requires name=");
+    }
+
+    #[test]
+    fn durable_server_recovers_after_restart() {
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_server_durable_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let start = |dir: &std::path::Path| {
+            let server =
+                Server::bind_with("127.0.0.1:0", None, Some(dir.to_path_buf()), None).unwrap();
+            let addr = server.local_addr().unwrap();
+            std::thread::spawn(move || server.serve());
+            addr
+        };
+        let addr = start(&dir);
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=300 seed=9").starts_with("OK "));
+        let first = roundtrip(addr, "MATCH name=g");
+        assert!(first.contains("certified=1"), "{first}");
+        let reply = roundtrip(addr, "UPDATE name=g addcols=0;1;2 del=0:0");
+        assert!(reply.starts_with("OK "), "{reply}");
+        let card = reply
+            .split_whitespace()
+            .find_map(|kv| kv.strip_prefix("card="))
+            .unwrap()
+            .to_string();
+        let stats = roundtrip(addr, "STATS");
+        assert!(stats.contains("wal_appends="), "{stats}");
+        // "restart": a second server over the same data dir recovers the
+        // graph and serves the identical cardinality, warm
+        let addr2 = start(&dir);
+        let stats = roundtrip(addr2, "STATS");
+        assert!(stats.contains("recovered=1"), "{stats}");
+        let reply = roundtrip(addr2, "MATCH name=g");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(
+            reply.contains(&format!(" card={card} ")),
+            "want card={card}: {reply}"
+        );
+        assert!(reply.contains("certified=1"), "{reply}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -8,10 +8,47 @@ use super::metrics::Metrics;
 use super::queue::BoundedQueue;
 use super::store::GraphStore;
 use crate::matching::algo::CancelToken;
+use crate::persist::{Persistence, RecoveryReport};
 use crate::runtime::Engine;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// How to start a [`Service`]. The plain constructor
+/// ([`Service::start`]) covers the in-memory case; the config adds the
+/// durability knobs (`data_dir` → WAL + snapshots + startup recovery,
+/// `max_graphs` → LRU store cap).
+pub struct ServiceConfig {
+    pub n_workers: usize,
+    pub queue_depth: usize,
+    pub engine: Option<Arc<Engine>>,
+    /// directory for per-graph WALs and snapshots; `None` = volatile
+    pub data_dir: Option<PathBuf>,
+    /// LRU cap on in-memory stored graphs; `None` = unlimited
+    pub max_graphs: Option<usize>,
+}
+
+impl ServiceConfig {
+    pub fn new(n_workers: usize, queue_depth: usize) -> Self {
+        Self { n_workers, queue_depth, engine: None, data_dir: None, max_graphs: None }
+    }
+
+    pub fn engine(mut self, engine: Option<Arc<Engine>>) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn data_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.data_dir = Some(dir.into());
+        self
+    }
+
+    pub fn max_graphs(mut self, max: usize) -> Self {
+        self.max_graphs = Some(max);
+        self
+    }
+}
 
 pub struct Service {
     jobs: Arc<BoundedQueue<MatchJob>>,
@@ -19,6 +56,7 @@ pub struct Service {
     pub metrics: Arc<Metrics>,
     cancel: CancelToken,
     store: Arc<GraphStore>,
+    recovery: Option<RecoveryReport>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -27,16 +65,37 @@ impl Service {
     /// (submit blocks beyond it — backpressure). Workers share one
     /// executor clone-family: one workspace pool, one cancellation token.
     pub fn start(n_workers: usize, queue_depth: usize, engine: Option<Arc<Engine>>) -> Self {
-        assert!(n_workers >= 1);
-        let jobs: Arc<BoundedQueue<MatchJob>> = Arc::new(BoundedQueue::new(queue_depth));
+        Self::start_cfg(ServiceConfig::new(n_workers, queue_depth).engine(engine))
+            .expect("volatile service start cannot fail")
+    }
+
+    /// Start from a [`ServiceConfig`]. With a `data_dir`, the store is
+    /// recovered from disk *before* any worker accepts a job — every
+    /// surviving graph is installed at its logged version with its
+    /// matching restored by seeded repair ([`Service::recovery`] reports
+    /// what happened) — and all further `LOAD`/`UPDATE`/`DROP` traffic is
+    /// made durable (see `crate::persist`). Errors only on an unusable
+    /// data dir.
+    pub fn start_cfg(cfg: ServiceConfig) -> std::io::Result<Self> {
+        assert!(cfg.n_workers >= 1);
+        let jobs: Arc<BoundedQueue<MatchJob>> = Arc::new(BoundedQueue::new(cfg.queue_depth));
         let results: Arc<BoundedQueue<MatchOutcome>> =
-            Arc::new(BoundedQueue::new(queue_depth.max(1024)));
+            Arc::new(BoundedQueue::new(cfg.queue_depth.max(1024)));
         let metrics = Arc::new(Metrics::new());
-        let executor = Executor::new(engine, metrics.clone());
+        let mut executor = Executor::new(cfg.engine, metrics.clone());
+        if let Some(dir) = &cfg.data_dir {
+            executor = executor.with_persistence(Arc::new(Persistence::open(dir)?));
+        }
+        if let Some(max) = cfg.max_graphs {
+            executor = executor.with_max_graphs(max);
+        }
+        // recovery runs on the caller's thread, before traffic: a MATCH
+        // submitted right after start_cfg already sees the restored store
+        let recovery = if cfg.data_dir.is_some() { Some(executor.recover()?) } else { None };
         let cancel = executor.cancel_token();
         let store = executor.store().clone();
-        let mut workers = Vec::with_capacity(n_workers);
-        for wid in 0..n_workers {
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for wid in 0..cfg.n_workers {
             let jobs = jobs.clone();
             let results = results.clone();
             let executor = executor.clone();
@@ -53,7 +112,14 @@ impl Service {
                     .expect("spawn worker"),
             );
         }
-        Self { jobs, results, metrics, cancel, store, workers }
+        Ok(Self { jobs, results, metrics, cancel, store, recovery, workers })
+    }
+
+    /// What startup recovery restored (None when started without a data
+    /// dir). The e2e durability tests assert on the per-graph repair
+    /// stats in here.
+    pub fn recovery(&self) -> Option<&RecoveryReport> {
+        self.recovery.as_ref()
     }
 
     /// The graph store shared by this service's workers — `LOAD`ed graphs

@@ -36,6 +36,7 @@ pub struct GraphStats {
     pub edges_inserted: u64,
     pub edges_deleted: u64,
     pub cols_added: u64,
+    pub rows_added: u64,
     pub repairs: u64,
 }
 
@@ -67,6 +68,11 @@ pub struct GraphStore {
     /// incarnations of the same name can never present the same graph
     /// version (the guard [`GraphStore::cache_into`] relies on)
     next_version_base: std::sync::atomic::AtomicU64,
+    /// LRU bookkeeping for the optional `--max-graphs` cap: a logical
+    /// clock stamped on every load/lookup; [`GraphStore::lru_victim`]
+    /// picks the stalest name when the executor must evict
+    clock: std::sync::atomic::AtomicU64,
+    recency: Mutex<HashMap<String, u64>>,
 }
 
 impl GraphStore {
@@ -74,31 +80,96 @@ impl GraphStore {
         Self::default()
     }
 
+    fn touch(&self, name: &str) {
+        let t = self.clock.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.recency.lock().unwrap().insert(name.to_string(), t);
+    }
+
+    /// Reserve a fresh 2^32-wide version range. Split out of
+    /// [`GraphStore::load`] so the durability layer can persist the base
+    /// *before* the graph becomes visible in the store.
+    pub fn allocate_version_base(&self) -> u64 {
+        self.next_version_base
+            .fetch_add(1 << 32, std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Advance the allocator past `seen_version`'s range — recovery calls
+    /// this with every recovered graph's version so post-restart `LOAD`s
+    /// can never collide with ranges already on disk.
+    pub fn reserve_past(&self, seen_version: u64) {
+        let min_base = ((seen_version >> 32) + 1) << 32;
+        self.next_version_base
+            .fetch_max(min_base, std::sync::atomic::Ordering::Relaxed);
+    }
+
     /// Install (or replace) a named graph. Replacement discards the old
     /// entry wholesale — cached matching and stats included — because a
     /// re-`LOAD` is a new graph, not an update. Returns whether a
     /// previous entry was replaced.
     pub fn load(&self, name: &str, g: Arc<BipartiteCsr>) -> bool {
-        let base = self
-            .next_version_base
-            .fetch_add(1 << 32, std::sync::atomic::Ordering::Relaxed);
+        let base = self.allocate_version_base();
+        self.load_with_base(name, g, base)
+    }
+
+    /// [`GraphStore::load`] with a caller-reserved version base (from
+    /// [`GraphStore::allocate_version_base`]).
+    pub fn load_with_base(&self, name: &str, g: Arc<BipartiteCsr>, base: u64) -> bool {
         let entry = Arc::new(Mutex::new(StoreEntry {
             graph: DynamicGraph::from_arc(g).with_version_base(base),
             matching: None,
             stats: GraphStats::default(),
         }));
+        self.touch(name);
         self.inner.lock().unwrap().insert(name.to_string(), entry).is_some()
+    }
+
+    /// Install a recovered graph verbatim — version, overlay, and cached
+    /// matching as reconstructed from disk — and fence the version
+    /// allocator past its range.
+    pub fn install(
+        &self,
+        name: &str,
+        graph: DynamicGraph,
+        matching: Option<CachedMatching>,
+    ) -> Arc<Mutex<StoreEntry>> {
+        self.reserve_past(graph.version());
+        let entry = Arc::new(Mutex::new(StoreEntry {
+            graph,
+            matching,
+            stats: GraphStats::default(),
+        }));
+        self.touch(name);
+        self.inner.lock().unwrap().insert(name.to_string(), entry.clone());
+        entry
     }
 
     /// Remove a named graph. Returns whether it existed.
     pub fn drop_graph(&self, name: &str) -> bool {
+        self.recency.lock().unwrap().remove(name);
         self.inner.lock().unwrap().remove(name).is_some()
+    }
+
+    /// The least-recently-used name other than `exclude` (the graph a
+    /// `LOAD` just installed must not evict itself).
+    pub fn lru_victim(&self, exclude: &str) -> Option<String> {
+        let recency = self.recency.lock().unwrap();
+        self.inner
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|n| n.as_str() != exclude)
+            .min_by_key(|n| recency.get(*n).copied().unwrap_or(0))
+            .cloned()
     }
 
     /// The entry handle for `name` (callers lock it themselves — the
     /// executor's `UPDATE` path holds it across apply + repair).
     pub fn entry(&self, name: &str) -> Option<Arc<Mutex<StoreEntry>>> {
-        self.inner.lock().unwrap().get(name).cloned()
+        let e = self.inner.lock().unwrap().get(name).cloned();
+        if e.is_some() {
+            self.touch(name);
+        }
+        e
     }
 
     /// Everything a `MATCH name=…` needs, under one short entry lock —
@@ -208,6 +279,32 @@ mod tests {
         // replacement clears the cache
         store.load("g", g22());
         assert!(store.graph_for_match("g").unwrap().cached.is_none());
+    }
+
+    #[test]
+    fn lru_victim_tracks_recency_and_install_fences_versions() {
+        let store = GraphStore::new();
+        store.load("a", g22());
+        store.load("b", g22());
+        store.load("c", g22());
+        // stalest is "a"; touching it (a lookup) moves it to the front
+        assert_eq!(store.lru_victim("").as_deref(), Some("a"));
+        let _ = store.entry("a");
+        assert_eq!(store.lru_victim("").as_deref(), Some("b"));
+        // the just-installed graph is never its own victim
+        assert_eq!(store.lru_victim("b").as_deref(), Some("c"));
+        // install (recovery path) fences the version allocator: the next
+        // load's range must be disjoint from the recovered version's
+        let recovered_version = (7u64 << 32) + 3;
+        let g = DynamicGraph::from_arc(g22()).with_version_base(recovered_version);
+        store.install("r", g, None);
+        assert_eq!(store.graph_for_match("r").unwrap().version, recovered_version);
+        store.load("fresh", g22());
+        let v = store.graph_for_match("fresh").unwrap().version;
+        assert!(
+            v >> 32 > 7,
+            "post-recovery loads must allocate past every recovered range, got {v:#x}"
+        );
     }
 
     #[test]

@@ -1,13 +1,23 @@
 //! Delta batches: the unit of change an online client ships to a stored
-//! graph. Three op kinds cover the workload the service sees — edge
-//! insertion, edge deletion, and column (vertex) addition — batched so the
-//! repair machinery amortizes one seeded augmentation pass over the whole
-//! batch instead of paying per-edge.
+//! graph. Four op kinds cover the workload the service sees — edge
+//! insertion, edge deletion, and column/row (vertex) addition — batched so
+//! the repair machinery amortizes one seeded augmentation pass over the
+//! whole batch instead of paying per-edge.
 //!
 //! The wire format (server `UPDATE` verb) is deliberately flat:
-//! `add=r:c,r:c del=r:c addcols=r;r|r` — comma-separated `row:col` pairs
-//! for edges, and `|`-separated `;`-lists of neighbor rows for new
-//! columns (an empty segment adds an isolated column).
+//! `add=r:c,r:c del=r:c addcols=r;r|r addrows=c;c|c` — comma-separated
+//! `row:col` pairs for edges, and `|`-separated `;`-lists of neighbor ids
+//! for new vertices (an empty segment adds an isolated column/row). Fields
+//! apply in a fixed canonical order — `addrows`, `addcols`, `add`, `del` —
+//! so a single request can append a vertex *and* reference it from the
+//! edge clauses; [`DeltaBatch::to_wire`] emits the same order, which makes
+//! the wire text round-trip exactly for every batch the server builds
+//! (and for the net batches [`DeltaBatch::net_from_report`] derives — the
+//! form the durability layer's write-ahead log records; see
+//! `crate::persist::wal`).
+
+use super::graph::ApplyReport;
+use std::collections::BTreeMap;
 
 /// One mutation of a stored bipartite graph.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -19,10 +29,13 @@ pub enum DeltaOp {
     /// Append a new column vertex adjacent to `rows` (may be empty).
     /// The new column's id is the graph's `nc` at application time.
     AddColumn { rows: Vec<u32> },
+    /// Append a new row vertex adjacent to `cols` (may be empty).
+    /// The new row's id is the graph's `nr` at application time.
+    AddRow { cols: Vec<u32> },
 }
 
 /// An ordered batch of mutations, applied atomically to a
-/// [`super::DynamicGraph`] (one [`super::ApplyReport`] out, one repair).
+/// [`super::DynamicGraph`] (one [`ApplyReport`] out, one repair).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DeltaBatch {
     pub ops: Vec<DeltaOp>,
@@ -48,6 +61,11 @@ impl DeltaBatch {
         self
     }
 
+    pub fn add_row(mut self, cols: Vec<u32>) -> Self {
+        self.ops.push(DeltaOp::AddRow { cols });
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.ops.len()
     }
@@ -58,26 +76,148 @@ impl DeltaBatch {
 
     /// Build a batch from the server's `UPDATE` fields. `None` fields and
     /// empty strings contribute nothing; malformed fields are rejected
-    /// whole (the request never reaches the store half-parsed).
+    /// whole (the request never reaches the store half-parsed). Ops are
+    /// assembled in the canonical order (`addrows`, `addcols`, `add`,
+    /// `del`) so edge clauses may reference vertices appended by the same
+    /// request.
     pub fn from_wire(
         add: Option<&str>,
         del: Option<&str>,
         addcols: Option<&str>,
+        addrows: Option<&str>,
     ) -> Result<DeltaBatch, String> {
         let mut batch = DeltaBatch::new();
+        if let Some(rows) = addrows {
+            for cols in parse_vertex_lists(rows, "addrows")? {
+                batch.ops.push(DeltaOp::AddRow { cols });
+            }
+        }
+        if let Some(cols) = addcols {
+            for rows in parse_vertex_lists(cols, "addcols")? {
+                batch.ops.push(DeltaOp::AddColumn { rows });
+            }
+        }
         for (r, c) in parse_edge_pairs(add.unwrap_or(""))? {
             batch.ops.push(DeltaOp::InsertEdge { r, c });
         }
         for (r, c) in parse_edge_pairs(del.unwrap_or(""))? {
             batch.ops.push(DeltaOp::DeleteEdge { r, c });
         }
-        if let Some(cols) = addcols {
-            for rows in parse_columns(cols)? {
-                batch.ops.push(DeltaOp::AddColumn { rows });
-            }
-        }
         Ok(batch)
     }
+
+    /// Parse a full wire line of space-separated clauses, e.g.
+    /// `"add=0:1 del=2:3 addcols=0;1 addrows=2"`. Inverse of
+    /// [`DeltaBatch::to_wire`]; unknown clauses are rejected (a WAL record
+    /// is fully trusted or not at all).
+    pub fn parse_wire(line: &str) -> Result<DeltaBatch, String> {
+        let (mut add, mut del, mut addcols, mut addrows) = (None, None, None, None);
+        for field in line.split_whitespace() {
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| format!("bad delta clause {field:?}"))?;
+            match k {
+                "add" => add = Some(v),
+                "del" => del = Some(v),
+                "addcols" => addcols = Some(v),
+                "addrows" => addrows = Some(v),
+                other => return Err(format!("unknown delta clause {other:?}")),
+            }
+        }
+        Self::from_wire(add, del, addcols, addrows)
+    }
+
+    /// Render the batch in the server's `UPDATE` wire format, clauses in
+    /// the canonical order (`addrows= addcols= add= del=`, empty clauses
+    /// omitted). Round-trips exactly through [`DeltaBatch::parse_wire`]
+    /// for batches already in canonical grouped order — which covers
+    /// every batch built by `from_wire` and every net batch from
+    /// [`DeltaBatch::net_from_report`]; a hand-built batch with
+    /// interleaved ops is *normalized* into that order (same ops, grouped).
+    pub fn to_wire(&self) -> String {
+        let mut ins = Vec::new();
+        let mut del = Vec::new();
+        let mut cols = Vec::new();
+        let mut rows = Vec::new();
+        for op in &self.ops {
+            match op {
+                DeltaOp::InsertEdge { r, c } => ins.push(format!("{r}:{c}")),
+                DeltaOp::DeleteEdge { r, c } => del.push(format!("{r}:{c}")),
+                DeltaOp::AddColumn { rows } => cols.push(fmt_vertex_list(rows)),
+                DeltaOp::AddRow { cols } => rows.push(fmt_vertex_list(cols)),
+            }
+        }
+        let mut out = Vec::new();
+        if !rows.is_empty() {
+            out.push(format!("addrows={}", rows.join("|")));
+        }
+        if !cols.is_empty() {
+            out.push(format!("addcols={}", cols.join("|")));
+        }
+        if !ins.is_empty() {
+            out.push(format!("add={}", ins.join(",")));
+        }
+        if !del.is_empty() {
+            out.push(format!("del={}", del.join(",")));
+        }
+        out.join(" ")
+    }
+
+    /// The canonical batch whose application reproduces `report`'s net
+    /// effect on the pre-batch graph. Vertex additions come first (rows,
+    /// then columns — ids are assigned by count, so the reconstructed ids
+    /// match the report's), each inserted edge is attached to the added
+    /// column it references (else the added row, else the `add=` clause),
+    /// and net deletions close the batch. This is what the write-ahead
+    /// log records: replaying it is exact regardless of how the original
+    /// batch interleaved its ops, because a *net* report has no
+    /// insert/delete conflicts by construction.
+    pub fn net_from_report(report: &ApplyReport) -> DeltaBatch {
+        // id → op index, O(log n) lookups: this runs on the durable-UPDATE
+        // hot path (WAL serialization) under the graph's entry lock
+        let new_cols: BTreeMap<u32, usize> = report
+            .added_cols
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i))
+            .collect();
+        let new_rows: BTreeMap<u32, usize> = report
+            .added_rows
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, i))
+            .collect();
+        let mut col_rows: Vec<Vec<u32>> = vec![Vec::new(); new_cols.len()];
+        let mut row_cols: Vec<Vec<u32>> = vec![Vec::new(); new_rows.len()];
+        let mut plain = Vec::new();
+        for &(r, c) in &report.inserted {
+            if let Some(&i) = new_cols.get(&c) {
+                col_rows[i].push(r);
+            } else if let Some(&i) = new_rows.get(&r) {
+                row_cols[i].push(c);
+            } else {
+                plain.push((r, c));
+            }
+        }
+        let mut batch = DeltaBatch::new();
+        for cols in row_cols {
+            batch = batch.add_row(cols);
+        }
+        for rows in col_rows {
+            batch = batch.add_column(rows);
+        }
+        for (r, c) in plain {
+            batch = batch.insert(r, c);
+        }
+        for &(r, c) in &report.deleted {
+            batch = batch.delete(r, c);
+        }
+        batch
+    }
+}
+
+fn fmt_vertex_list(ids: &[u32]) -> String {
+    ids.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(";")
 }
 
 /// Parse `"r:c,r:c,..."` (empty string → no pairs).
@@ -97,25 +237,33 @@ pub fn parse_edge_pairs(s: &str) -> Result<Vec<(u32, u32)>, String> {
     Ok(out)
 }
 
-/// Parse `"r;r|r|..."`: one new column per `|`-segment, each a
-/// `;`-separated neighbor-row list (an empty segment is an isolated
-/// column). An empty string adds nothing.
-pub fn parse_columns(s: &str) -> Result<Vec<Vec<u32>>, String> {
+/// Parse `"a;a|a|..."`: one new vertex per `|`-segment, each a
+/// `;`-separated neighbor-id list (an empty segment is an isolated
+/// vertex). An empty string adds nothing. `clause` names the wire field
+/// in error messages (`addcols` neighbor ids are rows, `addrows` ids are
+/// columns).
+pub fn parse_vertex_lists(s: &str, clause: &str) -> Result<Vec<Vec<u32>>, String> {
     if s.is_empty() {
         return Ok(Vec::new());
     }
     let mut out = Vec::new();
     for seg in s.split('|') {
-        let mut rows = Vec::new();
+        let mut ids = Vec::new();
         for tok in seg.split(';') {
             if tok.is_empty() {
                 continue;
             }
-            rows.push(tok.parse::<u32>().map_err(|_| format!("bad row {tok:?} in addcols"))?);
+            ids.push(tok.parse::<u32>().map_err(|_| format!("bad id {tok:?} in {clause}"))?);
         }
-        out.push(rows);
+        out.push(ids);
     }
     Ok(out)
+}
+
+/// Parse `"r;r|r|..."` — kept as the historical name for the `addcols`
+/// clause (see [`parse_vertex_lists`]).
+pub fn parse_columns(s: &str) -> Result<Vec<Vec<u32>>, String> {
+    parse_vertex_lists(s, "addcols")
 }
 
 #[cfg(test)]
@@ -124,49 +272,107 @@ mod tests {
 
     #[test]
     fn builder_accumulates_ops_in_order() {
-        let b = DeltaBatch::new().insert(1, 2).delete(3, 4).add_column(vec![0, 1]);
-        assert_eq!(b.len(), 3);
+        let b = DeltaBatch::new()
+            .insert(1, 2)
+            .delete(3, 4)
+            .add_column(vec![0, 1])
+            .add_row(vec![2]);
+        assert_eq!(b.len(), 4);
         assert!(!b.is_empty());
         assert_eq!(b.ops[0], DeltaOp::InsertEdge { r: 1, c: 2 });
         assert_eq!(b.ops[1], DeltaOp::DeleteEdge { r: 3, c: 4 });
         assert_eq!(b.ops[2], DeltaOp::AddColumn { rows: vec![0, 1] });
+        assert_eq!(b.ops[3], DeltaOp::AddRow { cols: vec![2] });
     }
 
     #[test]
     fn wire_roundtrip() {
-        let b = DeltaBatch::from_wire(Some("0:1,2:3"), Some("4:5"), Some("1;2|3|")).unwrap();
+        let b =
+            DeltaBatch::from_wire(Some("0:1,2:3"), Some("4:5"), Some("1;2|3|"), Some("0;1"))
+                .unwrap();
         assert_eq!(
             b.ops,
             vec![
-                DeltaOp::InsertEdge { r: 0, c: 1 },
-                DeltaOp::InsertEdge { r: 2, c: 3 },
-                DeltaOp::DeleteEdge { r: 4, c: 5 },
+                DeltaOp::AddRow { cols: vec![0, 1] },
                 DeltaOp::AddColumn { rows: vec![1, 2] },
                 DeltaOp::AddColumn { rows: vec![3] },
                 DeltaOp::AddColumn { rows: vec![] },
+                DeltaOp::InsertEdge { r: 0, c: 1 },
+                DeltaOp::InsertEdge { r: 2, c: 3 },
+                DeltaOp::DeleteEdge { r: 4, c: 5 },
             ]
         );
+        // to_wire emits the canonical clause order; parse_wire inverts it
+        let wire = b.to_wire();
+        assert_eq!(wire, "addrows=0;1 addcols=1;2|3| add=0:1,2:3 del=4:5");
+        assert_eq!(DeltaBatch::parse_wire(&wire).unwrap(), b);
     }
 
     #[test]
     fn wire_empty_fields_are_empty_batches() {
-        assert!(DeltaBatch::from_wire(None, None, None).unwrap().is_empty());
-        assert!(DeltaBatch::from_wire(Some(""), Some(""), None).unwrap().is_empty());
+        assert!(DeltaBatch::from_wire(None, None, None, None).unwrap().is_empty());
+        assert!(DeltaBatch::from_wire(Some(""), Some(""), None, None).unwrap().is_empty());
+        assert_eq!(DeltaBatch::new().to_wire(), "");
+        assert!(DeltaBatch::parse_wire("").unwrap().is_empty());
     }
 
     #[test]
     fn wire_malformed_rejected() {
-        assert!(DeltaBatch::from_wire(Some("1-2"), None, None).is_err());
-        assert!(DeltaBatch::from_wire(Some("x:1"), None, None).is_err());
-        assert!(DeltaBatch::from_wire(None, Some("1:y"), None).is_err());
-        assert!(DeltaBatch::from_wire(None, None, Some("1;q")).is_err());
+        assert!(DeltaBatch::from_wire(Some("1-2"), None, None, None).is_err());
+        assert!(DeltaBatch::from_wire(Some("x:1"), None, None, None).is_err());
+        assert!(DeltaBatch::from_wire(None, Some("1:y"), None, None).is_err());
+        assert!(DeltaBatch::from_wire(None, None, Some("1;q"), None).is_err());
+        assert!(DeltaBatch::from_wire(None, None, None, Some("z")).is_err());
+        assert!(DeltaBatch::parse_wire("add=0:1 bogus=2").is_err());
+        assert!(DeltaBatch::parse_wire("naked").is_err());
     }
 
     #[test]
-    fn parse_columns_isolated() {
+    fn parse_vertex_lists_isolated() {
         assert_eq!(parse_columns("").unwrap(), Vec::<Vec<u32>>::new());
         // a single empty segment is one isolated column
         let two = parse_columns("|").unwrap();
         assert_eq!(two, vec![Vec::<u32>::new(), Vec::<u32>::new()]);
+        assert_eq!(parse_vertex_lists("3;4|", "addrows").unwrap(), vec![vec![3, 4], vec![]]);
+    }
+
+    #[test]
+    fn net_from_report_routes_edges_to_their_vertex_ops() {
+        let report = ApplyReport {
+            // col 5 and row 7 are new; (2,5) belongs to the column op,
+            // (7,1) to the row op, (0,0) to the plain add clause
+            inserted: vec![(0, 0), (2, 5), (7, 1)],
+            deleted: vec![(3, 3)],
+            added_cols: vec![5],
+            added_rows: vec![7],
+            rejected: 0,
+            rebuilt: false,
+        };
+        let b = DeltaBatch::net_from_report(&report);
+        assert_eq!(
+            b.ops,
+            vec![
+                DeltaOp::AddRow { cols: vec![1] },
+                DeltaOp::AddColumn { rows: vec![2] },
+                DeltaOp::InsertEdge { r: 0, c: 0 },
+                DeltaOp::DeleteEdge { r: 3, c: 3 },
+            ]
+        );
+        // an edge between two NEW vertices is attached to the column op —
+        // legal because addrows precedes addcols in canonical order
+        let report = ApplyReport {
+            inserted: vec![(7, 5)],
+            deleted: vec![],
+            added_cols: vec![5],
+            added_rows: vec![7],
+            rejected: 0,
+            rebuilt: false,
+        };
+        let b = DeltaBatch::net_from_report(&report);
+        assert_eq!(
+            b.ops,
+            vec![DeltaOp::AddRow { cols: vec![] }, DeltaOp::AddColumn { rows: vec![7] }]
+        );
+        assert_eq!(DeltaBatch::parse_wire(&b.to_wire()).unwrap(), b);
     }
 }

@@ -32,7 +32,10 @@ pub struct ApplyReport {
     pub deleted: Vec<(u32, u32)>,
     /// ids of columns appended by the batch
     pub added_cols: Vec<u32>,
-    /// ops (or rows of an `AddColumn`) dropped as out-of-range or no-ops
+    /// ids of rows appended by the batch
+    pub added_rows: Vec<u32>,
+    /// ops (or neighbor ids of an `AddColumn`/`AddRow`) dropped as
+    /// out-of-range or no-ops
     pub rejected: usize,
     /// whether this apply tripped a base rebuild
     pub rebuilt: bool,
@@ -41,12 +44,95 @@ pub struct ApplyReport {
 impl ApplyReport {
     /// Nothing changed structurally (every op was a no-op or rejected).
     pub fn is_noop(&self) -> bool {
-        self.inserted.is_empty() && self.deleted.is_empty() && self.added_cols.is_empty()
+        self.inserted.is_empty()
+            && self.deleted.is_empty()
+            && self.added_cols.is_empty()
+            && self.added_rows.is_empty()
+    }
+
+    /// Fold `next` (the report of a *later* batch against the same graph)
+    /// into `self`, keeping the combined report a *net* effect relative to
+    /// the graph as it stood before `self`'s batch: an edge `self`
+    /// inserted that `next` deleted cancels out (and vice versa), vertex
+    /// additions and counters accumulate. This is how recovery collapses a
+    /// replayed WAL tail into the single report that seeds one repair —
+    /// see `crate::persist::recover`.
+    pub fn absorb(&mut self, next: &ApplyReport) {
+        let mut ins: BTreeSet<(u32, u32)> = self.inserted.drain(..).collect();
+        let mut del: BTreeSet<(u32, u32)> = self.deleted.drain(..).collect();
+        for &e in &next.inserted {
+            if !del.remove(&e) {
+                ins.insert(e);
+            }
+        }
+        for &e in &next.deleted {
+            if !ins.remove(&e) {
+                del.insert(e);
+            }
+        }
+        self.inserted = ins.into_iter().collect();
+        self.deleted = del.into_iter().collect();
+        self.added_cols.extend_from_slice(&next.added_cols);
+        self.added_rows.extend_from_slice(&next.added_rows);
+        self.rejected += next.rejected;
+        self.rebuilt |= next.rebuilt;
+    }
+
+    /// Stable single-line serialization (WAL frame payloads — each
+    /// update frame carries the report its batch produced, so replay can
+    /// verify it reproduced the same net effect). Inverse of
+    /// [`ApplyReport::parse_wire`].
+    pub fn to_wire(&self) -> String {
+        let edges = |v: &[(u32, u32)]| {
+            v.iter().map(|(r, c)| format!("{r}:{c}")).collect::<Vec<_>>().join(",")
+        };
+        let ids = |v: &[u32]| v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        format!(
+            "ins={} del={} cols={} rows={} rejected={} rebuilt={}",
+            edges(&self.inserted),
+            edges(&self.deleted),
+            ids(&self.added_cols),
+            ids(&self.added_rows),
+            self.rejected,
+            self.rebuilt as u8
+        )
+    }
+
+    pub fn parse_wire(line: &str) -> Result<ApplyReport, String> {
+        let mut report = ApplyReport::default();
+        for field in line.split_whitespace() {
+            let (k, v) =
+                field.split_once('=').ok_or_else(|| format!("bad report field {field:?}"))?;
+            let parse_ids = |v: &str| -> Result<Vec<u32>, String> {
+                v.split(',')
+                    .filter(|t| !t.is_empty())
+                    .map(|t| t.parse::<u32>().map_err(|_| format!("bad id {t:?}")))
+                    .collect()
+            };
+            match k {
+                "ins" => report.inserted = super::delta::parse_edge_pairs(v)?,
+                "del" => report.deleted = super::delta::parse_edge_pairs(v)?,
+                "cols" => report.added_cols = parse_ids(v)?,
+                "rows" => report.added_rows = parse_ids(v)?,
+                "rejected" => {
+                    report.rejected =
+                        v.parse().map_err(|_| format!("bad rejected count {v:?}"))?
+                }
+                "rebuilt" => report.rebuilt = v == "1",
+                other => return Err(format!("unknown report field {other:?}")),
+            }
+        }
+        Ok(report)
     }
 }
 
 /// A server-resident mutable bipartite graph: frozen CSR base + overlay.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares the *entire* state — base CSR contents, overlay
+/// maps, counters, version, memo — which is what the transactional-update
+/// rollback tests lean on: a rolled-back entry must equal its pre-batch
+/// clone byte-for-byte, rebuilds included.
+#[derive(Debug, Clone, PartialEq)]
 pub struct DynamicGraph {
     base: Arc<BipartiteCsr>,
     /// col → rows added on top of the base (includes all edges of columns
@@ -156,6 +242,7 @@ impl DynamicGraph {
         let mut net_ins: BTreeSet<(u32, u32)> = BTreeSet::new();
         let mut net_del: BTreeSet<(u32, u32)> = BTreeSet::new();
         let mut added_cols = Vec::new();
+        let mut added_rows = Vec::new();
         let mut rejected = 0usize;
         for op in &batch.ops {
             match op {
@@ -200,13 +287,38 @@ impl DynamicGraph {
                     self.ins.insert(c, set);
                     added_cols.push(c);
                 }
+                DeltaOp::AddRow { cols } => {
+                    // symmetric to AddColumn, but the overlay is keyed by
+                    // column: the new row's edges scatter into the
+                    // per-column insert sets (the base has no row `r`, so
+                    // they can never be base unmaskings)
+                    let r = self.nr as u32;
+                    self.nr += 1;
+                    for &c in cols {
+                        if (c as usize) < self.nc {
+                            // duplicate cols in the list dedup silently,
+                            // matching AddColumn's row-list behavior
+                            if self.ins.entry(c).or_default().insert(r) {
+                                self.ins_count += 1;
+                                net_ins.insert((r, c));
+                            }
+                        } else {
+                            rejected += 1;
+                        }
+                    }
+                    added_rows.push(r);
+                }
             }
         }
-        let changed = !(net_ins.is_empty() && net_del.is_empty() && added_cols.is_empty());
+        let changed = !(net_ins.is_empty()
+            && net_del.is_empty()
+            && added_cols.is_empty()
+            && added_rows.is_empty());
         let mut report = ApplyReport {
             inserted: net_ins.into_iter().collect(),
             deleted: net_del.into_iter().collect(),
             added_cols,
+            added_rows,
             rejected,
             rebuilt: false,
         };
@@ -288,7 +400,9 @@ impl DynamicGraph {
     /// back the base for free; dirty ones materialize once and memoize
     /// until the next apply.
     pub fn snapshot(&mut self) -> Arc<BipartiteCsr> {
-        if self.overlay_edits() == 0 && self.nc == self.base.nc {
+        // vertex counts must match too: an appended *isolated* row/column
+        // leaves the overlay empty yet changes the graph's shape
+        if self.overlay_edits() == 0 && self.nc == self.base.nc && self.nr == self.base.nr {
             return self.base.clone();
         }
         if let Some(c) = &self.cache {
@@ -410,6 +524,103 @@ mod tests {
         let mut g = small();
         assert!(!g.apply(&DeltaBatch::new().insert(2, 0)).rebuilt);
         assert_eq!(g.rebuilds(), 0);
+    }
+
+    #[test]
+    fn add_row_appends_and_scatters_edges() {
+        let mut g = small();
+        let rep = g.apply(&DeltaBatch::new().add_row(vec![0, 2, 0, 9]).add_row(vec![]));
+        assert_eq!(rep.added_rows, vec![3, 4]);
+        assert_eq!(rep.rejected, 1, "col 9 is out of range");
+        assert_eq!(rep.inserted, vec![(3, 0), (3, 2)]);
+        assert_eq!(g.nr(), 5);
+        assert_eq!(g.n_edges(), 6);
+        let s = g.snapshot();
+        assert_eq!(s.nr, 5);
+        assert_eq!(s.row_neighbors(3), &[0, 2]);
+        assert_eq!(s.row_degree(4), 0);
+        assert!(s.validate().is_ok());
+        // the new row's edges are live and deletable
+        let rep = g.apply(&DeltaBatch::new().delete(3, 0));
+        assert_eq!(rep.deleted, vec![(3, 0)]);
+        assert!(!g.has_edge(3, 0));
+        // and an edge into the new row can be added after the fact
+        let rep = g.apply(&DeltaBatch::new().insert(4, 1));
+        assert_eq!(rep.inserted, vec![(4, 1)]);
+        assert!(g.snapshot().has_edge(4, 1));
+    }
+
+    #[test]
+    fn isolated_row_changes_the_snapshot_shape() {
+        // regression: an isolated appended row leaves the overlay empty,
+        // so the clean-graph fast path must not hand back the old base
+        let mut g = small();
+        let rep = g.apply(&DeltaBatch::new().add_row(vec![]));
+        assert_eq!(rep.added_rows, vec![3]);
+        assert!(!rep.is_noop());
+        assert_eq!(g.overlay_edits(), 0);
+        let s = g.snapshot();
+        assert_eq!((s.nr, s.nc), (4, 3));
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn absorb_cancels_across_reports() {
+        let mut g = small();
+        let rep1 = g.apply(&DeltaBatch::new().insert(2, 0).delete(0, 0).add_column(vec![1]));
+        let mut acc = rep1.clone();
+        // second batch: delete what the first inserted (incl. the new
+        // column's edge), restore what it deleted, add a row
+        let rep2 =
+            g.apply(&DeltaBatch::new().delete(2, 0).delete(1, 3).insert(0, 0).add_row(vec![2]));
+        acc.absorb(&rep2);
+        assert_eq!(acc.inserted, vec![(3, 2)], "only the new row's edge survives net");
+        assert_eq!(acc.deleted, vec![], "delete/insert pairs cancel across batches");
+        assert_eq!(acc.added_cols, vec![3]);
+        assert_eq!(acc.added_rows, vec![3]);
+    }
+
+    #[test]
+    fn report_wire_roundtrip() {
+        let rep = ApplyReport {
+            inserted: vec![(0, 1), (2, 3)],
+            deleted: vec![(4, 5)],
+            added_cols: vec![3, 4],
+            added_rows: vec![7],
+            rejected: 2,
+            rebuilt: true,
+        };
+        let wire = rep.to_wire();
+        assert_eq!(ApplyReport::parse_wire(&wire).unwrap(), rep);
+        // empty report round-trips too
+        let empty = ApplyReport::default();
+        assert_eq!(ApplyReport::parse_wire(&empty.to_wire()).unwrap(), empty);
+        assert!(ApplyReport::parse_wire("ins=0:1 wat=3").is_err());
+    }
+
+    #[test]
+    fn net_batch_replays_to_the_same_state() {
+        // the WAL's core guarantee: applying net_from_report(report) to a
+        // copy of the pre-batch graph reproduces graph AND report exactly
+        let mut g = small();
+        let mut replayed = g.clone();
+        let batch = DeltaBatch::new()
+            .insert(2, 0)
+            .delete(0, 0)
+            .add_column(vec![1, 2])
+            .add_row(vec![0, 3]) // col 3 is the column just added
+            .delete(1, 1);
+        let report = g.apply(&batch);
+        let net = DeltaBatch::net_from_report(&report);
+        let net_report = replayed.apply(&net);
+        assert_eq!(net_report.inserted, report.inserted);
+        assert_eq!(net_report.deleted, report.deleted);
+        assert_eq!(net_report.added_cols, report.added_cols);
+        assert_eq!(net_report.added_rows, report.added_rows);
+        let (a, b) = (g.snapshot(), replayed.snapshot());
+        assert_eq!((a.nr, a.nc), (b.nr, b.nc));
+        assert_eq!(a.edges(), b.edges());
+        assert_eq!(g.version(), replayed.version());
     }
 
     #[test]

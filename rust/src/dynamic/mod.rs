@@ -35,9 +35,14 @@
 //!
 //! ## Layer map
 //!
-//! * [`delta`] — [`DeltaOp`]/[`DeltaBatch`] and their wire format;
+//! * [`delta`] — [`DeltaOp`]/[`DeltaBatch`] (edge insert/delete, column
+//!   *and row* addition) and their wire format, including the stable
+//!   serialization (`to_wire`/`parse_wire`/`net_from_report`) the
+//!   durability layer's write-ahead log records (`crate::persist::wal`);
 //! * [`graph`] — [`DynamicGraph`], the mutable overlay over
-//!   [`crate::graph::csr::BipartiteCsr`] with threshold-triggered rebuild;
+//!   [`crate::graph::csr::BipartiteCsr`] with threshold-triggered rebuild,
+//!   plus [`ApplyReport`]'s wire form and net merging
+//!   ([`ApplyReport::absorb`]) used by crash recovery;
 //! * [`repair`] — matching patch-up + seeded augmentation through the
 //!   standard [`crate::matching::algo::RunCtx`] execution API (pool,
 //!   deadline, cancellation all apply).

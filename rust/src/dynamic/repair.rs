@@ -66,12 +66,16 @@ pub fn repair(
     engine: Option<Arc<Engine>>,
     ctx: &mut RunCtx,
 ) -> Result<RepairSummary, String> {
-    if prev.nr() != g.nr {
-        return Err(format!("matching has {} rows, graph has {}", prev.nr(), g.nr));
+    if prev.nr() > g.nr {
+        return Err(format!("matching has {} rows, graph has only {}", prev.nr(), g.nr));
     }
     if prev.nc() > g.nc {
         return Err(format!("matching has {} cols, graph has only {}", prev.nc(), g.nc));
     }
+    // vertices the batch appended (AddColumn/AddRow) enter unmatched; an
+    // added row's edges ride `report.inserted`, so the loops below join or
+    // seed them like any other insertion
+    prev.rmatch.resize(g.nr, UNMATCHED);
     prev.cmatch.resize(g.nc, UNMATCHED);
 
     let mut seeds: Vec<u32> = Vec::new();
@@ -325,6 +329,34 @@ mod tests {
         let bad = Matching::empty(3, 2);
         let report = ApplyReport::default();
         assert!(repair(&g, bad, &report, &spec_cpu(), None, &mut RunCtx::detached()).is_err());
+    }
+
+    #[test]
+    fn added_row_edges_join_or_augment() {
+        // base: 2x2 perfect-matchable; add a row wired to both columns —
+        // the matching must grow only if a column frees up, so first
+        // check the joined case (free col), then the closing-phase case
+        let base = from_edges(2, 2, &[(0, 0), (1, 0), (1, 1)]);
+        let m = solve(&base); // cardinality 2, both cols matched
+        let mut dg = DynamicGraph::new(base);
+        let report = dg.apply(&DeltaBatch::new().add_row(vec![0, 1]).add_column(vec![2]));
+        let g = dg.snapshot();
+        assert_eq!(reference_max_cardinality(&g), 3);
+        for spec in [spec_cpu(), spec_gpu_fc()] {
+            let s = repair(&g, m.clone(), &report, &spec, None, &mut RunCtx::detached())
+                .unwrap();
+            s.result.matching.certify(&g).unwrap();
+            assert_eq!(s.result.matching.cardinality(), 3, "{spec}");
+        }
+        // isolated row addition: nothing to repair, still maximum
+        let base = from_edges(1, 1, &[(0, 0)]);
+        let m = solve(&base);
+        let mut dg = DynamicGraph::new(base);
+        let report = dg.apply(&DeltaBatch::new().add_row(vec![]));
+        let g = dg.snapshot();
+        let s = repair(&g, m, &report, &spec_cpu(), None, &mut RunCtx::detached()).unwrap();
+        s.result.matching.certify(&g).unwrap();
+        assert_eq!(s.result.matching.cardinality(), 1);
     }
 
     #[test]

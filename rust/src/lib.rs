@@ -70,6 +70,7 @@ pub mod graph;
 pub mod harness;
 pub mod matching;
 pub mod multicore;
+pub mod persist;
 pub mod runtime;
 pub mod seq;
 pub mod util;

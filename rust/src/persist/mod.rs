@@ -1,0 +1,419 @@
+//! Durability for the server-side graph store: a per-graph write-ahead
+//! log, piggybacked snapshots, and crash recovery that *repairs* instead
+//! of recomputing.
+//!
+//! PR 4 made the coordinator stateful — named graphs live in
+//! [`crate::coordinator::store::GraphStore`] and clients ship
+//! [`crate::dynamic::DeltaBatch`] updates — but all of it evaporated on
+//! restart. This layer persists the *deltas*, not just the result
+//! (following the external-memory matching line of work: graph state that
+//! outlives a process belongs on disk in a streamable format), so a
+//! restarted server warm-starts from where it crashed:
+//!
+//! * [`wal`] — length-prefixed, checksummed frames appended to
+//!   `<name>.wal` and fsync'd before an `UPDATE` is acknowledged. Update
+//!   frames carry the batch in the **delta wire format** of
+//!   `crate::dynamic::delta` (`addrows= addcols= add= del=` clauses —
+//!   the canonical net form from [`DeltaBatch::net_from_report`]) plus
+//!   the [`crate::dynamic::ApplyReport`] it produced, so replay can
+//!   verify it reproduced the same net effect. A torn final frame (the
+//!   crash case) fails its checksum and is dropped; everything before it
+//!   is a consistent prefix.
+//! * [`snapshot`] — the rebuilt [`crate::graph::csr::BipartiteCsr`]
+//!   serialized together with its structural version and the cached
+//!   maximum matching, written to `<name>.v<version>.snap` via
+//!   tmp-file + atomic rename. Snapshots are triggered by the overlay's
+//!   threshold CSR rebuild (the expensive materialization already
+//!   happened — persisting it is marginal cost), by LRU eviction, and by
+//!   the server's `SAVE` verb.
+//! * [`recover`] — on startup (or on a `MATCH name=` miss after
+//!   eviction) the data dir is scanned, the newest *valid* snapshot per
+//!   graph is loaded, the WAL tail is replayed through
+//!   [`crate::dynamic::DynamicGraph::apply`], and the matching is
+//!   restored by [`crate::dynamic::repair`] seeded from the replayed
+//!   exposed columns — recovery is a repair, not a recompute.
+//!
+//! Compaction: once a snapshot covers the log (same entry lock, so
+//! nothing can interleave), the WAL is truncated to empty — recovery then
+//! replays only frames newer than the snapshot version. Replay is
+//! idempotent w.r.t. the snapshot: frames at or below the snapshot
+//! version, and frames from an earlier incarnation of the name (version
+//! ranges are disjoint per `LOAD` — the top 32 bits identify the
+//! incarnation), are skipped.
+//!
+//! ## What is fsync'd when
+//!
+//! | event             | disk effect                                 | fsync before ack |
+//! |-------------------|---------------------------------------------|------------------|
+//! | `LOAD`            | base snapshot + WAL reset with LOAD marker  | yes              |
+//! | `UPDATE` (ok)     | one WAL frame (net batch + report)          | yes              |
+//! | `UPDATE` (ERR)    | nothing — rolled back in memory, not logged | —                |
+//! | rebuild piggyback | snapshot + WAL truncation                   | best-effort      |
+//! | `SAVE` / eviction | snapshot + WAL truncation                   | yes              |
+//! | `DROP`            | DROP marker, then files deleted             | yes              |
+
+pub mod recover;
+pub mod snapshot;
+pub mod wal;
+
+pub use recover::{GraphRecovery, RecoveredGraph, RecoveryReport};
+
+use crate::dynamic::{ApplyReport, DeltaBatch};
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::Matching;
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a 64-bit — the frame/snapshot checksum. Not cryptographic; it
+/// detects torn writes and bit rot, which is the crash-consistency
+/// contract (an adversarial data dir is out of scope).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Encode a graph name into a filesystem-safe stem: `[A-Za-z0-9_-]`
+/// pass through, everything else becomes `%XX` (so `.` can never collide
+/// with the `.v<version>.snap` / `.wal` suffixes).
+pub fn encode_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for b in name.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'_' | b'-' => out.push(b as char),
+            other => out.push_str(&format!("%{other:02X}")),
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_name`]; `None` on malformed escapes.
+pub fn decode_name(stem: &str) -> Option<String> {
+    let bytes = stem.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = stem.get(i + 1..i + 3)?;
+            out.push(u8::from_str_radix(hex, 16).ok()?);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+/// The durability layer's handle: one per `--data-dir`, shared by every
+/// executor clone. All file operations for a given graph name serialize
+/// on a per-name lock, so multi-file transitions (snapshot + WAL
+/// truncation, DROP marker + deletion) are never interleaved by a racing
+/// verb on the same name.
+pub struct Persistence {
+    dir: PathBuf,
+    name_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+}
+
+impl Persistence {
+    /// Open (creating if needed) a data directory.
+    pub fn open(dir: impl Into<PathBuf>) -> io::Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(Self { dir, name_locks: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The per-name file-operation lock. The executor takes it explicitly
+    /// (via the `*_locked` methods) when a transition must cover both the
+    /// in-memory store map and the on-disk state — `DROP` (unmap + marker
+    /// + deletion) and transparent reload (recover + install) — so a
+    /// racing reload can neither resurrect a dropped graph nor clobber a
+    /// fresh `LOAD`. Lock order: a store *entry* mutex, when held, is
+    /// always taken before this lock (UPDATE's WAL append, eviction's
+    /// snapshot, SAVE); this lock is never held while acquiring an entry
+    /// mutex.
+    pub fn name_lock(&self, name: &str) -> Arc<Mutex<()>> {
+        self.name_locks
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    fn lock_for(&self, name: &str) -> Arc<Mutex<()>> {
+        self.name_lock(name)
+    }
+
+    /// Drop `name`'s lock-table entry if nobody else holds a handle to
+    /// it. Called after a `DROP` completes so a churn workload of
+    /// uniquely-named graphs does not grow the table without bound; a
+    /// concurrently held handle (strong count > 1) keeps the entry —
+    /// removal then would let two threads hold "the" name lock at once.
+    pub fn release_name_lock_if_unused(&self, name: &str) {
+        let mut locks = self.name_locks.lock().unwrap();
+        if locks.get(name).is_some_and(|l| Arc::strong_count(l) == 1) {
+            locks.remove(name);
+        }
+    }
+
+    /// The graph's WAL file (`<dir>/<encoded-name>.wal`). Public for
+    /// observability and the crash-consistency tests, which truncate it
+    /// at arbitrary byte boundaries.
+    pub fn wal_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{}.wal", encode_name(name)))
+    }
+
+    pub(crate) fn snap_path(&self, name: &str, version: u64) -> PathBuf {
+        self.dir.join(format!("{}.v{}.snap", encode_name(name), version))
+    }
+
+    /// Every `.snap` file for `name`, as `(version, path)`, newest first.
+    pub(crate) fn snapshots_of(&self, name: &str) -> Vec<(u64, PathBuf)> {
+        let prefix = format!("{}.v", encode_name(name));
+        let mut out = Vec::new();
+        if let Ok(entries) = fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let fname = entry.file_name();
+                let Some(fname) = fname.to_str() else { continue };
+                if let Some(rest) = fname.strip_prefix(&prefix) {
+                    if let Some(v) = rest.strip_suffix(".snap") {
+                        if let Ok(version) = v.parse::<u64>() {
+                            out.push((version, entry.path()));
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| b.0.cmp(&a.0));
+        out
+    }
+
+    /// Names with any on-disk state (WAL or snapshot), sorted.
+    pub fn graph_names(&self) -> io::Result<Vec<String>> {
+        let mut names = std::collections::BTreeSet::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let fname = entry.file_name();
+            let Some(fname) = fname.to_str() else { continue };
+            let stem = if let Some(s) = fname.strip_suffix(".wal") {
+                Some(s)
+            } else if fname.ends_with(".snap") {
+                // strip ".v<version>.snap"
+                fname.rfind(".v").map(|i| &fname[..i])
+            } else {
+                None
+            };
+            if let Some(name) = stem.and_then(decode_name) {
+                names.insert(name);
+            }
+        }
+        Ok(names.into_iter().collect())
+    }
+
+    /// `LOAD` durability: persist the freshly installed base graph as the
+    /// incarnation's first snapshot, prune older incarnations' snapshots,
+    /// and reset the WAL to a single LOAD marker. Ordering matters for
+    /// crash consistency — snapshot first, WAL reset second — so a crash
+    /// between the two leaves the *new* snapshot plus the *old* WAL,
+    /// whose frames replay filters out by incarnation.
+    pub fn record_load(&self, name: &str, g: &BipartiteCsr, version_base: u64) -> io::Result<()> {
+        let guard = self.lock_for(name);
+        let _g = guard.lock().unwrap();
+        self.record_load_locked(name, g, version_base)
+    }
+
+    /// [`Persistence::record_load`] without taking the name lock — the
+    /// executor's `LOAD` path holds it across persist + store install,
+    /// so a concurrent `DROP` can never delete the just-written base out
+    /// from under an acknowledged (but not yet installed) `LOAD`.
+    pub fn record_load_locked(
+        &self,
+        name: &str,
+        g: &BipartiteCsr,
+        version_base: u64,
+    ) -> io::Result<()> {
+        snapshot::write_snapshot(&self.snap_path(name, version_base), version_base, g, None)?;
+        self.prune_snapshots_locked(name, version_base);
+        wal::reset_with(&self.wal_path(name), &wal::WalRecord::Load { version_base })
+    }
+
+    /// `UPDATE` durability: append one frame — the batch's *net* effect
+    /// in delta wire format plus the report — and fsync. Called before
+    /// the client is acknowledged; an `Err` here fails (and rolls back)
+    /// the update.
+    pub fn append_update(
+        &self,
+        name: &str,
+        version_after: u64,
+        report: &ApplyReport,
+    ) -> io::Result<()> {
+        let guard = self.lock_for(name);
+        let _g = guard.lock().unwrap();
+        let rec = wal::WalRecord::Update {
+            version_after,
+            batch_wire: DeltaBatch::net_from_report(report).to_wire(),
+            report_wire: report.to_wire(),
+        };
+        wal::append(&self.wal_path(name), &rec)
+    }
+
+    /// Snapshot the live state and compact: write
+    /// `<name>.v<version>.snap`, prune older snapshots, truncate the WAL
+    /// (every logged frame is ≤ `version`, hence covered). Triggered by
+    /// threshold rebuilds, eviction, and `SAVE`.
+    pub fn record_snapshot(
+        &self,
+        name: &str,
+        g: &BipartiteCsr,
+        version: u64,
+        matching: Option<&Matching>,
+    ) -> io::Result<()> {
+        let guard = self.lock_for(name);
+        let _g = guard.lock().unwrap();
+        snapshot::write_snapshot(&self.snap_path(name, version), version, g, matching)?;
+        self.prune_snapshots_locked(name, version);
+        wal::truncate(&self.wal_path(name))
+    }
+
+    /// Whether `name` has any on-disk state. Caller holds the name lock.
+    pub fn has_state_locked(&self, name: &str) -> bool {
+        self.wal_path(name).exists() || !self.snapshots_of(name).is_empty()
+    }
+
+    /// The `DROP` commit point: append a version-scoped DROP marker and
+    /// fsync it. After this returns `Ok`, the drop is durable — recovery
+    /// completes the deletion even if the process dies before
+    /// [`Persistence::delete_graph_files_locked`] runs. `version` scopes
+    /// the marker to the incarnation being dropped; `None` (graph not in
+    /// memory) falls back to the newest snapshot's version. Caller holds
+    /// the name lock.
+    pub fn append_drop_marker_locked(
+        &self,
+        name: &str,
+        version: Option<u64>,
+    ) -> io::Result<()> {
+        let version = version
+            .or_else(|| self.snapshots_of(name).first().map(|(v, _)| *v))
+            .unwrap_or(0);
+        wal::append(&self.wal_path(name), &wal::WalRecord::Drop { version })
+    }
+
+    /// Remove `name`'s WAL and snapshots. Best-effort by design: the
+    /// fsync'd DROP marker is the commit point, so a deletion that fails
+    /// here is completed by the next recovery scan. Caller holds the
+    /// name lock.
+    pub fn delete_graph_files_locked(&self, name: &str) {
+        for (_, p) in self.snapshots_of(name) {
+            let _ = fs::remove_file(p);
+        }
+        let _ = fs::remove_file(self.wal_path(name));
+    }
+
+    /// `DROP` durability in one call (marker, then deletion), for callers
+    /// that don't need to interleave the in-memory unmap under the same
+    /// lock. Returns whether any on-disk state existed.
+    pub fn record_drop(&self, name: &str, version: Option<u64>) -> io::Result<bool> {
+        let guard = self.lock_for(name);
+        let _g = guard.lock().unwrap();
+        if !self.has_state_locked(name) {
+            return Ok(false);
+        }
+        self.append_drop_marker_locked(name, version)?;
+        self.delete_graph_files_locked(name);
+        drop(_g);
+        drop(guard);
+        self.release_name_lock_if_unused(name);
+        Ok(true)
+    }
+
+    /// Reconstruct one graph from disk: newest valid snapshot + WAL tail
+    /// replay. `Ok(None)` when nothing (or only a DROP) is on disk, or
+    /// when no snapshot survives to anchor the replay.
+    pub fn recover_graph(&self, name: &str) -> io::Result<Option<recover::RecoveredGraph>> {
+        let guard = self.lock_for(name);
+        let _g = guard.lock().unwrap();
+        recover::recover_graph(self, name)
+    }
+
+    /// [`Persistence::recover_graph`] without taking the name lock — for
+    /// the executor's transparent-reload path, which must hold the lock
+    /// across recover *and* store installation (a racing `DROP` or `LOAD`
+    /// in the gap would otherwise be resurrected over / clobbered).
+    pub fn recover_graph_locked(
+        &self,
+        name: &str,
+    ) -> io::Result<Option<recover::RecoveredGraph>> {
+        recover::recover_graph(self, name)
+    }
+
+    /// Remove all snapshots of `name` except `keep_version`'s. Callers
+    /// hold the per-name lock.
+    fn prune_snapshots_locked(&self, name: &str, keep_version: u64) {
+        for (v, p) in self.snapshots_of(name) {
+            if v != keep_version {
+                let _ = fs::remove_file(p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_encoding_roundtrips_and_is_fs_safe() {
+        for name in ["g", "web-01", "a/b", "dots.and.spaces in names", "naïve", "%wal", ""] {
+            let enc = encode_name(name);
+            assert!(
+                enc.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-' || b == b'%'),
+                "{enc}"
+            );
+            assert!(!enc.contains('.'), "dots must be escaped: {enc}");
+            assert_eq!(decode_name(&enc).as_deref(), Some(name));
+        }
+        assert_eq!(decode_name("%zz"), None);
+        assert_eq!(decode_name("%4"), None);
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // the on-disk format depends on this exact function: pin it
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
+
+    #[test]
+    fn graph_names_scans_both_kinds() {
+        let dir = tempdir("names");
+        let p = Persistence::open(&dir).unwrap();
+        std::fs::write(p.wal_path("alpha"), b"").unwrap();
+        std::fs::write(p.snap_path("b.t", 7), b"").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), b"").unwrap();
+        assert_eq!(p.graph_names().unwrap(), vec!["alpha".to_string(), "b.t".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    pub(super) fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_persist_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+}

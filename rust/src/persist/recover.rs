@@ -1,0 +1,377 @@
+//! Crash recovery: snapshot + WAL-tail replay + seeded repair.
+//!
+//! For each graph name found in the data dir:
+//!
+//! 1. the newest snapshot that passes its checksum anchors the state —
+//!    graph, structural version, and (usually) the maintained maximum
+//!    matching;
+//! 2. the WAL tail is replayed through [`DynamicGraph::apply`]: only
+//!    update frames from the snapshot's incarnation (`version >> 32`)
+//!    and newer than its version run, so replay is idempotent w.r.t. the
+//!    snapshot and immune to stale frames from a previous `LOAD` of the
+//!    same name; each frame's re-applied [`ApplyReport`] is cross-checked
+//!    against the logged one, and any mismatch (or a torn tail, or a
+//!    version gap) ends the replay at the last consistent prefix;
+//! 3. the replayed reports are folded into one *net* report
+//!    ([`ApplyReport::absorb`]) and the snapshot matching is patched
+//!    forward by [`crate::dynamic::repair`] — the augmenting search seeds
+//!    from exactly the columns the replayed deltas exposed, so recovery
+//!    costs `O(|replayed deltas| + reached subgraph)`, not a from-scratch
+//!    solve.
+//!
+//! A graph whose WAL ends in a DROP marker of its own incarnation
+//! recovers as *dropped* (the interrupted deletion is completed); a name
+//! with no usable snapshot is unrecoverable and reported as skipped.
+
+use super::{snapshot, wal, Persistence};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router;
+use crate::coordinator::store::{CachedMatching, GraphStore};
+use crate::dynamic::{self, ApplyReport, DeltaBatch, DynamicGraph};
+use crate::matching::algo::{RunCtx, RunOutcome};
+use crate::matching::Matching;
+use crate::runtime::Engine;
+use crate::util::pool::WorkspacePool;
+use std::io;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// One graph reconstructed from disk, before repair/installation.
+pub struct RecoveredGraph {
+    pub name: String,
+    /// live graph: snapshot base + replayed WAL tail, version restored
+    pub graph: DynamicGraph,
+    /// the snapshot's cached matching (valid for the snapshot version;
+    /// [`install_recovered`] patches it forward through `repair`)
+    pub matching: Option<Matching>,
+    pub snapshot_version: u64,
+    /// net effect of the replayed tail relative to the snapshot
+    pub net_report: ApplyReport,
+    pub replayed_updates: usize,
+    /// false when a torn/corrupt/mismatched tail was dropped — the state
+    /// is still a consistent prefix, just not the full log
+    pub clean: bool,
+}
+
+/// What recovering one name did (the observable half of
+/// [`RecoveredGraph`], kept by the service for tests and operators).
+#[derive(Debug, Clone)]
+pub struct GraphRecovery {
+    pub name: String,
+    /// structural version the graph recovered at
+    pub version: u64,
+    pub replayed_updates: usize,
+    /// cardinality of the repaired matching (None: recovered matchingless)
+    pub cardinality: Option<usize>,
+    /// phases the seeded repair run took (None: no matching to repair) —
+    /// the e2e durability proof asserts this undercuts a cold recompute
+    pub repair_phases: Option<u64>,
+    /// columns the repair seeded from
+    pub seeds: usize,
+    pub clean: bool,
+}
+
+/// Startup recovery summary.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    pub graphs: Vec<GraphRecovery>,
+    /// names with on-disk state that could not be recovered (no valid
+    /// snapshot to anchor a replay)
+    pub skipped: Vec<String>,
+}
+
+impl RecoveryReport {
+    pub fn recovered(&self) -> usize {
+        self.graphs.len()
+    }
+}
+
+/// Snapshot + replay for one name. Callers hold the per-name lock (use
+/// [`Persistence::recover_graph`]).
+pub(super) fn recover_graph(
+    p: &Persistence,
+    name: &str,
+) -> io::Result<Option<RecoveredGraph>> {
+    let mut snap = None;
+    for (_, path) in p.snapshots_of(name) {
+        if let Some(s) = snapshot::read_snapshot(&path)? {
+            snap = Some(s);
+            break;
+        }
+    }
+    let (records, torn) = wal::read_wal(&p.wal_path(name))?;
+    let Some(snap) = snap else {
+        return Ok(None); // no anchor: WAL alone cannot rebuild a graph
+    };
+    let incarnation = snap.version >> 32;
+    let snapshot_version = snap.version;
+    let mut dg =
+        DynamicGraph::from_arc(Arc::new(snap.graph)).with_version_base(snapshot_version);
+    let mut net = ApplyReport::default();
+    let mut replayed = 0usize;
+    let mut clean = !torn;
+    let mut dropped = false;
+    for rec in records {
+        match rec {
+            // the graph itself lives in the snapshot; the marker only
+            // documents the reset
+            wal::WalRecord::Load { .. } => {}
+            wal::WalRecord::Drop { version } => {
+                if version >> 32 == incarnation {
+                    dropped = true;
+                }
+            }
+            wal::WalRecord::Update { version_after, batch_wire, report_wire } => {
+                if version_after >> 32 != incarnation || version_after <= snapshot_version {
+                    continue; // older incarnation, or already in the snapshot
+                }
+                if version_after != dg.version() + 1 {
+                    clean = false; // gap: stop at the consistent prefix
+                    break;
+                }
+                let parsed = DeltaBatch::parse_wire(&batch_wire)
+                    .and_then(|b| ApplyReport::parse_wire(&report_wire).map(|r| (b, r)));
+                let Ok((batch, want)) = parsed else {
+                    clean = false;
+                    break;
+                };
+                // apply on a scratch copy first: a mismatching frame must
+                // not leave its partial effect in the recovered graph
+                let mut next = dg.clone();
+                let got = next.apply(&batch);
+                let matches = got.inserted == want.inserted
+                    && got.deleted == want.deleted
+                    && got.added_cols == want.added_cols
+                    && got.added_rows == want.added_rows
+                    && next.version() == version_after;
+                if !matches {
+                    clean = false;
+                    break;
+                }
+                dg = next;
+                net.absorb(&got);
+                replayed += 1;
+            }
+        }
+    }
+    if dropped {
+        // complete the interrupted DROP: the marker is authoritative
+        p.delete_graph_files_locked(name);
+        return Ok(None);
+    }
+    Ok(Some(RecoveredGraph {
+        name: name.to_string(),
+        graph: dg,
+        matching: snap.matching,
+        snapshot_version,
+        net_report: net,
+        replayed_updates: replayed,
+        clean,
+    }))
+}
+
+/// Install a recovered graph into the store, restoring its matching via
+/// seeded repair (router-picked spec; a GPU pick feeds the exposed
+/// columns straight into the compacted-frontier BFS). Repair is
+/// best-effort: if it cannot complete *and certify*, the graph is
+/// installed matchingless and the next `MATCH` runs cold — recovery
+/// never serves an untrusted matching.
+pub fn install_recovered(
+    rec: RecoveredGraph,
+    store: &GraphStore,
+    metrics: &Metrics,
+    engine: Option<Arc<Engine>>,
+    pool: &Arc<WorkspacePool>,
+) -> GraphRecovery {
+    let mut dg = rec.graph;
+    let version = dg.version();
+    let live = dg.snapshot();
+    let mut cached = None;
+    let mut repair_phases = None;
+    let mut seeds = 0usize;
+    let mut cardinality = None;
+    if let Some(prev) = rec.matching {
+        let spec = router::route_graph(&live);
+        let mut ctx = RunCtx::new(pool.clone());
+        if let Ok(summary) =
+            dynamic::repair(&live, prev, &rec.net_report, &spec, engine, &mut ctx)
+        {
+            if summary.result.outcome == RunOutcome::Complete
+                && summary.result.matching.certify(&live).is_ok()
+            {
+                repair_phases = Some(summary.result.stats.phases);
+                seeds = summary.seeds;
+                cardinality = Some(summary.result.matching.cardinality());
+                cached =
+                    Some(CachedMatching { matching: summary.result.matching, version });
+            }
+        }
+    }
+    store.install(&rec.name, dg, cached);
+    metrics.graphs_recovered.fetch_add(1, Ordering::Relaxed);
+    GraphRecovery {
+        name: rec.name,
+        version,
+        replayed_updates: rec.replayed_updates,
+        cardinality,
+        repair_phases,
+        seeds,
+        clean: rec.clean,
+    }
+}
+
+/// Startup recovery: scan the data dir and install every recoverable
+/// graph. Run before the service accepts traffic.
+pub fn recover_into(
+    p: &Persistence,
+    store: &GraphStore,
+    metrics: &Metrics,
+    engine: Option<Arc<Engine>>,
+    pool: &Arc<WorkspacePool>,
+) -> io::Result<RecoveryReport> {
+    let mut report = RecoveryReport::default();
+    for name in p.graph_names()? {
+        match p.recover_graph(&name)? {
+            Some(rec) => {
+                report.graphs.push(install_recovered(
+                    rec,
+                    store,
+                    metrics,
+                    engine.clone(),
+                    pool,
+                ));
+            }
+            None => {
+                // either a completed/completable DROP (files now gone) or
+                // an unanchored WAL; only the latter is worth surfacing
+                if p.wal_path(&name).exists() || !p.snapshots_of(&name).is_empty() {
+                    report.skipped.push(name);
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+
+    fn persistence(tag: &str) -> (Persistence, std::path::PathBuf) {
+        let dir = super::super::tests::tempdir(tag);
+        (Persistence::open(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn load_then_updates_replay_to_the_live_graph() {
+        let (p, dir) = persistence("replay");
+        let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2)]);
+        let base = 5u64 << 32;
+        p.record_load("g", &g, base).unwrap();
+        // two committed updates, logged the way the executor logs them
+        let mut dg = DynamicGraph::new(g).with_version_base(base);
+        for batch in [
+            DeltaBatch::new().insert(0, 1).delete(2, 2),
+            DeltaBatch::new().add_column(vec![2]),
+        ] {
+            let rep = dg.apply(&batch);
+            p.append_update("g", dg.version(), &rep).unwrap();
+        }
+        let rec = p.recover_graph("g").unwrap().expect("recoverable");
+        let mut got = rec.graph;
+        assert_eq!(got.version(), dg.version());
+        assert_eq!(got.snapshot().edges(), dg.snapshot().edges());
+        assert_eq!(rec.replayed_updates, 2);
+        assert!(rec.clean);
+        assert_eq!(rec.snapshot_version, base);
+        // net report spans both batches
+        assert_eq!(rec.net_report.added_cols, vec![3]);
+        assert_eq!(rec.net_report.deleted, vec![(2, 2)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_recovers_the_prefix() {
+        let (p, dir) = persistence("torn");
+        let g = from_edges(2, 2, &[(0, 0), (1, 1)]);
+        p.record_load("g", &g, 0).unwrap();
+        let mut dg = DynamicGraph::new(g).with_version_base(0);
+        let rep = dg.apply(&DeltaBatch::new().insert(0, 1));
+        p.append_update("g", dg.version(), &rep).unwrap();
+        let rep = dg.apply(&DeltaBatch::new().insert(1, 0));
+        p.append_update("g", dg.version(), &rep).unwrap();
+        // tear the final frame in half
+        let wal_path = p.wal_path("g");
+        let bytes = std::fs::read(&wal_path).unwrap();
+        std::fs::write(&wal_path, &bytes[..bytes.len() - 5]).unwrap();
+        let rec = p.recover_graph("g").unwrap().unwrap();
+        assert_eq!(rec.replayed_updates, 1, "only the intact frame replays");
+        assert!(!rec.clean);
+        assert_eq!(rec.graph.version(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_compaction_skips_covered_frames() {
+        let (p, dir) = persistence("compact");
+        let g = from_edges(2, 2, &[(0, 0)]);
+        p.record_load("g", &g, 0).unwrap();
+        let mut dg = DynamicGraph::new(g).with_version_base(0);
+        let rep = dg.apply(&DeltaBatch::new().insert(1, 1));
+        p.append_update("g", dg.version(), &rep).unwrap();
+        // compaction: snapshot at the live version truncates the log
+        p.record_snapshot("g", &dg.snapshot(), dg.version(), None).unwrap();
+        let (records, _) = wal::read_wal(&p.wal_path("g")).unwrap();
+        assert!(records.is_empty(), "compaction must truncate the WAL");
+        // one more update after compaction
+        let rep = dg.apply(&DeltaBatch::new().insert(0, 1));
+        p.append_update("g", dg.version(), &rep).unwrap();
+        let rec = p.recover_graph("g").unwrap().unwrap();
+        assert_eq!(rec.snapshot_version, 1);
+        assert_eq!(rec.replayed_updates, 1, "only the post-snapshot frame replays");
+        let mut got = rec.graph;
+        assert_eq!(got.snapshot().edges(), dg.snapshot().edges());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_marker_completes_the_deletion() {
+        let (p, dir) = persistence("drop");
+        let g = from_edges(2, 2, &[(0, 0)]);
+        p.record_load("g", &g, 0).unwrap();
+        // simulate the crash window: marker written, files not yet deleted
+        wal::append(&p.wal_path("g"), &wal::WalRecord::Drop { version: 0 }).unwrap();
+        assert!(p.recover_graph("g").unwrap().is_none());
+        assert!(!p.wal_path("g").exists(), "recovery completes the deletion");
+        assert!(p.snapshots_of("g").is_empty());
+        // a clean record_drop leaves nothing behind either
+        p.record_load("h", &g, 1 << 32).unwrap();
+        assert!(p.record_drop("h", Some(1 << 32)).unwrap());
+        assert!(p.recover_graph("h").unwrap().is_none());
+        assert!(!p.record_drop("h", None).unwrap(), "double drop: nothing on disk");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_frames_from_an_older_incarnation_are_ignored() {
+        // crash between a re-LOAD's snapshot write and its WAL reset: the
+        // new snapshot coexists with the old incarnation's WAL
+        let (p, dir) = persistence("stale");
+        let g0 = from_edges(2, 2, &[(0, 0)]);
+        p.record_load("g", &g0, 0).unwrap();
+        let mut dg = DynamicGraph::new(g0).with_version_base(0);
+        let rep = dg.apply(&DeltaBatch::new().insert(1, 1));
+        p.append_update("g", dg.version(), &rep).unwrap();
+        // new incarnation's snapshot lands (higher version base), but the
+        // WAL was not reset before the "crash"
+        let g1 = from_edges(2, 2, &[(0, 1)]);
+        snapshot::write_snapshot(&p.snap_path("g", 7 << 32), 7 << 32, &g1, None).unwrap();
+        let rec = p.recover_graph("g").unwrap().unwrap();
+        assert_eq!(rec.snapshot_version, 7 << 32);
+        assert_eq!(rec.replayed_updates, 0, "old incarnation's frames must not replay");
+        let mut got = rec.graph;
+        assert_eq!(got.snapshot().edges(), vec![(0, 1)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,279 @@
+//! Graph snapshots: one file per (name, version) holding the fully
+//! materialized [`BipartiteCsr`], its structural version, and — when one
+//! was maintained — the cached maximum matching, so recovery can seed a
+//! repair instead of recomputing.
+//!
+//! ## File layout (all integers little-endian)
+//!
+//! ```text
+//! magic  "BMSNAP1\0"
+//! body   version: u64
+//!        nr: u64, nc: u64
+//!        cxadj_len: u64, cxadj: [u32]
+//!        cadj_len:  u64, cadj:  [u32]
+//!        has_matching: u8  (0|1)
+//!        [cmatch_len: u64, cmatch: [i32]]   (iff has_matching)
+//! sum    fnv1a64(body): u64
+//! ```
+//!
+//! Only the column-side CSR is stored; the row-side transpose is
+//! recomputed on load (`BipartiteCsr::from_col_csr`). `rmatch` likewise
+//! derives from `cmatch`. Writes go to a `.tmp` sibling, fsync, then
+//! atomically rename — a crash never leaves a half-written file under
+//! the real name, and whatever *is* under the real name still has its
+//! checksum verified on read ([`read_snapshot`] returns `None` rather
+//! than trusting a corrupt body).
+
+use super::fnv1a64;
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::{Matching, UNMATCHED};
+use std::fs::{self, File};
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"BMSNAP1\0";
+
+/// A decoded snapshot file.
+pub struct Snapshot {
+    pub version: u64,
+    pub graph: BipartiteCsr,
+    pub matching: Option<Matching>,
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32s(out: &mut Vec<u8>, v: &[u32]) {
+    push_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize and atomically install a snapshot at `path`.
+pub fn write_snapshot(
+    path: &Path,
+    version: u64,
+    g: &BipartiteCsr,
+    matching: Option<&Matching>,
+) -> io::Result<()> {
+    let mut body = Vec::with_capacity(64 + 4 * (g.cxadj.len() + g.cadj.len()));
+    push_u64(&mut body, version);
+    push_u64(&mut body, g.nr as u64);
+    push_u64(&mut body, g.nc as u64);
+    push_u32s(&mut body, &g.cxadj);
+    push_u32s(&mut body, &g.cadj);
+    match matching {
+        Some(m) => {
+            body.push(1);
+            push_u64(&mut body, m.cmatch.len() as u64);
+            for &x in &m.cmatch {
+                body.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        None => body.push(0),
+    }
+    let sum = fnv1a64(&body);
+    let tmp = path.with_extension("snap.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&body)?;
+        f.write_all(&sum.to_le_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    // fsync the directory so the rename itself is durable
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl Reader<'_> {
+    fn u64(&mut self) -> Option<u64> {
+        let b = self.bytes.get(self.at..self.at + 8)?;
+        self.at += 8;
+        Some(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        let b = *self.bytes.get(self.at)?;
+        self.at += 1;
+        Some(b)
+    }
+
+    fn u32s(&mut self, max: usize) -> Option<Vec<u32>> {
+        let len = self.u64()? as usize;
+        if len > max {
+            return None;
+        }
+        let b = self.bytes.get(self.at..self.at + 4 * len)?;
+        self.at += 4 * len;
+        Some(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn i32s(&mut self, max: usize) -> Option<Vec<i32>> {
+        let len = self.u64()? as usize;
+        if len > max {
+            return None;
+        }
+        let b = self.bytes.get(self.at..self.at + 4 * len)?;
+        self.at += 4 * len;
+        Some(b.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Sanity cap on decoded vector lengths: rejects corrupt length fields
+/// before they turn into giant allocations (checksummed data should
+/// never hit it, but the checksum is read *after* the body is walked).
+const MAX_LEN: usize = 1 << 31;
+
+/// Decode a snapshot; `Ok(None)` on any structural or checksum problem
+/// (the caller falls back to an older snapshot or reports the graph
+/// unrecoverable — a bad snapshot is data loss, never a panic).
+pub fn read_snapshot(path: &Path) -> io::Result<Option<Snapshot>> {
+    let mut bytes = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut bytes)?;
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    Ok(decode(&bytes))
+}
+
+fn decode(bytes: &[u8]) -> Option<Snapshot> {
+    if bytes.len() < MAGIC.len() + 8 || &bytes[..MAGIC.len()] != MAGIC {
+        return None;
+    }
+    let body = &bytes[MAGIC.len()..bytes.len() - 8];
+    let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv1a64(body) != sum {
+        return None;
+    }
+    let mut r = Reader { bytes: body, at: 0 };
+    let version = r.u64()?;
+    let nr = r.u64()? as usize;
+    let nc = r.u64()? as usize;
+    if nr > MAX_LEN || nc > MAX_LEN {
+        return None;
+    }
+    let cxadj = r.u32s(MAX_LEN)?;
+    let cadj = r.u32s(MAX_LEN)?;
+    // structural invariants before handing to from_col_csr (which asserts)
+    if cxadj.len() != nc + 1
+        || cxadj.first() != Some(&0)
+        || cxadj.windows(2).any(|w| w[0] > w[1])
+        || *cxadj.last().unwrap() as usize != cadj.len()
+        || cadj.iter().any(|&x| (x as usize) >= nr)
+    {
+        return None;
+    }
+    let has_matching = r.u8()?;
+    let matching = if has_matching == 1 {
+        let cmatch = r.i32s(MAX_LEN)?;
+        decode_matching(nr, nc, cmatch)
+    } else {
+        None
+    };
+    if r.at != body.len() {
+        return None; // trailing bytes inside a checksummed body
+    }
+    let graph = BipartiteCsr::from_col_csr(nr, nc, cxadj, cadj);
+    if graph.validate().is_err() {
+        return None;
+    }
+    Some(Snapshot { version, graph, matching })
+}
+
+/// Rebuild a [`Matching`] from a serialized `cmatch`, rejecting (→ the
+/// graph recovers matchingless, next `MATCH` runs cold) anything
+/// structurally inconsistent instead of panicking in `from_cmatch`.
+fn decode_matching(nr: usize, nc: usize, cmatch: Vec<i32>) -> Option<Matching> {
+    if cmatch.len() != nc {
+        return None;
+    }
+    let mut rmatch = vec![UNMATCHED; nr];
+    for (c, &r) in cmatch.iter().enumerate() {
+        if r == UNMATCHED {
+            continue;
+        }
+        if r < 0 || (r as usize) >= nr || rmatch[r as usize] != UNMATCHED {
+            return None;
+        }
+        rmatch[r as usize] = c as i32;
+    }
+    Some(Matching { rmatch, cmatch })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+
+    fn sample() -> (BipartiteCsr, Matching) {
+        let g = from_edges(3, 4, &[(0, 0), (1, 1), (2, 2), (0, 3)]);
+        let m = Matching::from_cmatch(3, vec![0, 1, 2, UNMATCHED]);
+        (g, m)
+    }
+
+    #[test]
+    fn roundtrip_with_and_without_matching() {
+        let dir = super::super::tests::tempdir("snap");
+        let (g, m) = sample();
+        let p = dir.join("g.v42.snap");
+        write_snapshot(&p, 42, &g, Some(&m)).unwrap();
+        let s = read_snapshot(&p).unwrap().expect("valid snapshot");
+        assert_eq!(s.version, 42);
+        assert_eq!(s.graph, g);
+        assert_eq!(s.matching.as_ref(), Some(&m));
+        write_snapshot(&p, 43, &g, None).unwrap();
+        let s = read_snapshot(&p).unwrap().unwrap();
+        assert_eq!(s.version, 43);
+        assert!(s.matching.is_none());
+        assert!(!p.with_extension("snap.tmp").exists(), "tmp must be renamed away");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_and_truncation_yield_none_not_panic() {
+        let dir = super::super::tests::tempdir("snapbad");
+        let (g, m) = sample();
+        let p = dir.join("g.v1.snap");
+        write_snapshot(&p, 1, &g, Some(&m)).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        // every truncation of the file is rejected cleanly
+        for cut in 0..good.len() {
+            assert!(decode(&good[..cut]).is_none(), "cut at {cut}");
+        }
+        // any single flipped byte is rejected (magic, body, or checksum)
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x01;
+            assert!(decode(&bad).is_none(), "flip at {i}");
+        }
+        assert!(read_snapshot(&dir.join("missing.snap")).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn inconsistent_matching_recovers_graph_without_it() {
+        // cmatch claiming two columns share a row decodes as "no
+        // matching", not a panic and not a poisoned warm start
+        assert!(decode_matching(2, 2, vec![0, 0]).is_none());
+        assert!(decode_matching(2, 2, vec![5, UNMATCHED]).is_none());
+        assert!(decode_matching(2, 2, vec![-7, UNMATCHED]).is_none());
+        let m = decode_matching(2, 2, vec![1, UNMATCHED]).unwrap();
+        assert_eq!(m.rmatch, vec![UNMATCHED, 0]);
+    }
+}

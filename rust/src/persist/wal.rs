@@ -1,0 +1,308 @@
+//! The per-graph write-ahead log: a flat file of length-prefixed,
+//! checksummed frames, appended and fsync'd before the server
+//! acknowledges the update that produced them.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! [payload_len: u32 LE] [kind: u8] [payload: payload_len bytes] [fnv1a64(kind ‖ payload): u64 LE]
+//! ```
+//!
+//! Three kinds:
+//!
+//! * `Load { version_base }` — the marker a (re-)`LOAD` leaves after
+//!   resetting the log; the graph itself lives in the snapshot written
+//!   just before (see `super::Persistence::record_load`).
+//! * `Update { version_after, batch_wire, report_wire }` — one committed
+//!   delta batch: the **already-wire-formatted** net batch
+//!   (`crate::dynamic::DeltaBatch::to_wire`, the `addrows= addcols= add=
+//!   del=` clause syntax of `dynamic::delta`) and the
+//!   `crate::dynamic::ApplyReport` it produced (`ApplyReport::to_wire`),
+//!   so replay can cross-check that re-applying reproduced the same net
+//!   effect.
+//! * `Drop { version }` — the graph was dropped; scoped to the
+//!   incarnation (`version >> 32`) so a stale marker can never kill a
+//!   later incarnation that reused the name.
+//!
+//! ## Torn tails
+//!
+//! A crash mid-append leaves a final frame that is short, length-mangled,
+//! or checksum-broken. [`read_wal`] stops at the first such frame and
+//! reports the tail as dropped — everything before it is a consistent
+//! prefix, which is exactly the durability contract: an update is either
+//! wholly in the log (it was acknowledged) or wholly absent (it never
+//! was).
+
+use super::fnv1a64;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+const KIND_LOAD: u8 = 1;
+const KIND_UPDATE: u8 = 2;
+const KIND_DROP: u8 = 3;
+
+/// Guards against a corrupted length prefix making `read_wal` attempt a
+/// multi-gigabyte allocation: no legitimate frame payload approaches
+/// this (a batch of a million edges is ~12 MB of wire text).
+const MAX_FRAME_PAYLOAD: usize = 256 << 20;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalRecord {
+    Load { version_base: u64 },
+    Update { version_after: u64, batch_wire: String, report_wire: String },
+    Drop { version: u64 },
+}
+
+impl WalRecord {
+    fn kind(&self) -> u8 {
+        match self {
+            WalRecord::Load { .. } => KIND_LOAD,
+            WalRecord::Update { .. } => KIND_UPDATE,
+            WalRecord::Drop { .. } => KIND_DROP,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            WalRecord::Load { version_base } => version_base.to_le_bytes().to_vec(),
+            WalRecord::Drop { version } => version.to_le_bytes().to_vec(),
+            WalRecord::Update { version_after, batch_wire, report_wire } => {
+                let mut p = Vec::with_capacity(16 + batch_wire.len() + report_wire.len());
+                p.extend_from_slice(&version_after.to_le_bytes());
+                p.extend_from_slice(&(batch_wire.len() as u32).to_le_bytes());
+                p.extend_from_slice(batch_wire.as_bytes());
+                p.extend_from_slice(&(report_wire.len() as u32).to_le_bytes());
+                p.extend_from_slice(report_wire.as_bytes());
+                p
+            }
+        }
+    }
+
+    fn decode(kind: u8, payload: &[u8]) -> Option<WalRecord> {
+        let u64_at = |at: usize| -> Option<u64> {
+            payload.get(at..at + 8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        };
+        match kind {
+            KIND_LOAD if payload.len() == 8 => {
+                Some(WalRecord::Load { version_base: u64_at(0)? })
+            }
+            KIND_DROP if payload.len() == 8 => Some(WalRecord::Drop { version: u64_at(0)? }),
+            KIND_UPDATE => {
+                let version_after = u64_at(0)?;
+                let blen =
+                    u32::from_le_bytes(payload.get(8..12)?.try_into().unwrap()) as usize;
+                let batch = payload.get(12..12 + blen)?;
+                let at = 12 + blen;
+                let rlen =
+                    u32::from_le_bytes(payload.get(at..at + 4)?.try_into().unwrap()) as usize;
+                let report = payload.get(at + 4..at + 4 + rlen)?;
+                if at + 4 + rlen != payload.len() {
+                    return None; // trailing garbage inside a framed payload
+                }
+                Some(WalRecord::Update {
+                    version_after,
+                    batch_wire: String::from_utf8(batch.to_vec()).ok()?,
+                    report_wire: String::from_utf8(report.to_vec()).ok()?,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One frame's bytes: length prefix + kind + payload + checksum.
+pub fn encode_frame(rec: &WalRecord) -> Vec<u8> {
+    let payload = rec.payload();
+    let kind = rec.kind();
+    let mut sum_input = Vec::with_capacity(1 + payload.len());
+    sum_input.push(kind);
+    sum_input.extend_from_slice(&payload);
+    let mut out = Vec::with_capacity(4 + 1 + payload.len() + 8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&fnv1a64(&sum_input).to_le_bytes());
+    out
+}
+
+/// fsync the parent directory so a just-created file's directory entry
+/// is durable — without this, a crash after creating (and syncing) the
+/// WAL can lose the *whole file*, which would silently erase every
+/// acknowledged update in it. Errors are surfaced: an unsyncable dir is
+/// as fatal to the durability contract as an unsyncable file.
+fn fsync_parent(path: &Path) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        File::open(dir)?.sync_all()?;
+    }
+    Ok(())
+}
+
+/// Append one frame and fsync (plus the parent directory when this
+/// append created the file). The open-append-sync-close cycle keeps the
+/// writer stateless (no long-lived descriptor to invalidate when a DROP
+/// deletes the file under a racing verb).
+pub fn append(path: &Path, rec: &WalRecord) -> io::Result<()> {
+    let created = !path.exists();
+    let mut f = OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(&encode_frame(rec))?;
+    f.sync_all()?;
+    if created {
+        fsync_parent(path)?;
+    }
+    Ok(())
+}
+
+/// Truncate the log to empty (compaction: a snapshot now covers every
+/// frame) and fsync file + directory entry.
+pub fn truncate(path: &Path) -> io::Result<()> {
+    let f = File::create(path)?;
+    f.sync_all()?;
+    fsync_parent(path)
+}
+
+/// Truncate and write a first frame in one go (`LOAD` resetting a name).
+pub fn reset_with(path: &Path, rec: &WalRecord) -> io::Result<()> {
+    let mut f = File::create(path)?;
+    f.write_all(&encode_frame(rec))?;
+    f.sync_all()?;
+    fsync_parent(path)
+}
+
+/// Parse frames from raw bytes, stopping at the first torn or corrupt
+/// frame. Returns the valid prefix and whether a tail was dropped.
+pub fn parse_frames(bytes: &[u8]) -> (Vec<WalRecord>, bool) {
+    let mut records = Vec::new();
+    let mut at = 0usize;
+    while at < bytes.len() {
+        let Some(len_bytes) = bytes.get(at..at + 4) else {
+            return (records, true);
+        };
+        let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+        if len > MAX_FRAME_PAYLOAD {
+            return (records, true);
+        }
+        let frame_end = at + 4 + 1 + len + 8;
+        if frame_end > bytes.len() {
+            return (records, true); // torn: frame runs past EOF
+        }
+        let kind = bytes[at + 4];
+        let payload = &bytes[at + 5..at + 5 + len];
+        let sum =
+            u64::from_le_bytes(bytes[frame_end - 8..frame_end].try_into().unwrap());
+        let mut sum_input = Vec::with_capacity(1 + len);
+        sum_input.push(kind);
+        sum_input.extend_from_slice(payload);
+        if fnv1a64(&sum_input) != sum {
+            return (records, true); // checksum: torn or corrupt
+        }
+        let Some(rec) = WalRecord::decode(kind, payload) else {
+            return (records, true);
+        };
+        records.push(rec);
+        at = frame_end;
+    }
+    (records, false)
+}
+
+/// Read a WAL file; a missing file is an empty log. See [`parse_frames`]
+/// for the torn-tail contract.
+pub fn read_wal(path: &Path) -> io::Result<(Vec<WalRecord>, bool)> {
+    let mut bytes = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut bytes)?;
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok((Vec::new(), false)),
+        Err(e) => return Err(e),
+    }
+    Ok(parse_frames(&bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(v: u64) -> WalRecord {
+        WalRecord::Update {
+            version_after: v,
+            batch_wire: format!("add=0:{v}"),
+            report_wire: format!("ins=0:{v} del= cols= rows= rejected=0 rebuilt=0"),
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let records = vec![
+            WalRecord::Load { version_base: 1 << 32 },
+            upd((1 << 32) + 1),
+            upd((1 << 32) + 2),
+            WalRecord::Drop { version: (1 << 32) + 2 },
+        ];
+        let mut bytes = Vec::new();
+        for r in &records {
+            bytes.extend_from_slice(&encode_frame(r));
+        }
+        let (parsed, torn) = parse_frames(&bytes);
+        assert!(!torn);
+        assert_eq!(parsed, records);
+    }
+
+    #[test]
+    fn every_truncation_of_the_final_frame_drops_exactly_it() {
+        // the crash-consistency kernel: cutting the file anywhere inside
+        // the last frame must yield the full prefix and nothing more
+        let mut bytes = Vec::new();
+        for v in 0..3u64 {
+            bytes.extend_from_slice(&encode_frame(&upd(v)));
+        }
+        let last = encode_frame(&upd(3));
+        let prefix_len = bytes.len();
+        bytes.extend_from_slice(&last);
+        for cut in prefix_len..bytes.len() {
+            let (parsed, torn) = parse_frames(&bytes[..cut]);
+            assert_eq!(parsed.len(), 3, "cut at {cut}");
+            assert!(torn, "cut at {cut} must report a dropped tail");
+        }
+        let (parsed, torn) = parse_frames(&bytes);
+        assert_eq!(parsed.len(), 4);
+        assert!(!torn);
+    }
+
+    #[test]
+    fn corrupt_byte_drops_the_tail_not_the_prefix() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&encode_frame(&upd(0)));
+        let second_start = bytes.len();
+        bytes.extend_from_slice(&encode_frame(&upd(1)));
+        // flip a payload byte in the second frame
+        bytes[second_start + 6] ^= 0xFF;
+        let (parsed, torn) = parse_frames(&bytes);
+        assert_eq!(parsed, vec![upd(0)]);
+        assert!(torn);
+        // an absurd length prefix is rejected without allocating
+        let mut bytes = encode_frame(&upd(0));
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        let (parsed, torn) = parse_frames(&bytes);
+        assert_eq!(parsed.len(), 1);
+        assert!(torn);
+    }
+
+    #[test]
+    fn file_append_reset_truncate() {
+        let dir = super::super::tests::tempdir("wal");
+        let path = dir.join("g.wal");
+        assert_eq!(read_wal(&path).unwrap(), (vec![], false), "missing file is empty log");
+        append(&path, &WalRecord::Load { version_base: 0 }).unwrap();
+        append(&path, &upd(1)).unwrap();
+        let (recs, torn) = read_wal(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(!torn);
+        reset_with(&path, &WalRecord::Load { version_base: 1 << 32 }).unwrap();
+        let (recs, _) = read_wal(&path).unwrap();
+        assert_eq!(recs, vec![WalRecord::Load { version_base: 1 << 32 }]);
+        truncate(&path).unwrap();
+        assert_eq!(read_wal(&path).unwrap(), (vec![], false));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
