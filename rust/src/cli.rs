@@ -2,7 +2,8 @@
 //! offline). `bimatch help` prints usage.
 
 use crate::coordinator::job::{GraphSource, MatchJob};
-use crate::coordinator::{registry, AlgoSpec, Executor, Metrics, Server};
+use crate::coordinator::{registry, AlgoSpec, Executor, Metrics, Server, ServerCfg};
+use crate::persist::replicate::AckMode;
 use crate::graph::gen::Family;
 use crate::harness::{catalog, Scale};
 use crate::matching::init::InitHeuristic;
@@ -31,6 +32,7 @@ USAGE:
   bimatch gen    --family <name> --n <int> [--seed <int>] [--permute] --out <path.mtx>
   bimatch verify --mtx <path>          cross-check several algorithms on a file
   bimatch serve  [--addr <ip:port>] [--data-dir <path>] [--max-graphs <n>]
+                [--replicate-from <ip:port>] [--ack-mode local|quorum]
                 TCP line-protocol matching service
                 (one-shot MATCH plus the incremental verbs: LOAD name=…
                 installs a graph server-side, UPDATE name=… add=r:c,…
@@ -45,7 +47,16 @@ USAGE:
                 log tail and repairing — not recomputing — its matching,
                 and SAVE name=… forces a snapshot now. --max-graphs caps
                 the in-memory store: LRU graphs are snapshotted to the
-                data dir and transparently reloaded on their next MATCH)
+                data dir and transparently reloaded on their next MATCH.
+                --replicate-from starts a read replica: it tails the
+                primary's WAL-frame stream, replays it through the crash-
+                recovery path, serves MATCH name=… and rejects writes;
+                PROMOTE over the wire fails it over (epoch-fencing the
+                old primary). --ack-mode quorum makes the primary hold
+                each write's OK until a follower acked its frame, so a
+                primary crash can never lose an acked update. SIGTERM or
+                SIGINT triggers a graceful stop: in-flight requests
+                drain, WALs fsync, then the process exits)
   bimatch algos                        list registered algorithms
                 (also: bimatch --list-algos — CI diffs this against the
                 registry-names.txt golden file)
@@ -302,6 +313,32 @@ fn cmd_verify(flags: &HashMap<String, String>) -> i32 {
     0
 }
 
+/// Set by the process signal handler; a watcher thread forwards it to the
+/// server's stop handle (handlers themselves must stay async-signal-safe,
+/// so the handler only flips this flag).
+static SIGNAL_STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_stop_signal(_sig: i32) {
+    SIGNAL_STOP.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Route SIGTERM (15) and SIGINT (2) into [`SIGNAL_STOP`]. Declared by
+/// hand: libc is unavailable offline, and `signal(2)` is in every libc
+/// the target links anyway.
+#[cfg(unix)]
+fn install_stop_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(15, on_stop_signal); // SIGTERM
+        signal(2, on_stop_signal); // SIGINT
+    }
+}
+
+#[cfg(not(unix))]
+fn install_stop_signal_handlers() {}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let default_addr = "127.0.0.1:7700".to_string();
     let addr = flags.get("addr").unwrap_or(&default_addr);
@@ -318,25 +355,61 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
         None => None,
     };
+    let ack_mode = match flags.get("ack-mode").map(String::as_str) {
+        None => AckMode::Local,
+        Some(name) => match AckMode::from_name(name) {
+            Some(m) => m,
+            None => {
+                eprintln!("bad --ack-mode {name} (local|quorum)");
+                return 2;
+            }
+        },
+    };
+    let replicate_from = flags.get("replicate-from").cloned();
     let durable = data_dir.is_some();
-    match Server::bind_with(addr, engine_if_available(), data_dir, max_graphs) {
+    let mut cfg = ServerCfg::new(addr);
+    cfg.engine = engine_if_available();
+    cfg.data_dir = data_dir;
+    cfg.max_graphs = max_graphs;
+    cfg.replicate_from = replicate_from.clone();
+    cfg.ack_mode = ack_mode;
+    match Server::bind_cfg(cfg) {
         Ok(server) => {
             println!("bimatch service listening on {}", server.local_addr().unwrap());
             if durable {
-                // recovery already ran inside bind_with
+                // recovery already ran inside bind_cfg
                 let recovered = server.store().len();
                 println!("durability on: {recovered} stored graph(s) recovered from the data dir");
+            }
+            match &replicate_from {
+                Some(primary) => println!(
+                    "replica of {primary}: read-only, tailing its WAL stream \
+                     (send PROMOTE to fail over)"
+                ),
+                None => println!("ack mode: {}", ack_mode.name()),
             }
             println!(
                 "protocol: MATCH family=<f> n=<n> [seed=..] [permute=0|1] [algo=..] | \
                  LOAD name=<g> family=..|mtx=.. | UPDATE name=<g> [add=r:c,..] [del=r:c,..] \
                  [addcols=r;r|..] [addrows=c;c|..] | MATCH name=<g> | DROP name=<g> | \
-                 SAVE name=<g> | ALGOS | GRAPHS | STATS | QUIT"
+                 SAVE name=<g> | ALGOS | GRAPHS | STATS | LAG | PROMOTE | QUIT"
             );
+            // SIGTERM/SIGINT → graceful stop: the watcher flips the stop
+            // handle, serve() drains in-flight requests and fsyncs WALs
+            install_stop_signal_handlers();
+            let stop = server.stop_handle();
+            std::thread::spawn(move || loop {
+                if SIGNAL_STOP.load(std::sync::atomic::Ordering::Relaxed) {
+                    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            });
             if let Err(e) = server.serve() {
                 eprintln!("serve error: {e}");
                 return 1;
             }
+            println!("shutdown: requests drained, WALs synced");
             0
         }
         Err(e) => {

@@ -31,17 +31,22 @@ use super::metrics::Metrics;
 use super::registry;
 use super::router;
 use super::store::{CachedMatching, GraphStore, StoreEntry};
-use crate::dynamic::{self, DeltaBatch};
+use crate::dynamic::{self, DeltaBatch, DynamicGraph};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::algo::{CancelToken, RunCtx, RunOutcome};
 use crate::matching::Matching;
-use crate::persist::{recover, Persistence, RecoveryReport};
+use crate::persist::replicate::{self, AckMode, Event, EventKind, Hub, NodeRole};
+use crate::persist::{self, recover, snapshot, wal, Persistence, RecoveryReport};
 use crate::runtime::Engine;
 use crate::util::pool::WorkspacePool;
 use crate::util::timer::Timer;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// How long a quorum-mode write waits for a follower ack before replying
+/// `ERR replication` (the write stays locally durable either way).
+const DEFAULT_ACK_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Stateless-per-job executor (cheap to clone across workers; clones share
 /// the workspace pool, the cancellation token, the graph store, and —
@@ -55,6 +60,13 @@ pub struct Executor {
     store: Arc<GraphStore>,
     persist: Option<Arc<Persistence>>,
     max_graphs: Option<usize>,
+    /// replication topology role shared with the server's verb handlers
+    /// and the follower tailer thread
+    role: Arc<NodeRole>,
+    /// primary-side frame shipper (idle until a follower subscribes)
+    hub: Arc<Hub>,
+    ack_mode: AckMode,
+    ack_timeout: Duration,
 }
 
 /// The effective deadline for a job: `timeout` measured from `start`,
@@ -82,6 +94,10 @@ impl Executor {
             store: Arc::new(GraphStore::new()),
             persist: None,
             max_graphs: None,
+            role: Arc::new(NodeRole::new()),
+            hub: Arc::new(Hub::new()),
+            ack_mode: AckMode::Local,
+            ack_timeout: DEFAULT_ACK_TIMEOUT,
         }
     }
 
@@ -89,10 +105,49 @@ impl Executor {
     /// snapshot their base, successful `UPDATE`s hit the write-ahead log
     /// (fsync'd) before they are acknowledged, threshold rebuilds
     /// piggyback snapshots, and `DROP`s delete the on-disk state. Attach
-    /// *before* cloning the executor across workers.
+    /// *before* cloning the executor across workers. Also restores the
+    /// node's fencing epoch from `<data-dir>/epoch`.
     pub fn with_persistence(mut self, persist: Arc<Persistence>) -> Self {
+        self.role
+            .epoch
+            .store(replicate::read_epoch(persist.dir()), Ordering::Relaxed);
         self.persist = Some(persist);
         self
+    }
+
+    /// Set how writes are acknowledged (`--ack-mode`): `Local` replies on
+    /// the local fsync; `Quorum` additionally blocks until a follower
+    /// acks the replicated event.
+    pub fn with_ack_mode(mut self, mode: AckMode) -> Self {
+        self.ack_mode = mode;
+        self
+    }
+
+    /// Override the quorum ack wait (tests use a short one).
+    pub fn with_ack_timeout(mut self, timeout: Duration) -> Self {
+        self.ack_timeout = timeout;
+        self
+    }
+
+    pub fn ack_mode(&self) -> AckMode {
+        self.ack_mode
+    }
+
+    /// The replication role shared with the server and tailer.
+    pub fn role(&self) -> &Arc<NodeRole> {
+        &self.role
+    }
+
+    /// The primary-side frame shipper.
+    pub fn hub(&self) -> &Arc<Hub> {
+        &self.hub
+    }
+
+    /// Flip replica mode: a read-only node rejects every write verb with
+    /// [`JobError::ReadOnly`] while still serving `MATCH` from the
+    /// replicated state.
+    pub fn set_read_only(&self, read_only: bool) {
+        self.role.read_only.store(read_only, Ordering::Relaxed);
     }
 
     /// Cap the in-memory store at `max` graphs (LRU): a `LOAD` beyond the
@@ -283,6 +338,13 @@ impl Executor {
     }
 
     pub fn execute(&self, job: &MatchJob) -> MatchOutcome {
+        // the read-replica contract: reads flow, writes bounce with a
+        // typed error — a fenced ex-primary behaves the same way
+        if !matches!(job.op, JobOp::Match) && !self.role.is_writable() {
+            let mut out = Self::blank(job.id);
+            self.fail(&mut out, JobError::ReadOnly);
+            return out;
+        }
         match &job.op {
             JobOp::Match => self.execute_match(job),
             JobOp::Load { name } => self.execute_load(job, name),
@@ -290,6 +352,46 @@ impl Executor {
             JobOp::DropGraph { name } => self.execute_drop(job, name),
             JobOp::Save { name } => self.execute_save(job, name),
         }
+    }
+
+    /// Whether write verbs should publish replication events: there is a
+    /// live follower, or quorum mode demands one (publishing then lets
+    /// the quorum wait fail honestly instead of silently passing).
+    fn replicating(&self) -> bool {
+        self.hub.subscriber_count() > 0 || self.ack_mode == AckMode::Quorum
+    }
+
+    fn publish_event(&self, kind: EventKind, name: &str, data: Vec<u8>) -> u64 {
+        let seq = self.hub.publish(kind, name, data);
+        self.metrics.repl_frames_shipped.fetch_add(1, Ordering::Relaxed);
+        self.metrics.repl_lag.store(self.hub.lag(), Ordering::Relaxed);
+        seq
+    }
+
+    /// The quorum write barrier: under `--ack-mode quorum`, block until a
+    /// follower acked `seq`. On timeout the job fails with
+    /// `JobError::Replication` — the write is already locally durable
+    /// (never rolled back here), so the client must treat it as
+    /// in-doubt, exactly like a commit whose ack was lost on the wire.
+    /// Returns whether the job was failed.
+    fn wait_quorum(&self, seq: Option<u64>, out: &mut MatchOutcome) -> bool {
+        let Some(seq) = seq else { return false };
+        if self.ack_mode != AckMode::Quorum {
+            return false;
+        }
+        if self.hub.wait_acked(seq, self.ack_timeout) {
+            self.metrics.repl_lag.store(self.hub.lag(), Ordering::Relaxed);
+            return false;
+        }
+        self.fail(
+            out,
+            JobError::Replication(format!(
+                "no follower acknowledged seq {seq} within {} ms; \
+                 the write is durable locally but unconfirmed",
+                self.ack_timeout.as_millis()
+            )),
+        );
+        true
     }
 
     fn execute_match(&self, job: &MatchJob) -> MatchOutcome {
@@ -459,10 +561,21 @@ impl Executor {
             self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
             self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
         }
+        // ship the new incarnation as a snapshot event while still under
+        // the name lock, so followers see the re-base strictly before any
+        // of its update frames
+        let mut repl_seq = None;
+        if self.replicating() {
+            let data = snapshot::encode_snapshot(base, &g, None);
+            repl_seq = Some(self.publish_event(EventKind::Snap, name, data));
+        }
         self.store.load_with_base(name, g, base);
         drop(name_guard);
         drop(name_lock);
         self.enforce_graph_cap(name);
+        if self.wait_quorum(repl_seq, &mut out) {
+            return out;
+        }
         self.metrics.graphs_loaded.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
@@ -509,6 +622,16 @@ impl Executor {
                 self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
             }
         }
+        // ship the drop (as the same version-scoped frame the WAL holds)
+        // before unmapping, still under the locks that order this name's
+        // event stream
+        let mut repl_seq = None;
+        if self.replicating() {
+            let frame = wal::encode_frame(&wal::WalRecord::Drop {
+                version: version.unwrap_or(0),
+            });
+            repl_seq = Some(self.publish_event(EventKind::Frame, name, frame));
+        }
         self.store.drop_graph(name);
         drop(entry_guard);
         if let Some(p) = &self.persist {
@@ -520,6 +643,9 @@ impl Executor {
         drop(name_lock);
         if let Some(p) = &self.persist {
             p.release_name_lock_if_unused(name);
+        }
+        if self.wait_quorum(repl_seq, &mut out) {
+            return out;
         }
         self.metrics.graphs_dropped.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
@@ -746,6 +872,18 @@ impl Executor {
             }
         }
 
+        // ship the committed frame while still holding the entry lock —
+        // updates to one graph serialize on it, so stream order matches
+        // commit order. The bytes are exactly what the WAL appended
+        // (same `update_record`), so the follower replays the identical
+        // incarnation-scoped frame recovery would.
+        let mut repl_seq = None;
+        if !report.is_noop() && self.replicating() {
+            let frame =
+                wal::encode_frame(&persist::update_record(e.graph.version(), &report));
+            repl_seq = Some(self.publish_event(EventKind::Frame, name, frame));
+        }
+
         // success: the batch is durable — per-graph stats and the new
         // maintained matching land together
         e.stats.updates += 1;
@@ -773,6 +911,9 @@ impl Executor {
         }
         drop(e);
 
+        if self.wait_quorum(repl_seq, &mut out) {
+            return out;
+        }
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_updated.fetch_add(1, Ordering::Relaxed);
         self.metrics
@@ -783,6 +924,174 @@ impl Executor {
             .fetch_add(out.cardinality as u64, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
         out
+    }
+
+    /// Crash-promoted failover: turn this replica (or fenced ex-primary)
+    /// into the writable primary. Fences the dead primary by bumping the
+    /// epoch past anything ever seen from it, and re-bases every stored
+    /// graph into a fresh incarnation of the `version >> 32` space — so
+    /// a frame from the old primary's incarnations can never replay over
+    /// promoted state, and a rejoining ex-primary is rejected (and
+    /// self-fences) on its first handshake. Returns `(epoch, graphs)`.
+    pub fn promote(&self) -> Result<(u64, usize), String> {
+        if self.role.is_writable() {
+            return Err("not a replica: this node is already writable".into());
+        }
+        // stop the tailer first so no replicated event lands mid-re-base
+        self.role.promoted.store(true, Ordering::Relaxed);
+        let new_epoch = self
+            .role
+            .epoch()
+            .max(self.role.primary_epoch_seen.load(Ordering::Relaxed))
+            + 1;
+        self.role.epoch.store(new_epoch, Ordering::Relaxed);
+        if let Some(p) = &self.persist {
+            replicate::write_epoch(p.dir(), new_epoch)
+                .map_err(|e| format!("persisting epoch {new_epoch}: {e}"))?;
+        }
+        let mut rebased = 0usize;
+        for name in self.store.names() {
+            let Some(entry) = self.store.entry(&name) else { continue };
+            let mut e = entry.lock().unwrap();
+            let g = e.graph.snapshot();
+            let old_version = e.graph.version();
+            let matching = e
+                .matching
+                .as_ref()
+                .filter(|c| c.version == old_version)
+                .map(|c| c.matching.clone());
+            let base = self.store.allocate_version_base();
+            if let Some(p) = &self.persist {
+                // the new incarnation's anchor snapshot (carrying the
+                // replicated matching) plus WAL compaction — recovery of
+                // the promoted node never replays pre-promotion frames
+                p.record_snapshot(&name, &g, base, matching.as_ref())
+                    .map_err(|e| format!("re-basing {name:?} at promotion: {e}"))?;
+                self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
+            }
+            e.graph = DynamicGraph::from_arc(g).with_version_base(base);
+            e.matching = matching.map(|m| CachedMatching { matching: m, version: base });
+            rebased += 1;
+        }
+        self.role.read_only.store(false, Ordering::Relaxed);
+        self.role.fenced.store(false, Ordering::Relaxed);
+        Ok((new_epoch, rebased))
+    }
+
+    /// Install one replicated event — the follower half of the tailer
+    /// loop. `Err` makes the tailer drop the connection and resync from
+    /// a fresh baseline.
+    pub fn apply_replicated_event(&self, ev: &Event) -> Result<(), String> {
+        match ev.kind {
+            EventKind::Snap => self.apply_replicated_snapshot(ev),
+            EventKind::Frame => self.apply_replicated_frame(ev),
+        }
+    }
+
+    fn apply_replicated_snapshot(&self, ev: &Event) -> Result<(), String> {
+        let snap = snapshot::decode_snapshot(&ev.data)
+            .ok_or_else(|| format!("undecodable snapshot image for {:?}", ev.name))?;
+        // durability before the ack: a durable follower persists what it
+        // acknowledges, so its own crash recovery reproduces this state
+        if let Some(p) = &self.persist {
+            p.record_snapshot(&ev.name, &snap.graph, snap.version, snap.matching.as_ref())
+                .map_err(|e| format!("persisting replicated snapshot: {e}"))?;
+            self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
+        }
+        let version = snap.version;
+        let dg = DynamicGraph::from_arc(Arc::new(snap.graph)).with_version_base(version);
+        let cached = snap.matching.map(|m| CachedMatching { matching: m, version });
+        self.store.install(&ev.name, dg, cached);
+        self.metrics.repl_frames_applied.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn apply_replicated_frame(&self, ev: &Event) -> Result<(), String> {
+        let (records, torn) = wal::parse_frames(&ev.data);
+        if torn || records.len() != 1 {
+            return Err(format!("malformed frame event for {:?}", ev.name));
+        }
+        match records.into_iter().next().expect("checked len") {
+            // baselines and re-bases ship as snapshot events; a LOAD
+            // marker frame carries no graph and is skipped if ever seen
+            wal::WalRecord::Load { .. } => Ok(()),
+            wal::WalRecord::Drop { version } => {
+                if let Some(p) = &self.persist {
+                    p.record_drop(&ev.name, Some(version))
+                        .map_err(|e| format!("persisting replicated drop: {e}"))?;
+                }
+                self.store.drop_graph(&ev.name);
+                self.metrics.graphs_dropped.fetch_add(1, Ordering::Relaxed);
+                self.metrics.repl_frames_applied.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            wal::WalRecord::Update { version_after, batch_wire, report_wire } => {
+                let entry = self.store.entry(&ev.name).ok_or_else(|| {
+                    format!("frame for graph {:?} with no baseline — resync", ev.name)
+                })?;
+                let mut e = entry.lock().unwrap();
+                let floor = e.graph.version();
+                // the same replay kernel as crash recovery: incarnation
+                // scoping, ≤-floor skip, gap halt, report cross-check
+                match recover::apply_update_frame(
+                    &mut e.graph,
+                    floor >> 32,
+                    floor,
+                    version_after,
+                    &batch_wire,
+                    &report_wire,
+                ) {
+                    recover::FrameStep::Skipped => Ok(()),
+                    recover::FrameStep::Halt => Err(format!(
+                        "frame v{version_after} does not extend v{floor} for {:?} — resync",
+                        ev.name
+                    )),
+                    recover::FrameStep::Applied(report) => {
+                        let version = e.graph.version();
+                        // patch the maintained matching forward by seeded
+                        // repair (same as recovery). Best-effort: on any
+                        // failure the graph still advances and the cache
+                        // drops — a promoted follower's next MATCH then
+                        // runs cold rather than serving untrusted state.
+                        let prev = e
+                            .matching
+                            .take()
+                            .filter(|c| c.version == floor)
+                            .map(|c| c.matching);
+                        if let Some(prev) = prev {
+                            let live = e.graph.snapshot();
+                            let spec = router::route_graph(&live);
+                            let mut ctx = RunCtx::new(self.pool.clone());
+                            if let Ok(summary) = dynamic::repair(
+                                &live,
+                                prev,
+                                &report,
+                                &spec,
+                                self.engine.clone(),
+                                &mut ctx,
+                            ) {
+                                if summary.result.outcome == RunOutcome::Complete
+                                    && summary.result.matching.certify(&live).is_ok()
+                                {
+                                    e.matching = Some(CachedMatching {
+                                        matching: summary.result.matching,
+                                        version,
+                                    });
+                                }
+                            }
+                        }
+                        if let Some(p) = &self.persist {
+                            p.append_update(&ev.name, version, &report)
+                                .map_err(|e| format!("persisting replicated frame: {e}"))?;
+                            self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+                        }
+                        e.stats.updates += 1;
+                        self.metrics.repl_frames_applied.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                }
+            }
+        }
     }
 }
 

@@ -177,6 +177,14 @@ pub enum JobError {
     DeadlineExceeded { timeout_ms: u64 },
     /// the run observed its cancellation token
     Cancelled,
+    /// the node is a read replica (or a fenced ex-primary): write verbs
+    /// are rejected wholesale — `PROMOTE` it or write to the primary
+    ReadOnly,
+    /// the write committed locally but replication did not confirm it in
+    /// time (quorum ack mode): the update is durable *here* and will
+    /// reach followers when they reconnect, but the client must treat it
+    /// as in-doubt until a later read confirms it
+    Replication(String),
 }
 
 impl std::fmt::Display for JobError {
@@ -189,6 +197,12 @@ impl std::fmt::Display for JobError {
                 write!(f, "timeout: exceeded the {timeout_ms} ms deadline")
             }
             JobError::Cancelled => write!(f, "cancelled"),
+            JobError::ReadOnly => write!(
+                f,
+                "read-only: this node is a replica or fenced ex-primary \
+                 (PROMOTE it or write to the primary)"
+            ),
+            JobError::Replication(e) => write!(f, "replication: {e}"),
         }
     }
 }

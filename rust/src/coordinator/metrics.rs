@@ -37,6 +37,16 @@ pub struct Metrics {
     /// snapshot files written (LOAD bases, rebuild piggybacks, `SAVE`,
     /// eviction)
     pub snapshots_written: AtomicU64,
+    /// replication events published to the follower stream (primary side:
+    /// snapshots, update frames, and drop markers)
+    pub repl_frames_shipped: AtomicU64,
+    /// replication events applied from the stream (follower side)
+    pub repl_frames_applied: AtomicU64,
+    /// follower acknowledgements processed (primary side)
+    pub repl_acks: AtomicU64,
+    /// current replication lag in events: last published sequence minus
+    /// highest acked sequence (primary side; gauge, not a counter)
+    pub repl_lag: AtomicU64,
     pub edges_processed: AtomicU64,
     pub matched_total: AtomicU64,
     latency: [AtomicU64; N_BUCKETS],
@@ -107,6 +117,7 @@ impl Metrics {
             "jobs: submitted={} completed={} failed={} timeout={} cancelled={} updated={} | \
              graphs: loaded={} dropped={} evicted={} recovered={} | \
              persist: wal_appends={} snapshots={} | \
+             repl: shipped={} applied={} acks={} lag={} | \
              matched={} edges={} | \
              latency mean={:.4}s p50≤{:.4}s p95≤{:.4}s p99≤{:.4}s",
             self.jobs_submitted.load(Ordering::Relaxed),
@@ -121,6 +132,10 @@ impl Metrics {
             self.graphs_recovered.load(Ordering::Relaxed),
             self.wal_appends.load(Ordering::Relaxed),
             self.snapshots_written.load(Ordering::Relaxed),
+            self.repl_frames_shipped.load(Ordering::Relaxed),
+            self.repl_frames_applied.load(Ordering::Relaxed),
+            self.repl_acks.load(Ordering::Relaxed),
+            self.repl_lag.load(Ordering::Relaxed),
             self.matched_total.load(Ordering::Relaxed),
             self.edges_processed.load(Ordering::Relaxed),
             self.mean_latency(),
@@ -203,6 +218,10 @@ mod tests {
         m.graphs_recovered.store(6, Ordering::Relaxed);
         m.wal_appends.store(11, Ordering::Relaxed);
         m.snapshots_written.store(9, Ordering::Relaxed);
+        m.repl_frames_shipped.store(13, Ordering::Relaxed);
+        m.repl_frames_applied.store(12, Ordering::Relaxed);
+        m.repl_acks.store(8, Ordering::Relaxed);
+        m.repl_lag.store(1, Ordering::Relaxed);
         let r = m.report();
         assert!(r.contains("timeout=3"), "{r}");
         assert!(r.contains("cancelled=2"), "{r}");
@@ -213,5 +232,9 @@ mod tests {
         assert!(r.contains("recovered=6"), "{r}");
         assert!(r.contains("wal_appends=11"), "{r}");
         assert!(r.contains("snapshots=9"), "{r}");
+        assert!(r.contains("shipped=13"), "{r}");
+        assert!(r.contains("applied=12"), "{r}");
+        assert!(r.contains("acks=8"), "{r}");
+        assert!(r.contains("lag=1"), "{r}");
     }
 }

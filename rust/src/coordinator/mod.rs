@@ -18,7 +18,7 @@ pub mod store;
 pub use exec::Executor;
 pub use job::{AlgoChoice, GraphSource, JobError, JobOp, MatchJob, MatchOutcome, UpdateStats};
 pub use metrics::Metrics;
-pub use server::Server;
+pub use server::{Server, ServerCfg};
 pub use service::{Service, ServiceConfig};
 pub use spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};
 pub use store::GraphStore;

@@ -16,6 +16,10 @@
 //! ALGOS                       → ALGOS <name> <name> ...
 //! GRAPHS                      → GRAPHS <name> <name> ...
 //! STATS                       → STATS <metrics report>
+//! LAG                         → LAG role=.. epoch=.. followers=.. shipped=..
+//!                                   acked=.. lag=.. applied=.. connected=..
+//! PROMOTE                     replica → writable primary (fences the old one)
+//! REPLICA epoch=<e>           upgrade this connection to the event stream
 //! QUIT
 //! ```
 //!
@@ -37,8 +41,9 @@
 //! re-serves the cached maximum (warm start — one quiet phase). The
 //! `STATS` report covers them (`updated=`, `graphs:
 //! loaded=/dropped=/evicted=/recovered=`) next to the failure split
-//! (`timeout=`, `cancelled=`) and the durability counters (`persist:
-//! wal_appends=/snapshots=`).
+//! (`timeout=`, `cancelled=`), the durability counters (`persist:
+//! wal_appends=/snapshots=`), and the replication counters (`repl:
+//! shipped=/applied=/acks=/lag=`).
 //!
 //! When the server is bound with a data dir ([`Server::bind_with`]),
 //! graphs survive restarts: `LOAD`s and `UPDATE`s are persisted (WAL +
@@ -46,14 +51,38 @@
 //! log and repairs each matching, and `SAVE name=…` forces a snapshot +
 //! log compaction on demand. See `crate::persist` for the guarantees.
 //!
+//! ## Replication ([`ServerCfg::replicate_from`])
+//!
+//! A server started with `replicate_from` is a **read replica**: it tails
+//! the primary's event stream (see [`crate::persist::replicate`]),
+//! replays every committed frame through the same incarnation-scoped
+//! path crash recovery uses, serves `MATCH name=…` from the replicated
+//! state, and rejects writes with `ERR read-only`. `PROMOTE` turns it
+//! into the writable primary: the epoch bump + per-graph re-base fence
+//! the dead primary, whose own `REPLICA` handshake (or any write) is
+//! rejected if it ever comes back. `LAG` reports both sides of the
+//! stream.
+//!
+//! ## Connection hardening and graceful shutdown
+//!
+//! Every connection has an idle read timeout ([`ServerCfg::idle_timeout`])
+//! and a max request line length ([`ServerCfg::max_line_len`]) — a peer
+//! that trickles bytes forever or ships an unbounded line is cut off, not
+//! accumulated. When the stop handle is set, [`Server::serve`] stops
+//! accepting, waits for in-flight *requests* to finish (bounded drain),
+//! fsyncs every open WAL, joins the tailer, and returns — so a clean
+//! SIGTERM never loses an acked write.
+//!
 //! Replies:
 //! `OK id=<id> algo=<name> nr=.. nc=.. edges=.. card=.. certified=0|1
-//!  t_load=.. t_match=.. frontier_peak=.. endpoints=.. devpar_cycles=..`
-//! or `ERR <message>`. The last three OK fields expose the
-//! frontier-compaction counters (`RunStats::{frontier_peak,
-//! endpoints_total, device_parallel_cycles}`) so remote clients can
-//! observe compaction behaviour; all three are 0 for CPU algorithms and
-//! for FullScan GPU runs. `LOAD`/`DROP`/`SAVE` reply
+//!  phases=.. t_load=.. t_match=.. frontier_peak=.. endpoints=..
+//!  devpar_cycles=..`
+//! or `ERR <message>`. `phases=` exposes `RunStats::phases` so clients
+//! (and the failover chaos test) can verify a warm start beat a cold
+//! recompute. The last three OK fields expose the frontier-compaction
+//! counters (`RunStats::{frontier_peak, endpoints_total,
+//! device_parallel_cycles}`); all three are 0 for CPU algorithms and for
+//! FullScan GPU runs. `LOAD`/`DROP`/`SAVE` reply
 //! `OK id=<id> name=<graph> nr=.. nc=.. edges=..` /
 //! `OK id=<id> name=<graph> dropped=1` /
 //! `OK id=<id> name=<graph> saved=1`; `UPDATE` appends
@@ -68,17 +97,67 @@ use super::spec::AlgoSpec;
 use crate::dynamic::DeltaBatch;
 use crate::graph::gen::Family;
 use crate::matching::init::InitHeuristic;
+use crate::persist::replicate::{
+    self, AckMode, Event, EventKind, LineIo, LineReader, TailerCfg,
+};
+use crate::persist::snapshot;
 use crate::runtime::Engine;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Full server configuration ([`Server::bind_cfg`]). [`Server::bind`] and
+/// [`Server::bind_with`] are the common-case shorthands.
+pub struct ServerCfg {
+    pub addr: String,
+    pub engine: Option<Arc<Engine>>,
+    /// durability: per-graph WAL + snapshots + startup recovery
+    pub data_dir: Option<PathBuf>,
+    /// LRU cap on in-memory stored graphs
+    pub max_graphs: Option<usize>,
+    /// start as a read replica tailing this primary (`host:port`)
+    pub replicate_from: Option<String>,
+    /// how writes are acknowledged (`local` = on the local fsync,
+    /// `quorum` = only after a follower confirms the replicated event)
+    pub ack_mode: AckMode,
+    /// override the quorum ack wait (tests use a short one)
+    pub ack_timeout: Option<Duration>,
+    /// close a connection that produces no complete request line for this
+    /// long
+    pub idle_timeout: Duration,
+    /// reject (and close) a connection that ships a longer request line
+    pub max_line_len: usize,
+}
+
+impl ServerCfg {
+    pub fn new(addr: &str) -> Self {
+        Self {
+            addr: addr.to_string(),
+            engine: None,
+            data_dir: None,
+            max_graphs: None,
+            replicate_from: None,
+            ack_mode: AckMode::Local,
+            ack_timeout: None,
+            idle_timeout: Duration::from_secs(120),
+            max_line_len: 16 << 20,
+        }
+    }
+}
 
 pub struct Server {
     listener: TcpListener,
     executor: Executor,
     next_id: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
+    /// in-flight request gauge — the graceful-shutdown drain waits on it
+    active: Arc<AtomicU64>,
+    idle_timeout: Duration,
+    max_line_len: usize,
+    tailer: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Server {
@@ -94,27 +173,68 @@ impl Server {
     pub fn bind_with(
         addr: &str,
         engine: Option<Arc<Engine>>,
-        data_dir: Option<std::path::PathBuf>,
+        data_dir: Option<PathBuf>,
         max_graphs: Option<usize>,
     ) -> std::io::Result<Self> {
-        let listener = TcpListener::bind(addr)?;
-        let mut executor = Executor::new(engine, Arc::new(Metrics::new()));
-        if let Some(dir) = data_dir {
+        let mut cfg = ServerCfg::new(addr);
+        cfg.engine = engine;
+        cfg.data_dir = data_dir;
+        cfg.max_graphs = max_graphs;
+        Self::bind_cfg(cfg)
+    }
+
+    /// Bind from a full [`ServerCfg`] — the only path that can start a
+    /// read replica (`replicate_from`) or switch the ack mode.
+    pub fn bind_cfg(cfg: ServerCfg) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let mut executor = Executor::new(cfg.engine, Arc::new(Metrics::new()));
+        if let Some(dir) = &cfg.data_dir {
             executor = executor
                 .with_persistence(Arc::new(crate::persist::Persistence::open(dir)?));
         }
-        if let Some(max) = max_graphs {
+        if let Some(max) = cfg.max_graphs {
             executor = executor.with_max_graphs(max);
+        }
+        executor = executor.with_ack_mode(cfg.ack_mode);
+        if let Some(t) = cfg.ack_timeout {
+            executor = executor.with_ack_timeout(t);
         }
         // recovery before the first accept: a client connecting right
         // after bind already sees the restored store (graphs_recovered in
         // STATS tells it how many came back)
         executor.recover()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut tailer = None;
+        if let Some(primary) = cfg.replicate_from {
+            // a replica is read-only from the first accept; the tailer
+            // keeps resyncing (baseline snapshots + frames) until
+            // shutdown, PROMOTE, or a fencing reply
+            executor.set_read_only(true);
+            let tcfg = TailerCfg {
+                primary,
+                role: executor.role().clone(),
+                shutdown: stop.clone(),
+                epoch_dir: cfg.data_dir.clone(),
+            };
+            let exec = executor.clone();
+            tailer = Some(
+                std::thread::Builder::new()
+                    .name("bimatch-replica-tailer".into())
+                    .spawn(move || {
+                        replicate::run_tailer(&tcfg, |ev| exec.apply_replicated_event(ev))
+                    })
+                    .expect("spawn tailer"),
+            );
+        }
         Ok(Self {
             listener,
             executor,
             next_id: Arc::new(AtomicU64::new(1)),
-            stop: Arc::new(AtomicBool::new(false)),
+            stop,
+            active: Arc::new(AtomicU64::new(0)),
+            idle_timeout: cfg.idle_timeout,
+            max_line_len: cfg.max_line_len,
+            tailer: Mutex::new(tailer),
         })
     }
 
@@ -128,26 +248,80 @@ impl Server {
         self.executor.store()
     }
 
-    /// A handle that makes `serve` return after the in-flight accept.
+    /// The executor (tests reach the role/hub/metrics through it).
+    pub fn executor(&self) -> &Executor {
+        &self.executor
+    }
+
+    /// A handle that makes `serve` return: stop accepting, drain
+    /// in-flight requests, fsync the WALs, join the tailer.
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         self.stop.clone()
     }
 
-    /// Accept loop; returns when the stop handle is set (checked between
-    /// connections — send any request to unblock accept).
+    /// Accept loop; returns when the stop handle is set. Shutdown is
+    /// graceful: requests already being executed finish and get their
+    /// replies (bounded by a 10 s drain), every open WAL is fsync'd, and
+    /// the replica tailer (if any) is joined — an acked write can never
+    /// be lost to a clean stop.
     pub fn serve(&self) -> std::io::Result<()> {
-        for conn in self.listener.incoming() {
+        self.listener.set_nonblocking(true)?;
+        loop {
             if self.stop.load(Ordering::Relaxed) {
                 break;
             }
-            let stream = conn?;
-            let executor = self.executor.clone();
-            let next_id = self.next_id.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, executor, next_id);
-            });
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    let executor = self.executor.clone();
+                    let next_id = self.next_id.clone();
+                    let stop = self.stop.clone();
+                    let active = self.active.clone();
+                    let idle_timeout = self.idle_timeout;
+                    let max_line_len = self.max_line_len;
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(
+                            stream,
+                            executor,
+                            next_id,
+                            stop,
+                            active,
+                            idle_timeout,
+                            max_line_len,
+                        );
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(15));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        // drain: connection threads notice `stop` within one read-poll and
+        // exit after finishing (and replying to) their current request
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.active.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // belt-and-braces fsync of every WAL (each acked append already
+        // synced; this closes the window for anything else)
+        if let Some(p) = self.executor.persistence() {
+            p.sync_all()?;
+        }
+        if let Some(h) = self.tailer.lock().unwrap().take() {
+            let _ = h.join();
         }
         Ok(())
+    }
+}
+
+/// Decrements the in-flight gauge on every exit path of a request.
+struct ActiveGuard(Arc<AtomicU64>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -155,22 +329,128 @@ fn handle_conn(
     stream: TcpStream,
     executor: Executor,
     next_id: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicU64>,
+    idle_timeout: Duration,
+    max_line_len: usize,
 ) -> std::io::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
+    // short read poll so both the idle timeout and a server stop are
+    // noticed promptly; LineReader accumulates partial lines across polls
+    let poll = Duration::from_millis(200).min(idle_timeout.max(Duration::from_millis(1)));
+    stream.set_read_timeout(Some(poll))?;
+    let mut lines = LineReader::new(BufReader::new(stream.try_clone()?));
     let mut stream = stream;
-    let mut line = String::new();
+    let mut idle = Duration::ZERO;
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match lines.next_line(max_line_len)? {
+            LineIo::Eof => return Ok(()), // client closed
+            LineIo::TooLong => {
+                let _ = stream.write_all(
+                    format!("ERR line too long (max {max_line_len} bytes)\n").as_bytes(),
+                );
+                return Ok(());
+            }
+            LineIo::Idle => {
+                idle += poll;
+                if stop.load(Ordering::Relaxed) || idle >= idle_timeout {
+                    return Ok(());
+                }
+            }
+            LineIo::Line(line) => {
+                idle = Duration::ZERO;
+                let line = line.trim();
+                if line.split_whitespace().next() == Some("REPLICA") {
+                    // the connection upgrades to a one-way event stream
+                    return serve_replica(stream, lines, line, &executor, &stop);
+                }
+                active.fetch_add(1, Ordering::Relaxed);
+                let _guard = ActiveGuard(active.clone());
+                let reply = match handle_line(line, &executor, &next_id) {
+                    Command::Reply(s) => s,
+                    Command::Quit => return Ok(()),
+                };
+                stream.write_all(reply.as_bytes())?;
+                stream.write_all(b"\n")?;
+            }
         }
-        let reply = match handle_line(line.trim(), &executor, &next_id) {
-            Command::Reply(s) => s,
-            Command::Quit => return Ok(()),
-        };
-        stream.write_all(reply.as_bytes())?;
-        stream.write_all(b"\n")?;
     }
+}
+
+/// The primary half of the replication stream: handshake (epoch fencing
+/// both ways), baseline snapshots, then fan-out + acks until the follower
+/// hangs up or the server stops.
+fn serve_replica(
+    mut stream: TcpStream,
+    mut lines: LineReader<BufReader<TcpStream>>,
+    handshake: &str,
+    executor: &Executor,
+    stop: &Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    let remote_epoch = handshake
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("epoch="))
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0);
+    let role = executor.role();
+    role.primary_epoch_seen.fetch_max(remote_epoch, Ordering::Relaxed);
+    let local_epoch = role.epoch();
+    if remote_epoch > local_epoch {
+        // the peer outranks us: a promotion happened behind our back.
+        // Refuse the stream AND fence ourselves — an ex-primary that
+        // keeps accepting writes would split-brain.
+        role.fenced.store(true, Ordering::Relaxed);
+        stream.write_all(
+            format!(
+                "ERR fenced: peer epoch {remote_epoch} > local {local_epoch} \
+                 (this node was failed over; writes are now rejected)\n"
+            )
+            .as_bytes(),
+        )?;
+        return Ok(());
+    }
+    // subscribe BEFORE reading the baseline: every event published while
+    // the snapshots are being captured is already queued for this
+    // follower, and replaying a queued frame the baseline already covers
+    // is a no-op (≤-version skip) — no gap, no double-apply
+    let hub = executor.hub().clone();
+    let (floor_seq, sub_id, rx) = hub.subscribe();
+    stream.write_all(format!("OK epoch={local_epoch}\n").as_bytes())?;
+    let result = (|| -> std::io::Result<()> {
+        for name in executor.store().names() {
+            let Some(view) = executor.store().graph_for_match(&name) else { continue };
+            let data = snapshot::encode_snapshot(
+                view.version,
+                &view.graph,
+                view.cached.as_ref().map(|c| &c.matching),
+            );
+            let ev = Event { seq: floor_seq, kind: EventKind::Snap, name, data };
+            stream.write_all(replicate::render_event(&ev).as_bytes())?;
+            stream.write_all(b"\n")?;
+        }
+        // the stream half: forward published events, absorb ACK lines
+        stream.set_read_timeout(Some(Duration::from_millis(25)))?;
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            while let Ok(line) = rx.try_recv() {
+                stream.write_all(line.as_bytes())?;
+            }
+            match lines.next_line(0)? {
+                LineIo::Idle => {}
+                LineIo::Eof | LineIo::TooLong => return Ok(()),
+                LineIo::Line(l) => {
+                    if let Some(seq) = replicate::parse_ack(&l) {
+                        hub.ack(seq);
+                        executor.metrics.repl_acks.fetch_add(1, Ordering::Relaxed);
+                        executor.metrics.repl_lag.store(hub.lag(), Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    })();
+    hub.unsubscribe(sub_id);
+    result
 }
 
 enum Command {
@@ -195,6 +475,15 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
             });
         }
         Some("STATS") => return Command::Reply(format!("STATS {}", executor.metrics.report())),
+        Some("LAG") => return Command::Reply(render_lag(executor)),
+        Some("PROMOTE") => {
+            return Command::Reply(match executor.promote() {
+                Ok((epoch, graphs)) => {
+                    format!("OK promoted=1 epoch={epoch} graphs={graphs}")
+                }
+                Err(e) => format!("ERR {e}"),
+            })
+        }
         Some("MATCH" | "LOAD" | "UPDATE" | "DROP" | "SAVE") => {}
         Some(other) => return Command::Reply(format!("ERR unknown command {other}")),
         None => return Command::Reply("ERR empty request".into()),
@@ -221,6 +510,30 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
     }
 }
 
+/// The `LAG` reply: both sides of the replication stream in one line.
+fn render_lag(executor: &Executor) -> String {
+    let role = executor.role();
+    let hub = executor.hub();
+    let role_name = if role.fenced.load(Ordering::Relaxed) {
+        "fenced"
+    } else if role.is_replica() {
+        "follower"
+    } else {
+        "primary"
+    };
+    format!(
+        "LAG role={} epoch={} followers={} shipped={} acked={} lag={} applied={} connected={}",
+        role_name,
+        role.epoch(),
+        hub.subscriber_count(),
+        hub.last_seq(),
+        hub.max_acked(),
+        hub.lag(),
+        executor.metrics.repl_frames_applied.load(Ordering::Relaxed),
+        role.tailer_connected.load(Ordering::Relaxed) as u8,
+    )
+}
+
 fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
     use super::job::JobOp;
     match &job.op {
@@ -235,7 +548,7 @@ fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
         JobOp::Match | JobOp::Update { .. } => {
             let mut s = format!(
                 "OK id={} algo={} nr={} nc={} edges={} card={} certified={} \
-                 t_load={:.6} t_match={:.6} frontier_peak={} endpoints={} \
+                 phases={} t_load={:.6} t_match={:.6} frontier_peak={} endpoints={} \
                  devpar_cycles={}",
                 o.job_id,
                 o.algo,
@@ -244,6 +557,7 @@ fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
                 o.n_edges,
                 o.cardinality,
                 o.certified as u8,
+                o.phases,
                 o.t_load,
                 o.t_match,
                 o.frontier_peak,
@@ -441,6 +755,10 @@ mod tests {
         assert!(field("frontier_peak=") > 0, "{reply}");
         assert!(field("endpoints=") > 0, "{reply}");
         assert!(field("devpar_cycles=") > 0, "{reply}");
+        // and every MATCH/UPDATE OK line carries phases= (the failover
+        // test compares warm vs cold through it)
+        assert!(reply.contains(" phases="), "{reply}");
+        assert!(field("phases=") > 0, "{reply}");
         // a CPU run reports zeros for all three
         let reply = roundtrip(addr, "MATCH family=uniform n=200 seed=1 algo=hk");
         assert!(reply.contains("frontier_peak=0"), "{reply}");
@@ -605,5 +923,163 @@ mod tests {
         assert!(lines.iter().all(|l| l.starts_with("OK ")));
         // ids must differ
         assert_ne!(lines[0], lines[1]);
+    }
+
+    #[test]
+    fn oversized_line_is_rejected_and_connection_closed() {
+        let mut cfg = ServerCfg::new("127.0.0.1:0");
+        cfg.max_line_len = 64;
+        let server = Server::bind_cfg(cfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        std::thread::spawn(move || server.serve());
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&vec![b'a'; 256]).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR line too long"), "{line}");
+        // the server hung up after the refusal
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "connection must be closed");
+    }
+
+    #[test]
+    fn idle_connection_is_closed_but_active_one_survives() {
+        let mut cfg = ServerCfg::new("127.0.0.1:0");
+        cfg.idle_timeout = Duration::from_millis(300);
+        let server = Server::bind_cfg(cfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        std::thread::spawn(move || server.serve());
+        // an idle peer is cut off once the timeout elapses
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        let n = r.read_line(&mut line).unwrap();
+        assert_eq!(n, 0, "idle connection must be closed, got {line:?}");
+        // a peer that keeps issuing requests within the window stays up
+        let mut s = TcpStream::connect(addr).unwrap();
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(150));
+            s.write_all(b"GRAPHS\n").unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(line.starts_with("GRAPHS"), "{line}");
+        }
+    }
+
+    #[test]
+    fn lag_and_promote_verbs_on_a_plain_primary() {
+        let (addr, _stop) = start_server();
+        let reply = roundtrip(addr, "LAG");
+        assert!(reply.starts_with("LAG role=primary "), "{reply}");
+        assert!(reply.contains("followers=0"), "{reply}");
+        assert!(reply.contains("lag=0"), "{reply}");
+        // promoting a node that is already writable is a typed error
+        let reply = roundtrip(addr, "PROMOTE");
+        assert!(reply.starts_with("ERR"), "{reply}");
+        assert!(reply.contains("already writable"), "{reply}");
+    }
+
+    #[test]
+    fn replica_handshake_with_higher_epoch_fences_the_node() {
+        let (addr, _stop) = start_server();
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=100 seed=1").starts_with("OK "));
+        // a peer claiming a higher epoch means we were failed over: the
+        // handshake is refused and this node stops accepting writes
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"REPLICA epoch=7\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR fenced:"), "{line}");
+        let reply = roundtrip(addr, "UPDATE name=g addcols=0;1");
+        assert!(reply.starts_with("ERR read-only"), "{reply}");
+        assert!(roundtrip(addr, "LAG").contains("role=fenced"), "post-fence LAG");
+        // reads still flow on the fenced node
+        assert!(roundtrip(addr, "MATCH name=g").starts_with("OK "), "reads survive fencing");
+    }
+
+    #[test]
+    fn replica_handshake_streams_baseline_and_takes_acks() {
+        let (addr, _stop) = start_server();
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=120 seed=3").starts_with("OK "));
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"REPLICA epoch=0\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK epoch=0"), "{line}");
+        // the baseline snapshot for the stored graph arrives first
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let ev = replicate::parse_event(line.trim()).expect("baseline event");
+        assert_eq!(ev.kind, EventKind::Snap);
+        assert_eq!(ev.name, "g");
+        assert!(
+            crate::persist::snapshot::decode_snapshot(&ev.data).is_some(),
+            "baseline must decode as a snapshot image"
+        );
+        // a write on the primary is streamed as a frame event
+        let reply = roundtrip(addr, "UPDATE name=g addcols=0;1;2");
+        assert!(reply.starts_with("OK "), "{reply}");
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let ev = replicate::parse_event(line.trim()).expect("frame event");
+        assert_eq!(ev.kind, EventKind::Frame);
+        assert!(ev.seq > 0);
+        // acking it moves the primary's lag back to zero
+        s.write_all(format!("ACK seq={}\n", ev.seq).as_bytes()).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let lag = roundtrip(addr, "LAG");
+            if lag.contains("followers=1") && lag.contains(" lag=0 ") {
+                break;
+            }
+            assert!(Instant::now() < deadline, "lag never drained: {lag}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    #[test]
+    fn graceful_stop_drains_requests_and_loses_no_acked_update() {
+        // the clean-SIGTERM regression: every UPDATE acked before the stop
+        // must survive into a recovered server
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_server_drain_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server =
+            Server::bind_with("127.0.0.1:0", None, Some(dir.clone()), None).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let serve = std::thread::spawn(move || server.serve());
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=200 seed=5").starts_with("OK "));
+        let mut card = String::new();
+        for i in 0..5 {
+            let reply = roundtrip(addr, &format!("UPDATE name=g addcols={i};{}", i + 1));
+            assert!(reply.starts_with("OK "), "{reply}");
+            card = reply
+                .split_whitespace()
+                .find_map(|kv| kv.strip_prefix("card="))
+                .unwrap()
+                .to_string();
+        }
+        // clean stop: serve() must return (drain + fsync) promptly
+        stop.store(true, Ordering::Relaxed);
+        serve.join().unwrap().unwrap();
+        // a recovered server serves the exact acked state
+        let server2 = Server::bind_with("127.0.0.1:0", None, Some(dir.clone()), None).unwrap();
+        let addr2 = server2.local_addr().unwrap();
+        std::thread::spawn(move || server2.serve());
+        let reply = roundtrip(addr2, "MATCH name=g");
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains(&format!(" card={card} ")), "want card={card}: {reply}");
+        assert!(reply.contains("certified=1"), "{reply}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

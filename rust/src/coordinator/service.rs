@@ -27,11 +27,21 @@ pub struct ServiceConfig {
     pub data_dir: Option<PathBuf>,
     /// LRU cap on in-memory stored graphs; `None` = unlimited
     pub max_graphs: Option<usize>,
+    /// start in read-replica mode: every write verb (LOAD/UPDATE/DROP/
+    /// SAVE) fails with `JobError::ReadOnly` while MATCH keeps serving
+    pub read_only: bool,
 }
 
 impl ServiceConfig {
     pub fn new(n_workers: usize, queue_depth: usize) -> Self {
-        Self { n_workers, queue_depth, engine: None, data_dir: None, max_graphs: None }
+        Self {
+            n_workers,
+            queue_depth,
+            engine: None,
+            data_dir: None,
+            max_graphs: None,
+            read_only: false,
+        }
     }
 
     pub fn engine(mut self, engine: Option<Arc<Engine>>) -> Self {
@@ -46,6 +56,11 @@ impl ServiceConfig {
 
     pub fn max_graphs(mut self, max: usize) -> Self {
         self.max_graphs = Some(max);
+        self
+    }
+
+    pub fn read_only(mut self, read_only: bool) -> Self {
+        self.read_only = read_only;
         self
     }
 }
@@ -88,6 +103,9 @@ impl Service {
         }
         if let Some(max) = cfg.max_graphs {
             executor = executor.with_max_graphs(max);
+        }
+        if cfg.read_only {
+            executor.set_read_only(true);
         }
         // recovery runs on the caller's thread, before traffic: a MATCH
         // submitted right after start_cfg already sees the restored store
@@ -352,6 +370,28 @@ mod tests {
         assert_eq!(metrics.jobs_updated.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.graphs_loaded.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.graphs_dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn read_only_service_rejects_writes_but_serves_matches() {
+        use crate::coordinator::job::JobError;
+        let svc = Service::start_cfg(ServiceConfig::new(1, 8).read_only(true)).unwrap();
+        let jobs = vec![
+            // one-shot MATCH still flows on a replica
+            gen_job(0, 200),
+            // every write verb bounces with the typed ReadOnly error
+            MatchJob::load_graph(
+                1,
+                "t",
+                GraphSource::Generate { family: Family::Uniform, n: 100, seed: 1, permute: false },
+            ),
+            MatchJob::drop_graph(2, "t"),
+        ];
+        let (outcomes, _) = svc.run_batch(jobs);
+        assert!(outcomes[0].error.is_none(), "{:?}", outcomes[0].error);
+        assert!(outcomes[0].certified);
+        assert_eq!(outcomes[1].error, Some(JobError::ReadOnly));
+        assert_eq!(outcomes[2].error, Some(JobError::ReadOnly));
     }
 
     #[test]

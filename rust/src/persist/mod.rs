@@ -53,10 +53,11 @@
 //! | `DROP`            | DROP marker, then files deleted             | yes              |
 
 pub mod recover;
+pub mod replicate;
 pub mod snapshot;
 pub mod wal;
 
-pub use recover::{GraphRecovery, RecoveredGraph, RecoveryReport};
+pub use recover::{apply_update_frame, FrameStep, GraphRecovery, RecoveredGraph, RecoveryReport};
 
 use crate::dynamic::{ApplyReport, DeltaBatch};
 use crate::graph::csr::BipartiteCsr;
@@ -109,6 +110,19 @@ pub fn decode_name(stem: &str) -> Option<String> {
         }
     }
     String::from_utf8(out).ok()
+}
+
+/// The WAL record an acknowledged update commits: the batch's *net*
+/// effect in delta wire format plus the report it produced. Shared by
+/// [`Persistence::append_update`] and the replication shipper so the
+/// frame a follower replays is byte-identical to the one recovery
+/// replays.
+pub fn update_record(version_after: u64, report: &ApplyReport) -> wal::WalRecord {
+    wal::WalRecord::Update {
+        version_after,
+        batch_wire: DeltaBatch::net_from_report(report).to_wire(),
+        report_wire: report.to_wire(),
+    }
 }
 
 /// The durability layer's handle: one per `--data-dir`, shared by every
@@ -260,12 +274,26 @@ impl Persistence {
     ) -> io::Result<()> {
         let guard = self.lock_for(name);
         let _g = guard.lock().unwrap();
-        let rec = wal::WalRecord::Update {
-            version_after,
-            batch_wire: DeltaBatch::net_from_report(report).to_wire(),
-            report_wire: report.to_wire(),
-        };
-        wal::append(&self.wal_path(name), &rec)
+        wal::append(&self.wal_path(name), &update_record(version_after, report))
+    }
+
+    /// fsync every WAL in the data dir plus the directory itself — the
+    /// graceful-shutdown belt-and-braces pass (each append already syncs,
+    /// but this closes the window for anything the OS still buffers).
+    pub fn sync_all(&self) -> io::Result<()> {
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let fname = entry.file_name();
+            if fname.to_str().is_some_and(|f| f.ends_with(".wal")) {
+                match fs::File::open(entry.path()) {
+                    Ok(f) => f.sync_all()?,
+                    // a racing DROP may delete a WAL mid-scan
+                    Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        fs::File::open(&self.dir)?.sync_all()
     }
 
     /// Snapshot the live state and compact: write

@@ -86,6 +86,58 @@ impl RecoveryReport {
     }
 }
 
+/// Disposition of one logged update frame against a live graph.
+pub enum FrameStep {
+    /// applied cleanly; carries the report the re-apply reproduced
+    Applied(ApplyReport),
+    /// stale — an older incarnation, or at/below the floor version the
+    /// anchor state already covers; replay is idempotent past it
+    Skipped,
+    /// version gap, unparseable wire, or a report mismatch: the caller
+    /// stops at the consistent prefix (recovery) or resyncs from a fresh
+    /// baseline (replication)
+    Halt,
+}
+
+/// Replay one WAL `Update` frame onto `dg`. This is *the* replay kernel:
+/// crash recovery and the replication follower both run every frame
+/// through it, so the incarnation scoping, gap detection, and
+/// report cross-check are byte-for-byte the same on both paths. The
+/// frame is applied on a scratch copy first — a mismatch leaves `dg`
+/// untouched.
+pub fn apply_update_frame(
+    dg: &mut DynamicGraph,
+    incarnation: u64,
+    floor_version: u64,
+    version_after: u64,
+    batch_wire: &str,
+    report_wire: &str,
+) -> FrameStep {
+    if version_after >> 32 != incarnation || version_after <= floor_version {
+        return FrameStep::Skipped; // older incarnation, or already covered
+    }
+    if version_after != dg.version() + 1 {
+        return FrameStep::Halt; // gap
+    }
+    let parsed = DeltaBatch::parse_wire(batch_wire)
+        .and_then(|b| ApplyReport::parse_wire(report_wire).map(|r| (b, r)));
+    let Ok((batch, want)) = parsed else {
+        return FrameStep::Halt;
+    };
+    let mut next = dg.clone();
+    let got = next.apply(&batch);
+    let matches = got.inserted == want.inserted
+        && got.deleted == want.deleted
+        && got.added_cols == want.added_cols
+        && got.added_rows == want.added_rows
+        && next.version() == version_after;
+    if !matches {
+        return FrameStep::Halt;
+    }
+    *dg = next;
+    FrameStep::Applied(got)
+}
+
 /// Snapshot + replay for one name. Callers hold the per-name lock (use
 /// [`Persistence::recover_graph`]).
 pub(super) fn recover_graph(
@@ -122,35 +174,24 @@ pub(super) fn recover_graph(
                 }
             }
             wal::WalRecord::Update { version_after, batch_wire, report_wire } => {
-                if version_after >> 32 != incarnation || version_after <= snapshot_version {
-                    continue; // older incarnation, or already in the snapshot
+                match apply_update_frame(
+                    &mut dg,
+                    incarnation,
+                    snapshot_version,
+                    version_after,
+                    &batch_wire,
+                    &report_wire,
+                ) {
+                    FrameStep::Applied(got) => {
+                        net.absorb(&got);
+                        replayed += 1;
+                    }
+                    FrameStep::Skipped => {}
+                    FrameStep::Halt => {
+                        clean = false; // stop at the consistent prefix
+                        break;
+                    }
                 }
-                if version_after != dg.version() + 1 {
-                    clean = false; // gap: stop at the consistent prefix
-                    break;
-                }
-                let parsed = DeltaBatch::parse_wire(&batch_wire)
-                    .and_then(|b| ApplyReport::parse_wire(&report_wire).map(|r| (b, r)));
-                let Ok((batch, want)) = parsed else {
-                    clean = false;
-                    break;
-                };
-                // apply on a scratch copy first: a mismatching frame must
-                // not leave its partial effect in the recovered graph
-                let mut next = dg.clone();
-                let got = next.apply(&batch);
-                let matches = got.inserted == want.inserted
-                    && got.deleted == want.deleted
-                    && got.added_cols == want.added_cols
-                    && got.added_rows == want.added_rows
-                    && next.version() == version_after;
-                if !matches {
-                    clean = false;
-                    break;
-                }
-                dg = next;
-                net.absorb(&got);
-                replayed += 1;
             }
         }
     }

@@ -1,0 +1,654 @@
+//! WAL-stream replication: ship the per-graph frame stream to follower
+//! processes so a hot standby is always a seeded-repair away from a
+//! certified matching.
+//!
+//! ## Protocol
+//!
+//! A follower dials the primary's normal verb port and sends
+//! `REPLICA epoch=<e>`. The primary compares epochs (see *Fencing*): if
+//! the follower's is **not higher**, it replies `OK epoch=<local>` and
+//! upgrades the connection to a one-way event stream; otherwise it
+//! replies `ERR fenced: ...` and marks *itself* read-only.
+//!
+//! Events are text lines (binary payloads hex-encoded):
+//!
+//! ```text
+//! EV seq=<n> kind=snap  name=<enc> data=<hex snapshot image>
+//! EV seq=<n> kind=frame name=<enc> data=<hex wal frame>
+//! ```
+//!
+//! `snap` carries a full [`super::snapshot`] byte image — sent as the
+//! per-graph baseline right after the handshake and whenever a `LOAD`
+//! re-bases a name. `frame` carries one [`super::wal`] frame exactly as
+//! appended to the primary's log; the follower replays it through
+//! [`super::apply_update_frame`], the same incarnation-scoped kernel
+//! crash recovery uses, so the ≤-version skip and gap-halt semantics are
+//! identical on both paths. The follower answers `ACK seq=<n>` after
+//! each event it has applied (and, when durable, persisted).
+//!
+//! ## Acked offsets and quorum
+//!
+//! The [`Hub`] stamps every published event with a global sequence
+//! number and tracks the highest acknowledged one. Under
+//! `--ack-mode quorum` the primary blocks each write verb until some
+//! follower has acked its event (or fails the verb with
+//! `JobError::Replication` after a timeout — the write stays locally
+//! durable and is reported as in-doubt, never silently lost).
+//!
+//! ## Fencing
+//!
+//! Promotion bumps the node **epoch** (persisted in `<data-dir>/epoch`)
+//! past anything the follower ever saw from its primary, and re-bases
+//! every graph into a fresh incarnation of the `version >> 32` space. A
+//! rejoining ex-primary that receives a `REPLICA` handshake carrying a
+//! higher epoch knows a promotion happened behind its back: it refuses
+//! the stream *and fences itself* (writes rejected) so it cannot
+//! split-brain.
+
+use std::fs::{self, File};
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How a primary decides an UPDATE/LOAD/DROP is "acked".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AckMode {
+    /// acked once the local WAL fsync lands (single-node durability)
+    #[default]
+    Local,
+    /// acked only after at least one follower confirms it applied the
+    /// event — a primary-death failover then cannot lose it
+    Quorum,
+}
+
+impl AckMode {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "local" => Some(AckMode::Local),
+            "quorum" => Some(AckMode::Quorum),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AckMode::Local => "local",
+            AckMode::Quorum => "quorum",
+        }
+    }
+}
+
+/// What this process currently is in the replication topology. Shared
+/// (via `Arc`) between the executor, the server's verb handlers, and the
+/// follower tailer thread; every field is independently atomic.
+#[derive(Debug, Default)]
+pub struct NodeRole {
+    /// replica mode: write verbs rejected with `JobError::ReadOnly`
+    pub read_only: AtomicBool,
+    /// an ex-primary that learned (via a higher-epoch handshake) that it
+    /// was failed over: write verbs rejected until an operator PROMOTEs
+    pub fenced: AtomicBool,
+    /// this node's fencing epoch (persisted in `<data-dir>/epoch`)
+    pub epoch: AtomicU64,
+    /// highest epoch ever observed from a peer (handshakes either way);
+    /// promotion bumps past it
+    pub primary_epoch_seen: AtomicU64,
+    /// set by PROMOTE; the tailer thread exits when it sees this
+    pub promoted: AtomicBool,
+    /// the tailer currently holds a live stream to the primary
+    pub tailer_connected: AtomicBool,
+}
+
+impl NodeRole {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Writes are allowed only on an unfenced primary.
+    pub fn is_writable(&self) -> bool {
+        !self.read_only.load(Ordering::Relaxed) && !self.fenced.load(Ordering::Relaxed)
+    }
+
+    pub fn is_replica(&self) -> bool {
+        self.read_only.load(Ordering::Relaxed)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+}
+
+fn epoch_path(dir: &Path) -> PathBuf {
+    dir.join("epoch")
+}
+
+/// Read the persisted fencing epoch; a missing or unparsable file is
+/// epoch 0 (a never-promoted node).
+pub fn read_epoch(dir: &Path) -> u64 {
+    fs::read_to_string(epoch_path(dir))
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Durably persist the fencing epoch (tmp + rename + dir fsync — same
+/// discipline as snapshots; the filename has no `.wal`/`.snap` suffix so
+/// the graph-name scan never sees it).
+pub fn write_epoch(dir: &Path, epoch: u64) -> io::Result<()> {
+    let tmp = dir.join("epoch.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(format!("{epoch}\n").as_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, epoch_path(dir))?;
+    File::open(dir)?.sync_all()
+}
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+/// Lowercase hex, for shipping binary frame/snapshot bytes in the
+/// line-oriented protocol.
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        out.push(HEX[(b >> 4) as usize] as char);
+        out.push(HEX[(b & 0xf) as usize] as char);
+    }
+    out
+}
+
+/// Inverse of [`to_hex`]; `None` on odd length or a non-hex digit.
+pub fn from_hex(s: &str) -> Option<Vec<u8>> {
+    fn val(c: u8) -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    }
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push((val(pair[0])? << 4) | val(pair[1])?);
+    }
+    Some(out)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// a full snapshot image: baseline sync or a `LOAD` re-base
+    Snap,
+    /// one WAL frame, byte-identical to the primary's log append
+    Frame,
+}
+
+impl EventKind {
+    fn name(&self) -> &'static str {
+        match self {
+            EventKind::Snap => "snap",
+            EventKind::Frame => "frame",
+        }
+    }
+}
+
+/// One replication stream event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub seq: u64,
+    pub kind: EventKind,
+    /// decoded graph name
+    pub name: String,
+    /// snapshot image or WAL frame bytes
+    pub data: Vec<u8>,
+}
+
+/// Render an event line (no trailing newline).
+pub fn render_event(ev: &Event) -> String {
+    format!(
+        "EV seq={} kind={} name={} data={}",
+        ev.seq,
+        ev.kind.name(),
+        super::encode_name(&ev.name),
+        to_hex(&ev.data)
+    )
+}
+
+/// Parse an `EV ...` line; `None` for anything malformed (the tailer
+/// drops the connection and resyncs rather than guessing).
+pub fn parse_event(line: &str) -> Option<Event> {
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some("EV") {
+        return None;
+    }
+    let (mut seq, mut kind, mut name, mut data) = (None, None, None, None);
+    for part in parts {
+        let (k, v) = part.split_once('=')?;
+        match k {
+            "seq" => seq = v.parse::<u64>().ok(),
+            "kind" => {
+                kind = match v {
+                    "snap" => Some(EventKind::Snap),
+                    "frame" => Some(EventKind::Frame),
+                    _ => None,
+                }
+            }
+            "name" => name = super::decode_name(v),
+            "data" => data = from_hex(v),
+            _ => return None,
+        }
+    }
+    Some(Event { seq: seq?, kind: kind?, name: name?, data: data? })
+}
+
+/// Parse an `ACK seq=<n>` line from a follower.
+pub fn parse_ack(line: &str) -> Option<u64> {
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some("ACK") {
+        return None;
+    }
+    parts.next()?.strip_prefix("seq=")?.parse().ok()
+}
+
+struct Subscriber {
+    id: u64,
+    tx: mpsc::Sender<String>,
+}
+
+#[derive(Default)]
+struct HubState {
+    /// last assigned sequence number (first published event gets 1)
+    last_seq: u64,
+    /// highest seq any follower has acknowledged
+    max_acked: u64,
+    next_sub_id: u64,
+    subs: Vec<Subscriber>,
+}
+
+/// Primary-side frame shipper: assigns global sequence numbers, fans
+/// published events out to every connected follower, and tracks the
+/// acked high-water mark that quorum writes block on.
+#[derive(Default)]
+pub struct Hub {
+    state: Mutex<HubState>,
+    acked: Condvar,
+}
+
+impl Hub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.state.lock().unwrap().subs.len()
+    }
+
+    /// Last published sequence number ("frames shipped", for LAG).
+    pub fn last_seq(&self) -> u64 {
+        self.state.lock().unwrap().last_seq
+    }
+
+    pub fn max_acked(&self) -> u64 {
+        self.state.lock().unwrap().max_acked
+    }
+
+    /// Published-but-unacked event count.
+    pub fn lag(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.last_seq.saturating_sub(st.max_acked)
+    }
+
+    /// Register a follower stream. Returns `(floor_seq, id, rx)`: the
+    /// subscriber sees every event published *after* this call via `rx`,
+    /// and the caller tags the baseline snapshots it sends next with
+    /// `floor_seq` — acking those cannot claim credit for any event the
+    /// baseline might not cover.
+    pub fn subscribe(&self) -> (u64, u64, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.state.lock().unwrap();
+        st.next_sub_id += 1;
+        let id = st.next_sub_id;
+        st.subs.push(Subscriber { id, tx });
+        (st.last_seq, id, rx)
+    }
+
+    pub fn unsubscribe(&self, id: u64) {
+        self.state.lock().unwrap().subs.retain(|s| s.id != id);
+    }
+
+    /// Publish one event to every live follower; returns its seq. The
+    /// caller holds whatever lock orders this graph's events (the store
+    /// entry mutex for updates, the name lock for load/drop), so per-
+    /// graph sequence order matches commit order.
+    pub fn publish(&self, kind: EventKind, name: &str, data: Vec<u8>) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        st.last_seq += 1;
+        let seq = st.last_seq;
+        let line = format!(
+            "{}\n",
+            render_event(&Event { seq, kind, name: name.to_string(), data })
+        );
+        st.subs.retain(|s| s.tx.send(line.clone()).is_ok());
+        seq
+    }
+
+    /// Record a follower acknowledgement.
+    pub fn ack(&self, seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        if seq > st.max_acked {
+            st.max_acked = seq;
+        }
+        drop(st);
+        self.acked.notify_all();
+    }
+
+    /// Block until some follower has acked `seq` (quorum write barrier);
+    /// `false` on timeout.
+    pub fn wait_acked(&self, seq: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        while st.max_acked < seq {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.acked.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        true
+    }
+}
+
+/// What a timeout-safe line read produced.
+pub enum LineIo {
+    Line(String),
+    /// read timeout elapsed with no complete line; any partial bytes
+    /// stay buffered for the next call
+    Idle,
+    Eof,
+    /// the cap was exceeded before a newline arrived
+    TooLong,
+}
+
+/// Line reader that survives read timeouts without losing data.
+/// `BufRead::read_line` discards partially-read bytes when the
+/// underlying socket times out (its append guard truncates on `Err`),
+/// which makes it unusable on a socket polled with `set_read_timeout`;
+/// this accumulates across calls instead. Also enforces the server's
+/// max-line cap.
+pub struct LineReader<R> {
+    inner: R,
+    pending: Vec<u8>,
+}
+
+impl<R: BufRead> LineReader<R> {
+    pub fn new(inner: R) -> Self {
+        Self { inner, pending: Vec::new() }
+    }
+
+    /// Next complete line (without the terminator), or why there isn't
+    /// one. `max_len` of 0 means uncapped.
+    pub fn next_line(&mut self, max_len: usize) -> io::Result<LineIo> {
+        loop {
+            if let Some(pos) = self.pending.iter().position(|&b| b == b'\n') {
+                if max_len > 0 && pos > max_len {
+                    // the cap applies even when the newline arrived in the
+                    // same read as the oversized payload
+                    self.pending = self.pending.split_off(pos + 1);
+                    return Ok(LineIo::TooLong);
+                }
+                let rest = self.pending.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.pending, rest);
+                line.pop(); // \n
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return Ok(LineIo::Line(String::from_utf8_lossy(&line).into_owned()));
+            }
+            if max_len > 0 && self.pending.len() > max_len {
+                self.pending.clear();
+                return Ok(LineIo::TooLong);
+            }
+            let n = match self.inner.fill_buf() {
+                Ok(b) if b.is_empty() => return Ok(LineIo::Eof),
+                Ok(b) => {
+                    self.pending.extend_from_slice(b);
+                    b.len()
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(LineIo::Idle)
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            self.inner.consume(n);
+        }
+    }
+}
+
+/// Follower tailer configuration.
+pub struct TailerCfg {
+    /// primary's verb address (`host:port`)
+    pub primary: String,
+    pub role: Arc<NodeRole>,
+    /// the server's stop handle: the tailer exits when it is set
+    pub shutdown: Arc<AtomicBool>,
+    /// where to persist an epoch adopted from the primary (the
+    /// follower's data dir), when durable
+    pub epoch_dir: Option<PathBuf>,
+}
+
+enum StreamEnd {
+    /// the primary told us we outrank it — we were promoted; stop
+    Fenced,
+    /// connection lost or stream error: reconnect with backoff
+    Disconnected,
+    /// an event failed to apply (version gap, bad decode): reconnect to
+    /// force a fresh baseline
+    ApplyError,
+}
+
+/// Follower-side tailer: connect, handshake, apply the event stream,
+/// ack; on any failure reconnect with exponential backoff (100 ms
+/// doubling to 5 s) until shutdown, promotion, or a fencing reply.
+/// `apply` installs one event into the local store and returns `Err` to
+/// force a resync.
+pub fn run_tailer<F>(cfg: &TailerCfg, mut apply: F)
+where
+    F: FnMut(&Event) -> Result<(), String>,
+{
+    let mut backoff = Duration::from_millis(100);
+    loop {
+        if should_exit(cfg) {
+            return;
+        }
+        let end = stream_once(cfg, &mut apply);
+        let was_streaming = cfg.role.tailer_connected.swap(false, Ordering::Relaxed);
+        if matches!(end, Ok(StreamEnd::Fenced)) {
+            return;
+        }
+        if was_streaming {
+            backoff = Duration::from_millis(100);
+        }
+        let mut waited = Duration::ZERO;
+        while waited < backoff {
+            if should_exit(cfg) {
+                return;
+            }
+            let step = Duration::from_millis(25).min(backoff - waited);
+            std::thread::sleep(step);
+            waited += step;
+        }
+        backoff = (backoff * 2).min(Duration::from_secs(5));
+    }
+}
+
+fn should_exit(cfg: &TailerCfg) -> bool {
+    cfg.shutdown.load(Ordering::Relaxed) || cfg.role.promoted.load(Ordering::Relaxed)
+}
+
+fn stream_once<F>(cfg: &TailerCfg, apply: &mut F) -> io::Result<StreamEnd>
+where
+    F: FnMut(&Event) -> Result<(), String>,
+{
+    let mut stream = TcpStream::connect(&cfg.primary)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut lines = LineReader::new(BufReader::new(stream.try_clone()?));
+    let epoch = cfg.role.epoch();
+    stream.write_all(format!("REPLICA epoch={epoch}\n").as_bytes())?;
+    let reply = loop {
+        match lines.next_line(0)? {
+            LineIo::Line(l) => break l,
+            LineIo::Idle | LineIo::Eof | LineIo::TooLong => return Ok(StreamEnd::Disconnected),
+        }
+    };
+    if reply.starts_with("ERR") {
+        if reply.contains("fenced") {
+            return Ok(StreamEnd::Fenced);
+        }
+        return Ok(StreamEnd::Disconnected);
+    }
+    if let Some(e) = reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("epoch="))
+        .and_then(|v| v.parse::<u64>().ok())
+    {
+        cfg.role.primary_epoch_seen.fetch_max(e, Ordering::Relaxed);
+        if e > cfg.role.epoch() {
+            cfg.role.epoch.store(e, Ordering::Relaxed);
+            if let Some(dir) = &cfg.epoch_dir {
+                let _ = write_epoch(dir, e);
+            }
+        }
+    }
+    cfg.role.tailer_connected.store(true, Ordering::Relaxed);
+    // short timeout from here on so shutdown/promotion are noticed fast
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    loop {
+        if should_exit(cfg) {
+            return Ok(StreamEnd::Disconnected);
+        }
+        match lines.next_line(0)? {
+            LineIo::Idle => continue,
+            LineIo::Eof | LineIo::TooLong => return Ok(StreamEnd::Disconnected),
+            LineIo::Line(l) => {
+                let Some(ev) = parse_event(&l) else {
+                    return Ok(StreamEnd::ApplyError);
+                };
+                match apply(&ev) {
+                    Ok(()) => {
+                        stream.write_all(format!("ACK seq={}\n", ev.seq).as_bytes())?;
+                    }
+                    Err(_) => return Ok(StreamEnd::ApplyError),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrips() {
+        for bytes in [&b""[..], &b"\x00\xff\x10abc"[..], &[0u8, 1, 2, 254, 255][..]] {
+            assert_eq!(from_hex(&to_hex(bytes)).as_deref(), Some(bytes));
+        }
+        assert_eq!(from_hex("abc"), None, "odd length");
+        assert_eq!(from_hex("zz"), None, "non-hex digit");
+        assert_eq!(from_hex("AbCd"), Some(vec![0xab, 0xcd]), "uppercase tolerated");
+    }
+
+    #[test]
+    fn event_lines_roundtrip() {
+        let ev = Event {
+            seq: 42,
+            kind: EventKind::Frame,
+            name: "dots.and spaces".to_string(),
+            data: vec![0, 1, 255, 16],
+        };
+        let line = render_event(&ev);
+        assert!(!line.contains('\n'));
+        let back = parse_event(&line).expect("valid line");
+        assert_eq!(back.seq, 42);
+        assert_eq!(back.kind, EventKind::Frame);
+        assert_eq!(back.name, ev.name);
+        assert_eq!(back.data, ev.data);
+        assert!(parse_event("EV seq=1 kind=wat name=g data=00").is_none());
+        assert!(parse_event("NOPE seq=1").is_none());
+        assert_eq!(parse_ack("ACK seq=7"), Some(7));
+        assert_eq!(parse_ack("ACK"), None);
+    }
+
+    #[test]
+    fn epoch_file_roundtrips_and_defaults_to_zero() {
+        let dir = super::super::tests::tempdir("epoch");
+        assert_eq!(read_epoch(&dir), 0);
+        write_epoch(&dir, 7).unwrap();
+        assert_eq!(read_epoch(&dir), 7);
+        write_epoch(&dir, 8).unwrap();
+        assert_eq!(read_epoch(&dir), 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hub_sequences_fans_out_and_tracks_acks() {
+        let hub = Hub::new();
+        assert_eq!(hub.publish(EventKind::Frame, "g", vec![1]), 1);
+        let (floor, id, rx) = hub.subscribe();
+        assert_eq!(floor, 1, "baseline floor is the pre-subscribe high-water mark");
+        assert_eq!(hub.subscriber_count(), 1);
+        let seq = hub.publish(EventKind::Snap, "g", vec![2]);
+        assert_eq!(seq, 2);
+        let line = rx.try_recv().expect("event fanned out");
+        let ev = parse_event(line.trim()).unwrap();
+        assert_eq!(ev.seq, 2);
+        assert_eq!(ev.kind, EventKind::Snap);
+        assert!(!hub.wait_acked(2, Duration::from_millis(20)), "nothing acked yet");
+        assert_eq!(hub.lag(), 1);
+        hub.ack(2);
+        assert!(hub.wait_acked(2, Duration::from_millis(20)));
+        assert_eq!(hub.lag(), 0);
+        hub.ack(1); // stale ack never regresses the mark
+        assert_eq!(hub.max_acked(), 2);
+        hub.unsubscribe(id);
+        assert_eq!(hub.subscriber_count(), 0);
+        hub.publish(EventKind::Frame, "g", vec![3]); // no panic on empty fan-out
+    }
+
+    #[test]
+    fn line_reader_splits_caps_and_reports_eof() {
+        let data = b"first\nsecond\r\nlast";
+        let mut r = LineReader::new(io::BufReader::new(&data[..]));
+        let LineIo::Line(l) = r.next_line(64).unwrap() else { panic!("line") };
+        assert_eq!(l, "first");
+        let LineIo::Line(l) = r.next_line(64).unwrap() else { panic!("line") };
+        assert_eq!(l, "second", "CRLF tolerated");
+        assert!(matches!(r.next_line(64).unwrap(), LineIo::Eof), "no newline at EOF");
+        let long = b"aaaaaaaaaaaaaaaaaaaa\nok\n";
+        let mut r = LineReader::new(io::BufReader::new(&long[..]));
+        assert!(matches!(r.next_line(4).unwrap(), LineIo::TooLong));
+    }
+
+    #[test]
+    fn ack_mode_parses() {
+        assert_eq!(AckMode::from_name("local"), Some(AckMode::Local));
+        assert_eq!(AckMode::from_name("quorum"), Some(AckMode::Quorum));
+        assert_eq!(AckMode::from_name("both"), None);
+        assert_eq!(AckMode::Quorum.name(), "quorum");
+    }
+}

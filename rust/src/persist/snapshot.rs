@@ -51,13 +51,11 @@ fn push_u32s(out: &mut Vec<u8>, v: &[u32]) {
     }
 }
 
-/// Serialize and atomically install a snapshot at `path`.
-pub fn write_snapshot(
-    path: &Path,
-    version: u64,
-    g: &BipartiteCsr,
-    matching: Option<&Matching>,
-) -> io::Result<()> {
+/// The complete snapshot byte image (magic + body + checksum) — the
+/// exact content [`write_snapshot`] persists, also shipped verbatim over
+/// the replication stream so followers install through the same
+/// checksummed decode path as crash recovery.
+pub fn encode_snapshot(version: u64, g: &BipartiteCsr, matching: Option<&Matching>) -> Vec<u8> {
     let mut body = Vec::with_capacity(64 + 4 * (g.cxadj.len() + g.cadj.len()));
     push_u64(&mut body, version);
     push_u64(&mut body, g.nr as u64);
@@ -75,12 +73,25 @@ pub fn write_snapshot(
         None => body.push(0),
     }
     let sum = fnv1a64(&body);
+    let mut out = Vec::with_capacity(MAGIC.len() + body.len() + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Serialize and atomically install a snapshot at `path`.
+pub fn write_snapshot(
+    path: &Path,
+    version: u64,
+    g: &BipartiteCsr,
+    matching: Option<&Matching>,
+) -> io::Result<()> {
+    let bytes = encode_snapshot(version, g, matching);
     let tmp = path.with_extension("snap.tmp");
     {
         let mut f = File::create(&tmp)?;
-        f.write_all(MAGIC)?;
-        f.write_all(&body)?;
-        f.write_all(&sum.to_le_bytes())?;
+        f.write_all(&bytes)?;
         f.sync_all()?;
     }
     fs::rename(&tmp, path)?;
@@ -149,10 +160,12 @@ pub fn read_snapshot(path: &Path) -> io::Result<Option<Snapshot>> {
         Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
         Err(e) => return Err(e),
     }
-    Ok(decode(&bytes))
+    Ok(decode_snapshot(&bytes))
 }
 
-fn decode(bytes: &[u8]) -> Option<Snapshot> {
+/// Decode a full snapshot byte image (as produced by
+/// [`encode_snapshot`]); `None` on any structural or checksum problem.
+pub fn decode_snapshot(bytes: &[u8]) -> Option<Snapshot> {
     if bytes.len() < MAGIC.len() + 8 || &bytes[..MAGIC.len()] != MAGIC {
         return None;
     }
@@ -246,6 +259,16 @@ mod tests {
     }
 
     #[test]
+    fn in_memory_encode_decode_roundtrip() {
+        // the replication stream ships these bytes without touching disk
+        let (g, m) = sample();
+        let s = decode_snapshot(&encode_snapshot(7, &g, Some(&m))).expect("valid image");
+        assert_eq!(s.version, 7);
+        assert_eq!(s.graph, g);
+        assert_eq!(s.matching, Some(m));
+    }
+
+    #[test]
     fn corruption_and_truncation_yield_none_not_panic() {
         let dir = super::super::tests::tempdir("snapbad");
         let (g, m) = sample();
@@ -254,13 +277,13 @@ mod tests {
         let good = std::fs::read(&p).unwrap();
         // every truncation of the file is rejected cleanly
         for cut in 0..good.len() {
-            assert!(decode(&good[..cut]).is_none(), "cut at {cut}");
+            assert!(decode_snapshot(&good[..cut]).is_none(), "cut at {cut}");
         }
         // any single flipped byte is rejected (magic, body, or checksum)
         for i in 0..good.len() {
             let mut bad = good.clone();
             bad[i] ^= 0x01;
-            assert!(decode(&bad).is_none(), "flip at {i}");
+            assert!(decode_snapshot(&bad).is_none(), "flip at {i}");
         }
         assert!(read_snapshot(&dir.join("missing.snap")).unwrap().is_none());
         let _ = std::fs::remove_dir_all(&dir);

@@ -172,19 +172,32 @@ pub fn reset_with(path: &Path, rec: &WalRecord) -> io::Result<()> {
 /// Parse frames from raw bytes, stopping at the first torn or corrupt
 /// frame. Returns the valid prefix and whether a tail was dropped.
 pub fn parse_frames(bytes: &[u8]) -> (Vec<WalRecord>, bool) {
+    let (records, consumed) = parse_frames_incremental(bytes);
+    (records, consumed < bytes.len())
+}
+
+/// Incremental variant for live tailing: parse as many complete, valid
+/// frames as the bytes hold and report how many bytes they span. Any
+/// unconsumed tail is *pending* — with a live writer it is an append
+/// still in flight (a partial length prefix, a frame whose checksum
+/// bytes have not landed yet); on a quiescent file it is the same torn
+/// tail [`parse_frames`] reports. The caller re-polls from `consumed`
+/// and decides which it is by whether the file is still growing, so a
+/// concurrent reader only ever observes a consistent frame prefix.
+pub fn parse_frames_incremental(bytes: &[u8]) -> (Vec<WalRecord>, usize) {
     let mut records = Vec::new();
     let mut at = 0usize;
     while at < bytes.len() {
         let Some(len_bytes) = bytes.get(at..at + 4) else {
-            return (records, true);
+            break;
         };
         let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
         if len > MAX_FRAME_PAYLOAD {
-            return (records, true);
+            break;
         }
         let frame_end = at + 4 + 1 + len + 8;
         if frame_end > bytes.len() {
-            return (records, true); // torn: frame runs past EOF
+            break; // frame runs past EOF: torn or still being appended
         }
         let kind = bytes[at + 4];
         let payload = &bytes[at + 5..at + 5 + len];
@@ -194,15 +207,34 @@ pub fn parse_frames(bytes: &[u8]) -> (Vec<WalRecord>, bool) {
         sum_input.push(kind);
         sum_input.extend_from_slice(payload);
         if fnv1a64(&sum_input) != sum {
-            return (records, true); // checksum: torn or corrupt
+            break; // checksum: torn, corrupt, or checksum not yet written
         }
         let Some(rec) = WalRecord::decode(kind, payload) else {
-            return (records, true);
+            break;
         };
         records.push(rec);
         at = frame_end;
     }
-    (records, false)
+    (records, at)
+}
+
+/// Tail a WAL from a byte offset: parse every complete frame at or past
+/// `offset` and return them with the offset to resume from. A missing
+/// file is an empty log at the same offset (the writer has not created
+/// it yet — or a `DROP` removed it).
+pub fn tail_from(path: &Path, offset: u64) -> io::Result<(Vec<WalRecord>, u64)> {
+    let mut bytes = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            use std::io::Seek;
+            f.seek(io::SeekFrom::Start(offset))?;
+            f.read_to_end(&mut bytes)?;
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok((Vec::new(), offset)),
+        Err(e) => return Err(e),
+    }
+    let (records, consumed) = parse_frames_incremental(&bytes);
+    Ok((records, offset + consumed as u64))
 }
 
 /// Read a WAL file; a missing file is an empty log. See [`parse_frames`]
@@ -286,6 +318,42 @@ mod tests {
         let (parsed, torn) = parse_frames(&bytes);
         assert_eq!(parsed.len(), 1);
         assert!(torn);
+    }
+
+    #[test]
+    fn incremental_parse_reports_consumed_prefix() {
+        let mut bytes = Vec::new();
+        for v in 0..3u64 {
+            bytes.extend_from_slice(&encode_frame(&upd(v)));
+        }
+        let whole = bytes.len();
+        bytes.extend_from_slice(&encode_frame(&upd(3))[..7]); // in-flight append
+        let (recs, consumed) = parse_frames_incremental(&bytes);
+        assert_eq!(recs.len(), 3);
+        assert_eq!(consumed, whole, "pending tail must not be consumed");
+        let (recs, consumed) = parse_frames_incremental(&bytes[..whole]);
+        assert_eq!(recs.len(), 3);
+        assert_eq!(consumed, whole);
+    }
+
+    #[test]
+    fn tail_from_resumes_at_returned_offset() {
+        let dir = super::super::tests::tempdir("waltail");
+        let path = dir.join("g.wal");
+        let (recs, off) = tail_from(&path, 0).unwrap();
+        assert!(recs.is_empty());
+        assert_eq!(off, 0, "missing file stays at the caller's offset");
+        append(&path, &upd(1)).unwrap();
+        append(&path, &upd(2)).unwrap();
+        let (recs, off) = tail_from(&path, 0).unwrap();
+        assert_eq!(recs, vec![upd(1), upd(2)]);
+        append(&path, &upd(3)).unwrap();
+        let (recs, off2) = tail_from(&path, off).unwrap();
+        assert_eq!(recs, vec![upd(3)]);
+        let (recs, off3) = tail_from(&path, off2).unwrap();
+        assert!(recs.is_empty());
+        assert_eq!(off3, off2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! End-to-end replication and failover: a primary serving the TCP verb
+//! protocol, a read replica tailing its WAL-frame stream, quorum acks,
+//! crash promotion, and epoch fencing of the rejoining ex-primary.
+
+use bimatch::coordinator::{Server, ServerCfg};
+use bimatch::persist::replicate::AckMode;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "bimatch_repl_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+struct Node {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    serve: Option<JoinHandle<std::io::Result<()>>>,
+}
+
+impl Node {
+    fn start(mut cfg: ServerCfg) -> Node {
+        cfg.addr = "127.0.0.1:0".into();
+        let server = Server::bind_cfg(cfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let serve = std::thread::spawn(move || server.serve());
+        Node { addr, stop, serve: Some(serve) }
+    }
+
+    /// Clean stop: drain, fsync, join — then the listener is gone.
+    fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.serve.take() {
+            h.join().unwrap().unwrap();
+        }
+    }
+}
+
+impl Drop for Node {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.serve.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn roundtrip(addr: SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+fn field(reply: &str, name: &str) -> u64 {
+    reply
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix(name))
+        .unwrap_or_else(|| panic!("{name} missing in {reply}"))
+        .parse()
+        .unwrap_or_else(|e| panic!("bad {name} in {reply}: {e}"))
+}
+
+/// Poll `probe` until it returns true or the deadline trips.
+fn wait_for(what: &str, mut probe: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !probe() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn follower_tails_primary_serves_reads_and_rejects_writes() {
+    let primary = Node::start(ServerCfg::new(""));
+    assert!(roundtrip(primary.addr, "LOAD name=g family=uniform n=500 seed=7")
+        .starts_with("OK "));
+    let primary_match = roundtrip(primary.addr, "MATCH name=g");
+    assert!(primary_match.contains("certified=1"), "{primary_match}");
+    let card = field(&primary_match, "card=");
+
+    let mut fcfg = ServerCfg::new("");
+    fcfg.replicate_from = Some(primary.addr.to_string());
+    let follower = Node::start(fcfg);
+
+    // the baseline snapshot replicates the already-loaded graph
+    wait_for("baseline replication of g", || {
+        roundtrip(follower.addr, "GRAPHS") == "GRAPHS g"
+    });
+    let reply = roundtrip(follower.addr, "MATCH name=g");
+    assert!(reply.contains("certified=1"), "{reply}");
+    assert_eq!(field(&reply, "card="), card, "replicated graph must match the primary's");
+
+    // a write committed on the primary streams over as a frame and is
+    // replayed through the recovery path on the follower
+    wait_for("primary sees its follower", || {
+        roundtrip(primary.addr, "LAG").contains("followers=1")
+    });
+    let reply = roundtrip(primary.addr, "UPDATE name=g addcols=0;1;2");
+    assert!(reply.starts_with("OK "), "{reply}");
+    let card_after = field(&reply, "card=");
+    wait_for("follower to apply the streamed update", || {
+        field(&roundtrip(follower.addr, "MATCH name=g"), "card=") == card_after
+    });
+    let reply = roundtrip(follower.addr, "MATCH name=g");
+    assert!(reply.contains("certified=1"), "{reply}");
+
+    // the replica is read-only: every write verb bounces, typed
+    for req in [
+        "UPDATE name=g add=0:0",
+        "LOAD name=h family=uniform n=50 seed=1",
+        "DROP name=g",
+        "SAVE name=g",
+    ] {
+        let reply = roundtrip(follower.addr, req);
+        assert!(reply.starts_with("ERR read-only"), "{req} → {reply}");
+    }
+    let lag = roundtrip(follower.addr, "LAG");
+    assert!(lag.contains("role=follower"), "{lag}");
+    assert!(lag.contains("connected=1"), "{lag}");
+
+    // a DROP on the primary propagates too
+    assert!(roundtrip(primary.addr, "DROP name=g").starts_with("OK "));
+    wait_for("follower to apply the streamed drop", || {
+        roundtrip(follower.addr, "GRAPHS") == "GRAPHS"
+    });
+}
+
+#[test]
+fn quorum_write_without_a_follower_fails_as_in_doubt() {
+    let mut cfg = ServerCfg::new("");
+    cfg.ack_mode = AckMode::Quorum;
+    cfg.ack_timeout = Some(Duration::from_millis(150));
+    let primary = Node::start(cfg);
+    // no follower connected: the write commits locally but cannot be
+    // confirmed — the reply is the typed in-doubt error, not silence
+    let reply = roundtrip(primary.addr, "LOAD name=g family=uniform n=200 seed=3");
+    assert!(reply.starts_with("ERR replication:"), "{reply}");
+    assert!(reply.contains("durable locally"), "{reply}");
+    // the local commit is real: the graph is there and reads serve it
+    assert_eq!(roundtrip(primary.addr, "GRAPHS"), "GRAPHS g");
+    assert!(roundtrip(primary.addr, "MATCH name=g").contains("certified=1"));
+    let stats = roundtrip(primary.addr, "STATS");
+    assert!(stats.contains("shipped=1"), "{stats}");
+}
+
+#[test]
+fn promotion_fails_over_with_zero_acked_loss_and_fences_the_ex_primary() {
+    let primary_dir = tempdir("promote_primary");
+    let follower_dir = tempdir("promote_follower");
+
+    // quorum primary: an OK'd write is GUARANTEED applied on the follower
+    let mut pcfg = ServerCfg::new("");
+    pcfg.data_dir = Some(primary_dir.clone());
+    pcfg.ack_mode = AckMode::Quorum;
+    pcfg.ack_timeout = Some(Duration::from_secs(10));
+    let mut primary = Node::start(pcfg);
+
+    let mut fcfg = ServerCfg::new("");
+    fcfg.data_dir = Some(follower_dir.clone());
+    fcfg.replicate_from = Some(primary.addr.to_string());
+    let follower = Node::start(fcfg);
+    wait_for("follower stream to come up", || {
+        roundtrip(primary.addr, "LAG").contains("followers=1")
+    });
+
+    assert!(roundtrip(primary.addr, "LOAD name=g family=uniform n=1500 seed=7")
+        .starts_with("OK "));
+    // cold MATCH on the primary: the phase count a from-scratch compute
+    // needs (also seeds the cached matching that UPDATE repairs)
+    let cold = roundtrip(primary.addr, "MATCH name=g");
+    assert!(cold.contains("certified=1"), "{cold}");
+    let cold_phases = field(&cold, "phases=");
+    // warm the follower too: reads are allowed on a replica, and the
+    // cached maximum it computes here is what streamed update frames
+    // repair forward — keeping the node one seeded repair from certified
+    let reply = roundtrip(follower.addr, "MATCH name=g");
+    assert!(reply.contains("certified=1"), "{reply}");
+    assert_eq!(field(&reply, "card="), field(&cold, "card="));
+    // acked writes: quorum means each OK implies the follower applied it
+    let mut card = 0;
+    for i in 0..3 {
+        let reply =
+            roundtrip(primary.addr, &format!("UPDATE name=g addcols={i};{}", i + 50));
+        assert!(reply.starts_with("OK "), "{reply}");
+        card = field(&reply, "card=");
+    }
+
+    // primary dies (clean stop here; SIGKILL chaos lives in CI)
+    primary.stop();
+
+    // crash-promote the follower: it fences the dead primary's epoch and
+    // becomes writable
+    let reply = roundtrip(follower.addr, "PROMOTE");
+    assert!(reply.starts_with("OK promoted=1"), "{reply}");
+    let promoted_epoch = field(&reply, "epoch=");
+    assert!(promoted_epoch >= 1, "{reply}");
+    assert_eq!(field(&reply, "graphs="), 1, "{reply}");
+
+    // zero acked loss: the promoted node serves the exact acked state,
+    // certified, via seeded repair — warm, not a cold recompute
+    let warm = roundtrip(follower.addr, "MATCH name=g");
+    assert!(warm.contains("certified=1"), "{warm}");
+    assert_eq!(field(&warm, "card="), card, "acked update lost across failover: {warm}");
+    let warm_phases = field(&warm, "phases=");
+    assert!(warm_phases <= cold_phases, "warm {warm_phases} > cold {cold_phases}: {warm}");
+    if cold_phases > 1 {
+        assert!(
+            warm_phases < cold_phases,
+            "promoted MATCH must warm-start (repair phases {warm_phases} \
+             vs cold {cold_phases}): {warm}"
+        );
+    }
+    // and the promoted node takes writes
+    let reply = roundtrip(follower.addr, "UPDATE name=g addcols=3;4");
+    assert!(reply.starts_with("OK "), "{reply}");
+    let lag = roundtrip(follower.addr, "LAG");
+    assert!(lag.contains("role=primary"), "{lag}");
+
+    // the ex-primary rejoins: a handshake carrying the promoted epoch
+    // fences it — it refuses the stream and stops accepting writes
+    let mut ecfg = ServerCfg::new("");
+    ecfg.data_dir = Some(primary_dir.clone());
+    let ex_primary = Node::start(ecfg);
+    assert_eq!(roundtrip(ex_primary.addr, "GRAPHS"), "GRAPHS g", "ex-primary recovers");
+    let reply = roundtrip(ex_primary.addr, &format!("REPLICA epoch={promoted_epoch}"));
+    assert!(reply.starts_with("ERR fenced:"), "{reply}");
+    let reply = roundtrip(ex_primary.addr, "UPDATE name=g addcols=9;10");
+    assert!(reply.starts_with("ERR read-only"), "split-brain write accepted: {reply}");
+    assert!(roundtrip(ex_primary.addr, "LAG").contains("role=fenced"));
+    // reads still flow on the fenced node
+    assert!(roundtrip(ex_primary.addr, "MATCH name=g").contains("certified=1"));
+
+    let _ = std::fs::remove_dir_all(&primary_dir);
+    let _ = std::fs::remove_dir_all(&follower_dir);
+}
+
+#[test]
+fn durable_follower_survives_its_own_restart() {
+    let follower_dir = tempdir("follower_restart");
+    let primary = Node::start(ServerCfg::new(""));
+    assert!(roundtrip(primary.addr, "LOAD name=g family=uniform n=400 seed=9")
+        .starts_with("OK "));
+
+    let mut fcfg = ServerCfg::new("");
+    fcfg.data_dir = Some(follower_dir.clone());
+    fcfg.replicate_from = Some(primary.addr.to_string());
+    let mut follower = Node::start(fcfg);
+    wait_for("baseline replication", || {
+        roundtrip(follower.addr, "GRAPHS") == "GRAPHS g"
+    });
+    let card = field(&roundtrip(follower.addr, "MATCH name=g"), "card=");
+    // the follower persisted what it acked: a restart recovers the
+    // replicated graph from its own data dir before re-tailing
+    follower.stop();
+    let mut fcfg = ServerCfg::new("");
+    fcfg.data_dir = Some(follower_dir.clone());
+    fcfg.replicate_from = Some(primary.addr.to_string());
+    let follower = Node::start(fcfg);
+    assert_eq!(roundtrip(follower.addr, "GRAPHS"), "GRAPHS g");
+    let reply = roundtrip(follower.addr, "MATCH name=g");
+    assert!(reply.contains("certified=1"), "{reply}");
+    assert_eq!(field(&reply, "card="), card);
+
+    let _ = std::fs::remove_dir_all(&follower_dir);
+}
