@@ -38,6 +38,7 @@ use crate::matching::Matching;
 use crate::persist::replicate::{self, AckMode, Event, EventKind, Hub, NodeRole};
 use crate::persist::{self, recover, snapshot, wal, Persistence, RecoveryReport};
 use crate::runtime::Engine;
+use crate::sanitize::lockorder::{self, LockClass};
 use crate::util::pool::WorkspacePool;
 use crate::util::timer::Timer;
 use std::sync::atomic::Ordering;
@@ -195,7 +196,7 @@ impl Executor {
         let Some(entry) = self.store.entry(name) else {
             return true; // already gone
         };
-        let mut e = entry.lock().unwrap();
+        let mut e = lockorder::lock(LockClass::Entry, &entry);
         if let Some(p) = &self.persist {
             let g = e.graph.snapshot();
             let version = e.graph.version();
@@ -241,7 +242,7 @@ impl Executor {
     fn reload_from_disk(&self, name: &str) -> Option<Arc<std::sync::Mutex<StoreEntry>>> {
         let p = self.persist.as_ref()?;
         let lock = p.name_lock(name);
-        let held = lock.lock().unwrap();
+        let held = lockorder::lock(LockClass::Name, &lock);
         // re-check under the lock: a racing LOAD or reload may have
         // installed the graph while we waited
         if let Some(entry) = self.store.entry(name) {
@@ -552,7 +553,7 @@ impl Executor {
         // between its disk and map halves.
         let base = self.store.allocate_version_base();
         let name_lock = self.persist.as_ref().map(|p| p.name_lock(name));
-        let name_guard = name_lock.as_ref().map(|l| l.lock().unwrap());
+        let name_guard = name_lock.as_ref().map(|l| lockorder::lock(LockClass::Name, l));
         if let Some(p) = &self.persist {
             if let Err(e) = p.record_load_locked(name, &g, base) {
                 self.fail(&mut out, JobError::Load(format!("persisting LOAD failed: {e}")));
@@ -593,11 +594,11 @@ impl Executor {
         // transparent reload from resurrecting the graph out of the
         // not-yet-deleted files.
         let entry = self.store.entry(name);
-        let entry_guard = entry.as_ref().map(|e| e.lock().unwrap());
+        let entry_guard = entry.as_ref().map(|e| lockorder::lock(LockClass::Entry, e));
         let in_memory = entry_guard.is_some();
         let version = entry_guard.as_ref().map(|e| e.graph.version());
         let name_lock = self.persist.as_ref().map(|p| p.name_lock(name));
-        let name_guard = name_lock.as_ref().map(|l| l.lock().unwrap());
+        let name_guard = name_lock.as_ref().map(|l| lockorder::lock(LockClass::Name, l));
         let on_disk = self
             .persist
             .as_ref()
@@ -670,7 +671,7 @@ impl Executor {
             );
             return out;
         };
-        let mut e = entry.lock().unwrap();
+        let mut e = lockorder::lock(LockClass::Entry, &entry);
         let g = e.graph.snapshot();
         let version = e.graph.version();
         let matching = e
@@ -708,7 +709,7 @@ impl Executor {
         // the entry lock is held across apply + repair: updates to one
         // graph serialize (the cache is only meaningful under per-graph
         // ordering) while other graphs keep flowing
-        let mut e = entry.lock().unwrap();
+        let mut e = lockorder::lock(LockClass::Entry, &entry);
         // resolve AND validate the spec before mutating anything: an
         // unbuildable spec (xla without an engine) must reply ERR with the
         // stored graph untouched — a half-applied update behind an error
@@ -952,7 +953,7 @@ impl Executor {
         let mut rebased = 0usize;
         for name in self.store.names() {
             let Some(entry) = self.store.entry(&name) else { continue };
-            let mut e = entry.lock().unwrap();
+            let mut e = lockorder::lock(LockClass::Entry, &entry);
             let g = e.graph.snapshot();
             let old_version = e.graph.version();
             let matching = e
@@ -1029,7 +1030,7 @@ impl Executor {
                 let entry = self.store.entry(&ev.name).ok_or_else(|| {
                     format!("frame for graph {:?} with no baseline — resync", ev.name)
                 })?;
-                let mut e = entry.lock().unwrap();
+                let mut e = lockorder::lock(LockClass::Entry, &entry);
                 let floor = e.graph.version();
                 // the same replay kernel as crash recovery: incarnation
                 // scoping, ≤-floor skip, gap halt, report cross-check

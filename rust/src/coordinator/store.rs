@@ -8,11 +8,14 @@
 //! entries, and each entry carries its own mutex held for the duration of
 //! an update's apply + repair — so long repairs on one graph never block
 //! traffic on another, and updates to one graph serialize (the matching
-//! cache is only meaningful under per-graph ordering).
+//! cache is only meaningful under per-graph ordering). Debug builds
+//! assert the acquisition order (entry → recency → map) through
+//! [`crate::sanitize::lockorder`].
 
 use crate::dynamic::{DeltaBatch, DynamicGraph};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::Matching;
+use crate::sanitize::lockorder::{self, LockClass};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -82,7 +85,7 @@ impl GraphStore {
 
     fn touch(&self, name: &str) {
         let t = self.clock.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.recency.lock().unwrap().insert(name.to_string(), t);
+        lockorder::lock(LockClass::Recency, &self.recency).insert(name.to_string(), t);
     }
 
     /// Reserve a fresh 2^32-wide version range. Split out of
@@ -120,7 +123,8 @@ impl GraphStore {
             stats: GraphStats::default(),
         }));
         self.touch(name);
-        self.inner.lock().unwrap().insert(name.to_string(), entry).is_some()
+        let mut map = lockorder::lock(LockClass::StoreMap, &self.inner);
+        map.insert(name.to_string(), entry).is_some()
     }
 
     /// Install a recovered graph verbatim — version, overlay, and cached
@@ -139,23 +143,21 @@ impl GraphStore {
             stats: GraphStats::default(),
         }));
         self.touch(name);
-        self.inner.lock().unwrap().insert(name.to_string(), entry.clone());
+        lockorder::lock(LockClass::StoreMap, &self.inner).insert(name.to_string(), entry.clone());
         entry
     }
 
     /// Remove a named graph. Returns whether it existed.
     pub fn drop_graph(&self, name: &str) -> bool {
-        self.recency.lock().unwrap().remove(name);
-        self.inner.lock().unwrap().remove(name).is_some()
+        lockorder::lock(LockClass::Recency, &self.recency).remove(name);
+        lockorder::lock(LockClass::StoreMap, &self.inner).remove(name).is_some()
     }
 
     /// The least-recently-used name other than `exclude` (the graph a
     /// `LOAD` just installed must not evict itself).
     pub fn lru_victim(&self, exclude: &str) -> Option<String> {
-        let recency = self.recency.lock().unwrap();
-        self.inner
-            .lock()
-            .unwrap()
+        let recency = lockorder::lock(LockClass::Recency, &self.recency);
+        lockorder::lock(LockClass::StoreMap, &self.inner)
             .keys()
             .filter(|n| n.as_str() != exclude)
             .min_by_key(|n| recency.get(*n).copied().unwrap_or(0))
@@ -165,7 +167,7 @@ impl GraphStore {
     /// The entry handle for `name` (callers lock it themselves — the
     /// executor's `UPDATE` path holds it across apply + repair).
     pub fn entry(&self, name: &str) -> Option<Arc<Mutex<StoreEntry>>> {
-        let e = self.inner.lock().unwrap().get(name).cloned();
+        let e = lockorder::lock(LockClass::StoreMap, &self.inner).get(name).cloned();
         if e.is_some() {
             self.touch(name);
         }
@@ -181,7 +183,7 @@ impl GraphStore {
     pub fn graph_for_match(&self, name: &str) -> Option<MatchView> {
         let entry = self.entry(name)?;
         let (graph, version, cached) = {
-            let mut e = entry.lock().unwrap();
+            let mut e = lockorder::lock(LockClass::Entry, &entry);
             let g = e.graph.snapshot();
             let version = e.graph.version();
             let cached = e.matching.clone().filter(|c| c.version == version);
@@ -199,14 +201,14 @@ impl GraphStore {
     /// be rejected anyway — but writing through the handle makes the
     /// target unambiguous: an orphaned entry absorbs the write harmlessly).
     pub fn cache_into(entry: &Arc<Mutex<StoreEntry>>, matching: Matching, version: u64) {
-        let mut e = entry.lock().unwrap();
+        let mut e = lockorder::lock(LockClass::Entry, entry);
         if e.graph.version() == version {
             e.matching = Some(CachedMatching { matching, version });
         }
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lockorder::lock(LockClass::StoreMap, &self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -215,7 +217,8 @@ impl GraphStore {
 
     /// Stored graph names, sorted (for `GRAPHS`-style listings and tests).
     pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> =
+            lockorder::lock(LockClass::StoreMap, &self.inner).keys().cloned().collect();
         v.sort();
         v
     }

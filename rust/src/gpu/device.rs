@@ -37,6 +37,7 @@
 //!   (final cardinality), not bitwise.
 
 use super::config::{ThreadMapping, WriteOrder, WARP_SIZE};
+use crate::sanitize::race;
 use crate::util::rng::Xoshiro256;
 
 /// Abstract device-cycle accounting (arbitrary units; the harness reports
@@ -342,9 +343,16 @@ pub fn charge_frontier_scan(clock: &mut DeviceClock, mapping: ThreadMapping, n_i
 /// leases it from the [`crate::util::pool::WorkspacePool`] via `GpuState`
 /// instead of paying a `vec![0u64; n]` allocation per launch); it is
 /// cleared and refilled here, contents on entry don't matter.
+///
+/// `kernel` names the launch in race-sanitizer diagnostics
+/// (`crate::sanitize::race`): when `BIMATCH_SANITIZE=1`, every shared
+/// access the body makes is shadow-logged per modeled item, and the
+/// launch end flags non-atomic same-cell conflicts plus atomic RMWs the
+/// per-item work record did not charge [`CAS_COST`] for.
 pub fn launch_parallel_racy<F>(
     clock: &mut DeviceClock,
     mapping: ThreadMapping,
+    kernel: &'static str,
     n: usize,
     nthreads: usize,
     work: &mut Vec<u64>,
@@ -356,18 +364,24 @@ pub fn launch_parallel_racy<F>(
     let nthreads = nthreads.max(1);
     work.clear();
     work.resize(n, 0);
+    let shadow = race::launch_scope(kernel);
     {
         let w = crate::util::pool::SharedSlice::new(work);
         let per = n.div_ceil(nthreads).max(1);
         crate::util::pool::fork_join(nthreads, |tid| {
+            let _lane = shadow.as_ref().map(|s| s.enter(tid as u32));
             let lo = (tid * per).min(n);
             let hi = ((tid + 1) * per).min(n);
             for item in lo..hi {
+                race::set_item(item as u32);
                 let units = body(tid, item);
                 // SAFETY: index `item` belongs to this thread's chunk only.
                 unsafe { w.set(item, units) };
             }
         });
+    }
+    if let Some(s) = shadow {
+        s.finish(race::CostCheck::PerItem { work: work.as_slice(), per_rmw: CAS_COST }, None);
     }
     let (warp_sum, max_warp) =
         fold_lane_cost(mapping.total_threads(n), n, ITEM_COST, |item| work[item]);
@@ -379,10 +393,14 @@ pub fn launch_parallel_racy<F>(
 /// the body reports (which should include [`COMPACTION_COST`] per
 /// worklist append and [`CAS_COST`] per atomic, like the serial
 /// [`launch_frontier`] bodies do). `work` is the caller-owned per-item
-/// record, as in [`launch_parallel_racy`].
+/// record, as in [`launch_parallel_racy`], and `kernel` names the launch
+/// in sanitizer diagnostics. Shadow logging is keyed by frontier
+/// *position* (matching the `work` record); diagnostics translate
+/// positions back to column ids through `items`.
 pub fn launch_frontier_parallel<F>(
     clock: &mut DeviceClock,
     mapping: ThreadMapping,
+    kernel: &'static str,
     items: &[u32],
     nthreads: usize,
     work: &mut Vec<u64>,
@@ -395,18 +413,27 @@ pub fn launch_frontier_parallel<F>(
     let nthreads = nthreads.max(1);
     work.clear();
     work.resize(n, 0);
+    let shadow = race::launch_scope(kernel);
     {
         let w = crate::util::pool::SharedSlice::new(work);
         let per = n.div_ceil(nthreads).max(1);
         crate::util::pool::fork_join(nthreads, |tid| {
+            let _lane = shadow.as_ref().map(|s| s.enter(tid as u32));
             let lo = (tid * per).min(n);
             let hi = ((tid + 1) * per).min(n);
             for idx in lo..hi {
+                race::set_item(idx as u32);
                 let units = body(tid, items[idx] as usize);
                 // SAFETY: index `idx` belongs to this thread's chunk only.
                 unsafe { w.set(idx, units) };
             }
         });
+    }
+    if let Some(s) = shadow {
+        s.finish(
+            race::CostCheck::PerItem { work: work.as_slice(), per_rmw: CAS_COST },
+            Some(items),
+        );
     }
     let (warp_sum, max_warp) =
         fold_lane_cost(mapping.total_threads(n), n, FRONTIER_ITEM_COST, |idx| work[idx]);
@@ -421,9 +448,16 @@ pub fn launch_frontier_parallel<F>(
 /// changes. The caller guarantees `body` writes disjoint indices (use
 /// [`crate::util::pool::SharedSlice`]); write order is immaterial for such
 /// kernels, which is why no [`WriteOrder`] parameter exists here.
+///
+/// `kernel` names the launch in race-sanitizer diagnostics. Because the
+/// disjointness promise is exactly what this executor's cost formula
+/// assumes (no CAS charged, ever), the sanitizer holds its launches to
+/// the strictest contract: *any* cross-item conflict and *any* atomic
+/// RMW is an error.
 pub fn launch_parallel<F>(
     clock: &mut DeviceClock,
     mapping: ThreadMapping,
+    kernel: &'static str,
     n: usize,
     nthreads: usize,
     body: F,
@@ -433,11 +467,21 @@ pub fn launch_parallel<F>(
     clock.charge_launch();
     let (warp_sum, max_warp) = warp_cost_uniform(mapping.total_threads(n), n);
     clock.charge_warp_work(warp_sum, max_warp);
-    crate::util::pool::parallel_chunks(nthreads.max(1), n, |range| {
-        for i in range {
+    let shadow = race::launch_scope(kernel);
+    let nthreads = nthreads.max(1);
+    let per = n.div_ceil(nthreads).max(1);
+    crate::util::pool::fork_join(nthreads, |tid| {
+        let _lane = shadow.as_ref().map(|s| s.enter(tid as u32));
+        let lo = (tid * per).min(n);
+        let hi = ((tid + 1) * per).min(n);
+        for i in lo..hi {
+            race::set_item(i as u32);
             body(i);
         }
     });
+    if let Some(s) = shadow {
+        s.finish(race::CostCheck::Disjoint, None);
+    }
 }
 
 /// Lockstep executor for ALTERNATE: all lanes of a warp perform a *read*
@@ -677,7 +721,7 @@ mod tests {
                 for nthreads in [1usize, 4] {
                     let mut par = DeviceClock::default();
                     let pseen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-                    launch_parallel(&mut par, mapping, n, nthreads, |i| {
+                    launch_parallel(&mut par, mapping, "TEST-DISJOINT", n, nthreads, |i| {
                         pseen[i].fetch_add(1, Ordering::Relaxed);
                     });
                     assert_eq!(
@@ -706,10 +750,18 @@ mod tests {
                 for nthreads in [1usize, 4] {
                     let mut par = DeviceClock::default();
                     let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-                    launch_parallel_racy(&mut par, mapping, n, nthreads, &mut scratch, |_tid, i| {
-                        seen[i].fetch_add(1, Ordering::Relaxed);
-                        (i % 3) as u64 * EDGE_COST
-                    });
+                    launch_parallel_racy(
+                        &mut par,
+                        mapping,
+                        "TEST-RACY",
+                        n,
+                        nthreads,
+                        &mut scratch,
+                        |_tid, i| {
+                            seen[i].fetch_add(1, Ordering::Relaxed);
+                            (i % 3) as u64 * EDGE_COST
+                        },
+                    );
                     assert_eq!(par.cycles, serial.cycles, "{mapping:?} n={n} t={nthreads}");
                     assert_eq!(par.parallel_cycles, serial.parallel_cycles);
                     assert!(seen.iter().all(|a| a.load(Ordering::Relaxed) == 1));
@@ -728,9 +780,15 @@ mod tests {
                 (c % 5) as u64
             });
             let mut par = DeviceClock::default();
-            launch_frontier_parallel(&mut par, mapping, &items, 4, &mut scratch, |_tid, c| {
-                (c % 5) as u64
-            });
+            launch_frontier_parallel(
+                &mut par,
+                mapping,
+                "TEST-FRONTIER",
+                &items,
+                4,
+                &mut scratch,
+                |_tid, c| (c % 5) as u64,
+            );
             assert_eq!(par.cycles, serial.cycles, "{mapping:?}");
             assert_eq!(par.parallel_cycles, serial.parallel_cycles);
         }

@@ -154,7 +154,7 @@ pub fn init_bfs_array(state: &mut GpuState, cfg: LaunchCfg, with_root: bool, clo
             let cmatch: &[i32] = &state.cmatch;
             let bfs = SharedSlice::new(&mut state.bfs_array);
             let rootw = SharedSlice::new(&mut state.root);
-            launch_parallel(clock, cfg.mapping, nc, cfg.par_threads, |c| {
+            launch_parallel(clock, cfg.mapping, "INITBFSARRAY", nc, cfg.par_threads, |c| {
                 // SAFETY: each index `c` is written by exactly one thread.
                 unsafe {
                     if cmatch[c] > -1 {
@@ -173,7 +173,7 @@ pub fn init_bfs_array(state: &mut GpuState, cfg: LaunchCfg, with_root: bool, clo
         }
         let nr = state.predecessor.len();
         let pred = SharedSlice::new(&mut state.predecessor);
-        launch_parallel(clock, cfg.mapping, nr, cfg.par_threads, |r| {
+        launch_parallel(clock, cfg.mapping, "INITBFSARRAY", nr, cfg.par_threads, |r| {
             // SAFETY: disjoint per-index writes.
             unsafe { pred.set(r, -1) }
         });
@@ -381,36 +381,44 @@ fn gpubfs_par(
         let bfs = AtomicCells::new(bfs_array);
         let pred = AtomicCells::new(predecessor);
         let rm = AtomicCells::new(rmatch);
-        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, work, |_tid, col_vertex| {
-            if bfs.load(col_vertex) != bfs_level {
-                return 0;
-            }
-            let mut edges = 0u64;
-            let mut work = 0u64;
-            for &nr in g.col_neighbors(col_vertex) {
-                edges += 1;
-                work += EDGE_COST;
-                let neighbor_row = nr as usize;
-                let col_match = rm.load(neighbor_row);
-                if col_match > -1 {
-                    if bfs.load(col_match as usize) == L0 - 1 {
+        launch_parallel_racy(
+            clock,
+            cfg.mapping,
+            "GPUBFS",
+            g.nc,
+            cfg.par_threads,
+            work,
+            |_tid, col_vertex| {
+                if bfs.load(col_vertex) != bfs_level {
+                    return 0;
+                }
+                let mut edges = 0u64;
+                let mut work = 0u64;
+                for &nr in g.col_neighbors(col_vertex) {
+                    edges += 1;
+                    work += EDGE_COST;
+                    let neighbor_row = nr as usize;
+                    let col_match = rm.load(neighbor_row);
+                    if col_match > -1 {
+                        if bfs.load(col_match as usize) == L0 - 1 {
+                            work += CAS_COST;
+                            if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                                vi.store(true, Ordering::Relaxed);
+                                pred.store(neighbor_row, col_vertex as i32);
+                            }
+                        }
+                    } else if col_match == -1 {
                         work += CAS_COST;
-                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
-                            vi.store(true, Ordering::Relaxed);
+                        if rm.cas(neighbor_row, -1, -2) {
                             pred.store(neighbor_row, col_vertex as i32);
+                            apf.store(true, Ordering::Relaxed);
                         }
                     }
-                } else if col_match == -1 {
-                    work += CAS_COST;
-                    if rm.cas(neighbor_row, -1, -2) {
-                        pred.store(neighbor_row, col_vertex as i32);
-                        apf.store(true, Ordering::Relaxed);
-                    }
                 }
-            }
-            edges_total.fetch_add(edges, Ordering::Relaxed);
-            work
-        });
+                edges_total.fetch_add(edges, Ordering::Relaxed);
+                work
+            },
+        );
     }
     *vertex_inserted |= vi.into_inner();
     *augmenting_path_found |= apf.into_inner();
@@ -514,42 +522,50 @@ fn gpubfs_frontier_par(
         let pred = AtomicCells::new(predecessor);
         let rm = AtomicCells::new(rmatch);
         let out = SharedSlice::new(&mut bufs);
-        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, work, |tid, col_vertex| {
-            debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
-            let mut edges = 0u64;
-            let mut work = 0u64;
-            for &nr in g.col_neighbors(col_vertex) {
-                edges += 1;
-                work += EDGE_COST;
-                let neighbor_row = nr as usize;
-                let col_match = rm.load(neighbor_row);
-                if col_match > -1 {
-                    if bfs.load(col_match as usize) == L0 - 1 {
+        launch_frontier_parallel(
+            clock,
+            cfg.mapping,
+            "GPUBFS-FRONTIER",
+            frontier,
+            nthreads,
+            work,
+            |tid, col_vertex| {
+                debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
+                let mut edges = 0u64;
+                let mut work = 0u64;
+                for &nr in g.col_neighbors(col_vertex) {
+                    edges += 1;
+                    work += EDGE_COST;
+                    let neighbor_row = nr as usize;
+                    let col_match = rm.load(neighbor_row);
+                    if col_match > -1 {
+                        if bfs.load(col_match as usize) == L0 - 1 {
+                            work += CAS_COST;
+                            if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                                vi.store(true, Ordering::Relaxed);
+                                pred.store(neighbor_row, col_vertex as i32);
+                                // SAFETY: slot `tid` is only touched by this
+                                // host thread.
+                                unsafe { out.get_lane_mut(tid) }.next.push(col_match as u32);
+                                work += COMPACTION_COST;
+                            }
+                        }
+                    } else if col_match == -1 {
                         work += CAS_COST;
-                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
-                            vi.store(true, Ordering::Relaxed);
+                        if rm.cas(neighbor_row, -1, -2) {
                             pred.store(neighbor_row, col_vertex as i32);
-                            // SAFETY: slot `tid` is only touched by this
-                            // host thread.
-                            unsafe { out.get_mut(tid) }.next.push(col_match as u32);
+                            apf.store(true, Ordering::Relaxed);
+                            // SAFETY: slot `tid` is only touched by this host
+                            // thread.
+                            unsafe { out.get_lane_mut(tid) }.endpoints.push(neighbor_row as u32);
                             work += COMPACTION_COST;
                         }
                     }
-                } else if col_match == -1 {
-                    work += CAS_COST;
-                    if rm.cas(neighbor_row, -1, -2) {
-                        pred.store(neighbor_row, col_vertex as i32);
-                        apf.store(true, Ordering::Relaxed);
-                        // SAFETY: slot `tid` is only touched by this host
-                        // thread.
-                        unsafe { out.get_mut(tid) }.endpoints.push(neighbor_row as u32);
-                        work += COMPACTION_COST;
-                    }
                 }
-            }
-            edges_total.fetch_add(edges, Ordering::Relaxed);
-            work
-        });
+                edges_total.fetch_add(edges, Ordering::Relaxed);
+                work
+            },
+        );
     }
     merge_frontier_bufs(bufs, next, endpoints);
     state.vertex_inserted |= vi.into_inner();
@@ -654,46 +670,54 @@ fn gpubfs_wr_par(
         let pred = AtomicCells::new(predecessor);
         let rt = AtomicCells::new(root);
         let rm = AtomicCells::new(rmatch);
-        launch_parallel_racy(clock, cfg.mapping, g.nc, cfg.par_threads, work, |_tid, col_vertex| {
-            if bfs.load(col_vertex) != bfs_level {
-                return 0;
-            }
-            let my_root = rt.load(col_vertex);
-            debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
-            if bfs.load(my_root as usize) < L0 - 1 {
-                return 0; // early exit: this tree already found a path
-            }
-            let mut edges = 0u64;
-            let mut work = 0u64;
-            for &nr in g.col_neighbors(col_vertex) {
-                edges += 1;
-                work += EDGE_COST;
-                let neighbor_row = nr as usize;
-                let col_match = rm.load(neighbor_row);
-                if col_match > -1 {
-                    if bfs.load(col_match as usize) == L0 - 1 {
+        launch_parallel_racy(
+            clock,
+            cfg.mapping,
+            "GPUBFS-WR",
+            g.nc,
+            cfg.par_threads,
+            work,
+            |_tid, col_vertex| {
+                if bfs.load(col_vertex) != bfs_level {
+                    return 0;
+                }
+                let my_root = rt.load(col_vertex);
+                debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
+                if bfs.load(my_root as usize) < L0 - 1 {
+                    return 0; // early exit: this tree already found a path
+                }
+                let mut edges = 0u64;
+                let mut work = 0u64;
+                for &nr in g.col_neighbors(col_vertex) {
+                    edges += 1;
+                    work += EDGE_COST;
+                    let neighbor_row = nr as usize;
+                    let col_match = rm.load(neighbor_row);
+                    if col_match > -1 {
+                        if bfs.load(col_match as usize) == L0 - 1 {
+                            work += CAS_COST;
+                            if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                                vi.store(true, Ordering::Relaxed);
+                                rt.store(col_match as usize, my_root);
+                                pred.store(neighbor_row, col_vertex as i32);
+                            }
+                        }
+                    } else if col_match == -1 {
                         work += CAS_COST;
-                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
-                            vi.store(true, Ordering::Relaxed);
-                            rt.store(col_match as usize, my_root);
+                        if rm.cas(neighbor_row, -1, -2) {
                             pred.store(neighbor_row, col_vertex as i32);
+                            bfs.store(
+                                my_root as usize,
+                                if encode_endpoint { -(neighbor_row as i32 + 1) } else { L0 - 2 },
+                            );
+                            apf.store(true, Ordering::Relaxed);
                         }
                     }
-                } else if col_match == -1 {
-                    work += CAS_COST;
-                    if rm.cas(neighbor_row, -1, -2) {
-                        pred.store(neighbor_row, col_vertex as i32);
-                        bfs.store(
-                            my_root as usize,
-                            if encode_endpoint { -(neighbor_row as i32 + 1) } else { L0 - 2 },
-                        );
-                        apf.store(true, Ordering::Relaxed);
-                    }
                 }
-            }
-            edges_total.fetch_add(edges, Ordering::Relaxed);
-            work
-        });
+                edges_total.fetch_add(edges, Ordering::Relaxed);
+                work
+            },
+        );
     }
     *vertex_inserted |= vi.into_inner();
     *augmenting_path_found |= apf.into_inner();
@@ -807,52 +831,60 @@ fn gpubfs_wr_frontier_par(
         let rt = AtomicCells::new(root);
         let rm = AtomicCells::new(rmatch);
         let out = SharedSlice::new(&mut bufs);
-        launch_frontier_parallel(clock, cfg.mapping, frontier, nthreads, work, |tid, col_vertex| {
-            debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
-            let my_root = rt.load(col_vertex);
-            debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
-            if bfs.load(my_root as usize) < L0 - 1 {
-                return 0; // early exit: this tree already found a path
-            }
-            let mut edges = 0u64;
-            let mut work = 0u64;
-            for &nr in g.col_neighbors(col_vertex) {
-                edges += 1;
-                work += EDGE_COST;
-                let neighbor_row = nr as usize;
-                let col_match = rm.load(neighbor_row);
-                if col_match > -1 {
-                    if bfs.load(col_match as usize) == L0 - 1 {
+        launch_frontier_parallel(
+            clock,
+            cfg.mapping,
+            "GPUBFS-WR-FRONTIER",
+            frontier,
+            nthreads,
+            work,
+            |tid, col_vertex| {
+                debug_assert_eq!(bfs.load(col_vertex), bfs_level, "stale frontier entry");
+                let my_root = rt.load(col_vertex);
+                debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
+                if bfs.load(my_root as usize) < L0 - 1 {
+                    return 0; // early exit: this tree already found a path
+                }
+                let mut edges = 0u64;
+                let mut work = 0u64;
+                for &nr in g.col_neighbors(col_vertex) {
+                    edges += 1;
+                    work += EDGE_COST;
+                    let neighbor_row = nr as usize;
+                    let col_match = rm.load(neighbor_row);
+                    if col_match > -1 {
+                        if bfs.load(col_match as usize) == L0 - 1 {
+                            work += CAS_COST;
+                            if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
+                                vi.store(true, Ordering::Relaxed);
+                                rt.store(col_match as usize, my_root);
+                                pred.store(neighbor_row, col_vertex as i32);
+                                // SAFETY: slot `tid` is only touched by this
+                                // host thread.
+                                unsafe { out.get_lane_mut(tid) }.next.push(col_match as u32);
+                                work += COMPACTION_COST;
+                            }
+                        }
+                    } else if col_match == -1 {
                         work += CAS_COST;
-                        if bfs.cas(col_match as usize, L0 - 1, bfs_level + 1) {
-                            vi.store(true, Ordering::Relaxed);
-                            rt.store(col_match as usize, my_root);
+                        if rm.cas(neighbor_row, -1, -2) {
                             pred.store(neighbor_row, col_vertex as i32);
-                            // SAFETY: slot `tid` is only touched by this
-                            // host thread.
-                            unsafe { out.get_mut(tid) }.next.push(col_match as u32);
+                            bfs.store(
+                                my_root as usize,
+                                if encode_endpoint { -(neighbor_row as i32 + 1) } else { L0 - 2 },
+                            );
+                            apf.store(true, Ordering::Relaxed);
+                            // SAFETY: slot `tid` is only touched by this host
+                            // thread.
+                            unsafe { out.get_lane_mut(tid) }.endpoints.push(neighbor_row as u32);
                             work += COMPACTION_COST;
                         }
                     }
-                } else if col_match == -1 {
-                    work += CAS_COST;
-                    if rm.cas(neighbor_row, -1, -2) {
-                        pred.store(neighbor_row, col_vertex as i32);
-                        bfs.store(
-                            my_root as usize,
-                            if encode_endpoint { -(neighbor_row as i32 + 1) } else { L0 - 2 },
-                        );
-                        apf.store(true, Ordering::Relaxed);
-                        // SAFETY: slot `tid` is only touched by this host
-                        // thread.
-                        unsafe { out.get_mut(tid) }.endpoints.push(neighbor_row as u32);
-                        work += COMPACTION_COST;
-                    }
                 }
-            }
-            edges_total.fetch_add(edges, Ordering::Relaxed);
-            work
-        });
+                edges_total.fetch_add(edges, Ordering::Relaxed);
+                work
+            },
+        );
     }
     merge_frontier_bufs(bufs, next, endpoints);
     state.vertex_inserted |= vi.into_inner();
@@ -959,6 +991,11 @@ fn alternate_atomic(
     }
     let n_warps = n.div_ceil(WARP_SIZE);
     let mut warp_cost = vec![0u64; n_warps];
+    // This executor owns its own fork_join (warps, not items, are the unit
+    // of host distribution), so it wires the race-sanitizer shadow scope
+    // manually: the modeled "item" is the warp index — which matches the
+    // per-warp cost vector the RMW cross-check runs against.
+    let shadow = crate::sanitize::race::launch_scope("ALTERNATE");
     {
         let GpuState { predecessor, rmatch, cmatch, .. } = state;
         let pred = AtomicCells::new(predecessor);
@@ -969,9 +1006,11 @@ fn alternate_atomic(
         let nthreads = cfg.par_threads.max(1);
         let per = n_warps.div_ceil(nthreads).max(1);
         fork_join(nthreads, |tid| {
+            let _lane = shadow.as_ref().map(|s| s.enter(tid as u32));
             let wlo = (tid * per).min(n_warps);
             let whi = ((tid + 1) * per).min(n_warps);
             for w in wlo..whi {
+                crate::sanitize::race::set_item(w as u32);
                 let lo = w * WARP_SIZE;
                 let hi = ((w + 1) * WARP_SIZE).min(n);
                 let mut alive = vec![true; hi - lo];
@@ -1025,6 +1064,15 @@ fn alternate_atomic(
                 unsafe { costs.set(w, cost) };
             }
         });
+    }
+    if let Some(s) = shadow {
+        s.finish(
+            crate::sanitize::race::CostCheck::PerItem {
+                work: warp_cost.as_slice(),
+                per_rmw: CAS_COST,
+            },
+            None,
+        );
     }
     let warp_sum: u64 = warp_cost.iter().sum();
     let max_warp = warp_cost.iter().max().copied().unwrap_or(0);
@@ -1129,7 +1177,7 @@ fn fixmatching_par(state: &mut GpuState, cfg: LaunchCfg, clock: &mut DeviceClock
         let cmatch: &[i32] = &state.cmatch;
         let nr = state.rmatch.len();
         let rm = SharedSlice::new(&mut state.rmatch);
-        launch_parallel(clock, cfg.mapping, nr, cfg.par_threads, |r| {
+        launch_parallel(clock, cfg.mapping, "FIXMATCHING", nr, cfg.par_threads, |r| {
             // SAFETY: only index `r` of rmatch is touched by this thread.
             unsafe {
                 let c = rm.get(r);
@@ -1144,7 +1192,7 @@ fn fixmatching_par(state: &mut GpuState, cfg: LaunchCfg, clock: &mut DeviceClock
         let rmatch: &[i32] = &state.rmatch;
         let nc = state.cmatch.len();
         let cm = SharedSlice::new(&mut state.cmatch);
-        launch_parallel(clock, cfg.mapping, nc, cfg.par_threads, |c| {
+        launch_parallel(clock, cfg.mapping, "FIXMATCHING", nc, cfg.par_threads, |c| {
             // SAFETY: only index `c` of cmatch is touched by this thread.
             unsafe {
                 let r = cm.get(c);

@@ -59,7 +59,12 @@
 //! The tier-1 gate is `cargo build --release && cargo test -q` (run from
 //! `rust/`). Registry-name stability is enforced by a golden-file test
 //! against `rust/registry-names.txt` and a CI diff of
-//! `bimatch --list-algos` output.
+//! `bimatch --list-algos` output. The opt-in correctness analyzers live
+//! in [`sanitize`]: `BIMATCH_SANITIZE=1` arms the device race sanitizer,
+//! debug builds arm the lock-order watchdog, and `bimatch fsck
+//! --data-dir <dir>` checks durability state offline.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod apps;
 pub mod cli;
@@ -72,6 +77,7 @@ pub mod matching;
 pub mod multicore;
 pub mod persist;
 pub mod runtime;
+pub mod sanitize;
 pub mod seq;
 pub mod util;
 

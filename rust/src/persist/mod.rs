@@ -62,6 +62,7 @@ pub use recover::{apply_update_frame, FrameStep, GraphRecovery, RecoveredGraph, 
 use crate::dynamic::{ApplyReport, DeltaBatch};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::Matching;
+use crate::sanitize::lockorder::{self, LockClass};
 use std::collections::HashMap;
 use std::fs;
 use std::io;
@@ -155,11 +156,11 @@ impl Persistence {
     /// fresh `LOAD`. Lock order: a store *entry* mutex, when held, is
     /// always taken before this lock (UPDATE's WAL append, eviction's
     /// snapshot, SAVE); this lock is never held while acquiring an entry
-    /// mutex.
+    /// mutex. Debug builds enforce exactly that through
+    /// [`crate::sanitize::lockorder`] (`Entry → Name`, with the lock
+    /// table itself a leaf).
     pub fn name_lock(&self, name: &str) -> Arc<Mutex<()>> {
-        self.name_locks
-            .lock()
-            .unwrap()
+        lockorder::lock(LockClass::NameTable, &self.name_locks)
             .entry(name.to_string())
             .or_default()
             .clone()
@@ -175,7 +176,7 @@ impl Persistence {
     /// concurrently held handle (strong count > 1) keeps the entry —
     /// removal then would let two threads hold "the" name lock at once.
     pub fn release_name_lock_if_unused(&self, name: &str) {
-        let mut locks = self.name_locks.lock().unwrap();
+        let mut locks = lockorder::lock(LockClass::NameTable, &self.name_locks);
         if locks.get(name).is_some_and(|l| Arc::strong_count(l) == 1) {
             locks.remove(name);
         }
@@ -243,7 +244,7 @@ impl Persistence {
     /// whose frames replay filters out by incarnation.
     pub fn record_load(&self, name: &str, g: &BipartiteCsr, version_base: u64) -> io::Result<()> {
         let guard = self.lock_for(name);
-        let _g = guard.lock().unwrap();
+        let _g = lockorder::lock(LockClass::Name, &guard);
         self.record_load_locked(name, g, version_base)
     }
 
@@ -273,7 +274,7 @@ impl Persistence {
         report: &ApplyReport,
     ) -> io::Result<()> {
         let guard = self.lock_for(name);
-        let _g = guard.lock().unwrap();
+        let _g = lockorder::lock(LockClass::Name, &guard);
         wal::append(&self.wal_path(name), &update_record(version_after, report))
     }
 
@@ -308,7 +309,7 @@ impl Persistence {
         matching: Option<&Matching>,
     ) -> io::Result<()> {
         let guard = self.lock_for(name);
-        let _g = guard.lock().unwrap();
+        let _g = lockorder::lock(LockClass::Name, &guard);
         snapshot::write_snapshot(&self.snap_path(name, version), version, g, matching)?;
         self.prune_snapshots_locked(name, version);
         wal::truncate(&self.wal_path(name))
@@ -353,7 +354,7 @@ impl Persistence {
     /// lock. Returns whether any on-disk state existed.
     pub fn record_drop(&self, name: &str, version: Option<u64>) -> io::Result<bool> {
         let guard = self.lock_for(name);
-        let _g = guard.lock().unwrap();
+        let _g = lockorder::lock(LockClass::Name, &guard);
         if !self.has_state_locked(name) {
             return Ok(false);
         }
@@ -370,7 +371,7 @@ impl Persistence {
     /// when no snapshot survives to anchor the replay.
     pub fn recover_graph(&self, name: &str) -> io::Result<Option<recover::RecoveredGraph>> {
         let guard = self.lock_for(name);
-        let _g = guard.lock().unwrap();
+        let _g = lockorder::lock(LockClass::Name, &guard);
         recover::recover_graph(self, name)
     }
 

@@ -45,6 +45,7 @@
 //! the stream *and fences itself* (writes rejected) so it cannot
 //! split-brain.
 
+use crate::sanitize::lockorder::{self, LockClass};
 use std::fs::{self, File};
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -287,21 +288,21 @@ impl Hub {
     }
 
     pub fn subscriber_count(&self) -> usize {
-        self.state.lock().unwrap().subs.len()
+        lockorder::lock(LockClass::Hub, &self.state).subs.len()
     }
 
     /// Last published sequence number ("frames shipped", for LAG).
     pub fn last_seq(&self) -> u64 {
-        self.state.lock().unwrap().last_seq
+        lockorder::lock(LockClass::Hub, &self.state).last_seq
     }
 
     pub fn max_acked(&self) -> u64 {
-        self.state.lock().unwrap().max_acked
+        lockorder::lock(LockClass::Hub, &self.state).max_acked
     }
 
     /// Published-but-unacked event count.
     pub fn lag(&self) -> u64 {
-        let st = self.state.lock().unwrap();
+        let st = lockorder::lock(LockClass::Hub, &self.state);
         st.last_seq.saturating_sub(st.max_acked)
     }
 
@@ -312,7 +313,7 @@ impl Hub {
     /// baseline might not cover.
     pub fn subscribe(&self) -> (u64, u64, mpsc::Receiver<String>) {
         let (tx, rx) = mpsc::channel();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lockorder::lock(LockClass::Hub, &self.state);
         st.next_sub_id += 1;
         let id = st.next_sub_id;
         st.subs.push(Subscriber { id, tx });
@@ -320,7 +321,7 @@ impl Hub {
     }
 
     pub fn unsubscribe(&self, id: u64) {
-        self.state.lock().unwrap().subs.retain(|s| s.id != id);
+        lockorder::lock(LockClass::Hub, &self.state).subs.retain(|s| s.id != id);
     }
 
     /// Publish one event to every live follower; returns its seq. The
@@ -328,7 +329,7 @@ impl Hub {
     /// entry mutex for updates, the name lock for load/drop), so per-
     /// graph sequence order matches commit order.
     pub fn publish(&self, kind: EventKind, name: &str, data: Vec<u8>) -> u64 {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lockorder::lock(LockClass::Hub, &self.state);
         st.last_seq += 1;
         let seq = st.last_seq;
         let line = format!(
@@ -341,7 +342,7 @@ impl Hub {
 
     /// Record a follower acknowledgement.
     pub fn ack(&self, seq: u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lockorder::lock(LockClass::Hub, &self.state);
         if seq > st.max_acked {
             st.max_acked = seq;
         }
@@ -353,6 +354,10 @@ impl Hub {
     /// `false` on timeout.
     pub fn wait_acked(&self, seq: u64, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
+        // the condvar wait consumes the raw guard, so the watchdog token
+        // is held standalone for the whole wait (reacquisitions after a
+        // wakeup are the same class at the same site — no new edges)
+        let _token = lockorder::acquire(LockClass::Hub);
         let mut st = self.state.lock().unwrap();
         while st.max_acked < seq {
             let now = Instant::now();

@@ -1,0 +1,426 @@
+//! Offline WAL/snapshot integrity checker — the static half of the
+//! durability story.
+//!
+//! `bimatch fsck --data-dir <path>` walks a data directory the way crash
+//! recovery would ([`crate::persist::recover`]) but **read-only**: it
+//! never completes interrupted drops, never prunes, never rewrites.
+//! For every graph name with on-disk state it verifies:
+//!
+//! * snapshot integrity — magic, checksum, and that the version encoded
+//!   *inside* each `.snap` file matches the version in its filename;
+//! * WAL frame checksums — a torn final frame (the crash signature) is
+//!   *repairable* (recovery drops it and keeps the consistent prefix),
+//!   anything else failing mid-log is not;
+//! * incarnation scoping and version monotonicity — update frames from
+//!   the anchor snapshot's incarnation must extend the version chain
+//!   with no gaps, and each frame is re-applied to a scratch graph and
+//!   cross-checked against its logged [`crate::dynamic::ApplyReport`]
+//!   (the same [`crate::persist::apply_update_frame`] kernel recovery
+//!   and replication use);
+//! * snapshot↔WAL consistency — a WAL that cannot be anchored by any
+//!   valid snapshot is unrecoverable and fatal.
+//!
+//! Findings are graded [`Severity::Info`] (harmless, e.g. stale frames
+//! an incarnation switch obsoleted), [`Severity::Repairable`] (recovery
+//! handles it: torn tail, pending drop, superseded snapshots), or
+//! [`Severity::Fatal`] (acknowledged state would be lost: missing
+//! anchor, version gap, report mismatch, corrupt newest snapshot).
+
+use crate::dynamic::{ApplyReport, DeltaBatch, DynamicGraph};
+use crate::persist::{recover, snapshot, wal, FrameStep, Persistence};
+use std::io;
+use std::path::Path;
+use std::sync::Arc;
+
+/// How bad one finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// expected/benign state worth surfacing
+    Info,
+    /// recovery (or the next snapshot) resolves this without data loss
+    Repairable,
+    /// recovery would lose acknowledged state, or cannot run at all
+    Fatal,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Repairable => "repairable",
+            Severity::Fatal => "FATAL",
+        }
+    }
+}
+
+/// One integrity finding for one graph.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub graph: String,
+    pub severity: Severity,
+    pub message: String,
+}
+
+/// Everything `fsck` found across a data dir.
+#[derive(Debug, Clone, Default)]
+pub struct FsckReport {
+    /// graph names examined (any on-disk state)
+    pub graphs: Vec<String>,
+    pub findings: Vec<Finding>,
+}
+
+impl FsckReport {
+    pub fn fatal_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Fatal).count()
+    }
+
+    pub fn repairable_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Repairable).count()
+    }
+
+    fn push(&mut self, graph: &str, severity: Severity, message: String) {
+        self.findings.push(Finding { graph: graph.to_string(), severity, message });
+    }
+}
+
+/// Check every graph in `dir`. Errors only on I/O failures scanning the
+/// directory itself; per-graph problems become findings.
+pub fn fsck_dir(dir: &Path) -> io::Result<FsckReport> {
+    if !dir.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("data dir {} does not exist", dir.display()),
+        ));
+    }
+    let p = Persistence::open(dir)?;
+    let mut report = FsckReport::default();
+    for name in p.graph_names()? {
+        fsck_graph(&p, &name, &mut report)?;
+        report.graphs.push(name);
+    }
+    Ok(report)
+}
+
+fn fsck_graph(p: &Persistence, name: &str, out: &mut FsckReport) -> io::Result<()> {
+    // --- snapshots: newest-first, exactly the order recovery anchors in
+    let snaps = p.snapshots_of(name);
+    let mut anchor: Option<snapshot::Snapshot> = None;
+    for (file_version, path) in &snaps {
+        match snapshot::read_snapshot(path)? {
+            Some(s) => {
+                if s.version != *file_version {
+                    out.push(
+                        name,
+                        Severity::Fatal,
+                        format!(
+                            "snapshot {} declares version {} inside but {} in its filename",
+                            path.display(),
+                            s.version,
+                            file_version
+                        ),
+                    );
+                }
+                if anchor.is_none() {
+                    anchor = Some(s);
+                } else {
+                    out.push(
+                        name,
+                        Severity::Repairable,
+                        format!(
+                            "superseded snapshot v{file_version} still present \
+                             (pruned by the next snapshot)"
+                        ),
+                    );
+                }
+            }
+            None if anchor.is_none() => {
+                out.push(
+                    name,
+                    Severity::Fatal,
+                    format!(
+                        "newest snapshot {} fails its checksum — recovery falls back \
+                         past it and may lose acknowledged state",
+                        path.display()
+                    ),
+                );
+            }
+            None => out.push(
+                name,
+                Severity::Repairable,
+                format!(
+                    "superseded snapshot {} fails its checksum (a newer valid \
+                     snapshot anchors recovery)",
+                    path.display()
+                ),
+            ),
+        }
+    }
+
+    // --- WAL: checksummed frame prefix + torn-tail detection
+    let (records, torn) = wal::read_wal(&p.wal_path(name))?;
+    if torn {
+        out.push(
+            name,
+            Severity::Repairable,
+            "WAL ends in a torn/corrupt frame — recovery keeps the consistent prefix \
+             and drops the tail"
+                .to_string(),
+        );
+    }
+
+    let Some(snap) = anchor else {
+        // no anchor: a bare own-incarnation DROP marker is a drop that
+        // recovery completes; anything else with state on disk is lost
+        let only_drop = !records.is_empty()
+            && records.iter().all(|r| matches!(r, wal::WalRecord::Drop { .. }));
+        if only_drop && snaps.is_empty() {
+            out.push(
+                name,
+                Severity::Repairable,
+                "interrupted DROP: marker present, file deletion pending \
+                 (recovery completes it)"
+                    .to_string(),
+            );
+        } else if !records.is_empty() || !snaps.is_empty() {
+            out.push(
+                name,
+                Severity::Fatal,
+                "unrecoverable: on-disk state exists but no valid snapshot anchors \
+                 the WAL replay"
+                    .to_string(),
+            );
+        }
+        return Ok(());
+    };
+
+    // --- replay walk: the same incarnation scoping / gap / report
+    // cross-check as recovery, on a scratch graph (read-only on disk)
+    let incarnation = snap.version >> 32;
+    let floor = snap.version;
+    let mut dg = DynamicGraph::from_arc(Arc::new(snap.graph)).with_version_base(floor);
+    let mut skipped_stale = 0usize;
+    let mut replayed = 0usize;
+    for rec in records {
+        match rec {
+            wal::WalRecord::Load { version_base } => {
+                if version_base >> 32 != incarnation {
+                    skipped_stale += 1;
+                }
+            }
+            wal::WalRecord::Drop { version } => {
+                if version >> 32 == incarnation {
+                    out.push(
+                        name,
+                        Severity::Repairable,
+                        format!(
+                            "DROP marker (v{version}) pending: recovery completes the \
+                             interrupted file deletion"
+                        ),
+                    );
+                    return Ok(());
+                }
+                skipped_stale += 1;
+            }
+            wal::WalRecord::Update { version_after, batch_wire, report_wire } => {
+                if version_after >> 32 != incarnation || version_after <= floor {
+                    skipped_stale += 1;
+                    continue;
+                }
+                if version_after != dg.version() + 1 {
+                    out.push(
+                        name,
+                        Severity::Fatal,
+                        format!(
+                            "version gap: frame v{version_after} does not extend \
+                             v{} — acknowledged updates in the gap are lost",
+                            dg.version()
+                        ),
+                    );
+                    return Ok(());
+                }
+                if DeltaBatch::parse_wire(&batch_wire).is_err()
+                    || ApplyReport::parse_wire(&report_wire).is_err()
+                {
+                    out.push(
+                        name,
+                        Severity::Fatal,
+                        format!(
+                            "frame v{version_after} passes its checksum but its \
+                             batch/report wire does not parse — replay halts here"
+                        ),
+                    );
+                    return Ok(());
+                }
+                match recover::apply_update_frame(
+                    &mut dg,
+                    incarnation,
+                    floor,
+                    version_after,
+                    &batch_wire,
+                    &report_wire,
+                ) {
+                    FrameStep::Applied(_) => replayed += 1,
+                    FrameStep::Skipped => skipped_stale += 1,
+                    FrameStep::Halt => {
+                        out.push(
+                            name,
+                            Severity::Fatal,
+                            format!(
+                                "frame v{version_after} does not reproduce its logged \
+                                 apply report — replay halts at v{}",
+                                dg.version()
+                            ),
+                        );
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+    if skipped_stale > 0 {
+        out.push(
+            name,
+            Severity::Info,
+            format!(
+                "{skipped_stale} stale frame(s) from another incarnation or at/below \
+                 the snapshot version (skipped by replay, removed at next compaction)"
+            ),
+        );
+    }
+    out.push(
+        name,
+        Severity::Info,
+        format!(
+            "anchor snapshot v{floor} (incarnation {incarnation}) + {replayed} \
+             replayable frame(s) → recovers at v{}",
+            dg.version()
+        ),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use std::path::PathBuf;
+
+    fn dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_fsck_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn seeded(tag: &str) -> (Persistence, PathBuf, DynamicGraph) {
+        let d = dir(tag);
+        let p = Persistence::open(&d).unwrap();
+        let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2)]);
+        let base = 4u64 << 32;
+        p.record_load("g", &g, base).unwrap();
+        let mut dg = DynamicGraph::new(g).with_version_base(base);
+        for batch in [
+            DeltaBatch::new().insert(0, 1),
+            DeltaBatch::new().insert(1, 2).delete(2, 2),
+        ] {
+            let rep = dg.apply(&batch);
+            p.append_update("g", dg.version(), &rep).unwrap();
+        }
+        (p, d, dg)
+    }
+
+    #[test]
+    fn clean_dir_has_no_repairable_or_fatal_findings() {
+        let (_p, d, dg) = seeded("clean");
+        let report = fsck_dir(&d).unwrap();
+        assert_eq!(report.graphs, vec!["g".to_string()]);
+        assert_eq!(report.fatal_count(), 0, "{:?}", report.findings);
+        assert_eq!(report.repairable_count(), 0, "{:?}", report.findings);
+        let anchor_line = report
+            .findings
+            .iter()
+            .find(|f| f.message.contains("recovers at"))
+            .expect("summary finding");
+        assert!(anchor_line.message.contains(&format!("v{}", dg.version())));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_tail_is_repairable_not_fatal() {
+        let (p, d, _dg) = seeded("torn");
+        let wal_path = p.wal_path("g");
+        let bytes = std::fs::read(&wal_path).unwrap();
+        std::fs::write(&wal_path, &bytes[..bytes.len() - 3]).unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert_eq!(report.fatal_count(), 0, "{:?}", report.findings);
+        assert!(report.repairable_count() >= 1);
+        assert!(report.findings.iter().any(|f| f.message.contains("torn")));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_only_snapshot_is_fatal() {
+        let (p, d, _dg) = seeded("rot");
+        let (_, snap_path) = p.snapshots_of("g").into_iter().next().unwrap();
+        let mut bytes = std::fs::read(&snap_path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&snap_path, &bytes).unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert!(report.fatal_count() >= 1, "{:?}", report.findings);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn version_gap_is_fatal() {
+        let (p, d, mut dg) = seeded("gap");
+        // forge a frame two versions ahead: a hole in the chain
+        let rep = dg.apply(&DeltaBatch::new().insert(2, 0));
+        wal::append(
+            &p.wal_path("g"),
+            &crate::persist::update_record(dg.version() + 1, &rep),
+        )
+        .unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert!(report.fatal_count() >= 1, "{:?}", report.findings);
+        assert!(report.findings.iter().any(|f| f.message.contains("version gap")));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn pending_drop_marker_is_repairable_and_fsck_stays_read_only() {
+        let (p, d, dg) = seeded("pend");
+        wal::append(&p.wal_path("g"), &wal::WalRecord::Drop { version: dg.version() })
+            .unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert_eq!(report.fatal_count(), 0, "{:?}", report.findings);
+        assert!(report.findings.iter().any(|f| f.message.contains("DROP marker")));
+        // read-only: unlike recovery, fsck must NOT complete the deletion
+        assert!(p.wal_path("g").exists());
+        assert!(!p.snapshots_of("g").is_empty());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn stale_incarnation_frames_are_info_only() {
+        let (p, d, _dg) = seeded("stale");
+        // a re-LOAD's snapshot landed but the old WAL survived the crash
+        let g1 = from_edges(2, 2, &[(0, 1)]);
+        snapshot::write_snapshot(&p.snap_path("g", 9 << 32), 9 << 32, &g1, None).unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert_eq!(report.fatal_count(), 0, "{:?}", report.findings);
+        assert!(report.findings.iter().any(|f| {
+            f.severity == Severity::Info && f.message.contains("stale frame")
+        }));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(fsck_dir(Path::new("/no/such/bimatch-dir")).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Lock-order watchdog: a debug-build global acquisition graph that
+//! panics on the first cycle.
+//!
+//! PRs 4–6 stacked several lock families whose ordering discipline was
+//! previously enforced only by comments. The watchdog makes the
+//! documented partial order machine-checked: every instrumented lock
+//! site records, for each lock class already held by the thread, a
+//! `held → acquiring` edge in a process-global graph; if inserting an
+//! edge would close a cycle, the acquisition panics immediately with
+//! both directions' source locations — turning a potential deadlock
+//! (which needs an unlucky interleaving to bite) into a deterministic
+//! test failure on *any* thread that merely attempts the inversion.
+//!
+//! ## The documented order
+//!
+//! ```text
+//! Entry  →  Name  →  Recency  →  StoreMap
+//!   \______↘  ↓  ↘_____↘
+//!          NameTable,  Hub        (leaves: nothing acquired under them)
+//! ```
+//!
+//! * [`LockClass::Entry`] — a graph's `Mutex<StoreEntry>`
+//!   (`coordinator/store.rs`); outermost: UPDATE/DROP/SAVE/eviction hold
+//!   it across WAL appends, snapshots, replication publishes, and map
+//!   surgery.
+//! * [`LockClass::Name`] — a persistence per-name lock
+//!   (`persist/mod.rs`), serializing disk state transitions for one
+//!   graph name; acquired under `Entry` (DROP, eviction) and over the
+//!   store/recency maps (LOAD installs, reloads).
+//! * [`LockClass::Recency`] — the store's LRU recency list; acquired
+//!   under `Entry`/`Name` and over `StoreMap` (`lru_victim` scans the
+//!   recency order, then peeks the map).
+//! * [`LockClass::StoreMap`] — the name → entry map itself; innermost.
+//! * [`LockClass::NameTable`] — the table handing out per-name lock
+//!   handles; a leaf held only for the handle lookup.
+//! * [`LockClass::Hub`] — the replication hub's state; a leaf
+//!   (publishes happen under `Entry`/`Name`, nothing locks under it).
+//!
+//! Same-class edges are not recorded: no code path holds two locks of
+//! one class at once (entries are processed one at a time everywhere),
+//! and intra-class ordering would need instance identities, not classes.
+//!
+//! In release builds every hook compiles to nothing: [`acquire`] returns
+//! a zero-sized token and [`lock`] is exactly `Mutex::lock().unwrap()`.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// The instrumented lock classes. `TestA`/`TestB` exist solely for the
+/// watchdog's own negative tests, so a manufactured inversion cannot
+/// poison the real classes' edge set for the rest of the process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LockClass {
+    /// per-graph `Mutex<StoreEntry>` in the coordinator store
+    Entry,
+    /// per-name persistence lock (disk-state transitions)
+    Name,
+    /// the table that hands out per-name lock handles
+    NameTable,
+    /// the store's LRU recency list
+    Recency,
+    /// the store's name → entry map
+    StoreMap,
+    /// the replication hub state
+    Hub,
+    /// watchdog negative tests only
+    TestA,
+    /// watchdog negative tests only
+    TestB,
+}
+
+#[cfg(debug_assertions)]
+mod imp {
+    use super::LockClass;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::panic::Location;
+    use std::sync::Mutex;
+
+    thread_local! {
+        static HELD: RefCell<Vec<LockClass>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// held → acquiring edges, with the site that first recorded each.
+    static EDGES: Mutex<Option<HashMap<(LockClass, LockClass), &'static Location<'static>>>> =
+        Mutex::new(None);
+
+    fn reachable(
+        edges: &HashMap<(LockClass, LockClass), &'static Location<'static>>,
+        from: LockClass,
+        to: LockClass,
+        seen: &mut Vec<LockClass>,
+    ) -> bool {
+        for &(a, b) in edges.keys() {
+            if a != from || seen.contains(&b) {
+                continue;
+            }
+            if b == to {
+                return true;
+            }
+            seen.push(b);
+            if reachable(edges, b, to, seen) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is there a `from ⇝ to` path? Returns the location of the first
+    /// edge out of `from` on such a path, for the diagnostic. The graph
+    /// has ≤ 8 nodes, so the recursive DFS is trivially bounded.
+    fn path_exists(
+        edges: &HashMap<(LockClass, LockClass), &'static Location<'static>>,
+        from: LockClass,
+        to: LockClass,
+    ) -> Option<&'static Location<'static>> {
+        for (&(a, b), &loc) in edges.iter() {
+            if a != from {
+                continue;
+            }
+            if b == to || reachable(edges, b, to, &mut vec![from, b]) {
+                return Some(loc);
+            }
+        }
+        None
+    }
+
+    /// Must-not-drop token for one acquisition (debug builds).
+    #[derive(Debug)]
+    pub struct LockToken {
+        class: LockClass,
+    }
+
+    pub fn acquire(class: LockClass, loc: &'static Location<'static>) -> LockToken {
+        HELD.with(|h| {
+            let held = h.borrow();
+            if !held.is_empty() {
+                let mut edges = EDGES.lock().unwrap();
+                let edges = edges.get_or_insert_with(HashMap::new);
+                for &held_class in held.iter() {
+                    if held_class == class || edges.contains_key(&(held_class, class)) {
+                        continue;
+                    }
+                    if let Some(rev) = path_exists(edges, class, held_class) {
+                        panic!(
+                            "lock-order violation: acquiring {class:?} at {loc} while \
+                             holding {held_class:?}, but the reverse order \
+                             {class:?} → … → {held_class:?} was already observed \
+                             (first hop recorded at {rev})"
+                        );
+                    }
+                    edges.insert((held_class, class), loc);
+                }
+            }
+        });
+        HELD.with(|h| h.borrow_mut().push(class));
+        LockToken { class }
+    }
+
+    impl Drop for LockToken {
+        fn drop(&mut self) {
+            // locks are not always released LIFO (guards get dropped
+            // early by name), so pop the last matching entry by class
+            HELD.with(|h| {
+                let mut held = h.borrow_mut();
+                if let Some(pos) = held.iter().rposition(|&c| c == self.class) {
+                    held.remove(pos);
+                }
+            });
+        }
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod imp {
+    use super::LockClass;
+
+    #[derive(Debug)]
+    pub struct LockToken;
+
+    #[inline(always)]
+    pub fn acquire(_class: LockClass, _loc: &'static std::panic::Location<'static>) -> LockToken {
+        LockToken
+    }
+}
+
+pub use imp::LockToken;
+
+/// Record an acquisition of `class` by this thread (debug builds; a
+/// no-op token in release). Hold the returned token for exactly as long
+/// as the lock guard lives — prefer [`lock`], which ties the two
+/// lifetimes together so an early `drop(guard)` can never leave a stale
+/// token manufacturing false edges.
+#[track_caller]
+pub fn acquire(class: LockClass) -> LockToken {
+    imp::acquire(class, std::panic::Location::caller())
+}
+
+/// A `MutexGuard` paired with its watchdog token: drops both together.
+#[derive(Debug)]
+pub struct Tracked<'a, T> {
+    guard: MutexGuard<'a, T>,
+    _token: LockToken,
+}
+
+impl<T> std::ops::Deref for Tracked<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for Tracked<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// `m.lock().unwrap()` with the acquisition recorded under `class`.
+/// Panics on a poisoned mutex exactly like the bare `.unwrap()` did, and
+/// compiles to exactly that in release builds.
+#[track_caller]
+pub fn lock<'a, T>(class: LockClass, m: &'a Mutex<T>) -> Tracked<'a, T> {
+    let token = imp::acquire(class, std::panic::Location::caller());
+    Tracked { guard: m.lock().unwrap(), _token: token }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consistent_nesting_is_quiet() {
+        let a = Mutex::new(1);
+        let b = Mutex::new(2);
+        for _ in 0..3 {
+            let ga = lock(LockClass::Entry, &a);
+            let gb = lock(LockClass::StoreMap, &b);
+            assert_eq!(*ga + *gb, 3);
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn early_guard_drop_releases_the_token() {
+        // drop(entry) mid-scope, then take a lock that would invert the
+        // order *if* the token were stale — it must stay quiet
+        let a = Mutex::new(());
+        let b = Mutex::new(());
+        {
+            let ga = lock(LockClass::TestB, &a);
+            drop(ga);
+            // TestB no longer held: no TestB → TestA edge is recorded
+            let _gb = lock(LockClass::TestA, &b);
+        }
+        {
+            // so the reverse nesting later is not a cycle either way
+            let _ga = lock(LockClass::TestA, &a);
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Opt-in correctness analyzers for the simulated device and the
+//! serving stack. Three tools, all zero-cost when disabled:
+//!
+//! * [`race`] — a TSan-style **device race sanitizer** for the modeled
+//!   GPU. Deveci, Kaya, Uçar & Çatalyürek build their fastest BFS
+//!   kernels (GPUBFS-WR, and the `L_false` alternate/fix phases) by
+//!   *deleting* atomics from the inner loops: multiple modeled threads
+//!   may write the same `bfs`/`preced` cell in one launch, and
+//!   correctness rests on the argument that every interleaving of those
+//!   benign races still yields a maximal matching — only the
+//!   augmenting-path *claims* need CAS. That argument is easy to state
+//!   and easy to silently break in a refactor. Under `BIMATCH_SANITIZE=1`
+//!   every [`crate::util::pool::SharedSlice`] and
+//!   [`crate::util::pool::AtomicCells`] access inside a parallel launch
+//!   is logged into per-launch shadow state, and launch teardown flags
+//!   any same-cell conflict between distinct modeled threads that did
+//!   not go through the atomic substrate — so a kernel that *means* to
+//!   race must do so through `AtomicCells`, where the race is sanctioned
+//!   and the cost model can see it. The same pass cross-checks cycle
+//!   accounting: a kernel that performs an atomic RMW without charging
+//!   `CAS_COST` is undercharging the paper-table cycle counts and gets
+//!   flagged too.
+//! * [`lockorder`] — a debug-build **lock-order watchdog** over the
+//!   serving stack's lock families (store map, per-graph entry locks,
+//!   per-name persistence locks, replication hub). It records the
+//!   acquisition graph at runtime and panics on the first cycle, turning
+//!   latent deadlocks into deterministic test failures.
+//! * [`fsck`] — an offline **WAL/snapshot integrity checker** behind
+//!   `bimatch fsck --data-dir`, replaying durability state read-only and
+//!   grading findings repairable vs fatal.
+//!
+//! The sanitizer and watchdog are wired through `gpu/device.rs` launch
+//! executors, `util/pool.rs` accessors, and the coordinator/persist lock
+//! sites; with `BIMATCH_SANITIZE` unset and in release builds every hook
+//! folds to a relaxed atomic load (race) or nothing at all (lockorder).
+
+pub mod fsck;
+pub mod lockorder;
+pub mod race;

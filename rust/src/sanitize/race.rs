@@ -1,0 +1,530 @@
+//! Device race sanitizer: TSan-style shadow logging for the modeled GPU.
+//!
+//! The paper's fastest kernels are *deliberately* racy — GPUBFS/GPUBFS-WR
+//! claim BFS levels and endpoint rows through compare-and-swap, and the
+//! correctness argument is that **any** interleaving of CAS claims still
+//! yields a maximal matching (FIXMATCHING plus the driver's safety net
+//! absorb every arbitration). That argument only covers accesses that go
+//! through the atomic substrate: a same-cell conflict between *plain*
+//! (non-atomic) accesses from two modeled threads is a bug in the kernel,
+//! full stop — on real hardware it is an undefined-behaviour data race,
+//! and on the host-parallel simulator it is one too (the
+//! [`crate::util::pool::SharedSlice`] escape hatch has no synchronization).
+//!
+//! This module checks that boundary. When enabled (`BIMATCH_SANITIZE=1`
+//! or a test-scoped [`ScopedEnable`]), every `SharedSlice::set/get/get_mut`
+//! and every [`crate::util::pool::AtomicCells`] operation executed inside
+//! a parallel launch is recorded as `(modeled item, cell, access kind)`
+//! into per-launch shadow state; at launch end [`LaunchShadow::finish`]
+//! flags any same-cell pair from *distinct modeled items* where at least
+//! one side is a write and the two sides did not both go through the
+//! atomic substrate. Atomic-vs-atomic conflicts (CAS claims, the racy
+//! GPUBFS-WR endpoint store) are the paper's sanctioned races and pass.
+//!
+//! Two extra checks ride along:
+//! * **Lane domain** — per-host-thread output buffers (the frontier
+//!   kernels' `FrontierBufs`) are written via
+//!   `SharedSlice::get_lane_mut`, which logs under the *host lane* id
+//!   instead of the modeled item: many items on one lane legitimately
+//!   share the slot, but two lanes touching the same slot is a bug.
+//! * **Cost cross-check** — every shadow-logged atomic RMW (cas/swap)
+//!   must be matched by a `CAS_COST` charge in the launch's per-item work
+//!   record, so an undercharged kernel (atomics the modeled clock never
+//!   saw) fails loudly instead of quietly flattering the paper tables.
+//!
+//! Everything here is zero-cost when disabled: the hooks are a single
+//! relaxed atomic load, no shadow state is allocated, and launches carry
+//! no guard objects.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, Once};
+
+/// Number of active enable sources: the `BIMATCH_SANITIZE=1` environment
+/// contributes one (folded in once by [`init_env`]), and each live
+/// [`ScopedEnable`] contributes one.
+static ACTIVE: AtomicU32 = AtomicU32::new(0);
+static ENV_INIT: Once = Once::new();
+
+fn init_env() {
+    ENV_INIT.call_once(|| {
+        let on = std::env::var("BIMATCH_SANITIZE").map(|v| v == "1").unwrap_or(false);
+        if on {
+            ACTIVE.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+}
+
+/// The fast-path gate the access hooks check: one relaxed load. `true`
+/// only after [`init_env`] ran (any launch scope or [`ScopedEnable`]
+/// does) or a [`ScopedEnable`] is live — before that, hooks are no-ops,
+/// which is fine because no shadow state exists to record into either.
+#[inline(always)]
+fn armed() -> bool {
+    ACTIVE.load(Ordering::Relaxed) != 0
+}
+
+/// Whether the sanitizer is enabled for launches started now.
+pub fn enabled() -> bool {
+    init_env();
+    armed()
+}
+
+/// RAII enable for tests: bumps the global enable count on creation and
+/// drops it on `Drop`, so a test can sanitize its launches without
+/// touching the environment (and without affecting parallel tests, whose
+/// clean kernels simply get checked too).
+#[derive(Debug)]
+pub struct ScopedEnable(());
+
+impl ScopedEnable {
+    pub fn new() -> Self {
+        init_env();
+        ACTIVE.fetch_add(1, Ordering::Relaxed);
+        ScopedEnable(())
+    }
+}
+
+impl Default for ScopedEnable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for ScopedEnable {
+    fn drop(&mut self) {
+        ACTIVE.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// One shadow-logged access kind. `Lane*` kinds live in a separate
+/// conflict domain keyed by host-thread lane instead of modeled item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// `SharedSlice::get` — plain read
+    NaRead,
+    /// `SharedSlice::set` / `get_mut` — plain write
+    NaWrite,
+    /// `SharedSlice::get_lane_mut` — plain write keyed by host lane
+    LaneWrite,
+    /// `AtomicCells::load`
+    AtomicRead,
+    /// `AtomicCells::store`
+    AtomicWrite,
+    /// `AtomicCells::cas` / `swap` — must be matched by a `CAS_COST` charge
+    AtomicRmw,
+}
+
+#[derive(Clone, Copy)]
+struct Access {
+    cell: usize,
+    /// modeled item index, or host lane for [`AccessKind::LaneWrite`]
+    who: u32,
+    kind: AccessKind,
+}
+
+struct ThreadCtx {
+    shadow: Arc<LaunchShadow>,
+    log: Vec<Access>,
+    item: u32,
+    lane: u32,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+/// Shadow state for one parallel launch. Created by
+/// [`launch_scope`] (when enabled), fed by per-thread guards, and
+/// consumed by [`LaunchShadow::finish`] after the join.
+pub struct LaunchShadow {
+    kernel: &'static str,
+    log: Mutex<Vec<Access>>,
+}
+
+/// Start shadowing a parallel launch of `kernel`. Returns `None` when
+/// the sanitizer is disabled — callers thread the `Option` through so
+/// the disabled path allocates nothing.
+pub fn launch_scope(kernel: &'static str) -> Option<Arc<LaunchShadow>> {
+    if !enabled() {
+        return None;
+    }
+    Some(Arc::new(LaunchShadow { kernel, log: Mutex::new(Vec::new()) }))
+}
+
+/// Flushes this thread's access log into the launch shadow on drop.
+pub struct ThreadGuard(());
+
+impl LaunchShadow {
+    /// Install this launch's shadow on the current worker thread (host
+    /// lane `lane`). The returned guard flushes the thread-local log back
+    /// into the shadow when the worker's chunk is done.
+    pub fn enter(self: &Arc<Self>, lane: u32) -> ThreadGuard {
+        CTX.with(|c| {
+            *c.borrow_mut() = Some(ThreadCtx {
+                shadow: self.clone(),
+                log: Vec::new(),
+                item: u32::MAX,
+                lane,
+            });
+        });
+        ThreadGuard(())
+    }
+}
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        if let Some(ctx) = CTX.with(|c| c.borrow_mut().take()) {
+            ctx.shadow.log.lock().unwrap().extend_from_slice(&ctx.log);
+        }
+    }
+}
+
+/// Tag subsequent accesses on this thread with the modeled item index.
+/// The executors call it right before each body invocation; a no-op
+/// outside an entered launch.
+#[inline]
+pub fn set_item(item: u32) {
+    if !armed() {
+        return;
+    }
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.item = item;
+        }
+    });
+}
+
+/// The access hook `SharedSlice`/`AtomicCells` call. `addr` identifies
+/// the cell (its memory address — launches never alias two live arrays).
+/// No-op unless the sanitizer is armed *and* this thread is inside an
+/// entered launch, so plain host-side uses (serial launches, the
+/// multicore matchers) record nothing.
+#[inline]
+pub fn note(addr: usize, kind: AccessKind) {
+    if !armed() {
+        return;
+    }
+    note_slow(addr, kind);
+}
+
+#[cold]
+fn note_slow(addr: usize, kind: AccessKind) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            let who = if kind == AccessKind::LaneWrite { ctx.lane } else { ctx.item };
+            ctx.log.push(Access { cell: addr, who, kind });
+        }
+    });
+}
+
+/// How [`LaunchShadow::finish`] cross-checks atomic RMW charges against
+/// the cost model.
+pub enum CostCheck<'a> {
+    /// The racy executors' per-item work record: item `i`'s charged units
+    /// are `work[i]`, and must cover `per_rmw` per logged RMW by item `i`.
+    PerItem { work: &'a [u64], per_rmw: u64 },
+    /// A per-item-disjoint launch: its cost formula charges no CAS at
+    /// all, so *any* logged atomic RMW is an undercharge.
+    Disjoint,
+}
+
+/// Up to two distinct ids — enough to answer "two distinct exist" and
+/// "does an id other than `x` exist" exactly (only distinct values fill
+/// the slots, so any qualifying id appears in the first two).
+#[derive(Default, Clone, Copy)]
+struct Items {
+    a: Option<u32>,
+    b: Option<u32>,
+}
+
+impl Items {
+    fn add(&mut self, x: u32) {
+        match (self.a, self.b) {
+            (None, _) => self.a = Some(x),
+            (Some(a), None) if a != x => self.b = Some(x),
+            _ => {}
+        }
+    }
+
+    fn pair(&self) -> Option<(u32, u32)> {
+        match (self.a, self.b) {
+            (Some(a), Some(b)) => Some((a, b)),
+            _ => None,
+        }
+    }
+
+    fn other(&self, x: u32) -> Option<u32> {
+        [self.a, self.b].into_iter().flatten().find(|&v| v != x)
+    }
+
+    fn iter(&self) -> impl Iterator<Item = u32> {
+        [self.a, self.b].into_iter().flatten()
+    }
+}
+
+#[derive(Default, Clone, Copy)]
+struct CellState {
+    na_read: Items,
+    na_write: Items,
+    at_read: Items,
+    at_write: Items,
+    lane_write: Items,
+}
+
+impl LaunchShadow {
+    /// End-of-launch conflict scan + cost cross-check. Panics with the
+    /// kernel name and the offending modeled items on the first launch
+    /// that breaks the contract; `labels` (the frontier worklist, when
+    /// there is one) maps item indices to the column ids shown in the
+    /// diagnostic.
+    pub fn finish(self: Arc<Self>, cost: CostCheck<'_>, labels: Option<&[u32]>) {
+        let log = std::mem::take(&mut *self.log.lock().unwrap());
+        let mut cells: HashMap<usize, CellState> = HashMap::new();
+        let mut rmw_by_item: HashMap<u32, u64> = HashMap::new();
+        for a in &log {
+            let st = cells.entry(a.cell).or_default();
+            match a.kind {
+                AccessKind::NaRead => st.na_read.add(a.who),
+                AccessKind::NaWrite => st.na_write.add(a.who),
+                AccessKind::LaneWrite => st.lane_write.add(a.who),
+                AccessKind::AtomicRead => st.at_read.add(a.who),
+                AccessKind::AtomicWrite => st.at_write.add(a.who),
+                AccessKind::AtomicRmw => {
+                    // an RMW is an atomic read and an atomic write
+                    st.at_read.add(a.who);
+                    st.at_write.add(a.who);
+                    *rmw_by_item.entry(a.who).or_insert(0) += 1;
+                }
+            }
+        }
+
+        let label = |item: u32| -> String {
+            match labels.and_then(|l| l.get(item as usize)) {
+                Some(&col) => format!("item {item} (column {col})"),
+                None => format!("item {item}"),
+            }
+        };
+        let mut races: Vec<String> = Vec::new();
+        for (&cell, st) in &cells {
+            // plain write vs plain write
+            if let Some((x, y)) = st.na_write.pair() {
+                races.push(format!(
+                    "non-atomic write/write on cell {cell:#x} by {} and {}",
+                    label(x),
+                    label(y)
+                ));
+                continue;
+            }
+            // plain write vs anything else from a distinct item: the
+            // other side being atomic does not save it — both sides must
+            // go through the atomic substrate to be a sanctioned race
+            for w in st.na_write.iter() {
+                if let Some(r) = st.na_read.other(w) {
+                    races.push(format!(
+                        "non-atomic write by {} races non-atomic read by {} on cell {cell:#x}",
+                        label(w),
+                        label(r)
+                    ));
+                } else if let Some(r) = st.at_read.other(w) {
+                    races.push(format!(
+                        "non-atomic write by {} races atomic read by {} on cell {cell:#x}",
+                        label(w),
+                        label(r)
+                    ));
+                } else if let Some(r) = st.at_write.other(w) {
+                    races.push(format!(
+                        "non-atomic write by {} races atomic write by {} on cell {cell:#x}",
+                        label(w),
+                        label(r)
+                    ));
+                }
+            }
+            // atomic write vs plain read from a distinct item
+            for w in st.at_write.iter() {
+                if st.na_write.iter().any(|x| x == w) {
+                    continue; // already reported above for this writer
+                }
+                if let Some(r) = st.na_read.other(w) {
+                    races.push(format!(
+                        "atomic write by {} races non-atomic read by {} on cell {cell:#x}",
+                        label(w),
+                        label(r)
+                    ));
+                }
+            }
+            // lane domain: per-host-thread slots shared across lanes
+            if let Some((x, y)) = st.lane_write.pair() {
+                races.push(format!(
+                    "per-lane buffer slot {cell:#x} written by host lanes {x} and {y}"
+                ));
+            }
+        }
+        if !races.is_empty() {
+            races.sort();
+            races.truncate(8);
+            panic!(
+                "device race sanitizer: kernel `{}` has {} conflicting cell(s):\n  {}",
+                self.kernel,
+                races.len(),
+                races.join("\n  ")
+            );
+        }
+
+        // cost cross-check: every logged atomic RMW must be covered by a
+        // CAS_COST charge in the per-item work record
+        match cost {
+            CostCheck::PerItem { work, per_rmw } => {
+                for (&item, &count) in &rmw_by_item {
+                    let charged = work.get(item as usize).copied().unwrap_or(0);
+                    let need = per_rmw * count;
+                    assert!(
+                        charged >= need,
+                        "device race sanitizer: kernel `{}` undercharged {}: \
+                         {count} atomic RMW(s) need >= {need} work units, charged {charged}",
+                        self.kernel,
+                        label(item),
+                    );
+                }
+            }
+            CostCheck::Disjoint => {
+                if let Some((&item, &count)) = rmw_by_item.iter().next() {
+                    panic!(
+                        "device race sanitizer: kernel `{}` ran {count} atomic RMW(s) \
+                         (e.g. by {}) under the per-item-disjoint executor, whose cost \
+                         formula never charges CAS_COST",
+                        self.kernel,
+                        label(item),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_scoped_enable_arms() {
+        // note: other tests in this binary may hold a ScopedEnable
+        // concurrently, so only assert the monotone directions
+        let before = ACTIVE.load(Ordering::Relaxed);
+        let on = ScopedEnable::new();
+        assert!(enabled());
+        assert!(ACTIVE.load(Ordering::Relaxed) > before);
+        drop(on);
+    }
+
+    #[test]
+    fn items_tracker_answers_distinctness_exactly() {
+        let mut it = Items::default();
+        it.add(3);
+        it.add(3);
+        assert_eq!(it.pair(), None);
+        assert_eq!(it.other(3), None);
+        assert_eq!(it.other(9), Some(3));
+        it.add(7);
+        it.add(11); // third distinct id: trackers stay complete for ≠x queries
+        assert_eq!(it.pair(), Some((3, 7)));
+        assert_eq!(it.other(3), Some(7));
+        assert_eq!(it.other(7), Some(3));
+        assert_eq!(it.other(99), Some(3));
+    }
+
+    #[test]
+    fn atomic_only_conflicts_are_sanctioned() {
+        let _on = ScopedEnable::new();
+        let shadow = launch_scope("atomic-ok").expect("enabled");
+        {
+            let _g = shadow.enter(0);
+            set_item(1);
+            note(0x1000, AccessKind::AtomicRmw);
+            note(0x1000, AccessKind::AtomicWrite);
+            set_item(2);
+            note(0x1000, AccessKind::AtomicRmw);
+            note(0x1000, AccessKind::AtomicRead);
+        }
+        // both items charged one CAS each
+        shadow.finish(CostCheck::PerItem { work: &[0, 2, 2], per_rmw: 2 }, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-atomic write/write")]
+    fn plain_write_write_is_flagged() {
+        let _on = ScopedEnable::new();
+        let shadow = launch_scope("ww").expect("enabled");
+        {
+            let _g = shadow.enter(0);
+            set_item(1);
+            note(0x2000, AccessKind::NaWrite);
+            set_item(2);
+            note(0x2000, AccessKind::NaWrite);
+        }
+        shadow.finish(CostCheck::Disjoint, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "races atomic write")]
+    fn mixed_plain_and_atomic_write_is_flagged() {
+        let _on = ScopedEnable::new();
+        let shadow = launch_scope("mixed").expect("enabled");
+        {
+            let _g = shadow.enter(0);
+            set_item(1);
+            note(0x3000, AccessKind::NaWrite);
+            set_item(2);
+            note(0x3000, AccessKind::AtomicWrite);
+        }
+        shadow.finish(CostCheck::Disjoint, None);
+    }
+
+    #[test]
+    fn same_item_reuse_and_lane_slots_are_clean() {
+        let _on = ScopedEnable::new();
+        let shadow = launch_scope("clean").expect("enabled");
+        {
+            let _g = shadow.enter(3);
+            set_item(5);
+            note(0x4000, AccessKind::NaWrite);
+            note(0x4000, AccessKind::NaRead);
+            note(0x5000, AccessKind::LaneWrite);
+            set_item(6);
+            note(0x5000, AccessKind::LaneWrite); // same lane, different item
+        }
+        shadow.finish(CostCheck::Disjoint, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "host lanes")]
+    fn cross_lane_slot_sharing_is_flagged() {
+        let _on = ScopedEnable::new();
+        let shadow = launch_scope("lanes").expect("enabled");
+        {
+            let _g = shadow.enter(0);
+            set_item(1);
+            note(0x6000, AccessKind::LaneWrite);
+        }
+        {
+            let _g = shadow.enter(1);
+            set_item(2);
+            note(0x6000, AccessKind::LaneWrite);
+        }
+        shadow.finish(CostCheck::Disjoint, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "undercharged")]
+    fn uncharged_rmw_is_flagged() {
+        let _on = ScopedEnable::new();
+        let shadow = launch_scope("cheap").expect("enabled");
+        {
+            let _g = shadow.enter(0);
+            set_item(0);
+            note(0x7000, AccessKind::AtomicRmw);
+        }
+        shadow.finish(CostCheck::PerItem { work: &[1], per_rmw: 2 }, None);
+    }
+}

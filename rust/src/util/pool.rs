@@ -18,6 +18,7 @@
 //! across jobs instead of re-allocating them per run (see
 //! `matching::algo::RunCtx`).
 
+use crate::sanitize::race;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -102,9 +103,17 @@ pub struct SharedSlice<'a, T> {
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
-// SAFETY: access is index-disjoint by the `set`/`get` contract below; the
-// wrapper owns the unique borrow of the slice.
+/// # Safety
+/// The wrapper owns the unique borrow of the slice, so moving it to
+/// another thread moves that exclusive access with it; `T: Send` carries
+/// the element-type requirement.
 unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+
+/// # Safety
+/// Shared references only expose the unsafe `set`/`get`/`get_mut`
+/// accessors, whose contracts require callers to keep concurrent
+/// accesses index-disjoint — under that discipline cross-thread sharing
+/// introduces no data race the caller did not already promise away.
 unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
@@ -128,7 +137,10 @@ impl<'a, T> SharedSlice<'a, T> {
     #[inline]
     pub unsafe fn set(&self, i: usize, v: T) {
         debug_assert!(i < self.len);
-        *self.ptr.add(i) = v;
+        race::note(self.ptr.wrapping_add(i) as usize, race::AccessKind::NaWrite);
+        // SAFETY: in-bounds per the contract; exclusivity of index `i`
+        // is the caller's contract above.
+        unsafe { *self.ptr.add(i) = v };
     }
 
     /// Read the value at `i`.
@@ -142,11 +154,14 @@ impl<'a, T> SharedSlice<'a, T> {
         T: Copy,
     {
         debug_assert!(i < self.len);
-        *self.ptr.add(i)
+        race::note(self.ptr.wrapping_add(i) as usize, race::AccessKind::NaRead);
+        // SAFETY: in-bounds per the contract; no concurrent writer per
+        // the caller's contract above.
+        unsafe { *self.ptr.add(i) }
     }
 
-    /// Mutable access to the element at `i` (for per-thread accumulation
-    /// buffers indexed by host-thread id).
+    /// Mutable access to the element at `i`, for *modeled-item-indexed*
+    /// state (each item touches only its own cells).
     ///
     /// # Safety
     /// `i < self.len()`, no other thread may concurrently access index
@@ -156,7 +171,29 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
         debug_assert!(i < self.len);
-        &mut *self.ptr.add(i)
+        race::note(self.ptr.wrapping_add(i) as usize, race::AccessKind::NaWrite);
+        // SAFETY: in-bounds per the contract; exclusivity and borrow
+        // non-overlap are the caller's contract above.
+        unsafe { &mut *self.ptr.add(i) }
+    }
+
+    /// [`SharedSlice::get_mut`] for *host-lane-indexed* state: per-thread
+    /// accumulation buffers where `i` is the worker lane id, so many
+    /// modeled items on one lane legitimately reuse the slot. The race
+    /// sanitizer logs this under the lane (not the current item) and only
+    /// flags the slot if two distinct *lanes* write it.
+    ///
+    /// # Safety
+    /// Same contract as [`SharedSlice::get_mut`]: `i < self.len()`, no
+    /// concurrent access to index `i`, no overlapping borrows.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_lane_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        race::note(self.ptr.wrapping_add(i) as usize, race::AccessKind::LaneWrite);
+        // SAFETY: in-bounds per the contract; exclusivity and borrow
+        // non-overlap are the caller's contract above.
+        unsafe { &mut *self.ptr.add(i) }
     }
 }
 
@@ -195,17 +232,20 @@ impl<'a> AtomicCells<'a> {
 
     #[inline]
     pub fn load(&self, i: usize) -> i32 {
+        race::note(&self.cells[i] as *const AtomicI32 as usize, race::AccessKind::AtomicRead);
         self.cells[i].load(Ordering::Relaxed)
     }
 
     #[inline]
     pub fn store(&self, i: usize, v: i32) {
+        race::note(&self.cells[i] as *const AtomicI32 as usize, race::AccessKind::AtomicWrite);
         self.cells[i].store(v, Ordering::Relaxed)
     }
 
     /// Atomically replace the value at `i`, returning the previous value.
     #[inline]
     pub fn swap(&self, i: usize, v: i32) -> i32 {
+        race::note(&self.cells[i] as *const AtomicI32 as usize, race::AccessKind::AtomicRmw);
         self.cells[i].swap(v, Ordering::Relaxed)
     }
 
@@ -213,6 +253,7 @@ impl<'a> AtomicCells<'a> {
     /// `current`. Returns whether this thread won the claim.
     #[inline]
     pub fn cas(&self, i: usize, current: i32, new: i32) -> bool {
+        race::note(&self.cells[i] as *const AtomicI32 as usize, race::AccessKind::AtomicRmw);
         self.cells[i].compare_exchange(current, new, Ordering::Relaxed, Ordering::Relaxed).is_ok()
     }
 }
