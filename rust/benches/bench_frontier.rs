@@ -1,14 +1,16 @@
-//! Frontier-compaction × execution-mode ablation: {FullScan, Compacted}
-//! × {serial, device-parallel} across every generator family, for the
-//! two headline drivers. FullScan is the paper's all-`nc` kernel launch
-//! (plus ALTERNATE's all-`nr` endpoint scan); Compacted drives both from
-//! worklists; the parallel cells run every kernel on host threads with
-//! the racy ones going through the atomic CAS substrate (CAS charges
-//! included in their modeled time). Reports modeled device time, edges
-//! scanned, the worklist sizes the compacted runs consumed, and
-//! wall-clock — and asserts all four cells reach identical cardinality
-//! on every instance, backing the router's promotion of the "-FC" twin
-//! to default GPU pick.
+//! Frontier-compaction × execution-mode ablation: {FullScan, Compacted,
+//! Adaptive} × {serial, device-parallel} across every generator family,
+//! for the two headline drivers. FullScan is the paper's all-`nc` kernel
+//! launch (plus ALTERNATE's all-`nr` endpoint scan); Compacted drives
+//! both from worklists; Adaptive switches per phase — dense phase-seed
+//! frontiers run FullScan, sparse ones (density below
+//! `1/ADAPTIVE_DENSITY_DIV`) run Compacted; the parallel cells run every
+//! kernel on host threads with the racy ones going through the atomic
+//! CAS substrate (CAS charges included in their modeled time). Reports
+//! modeled device time, edges scanned, the worklist sizes the compacted
+//! runs consumed, and wall-clock — and asserts all cells reach identical
+//! cardinality on every instance, backing the router's promotion of the
+//! "-FC" twin to default GPU pick.
 //!
 //! Run with: `cargo bench --bench bench_frontier` (BIMATCH_SCALE=large
 //! for the bigger catalog sizes, BIMATCH_SMOKE=1 for the CI-sized run).
@@ -76,6 +78,7 @@ fn main() {
         "FS-par ms",
         "FC ms",
         "FC-par ms",
+        "AF ms",
         "FS/FC",
         "edges FS",
         "peak |F|",
@@ -86,6 +89,7 @@ fn main() {
     ]);
     let mut fc_wins = 0usize;
     let mut fc_parallel_wins = 0usize;
+    let mut af_tracks_best = 0usize;
     let mut total = 0usize;
 
     for fam in Family::ALL {
@@ -101,7 +105,8 @@ fn main() {
                 &g,
                 &init,
             );
-            for (mode, r) in [("FS-par", &fsp), ("FC", &fc), ("FC-par", &fcp)] {
+            let af = run_mode(base.adaptive(), &g, &init);
+            for (mode, r) in [("FS-par", &fsp), ("FC", &fc), ("FC-par", &fcp), ("AF", &af)] {
                 assert_eq!(
                     fs.cardinality,
                     r.cardinality,
@@ -115,6 +120,13 @@ fn main() {
             }
             if fc.device_parallel_ms < fs.device_parallel_ms {
                 fc_parallel_wins += 1;
+            }
+            // the adaptive claim: switching per phase should land near
+            // whichever pure mode is cheaper on this instance (10% slack;
+            // the phase trajectories of the pure modes can differ, so
+            // this is a reported tendency, not a hard bound)
+            if af.device_ms <= fs.device_ms.min(fc.device_ms) * 1.10 {
+                af_tracks_best += 1;
             }
             // the acceptance bar for the "-FC" router promotion: on
             // every family where the frontier actually shrinks (average
@@ -140,6 +152,7 @@ fn main() {
                 format!("{:.3}", fsp.device_ms),
                 format!("{:.3}", fc.device_ms),
                 format!("{:.3}", fcp.device_ms),
+                format!("{:.3}", af.device_ms),
                 format!("{:.2}x", fs.device_ms / fc.device_ms.max(1e-9)),
                 fs.edges.to_string(),
                 fc.frontier_peak.to_string(),
@@ -158,10 +171,12 @@ fn main() {
          all cells including the host-parallel (atomic CAS) runs with {PAR_THREADS} threads.\n\
          peak/total |F| and endpts are the worklist sizes the compacted sweeps and the\n\
          compacted ALTERNATE consumed — the full-scan runs paid nc={n}-ish per BFS launch\n\
-         and nr per ALTERNATE regardless.",
+         and nr per ALTERNATE regardless.\n\
+         Adaptive (-AF, FullScan while phase-seed density >= 1/8 of nc, Compacted after)\n\
+         lands within 10% of the cheaper pure mode on {af_tracks_best}/{total} cells.",
     ));
     common::emit(
-        "frontier compaction x execution mode ablation (FullScan/Compacted x serial/parallel)",
+        "frontier compaction x execution mode ablation (FullScan/Compacted/Adaptive x serial/parallel)",
         &body,
     );
 

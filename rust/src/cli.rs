@@ -33,6 +33,7 @@ USAGE:
   bimatch verify --mtx <path>          cross-check several algorithms on a file
   bimatch serve  [--addr <ip:port>] [--data-dir <path>] [--max-graphs <n>]
                 [--replicate-from <ip:port>] [--ack-mode local|quorum]
+                [--snapshot-shards <k>]
                 TCP line-protocol matching service
                 (one-shot MATCH plus the incremental verbs: LOAD name=…
                 installs a graph server-side, UPDATE name=… add=r:c,…
@@ -54,9 +55,13 @@ USAGE:
                 PROMOTE over the wire fails it over (epoch-fencing the
                 old primary). --ack-mode quorum makes the primary hold
                 each write's OK until a follower acked its frame, so a
-                primary crash can never lose an acked update. SIGTERM or
-                SIGINT triggers a graceful stop: in-flight requests
-                drain, WALs fsync, then the process exits)
+                primary crash can never lose an acked update.
+                --snapshot-shards k writes each snapshot as k per-shard
+                files (column-partitioned like shard<k>: execution) under
+                the same per-graph WAL; recovery and fsck read either
+                layout. SIGTERM or SIGINT triggers a graceful stop:
+                in-flight requests drain, WALs fsync, then the process
+                exits)
   bimatch fsck   --data-dir <path>     offline durability check: verifies WAL
                 frame checksums, incarnation monotonicity, and
                 snapshot↔WAL consistency for every graph in the data
@@ -375,11 +380,24 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         },
     };
     let replicate_from = flags.get("replicate-from").cloned();
+    let snapshot_shards = match flags.get("snapshot-shards").map(|v| v.parse::<usize>()) {
+        Some(Ok(0)) => {
+            eprintln!("--snapshot-shards must be at least 1");
+            return 2;
+        }
+        Some(Ok(k)) => k,
+        Some(Err(e)) => {
+            eprintln!("bad --snapshot-shards: {e}");
+            return 2;
+        }
+        None => 1,
+    };
     let durable = data_dir.is_some();
     let mut cfg = ServerCfg::new(addr);
     cfg.engine = engine_if_available();
     cfg.data_dir = data_dir;
     cfg.max_graphs = max_graphs;
+    cfg.snapshot_shards = snapshot_shards;
     cfg.replicate_from = replicate_from.clone();
     cfg.ack_mode = ack_mode;
     match Server::bind_cfg(cfg) {

@@ -312,6 +312,9 @@ impl Executor {
             frontier_peak: 0,
             endpoints_total: 0,
             device_parallel_cycles: 0,
+            shards: 0,
+            exchange_words: 0,
+            exchange_steps: 0,
             update: None,
             error: None,
         }
@@ -472,6 +475,9 @@ impl Executor {
         out.frontier_peak = result.stats.frontier_peak;
         out.endpoints_total = result.stats.endpoints_total;
         out.device_parallel_cycles = result.stats.device_parallel_cycles;
+        out.shards = result.stats.shards;
+        out.exchange_words = result.stats.exchange_words;
+        out.exchange_steps = result.stats.exchange_steps;
 
         match result.outcome {
             RunOutcome::Complete => {}
@@ -718,7 +724,10 @@ impl Executor {
         // build); for the rest the probe is a Box of a unit struct.
         let spec = self.resolve_spec(job, &e.graph.snapshot());
         out.algo = spec.to_string();
-        if !matches!(spec, super::spec::AlgoSpec::Gpu(_))
+        if !matches!(
+            spec,
+            super::spec::AlgoSpec::Gpu(_) | super::spec::AlgoSpec::Sharded { .. }
+        )
             && registry::build(&spec, self.engine.clone()).is_none()
         {
             self.fail(&mut out, JobError::Unavailable(registry::unavailable_msg(&spec)));
@@ -786,6 +795,9 @@ impl Executor {
         out.frontier_peak = result.stats.frontier_peak;
         out.endpoints_total = result.stats.endpoints_total;
         out.device_parallel_cycles = result.stats.device_parallel_cycles;
+        out.shards = result.stats.shards;
+        out.exchange_words = result.stats.exchange_words;
+        out.exchange_steps = result.stats.exchange_steps;
 
         // decide the fate under the entry lock so the rollback can never
         // clobber a concurrent update's work (updates to one graph

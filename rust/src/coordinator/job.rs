@@ -251,6 +251,12 @@ pub struct MatchOutcome {
     pub endpoints_total: u64,
     /// parallel-model device cycles (0 for CPU algorithms)
     pub device_parallel_cycles: u64,
+    /// simulated devices the run executed on (0 unless sharded)
+    pub shards: u64,
+    /// 32-bit words routed over the modeled interconnect (0 unless sharded)
+    pub exchange_words: u64,
+    /// frontier-exchange steps that moved traffic (0 unless sharded)
+    pub exchange_steps: u64,
     /// present exactly for [`JobOp::Update`] jobs
     pub update: Option<UpdateStats>,
     pub error: Option<JobError>,

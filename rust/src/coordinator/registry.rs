@@ -29,6 +29,15 @@ pub fn all_specs() -> Vec<AlgoSpec> {
     specs.extend(XlaKind::ALL.into_iter().map(AlgoSpec::Xla));
     // the eight paper variants plus their frontier-compacted "-FC" twins
     specs.extend(GpuConfig::all_variants_with_frontier().into_iter().map(AlgoSpec::Gpu));
+    // sharded execution of the router's default GPU pick (the compacted
+    // paper winner) at the bench ablation's shard counts; other K and
+    // inner variants parse fine (`shard<K>:gpu:<variant>`) without being
+    // registered
+    specs.extend(
+        [2usize, 4, 8]
+            .into_iter()
+            .map(|shards| AlgoSpec::Sharded { inner: GpuConfig::default().compacted(), shards }),
+    );
     specs
 }
 
@@ -56,6 +65,9 @@ pub fn build(spec: &AlgoSpec, engine: Option<Arc<Engine>>) -> Option<Box<dyn Mat
             }
         }
         AlgoSpec::Gpu(cfg) => Box::new(GpuMatcher::new(cfg)),
+        AlgoSpec::Sharded { inner, shards } => {
+            Box::new(crate::shard::ShardedGpuMatcher::new(inner, shards))
+        }
         AlgoSpec::Xla(XlaKind::ApfbFull) => {
             Box::new(crate::gpu::xla_backend::XlaApfbMatcher::new(engine?))
         }
@@ -122,6 +134,21 @@ mod tests {
         assert_eq!(names.iter().filter(|n| n.starts_with("gpu:")).count(), 16);
         let a = build_named("gpu:APFB-GPUBFS-WR-CT-FC", None).unwrap();
         assert_eq!(a.name(), "gpu:APFB-GPUBFS-WR-CT-FC");
+    }
+
+    #[test]
+    fn sharded_variants_registered_and_buildable() {
+        let names = all_names();
+        for k in [2, 4, 8] {
+            let name = format!("shard{k}:gpu:APFB-GPUBFS-WR-CT-FC");
+            assert!(names.contains(&name), "{name} must be registered");
+            let a = build_named(&name, None).unwrap();
+            assert_eq!(a.name(), name);
+        }
+        assert_eq!(names.iter().filter(|n| n.starts_with("shard")).count(), 3);
+        // unregistered shard counts / inner variants still build by name
+        let a = build_named("shard3:gpu:APsB-GPUBFS-CT", None).unwrap();
+        assert_eq!(a.name(), "shard3:gpu:APsB-GPUBFS-CT");
     }
 
     #[test]

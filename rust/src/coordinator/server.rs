@@ -76,13 +76,16 @@
 //! Replies:
 //! `OK id=<id> algo=<name> nr=.. nc=.. edges=.. card=.. certified=0|1
 //!  phases=.. t_load=.. t_match=.. frontier_peak=.. endpoints=..
-//!  devpar_cycles=..`
+//!  devpar_cycles=.. shards=.. exchange_words=.. exchange_steps=..`
 //! or `ERR <message>`. `phases=` exposes `RunStats::phases` so clients
 //! (and the failover chaos test) can verify a warm start beat a cold
-//! recompute. The last three OK fields expose the frontier-compaction
-//! counters (`RunStats::{frontier_peak, endpoints_total,
-//! device_parallel_cycles}`); all three are 0 for CPU algorithms and for
-//! FullScan GPU runs. `LOAD`/`DROP`/`SAVE` reply
+//! recompute. `frontier_peak=`/`endpoints=`/`devpar_cycles=` expose the
+//! frontier-compaction counters (`RunStats::{frontier_peak,
+//! endpoints_total, device_parallel_cycles}`); all three are 0 for CPU
+//! algorithms and for FullScan GPU runs. `shards=`/`exchange_words=`/
+//! `exchange_steps=` expose the sharded-execution counters
+//! (`RunStats::{shards, exchange_words, exchange_steps}`); all three are
+//! 0 unless the run used a `shard<K>:gpu:…` algorithm. `LOAD`/`DROP`/`SAVE` reply
 //! `OK id=<id> name=<graph> nr=.. nc=.. edges=..` /
 //! `OK id=<id> name=<graph> dropped=1` /
 //! `OK id=<id> name=<graph> saved=1`; `UPDATE` appends
@@ -130,6 +133,9 @@ pub struct ServerCfg {
     pub idle_timeout: Duration,
     /// reject (and close) a connection that ships a longer request line
     pub max_line_len: usize,
+    /// write snapshots as per-shard file sets of this size (1 = single
+    /// file per snapshot); see `crate::persist::Persistence::set_snapshot_shards`
+    pub snapshot_shards: usize,
 }
 
 impl ServerCfg {
@@ -144,6 +150,7 @@ impl ServerCfg {
             ack_timeout: None,
             idle_timeout: Duration::from_secs(120),
             max_line_len: 16 << 20,
+            snapshot_shards: 1,
         }
     }
 }
@@ -189,8 +196,9 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)?;
         let mut executor = Executor::new(cfg.engine, Arc::new(Metrics::new()));
         if let Some(dir) = &cfg.data_dir {
-            executor = executor
-                .with_persistence(Arc::new(crate::persist::Persistence::open(dir)?));
+            let p = crate::persist::Persistence::open(dir)?;
+            p.set_snapshot_shards(cfg.snapshot_shards);
+            executor = executor.with_persistence(Arc::new(p));
         }
         if let Some(max) = cfg.max_graphs {
             executor = executor.with_max_graphs(max);
@@ -549,7 +557,7 @@ fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
             let mut s = format!(
                 "OK id={} algo={} nr={} nc={} edges={} card={} certified={} \
                  phases={} t_load={:.6} t_match={:.6} frontier_peak={} endpoints={} \
-                 devpar_cycles={}",
+                 devpar_cycles={} shards={} exchange_words={} exchange_steps={}",
                 o.job_id,
                 o.algo,
                 o.nr,
@@ -562,7 +570,10 @@ fn render_ok(job: &MatchJob, o: &MatchOutcome) -> String {
                 o.t_match,
                 o.frontier_peak,
                 o.endpoints_total,
-                o.device_parallel_cycles
+                o.device_parallel_cycles,
+                o.shards,
+                o.exchange_words,
+                o.exchange_steps
             );
             if let (JobOp::Update { name, .. }, Some(u)) = (&job.op, &o.update) {
                 s.push_str(&format!(
@@ -759,11 +770,40 @@ mod tests {
         // test compares warm vs cold through it)
         assert!(reply.contains(" phases="), "{reply}");
         assert!(field("phases=") > 0, "{reply}");
+        // an unsharded run reports shards=0 and no exchange traffic
+        assert!(reply.contains(" shards=0"), "{reply}");
+        assert!(reply.contains(" exchange_words=0"), "{reply}");
+        assert!(reply.contains(" exchange_steps=0"), "{reply}");
         // a CPU run reports zeros for all three
         let reply = roundtrip(addr, "MATCH family=uniform n=200 seed=1 algo=hk");
         assert!(reply.contains("frontier_peak=0"), "{reply}");
         assert!(reply.contains("endpoints=0"), "{reply}");
         assert!(reply.contains("devpar_cycles=0"), "{reply}");
+        assert!(reply.contains("shards=0"), "{reply}");
+    }
+
+    #[test]
+    fn ok_reply_exposes_sharded_counters() {
+        let (addr, _stop) = start_server();
+        let reply = roundtrip(
+            addr,
+            "MATCH family=uniform n=1200 seed=5 algo=shard4:gpu:APFB-GPUBFS-WR-CT-FC",
+        );
+        assert!(reply.starts_with("OK "), "{reply}");
+        assert!(reply.contains("algo=shard4:gpu:APFB-GPUBFS-WR-CT-FC"), "{reply}");
+        let field = |name: &str| -> u64 {
+            reply
+                .split_whitespace()
+                .find_map(|kv| kv.strip_prefix(name))
+                .unwrap_or_else(|| panic!("{name} missing in {reply}"))
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(field("shards="), 4, "{reply}");
+        assert!(field("exchange_steps=") > 0, "{reply}");
+        let words = field("exchange_words=");
+        assert!(words > 0, "{reply}");
+        assert_eq!(words % crate::gpu::device::EXCHANGE_WORDS_PER_ITEM, 0, "{reply}");
     }
 
     #[test]

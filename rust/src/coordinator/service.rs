@@ -30,6 +30,9 @@ pub struct ServiceConfig {
     /// start in read-replica mode: every write verb (LOAD/UPDATE/DROP/
     /// SAVE) fails with `JobError::ReadOnly` while MATCH keeps serving
     pub read_only: bool,
+    /// write snapshots as per-shard file sets of this size (1 = single
+    /// file); recovery reads either layout regardless
+    pub snapshot_shards: usize,
 }
 
 impl ServiceConfig {
@@ -41,6 +44,7 @@ impl ServiceConfig {
             data_dir: None,
             max_graphs: None,
             read_only: false,
+            snapshot_shards: 1,
         }
     }
 
@@ -61,6 +65,11 @@ impl ServiceConfig {
 
     pub fn read_only(mut self, read_only: bool) -> Self {
         self.read_only = read_only;
+        self
+    }
+
+    pub fn snapshot_shards(mut self, shards: usize) -> Self {
+        self.snapshot_shards = shards.max(1);
         self
     }
 }
@@ -99,7 +108,9 @@ impl Service {
         let metrics = Arc::new(Metrics::new());
         let mut executor = Executor::new(cfg.engine, metrics.clone());
         if let Some(dir) = &cfg.data_dir {
-            executor = executor.with_persistence(Arc::new(Persistence::open(dir)?));
+            let p = Persistence::open(dir)?;
+            p.set_snapshot_shards(cfg.snapshot_shards);
+            executor = executor.with_persistence(Arc::new(p));
         }
         if let Some(max) = cfg.max_graphs {
             executor = executor.with_max_graphs(max);

@@ -104,15 +104,21 @@ pub enum AlgoSpec {
     /// machine's available parallelism), resolved at build time.
     Multicore { kind: MulticoreKind, threads: Option<usize> },
     Gpu(GpuConfig),
+    /// A GPU variant executed across `shards` simulated devices with the
+    /// modeled interconnect (`crate::shard`); wire format
+    /// `shard{K}:gpu:{variant}` with `K >= 1`.
+    Sharded { inner: GpuConfig, shards: usize },
     Xla(XlaKind),
 }
 
 impl AlgoSpec {
     /// The typed replacement for the old "-FC"-suffix string surgery:
-    /// set the frontier mode of a GPU spec; a no-op on CPU/XLA specs.
+    /// set the frontier mode of a GPU (or sharded-GPU) spec; a no-op on
+    /// CPU/XLA specs.
     pub fn set_frontier(&mut self, mode: FrontierMode) {
-        if let AlgoSpec::Gpu(cfg) = self {
-            cfg.frontier = mode;
+        match self {
+            AlgoSpec::Gpu(cfg) | AlgoSpec::Sharded { inner: cfg, .. } => cfg.frontier = mode,
+            _ => {}
         }
     }
 
@@ -122,8 +128,11 @@ impl AlgoSpec {
         self
     }
 
+    /// True for specs that execute on the simulated device — plain GPU
+    /// variants and their sharded wrappers — i.e. the specs whose
+    /// frontier mode [`AlgoSpec::set_frontier`] can edit.
     pub fn is_gpu(&self) -> bool {
-        matches!(self, AlgoSpec::Gpu(_))
+        matches!(self, AlgoSpec::Gpu(_) | AlgoSpec::Sharded { .. })
     }
 
     pub fn is_xla(&self) -> bool {
@@ -138,6 +147,7 @@ impl fmt::Display for AlgoSpec {
             AlgoSpec::Multicore { kind, threads: None } => f.write_str(kind.name()),
             AlgoSpec::Multicore { kind, threads: Some(n) } => write!(f, "{}@{n}", kind.name()),
             AlgoSpec::Gpu(cfg) => write!(f, "gpu:{}", cfg.name()),
+            AlgoSpec::Sharded { inner, shards } => write!(f, "shard{shards}:gpu:{}", inner.name()),
             AlgoSpec::Xla(k) => write!(f, "xla:{}", k.name()),
         }
     }
@@ -154,6 +164,29 @@ impl FromStr for AlgoSpec {
         if let Some(v) = s.strip_prefix("gpu:") {
             return GpuConfig::from_name(v)
                 .map(AlgoSpec::Gpu)
+                .ok_or_else(|| format!("unknown gpu variant {v:?} (see `bimatch algos`)"));
+        }
+        if let Some(rest) = s.strip_prefix("shard") {
+            // shard{K}:gpu:{variant} — K >= 1, inner spec must be a gpu
+            // variant (sharding CPU/XLA matchers is not a thing)
+            let (count, inner) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("expected shard<K>:gpu:<variant>, got {s:?}"))?;
+            let shards: usize = count
+                .parse()
+                .map_err(|_| format!("bad shard count {count:?} in {s:?}"))?;
+            if shards == 0 {
+                return Err(format!("shard count must be >= 1 in {s:?}"));
+            }
+            if inner == "gpu" {
+                // same alias as the unsharded "gpu": the paper's winner
+                return Ok(AlgoSpec::Sharded { inner: GpuConfig::default(), shards });
+            }
+            let v = inner.strip_prefix("gpu:").ok_or_else(|| {
+                format!("sharded execution wraps gpu variants only (shard<K>:gpu:<variant>), got {s:?}")
+            })?;
+            return GpuConfig::from_name(v)
+                .map(|cfg| AlgoSpec::Sharded { inner: cfg, shards })
                 .ok_or_else(|| format!("unknown gpu variant {v:?} (see `bimatch algos`)"));
         }
         if let Some(v) = s.strip_prefix("xla:") {
@@ -216,6 +249,11 @@ mod tests {
             }
         }
         specs.extend(GpuConfig::all_variants_with_frontier().into_iter().map(AlgoSpec::Gpu));
+        for inner in GpuConfig::all_variants_with_frontier() {
+            for shards in [1usize, 2, 3, 4, 8, 17] {
+                specs.push(AlgoSpec::Sharded { inner, shards });
+            }
+        }
         specs.extend(XlaKind::ALL.into_iter().map(AlgoSpec::Xla));
         assert!(specs.len() > 30);
         for spec in specs {
@@ -243,6 +281,14 @@ mod tests {
             "p-hk@-3",
             "hk@4",
             "p-nope@4",
+            "shard",
+            "shard4",
+            "shard0:gpu:APFB-GPUBFS-WR-CT",
+            "shardx:gpu:APFB-GPUBFS-WR-CT",
+            "shard4:hk",
+            "shard4:xla:apfb-full",
+            "shard4:gpu:NOPE",
+            "shard4:",
         ] {
             assert!(bad.parse::<AlgoSpec>().is_err(), "{bad:?} must be rejected");
         }
@@ -277,5 +323,26 @@ mod tests {
         assert_eq!(cpu.to_string(), "pfp");
         assert!(!cpu.is_gpu());
         assert!("xla:apfb-full".parse::<AlgoSpec>().unwrap().is_xla());
+        // the edit reaches through a sharded wrapper to its inner config
+        let mut sharded: AlgoSpec = "shard4:gpu:APFB-GPUBFS-WR-CT".parse().unwrap();
+        sharded.set_frontier(FrontierMode::Compacted);
+        assert_eq!(sharded.to_string(), "shard4:gpu:APFB-GPUBFS-WR-CT-FC");
+    }
+
+    #[test]
+    fn sharded_specs_parse_and_roundtrip() {
+        let spec: AlgoSpec = "shard4:gpu:APFB-GPUBFS-WR-CT-FC".parse().unwrap();
+        let AlgoSpec::Sharded { inner, shards } = spec else {
+            panic!("expected a sharded spec, got {spec:?}");
+        };
+        assert_eq!(shards, 4);
+        assert_eq!(inner.name(), "APFB-GPUBFS-WR-CT-FC");
+        assert_eq!(spec.to_string(), "shard4:gpu:APFB-GPUBFS-WR-CT-FC");
+        // the bare-gpu alias works under sharding too
+        let alias: AlgoSpec = "shard2:gpu".parse().unwrap();
+        assert_eq!(alias, AlgoSpec::Sharded { inner: crate::gpu::GpuConfig::default(), shards: 2 });
+        assert_eq!(alias.to_string(), "shard2:gpu:APFB-GPUBFS-WR-CT");
+        // shard1 is legal: the degenerate single-device run
+        assert!("shard1:gpu".parse::<AlgoSpec>().is_ok());
     }
 }

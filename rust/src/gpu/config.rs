@@ -84,13 +84,27 @@ pub enum FrontierMode {
     /// Worklist-driven: launches cover only the live frontier, which each
     /// sweep compacts for the next level.
     Compacted,
+    /// Per-phase switching: early phases (dense frontiers, where the
+    /// worklist machinery only adds compaction overhead) run FullScan;
+    /// once the phase-seed frontier density — unmatched columns over `nc`,
+    /// the lower bound of what `RunStats::frontier_peak` would record —
+    /// drops below `1/ADAPTIVE_DENSITY_DIV`, later phases run Compacted
+    /// (sparse late frontiers are exactly where the `O(nc)` scan floor
+    /// hurts). Ablated in `bench_frontier`.
+    Adaptive,
 }
+
+/// [`FrontierMode::Adaptive`] switch threshold: a phase runs Compacted
+/// when `unmatched_columns * ADAPTIVE_DENSITY_DIV < nc` (frontier density
+/// below 1/8), FullScan otherwise.
+pub const ADAPTIVE_DENSITY_DIV: usize = 8;
 
 impl FrontierMode {
     pub fn name(&self) -> &'static str {
         match self {
             FrontierMode::FullScan => "fullscan",
             FrontierMode::Compacted => "compacted",
+            FrontierMode::Adaptive => "adaptive",
         }
     }
 
@@ -98,6 +112,7 @@ impl FrontierMode {
         match s {
             "fullscan" | "full" => Some(FrontierMode::FullScan),
             "compacted" | "frontier" => Some(FrontierMode::Compacted),
+            "adaptive" | "auto" => Some(FrontierMode::Adaptive),
             _ => None,
         }
     }
@@ -173,6 +188,11 @@ impl GpuConfig {
         GpuConfig { frontier: FrontierMode::Compacted, ..self }
     }
 
+    /// This configuration with per-phase adaptive frontier switching.
+    pub fn adaptive(self) -> GpuConfig {
+        GpuConfig { frontier: FrontierMode::Adaptive, ..self }
+    }
+
     /// Effective host-thread count for the simulator's kernels (disjoint
     /// *and* racy — see `device_parallelism`): an explicit
     /// `device_parallelism > 1` wins; otherwise the `BIMATCH_DEVICE_PAR`
@@ -211,15 +231,20 @@ impl GpuConfig {
             match self.frontier {
                 FrontierMode::FullScan => "",
                 FrontierMode::Compacted => "-FC",
+                FrontierMode::Adaptive => "-AF",
             }
         )
     }
 
-    /// Parse "APFB-GPUBFS-WR-CT"-style names (with optional "-FC" suffix):
-    /// the exact inverse of [`GpuConfig::name`], resolved against the 16
-    /// registered variants — no suffix surgery.
+    /// Parse "APFB-GPUBFS-WR-CT"-style names (with optional "-FC"/"-AF"
+    /// suffix): the exact inverse of [`GpuConfig::name`], resolved against
+    /// the 16 registered variants plus the eight adaptive twins — no
+    /// suffix surgery.
     pub fn from_name(s: &str) -> Option<GpuConfig> {
-        GpuConfig::all_variants_with_frontier().into_iter().find(|c| c.name() == s)
+        GpuConfig::all_variants_with_frontier()
+            .into_iter()
+            .chain(GpuConfig::all_variants().into_iter().map(GpuConfig::adaptive))
+            .find(|c| c.name() == s)
     }
 }
 
@@ -264,12 +289,28 @@ mod tests {
 
     #[test]
     fn frontier_mode_names() {
-        for m in [FrontierMode::FullScan, FrontierMode::Compacted] {
+        for m in [FrontierMode::FullScan, FrontierMode::Compacted, FrontierMode::Adaptive] {
             assert_eq!(FrontierMode::from_name(m.name()), Some(m));
         }
         assert_eq!(FrontierMode::from_name("frontier"), Some(FrontierMode::Compacted));
+        assert_eq!(FrontierMode::from_name("auto"), Some(FrontierMode::Adaptive));
         assert_eq!(FrontierMode::from_name("nope"), None);
         assert_eq!(FrontierMode::default(), FrontierMode::FullScan);
+    }
+
+    #[test]
+    fn adaptive_variants_roundtrip_but_stay_out_of_the_registry_set() {
+        let c = GpuConfig::default().adaptive();
+        assert_eq!(c.name(), "APFB-GPUBFS-WR-CT-AF");
+        assert_eq!(GpuConfig::from_name("APFB-GPUBFS-WR-CT-AF"), Some(c));
+        for base in GpuConfig::all_variants() {
+            let a = base.adaptive();
+            assert_eq!(GpuConfig::from_name(&a.name()), Some(a));
+        }
+        // the 16 registered variants are fullscan/compacted only
+        assert!(GpuConfig::all_variants_with_frontier()
+            .iter()
+            .all(|c| c.frontier != FrontierMode::Adaptive));
     }
 
     #[test]

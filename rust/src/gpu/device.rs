@@ -79,6 +79,22 @@ pub const COMPACTION_COST: u64 = 1;
 pub const CAS_COST: u64 = 2;
 /// concurrent warp slots the parallel model assumes (14 SMs × 4 effective)
 pub const PARALLEL_WARPS: u64 = 56;
+/// Per-message latency of the modeled inter-device link (sharded
+/// execution, `crate::shard`): the fixed cost of moving *any* batch from
+/// one device to another — DMA setup + link round-trip, the PCIe/NVLink
+/// analogue of [`LAUNCH_OVERHEAD`]. One message is charged per (source
+/// shard → destination shard) pair that exchanges a non-empty batch in an
+/// exchange step.
+pub const EXCHANGE_MSG_COST: u64 = 500;
+/// Per-word transfer cost of the modeled interconnect: one 32-bit word
+/// moved across the link. Sized relative to [`EDGE_COST`] so the ratio of
+/// on-device work to cross-device traffic — not an absolute bandwidth —
+/// drives the sharding figures.
+pub const EXCHANGE_WORD_COST: u64 = 1;
+/// Words per routed frontier item: the `(row, column)` endpoint pair a
+/// cross-shard frontier append ships. Partitioner invariant tests tie the
+/// boundary-edge count to `exchange_words / EXCHANGE_WORDS_PER_ITEM`.
+pub const EXCHANGE_WORDS_PER_ITEM: u64 = 2;
 
 impl DeviceClock {
     pub fn charge_launch(&mut self) {
@@ -101,6 +117,121 @@ impl DeviceClock {
     /// Parallel-model "device milliseconds" (1 GHz nominal clock).
     pub fn as_parallel_ms(&self) -> f64 {
         self.parallel_cycles as f64 / 1e6
+    }
+}
+
+/// Per-shard cycle accounting for sharded execution (`crate::shard`): one
+/// [`DeviceClock`] per simulated device plus the interconnect tallies.
+///
+/// The execution model is bulk-synchronous: every shard runs its kernel
+/// launches against its own clock, then an exchange step routes
+/// cross-shard frontier traffic and a [`ShardClocks::barrier`] advances
+/// every shard's *parallel* view to the slowest shard — so after the
+/// final barrier the makespan ([`ShardClocks::makespan`]'s
+/// `parallel_cycles`) is what one run costs in wall-clock on K devices
+/// running concurrently. The *serial* view keeps each shard's own
+/// accumulation and reads as **total work across all devices** (sum), so
+/// `cycles` stays the work metric it is for one device — a K=1 sharded
+/// run bills exactly what the unsharded driver bills.
+///
+/// Exchange charging follows a per-link bottleneck model: within one
+/// exchange step every source shard drives its own link concurrently, so
+/// the step's parallel cost is the *max* over source shards of
+/// `msgs·EXCHANGE_MSG_COST + words·EXCHANGE_WORD_COST`, while the serial
+/// view accumulates the full sum (all traffic through one link).
+#[derive(Debug, Clone, Default)]
+pub struct ShardClocks {
+    clocks: Vec<DeviceClock>,
+    /// serial-view exchange bill: the sum over all links of all steps
+    exchange_serial_cycles: u64,
+    /// total 32-bit words moved across the modeled interconnect
+    pub exchange_words: u64,
+    /// exchange steps executed (one per BFS level with cross-shard
+    /// traffic, plus endpoint gathers / replicated broadcasts)
+    pub exchange_steps: u64,
+    /// point-to-point messages (non-empty source→dest batches)
+    pub exchange_msgs: u64,
+}
+
+impl ShardClocks {
+    pub fn new(shards: usize) -> Self {
+        Self { clocks: vec![DeviceClock::default(); shards.max(1)], ..Self::default() }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn clock_mut(&mut self, shard: usize) -> &mut DeviceClock {
+        &mut self.clocks[shard]
+    }
+
+    /// BSP barrier: advance every shard's parallel view to the slowest
+    /// shard (idle devices wait; their serial work totals are untouched).
+    pub fn barrier(&mut self) {
+        let max_par = self.clocks.iter().map(|c| c.parallel_cycles).max().unwrap_or(0);
+        for c in &mut self.clocks {
+            c.parallel_cycles = max_par;
+        }
+    }
+
+    /// Charge one exchange step. `per_source` holds, for each source
+    /// shard, the `(messages, words)` it pushed onto its link this step.
+    /// Parallel view: every clock advances by the bottleneck link's cost
+    /// (sources drive their links concurrently; all shards wait out the
+    /// slowest link before the next level). Serial view: the full sum,
+    /// accumulated separately so [`ShardClocks::makespan`] adds it to the
+    /// total exactly once. No-traffic steps charge nothing and don't
+    /// count as a step.
+    pub fn charge_exchange(&mut self, per_source: &[(u64, u64)]) {
+        let mut sum = 0u64;
+        let mut bottleneck = 0u64;
+        let mut msgs = 0u64;
+        let mut words = 0u64;
+        for &(m, w) in per_source {
+            let link = m * EXCHANGE_MSG_COST + w * EXCHANGE_WORD_COST;
+            sum += link;
+            bottleneck = bottleneck.max(link);
+            msgs += m;
+            words += w;
+        }
+        if sum == 0 {
+            return;
+        }
+        self.exchange_steps += 1;
+        self.exchange_msgs += msgs;
+        self.exchange_words += words;
+        self.exchange_serial_cycles += sum;
+        for c in &mut self.clocks {
+            c.parallel_cycles += bottleneck;
+        }
+    }
+
+    /// Charge work every shard performs identically (replicated phases:
+    /// INITBFSARRAY, ALTERNATE, FIXMATCHING run mirrored on all devices
+    /// over the replicated row arrays): each clock advances by the same
+    /// delta — the makespan gains one copy (all devices do it
+    /// concurrently), the total-work view gains K copies (each device
+    /// really does it).
+    pub fn charge_replicated(&mut self, delta: &DeviceClock) {
+        for c in &mut self.clocks {
+            c.cycles += delta.cycles;
+            c.parallel_cycles += delta.parallel_cycles;
+            c.launches += delta.launches;
+        }
+    }
+
+    /// The run's combined bill: `parallel_cycles` is the BSP makespan (max
+    /// over shards — call after the final [`ShardClocks::barrier`]),
+    /// `cycles` the total work across all devices plus the full serial
+    /// exchange bill, `launches` the total kernel launches issued.
+    pub fn makespan(&self) -> DeviceClock {
+        DeviceClock {
+            cycles: self.clocks.iter().map(|c| c.cycles).sum::<u64>()
+                + self.exchange_serial_cycles,
+            parallel_cycles: self.clocks.iter().map(|c| c.parallel_cycles).max().unwrap_or(0),
+            launches: self.clocks.iter().map(|c| c.launches).sum(),
+        }
     }
 }
 
@@ -816,6 +947,76 @@ mod tests {
         launch_frontier(&mut launched, ThreadMapping::Ct, WriteOrder::Forward, 0, &items, |_| 0);
         assert_eq!(scan.cycles, launched.cycles);
         assert_eq!(scan.parallel_cycles, launched.parallel_cycles);
+    }
+
+    #[test]
+    fn shard_clocks_barrier_advances_parallel_to_slowest() {
+        let mut sc = ShardClocks::new(3);
+        sc.clock_mut(0).cycles = 100;
+        sc.clock_mut(0).parallel_cycles = 10;
+        sc.clock_mut(2).cycles = 250;
+        sc.clock_mut(2).parallel_cycles = 40;
+        sc.barrier();
+        for s in 0..3 {
+            assert_eq!(sc.clock_mut(s).parallel_cycles, 40, "idle shards wait out the slowest");
+        }
+        // serial view is total work: barriers never inflate it
+        assert_eq!(sc.clock_mut(0).cycles, 100);
+        assert_eq!(sc.makespan().cycles, 350);
+        assert_eq!(sc.makespan().parallel_cycles, 40);
+    }
+
+    #[test]
+    fn charge_exchange_bottleneck_vs_sum() {
+        let mut sc = ShardClocks::new(2);
+        // shard 0 ships 1 msg / 10 words, shard 1 ships 2 msgs / 4 words
+        sc.charge_exchange(&[(1, 10), (2, 4)]);
+        let link0 = EXCHANGE_MSG_COST + 10 * EXCHANGE_WORD_COST;
+        let link1 = 2 * EXCHANGE_MSG_COST + 4 * EXCHANGE_WORD_COST;
+        let m = sc.makespan();
+        // parallel view: the slower link bounds the step
+        assert_eq!(m.parallel_cycles, link0.max(link1));
+        // serial view: all traffic through one link
+        assert_eq!(m.cycles, link0 + link1);
+        assert_eq!(sc.exchange_steps, 1);
+        assert_eq!(sc.exchange_msgs, 3);
+        assert_eq!(sc.exchange_words, 14);
+        // a traffic-free exchange is free and uncounted
+        sc.charge_exchange(&[(0, 0), (0, 0)]);
+        assert_eq!(sc.exchange_steps, 1);
+        assert_eq!(sc.makespan(), m);
+    }
+
+    #[test]
+    fn charge_replicated_bills_one_makespan_copy_and_k_work_copies() {
+        let mut sc = ShardClocks::new(4);
+        let delta = DeviceClock { cycles: 7, parallel_cycles: 3, launches: 1 };
+        sc.charge_replicated(&delta);
+        sc.charge_replicated(&delta);
+        for s in 0..4 {
+            assert_eq!(
+                *sc.clock_mut(s),
+                DeviceClock { cycles: 14, parallel_cycles: 6, launches: 2 }
+            );
+        }
+        let m = sc.makespan();
+        // makespan: one copy (all devices mirror it concurrently);
+        // total work: K copies (each device really does it)
+        assert_eq!(m.parallel_cycles, 6);
+        assert_eq!(m.cycles, 4 * 14);
+        assert_eq!(m.launches, 8);
+    }
+
+    #[test]
+    fn single_shard_clocks_degenerate_to_one_device() {
+        let mut sc = ShardClocks::new(1);
+        let mut plain = DeviceClock::default();
+        launch(&mut plain, ThreadMapping::Ct, WriteOrder::Forward, 0, 500, |_| 1);
+        launch(sc.clock_mut(0), ThreadMapping::Ct, WriteOrder::Forward, 0, 500, |_| 1);
+        sc.barrier();
+        assert_eq!(sc.makespan().cycles, plain.cycles);
+        assert_eq!(sc.makespan().parallel_cycles, plain.parallel_cycles);
+        assert_eq!(sc.exchange_words, 0);
     }
 
     #[test]

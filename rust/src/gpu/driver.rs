@@ -95,7 +95,9 @@ impl GpuMatcher {
         // the APsB-GPUBFS-WR improvement (endpoint encoding + restricted
         // ALTERNATE) — the paper enables it only for that combination
         let improved_wr = with_root && self.config.driver == ApDriver::Apsb;
-        let compacted = self.config.frontier == FrontierMode::Compacted;
+        // Adaptive leases the worklists up front (its late phases compact)
+        // and decides FullScan vs Compacted per phase below.
+        let uses_worklists = self.config.frontier != FrontierMode::FullScan;
 
         let mut state = GpuState::new_in(g, &init, ctx.pool());
         let mut clock = DeviceClock::default();
@@ -108,7 +110,7 @@ impl GpuMatcher {
         // flagged `-2` that the compacted ALTERNATE consumes — by nr), and
         // keep FullScan runs off the pool entirely so they neither pop
         // shelved buffers they never push to nor inflate reuses()
-        let (mut frontier, mut next_frontier, mut endpoints) = if compacted {
+        let (mut frontier, mut next_frontier, mut endpoints) = if uses_worklists {
             (
                 ctx.lease_worklist_u32(g.nc),
                 ctx.lease_worklist_u32(g.nc),
@@ -131,6 +133,18 @@ impl GpuMatcher {
             // ---- one phase: combined BFS over all unmatched columns, or
             // over the repair seed set on the first phase of a seeded run
             let seeded_phase = pending_seeds.is_some();
+            // per-phase frontier mode: Adaptive starts FullScan while the
+            // phase-seed frontier (the unmatched columns) is dense and
+            // flips to Compacted once its density drops below the
+            // threshold — dense phases skip the compaction overhead,
+            // sparse phases skip the O(nc)/O(nr) scan floors
+            let compacted = match self.config.frontier {
+                FrontierMode::FullScan => false,
+                FrontierMode::Compacted => true,
+                FrontierMode::Adaptive => {
+                    (g.nc - cardinality) * super::config::ADAPTIVE_DENSITY_DIV < g.nc
+                }
+            };
             if let Some(s) = pending_seeds.take() {
                 init_bfs_array_seeded(
                     &mut state,
@@ -263,7 +277,7 @@ impl GpuMatcher {
 
         ctx.stats.device_cycles += clock.cycles;
         ctx.stats.device_parallel_cycles += clock.parallel_cycles;
-        if compacted {
+        if uses_worklists {
             ctx.give_u32(frontier);
             ctx.give_u32(next_frontier);
             ctx.give_u32(endpoints);
@@ -296,9 +310,10 @@ impl MatchingAlgorithm for GpuMatcher {
     }
 }
 
-/// Host-side single BFS augmentation used only by the no-progress safety
-/// net. Finds and flips one shortest augmenting path.
-fn augment_one_sequential(g: &BipartiteCsr, state: &mut GpuState) -> bool {
+/// Host-side single BFS augmentation used by the no-progress safety net
+/// (this driver's and the sharded driver's, `crate::shard`). Finds and
+/// flips one shortest augmenting path.
+pub(crate) fn augment_one_sequential(g: &BipartiteCsr, state: &mut GpuState) -> bool {
     let nr = state.rmatch.len();
     let nc = state.cmatch.len();
     let mut pred = vec![-1i32; nr];
@@ -536,6 +551,68 @@ mod tests {
             full.stats.device_cycles
         );
         assert!(fc.stats.device_parallel_cycles < full.stats.device_parallel_cycles);
+    }
+
+    #[test]
+    fn adaptive_mode_reaches_reference_on_all_families() {
+        for fam in crate::graph::gen::Family::ALL {
+            let g = fam.generate(400, 13);
+            let want = reference_max_cardinality(&g);
+            for driver in [ApDriver::Apfb, ApDriver::Apsb] {
+                let cfg = GpuConfig { driver, ..Default::default() }.adaptive();
+                let r = GpuMatcher::new(cfg).run_detached(&g, Matching::empty(g.nr, g.nc));
+                r.matching
+                    .certify(&g)
+                    .unwrap_or_else(|e| panic!("{} on {}: {e}", cfg.name(), fam.name()));
+                assert_eq!(r.matching.cardinality(), want, "{} on {}", cfg.name(), fam.name());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_adaptive_matches_reference() {
+        forall(Config::cases(10), |rng| {
+            let (nr, nc, edges) = arb_bipartite(rng, 25);
+            let g = from_edges(nr, nc, &edges);
+            let want = reference_max_cardinality(&g);
+            for kernel in [BfsKernel::GpuBfs, BfsKernel::GpuBfsWr] {
+                let cfg = GpuConfig { kernel, ..Default::default() }.adaptive();
+                let r = GpuMatcher::new(cfg).run_detached(&g, Matching::empty(nr, nc));
+                r.matching.certify(&g).map_err(|e| format!("{}: {e}", cfg.name()))?;
+                if r.matching.cardinality() != want {
+                    return Err(format!("{}: {} != {want}", cfg.name(), r.matching.cardinality()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adaptive_runs_fullscan_dense_phases_then_compacts() {
+        // empty init: the first phase sees density 1.0 (all columns
+        // unmatched) and must run FullScan; once the cheap bulk is matched
+        // later sparse phases flip to Compacted and record frontiers
+        let g = crate::graph::gen::Family::Road.generate(3000, 7);
+        let af = GpuMatcher::new(GpuConfig::default().adaptive())
+            .run_detached(&g, Matching::empty(g.nr, g.nc));
+        af.matching.certify(&g).unwrap();
+        assert!(af.stats.phases >= 2, "road needs repair phases");
+        assert!(
+            af.stats.frontier_peak > 0,
+            "late sparse phases must have flipped to Compacted"
+        );
+        // a pure Compacted run records the dense first phase (every
+        // column unmatched ⇒ frontier ≈ nc); adaptive ran that phase
+        // FullScan, so its recorded peak must sit strictly below
+        let fc = GpuMatcher::new(GpuConfig::default().compacted())
+            .run_detached(&g, Matching::empty(g.nr, g.nc));
+        assert_eq!(af.matching.cardinality(), fc.matching.cardinality());
+        assert!(
+            af.stats.frontier_peak < fc.stats.frontier_peak,
+            "adaptive peak {} must undercut compacted peak {}",
+            af.stats.frontier_peak,
+            fc.stats.frontier_peak
+        );
     }
 
     #[test]

@@ -892,6 +892,134 @@ fn gpubfs_wr_frontier_par(
     edges_total.into_inner()
 }
 
+/// GPUBFS restricted to a contiguous column range — the per-shard
+/// full-scan sweep of sharded execution (`crate::shard`): shard `s` scans
+/// only the columns it owns, so the `O(nc)` scan floor splits K ways.
+/// The body is [`gpubfs`]'s exactly; additionally every claimed column is
+/// appended to `claims` and every newly flagged endpoint row to
+/// `endpoints` — *host-side exchange accounting*, not device worklists
+/// (no [`COMPACTION_COST`] is charged; cross-shard routing of these items
+/// is priced by the interconnect constants in `gpu::device`). Runs
+/// serially regardless of `cfg.par_threads`: under sharding the shards
+/// themselves are the parallelism axis. Returns edges scanned.
+#[allow(clippy::too_many_arguments)]
+pub fn gpubfs_cols(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    cols: std::ops::Range<usize>,
+    claims: &mut Vec<u32>,
+    endpoints: &mut Vec<u32>,
+    cfg: LaunchCfg,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let mut edges_total = 0u64;
+    let lo = cols.start;
+    let n_local = cols.end.saturating_sub(lo);
+    let GpuState { bfs_array, predecessor, rmatch, vertex_inserted, augmenting_path_found, .. } =
+        state;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, n_local, |idx| {
+        let col_vertex = lo + idx;
+        if bfs_array[col_vertex] != bfs_level {
+            return 0;
+        }
+        let mut edges = 0u64;
+        for &nr in g.col_neighbors(col_vertex) {
+            edges += 1;
+            let neighbor_row = nr as usize;
+            let col_match = rmatch[neighbor_row];
+            if col_match > -1 {
+                if bfs_array[col_match as usize] == L0 - 1 {
+                    *vertex_inserted = true;
+                    bfs_array[col_match as usize] = bfs_level + 1;
+                    predecessor[neighbor_row] = col_vertex as i32;
+                    claims.push(col_match as u32);
+                }
+            } else if col_match == -1 {
+                rmatch[neighbor_row] = -2;
+                predecessor[neighbor_row] = col_vertex as i32;
+                *augmenting_path_found = true;
+                endpoints.push(neighbor_row as u32);
+            }
+        }
+        edges_total += edges;
+        edges
+    });
+    edges_total
+}
+
+/// GPUBFS-WR restricted to a contiguous column range — [`gpubfs_cols`]'s
+/// root-carrying twin (body of [`gpubfs_wr`], incl. the satisfied-tree
+/// early exit and the APsB endpoint encoding). Claimed columns go to
+/// `claims`, flagged endpoint rows to `endpoints`, both for exchange
+/// accounting only. Note a claim or endpoint encode may touch a column
+/// owned by another shard (trees cross partition boundaries); the routed
+/// item's word charge covers that update. Returns edges scanned.
+#[allow(clippy::too_many_arguments)]
+pub fn gpubfs_wr_cols(
+    g: &BipartiteCsr,
+    state: &mut GpuState,
+    bfs_level: i32,
+    cols: std::ops::Range<usize>,
+    claims: &mut Vec<u32>,
+    endpoints: &mut Vec<u32>,
+    cfg: LaunchCfg,
+    encode_endpoint: bool,
+    clock: &mut DeviceClock,
+) -> u64 {
+    let mut edges_total = 0u64;
+    let lo = cols.start;
+    let n_local = cols.end.saturating_sub(lo);
+    let GpuState {
+        bfs_array,
+        predecessor,
+        root,
+        rmatch,
+        vertex_inserted,
+        augmenting_path_found,
+        ..
+    } = state;
+    launch(clock, cfg.mapping, cfg.order, cfg.seed, n_local, |idx| {
+        let col_vertex = lo + idx;
+        if bfs_array[col_vertex] != bfs_level {
+            return 0;
+        }
+        let my_root = root[col_vertex];
+        debug_assert!(my_root >= 0, "root must be set before a column joins the frontier");
+        if bfs_array[my_root as usize] < L0 - 1 {
+            return 0; // early exit: this tree already found a path
+        }
+        let mut edges = 0u64;
+        for &nr in g.col_neighbors(col_vertex) {
+            edges += 1;
+            let neighbor_row = nr as usize;
+            let col_match = rmatch[neighbor_row];
+            if col_match > -1 {
+                if bfs_array[col_match as usize] == L0 - 1 {
+                    *vertex_inserted = true;
+                    bfs_array[col_match as usize] = bfs_level + 1;
+                    root[col_match as usize] = my_root;
+                    predecessor[neighbor_row] = col_vertex as i32;
+                    claims.push(col_match as u32);
+                }
+            } else if col_match == -1 {
+                bfs_array[my_root as usize] = if encode_endpoint {
+                    -(neighbor_row as i32 + 1)
+                } else {
+                    L0 - 2
+                };
+                rmatch[neighbor_row] = -2;
+                predecessor[neighbor_row] = col_vertex as i32;
+                *augmenting_path_found = true;
+                endpoints.push(neighbor_row as u32);
+            }
+        }
+        edges_total += edges;
+        edges
+    });
+    edges_total
+}
+
 /// ALTERNATE — Algorithm 3, executed in intra-warp lockstep so the
 /// paper's same-warp double-claim inconsistency actually occurs (and is
 /// then repaired by FIXMATCHING). `only_rows` restricts the starting rows

@@ -22,10 +22,11 @@
 //! Algorithm dispatch is typed end to end:
 //!
 //! * [`AlgoSpec`] names a matcher — `Seq(SeqKind)`, `Multicore { kind,
-//!   threads }`, `Gpu(GpuConfig)`, or `Xla(XlaKind)`. Its
-//!   `FromStr`/`Display` impls are the stable wire/CLI format
-//!   (`"hk"`, `"p-dbfs@4"`, `"gpu:APFB-GPUBFS-WR-CT-FC"`,
-//!   `"xla:apfb-full"`), round-tripping every registry name;
+//!   threads }`, `Gpu(GpuConfig)`, `Sharded { inner, shards }`, or
+//!   `Xla(XlaKind)`. Its `FromStr`/`Display` impls are the stable
+//!   wire/CLI format (`"hk"`, `"p-dbfs@4"`, `"gpu:APFB-GPUBFS-WR-CT-FC"`,
+//!   `"shard4:gpu:APFB-GPUBFS-WR-CT-FC"`, `"xla:apfb-full"`),
+//!   round-tripping every registry name;
 //!   `coordinator::registry::build` turns a spec into a runnable matcher
 //!   and `coordinator::router::route` returns one. Configuration edits
 //!   (e.g. the frontier-mode override) are typed field edits, not string
@@ -47,7 +48,8 @@
 //!
 //! `graph` (CSR substrate + generators + MatrixMarket IO) → `matching`
 //! (representation, certification, the algorithm trait + `RunCtx`) →
-//! matchers (`seq`, `multicore`, `gpu` simulator + `gpu::xla_backend`) →
+//! matchers (`seq`, `multicore`, `gpu` simulator + `gpu::xla_backend`,
+//! `shard` multi-device execution over a modeled interconnect) →
 //! `dynamic` (online matching: delta batches over a mutable CSR overlay,
 //! seeded incremental repair) → `coordinator` (typed registry/router,
 //! executor, worker-pool service, server-side graph store behind the
@@ -79,6 +81,7 @@ pub mod persist;
 pub mod runtime;
 pub mod sanitize;
 pub mod seq;
+pub mod shard;
 pub mod util;
 
 pub use coordinator::spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};

@@ -57,6 +57,13 @@ pub struct RunStats {
     /// the rows a FullScan run selects with an `O(nr)` scan per phase
     /// (0 under FullScan)
     pub endpoints_total: u64,
+    /// simulated devices the run was sharded across (0 = unsharded)
+    pub shards: u64,
+    /// 32-bit words moved over the modeled interconnect (sharded runs;
+    /// see `gpu::device::EXCHANGE_WORD_COST`)
+    pub exchange_words: u64,
+    /// interconnect exchange steps executed (sharded runs)
+    pub exchange_steps: u64,
 }
 
 impl RunStats {

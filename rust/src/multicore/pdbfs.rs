@@ -14,6 +14,20 @@ use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 use crate::util::pool::{default_threads, fork_join};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Per-thread BFS scratch: frontier/next worklists plus the private
+/// predecessor array, leased from the ctx pool once per run.
+type Scratch = (Vec<u32>, Vec<u32>, Vec<i32>);
+
+fn give_scratch(ctx: &RunCtx, scratch: Vec<Mutex<Scratch>>) {
+    for slot in scratch {
+        let (frontier, next, pred) = slot.into_inner().expect("scratch slot poisoned");
+        ctx.give_u32(frontier);
+        ctx.give_u32(next);
+        ctx.give_i32(pred);
+    }
+}
 
 pub struct PDbfs {
     pub nthreads: usize,
@@ -37,21 +51,35 @@ impl MatchingAlgorithm for PDbfs {
         let row_claim = Stamps::new(g.nr);
         let mut stamp = 0u32;
         let total_aug = AtomicU64::new(0);
+        // per-thread scratch leased once per *run* (not re-allocated per
+        // round): each thread locks its own slot, so the mutex is
+        // uncontended. `pred` is never reset between rounds — every read
+        // happens behind a same-round row claim, whose success wrote the
+        // entry first.
+        let scratch: Vec<Mutex<Scratch>> = (0..self.nthreads)
+            .map(|_| {
+                Mutex::new((
+                    ctx.lease_worklist_u32(0),
+                    ctx.lease_worklist_u32(0),
+                    ctx.lease_i32(g.nr, -1),
+                ))
+            })
+            .collect();
 
         loop {
             if let Some(trip) = ctx.checkpoint() {
                 ctx.stats.augmentations = total_aug.load(Ordering::Relaxed);
+                give_scratch(ctx, scratch);
                 return ctx.finish_with(am.into_matching(), trip);
             }
             stamp += 1;
             let work = AtomicUsize::new(0);
             let round_aug = AtomicU64::new(0);
             let edges_scanned = AtomicU64::new(0);
-            fork_join(self.nthreads, |_tid| {
-                // thread-private BFS buffers
-                let mut frontier: Vec<u32> = Vec::new();
-                let mut next: Vec<u32> = Vec::new();
-                let mut pred = vec![-1i32; g.nr];
+            fork_join(self.nthreads, |tid| {
+                // thread-private BFS buffers (own slot, uncontended lock)
+                let mut slot = scratch[tid].lock().expect("scratch slot poisoned");
+                let (frontier, next, pred) = &mut *slot;
                 let mut scanned = 0u64;
                 loop {
                     let c0 = work.fetch_add(1, Ordering::Relaxed);
@@ -65,7 +93,7 @@ impl MatchingAlgorithm for PDbfs {
                         continue;
                     }
                     if let Some(endpoint) =
-                        bfs_search(g, &am, &col_claim, &row_claim, stamp, c0, &mut frontier, &mut next, &mut pred, &mut scanned)
+                        bfs_search(g, &am, &col_claim, &row_claim, stamp, c0, frontier, next, pred, &mut scanned)
                     {
                         // augment along private predecessors; all rows on
                         // the path were claimed by this search, the free
@@ -94,6 +122,7 @@ impl MatchingAlgorithm for PDbfs {
             }
         }
 
+        give_scratch(ctx, scratch);
         // sequential certification tail: claims may have starved real
         // augmenting paths; HK from the current matching finishes the job
         // and proves maximality (cheap — few unmatched columns remain).
@@ -182,6 +211,35 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn pdbfs_leases_thread_scratch_from_the_ctx_pool() {
+        use crate::matching::algo::RunCtx;
+        use crate::util::pool::WorkspacePool;
+        use std::sync::Arc;
+        let g = crate::graph::gen::Family::Uniform.generate(600, 3);
+        let algo = PDbfs { nthreads: 8 };
+        let pool = Arc::new(WorkspacePool::new());
+        let before = pool.returns();
+        let mut ctx = RunCtx::new(pool.clone());
+        let r = algo.run(&g, InitHeuristic::Cheap.run(&g), &mut ctx);
+        r.matching.certify(&g).unwrap();
+        // frontier + next + pred per thread all come back to the shelf;
+        // the sequential tail alone returns far fewer than 3 × 8 buffers
+        assert!(
+            pool.returns() - before >= 24,
+            "per-thread scratch not returned: {} returns",
+            pool.returns() - before
+        );
+        let reuses_before = pool.reuses();
+        let mut ctx = RunCtx::new(pool.clone());
+        let r = algo.run(&g, InitHeuristic::Cheap.run(&g), &mut ctx);
+        r.matching.certify(&g).unwrap();
+        assert!(
+            pool.reuses() > reuses_before,
+            "second run must lease the first run's scratch from the shelf"
+        );
     }
 
     #[test]

@@ -25,6 +25,20 @@ impl Default for PHk {
 
 const UNREACHED: i32 = i32::MAX;
 
+/// Per-thread scratch leased from the ctx pool once per run: slot 0
+/// doubles as the BFS phase's `local_next` buffer and the DFS phase's
+/// column stack; slots 1/2 are the DFS row/pointer stacks.
+type Scratch = (Vec<u32>, Vec<u32>, Vec<u32>);
+
+fn give_scratch(ctx: &RunCtx, scratch: Vec<Mutex<Scratch>>) {
+    for slot in scratch {
+        let (a, b, c) = slot.into_inner().expect("scratch slot poisoned");
+        ctx.give_u32(a);
+        ctx.give_u32(b);
+        ctx.give_u32(c);
+    }
+}
+
 impl MatchingAlgorithm for PHk {
     fn name(&self) -> String {
         // the AlgoSpec wire format with an explicit thread count
@@ -37,10 +51,23 @@ impl MatchingAlgorithm for PHk {
         let row_claim = Stamps::new(g.nr);
         let mut stamp = 0u32;
         let mut total_aug = 0u64;
+        // per-thread scratch leased once per *run* (not re-allocated per
+        // BFS level / DFS round): each thread locks its own slot,
+        // uncontended
+        let scratch: Vec<Mutex<Scratch>> = (0..self.nthreads)
+            .map(|_| {
+                Mutex::new((
+                    ctx.lease_worklist_u32(0),
+                    ctx.lease_worklist_u32(0),
+                    ctx.lease_worklist_u32(0),
+                ))
+            })
+            .collect();
 
         loop {
             if let Some(trip) = ctx.checkpoint() {
                 ctx.stats.augmentations = total_aug;
+                give_scratch(ctx, scratch);
                 return ctx.finish_with(am.into_matching(), trip);
             }
             // ---- parallel level-synchronous BFS ----
@@ -73,8 +100,10 @@ impl MatchingAlgorithm for PHk {
                 launches += 1;
                 let found_flag = AtomicBool::new(false);
                 let work = AtomicUsize::new(0);
-                fork_join(self.nthreads, |_tid| {
-                    let mut local_next: Vec<u32> = Vec::new();
+                fork_join(self.nthreads, |tid| {
+                    let mut slot = scratch[tid].lock().expect("scratch slot poisoned");
+                    let local_next = &mut slot.0;
+                    local_next.clear();
                     let mut scanned = 0u64;
                     loop {
                         let i = work.fetch_add(1, Ordering::Relaxed);
@@ -105,7 +134,7 @@ impl MatchingAlgorithm for PHk {
                     }
                     edges_scanned.fetch_add(scanned, Ordering::Relaxed);
                     if !local_next.is_empty() {
-                        frontier.lock().unwrap().extend_from_slice(&local_next);
+                        frontier.lock().unwrap().extend_from_slice(local_next);
                     }
                 });
                 found = found_flag.load(Ordering::Relaxed);
@@ -121,10 +150,9 @@ impl MatchingAlgorithm for PHk {
             stamp += 1;
             let work = AtomicUsize::new(0);
             let aug = AtomicU64::new(0);
-            fork_join(self.nthreads, |_tid| {
-                let mut col_stack: Vec<u32> = Vec::new();
-                let mut row_stack: Vec<u32> = Vec::new();
-                let mut ptr_stack: Vec<u32> = Vec::new();
+            fork_join(self.nthreads, |tid| {
+                let mut slot = scratch[tid].lock().expect("scratch slot poisoned");
+                let (col_stack, row_stack, ptr_stack) = &mut *slot;
                 loop {
                     let c0 = work.fetch_add(1, Ordering::Relaxed);
                     if c0 >= g.nc {
@@ -138,7 +166,7 @@ impl MatchingAlgorithm for PHk {
                     }
                     if dfs_claimed(
                         g, &am, &dist, &row_claim, stamp, c0,
-                        &mut col_stack, &mut row_stack, &mut ptr_stack,
+                        col_stack, row_stack, ptr_stack,
                     ) {
                         aug.fetch_add(1, Ordering::Relaxed);
                     }
@@ -149,6 +177,7 @@ impl MatchingAlgorithm for PHk {
             // starvation), fall back to one sequential HK phase to ensure
             // progress and hence termination.
             if aug.load(Ordering::Relaxed) == 0 {
+                give_scratch(ctx, scratch);
                 let m = am.into_matching();
                 let tail = crate::seq::Hk.run(g, m, &mut ctx.fork());
                 ctx.stats.augmentations = total_aug + tail.stats.augmentations;
@@ -156,6 +185,7 @@ impl MatchingAlgorithm for PHk {
                 return ctx.finish_with(tail.matching, tail.outcome);
             }
         }
+        give_scratch(ctx, scratch);
         ctx.stats.augmentations = total_aug;
         ctx.finish(am.into_matching())
     }
@@ -253,6 +283,30 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn phk_leases_thread_scratch_from_the_ctx_pool() {
+        use crate::matching::algo::RunCtx;
+        use crate::util::pool::WorkspacePool;
+        use std::sync::Arc;
+        let g = crate::graph::gen::Family::Uniform.generate(600, 5);
+        let algo = PHk { nthreads: 8 };
+        let pool = Arc::new(WorkspacePool::new());
+        let mut ctx = RunCtx::new(pool.clone());
+        let r = algo.run(&g, InitHeuristic::Cheap.run(&g), &mut ctx);
+        r.matching.certify(&g).unwrap();
+        // three scratch buffers per thread come back; any sequential
+        // fallback tail alone returns far fewer than 3 × 8 buffers
+        assert!(pool.returns() >= 24, "scratch not returned: {} returns", pool.returns());
+        let reuses_before = pool.reuses();
+        let mut ctx = RunCtx::new(pool.clone());
+        let r = algo.run(&g, InitHeuristic::Cheap.run(&g), &mut ctx);
+        r.matching.certify(&g).unwrap();
+        assert!(
+            pool.reuses() > reuses_before,
+            "second run must lease the first run's scratch from the shelf"
+        );
     }
 
     #[test]

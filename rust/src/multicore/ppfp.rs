@@ -14,6 +14,20 @@ use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunResult};
 use crate::matching::{Matching, UNMATCHED};
 use crate::util::pool::{default_threads, fork_join};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Per-thread DFS scratch (col/row/ptr stacks), leased from the ctx pool
+/// once per run.
+type Scratch = (Vec<u32>, Vec<u32>, Vec<u32>);
+
+fn give_scratch(ctx: &RunCtx, scratch: Vec<Mutex<Scratch>>) {
+    for slot in scratch {
+        let (cols, rows, ptrs) = slot.into_inner().expect("scratch slot poisoned");
+        ctx.give_u32(cols);
+        ctx.give_u32(rows);
+        ctx.give_u32(ptrs);
+    }
+}
 
 pub struct PPfp {
     pub nthreads: usize,
@@ -37,10 +51,22 @@ impl MatchingAlgorithm for PPfp {
         let mut stamp = 0u32;
         let mut forward = true;
         let mut total_aug = 0u64;
+        // per-thread DFS stacks leased once per *run* (not re-allocated
+        // per round): each thread locks its own slot, uncontended
+        let scratch: Vec<Mutex<Scratch>> = (0..self.nthreads)
+            .map(|_| {
+                Mutex::new((
+                    ctx.lease_worklist_u32(0),
+                    ctx.lease_worklist_u32(0),
+                    ctx.lease_worklist_u32(0),
+                ))
+            })
+            .collect();
 
         loop {
             if let Some(trip) = ctx.checkpoint() {
                 ctx.stats.augmentations = total_aug;
+                give_scratch(ctx, scratch);
                 return ctx.finish_with(am.into_matching(), trip);
             }
             stamp += 1;
@@ -48,10 +74,9 @@ impl MatchingAlgorithm for PPfp {
             let aug = AtomicU64::new(0);
             let scanned_total = AtomicU64::new(0);
             let fwd = forward;
-            fork_join(self.nthreads, |_tid| {
-                let mut col_stack: Vec<u32> = Vec::new();
-                let mut row_stack: Vec<u32> = Vec::new();
-                let mut ptr_stack: Vec<u32> = Vec::new();
+            fork_join(self.nthreads, |tid| {
+                let mut slot = scratch[tid].lock().expect("scratch slot poisoned");
+                let (col_stack, row_stack, ptr_stack) = &mut *slot;
                 let mut scanned = 0u64;
                 loop {
                     let c0 = work.fetch_add(1, Ordering::Relaxed);
@@ -63,7 +88,7 @@ impl MatchingAlgorithm for PPfp {
                     }
                     if dfs_la_claimed(
                         g, &am, &row_claim, stamp, c0, fwd,
-                        &mut col_stack, &mut row_stack, &mut ptr_stack, &mut scanned,
+                        col_stack, row_stack, ptr_stack, &mut scanned,
                     ) {
                         aug.fetch_add(1, Ordering::Relaxed);
                     }
@@ -80,6 +105,7 @@ impl MatchingAlgorithm for PPfp {
             forward = !forward;
         }
 
+        give_scratch(ctx, scratch);
         // sequential tail certifies maximality (and picks up any paths the
         // claim discipline starved out).
         let tail = crate::seq::Pfp.run(g, am.into_matching(), &mut ctx.fork());
@@ -183,6 +209,30 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn ppfp_leases_thread_scratch_from_the_ctx_pool() {
+        use crate::matching::algo::RunCtx;
+        use crate::util::pool::WorkspacePool;
+        use std::sync::Arc;
+        let g = crate::graph::gen::Family::Uniform.generate(600, 7);
+        let algo = PPfp { nthreads: 8 };
+        let pool = Arc::new(WorkspacePool::new());
+        let mut ctx = RunCtx::new(pool.clone());
+        let r = algo.run(&g, InitHeuristic::Cheap.run(&g), &mut ctx);
+        r.matching.certify(&g).unwrap();
+        // three stacks per thread come back; the sequential tail alone
+        // returns far fewer than 3 × 8 buffers
+        assert!(pool.returns() >= 24, "scratch not returned: {} returns", pool.returns());
+        let reuses_before = pool.reuses();
+        let mut ctx = RunCtx::new(pool.clone());
+        let r = algo.run(&g, InitHeuristic::Cheap.run(&g), &mut ctx);
+        r.matching.certify(&g).unwrap();
+        assert!(
+            pool.reuses() > reuses_before,
+            "second run must lease the first run's scratch from the shelf"
+        );
     }
 
     #[test]

@@ -134,6 +134,12 @@ pub fn update_record(version_after: u64, report: &ApplyReport) -> wal::WalRecord
 pub struct Persistence {
     dir: PathBuf,
     name_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    /// snapshots are written as a set of this many per-shard files
+    /// (`.v<version>.s<shard>of<shards>.snap`, column-partitioned like
+    /// sharded execution) instead of one `.snap` when > 1; the WAL stays
+    /// a single per-graph log either way. Read paths always accept both
+    /// layouts, so flipping the knob between restarts is safe.
+    snapshot_shards: std::sync::atomic::AtomicUsize,
 }
 
 impl Persistence {
@@ -141,7 +147,23 @@ impl Persistence {
     pub fn open(dir: impl Into<PathBuf>) -> io::Result<Self> {
         let dir = dir.into();
         fs::create_dir_all(&dir)?;
-        Ok(Self { dir, name_locks: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            dir,
+            name_locks: Mutex::new(HashMap::new()),
+            snapshot_shards: std::sync::atomic::AtomicUsize::new(1),
+        })
+    }
+
+    /// Write future snapshots as `shards` per-shard files (1 = the
+    /// single-file layout). Affects writes only; recovery reads whatever
+    /// layout is on disk.
+    pub fn set_snapshot_shards(&self, shards: usize) {
+        self.snapshot_shards
+            .store(shards.max(1), std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn snapshot_shards(&self) -> usize {
+        self.snapshot_shards.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn dir(&self) -> &Path {
@@ -193,7 +215,25 @@ impl Persistence {
         self.dir.join(format!("{}.v{}.snap", encode_name(name), version))
     }
 
-    /// Every `.snap` file for `name`, as `(version, path)`, newest first.
+    /// One member of a per-shard snapshot set:
+    /// `<name>.v<version>.s<shard>of<shards>.snap`. The `s<i>of<k>`
+    /// infix fails [`Persistence::snapshots_of`]'s `u64` version parse,
+    /// so the two layouts can never be confused by a directory scan.
+    pub(crate) fn shard_snap_path(
+        &self,
+        name: &str,
+        version: u64,
+        shard: usize,
+        shards: usize,
+    ) -> PathBuf {
+        self.dir
+            .join(format!("{}.v{}.s{}of{}.snap", encode_name(name), version, shard, shards))
+    }
+
+    /// Every single-file `.snap` for `name`, as `(version, path)`,
+    /// newest first. Per-shard members are excluded (their version field
+    /// is not a bare integer); see
+    /// [`Persistence::shard_snapshot_sets`] for those.
     pub(crate) fn snapshots_of(&self, name: &str) -> Vec<(u64, PathBuf)> {
         let prefix = format!("{}.v", encode_name(name));
         let mut out = Vec::new();
@@ -212,6 +252,64 @@ impl Persistence {
         }
         out.sort_by(|a, b| b.0.cmp(&a.0));
         out
+    }
+
+    /// Per-shard snapshot sets for `name`, newest version first: each
+    /// entry is `(version, members)` with members as
+    /// `(shard, shards, path)` sorted by shard index. The scan groups by
+    /// filename only — completeness and member integrity are judged at
+    /// read time ([`snapshot::assemble_shards`]), so a half-written set
+    /// surfaces as "present but not assemblable", exactly what recovery
+    /// and `fsck` need to see.
+    pub(crate) fn shard_snapshot_sets(
+        &self,
+        name: &str,
+    ) -> Vec<(u64, Vec<(u64, u64, PathBuf)>)> {
+        let prefix = format!("{}.v", encode_name(name));
+        let mut by_version: HashMap<u64, Vec<(u64, u64, PathBuf)>> = HashMap::new();
+        if let Ok(entries) = fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let fname = entry.file_name();
+                let Some(fname) = fname.to_str() else { continue };
+                let Some(rest) =
+                    fname.strip_prefix(&prefix).and_then(|r| r.strip_suffix(".snap"))
+                else {
+                    continue;
+                };
+                // "<version>.s<shard>of<shards>"
+                let Some((v, member)) = rest.split_once(".s") else { continue };
+                let Some((s, k)) = member.split_once("of") else { continue };
+                let (Ok(version), Ok(shard), Ok(shards)) =
+                    (v.parse::<u64>(), s.parse::<u64>(), k.parse::<u64>())
+                else {
+                    continue;
+                };
+                by_version.entry(version).or_default().push((shard, shards, entry.path()));
+            }
+        }
+        let mut out: Vec<_> = by_version.into_iter().collect();
+        for (_, members) in &mut out {
+            members.sort_by_key(|(s, _, _)| *s);
+        }
+        out.sort_by(|a, b| b.0.cmp(&a.0));
+        out
+    }
+
+    /// Read and assemble the per-shard set at `version`; `Ok(None)` when
+    /// any member is missing, corrupt, or inconsistent — the set as a
+    /// whole cannot anchor a recovery then.
+    pub(crate) fn read_shard_set(
+        &self,
+        members: &[(u64, u64, PathBuf)],
+    ) -> io::Result<Option<snapshot::Snapshot>> {
+        let mut parts = Vec::with_capacity(members.len());
+        for (_, _, path) in members {
+            match snapshot::read_shard_snapshot(path)? {
+                Some(p) => parts.push(p),
+                None => return Ok(None),
+            }
+        }
+        Ok(snapshot::assemble_shards(parts))
     }
 
     /// Names with any on-disk state (WAL or snapshot), sorted.
@@ -258,9 +356,42 @@ impl Persistence {
         g: &BipartiteCsr,
         version_base: u64,
     ) -> io::Result<()> {
-        snapshot::write_snapshot(&self.snap_path(name, version_base), version_base, g, None)?;
+        self.write_snapshot_files_locked(name, g, version_base, None)?;
         self.prune_snapshots_locked(name, version_base);
         wal::reset_with(&self.wal_path(name), &wal::WalRecord::Load { version_base })
+    }
+
+    /// Write the snapshot for (`name`, `version`) in the configured
+    /// layout: one `.snap` file, or — with
+    /// [`Persistence::set_snapshot_shards`] > 1 — a set of per-shard
+    /// members column-partitioned exactly like sharded execution
+    /// ([`crate::shard::ColPartition`]). Member write order doesn't
+    /// matter: each file is atomic on its own, and a crash mid-set
+    /// leaves an incomplete set that read paths refuse to assemble.
+    fn write_snapshot_files_locked(
+        &self,
+        name: &str,
+        g: &BipartiteCsr,
+        version: u64,
+        matching: Option<&Matching>,
+    ) -> io::Result<()> {
+        let shards = self.snapshot_shards();
+        if shards <= 1 {
+            return snapshot::write_snapshot(&self.snap_path(name, version), version, g, matching);
+        }
+        let part = crate::shard::ColPartition::new(g, shards);
+        for s in 0..shards {
+            snapshot::write_shard_snapshot(
+                &self.shard_snap_path(name, version, s, shards),
+                version,
+                g,
+                matching,
+                s,
+                shards,
+                part.range(s),
+            )?;
+        }
+        Ok(())
     }
 
     /// `UPDATE` durability: append one frame — the batch's *net* effect
@@ -310,14 +441,16 @@ impl Persistence {
     ) -> io::Result<()> {
         let guard = self.lock_for(name);
         let _g = lockorder::lock(LockClass::Name, &guard);
-        snapshot::write_snapshot(&self.snap_path(name, version), version, g, matching)?;
+        self.write_snapshot_files_locked(name, g, version, matching)?;
         self.prune_snapshots_locked(name, version);
         wal::truncate(&self.wal_path(name))
     }
 
     /// Whether `name` has any on-disk state. Caller holds the name lock.
     pub fn has_state_locked(&self, name: &str) -> bool {
-        self.wal_path(name).exists() || !self.snapshots_of(name).is_empty()
+        self.wal_path(name).exists()
+            || !self.snapshots_of(name).is_empty()
+            || !self.shard_snapshot_sets(name).is_empty()
     }
 
     /// The `DROP` commit point: append a version-scoped DROP marker and
@@ -334,17 +467,23 @@ impl Persistence {
     ) -> io::Result<()> {
         let version = version
             .or_else(|| self.snapshots_of(name).first().map(|(v, _)| *v))
+            .or_else(|| self.shard_snapshot_sets(name).first().map(|(v, _)| *v))
             .unwrap_or(0);
         wal::append(&self.wal_path(name), &wal::WalRecord::Drop { version })
     }
 
-    /// Remove `name`'s WAL and snapshots. Best-effort by design: the
-    /// fsync'd DROP marker is the commit point, so a deletion that fails
-    /// here is completed by the next recovery scan. Caller holds the
-    /// name lock.
+    /// Remove `name`'s WAL and snapshots (both single-file and per-shard
+    /// layouts). Best-effort by design: the fsync'd DROP marker is the
+    /// commit point, so a deletion that fails here is completed by the
+    /// next recovery scan. Caller holds the name lock.
     pub fn delete_graph_files_locked(&self, name: &str) {
         for (_, p) in self.snapshots_of(name) {
             let _ = fs::remove_file(p);
+        }
+        for (_, members) in self.shard_snapshot_sets(name) {
+            for (_, _, p) in members {
+                let _ = fs::remove_file(p);
+            }
         }
         let _ = fs::remove_file(self.wal_path(name));
     }
@@ -386,12 +525,19 @@ impl Persistence {
         recover::recover_graph(self, name)
     }
 
-    /// Remove all snapshots of `name` except `keep_version`'s. Callers
-    /// hold the per-name lock.
+    /// Remove all snapshots of `name` — single-file and per-shard —
+    /// except `keep_version`'s. Callers hold the per-name lock.
     fn prune_snapshots_locked(&self, name: &str, keep_version: u64) {
         for (v, p) in self.snapshots_of(name) {
             if v != keep_version {
                 let _ = fs::remove_file(p);
+            }
+        }
+        for (v, members) in self.shard_snapshot_sets(name) {
+            if v != keep_version {
+                for (_, _, p) in members {
+                    let _ = fs::remove_file(p);
+                }
             }
         }
     }

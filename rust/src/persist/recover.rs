@@ -144,11 +144,27 @@ pub(super) fn recover_graph(
     p: &Persistence,
     name: &str,
 ) -> io::Result<Option<RecoveredGraph>> {
+    // anchor candidates come in two on-disk layouts — single-file
+    // snapshots and per-shard sets — merged newest-version-first so a
+    // sharded store's newest state wins over an older combined file (and
+    // vice versa). An unassemblable set (missing/corrupt member) is
+    // skipped the same way a corrupt .snap is.
     let mut snap = None;
-    for (_, path) in p.snapshots_of(name) {
-        if let Some(s) = snapshot::read_snapshot(&path)? {
-            snap = Some(s);
-            break;
+    let combined = p.snapshots_of(name);
+    let sharded = p.shard_snapshot_sets(name);
+    let (mut ci, mut si) = (0usize, 0usize);
+    while snap.is_none() && (ci < combined.len() || si < sharded.len()) {
+        let take_combined = match (combined.get(ci), sharded.get(si)) {
+            (Some((cv, _)), Some((sv, _))) => cv >= sv,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if take_combined {
+            snap = snapshot::read_snapshot(&combined[ci].1)?;
+            ci += 1;
+        } else {
+            snap = p.read_shard_set(&sharded[si].1)?;
+            si += 1;
         }
     }
     let (records, torn) = wal::read_wal(&p.wal_path(name))?;
@@ -285,7 +301,10 @@ pub fn recover_into(
             None => {
                 // either a completed/completable DROP (files now gone) or
                 // an unanchored WAL; only the latter is worth surfacing
-                if p.wal_path(&name).exists() || !p.snapshots_of(&name).is_empty() {
+                if p.wal_path(&name).exists()
+                    || !p.snapshots_of(&name).is_empty()
+                    || !p.shard_snapshot_sets(&name).is_empty()
+                {
                     report.skipped.push(name);
                 }
             }
@@ -413,6 +432,95 @@ mod tests {
         assert_eq!(rec.replayed_updates, 0, "old incarnation's frames must not replay");
         let mut got = rec.graph;
         assert_eq!(got.snapshot().edges(), vec![(0, 1)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_snapshots_roundtrip_load_update_recover() {
+        // LOAD + UPDATEs under the per-shard layout: the shard set (one
+        // WAL, K member files) must anchor replay exactly like a
+        // single-file snapshot would
+        let (p, dir) = persistence("shardset");
+        p.set_snapshot_shards(4);
+        let g = crate::graph::gen::Family::Kron.generate(300, 5);
+        let base = 3u64 << 32;
+        p.record_load("g", &g, base).unwrap();
+        assert!(p.snapshots_of("g").is_empty(), "no single-file snapshot in sharded mode");
+        let sets = p.shard_snapshot_sets("g");
+        assert_eq!(sets.len(), 1);
+        assert_eq!(sets[0].0, base);
+        assert_eq!(sets[0].1.len(), 4, "one member per shard");
+        let mut dg = DynamicGraph::new(g).with_version_base(base);
+        for batch in [
+            DeltaBatch::new().insert(0, 1),
+            DeltaBatch::new().add_column(vec![2]),
+        ] {
+            let rep = dg.apply(&batch);
+            p.append_update("g", dg.version(), &rep).unwrap();
+        }
+        let rec = p.recover_graph("g").unwrap().expect("shard set anchors");
+        assert_eq!(rec.snapshot_version, base);
+        assert_eq!(rec.replayed_updates, 2);
+        assert!(rec.clean);
+        let mut got = rec.graph;
+        assert_eq!(got.version(), dg.version());
+        assert_eq!(got.snapshot().edges(), dg.snapshot().edges());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_snapshot_compaction_keeps_the_matching() {
+        // SAVE-style compaction in sharded mode: the matching is sliced
+        // across members and reassembled on recovery
+        let (p, dir) = persistence("shardsave");
+        p.set_snapshot_shards(3);
+        let g = crate::graph::gen::Family::Uniform.generate(400, 9);
+        let m = crate::matching::init::InitHeuristic::Cheap.run(&g);
+        p.record_load("g", &g, 0).unwrap();
+        p.record_snapshot("g", &g, 1, Some(&m)).unwrap();
+        let sets = p.shard_snapshot_sets("g");
+        assert_eq!(sets.len(), 1, "compaction must prune the older shard set");
+        assert_eq!(sets[0].0, 1);
+        let rec = p.recover_graph("g").unwrap().unwrap();
+        assert_eq!(rec.snapshot_version, 1);
+        assert_eq!(rec.matching.as_ref(), Some(&m));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn incomplete_shard_set_falls_back_to_an_older_anchor() {
+        let (p, dir) = persistence("shardpart");
+        let g0 = from_edges(2, 2, &[(0, 0)]);
+        p.record_load("g", &g0, 0).unwrap(); // single-file anchor at v0
+        // a newer sharded snapshot lands, but one member goes missing
+        p.set_snapshot_shards(2);
+        let g1 = from_edges(2, 2, &[(0, 0), (1, 1)]);
+        p.record_snapshot("g", &g1, 1, None).unwrap();
+        // record_snapshot pruned the v0 single file; restore it to model
+        // "older anchor still present, newest set damaged"
+        snapshot::write_snapshot(&p.snap_path("g", 0), 0, &g0, None).unwrap();
+        let member = p.shard_snap_path("g", 1, 1, 2);
+        std::fs::remove_file(&member).unwrap();
+        let rec = p.recover_graph("g").unwrap().expect("falls back to v0");
+        assert_eq!(rec.snapshot_version, 0, "damaged set must not anchor");
+        // with the member restored the set anchors again, beating v0
+        snapshot::write_shard_snapshot(&member, 1, &g1, None, 1, 2, 1..2).unwrap();
+        let rec = p.recover_graph("g").unwrap().unwrap();
+        assert_eq!(rec.snapshot_version, 1);
+        let mut got = rec.graph;
+        assert_eq!(got.snapshot().edges(), vec![(0, 0), (1, 1)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_removes_a_sharded_graphs_files() {
+        let (p, dir) = persistence("sharddrop");
+        p.set_snapshot_shards(4);
+        let g = from_edges(3, 3, &[(0, 0), (1, 1), (2, 2)]);
+        p.record_load("g", &g, 0).unwrap();
+        assert!(p.record_drop("g", Some(0)).unwrap());
+        assert!(p.shard_snapshot_sets("g").is_empty(), "members must be deleted");
+        assert!(p.recover_graph("g").unwrap().is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

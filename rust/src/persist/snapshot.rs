@@ -32,6 +32,11 @@ use std::io::{self, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"BMSNAP1\0";
+/// Magic for one member of a per-shard snapshot *set* (see
+/// [`ShardSnapshot`]); distinct from [`MAGIC`] so a shard file can never
+/// be mistaken for a whole-graph snapshot (or vice versa) even if a
+/// filename is mangled.
+const SHARD_MAGIC: &[u8; 8] = b"BMSHRD1\0";
 
 /// A decoded snapshot file.
 pub struct Snapshot {
@@ -87,11 +92,16 @@ pub fn write_snapshot(
     g: &BipartiteCsr,
     matching: Option<&Matching>,
 ) -> io::Result<()> {
-    let bytes = encode_snapshot(version, g, matching);
+    write_bytes_atomic(path, &encode_snapshot(version, g, matching))
+}
+
+/// tmp-file + fsync + atomic rename + directory fsync — shared by the
+/// whole-graph and per-shard snapshot writers.
+fn write_bytes_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
     let tmp = path.with_extension("snap.tmp");
     {
         let mut f = File::create(&tmp)?;
-        f.write_all(&bytes)?;
+        f.write_all(bytes)?;
         f.sync_all()?;
     }
     fs::rename(&tmp, path)?;
@@ -229,6 +239,228 @@ fn decode_matching(nr: usize, nc: usize, cmatch: Vec<i32>) -> Option<Matching> {
     Some(Matching { rmatch, cmatch })
 }
 
+/// One member of a per-shard snapshot set: the column-range slice of a
+/// graph that one simulated device owns (see `crate::shard`), stored as
+/// its own checksummed file so a sharded store can persist each device's
+/// partition independently while a single per-graph WAL covers them all.
+///
+/// ## File layout (all integers little-endian)
+///
+/// ```text
+/// magic  "BMSHRD1\0"
+/// body   version: u64
+///        shard: u64, shards: u64
+///        col_lo: u64, col_hi: u64          (owned columns: lo..hi)
+///        nr: u64, nc: u64                  (FULL graph dimensions)
+///        cxadj_len: u64, cxadj: [u32]      (local offsets, rebased to 0)
+///        cadj_len:  u64, cadj:  [u32]      (rows of the owned columns)
+///        has_matching: u8  (0|1)
+///        [cmatch_len: u64, cmatch: [i32]]  (cmatch[lo..hi] slice)
+/// sum    fnv1a64(body): u64
+/// ```
+///
+/// [`assemble_shards`] re-concatenates a complete, contiguous set back
+/// into one [`Snapshot`]; any missing, inconsistent, or overlapping
+/// member invalidates the whole set (recovery then falls back to an
+/// older anchor), because a partially assembled graph would silently
+/// drop columns.
+pub struct ShardSnapshot {
+    pub version: u64,
+    pub shard: u64,
+    pub shards: u64,
+    pub col_lo: u64,
+    pub col_hi: u64,
+    pub nr: u64,
+    pub nc: u64,
+    /// local column offsets for `col_lo..col_hi`, rebased to start at 0
+    pub cxadj: Vec<u32>,
+    pub cadj: Vec<u32>,
+    /// `cmatch[col_lo..col_hi]` iff the set carries a matching
+    pub cmatch: Option<Vec<i32>>,
+}
+
+/// The byte image of one shard member covering `cols` of `g`.
+pub fn encode_shard_snapshot(
+    version: u64,
+    g: &BipartiteCsr,
+    matching: Option<&Matching>,
+    shard: usize,
+    shards: usize,
+    cols: std::ops::Range<usize>,
+) -> Vec<u8> {
+    let (lo, hi) = (cols.start, cols.end);
+    debug_assert!(shard < shards && lo <= hi && hi <= g.nc);
+    let base = g.cxadj[lo];
+    let mut body = Vec::with_capacity(96 + 4 * (hi - lo + 1));
+    push_u64(&mut body, version);
+    push_u64(&mut body, shard as u64);
+    push_u64(&mut body, shards as u64);
+    push_u64(&mut body, lo as u64);
+    push_u64(&mut body, hi as u64);
+    push_u64(&mut body, g.nr as u64);
+    push_u64(&mut body, g.nc as u64);
+    push_u64(&mut body, (hi - lo + 1) as u64);
+    for &x in &g.cxadj[lo..=hi] {
+        body.extend_from_slice(&(x - base).to_le_bytes());
+    }
+    push_u32s(&mut body, &g.cadj[base as usize..g.cxadj[hi] as usize]);
+    match matching {
+        Some(m) => {
+            body.push(1);
+            push_u64(&mut body, (hi - lo) as u64);
+            for &x in &m.cmatch[lo..hi] {
+                body.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        None => body.push(0),
+    }
+    let sum = fnv1a64(&body);
+    let mut out = Vec::with_capacity(SHARD_MAGIC.len() + body.len() + 8);
+    out.extend_from_slice(SHARD_MAGIC);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Serialize and atomically install one shard member at `path`.
+pub fn write_shard_snapshot(
+    path: &Path,
+    version: u64,
+    g: &BipartiteCsr,
+    matching: Option<&Matching>,
+    shard: usize,
+    shards: usize,
+    cols: std::ops::Range<usize>,
+) -> io::Result<()> {
+    write_bytes_atomic(path, &encode_shard_snapshot(version, g, matching, shard, shards, cols))
+}
+
+/// Decode one shard member; `Ok(None)` on any structural or checksum
+/// problem (the member — and with it the whole set — cannot anchor).
+pub fn read_shard_snapshot(path: &Path) -> io::Result<Option<ShardSnapshot>> {
+    let mut bytes = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut bytes)?;
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    Ok(decode_shard_snapshot(&bytes))
+}
+
+/// Decode a shard-member byte image (see [`encode_shard_snapshot`]).
+pub fn decode_shard_snapshot(bytes: &[u8]) -> Option<ShardSnapshot> {
+    if bytes.len() < SHARD_MAGIC.len() + 8 || &bytes[..SHARD_MAGIC.len()] != SHARD_MAGIC {
+        return None;
+    }
+    let body = &bytes[SHARD_MAGIC.len()..bytes.len() - 8];
+    let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv1a64(body) != sum {
+        return None;
+    }
+    let mut r = Reader { bytes: body, at: 0 };
+    let version = r.u64()?;
+    let shard = r.u64()?;
+    let shards = r.u64()?;
+    let col_lo = r.u64()?;
+    let col_hi = r.u64()?;
+    let nr = r.u64()?;
+    let nc = r.u64()?;
+    if shards == 0
+        || shard >= shards
+        || col_lo > col_hi
+        || col_hi > nc
+        || nr > MAX_LEN as u64
+        || nc > MAX_LEN as u64
+    {
+        return None;
+    }
+    let span = (col_hi - col_lo) as usize;
+    let cxadj = r.u32s(MAX_LEN)?;
+    let cadj = r.u32s(MAX_LEN)?;
+    // the local slice must be a valid CSR fragment on its own, so a
+    // corrupt member can never poison the assembled graph
+    if cxadj.len() != span + 1
+        || cxadj.first() != Some(&0)
+        || cxadj.windows(2).any(|w| w[0] > w[1])
+        || *cxadj.last().unwrap() as usize != cadj.len()
+        || cadj.iter().any(|&x| (x as u64) >= nr)
+    {
+        return None;
+    }
+    let has_matching = r.u8()?;
+    let cmatch = if has_matching == 1 {
+        let m = r.i32s(MAX_LEN)?;
+        if m.len() != span {
+            return None;
+        }
+        Some(m)
+    } else {
+        None
+    };
+    if r.at != body.len() {
+        return None; // trailing bytes inside a checksummed body
+    }
+    Some(ShardSnapshot { version, shard, shards, col_lo, col_hi, nr, nc, cxadj, cadj, cmatch })
+}
+
+/// Re-assemble a complete per-shard set into one [`Snapshot`]. `None`
+/// unless the members agree on version/dimensions/shard count, their
+/// indices are exactly `0..shards`, and their column ranges tile
+/// `0..nc` contiguously. The matching survives only when *every* member
+/// carries its slice (and the concatenation is structurally consistent);
+/// otherwise the graph assembles matchingless, mirroring the
+/// whole-snapshot contract.
+pub fn assemble_shards(mut parts: Vec<ShardSnapshot>) -> Option<Snapshot> {
+    let first = parts.first()?;
+    let (version, shards, nr, nc) = (first.version, first.shards, first.nr, first.nc);
+    if parts.len() as u64 != shards
+        || parts
+            .iter()
+            .any(|p| p.version != version || p.shards != shards || p.nr != nr || p.nc != nc)
+    {
+        return None;
+    }
+    parts.sort_by_key(|p| p.shard);
+    let mut cxadj = Vec::with_capacity(nc as usize + 1);
+    cxadj.push(0u32);
+    let mut cadj = Vec::new();
+    let mut expect_lo = 0u64;
+    for (s, p) in parts.iter().enumerate() {
+        if p.shard != s as u64 || p.col_lo != expect_lo {
+            return None; // duplicate index or a gap/overlap in coverage
+        }
+        expect_lo = p.col_hi;
+        let base = cadj.len() as u64;
+        for &x in &p.cxadj[1..] {
+            let off = base + x as u64;
+            if off > u32::MAX as u64 {
+                return None;
+            }
+            cxadj.push(off as u32);
+        }
+        cadj.extend_from_slice(&p.cadj);
+    }
+    if expect_lo != nc {
+        return None; // the last shard must end at the column count
+    }
+    let matching = if parts.iter().all(|p| p.cmatch.is_some()) {
+        let mut cmatch = Vec::with_capacity(nc as usize);
+        for p in &mut parts {
+            cmatch.append(p.cmatch.as_mut().unwrap());
+        }
+        decode_matching(nr as usize, nc as usize, cmatch)
+    } else {
+        None
+    };
+    let graph = BipartiteCsr::from_col_csr(nr as usize, nc as usize, cxadj, cadj);
+    if graph.validate().is_err() {
+        return None;
+    }
+    Some(Snapshot { version, graph, matching })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,5 +530,74 @@ mod tests {
         assert!(decode_matching(2, 2, vec![-7, UNMATCHED]).is_none());
         let m = decode_matching(2, 2, vec![1, UNMATCHED]).unwrap();
         assert_eq!(m.rmatch, vec![UNMATCHED, 0]);
+    }
+
+    /// Split a graph into `k` shard members along a ColPartition.
+    fn split(g: &BipartiteCsr, m: Option<&Matching>, v: u64, k: usize) -> Vec<ShardSnapshot> {
+        let part = crate::shard::ColPartition::new(g, k);
+        (0..k)
+            .map(|s| {
+                decode_shard_snapshot(&encode_shard_snapshot(v, g, m, s, k, part.range(s)))
+                    .expect("member roundtrips")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_set_roundtrips_through_assembly() {
+        let g = crate::graph::gen::Family::Kron.generate(400, 3);
+        let m = crate::matching::init::InitHeuristic::Cheap.run(&g);
+        for k in [1usize, 2, 3, 4, 8] {
+            let s = assemble_shards(split(&g, Some(&m), 11, k)).expect("complete set");
+            assert_eq!(s.version, 11);
+            assert_eq!(s.graph, g, "k={k}");
+            assert_eq!(s.matching.as_ref(), Some(&m), "k={k}");
+        }
+        // matchingless members assemble a matchingless snapshot
+        let s = assemble_shards(split(&g, None, 12, 4)).unwrap();
+        assert!(s.matching.is_none());
+        assert_eq!(s.graph, g);
+    }
+
+    #[test]
+    fn shard_member_corruption_and_truncation_yield_none() {
+        let (g, m) = sample();
+        let good = encode_shard_snapshot(5, &g, Some(&m), 0, 2, 0..2);
+        assert!(decode_shard_snapshot(&good).is_some());
+        for cut in 0..good.len() {
+            assert!(decode_shard_snapshot(&good[..cut]).is_none(), "cut at {cut}");
+        }
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x01;
+            assert!(decode_shard_snapshot(&bad).is_none(), "flip at {i}");
+        }
+        // a whole-graph snapshot image is not a shard member and vice versa
+        assert!(decode_shard_snapshot(&encode_snapshot(5, &g, None)).is_none());
+        assert!(decode_snapshot(&good).is_none());
+    }
+
+    #[test]
+    fn assemble_rejects_incomplete_or_inconsistent_sets() {
+        let g = crate::graph::gen::Family::Uniform.generate(300, 7);
+        let whole = split(&g, None, 3, 4);
+        // missing member
+        let mut parts = split(&g, None, 3, 4);
+        parts.remove(2);
+        assert!(assemble_shards(parts).is_none());
+        // duplicate member index (and with it a coverage gap)
+        let mut parts = split(&g, None, 3, 2);
+        parts[1].shard = 0;
+        assert!(assemble_shards(parts).is_none());
+        // version mismatch across members
+        let mut parts = split(&g, None, 3, 4);
+        parts[3].version = 4;
+        assert!(assemble_shards(parts).is_none());
+        // shard-count mismatch
+        let mut parts = split(&g, None, 3, 4);
+        parts[0].shards = 5;
+        assert!(assemble_shards(parts).is_none());
+        // the untampered set still assembles
+        assert_eq!(assemble_shards(whole).unwrap().graph, g);
     }
 }

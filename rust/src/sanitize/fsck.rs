@@ -102,10 +102,26 @@ pub fn fsck_dir(dir: &Path) -> io::Result<FsckReport> {
 }
 
 fn fsck_graph(p: &Persistence, name: &str, out: &mut FsckReport) -> io::Result<()> {
-    // --- snapshots: newest-first, exactly the order recovery anchors in
+    // --- snapshots: newest-first across BOTH layouts (single-file and
+    // per-shard sets), exactly the merged order recovery anchors in
     let snaps = p.snapshots_of(name);
+    let shard_sets = p.shard_snapshot_sets(name);
     let mut anchor: Option<snapshot::Snapshot> = None;
-    for (file_version, path) in &snaps {
+    let (mut ci, mut si) = (0usize, 0usize);
+    while ci < snaps.len() || si < shard_sets.len() {
+        let take_combined = match (snaps.get(ci), shard_sets.get(si)) {
+            (Some((cv, _)), Some((sv, _))) => cv >= sv,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if !take_combined {
+            let (version, members) = &shard_sets[si];
+            si += 1;
+            fsck_shard_set(name, *version, members, &mut anchor, out)?;
+            continue;
+        }
+        let (file_version, path) = &snaps[ci];
+        ci += 1;
         match snapshot::read_snapshot(path)? {
             Some(s) => {
                 if s.version != *file_version {
@@ -173,7 +189,7 @@ fn fsck_graph(p: &Persistence, name: &str, out: &mut FsckReport) -> io::Result<(
         // recovery completes; anything else with state on disk is lost
         let only_drop = !records.is_empty()
             && records.iter().all(|r| matches!(r, wal::WalRecord::Drop { .. }));
-        if only_drop && snaps.is_empty() {
+        if only_drop && snaps.is_empty() && shard_sets.is_empty() {
             out.push(
                 name,
                 Severity::Repairable,
@@ -299,6 +315,102 @@ fn fsck_graph(p: &Persistence, name: &str, out: &mut FsckReport) -> io::Result<(
     Ok(())
 }
 
+/// Validate one per-shard snapshot set: every member must decode, agree
+/// with its filename metadata, and the set must be complete and
+/// contiguous ([`snapshot::assemble_shards`]). A set that would be the
+/// newest anchor gets `Fatal` findings when damaged (recovery falls back
+/// past acknowledged state); a superseded set gets `Repairable`.
+fn fsck_shard_set(
+    name: &str,
+    version: u64,
+    members: &[(u64, u64, std::path::PathBuf)],
+    anchor: &mut Option<snapshot::Snapshot>,
+    out: &mut FsckReport,
+) -> io::Result<()> {
+    let blocking = if anchor.is_none() { Severity::Fatal } else { Severity::Repairable };
+    let declared_k = members.first().map(|(_, k, _)| *k).unwrap_or(0);
+    let mut parts = Vec::with_capacity(members.len());
+    let mut damaged = false;
+    for (fshard, fshards, path) in members {
+        match snapshot::read_shard_snapshot(path)? {
+            Some(part) => {
+                if part.version != version || part.shard != *fshard || part.shards != *fshards
+                {
+                    out.push(
+                        name,
+                        Severity::Fatal,
+                        format!(
+                            "shard member {} declares v{} shard {}of{} inside but \
+                             v{version} shard {fshard}of{fshards} in its filename",
+                            path.display(),
+                            part.version,
+                            part.shard,
+                            part.shards
+                        ),
+                    );
+                    damaged = true;
+                } else {
+                    parts.push(part);
+                }
+            }
+            None => {
+                out.push(
+                    name,
+                    blocking,
+                    format!(
+                        "shard member {} fails its checksum — the v{version} set \
+                         cannot anchor recovery",
+                        path.display()
+                    ),
+                );
+                damaged = true;
+            }
+        }
+    }
+    if !damaged && parts.len() as u64 != declared_k {
+        out.push(
+            name,
+            blocking,
+            format!(
+                "incomplete shard set v{version}: {}/{declared_k} members present — \
+                 recovery skips the whole set",
+                parts.len()
+            ),
+        );
+        damaged = true;
+    }
+    if damaged {
+        return Ok(());
+    }
+    match snapshot::assemble_shards(parts) {
+        Some(s) if anchor.is_none() => {
+            out.push(
+                name,
+                Severity::Info,
+                format!("anchor is an assembled {declared_k}-shard snapshot set (v{version})"),
+            );
+            *anchor = Some(s);
+        }
+        Some(_) => out.push(
+            name,
+            Severity::Repairable,
+            format!(
+                "superseded shard set v{version} still present (pruned by the next \
+                 snapshot)"
+            ),
+        ),
+        None => out.push(
+            name,
+            blocking,
+            format!(
+                "shard set v{version} does not assemble (inconsistent or overlapping \
+                 members) — recovery skips it"
+            ),
+        ),
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,6 +528,66 @@ mod tests {
         assert!(report.findings.iter().any(|f| {
             f.severity == Severity::Info && f.message.contains("stale frame")
         }));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    fn seeded_sharded(tag: &str, shards: usize) -> (Persistence, PathBuf) {
+        let d = dir(tag);
+        let p = Persistence::open(&d).unwrap();
+        p.set_snapshot_shards(shards);
+        let g = crate::graph::gen::Family::Uniform.generate(200, 3);
+        let base = 2u64 << 32;
+        p.record_load("g", &g, base).unwrap();
+        let mut dg = DynamicGraph::new(g).with_version_base(base);
+        let rep = dg.apply(&DeltaBatch::new().insert(0, 1));
+        p.append_update("g", dg.version(), &rep).unwrap();
+        (p, d)
+    }
+
+    #[test]
+    fn clean_sharded_dir_reports_the_assembled_anchor() {
+        let (_p, d) = seeded_sharded("shardclean", 4);
+        let report = fsck_dir(&d).unwrap();
+        assert_eq!(report.fatal_count(), 0, "{:?}", report.findings);
+        assert_eq!(report.repairable_count(), 0, "{:?}", report.findings);
+        assert!(
+            report.findings.iter().any(|f| f.message.contains("assembled 4-shard")),
+            "{:?}",
+            report.findings
+        );
+        assert!(report.findings.iter().any(|f| f.message.contains("recovers at")));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_shard_member_is_fatal() {
+        let (p, d) = seeded_sharded("shardmiss", 4);
+        std::fs::remove_file(p.shard_snap_path("g", 2 << 32, 1, 4)).unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert!(report.fatal_count() >= 1, "{:?}", report.findings);
+        assert!(
+            report.findings.iter().any(|f| f.message.contains("incomplete shard set")),
+            "{:?}",
+            report.findings
+        );
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_shard_member_is_fatal() {
+        let (p, d) = seeded_sharded("shardrot", 2);
+        let member = p.shard_snap_path("g", 2 << 32, 0, 2);
+        let mut bytes = std::fs::read(&member).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&member, &bytes).unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert!(report.fatal_count() >= 1, "{:?}", report.findings);
+        assert!(
+            report.findings.iter().any(|f| f.message.contains("fails its checksum")),
+            "{:?}",
+            report.findings
+        );
         let _ = std::fs::remove_dir_all(&d);
     }
 

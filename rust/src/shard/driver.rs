@@ -1,0 +1,406 @@
+//! The sharded execution driver: the paper's APFB/APsB phase loop run
+//! shard-parallel across K simulated devices (see the module docs of
+//! [`crate::shard`] for the execution model and its cost accounting).
+//!
+//! Shards execute sequentially on the host, in shard order within each
+//! BFS level — one legal serialization of the K-device race, exactly the
+//! argument `gpu::driver` makes for its host-parallel mode. The matching
+//! cardinality is schedule-independent (FIXMATCHING plus the safety net
+//! absorb any interleaving), so sharded ≡ unsharded cardinality for
+//! every shard count — property-tested in `rust/tests/shard.rs`.
+
+use crate::gpu::config::{ApDriver, BfsKernel, FrontierMode, GpuConfig};
+use crate::gpu::device::{
+    charge_frontier_scan, charge_uniform_scan, DeviceClock, ShardClocks, EXCHANGE_WORDS_PER_ITEM,
+};
+use crate::gpu::driver::augment_one_sequential;
+use crate::gpu::kernels::{
+    alternate, fixmatching, gpubfs_cols, gpubfs_frontier, gpubfs_wr_cols, gpubfs_wr_frontier,
+    init_bfs_array, init_bfs_array_frontier, wr_chosen_endpoints_from, GpuState, LaunchCfg, L0,
+};
+use crate::graph::csr::BipartiteCsr;
+use crate::matching::algo::{MatchingAlgorithm, RunCtx, RunOutcome, RunResult};
+use crate::matching::Matching;
+
+use super::partition::ColPartition;
+
+/// One of the paper's GPU variants executed across `shards` simulated
+/// devices. `shards == 1` degenerates to the unsharded phase loop (and
+/// bills the same modeled cycles); the wire name is
+/// `shard{K}:gpu:{variant}`.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedGpuMatcher {
+    pub inner: GpuConfig,
+    pub shards: usize,
+}
+
+impl ShardedGpuMatcher {
+    pub fn new(inner: GpuConfig, shards: usize) -> Self {
+        Self { inner, shards: shards.max(1) }
+    }
+
+    /// Run and also return the combined device clock
+    /// ([`ShardClocks::makespan`]: total work in `cycles`, BSP makespan in
+    /// `parallel_cycles`).
+    pub fn run_with_clock(
+        &self,
+        g: &BipartiteCsr,
+        init: Matching,
+        ctx: &mut RunCtx,
+    ) -> (RunResult, DeviceClock) {
+        let k = self.shards.max(1);
+        let part = ColPartition::new(g, k);
+        // par_threads stays 1: under sharding the shards themselves are
+        // the parallelism axis, and each shard's kernels run serially on
+        // its own modeled device.
+        let cfg = LaunchCfg {
+            mapping: self.inner.mapping,
+            order: self.inner.write_order,
+            seed: self.inner.seed,
+            par_threads: 1,
+        };
+        let with_root = self.inner.kernel == BfsKernel::GpuBfsWr;
+        let improved_wr = with_root && self.inner.driver == ApDriver::Apsb;
+        let uses_worklists = self.inner.frontier != FrontierMode::FullScan;
+
+        let mut state = GpuState::new_in(g, &init, ctx.pool());
+        let mut clocks = ShardClocks::new(k);
+        let mut cardinality = init.cardinality();
+
+        // Per-shard local frontiers (Compacted phases only) and the
+        // per-shard claim buffers the exchange router consumes per level.
+        let per_shard_cap = g.nc / k + 1;
+        let (mut frontiers, mut nexts): (Vec<Vec<u32>>, Vec<Vec<u32>>) = if uses_worklists {
+            (
+                (0..k).map(|_| ctx.lease_worklist_u32(per_shard_cap)).collect(),
+                (0..k).map(|_| ctx.lease_worklist_u32(per_shard_cap)).collect(),
+            )
+        } else {
+            ((0..k).map(|_| Vec::new()).collect(), (0..k).map(|_| Vec::new()).collect())
+        };
+        let mut claims: Vec<Vec<u32>> =
+            (0..k).map(|_| ctx.lease_worklist_u32(per_shard_cap)).collect();
+        let mut endpoints = ctx.lease_worklist_u32(g.nr);
+        // global worklist the replicated init emits before it is split by
+        // owner into the per-shard frontiers
+        let mut seed_frontier = ctx.lease_worklist_u32(g.nc);
+        // scratch for the exchange router: (msgs, words) per source shard
+        let mut per_source: Vec<(u64, u64)> = vec![(0, 0); k];
+        let mut dest_items: Vec<u64> = vec![0; k];
+        let mut outcome = RunOutcome::Complete;
+
+        loop {
+            if let Some(trip) = ctx.checkpoint() {
+                outcome = trip;
+                break;
+            }
+            // per-phase frontier mode, same density rule as the unsharded
+            // driver's Adaptive handling
+            let compacted = match self.inner.frontier {
+                FrontierMode::FullScan => false,
+                FrontierMode::Compacted => true,
+                FrontierMode::Adaptive => {
+                    (g.nc - cardinality) * crate::gpu::config::ADAPTIVE_DENSITY_DIV < g.nc
+                }
+            };
+            // ---- replicated phase init: every device re-derives the
+            // phase state from its replicated row/column arrays, so the
+            // work is billed once per device (charge_replicated) and no
+            // exchange is needed — each shard keeps only its own residents
+            // of the emitted worklist.
+            let mut scratch = DeviceClock::default();
+            if compacted {
+                init_bfs_array_frontier(&mut state, cfg, with_root, &mut seed_frontier, &mut scratch);
+                for f in frontiers.iter_mut() {
+                    f.clear();
+                }
+                for n in nexts.iter_mut() {
+                    n.clear();
+                }
+                for &c in seed_frontier.iter() {
+                    frontiers[part.owner_of(c as usize)].push(c);
+                }
+            } else {
+                init_bfs_array(&mut state, cfg, with_root, &mut scratch);
+            }
+            clocks.charge_replicated(&scratch);
+            endpoints.clear();
+
+            state.augmenting_path_found = false;
+            let mut bfs_level = L0;
+            let mut launches = 0u32;
+            loop {
+                state.vertex_inserted = false;
+                if compacted {
+                    let global: u64 = frontiers.iter().map(|f| f.len() as u64).sum();
+                    ctx.stats.frontier_total += global;
+                    ctx.stats.frontier_peak = ctx.stats.frontier_peak.max(global);
+                }
+                // ---- one BFS level, shard by shard (shard order is the
+                // legal serialization of the K concurrent devices)
+                for s in 0..k {
+                    claims[s].clear();
+                    let scanned = if compacted {
+                        if frontiers[s].is_empty() {
+                            continue; // idle device: no launch, no charge
+                        }
+                        match self.inner.kernel {
+                            BfsKernel::GpuBfs => gpubfs_frontier(
+                                g,
+                                &mut state,
+                                bfs_level,
+                                &frontiers[s],
+                                &mut claims[s],
+                                &mut endpoints,
+                                cfg,
+                                clocks.clock_mut(s),
+                            ),
+                            BfsKernel::GpuBfsWr => gpubfs_wr_frontier(
+                                g,
+                                &mut state,
+                                bfs_level,
+                                &frontiers[s],
+                                &mut claims[s],
+                                &mut endpoints,
+                                cfg,
+                                improved_wr,
+                                clocks.clock_mut(s),
+                            ),
+                        }
+                    } else {
+                        let range = part.range(s);
+                        if range.is_empty() {
+                            continue; // shard owns no columns
+                        }
+                        match self.inner.kernel {
+                            BfsKernel::GpuBfs => gpubfs_cols(
+                                g,
+                                &mut state,
+                                bfs_level,
+                                range,
+                                &mut claims[s],
+                                &mut endpoints,
+                                cfg,
+                                clocks.clock_mut(s),
+                            ),
+                            BfsKernel::GpuBfsWr => gpubfs_wr_cols(
+                                g,
+                                &mut state,
+                                bfs_level,
+                                range,
+                                &mut claims[s],
+                                &mut endpoints,
+                                cfg,
+                                improved_wr,
+                                clocks.clock_mut(s),
+                            ),
+                        }
+                    };
+                    ctx.stats.edges_scanned += scanned;
+                    launches += 1;
+                }
+                // ---- frontier exchange: route every claimed column to
+                // its owning shard. Claims of home-owned columns are free;
+                // a cross-shard claim ships its (row, column) endpoint
+                // pair — EXCHANGE_WORDS_PER_ITEM words — and each
+                // source→dest pair with traffic pays one message.
+                // Endpoint rows piggyback on these messages (the rows are
+                // replicated; only the claim traffic is priced), keeping
+                // exchange_words an exact function of cross-shard claims.
+                for s in 0..k {
+                    let mut cross = 0u64;
+                    dest_items.iter_mut().for_each(|d| *d = 0);
+                    for &c in claims[s].iter() {
+                        let d = part.owner_of(c as usize);
+                        if compacted {
+                            nexts[d].push(c);
+                        }
+                        if d != s {
+                            cross += 1;
+                            dest_items[d] += 1;
+                        }
+                    }
+                    let msgs = dest_items.iter().filter(|&&n| n > 0).count() as u64;
+                    per_source[s] = (msgs, cross * EXCHANGE_WORDS_PER_ITEM);
+                }
+                clocks.charge_exchange(&per_source);
+                clocks.barrier();
+                if self.inner.driver == ApDriver::Apsb && state.augmenting_path_found {
+                    break;
+                }
+                if !state.vertex_inserted {
+                    break;
+                }
+                if compacted {
+                    std::mem::swap(&mut frontiers, &mut nexts);
+                    for n in nexts.iter_mut() {
+                        n.clear();
+                    }
+                }
+                bfs_level += 1;
+            }
+            ctx.stats.record_phase(launches);
+            if !state.augmenting_path_found {
+                break; // Berge: no augmenting path ⇒ maximum
+            }
+
+            // ---- replicated augmentation + repair: ALTERNATE and
+            // FIXMATCHING run mirrored on every device over the replicated
+            // row arrays. The endpoint worklist the shards accumulated is
+            // always available under sharding (the exchange gathered it),
+            // but the *selection cost* mirrors the unsharded driver —
+            // FullScan phases are billed the O(nr) selection scan, so a
+            // 1-shard run reproduces the unsharded bill exactly.
+            let before = cardinality;
+            ctx.stats.endpoints_total += endpoints.len() as u64;
+            let mut scratch = DeviceClock::default();
+            if !compacted {
+                // the unsharded FullScan ALTERNATE selects `-2` rows by an
+                // ascending all-rows scan; sort the gathered worklist into
+                // that order so thread/warp grouping — and hence the
+                // modeled step costs — match the unsharded driver exactly
+                // (rows are flagged at most once per phase, so the sorted
+                // list is precisely the scan's selection)
+                endpoints.sort_unstable();
+            }
+            if improved_wr {
+                if compacted {
+                    charge_frontier_scan(&mut scratch, cfg.mapping, endpoints.len());
+                } else {
+                    charge_uniform_scan(&mut scratch, cfg.mapping, g.nr);
+                }
+                let chosen = wr_chosen_endpoints_from(&state, &endpoints);
+                alternate(&mut state, cfg, Some(chosen.as_slice()), &mut scratch);
+            } else {
+                if !compacted {
+                    charge_uniform_scan(&mut scratch, cfg.mapping, g.nr);
+                }
+                alternate(&mut state, cfg, Some(endpoints.as_slice()), &mut scratch);
+            }
+            let (fixes, after) = fixmatching(&mut state, cfg, &mut scratch);
+            clocks.charge_replicated(&scratch);
+            ctx.stats.fixes += fixes;
+            let after = after as usize;
+            debug_assert_eq!(after, state.cardinality(), "incremental |M| diverged");
+            cardinality = after;
+            ctx.stats.augmentations += after.saturating_sub(before) as u64;
+
+            // same safety net as the unsharded driver: host-side, free of
+            // modeled cycles, guarantees termination under any schedule
+            if after <= before {
+                if augment_one_sequential(g, &mut state) {
+                    ctx.stats.fallbacks += 1;
+                    ctx.stats.augmentations += 1;
+                    cardinality += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+
+        let combined = clocks.makespan();
+        ctx.stats.device_cycles += combined.cycles;
+        ctx.stats.device_parallel_cycles += combined.parallel_cycles;
+        ctx.stats.shards = k as u64;
+        ctx.stats.exchange_words += clocks.exchange_words;
+        ctx.stats.exchange_steps += clocks.exchange_steps;
+
+        if uses_worklists {
+            for f in frontiers {
+                ctx.give_u32(f);
+            }
+            for n in nexts {
+                ctx.give_u32(n);
+            }
+        }
+        for c in claims {
+            ctx.give_u32(c);
+        }
+        ctx.give_u32(endpoints);
+        ctx.give_u32(seed_frontier);
+        let m = state.release(ctx.pool());
+        (ctx.finish_with(m, outcome), combined)
+    }
+}
+
+impl MatchingAlgorithm for ShardedGpuMatcher {
+    fn name(&self) -> String {
+        format!("shard{}:gpu:{}", self.shards.max(1), self.inner.name())
+    }
+
+    fn run(&self, g: &BipartiteCsr, init: Matching, ctx: &mut RunCtx) -> RunResult {
+        self.run_with_clock(g, init, ctx).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::Family;
+    use crate::matching::init::InitHeuristic;
+
+    #[test]
+    fn sharded_reaches_reference_on_small_graph() {
+        let g = crate::graph::from_edges(3, 3, &[(0, 0), (1, 0), (1, 1), (2, 1), (2, 2)]);
+        for k in [1, 2, 4] {
+            let m = ShardedGpuMatcher::new(GpuConfig::default(), k);
+            let r = m.run_detached(&g, Matching::empty(3, 3));
+            r.matching.certify(&g).unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+            assert_eq!(r.matching.cardinality(), 3, "{}", m.name());
+            assert_eq!(r.stats.shards, k as u64);
+        }
+    }
+
+    #[test]
+    fn single_shard_bills_exactly_the_unsharded_cycles() {
+        // K=1 must degenerate to the unsharded driver: same cardinality
+        // and identical modeled cycles in both views (no exchange, the
+        // replicated phases are the whole run)
+        for frontier in [FrontierMode::FullScan, FrontierMode::Compacted] {
+            // pad the column side so the maximum matching leaves columns
+            // unmatched: the terminal phase's frontier is then non-empty,
+            // and both drivers pay the same terminal launch (the sharded
+            // driver skips launches over *empty* local frontiers, which on
+            // a column-perfect graph would shave the unsharded driver's
+            // final empty sweep)
+            let base_g = Family::Road.generate(1500, 11);
+            let g = crate::graph::from_edges(base_g.nr, base_g.nc + 7, &base_g.edges());
+            let init = InitHeuristic::Cheap.run(&g);
+            let cfg = GpuConfig { frontier, ..Default::default() };
+            let base = crate::gpu::GpuMatcher::new(cfg).run_detached(&g, init.clone());
+            let sharded = ShardedGpuMatcher::new(cfg, 1).run_detached(&g, init);
+            assert_eq!(base.matching.cardinality(), sharded.matching.cardinality());
+            assert_eq!(
+                base.stats.device_cycles, sharded.stats.device_cycles,
+                "{frontier:?}: K=1 serial bill must match unsharded"
+            );
+            assert_eq!(
+                base.stats.device_parallel_cycles, sharded.stats.device_parallel_cycles,
+                "{frontier:?}: K=1 parallel bill must match unsharded"
+            );
+            assert_eq!(sharded.stats.exchange_words, 0, "K=1 cannot move words");
+            assert_eq!(sharded.stats.exchange_steps, 0);
+        }
+    }
+
+    #[test]
+    fn exchange_counters_flow_into_stats() {
+        let g = Family::Uniform.generate(1200, 5);
+        let init = InitHeuristic::Cheap.run(&g);
+        let m = ShardedGpuMatcher::new(GpuConfig::default().compacted(), 4);
+        let r = m.run_detached(&g, init);
+        r.matching.certify(&g).unwrap();
+        assert_eq!(r.stats.shards, 4);
+        // uniform random edges scatter claims across shards: some level
+        // must have routed cross-shard traffic
+        assert!(r.stats.exchange_steps > 0, "uniform family must exchange");
+        assert!(r.stats.exchange_words > 0);
+        assert_eq!(r.stats.exchange_words % EXCHANGE_WORDS_PER_ITEM, 0);
+    }
+
+    #[test]
+    fn wire_name_is_stable() {
+        let m = ShardedGpuMatcher::new(GpuConfig::default().compacted(), 4);
+        assert_eq!(m.name(), "shard4:gpu:APFB-GPUBFS-WR-CT-FC");
+    }
+}

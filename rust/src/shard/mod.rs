@@ -1,0 +1,52 @@
+//! Sharded multi-device execution: one matching run partitioned
+//! column-wise across K simulated devices with a modeled interconnect.
+//!
+//! ## Execution model
+//!
+//! * [`partition::ColPartition`] splits the CSR's columns into K
+//!   contiguous, edge-balanced ranges; row arrays (`rmatch`,
+//!   `predecessor`) are replicated on every device.
+//! * [`driver::ShardedGpuMatcher`] runs the paper's phase loop
+//!   bulk-synchronously: within each BFS level every shard launches the
+//!   level kernel over its own columns (full-scan via
+//!   `gpu::kernels::gpubfs_cols` / `gpubfs_wr_cols`, or its local
+//!   frontier worklist under `FrontierMode::Compacted`), then an
+//!   explicit *frontier exchange* routes every claimed column to its
+//!   owning shard and a barrier aligns the per-shard clocks.
+//! * `gpu::device::ShardClocks` carries one `DeviceClock` per shard plus
+//!   the interconnect tallies. Exchange traffic is priced like the rest
+//!   of the cost model — `EXCHANGE_MSG_COST` per source→dest batch,
+//!   `EXCHANGE_WORD_COST` per 32-bit word, `EXCHANGE_WORDS_PER_ITEM`
+//!   words per routed `(row, column)` pair — and the run's bill is
+//!   `ShardClocks::makespan`: BSP makespan in the parallel view (max
+//!   shard clock, exchange bottlenecks included), total work plus the
+//!   full serial exchange bill in the serial view.
+//! * Phases with no parallelism across columns (INITBFSARRAY, ALTERNATE,
+//!   FIXMATCHING, endpoint selection) run *replicated*: every device
+//!   performs them over its replicated arrays, so the makespan pays one
+//!   copy and the work view pays K.
+//!
+//! `shards == 1` degenerates to the unsharded `gpu::driver` bill
+//! exactly; the cardinality is identical to unsharded execution for
+//! every K (the host executes shards sequentially — one legal
+//! serialization of the device race, and the matching cardinality is
+//! schedule-independent).
+//!
+//! The partition/exchange shape follows the distributed-memory matching
+//! literature — notably Birn, Osipov, Sanders, Schulz, Sitchinava,
+//! *"Efficient Parallel and External Matching"* (Euro-Par 2013), whose
+//! partitioned graph + owner-routed border-vertex exchange this module
+//! adapts to the paper's push-style BFS phases — rather than any shared
+//! memory decomposition: the interconnect is charged explicitly so the
+//! benches can quantify when sharding pays and when the exchange tax
+//! eats the win (`benches/bench_shard.rs`).
+//!
+//! Wire syntax: `shard{K}:gpu:{variant}` (e.g.
+//! `shard4:gpu:APFB-GPUBFS-WR-CT-FC`), registered for K ∈ {2, 4, 8} and
+//! parseable for any K ≥ 1.
+
+pub mod driver;
+pub mod partition;
+
+pub use driver::ShardedGpuMatcher;
+pub use partition::ColPartition;

@@ -1,0 +1,201 @@
+//! Column-wise CSR partitioning for sharded execution.
+//!
+//! A [`ColPartition`] assigns every column of a [`BipartiteCsr`] to
+//! exactly one of `K` simulated devices as a *contiguous range*,
+//! balanced by edge count (each shard's BFS sweep cost is proportional
+//! to the edges it scans, not the columns it owns). Contiguity keeps
+//! ownership lookups a binary search over `K+1` cut points and lets the
+//! per-shard full-scan kernels (`gpu::kernels::gpubfs_cols`) launch over
+//! a plain range — no ownership indirection on the hot path.
+//!
+//! Rows are replicated: every shard can read any row's `rmatch` /
+//! `predecessor` slot, but a BFS step that *claims* a column owned by
+//! another shard must route the `(row, column)` pair over the modeled
+//! interconnect (see `gpu::device::EXCHANGE_WORDS_PER_ITEM`). The rows
+//! whose neighbor columns span more than one shard — the *boundary
+//! rows* — are the only possible sources of such traffic, which is what
+//! [`ColPartition::boundary_edge_count`] quantifies.
+
+use crate::graph::csr::BipartiteCsr;
+use std::ops::Range;
+
+/// A contiguous, edge-balanced partition of the columns of one graph
+/// across `K` shards. Shard `s` owns columns `cuts[s] .. cuts[s+1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColPartition {
+    /// `K + 1` monotone cut points; `cuts[0] == 0`, `cuts[K] == nc`.
+    cuts: Vec<u32>,
+}
+
+impl ColPartition {
+    /// Partition `g`'s columns into `shards` contiguous ranges with
+    /// (approximately) equal edge counts, using the CSR column offsets
+    /// (`cxadj`) as the prefix-sum oracle: the cut for shard boundary
+    /// `s` is the first column whose edge prefix reaches `s/K` of the
+    /// total. Degenerate inputs are handled: `shards == 0` is clamped
+    /// to 1, an edgeless graph falls back to column-count balance, and
+    /// graphs with fewer columns than shards leave the tail shards
+    /// empty (their ranges are valid and zero-length).
+    pub fn new(g: &BipartiteCsr, shards: usize) -> Self {
+        let k = shards.max(1);
+        let nc = g.nc;
+        let total = g.n_edges() as u64;
+        let mut cuts = Vec::with_capacity(k + 1);
+        cuts.push(0u32);
+        for s in 1..k {
+            let cut = if total == 0 {
+                // edgeless: balance by column count
+                (nc * s / k) as u32
+            } else {
+                let target = total * s as u64 / k as u64;
+                // first column whose prefix reaches the target share
+                g.cxadj.partition_point(|&x| (x as u64) < target) as u32
+            };
+            // monotone: never cut before the previous shard's end
+            let prev = *cuts.last().unwrap();
+            cuts.push(cut.max(prev).min(nc as u32));
+        }
+        cuts.push(nc as u32);
+        Self { cuts }
+    }
+
+    /// Number of shards (always >= 1).
+    pub fn shards(&self) -> usize {
+        self.cuts.len() - 1
+    }
+
+    /// The contiguous column range shard `s` owns (possibly empty).
+    pub fn range(&self, s: usize) -> Range<usize> {
+        self.cuts[s] as usize..self.cuts[s + 1] as usize
+    }
+
+    /// The shard owning column `c`. `c` must be `< nc`.
+    pub fn owner_of(&self, c: usize) -> usize {
+        debug_assert!((c as u32) < *self.cuts.last().unwrap(), "column out of range");
+        // cuts[1..] is sorted; the owner is the first boundary > c
+        self.cuts[1..].partition_point(|&cut| cut <= c as u32)
+    }
+
+    /// Number of edges incident to *boundary rows* — rows whose neighbor
+    /// columns span at least two shards. Because ranges are contiguous,
+    /// a row is interior iff its minimum and maximum neighbor columns
+    /// share an owner. Every cross-shard item the frontier exchange
+    /// routes originates at a boundary row (the claimed column is the
+    /// row's match, which is one of its neighbors), so per phase the
+    /// routed item count is bounded by the number of boundary rows,
+    /// itself at most this edge count.
+    pub fn boundary_edge_count(&self, g: &BipartiteCsr) -> u64 {
+        let mut edges = 0u64;
+        for r in 0..g.nr {
+            let neigh = g.row_neighbors(r);
+            if neigh.is_empty() {
+                continue;
+            }
+            let mut lo = neigh[0];
+            let mut hi = neigh[0];
+            for &c in &neigh[1..] {
+                lo = lo.min(c);
+                hi = hi.max(c);
+            }
+            if self.owner_of(lo as usize) != self.owner_of(hi as usize) {
+                edges += neigh.len() as u64;
+            }
+        }
+        edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::from_edges;
+    use crate::graph::gen::Family;
+
+    #[test]
+    fn every_column_owned_by_exactly_one_shard() {
+        for fam in Family::ALL {
+            let g = fam.generate(300, 5);
+            for k in [1usize, 2, 3, 4, 8] {
+                let p = ColPartition::new(&g, k);
+                assert_eq!(p.shards(), k);
+                // ranges tile [0, nc): disjoint and covering
+                let mut covered = 0usize;
+                for s in 0..k {
+                    let r = p.range(s);
+                    assert_eq!(r.start, covered, "ranges must tile contiguously");
+                    covered = r.end;
+                    for c in r.clone() {
+                        assert_eq!(p.owner_of(c), s, "owner_of must agree with range()");
+                    }
+                }
+                assert_eq!(covered, g.nc, "{} k={k}: ranges must cover all columns", fam.name());
+            }
+        }
+    }
+
+    #[test]
+    fn edge_balance_within_tolerance() {
+        // each shard's edge load must stay within 2x of the ideal share
+        // plus one max-degree column (cuts are quantized to columns)
+        for fam in [Family::Uniform, Family::Road, Family::Kron] {
+            let g = fam.generate(2000, 9);
+            let total = g.n_edges();
+            for k in [2usize, 4, 8] {
+                let p = ColPartition::new(&g, k);
+                let slack = total / k + g.max_col_degree();
+                for s in 0..k {
+                    let load: usize = p.range(s).map(|c| g.col_degree(c)).sum();
+                    assert!(
+                        load <= total / k + slack,
+                        "{} k={k} shard {s}: load {load} vs ideal {}",
+                        fam.name(),
+                        total / k
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything_and_has_no_boundary() {
+        let g = Family::Banded.generate(400, 3);
+        let p = ColPartition::new(&g, 1);
+        assert_eq!(p.range(0), 0..g.nc);
+        assert_eq!(p.boundary_edge_count(&g), 0, "K=1 has no shard boundaries");
+    }
+
+    #[test]
+    fn boundary_edges_counted_exactly_on_a_known_graph() {
+        // 4 columns, rows: r0 -> {c0, c1} (interior if same owner),
+        // r1 -> {c1, c2} (spans the K=2 cut), r2 -> {c3}
+        let g = from_edges(3, 4, &[(0, 0), (0, 1), (1, 1), (1, 2), (2, 3)]);
+        let p = ColPartition::new(&g, 2);
+        // 5 edges, cut lands at column 2: shard 0 = {c0, c1}, shard 1 = {c2, c3}
+        assert_eq!(p.range(0), 0..2);
+        assert_eq!(p.range(1), 2..4);
+        // r1's neighbors {c1, c2} span both shards: its 2 edges are boundary
+        assert_eq!(p.boundary_edge_count(&g), 2);
+    }
+
+    #[test]
+    fn more_shards_than_columns_leaves_empty_tails() {
+        let g = from_edges(2, 3, &[(0, 0), (1, 1), (1, 2)]);
+        let p = ColPartition::new(&g, 8);
+        assert_eq!(p.shards(), 8);
+        let covered: usize = (0..8).map(|s| p.range(s).len()).sum();
+        assert_eq!(covered, 3);
+        for c in 0..3 {
+            let o = p.owner_of(c);
+            assert!(p.range(o).contains(&c));
+        }
+    }
+
+    #[test]
+    fn edgeless_graph_balances_by_columns() {
+        let g = from_edges(4, 8, &[]);
+        let p = ColPartition::new(&g, 4);
+        for s in 0..4 {
+            assert_eq!(p.range(s).len(), 2);
+        }
+    }
+}

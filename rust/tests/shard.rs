@@ -1,0 +1,119 @@
+//! Sharded-execution integration: a sharded run must reach the unsharded
+//! cardinality for every shard count × generator family × frontier mode,
+//! and the modeled interconnect charge must respect the partitioner's
+//! boundary-edge bound.
+
+use bimatch::coordinator::registry;
+use bimatch::gpu::device::EXCHANGE_WORDS_PER_ITEM;
+use bimatch::gpu::GpuConfig;
+use bimatch::graph::gen::Family;
+use bimatch::matching::init::InitHeuristic;
+use bimatch::matching::{reference_max_cardinality, Matching};
+use bimatch::shard::{ColPartition, ShardedGpuMatcher};
+use bimatch::MatchingAlgorithm;
+
+/// The acceptance matrix: K ∈ {1, 2, 4, 8} × every generator family ×
+/// {FullScan, Compacted} all agree with the reference cardinality.
+#[test]
+fn sharded_matches_reference_for_every_family_shard_count_and_mode() {
+    for family in Family::ALL {
+        let g = family.generate(600, 21);
+        let want = reference_max_cardinality(&g);
+        let init = InitHeuristic::Cheap.run(&g);
+        for cfg in [GpuConfig::default(), GpuConfig::default().compacted()] {
+            for k in [1usize, 2, 4, 8] {
+                let algo = ShardedGpuMatcher::new(cfg, k);
+                let r = algo.run_detached(&g, init.clone());
+                r.matching
+                    .certify(&g)
+                    .unwrap_or_else(|e| panic!("{} on {}: {e}", algo.name(), family.name()));
+                assert_eq!(
+                    r.matching.cardinality(),
+                    want,
+                    "{} on {}",
+                    algo.name(),
+                    family.name()
+                );
+                assert_eq!(r.stats.shards, k as u64, "{}", algo.name());
+            }
+        }
+    }
+}
+
+/// Random graphs: sharded cardinality equals the reference for every
+/// shard count, from an empty initial matching.
+#[test]
+fn prop_sharded_matches_reference_on_random_graphs() {
+    use bimatch::util::qcheck::{arb_bipartite, forall, Config};
+    forall(Config::cases(20), |rng| {
+        let (nr, nc, edges) = arb_bipartite(rng, 30);
+        let g = bimatch::graph::from_edges(nr, nc, &edges);
+        let want = reference_max_cardinality(&g);
+        for k in [1usize, 2, 4, 8] {
+            let algo = ShardedGpuMatcher::new(GpuConfig::default().compacted(), k);
+            let r = algo.run_detached(&g, Matching::empty(nr, nc));
+            r.matching.certify(&g).map_err(|e| e.to_string())?;
+            if r.matching.cardinality() != want {
+                return Err(format!("shard{k} suboptimal: {}", r.matching.cardinality()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Interconnect invariants: every routed item is a cross-shard column
+/// claim, each claimed column crosses at most once per phase, and a
+/// cross-shard claim travels an edge incident to a boundary row — so the
+/// total words are a multiple of the per-item size and bounded by
+/// `phases × boundary_edge_count` items. One shard routes nothing.
+#[test]
+fn exchange_charge_is_bounded_by_boundary_edges() {
+    for family in [Family::Uniform, Family::Kron, Family::Road, Family::Banded] {
+        let g = family.generate(900, 13);
+        for cfg in [GpuConfig::default(), GpuConfig::default().compacted()] {
+            for k in [2usize, 4, 8] {
+                let part = ColPartition::new(&g, k);
+                let boundary = part.boundary_edge_count(&g);
+                let algo = ShardedGpuMatcher::new(cfg, k);
+                let r = algo.run_detached(&g, InitHeuristic::Cheap.run(&g));
+                let words = r.stats.exchange_words;
+                assert_eq!(
+                    words % EXCHANGE_WORDS_PER_ITEM,
+                    0,
+                    "{} on {}: fractional items",
+                    algo.name(),
+                    family.name()
+                );
+                assert!(
+                    words / EXCHANGE_WORDS_PER_ITEM <= r.stats.phases * boundary,
+                    "{} on {}: {} routed items exceed {} phases x {} boundary edges",
+                    algo.name(),
+                    family.name(),
+                    words / EXCHANGE_WORDS_PER_ITEM,
+                    r.stats.phases,
+                    boundary
+                );
+            }
+        }
+        let single = ShardedGpuMatcher::new(GpuConfig::default().compacted(), 1);
+        let r = single.run_detached(&g, InitHeuristic::Cheap.run(&g));
+        assert_eq!(r.stats.exchange_words, 0, "one shard must route nothing");
+        assert_eq!(r.stats.exchange_steps, 0, "one shard must route nothing");
+    }
+}
+
+/// The registry path end to end: a `shard<K>:gpu:…` name builds a matcher
+/// that agrees with its unsharded inner variant.
+#[test]
+fn registry_built_sharded_matcher_agrees_with_unsharded() {
+    let g = Family::Social.generate(800, 9);
+    let init = InitHeuristic::Cheap.run(&g);
+    let unsharded = registry::build_named("gpu:APFB-GPUBFS-WR-CT-FC", None).unwrap();
+    let want = unsharded.run_detached(&g, init.clone()).matching.cardinality();
+    for name in ["shard2:gpu:APFB-GPUBFS-WR-CT-FC", "shard4:gpu:APsB-GPUBFS-CT", "shard8:gpu"] {
+        let algo = registry::build_named(name, None).unwrap();
+        let r = algo.run_detached(&g, init.clone());
+        r.matching.certify(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(r.matching.cardinality(), want, "{name}");
+    }
+}
