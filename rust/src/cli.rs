@@ -33,7 +33,7 @@ USAGE:
   bimatch verify --mtx <path>          cross-check several algorithms on a file
   bimatch serve  [--addr <ip:port>] [--data-dir <path>] [--max-graphs <n>]
                 [--replicate-from <ip:port>] [--ack-mode local|quorum]
-                [--snapshot-shards <k>]
+                [--snapshot-shards <k>] [--slow-ms <int>] [--trace-cap <n>]
                 TCP line-protocol matching service
                 (one-shot MATCH plus the incremental verbs: LOAD name=…
                 installs a graph server-side, UPDATE name=… add=r:c,…
@@ -59,9 +59,28 @@ USAGE:
                 --snapshot-shards k writes each snapshot as k per-shard
                 files (column-partitioned like shard<k>: execution) under
                 the same per-graph WAL; recovery and fsck read either
-                layout. SIGTERM or SIGINT triggers a graceful stop:
+                layout. Observability: every job is span-traced into a
+                ring (--trace-cap entries, default 256, 0 disarms);
+                TRACE [name=<g>] [last=<n>] streams the newest traces as
+                JSON lines, METRICS serves Prometheus text (process,
+                per-spec, and per-graph families), STATS graph=<g> gives
+                one graph's serving breakdown, and --slow-ms logs a
+                compact span summary to stderr for any job at or over
+                the threshold (counted as jobs: slow= in STATS).
+                SIGTERM or SIGINT triggers a graceful stop:
                 in-flight requests drain, WALs fsync, then the process
                 exits)
+  bimatch profile (--family <name> --n <int> [--seed <int>] [--permute] | --mtx <path>)
+                [--algo <name>|auto] [--init none|cheap|ks] [--no-certify]
+                [--out <path.json>]
+                run one job with span tracing armed and emit the full
+                kernel/phase timeline as a Chrome trace_event JSON
+                document (load chrome://tracing or ui.perfetto.dev; the
+                host process shows wall-clock \u{b5}s spans, the device
+                process renders one modeled cycle per \u{b5}s — the
+                paper's Fig. 2 per-phase kernel breakdown, reconstructed
+                from a run). Without --out the document goes to stdout
+                (diagnostics go to stderr, so piping stays clean)
   bimatch fsck   --data-dir <path>     offline durability check: verifies WAL
                 frame checksums, incarnation monotonicity, and
                 snapshot↔WAL consistency for every graph in the data
@@ -125,6 +144,7 @@ pub fn main_with_args(args: Vec<String>) -> i32 {
         "gen" => cmd_gen(&flags),
         "verify" => cmd_verify(&flags),
         "serve" => cmd_serve(&flags),
+        "profile" => cmd_profile(&flags),
         "fsck" => cmd_fsck(&flags),
         "algos" | "--list-algos" => {
             for n in registry::all_names() {
@@ -327,6 +347,76 @@ fn cmd_verify(flags: &HashMap<String, String>) -> i32 {
     0
 }
 
+/// Run one traced job and emit its Chrome `trace_event` timeline — the
+/// paper's Fig. 2 per-phase kernel breakdown, reconstructed from a live
+/// run. JSON goes to `--out` (or stdout); diagnostics go to stderr.
+fn cmd_profile(flags: &HashMap<String, String>) -> i32 {
+    let source = match source_from_flags(flags) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut job = MatchJob::new(0, source);
+    if let Some(name) = flags.get("algo").filter(|a| a.as_str() != "auto") {
+        match name.parse::<AlgoSpec>() {
+            Ok(spec) => job = job.with_spec(spec),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(init) = flags.get("init") {
+        match InitHeuristic::from_name(init) {
+            Some(h) => job.init = h,
+            None => {
+                eprintln!("unknown --init {init}");
+                return 2;
+            }
+        }
+    }
+    job.certify = !flags.contains_key("no-certify");
+    // a one-slot ring: the single job's trace is all we keep
+    let ring = crate::trace::TraceRing::new(1);
+    let exec = Executor::new(engine_if_available(), Arc::new(Metrics::new()))
+        .with_trace_ring(ring.clone());
+    let o = exec.execute(&job);
+    if let Some(e) = o.error {
+        eprintln!("ERROR: {e}");
+        return 1;
+    }
+    let traces = ring.recent(None, 1);
+    let Some(t) = traces.first() else {
+        eprintln!("no trace captured");
+        return 1;
+    };
+    let doc = t.to_chrome_trace();
+    eprintln!(
+        "profiled {} on {}x{} ({} edges): cardinality {}, {} phases, {} kernel launches, \
+         {} spans ({} dropped)",
+        t.algo, o.nr, o.nc, o.n_edges, o.cardinality, t.phases, t.launches,
+        t.spans.len(), t.dropped_spans,
+    );
+    match flags.get("out") {
+        Some(path) => match std::fs::write(path, &doc) {
+            Ok(()) => {
+                eprintln!("wrote {path}");
+                0
+            }
+            Err(e) => {
+                eprintln!("write {path} failed: {e}");
+                1
+            }
+        },
+        None => {
+            println!("{doc}");
+            0
+        }
+    }
+}
+
 /// Set by the process signal handler; a watcher thread forwards it to the
 /// server's stop handle (handlers themselves must stay async-signal-safe,
 /// so the handler only flips this flag).
@@ -392,6 +482,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
         None => 1,
     };
+    let slow_ms = match flags.get("slow-ms").map(|v| v.parse::<u64>()) {
+        Some(Ok(ms)) => Some(ms),
+        Some(Err(e)) => {
+            eprintln!("bad --slow-ms: {e}");
+            return 2;
+        }
+        None => None,
+    };
     let durable = data_dir.is_some();
     let mut cfg = ServerCfg::new(addr);
     cfg.engine = engine_if_available();
@@ -400,6 +498,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     cfg.snapshot_shards = snapshot_shards;
     cfg.replicate_from = replicate_from.clone();
     cfg.ack_mode = ack_mode;
+    cfg.slow_ms = slow_ms;
+    if let Some(cap) = flags.get("trace-cap") {
+        match cap.parse::<usize>() {
+            Ok(n) => cfg.trace_capacity = n,
+            Err(e) => {
+                eprintln!("bad --trace-cap: {e}");
+                return 2;
+            }
+        }
+    }
     match Server::bind_cfg(cfg) {
         Ok(server) => {
             println!("bimatch service listening on {}", server.local_addr().unwrap());
@@ -419,7 +527,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 "protocol: MATCH family=<f> n=<n> [seed=..] [permute=0|1] [algo=..] | \
                  LOAD name=<g> family=..|mtx=.. | UPDATE name=<g> [add=r:c,..] [del=r:c,..] \
                  [addcols=r;r|..] [addrows=c;c|..] | MATCH name=<g> | DROP name=<g> | \
-                 SAVE name=<g> | ALGOS | GRAPHS | STATS | LAG | PROMOTE | QUIT"
+                 SAVE name=<g> | ALGOS | GRAPHS | STATS [graph=<g>] | \
+                 TRACE [name=<g>] [last=<n>] | METRICS | LAG | PROMOTE | QUIT"
             );
             // SIGTERM/SIGINT → graceful stop: the watcher flips the stop
             // handle, serve() drains in-flight requests and fsyncs WALs
@@ -646,6 +755,39 @@ mod tests {
         assert_eq!(code, 0);
         let code = cmd_verify(&flags(&[("mtx", path.to_str().unwrap())]));
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn profile_command_writes_chrome_trace_json() {
+        let dir = std::env::temp_dir().join("bimatch_cli_profile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let code = cmd_profile(&flags(&[
+            ("family", "road"),
+            ("n", "800"),
+            ("seed", "3"),
+            ("algo", "gpu:APFB-GPUBFS-WR-CT-FC"),
+            ("out", path.to_str().unwrap()),
+        ]));
+        assert_eq!(code, 0);
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.starts_with("{\"traceEvents\":["), "{}", &doc[..80.min(doc.len())]);
+        assert!(doc.trim_end().ends_with('}'), "truncated document");
+        // both trace processes are named, and kernel spans made it in
+        assert!(doc.contains("process_name"), "missing metadata events");
+        assert!(doc.contains("modeled cycles"), "missing device process");
+        assert!(doc.contains("\"cat\":\"kernel\""), "missing kernel spans");
+        assert!(doc.contains("\"cat\":\"phase\""), "missing phase spans");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn profile_command_rejects_bad_inputs() {
+        assert_eq!(cmd_profile(&flags(&[("family", "nope"), ("n", "100")])), 2);
+        assert_eq!(
+            cmd_profile(&flags(&[("family", "uniform"), ("n", "100"), ("algo", "wat")])),
+            2
+        );
     }
 
     #[test]

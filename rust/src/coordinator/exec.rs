@@ -30,7 +30,7 @@ use super::job::{AlgoChoice, GraphSource, JobError, JobOp, MatchJob, MatchOutcom
 use super::metrics::Metrics;
 use super::registry;
 use super::router;
-use super::store::{CachedMatching, GraphStore, StoreEntry};
+use super::store::{CachedMatching, GraphStats, GraphStore, StoreEntry};
 use crate::dynamic::{self, DeltaBatch, DynamicGraph};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::algo::{CancelToken, RunCtx, RunOutcome};
@@ -39,6 +39,7 @@ use crate::persist::replicate::{self, AckMode, Event, EventKind, Hub, NodeRole};
 use crate::persist::{self, recover, snapshot, wal, Persistence, RecoveryReport};
 use crate::runtime::Engine;
 use crate::sanitize::lockorder::{self, LockClass};
+use crate::trace::{self, JobTrace, TraceBuf, TraceRing};
 use crate::util::pool::WorkspacePool;
 use crate::util::timer::Timer;
 use std::sync::atomic::Ordering;
@@ -68,6 +69,15 @@ pub struct Executor {
     hub: Arc<Hub>,
     ack_mode: AckMode,
     ack_timeout: Duration,
+    /// span-trace sink: when set, every job records root spans (and arms
+    /// the matcher's phase/kernel spans) and publishes a [`JobTrace`]
+    /// here — the `TRACE` verb's source. `None` keeps every
+    /// instrumentation site a single is-`None` branch.
+    traces: Option<Arc<TraceRing>>,
+    /// slow-request log threshold (`--slow-ms`): jobs at or over it get a
+    /// compact span summary on stderr and count under `jobs_slow`.
+    /// Arms span recording even without a ring.
+    slow_threshold: Option<Duration>,
 }
 
 /// The effective deadline for a job: `timeout` measured from `start`,
@@ -99,7 +109,157 @@ impl Executor {
             hub: Arc::new(Hub::new()),
             ack_mode: AckMode::Local,
             ack_timeout: DEFAULT_ACK_TIMEOUT,
+            traces: None,
+            slow_threshold: None,
         }
+    }
+
+    /// Arm span tracing: every job from here on records root/phase/kernel
+    /// spans and publishes a [`JobTrace`] into `ring` (what the `TRACE`
+    /// verb serves). Attach before cloning across workers.
+    pub fn with_trace_ring(mut self, ring: Arc<TraceRing>) -> Self {
+        self.traces = Some(ring);
+        self
+    }
+
+    /// Log jobs that take `threshold` or longer to stderr with a compact
+    /// per-span breakdown, counting them under `jobs_slow`. Implies span
+    /// recording (a slow job's trace exists to be summarized).
+    pub fn with_slow_threshold(mut self, threshold: Duration) -> Self {
+        self.slow_threshold = Some(threshold);
+        self
+    }
+
+    /// The trace ring, if tracing is armed.
+    pub fn trace_ring(&self) -> Option<&Arc<TraceRing>> {
+        self.traces.as_ref()
+    }
+
+    /// A fresh per-job span buffer, or `None` when tracing is disarmed.
+    /// The timebase is backdated to `job.submitted_at` (when the service
+    /// stamped one) so the queue wait opens the timeline as its own span.
+    fn trace_buf(&self, job: &MatchJob) -> Option<Box<TraceBuf>> {
+        if self.traces.is_none() && self.slow_threshold.is_none() {
+            return None;
+        }
+        Some(match job.submitted_at {
+            Some(t0) => {
+                let mut b = TraceBuf::with_origin(t0);
+                b.host_span("queue_wait", "job", 0, vec![]);
+                b
+            }
+            None => TraceBuf::new(),
+        })
+    }
+
+    /// Seal a job's trace: build the [`JobTrace`], emit the slow-request
+    /// log line when the job crossed the threshold, and publish to the
+    /// ring. `solve` carries `(kernel launches, modeled device cycles)`
+    /// from the run's `RunStats` (zeros when the op never solved).
+    fn seal_trace(
+        &self,
+        buf: Option<Box<TraceBuf>>,
+        job: &MatchJob,
+        op: &'static str,
+        out: &MatchOutcome,
+        solve: (u64, u64),
+        total_secs: f64,
+    ) {
+        let Some(buf) = buf else { return };
+        let slow = self
+            .slow_threshold
+            .is_some_and(|t| total_secs >= t.as_secs_f64());
+        if self.traces.is_none() && !slow {
+            return; // armed only for the slow log, and this job was fast
+        }
+        let graph = match (&job.op, &job.source) {
+            (JobOp::Load { name }, _)
+            | (JobOp::Update { name, .. }, _)
+            | (JobOp::DropGraph { name }, _)
+            | (JobOp::Save { name }, _) => Some(name.clone()),
+            (JobOp::Match, GraphSource::Stored(name)) => Some(name.clone()),
+            (JobOp::Match, _) => None,
+        };
+        let total_us = (total_secs * 1e6) as u64;
+        let (spans, dropped_spans) = buf.into_spans();
+        let t = JobTrace {
+            job_id: job.id,
+            op,
+            graph,
+            algo: out.algo.clone(),
+            start_unix_ms: trace::unix_ms().saturating_sub(total_us / 1000),
+            total_us,
+            ok: out.error.is_none(),
+            error: out.error.as_ref().map(|e| e.to_string()),
+            phases: out.phases,
+            launches: solve.0,
+            device_cycles: solve.1,
+            device_parallel_cycles: out.device_parallel_cycles,
+            shards: out.shards,
+            exchange_words: out.exchange_words,
+            cardinality: out.cardinality as u64,
+            spans,
+            dropped_spans,
+        };
+        if slow {
+            self.metrics.jobs_slow.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[bimatch] slow job #{} op={} graph={} algo={} total={:.1}ms: {}",
+                t.job_id,
+                t.op,
+                t.graph.as_deref().unwrap_or("-"),
+                if t.algo.is_empty() { "-" } else { &t.algo },
+                total_secs * 1e3,
+                t.summary(),
+            );
+        }
+        if let Some(ring) = &self.traces {
+            ring.publish(t);
+        }
+    }
+
+    /// The full Prometheus exposition the `METRICS` verb serves: every
+    /// process-wide counter/gauge/histogram plus the per-spec families
+    /// (from [`Metrics::prometheus`]), extended with per-graph serving
+    /// families from the store's [`GraphStats`].
+    pub fn prometheus(&self) -> String {
+        let mut s = self.metrics.prometheus();
+        let graphs = self.store.all_graph_stats();
+        if graphs.is_empty() {
+            return s;
+        }
+        type Get = fn(&GraphStats) -> u64;
+        let families: [(&str, &str, Get); 6] = [
+            ("bimatch_graph_matches_total", "MATCH jobs served per stored graph", |g| g.matches),
+            (
+                "bimatch_graph_recomputes_total",
+                "stored-graph matches solved from scratch (cold or stale cache)",
+                |g| g.recomputes,
+            ),
+            ("bimatch_graph_updates_total", "UPDATE batches committed per stored graph", |g| {
+                g.updates
+            }),
+            ("bimatch_graph_repairs_total", "incremental repairs run per stored graph", |g| {
+                g.repairs
+            }),
+            ("bimatch_graph_wal_appends_total", "WAL frames fsync'd per stored graph", |g| {
+                g.wal_appends
+            }),
+            ("bimatch_graph_snapshots_total", "snapshot files written per stored graph", |g| {
+                g.snapshots
+            }),
+        ];
+        for (name, help, get) in families {
+            s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+            for (graph, stats) in &graphs {
+                s.push_str(&format!(
+                    "{name}{{graph=\"{}\"}} {}\n",
+                    super::metrics::prom_label_escape(graph),
+                    get(stats)
+                ));
+            }
+        }
+        s
     }
 
     /// Attach a durability layer (`--data-dir`): from here on, `LOAD`s
@@ -403,6 +563,8 @@ impl Executor {
         // the deadline covers the whole job: load + init + matching
         let (deadline, budget_ms) = effective_deadline(job, Instant::now());
         let mut out = Self::blank(job.id);
+        let mut tbuf = self.trace_buf(job);
+        let load_mark = tbuf.as_ref().map(|b| b.now_us());
         // acquisition; a stored graph also brings its entry handle,
         // version, and cached matching (the warm start that makes repeat
         // MATCHes one quiet phase) — the handle is kept so the write-back
@@ -446,16 +608,29 @@ impl Executor {
         out.nr = g.nr;
         out.nc = g.nc;
         out.n_edges = g.n_edges();
+        if let (Some(b), Some(m)) = (tbuf.as_mut(), load_mark) {
+            b.host_span(
+                "load",
+                "job",
+                m,
+                vec![("nr", g.nr as u64), ("nc", g.nc as u64), ("edges", g.n_edges() as u64)],
+            );
+        }
 
         let t_init = Timer::start();
-        let init = match warm {
-            // the store guards versions, but sizes are re-checked here at
-            // the trust boundary rather than assumed
-            Some(m) if m.nr() == g.nr && m.nc() == g.nc => m,
-            _ => job.init.run(&g),
+        let init_mark = tbuf.as_ref().map(|b| b.now_us());
+        // the store guards versions, but sizes are re-checked here at
+        // the trust boundary rather than assumed; whether the warm start
+        // was actually usable feeds the per-graph repair-vs-recompute split
+        let (init, warm_used) = match warm {
+            Some(m) if m.nr() == g.nr && m.nc() == g.nc => (m, true),
+            _ => (job.init.run(&g), false),
         };
         out.t_init = t_init.elapsed_secs();
         out.init_cardinality = init.cardinality();
+        if let (Some(b), Some(m)) = (tbuf.as_mut(), init_mark) {
+            b.host_span("init", "job", m, vec![("cardinality", out.init_cardinality as u64)]);
+        }
 
         let spec = self.resolve_spec(job, &g);
         out.algo = spec.to_string();
@@ -467,9 +642,14 @@ impl Executor {
 
         let mut ctx = RunCtx::new(self.pool.clone()).with_cancel(self.cancel.clone());
         ctx.set_deadline(deadline);
+        let solve_mark = tbuf.as_ref().map(|b| b.now_us());
+        if let Some(b) = tbuf.take() {
+            ctx.arm_trace(b); // matcher phase + kernel spans go here
+        }
         let t_match = Timer::start();
         let result = algo.run(&g, init, &mut ctx);
         out.t_match = t_match.elapsed_secs();
+        tbuf = ctx.take_trace();
         out.cardinality = result.matching.cardinality();
         out.phases = result.stats.phases;
         out.frontier_peak = result.stats.frontier_peak;
@@ -478,24 +658,50 @@ impl Executor {
         out.shards = result.stats.shards;
         out.exchange_words = result.stats.exchange_words;
         out.exchange_steps = result.stats.exchange_steps;
+        let solve_detail = (
+            result.stats.launches_per_phase.iter().map(|&l| l as u64).sum::<u64>(),
+            result.stats.device_cycles,
+        );
+        if let (Some(b), Some(m)) = (tbuf.as_mut(), solve_mark) {
+            b.host_span(
+                "solve",
+                "job",
+                m,
+                vec![
+                    ("phases", result.stats.phases),
+                    ("launches", solve_detail.0),
+                    ("device_cycles", solve_detail.1),
+                ],
+            );
+        }
 
         match result.outcome {
             RunOutcome::Complete => {}
             RunOutcome::DeadlineExceeded => {
                 self.metrics.jobs_timed_out.fetch_add(1, Ordering::Relaxed);
                 self.fail(&mut out, JobError::DeadlineExceeded { timeout_ms: budget_ms });
+                self.metrics.record_spec(&out.algo, total.elapsed_secs(), false, solve_detail.1);
+                self.seal_trace(tbuf, job, "match", &out, solve_detail, total.elapsed_secs());
                 return out;
             }
             RunOutcome::Cancelled => {
                 self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
                 self.fail(&mut out, JobError::Cancelled);
+                self.metrics.record_spec(&out.algo, total.elapsed_secs(), false, solve_detail.1);
+                self.seal_trace(tbuf, job, "match", &out, solve_detail, total.elapsed_secs());
                 return out;
             }
         }
 
         if job.certify {
+            let cert_mark = tbuf.as_ref().map(|b| b.now_us());
             match result.matching.certify(&g) {
-                Ok(()) => out.certified = true,
+                Ok(()) => {
+                    out.certified = true;
+                    if let (Some(b), Some(m)) = (tbuf.as_mut(), cert_mark) {
+                        b.host_span("certify", "job", m, vec![]);
+                    }
+                }
                 Err(e) => {
                     // a job whose result fails certification is a *failed*
                     // job: it must not count as completed nor contribute
@@ -503,6 +709,8 @@ impl Executor {
                     // `submitted == completed + failed` stays an invariant
                     self.metrics.certify_failures.fetch_add(1, Ordering::Relaxed);
                     self.fail(&mut out, JobError::Certify(e));
+                    self.metrics.record_spec(&out.algo, total.elapsed_secs(), false, solve_detail.1);
+                    self.seal_trace(tbuf, job, "match", &out, solve_detail, total.elapsed_secs());
                     return out;
                 }
             }
@@ -516,6 +724,13 @@ impl Executor {
         // point).
         if let Some((entry, version)) = stored {
             GraphStore::cache_into(&entry, result.matching, version);
+            // per-graph serving stats: how often this graph is matched,
+            // and how often the cached matching was unusable (recompute)
+            let mut e = lockorder::lock(LockClass::Entry, &entry);
+            e.stats.matches += 1;
+            if !warm_used {
+                e.stats.recomputes += 1;
+            }
         }
 
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
@@ -526,12 +741,15 @@ impl Executor {
             .matched_total
             .fetch_add(out.cardinality as u64, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
+        self.metrics.record_spec(&out.algo, total.elapsed_secs(), true, solve_detail.1);
+        self.seal_trace(tbuf, job, "match", &out, solve_detail, total.elapsed_secs());
         out
     }
 
     fn execute_load(&self, job: &MatchJob, name: &str) -> MatchOutcome {
         let total = Timer::start();
         let mut out = Self::blank(job.id);
+        let mut tbuf = self.trace_buf(job);
         if matches!(job.source, GraphSource::Stored(_)) {
             self.fail(
                 &mut out,
@@ -539,6 +757,7 @@ impl Executor {
             );
             return out;
         }
+        let load_mark = tbuf.as_ref().map(|b| b.now_us());
         let g = match self.acquire(&job.source) {
             Ok(g) => g,
             Err(e) => {
@@ -550,6 +769,14 @@ impl Executor {
         out.nr = g.nr;
         out.nc = g.nc;
         out.n_edges = g.n_edges();
+        if let (Some(b), Some(m)) = (tbuf.as_mut(), load_mark) {
+            b.host_span(
+                "load",
+                "job",
+                m,
+                vec![("nr", g.nr as u64), ("nc", g.nc as u64), ("edges", g.n_edges() as u64)],
+            );
+        }
         // durability before visibility: the base snapshot + WAL reset hit
         // disk first, so a LOAD the client saw acknowledged can always be
         // recovered — and a persist failure rejects the LOAD outright
@@ -561,12 +788,16 @@ impl Executor {
         let name_lock = self.persist.as_ref().map(|p| p.name_lock(name));
         let name_guard = name_lock.as_ref().map(|l| lockorder::lock(LockClass::Name, l));
         if let Some(p) = &self.persist {
+            let snap_mark = tbuf.as_ref().map(|b| b.now_us());
             if let Err(e) = p.record_load_locked(name, &g, base) {
                 self.fail(&mut out, JobError::Load(format!("persisting LOAD failed: {e}")));
                 return out;
             }
             self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
             self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+            if let (Some(b), Some(m)) = (tbuf.as_mut(), snap_mark) {
+                b.host_span("snapshot_write", "persist", m, vec![]);
+            }
         }
         // ship the new incarnation as a snapshot event while still under
         // the name lock, so followers see the re-base strictly before any
@@ -580,18 +811,28 @@ impl Executor {
         drop(name_guard);
         drop(name_lock);
         self.enforce_graph_cap(name);
-        if self.wait_quorum(repl_seq, &mut out) {
+        let ack_mark = tbuf.as_ref().map(|b| b.now_us());
+        let quorum_failed = self.wait_quorum(repl_seq, &mut out);
+        if repl_seq.is_some() && self.ack_mode == AckMode::Quorum {
+            if let (Some(b), Some(m)) = (tbuf.as_mut(), ack_mark) {
+                b.host_span("repl_ack_wait", "repl", m, vec![]);
+            }
+        }
+        if quorum_failed {
+            self.seal_trace(tbuf, job, "load", &out, (0, 0), total.elapsed_secs());
             return out;
         }
         self.metrics.graphs_loaded.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
+        self.seal_trace(tbuf, job, "load", &out, (0, 0), total.elapsed_secs());
         out
     }
 
     fn execute_drop(&self, job: &MatchJob, name: &str) -> MatchOutcome {
         let total = Timer::start();
         let mut out = Self::blank(job.id);
+        let mut tbuf = self.trace_buf(job);
         // lock order (matches UPDATE/SAVE/eviction): entry mutex first,
         // then the persistence name lock. Holding the entry lock while
         // unmapping serializes against in-flight UPDATEs (they commit
@@ -619,6 +860,7 @@ impl Executor {
                 // touching memory if it can't be written (the graph stays
                 // fully intact); after it, file deletion is best-effort —
                 // recovery completes an interrupted drop from the marker
+                let wal_mark = tbuf.as_ref().map(|b| b.now_us());
                 if let Err(e) = p.append_drop_marker_locked(name, version) {
                     self.fail(
                         &mut out,
@@ -627,6 +869,9 @@ impl Executor {
                     return out;
                 }
                 self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+                if let (Some(b), Some(m)) = (tbuf.as_mut(), wal_mark) {
+                    b.host_span("wal_fsync", "persist", m, vec![]);
+                }
             }
         }
         // ship the drop (as the same version-scoped frame the WAL holds)
@@ -651,18 +896,28 @@ impl Executor {
         if let Some(p) = &self.persist {
             p.release_name_lock_if_unused(name);
         }
-        if self.wait_quorum(repl_seq, &mut out) {
+        let ack_mark = tbuf.as_ref().map(|b| b.now_us());
+        let quorum_failed = self.wait_quorum(repl_seq, &mut out);
+        if repl_seq.is_some() && self.ack_mode == AckMode::Quorum {
+            if let (Some(b), Some(m)) = (tbuf.as_mut(), ack_mark) {
+                b.host_span("repl_ack_wait", "repl", m, vec![]);
+            }
+        }
+        if quorum_failed {
+            self.seal_trace(tbuf, job, "drop", &out, (0, 0), total.elapsed_secs());
             return out;
         }
         self.metrics.graphs_dropped.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
+        self.seal_trace(tbuf, job, "drop", &out, (0, 0), total.elapsed_secs());
         out
     }
 
     fn execute_save(&self, job: &MatchJob, name: &str) -> MatchOutcome {
         let total = Timer::start();
         let mut out = Self::blank(job.id);
+        let mut tbuf = self.trace_buf(job);
         let Some(p) = &self.persist else {
             self.fail(
                 &mut out,
@@ -688,15 +943,21 @@ impl Executor {
         out.nr = g.nr;
         out.nc = g.nc;
         out.n_edges = g.n_edges();
+        let snap_mark = tbuf.as_ref().map(|b| b.now_us());
         if let Err(err) = p.record_snapshot(name, &g, version, matching.as_ref()) {
             drop(e);
             self.fail(&mut out, JobError::Load(format!("snapshotting {name:?} failed: {err}")));
             return out;
         }
+        e.stats.snapshots += 1;
         drop(e);
+        if let (Some(b), Some(m)) = (tbuf.as_mut(), snap_mark) {
+            b.host_span("snapshot_write", "persist", m, vec![("edges", out.n_edges as u64)]);
+        }
         self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
+        self.seal_trace(tbuf, job, "save", &out, (0, 0), total.elapsed_secs());
         out
     }
 
@@ -704,6 +965,7 @@ impl Executor {
         let total = Timer::start();
         let (deadline, budget_ms) = effective_deadline(job, Instant::now());
         let mut out = Self::blank(job.id);
+        let mut tbuf = self.trace_buf(job);
         let Some(entry) = self.store.entry(name).or_else(|| self.reload_from_disk(name))
         else {
             self.fail(
@@ -741,6 +1003,7 @@ impl Executor {
         let graph_backup = e.graph.clone();
         let cached_prev = e.matching.take();
 
+        let apply_mark = tbuf.as_ref().map(|b| b.now_us());
         let report = e.graph.apply(batch);
         let g = e.graph.snapshot();
         out.t_load = total.elapsed_secs();
@@ -756,6 +1019,18 @@ impl Executor {
             rebuilt: report.rebuilt,
             ..UpdateStats::default()
         };
+        if let (Some(b), Some(m)) = (tbuf.as_mut(), apply_mark) {
+            b.host_span(
+                "apply",
+                "job",
+                m,
+                vec![
+                    ("inserted", update.inserted),
+                    ("deleted", update.deleted),
+                    ("rebuilt", u64::from(update.rebuilt)),
+                ],
+            );
+        }
 
         let t_init = Timer::start();
         // warm start: the maintained matching, or a fresh init heuristic
@@ -768,6 +1043,10 @@ impl Executor {
 
         let mut ctx = RunCtx::new(self.pool.clone()).with_cancel(self.cancel.clone());
         ctx.set_deadline(deadline);
+        let solve_mark = tbuf.as_ref().map(|b| b.now_us());
+        if let Some(b) = tbuf.take() {
+            ctx.arm_trace(b); // repair's phase + kernel spans go here
+        }
         let t_match = Timer::start();
         // with buildability checked above, this Err is the defensive
         // matching/graph-shape mismatch only — unreachable from the store
@@ -784,6 +1063,7 @@ impl Executor {
                 }
             };
         out.t_match = t_match.elapsed_secs();
+        tbuf = ctx.take_trace();
         update.seeds = summary.seeds as u64;
         update.dropped = summary.dropped as u64;
         update.joined = summary.joined as u64;
@@ -798,16 +1078,38 @@ impl Executor {
         out.shards = result.stats.shards;
         out.exchange_words = result.stats.exchange_words;
         out.exchange_steps = result.stats.exchange_steps;
+        let solve_detail = (
+            result.stats.launches_per_phase.iter().map(|&l| l as u64).sum::<u64>(),
+            result.stats.device_cycles,
+        );
+        if let (Some(b), Some(m)) = (tbuf.as_mut(), solve_mark) {
+            b.host_span(
+                "solve",
+                "job",
+                m,
+                vec![
+                    ("phases", result.stats.phases),
+                    ("launches", solve_detail.0),
+                    ("seeds", update.seeds),
+                ],
+            );
+        }
 
         // decide the fate under the entry lock so the rollback can never
         // clobber a concurrent update's work (updates to one graph
         // serialize on this lock)
         let complete = result.outcome == RunOutcome::Complete;
+        let cert_mark = tbuf.as_ref().map(|b| b.now_us());
         let certify_err = if complete && job.certify {
             result.matching.certify(&g).err()
         } else {
             None
         };
+        if complete && job.certify && certify_err.is_none() {
+            if let (Some(b), Some(m)) = (tbuf.as_mut(), cert_mark) {
+                b.host_span("certify", "job", m, vec![]);
+            }
+        }
         if !complete || certify_err.is_some() {
             e.graph = graph_backup;
             e.matching = cached_prev;
@@ -832,6 +1134,8 @@ impl Executor {
                     );
                 }
             }
+            self.metrics.record_spec(&out.algo, total.elapsed_secs(), false, solve_detail.1);
+            self.seal_trace(tbuf, job, "update", &out, solve_detail, total.elapsed_secs());
             return out;
         }
         out.certified = job.certify;
@@ -860,6 +1164,8 @@ impl Executor {
                     "stored graph {name:?} was dropped or replaced mid-update"
                 )),
             );
+            self.metrics.record_spec(&out.algo, total.elapsed_secs(), false, solve_detail.1);
+            self.seal_trace(tbuf, job, "update", &out, solve_detail, total.elapsed_secs());
             return out;
         }
 
@@ -871,6 +1177,7 @@ impl Executor {
         // rejected) change nothing and are not logged.
         if let Some(p) = &self.persist {
             if !report.is_noop() {
+                let wal_mark = tbuf.as_ref().map(|b| b.now_us());
                 if let Err(err) = p.append_update(name, e.graph.version(), &report) {
                     e.graph = graph_backup;
                     e.matching = cached_prev;
@@ -879,9 +1186,15 @@ impl Executor {
                         &mut out,
                         JobError::Load(format!("WAL append for {name:?} failed: {err}")),
                     );
+                    self.metrics.record_spec(&out.algo, total.elapsed_secs(), false, solve_detail.1);
+                    self.seal_trace(tbuf, job, "update", &out, solve_detail, total.elapsed_secs());
                     return out;
                 }
                 self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+                e.stats.wal_appends += 1;
+                if let (Some(b), Some(m)) = (tbuf.as_mut(), wal_mark) {
+                    b.host_span("wal_fsync", "persist", m, vec![]);
+                }
             }
         }
 
@@ -915,16 +1228,30 @@ impl Executor {
         // rebuild or SAVE retries.
         if report.rebuilt {
             if let Some(p) = &self.persist {
+                let snap_mark = tbuf.as_ref().map(|b| b.now_us());
                 let g_snap = e.graph.snapshot();
                 let m = e.matching.as_ref().map(|c| c.matching.clone());
                 if p.record_snapshot(name, &g_snap, version, m.as_ref()).is_ok() {
                     self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
+                    e.stats.snapshots += 1;
+                    if let (Some(b), Some(m)) = (tbuf.as_mut(), snap_mark) {
+                        b.host_span("snapshot_write", "persist", m, vec![]);
+                    }
                 }
             }
         }
         drop(e);
 
-        if self.wait_quorum(repl_seq, &mut out) {
+        let ack_mark = tbuf.as_ref().map(|b| b.now_us());
+        let quorum_failed = self.wait_quorum(repl_seq, &mut out);
+        if repl_seq.is_some() && self.ack_mode == AckMode::Quorum {
+            if let (Some(b), Some(m)) = (tbuf.as_mut(), ack_mark) {
+                b.host_span("repl_ack_wait", "repl", m, vec![]);
+            }
+        }
+        if quorum_failed {
+            self.metrics.record_spec(&out.algo, total.elapsed_secs(), false, solve_detail.1);
+            self.seal_trace(tbuf, job, "update", &out, solve_detail, total.elapsed_secs());
             return out;
         }
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
@@ -936,6 +1263,8 @@ impl Executor {
             .matched_total
             .fetch_add(out.cardinality as u64, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
+        self.metrics.record_spec(&out.algo, total.elapsed_secs(), true, solve_detail.1);
+        self.seal_trace(tbuf, job, "update", &out, solve_detail, total.elapsed_secs());
         out
     }
 

@@ -77,6 +77,11 @@ pub struct MatchJob {
     /// `Service::run_batch_with_timeout_ms`); when both this and
     /// `timeout` are set the earlier instant wins.
     pub deadline: Option<Instant>,
+    /// when the job entered the submission queue. Set by
+    /// `Service::submit` so a tracing executor can backdate the span
+    /// timeline and expose the queue wait as a `queue_wait` span; `None`
+    /// (direct `Executor::execute` callers) means no queue to measure.
+    pub submitted_at: Option<Instant>,
 }
 
 impl MatchJob {
@@ -91,6 +96,7 @@ impl MatchJob {
             frontier: None,
             timeout: None,
             deadline: None,
+            submitted_at: None,
         }
     }
 

@@ -1,7 +1,12 @@
 //! Service metrics: counters and a log2-bucketed latency histogram,
-//! lock-free on the hot path (atomics only).
+//! lock-free on the hot path (atomics only), plus a per-spec aggregation
+//! map (one brief leaf-mutex touch per completed job) and a
+//! Prometheus-style text exposition behind the server's `METRICS` verb.
 
+use crate::sanitize::lockorder::{self, LockClass};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 // Bucket `i` counts latencies in `[2^i, 2^{i+1})` µs; bucket 0 also
 // absorbs every sub-µs sample and bucket 31 everything above. The real
@@ -49,8 +54,26 @@ pub struct Metrics {
     pub repl_lag: AtomicU64,
     pub edges_processed: AtomicU64,
     pub matched_total: AtomicU64,
+    /// jobs whose end-to-end latency crossed the server's `--slow-ms`
+    /// threshold (also counted in `jobs_completed`/`jobs_failed`; each
+    /// one gets a compact trace summary on stderr)
+    pub jobs_slow: AtomicU64,
     latency: [AtomicU64; N_BUCKETS],
     latency_sum_us: AtomicU64,
+    /// per-algorithm-spec aggregates, keyed by the wire spec name
+    /// (`"hk"`, `"gpu:APFB-GPUBFS-WR-CT-FC"`, ...); a lock-order leaf
+    /// touched once per completed job, never on the matcher hot path
+    specs: Mutex<BTreeMap<String, SpecStats>>,
+}
+
+/// Aggregates for one algorithm spec, exposed as labeled `METRICS`
+/// families (`bimatch_spec_*{spec="..."}`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SpecStats {
+    pub jobs: u64,
+    pub failed: u64,
+    pub total_us: u64,
+    pub device_cycles: u64,
 }
 
 impl Metrics {
@@ -78,23 +101,33 @@ impl Metrics {
 
     /// approximate quantile from the log2 histogram (upper bucket bound).
     /// `q = 0.0` returns the first *non-empty* bucket's bound (the
-    /// minimum observed latency's bucket), not bucket 0's.
+    /// minimum observed latency's bucket), not bucket 0's. `q` is
+    /// clamped into `[0, 1]` (NaN reads as 0), so `q = 1.0` — and any
+    /// overshoot — lands on the *last* non-empty bucket's bound instead
+    /// of falling off the histogram into infinity.
     pub fn latency_quantile(&self, q: f64) -> f64 {
-        let total: u64 = self.latency.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        // one consistent load per bucket: the target and the walk must
+        // agree on the same counts or a concurrent observe_latency can
+        // push `target` past what the walk sees
+        let counts: [u64; N_BUCKETS] =
+            std::array::from_fn(|i| self.latency[i].load(Ordering::Relaxed));
+        let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0.0;
         }
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
         // q=0 would otherwise make target 0 and `seen >= 0` trivially
-        // true at bucket 0 even when that bucket is empty
-        let target = (((total as f64) * q).ceil() as u64).max(1);
+        // true at bucket 0 even when that bucket is empty; the upper
+        // clamp guards float round-up past the population
+        let target = (((total as f64) * q).ceil() as u64).clamp(1, total);
         let mut seen = 0u64;
-        for (i, b) in self.latency.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
             if seen >= target {
                 return (2f64.powi(i as i32 + 1)) / 1e6; // upper bound, secs
             }
         }
-        f64::INFINITY
+        unreachable!("seen == total >= target after the last bucket")
     }
 
     pub fn mean_latency(&self) -> f64 {
@@ -106,6 +139,24 @@ impl Metrics {
         }
     }
 
+    /// Fold one finished job into its spec's aggregate family.
+    pub fn record_spec(&self, spec: &str, secs: f64, ok: bool, device_cycles: u64) {
+        let mut map = lockorder::lock(LockClass::SpecStats, &self.specs);
+        let e = map.entry(spec.to_string()).or_default();
+        e.jobs += 1;
+        if !ok {
+            e.failed += 1;
+        }
+        e.total_us += (secs * 1e6) as u64;
+        e.device_cycles += device_cycles;
+    }
+
+    /// Snapshot of the per-spec aggregates (wire-name order).
+    pub fn spec_stats(&self) -> Vec<(String, SpecStats)> {
+        let map = lockorder::lock(LockClass::SpecStats, &self.specs);
+        map.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
     /// The wire report behind the server's `STATS` verb. Every counter the
     /// executor maintains is on it — including the failure-mode split
     /// (`timeout=`/`cancelled=`, which are *also* inside `failed=`), the
@@ -114,7 +165,7 @@ impl Metrics {
     /// and the durability counters (`persist: wal_appends=`/`snapshots=`).
     pub fn report(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} timeout={} cancelled={} updated={} | \
+            "jobs: submitted={} completed={} failed={} timeout={} cancelled={} updated={} slow={} | \
              graphs: loaded={} dropped={} evicted={} recovered={} | \
              persist: wal_appends={} snapshots={} | \
              repl: shipped={} applied={} acks={} lag={} | \
@@ -126,6 +177,7 @@ impl Metrics {
             self.jobs_timed_out.load(Ordering::Relaxed),
             self.jobs_cancelled.load(Ordering::Relaxed),
             self.jobs_updated.load(Ordering::Relaxed),
+            self.jobs_slow.load(Ordering::Relaxed),
             self.graphs_loaded.load(Ordering::Relaxed),
             self.graphs_dropped.load(Ordering::Relaxed),
             self.graphs_evicted.load(Ordering::Relaxed),
@@ -144,6 +196,125 @@ impl Metrics {
             self.latency_quantile(0.99),
         )
     }
+
+    /// Prometheus text exposition (version 0.0.4) of every counter the
+    /// executor maintains, the latency histogram (cumulative `le`
+    /// buckets in seconds), and the per-spec label families. Per-graph
+    /// families are appended by the executor, which owns the store.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let counters: [(&str, &str, u64); 19] = [
+            ("bimatch_jobs_submitted_total", "jobs accepted", self.jobs_submitted.load(Ordering::Relaxed)),
+            ("bimatch_jobs_completed_total", "jobs finished ok", self.completed()),
+            ("bimatch_jobs_failed_total", "jobs finished in error", self.jobs_failed.load(Ordering::Relaxed)),
+            ("bimatch_jobs_timed_out_total", "jobs past deadline (also in failed)", self.jobs_timed_out.load(Ordering::Relaxed)),
+            ("bimatch_jobs_cancelled_total", "jobs cancelled (also in failed)", self.jobs_cancelled.load(Ordering::Relaxed)),
+            ("bimatch_jobs_updated_total", "successful UPDATE jobs", self.jobs_updated.load(Ordering::Relaxed)),
+            ("bimatch_jobs_slow_total", "jobs past the --slow-ms threshold", self.jobs_slow.load(Ordering::Relaxed)),
+            ("bimatch_certify_failures_total", "certification failures", self.certify_failures.load(Ordering::Relaxed)),
+            ("bimatch_graphs_loaded_total", "graphs installed", self.graphs_loaded.load(Ordering::Relaxed)),
+            ("bimatch_graphs_dropped_total", "graphs dropped", self.graphs_dropped.load(Ordering::Relaxed)),
+            ("bimatch_graphs_evicted_total", "graphs evicted by the LRU cap", self.graphs_evicted.load(Ordering::Relaxed)),
+            ("bimatch_graphs_recovered_total", "graphs reloaded from disk", self.graphs_recovered.load(Ordering::Relaxed)),
+            ("bimatch_wal_appends_total", "WAL frames fsync'd", self.wal_appends.load(Ordering::Relaxed)),
+            ("bimatch_snapshots_written_total", "snapshot files written", self.snapshots_written.load(Ordering::Relaxed)),
+            ("bimatch_repl_frames_shipped_total", "replication events published", self.repl_frames_shipped.load(Ordering::Relaxed)),
+            ("bimatch_repl_frames_applied_total", "replication events applied", self.repl_frames_applied.load(Ordering::Relaxed)),
+            ("bimatch_repl_acks_total", "follower acks processed", self.repl_acks.load(Ordering::Relaxed)),
+            ("bimatch_matched_total", "matched row-column pairs reported", self.matched_total.load(Ordering::Relaxed)),
+            ("bimatch_edges_processed_total", "edges in completed jobs", self.edges_processed.load(Ordering::Relaxed)),
+        ];
+        for (name, help, v) in counters {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        }
+        out.push_str(&format!(
+            "# HELP bimatch_repl_lag replication lag in events (published - acked)\n\
+             # TYPE bimatch_repl_lag gauge\nbimatch_repl_lag {}\n",
+            self.repl_lag.load(Ordering::Relaxed)
+        ));
+
+        // cumulative histogram: bucket i spans [2^i, 2^{i+1}) µs, so the
+        // `le` bound of bucket i is 2^{i+1} µs expressed in seconds
+        out.push_str(
+            "# HELP bimatch_job_latency_seconds end-to-end job latency\n\
+             # TYPE bimatch_job_latency_seconds histogram\n",
+        );
+        let mut cum = 0u64;
+        for i in 0..N_BUCKETS {
+            cum += self.latency[i].load(Ordering::Relaxed);
+            let le = 2f64.powi(i as i32 + 1) / 1e6;
+            out.push_str(&format!("bimatch_job_latency_seconds_bucket{{le=\"{le:e}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("bimatch_job_latency_seconds_bucket{{le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!(
+            "bimatch_job_latency_seconds_sum {}\nbimatch_job_latency_seconds_count {cum}\n",
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6
+        ));
+
+        let specs = self.spec_stats();
+        if !specs.is_empty() {
+            out.push_str(
+                "# HELP bimatch_spec_jobs_total jobs per algorithm spec\n\
+                 # TYPE bimatch_spec_jobs_total counter\n",
+            );
+            for (spec, s) in &specs {
+                out.push_str(&format!(
+                    "bimatch_spec_jobs_total{{spec=\"{}\"}} {}\n",
+                    prom_label_escape(spec),
+                    s.jobs
+                ));
+            }
+            out.push_str(
+                "# HELP bimatch_spec_failed_total failed jobs per algorithm spec\n\
+                 # TYPE bimatch_spec_failed_total counter\n",
+            );
+            for (spec, s) in &specs {
+                out.push_str(&format!(
+                    "bimatch_spec_failed_total{{spec=\"{}\"}} {}\n",
+                    prom_label_escape(spec),
+                    s.failed
+                ));
+            }
+            out.push_str(
+                "# HELP bimatch_spec_latency_seconds_sum total solve seconds per spec\n\
+                 # TYPE bimatch_spec_latency_seconds_sum counter\n",
+            );
+            for (spec, s) in &specs {
+                out.push_str(&format!(
+                    "bimatch_spec_latency_seconds_sum{{spec=\"{}\"}} {}\n",
+                    prom_label_escape(spec),
+                    s.total_us as f64 / 1e6
+                ));
+            }
+            out.push_str(
+                "# HELP bimatch_spec_device_cycles_total modeled device cycles per spec\n\
+                 # TYPE bimatch_spec_device_cycles_total counter\n",
+            );
+            for (spec, s) in &specs {
+                out.push_str(&format!(
+                    "bimatch_spec_device_cycles_total{{spec=\"{}\"}} {}\n",
+                    prom_label_escape(spec),
+                    s.device_cycles
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Escape a value for a Prometheus label position: backslash, double
+/// quote, and newline are the three characters the text format reserves.
+pub fn prom_label_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -236,5 +407,92 @@ mod tests {
         assert!(r.contains("applied=12"), "{r}");
         assert!(r.contains("acks=8"), "{r}");
         assert!(r.contains("lag=1"), "{r}");
+        m.jobs_slow.store(4, Ordering::Relaxed);
+        assert!(m.report().contains("slow=4"), "{}", m.report());
+    }
+
+    #[test]
+    fn quantile_one_is_the_max_bucket_bound_never_infinity() {
+        let m = Metrics::new();
+        m.observe_latency(3.0e-6); // bucket 1 = [2, 4) µs
+        m.observe_latency(0.001); // bucket 9 = [512, 1024) µs
+        // q=1 must land on the last non-empty bucket's upper bound
+        let p100 = m.latency_quantile(1.0);
+        assert_eq!(p100, 1024.0 / 1e6, "upper bound of [512, 1024) µs");
+        // overshooting q must clamp, not fall off into infinity
+        for q in [1.0000001, 2.0, f64::INFINITY, f64::NAN] {
+            let v = m.latency_quantile(q);
+            assert!(v.is_finite(), "q={q} gave {v}");
+        }
+        assert_eq!(m.latency_quantile(2.0), p100);
+        // NaN reads as q=0: the first non-empty bucket
+        assert_eq!(m.latency_quantile(f64::NAN), m.latency_quantile(0.0));
+        assert_eq!(m.latency_quantile(0.0), 4.0 / 1e6, "upper bound of [2, 4) µs");
+    }
+
+    #[test]
+    fn quantile_bounds_follow_the_bucket_spec() {
+        // a sample at 2^i µs sits in bucket i, so every quantile of a
+        // single-sample histogram reports exactly 2^{i+1} µs
+        for i in [0, 5, 19, 25] {
+            let m = Metrics::new();
+            m.observe_latency(2f64.powi(i) / 1e6);
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(m.latency_quantile(q), 2f64.powi(i + 1) / 1e6, "i={i} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn record_spec_aggregates_per_wire_name() {
+        let m = Metrics::new();
+        m.record_spec("hk", 0.002, true, 0);
+        m.record_spec("hk", 0.004, false, 0);
+        m.record_spec("gpu:APFB-GPUBFS-WR-CT-FC", 0.1, true, 12345);
+        let specs = m.spec_stats();
+        assert_eq!(specs.len(), 2);
+        // BTreeMap order: "gpu:..." < "hk"
+        assert_eq!(specs[0].0, "gpu:APFB-GPUBFS-WR-CT-FC");
+        assert_eq!(specs[0].1.device_cycles, 12345);
+        assert_eq!(specs[1].0, "hk");
+        assert_eq!(specs[1].1, SpecStats { jobs: 2, failed: 1, total_us: 6000, device_cycles: 0 });
+    }
+
+    #[test]
+    fn prometheus_exposition_is_wellformed() {
+        let m = Metrics::new();
+        m.jobs_submitted.store(3, Ordering::Relaxed);
+        m.jobs_completed.store(2, Ordering::Relaxed);
+        m.observe_latency(0.001);
+        m.observe_latency(0.5);
+        m.record_spec("p-dbfs@4", 0.001, true, 0);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE bimatch_jobs_submitted_total counter"), "{text}");
+        assert!(text.contains("bimatch_jobs_submitted_total 3"), "{text}");
+        assert!(text.contains("# TYPE bimatch_repl_lag gauge"), "{text}");
+        assert!(text.contains("# TYPE bimatch_job_latency_seconds histogram"), "{text}");
+        assert!(text.contains("bimatch_job_latency_seconds_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("bimatch_job_latency_seconds_count 2"), "{text}");
+        assert!(text.contains("bimatch_spec_jobs_total{spec=\"p-dbfs@4\"} 1"), "{text}");
+        // cumulative le buckets never decrease
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("bimatch_job_latency_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-monotone bucket line: {line}");
+            prev = v;
+        }
+        // every non-comment line is `name{labels} value` or `name value`
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            assert_eq!(line.split(' ').count(), 2, "malformed line: {line}");
+        }
+    }
+
+    #[test]
+    fn label_escaping_covers_the_reserved_characters() {
+        assert_eq!(prom_label_escape("plain-name_1:ok"), "plain-name_1:ok");
+        assert_eq!(prom_label_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
     }
 }

@@ -16,12 +16,26 @@
 //! ALGOS                       → ALGOS <name> <name> ...
 //! GRAPHS                      → GRAPHS <name> <name> ...
 //! STATS                       → STATS <metrics report>
+//! STATS graph=<name>          → STATS graph=.. per-graph serving counters
+//! TRACE [name=<graph>] [last=<n>]
+//!                             → TRACE n=<k> header + k JSON trace lines
+//! METRICS                     → Prometheus text exposition (multi-line)
 //! LAG                         → LAG role=.. epoch=.. followers=.. shipped=..
 //!                                   acked=.. lag=.. applied=.. connected=..
 //! PROMOTE                     replica → writable primary (fences the old one)
 //! REPLICA epoch=<e>           upgrade this connection to the event stream
 //! QUIT
 //! ```
+//!
+//! `TRACE` and `METRICS` are the two multi-line replies: `TRACE` sends a
+//! `TRACE n=<k>` header followed by `k` one-object-per-line JSON traces
+//! (newest first — see [`crate::trace::JobTrace::to_json_line`]),
+//! `METRICS` sends the Prometheus 0.0.4 text exposition; both end with
+//! one blank line so line-oriented clients can frame them. The server
+//! records spans for every job by default ([`ServerCfg::trace_capacity`]
+//! ring; set 0 to disarm), and [`ServerCfg::slow_ms`] adds the
+//! slow-request log: any job at or over the threshold prints a compact
+//! span breakdown to stderr and counts under `jobs: slow=` in `STATS`.
 //!
 //! `algo=` accepts any registry name (`AlgoSpec` wire format, including
 //! `p-hk@<threads>`); malformed names are rejected before execution.
@@ -136,6 +150,12 @@ pub struct ServerCfg {
     /// write snapshots as per-shard file sets of this size (1 = single
     /// file per snapshot); see `crate::persist::Persistence::set_snapshot_shards`
     pub snapshot_shards: usize,
+    /// how many recent job traces the `TRACE` verb can serve (ring
+    /// capacity); 0 disarms span recording entirely
+    pub trace_capacity: usize,
+    /// slow-request log threshold in ms (`--slow-ms`): jobs at or over it
+    /// get a span summary on stderr and count under `jobs_slow`
+    pub slow_ms: Option<u64>,
 }
 
 impl ServerCfg {
@@ -151,6 +171,8 @@ impl ServerCfg {
             idle_timeout: Duration::from_secs(120),
             max_line_len: 16 << 20,
             snapshot_shards: 1,
+            trace_capacity: 256,
+            slow_ms: None,
         }
     }
 }
@@ -206,6 +228,12 @@ impl Server {
         executor = executor.with_ack_mode(cfg.ack_mode);
         if let Some(t) = cfg.ack_timeout {
             executor = executor.with_ack_timeout(t);
+        }
+        if cfg.trace_capacity > 0 {
+            executor = executor.with_trace_ring(crate::trace::TraceRing::new(cfg.trace_capacity));
+        }
+        if let Some(ms) = cfg.slow_ms {
+            executor = executor.with_slow_threshold(Duration::from_millis(ms));
         }
         // recovery before the first accept: a client connecting right
         // after bind already sees the restored store (graphs_recovered in
@@ -482,7 +510,18 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
                 format!("GRAPHS {}", names.join(" "))
             });
         }
-        Some("STATS") => return Command::Reply(format!("STATS {}", executor.metrics.report())),
+        Some("STATS") => {
+            let kv: Vec<(&str, &str)> = parts.filter_map(|p| p.split_once('=')).collect();
+            return Command::Reply(match get(&kv, "graph") {
+                None => format!("STATS {}", executor.metrics.report()),
+                Some(name) => render_graph_stats(executor, name),
+            });
+        }
+        Some("TRACE") => {
+            let kv: Vec<(&str, &str)> = parts.filter_map(|p| p.split_once('=')).collect();
+            return Command::Reply(render_traces(executor, &kv));
+        }
+        Some("METRICS") => return Command::Reply(executor.prometheus()),
         Some("LAG") => return Command::Reply(render_lag(executor)),
         Some("PROMOTE") => {
             return Command::Reply(match executor.promote() {
@@ -516,6 +555,55 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
         }
         Err(e) => Command::Reply(format!("ERR {e}")),
     }
+}
+
+/// The `STATS graph=<name>` reply: the per-graph serving breakdown
+/// ([`super::store::GraphStats`]) in one line.
+fn render_graph_stats(executor: &Executor, name: &str) -> String {
+    match executor.store().graph_stats(name) {
+        None => format!("ERR no stored graph named {name:?}"),
+        Some((s, version, cardinality)) => format!(
+            "STATS graph={name} version={version} cached_cardinality={} matches={} \
+             recomputes={} updates={} repairs={} edges_inserted={} edges_deleted={} \
+             cols_added={} rows_added={} wal_appends={} snapshots={}",
+            cardinality.map_or_else(|| "-".to_string(), |c| c.to_string()),
+            s.matches,
+            s.recomputes,
+            s.updates,
+            s.repairs,
+            s.edges_inserted,
+            s.edges_deleted,
+            s.cols_added,
+            s.rows_added,
+            s.wal_appends,
+            s.snapshots,
+        ),
+    }
+}
+
+/// The `TRACE` reply: a `TRACE n=<k>` header, then `k` JSON trace lines
+/// (newest first), optionally filtered by `name=` and bounded by `last=`
+/// (default 10).
+fn render_traces(executor: &Executor, kv: &[(&str, &str)]) -> String {
+    let Some(ring) = executor.trace_ring() else {
+        return "ERR tracing disabled (trace_capacity=0)".into();
+    };
+    let last = match get(kv, "last") {
+        None => 10,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n.max(1),
+            Err(e) => return format!("ERR bad last: {e}"),
+        },
+    };
+    let traces = ring.recent(get(kv, "name"), last);
+    // the reply ends with '\n'; the connection loop's own '\n' then
+    // yields the blank line that frames this multi-line reply
+    let mut s = format!("TRACE n={}\n", traces.len());
+    for t in &traces {
+        s.push_str(&t.to_json_line());
+        s.push('\n');
+    }
+    s
 }
 
 /// The `LAG` reply: both sides of the replication stream in one line.
@@ -1121,5 +1209,108 @@ mod tests {
         assert!(reply.contains(&format!(" card={card} ")), "want card={card}: {reply}");
         assert!(reply.contains("certified=1"), "{reply}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Read a multi-line reply (`TRACE`, `METRICS`): lines up to the
+    /// blank line that frames it.
+    fn roundtrip_multi(addr: std::net::SocketAddr, req: &str) -> Vec<String> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut r = BufReader::new(s);
+        let mut out = Vec::new();
+        loop {
+            let mut line = String::new();
+            if r.read_line(&mut line).unwrap() == 0 || line.trim().is_empty() {
+                return out;
+            }
+            out.push(line.trim_end().to_string());
+        }
+    }
+
+    #[test]
+    fn trace_verb_streams_job_traces() {
+        let (addr, _stop) = start_server();
+        assert!(roundtrip(addr, "MATCH family=uniform n=200 seed=1 algo=hk").starts_with("OK "));
+        let lines = roundtrip_multi(addr, "TRACE");
+        assert_eq!(lines[0], "TRACE n=1", "{lines:?}");
+        assert_eq!(lines.len(), 2, "{lines:?}");
+        let json = &lines[1];
+        assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+        assert!(json.contains("\"op\":\"match\""), "{json}");
+        assert!(json.contains("\"algo\":\"hk\""), "{json}");
+        assert!(json.contains("\"ok\":true"), "{json}");
+        assert!(json.contains("\"spans\":["), "{json}");
+        assert!(json.contains("\"name\":\"load\""), "{json}");
+        assert!(json.contains("\"name\":\"solve\""), "{json}");
+        assert!(json.contains("\"name\":\"certify\""), "{json}");
+        // name= filters on the stored-graph name; one-shot jobs have none
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=150 seed=2").starts_with("OK "));
+        assert!(roundtrip(addr, "MATCH name=g").starts_with("OK "));
+        let lines = roundtrip_multi(addr, "TRACE name=g last=1");
+        assert_eq!(lines[0], "TRACE n=1", "{lines:?}");
+        assert!(lines[1].contains("\"graph\":\"g\""), "{}", lines[1]);
+        assert!(lines[1].contains("\"op\":\"match\""), "newest first: {}", lines[1]);
+        let lines = roundtrip_multi(addr, "TRACE name=ghost");
+        assert_eq!(lines, vec!["TRACE n=0".to_string()]);
+        assert!(roundtrip(addr, "TRACE last=wat").starts_with("ERR bad last"));
+    }
+
+    #[test]
+    fn trace_verb_refused_when_ring_disarmed() {
+        let mut cfg = ServerCfg::new("127.0.0.1:0");
+        cfg.trace_capacity = 0;
+        let server = Server::bind_cfg(cfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        std::thread::spawn(move || server.serve());
+        assert!(roundtrip(addr, "TRACE").starts_with("ERR tracing disabled"));
+    }
+
+    #[test]
+    fn metrics_verb_emits_prometheus_text() {
+        let (addr, _stop) = start_server();
+        assert!(roundtrip(addr, "MATCH family=uniform n=200 seed=1 algo=hk").starts_with("OK "));
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=150 seed=2").starts_with("OK "));
+        assert!(roundtrip(addr, "MATCH name=g").starts_with("OK "));
+        let text = roundtrip_multi(addr, "METRICS").join("\n");
+        assert!(text.contains("# TYPE bimatch_jobs_submitted_total counter"), "{text}");
+        assert!(text.contains("bimatch_jobs_completed_total 3"), "{text}");
+        assert!(text.contains("bimatch_job_latency_seconds_bucket{le="), "{text}");
+        assert!(text.contains("bimatch_spec_jobs_total{spec=\"hk\"}"), "{text}");
+        // the per-graph families carry the graph label
+        assert!(text.contains("# TYPE bimatch_graph_matches_total counter"), "{text}");
+        assert!(text.contains("bimatch_graph_matches_total{graph=\"g\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn stats_graph_reports_per_graph_breakdown() {
+        let (addr, _stop) = start_server();
+        assert!(roundtrip(addr, "LOAD name=g family=uniform n=200 seed=4").starts_with("OK "));
+        assert!(roundtrip(addr, "MATCH name=g").starts_with("OK "));
+        assert!(roundtrip(addr, "UPDATE name=g addcols=0;1;2").starts_with("OK "));
+        let reply = roundtrip(addr, "STATS graph=g");
+        assert!(reply.starts_with("STATS graph=g "), "{reply}");
+        assert!(reply.contains("version="), "{reply}");
+        assert!(reply.contains("matches=1"), "{reply}");
+        assert!(reply.contains("recomputes=1"), "{reply}");
+        assert!(reply.contains("updates=1"), "{reply}");
+        assert!(reply.contains("cols_added=1"), "{reply}");
+        // a volatile server never touches the WAL or snapshot files
+        assert!(reply.contains("wal_appends=0"), "{reply}");
+        assert!(roundtrip(addr, "STATS graph=ghost").starts_with("ERR"), "missing graph");
+        // plain STATS still serves the process-wide line
+        assert!(roundtrip(addr, "STATS").starts_with("STATS jobs:"));
+    }
+
+    #[test]
+    fn slow_ms_threshold_counts_and_logs_slow_jobs() {
+        let mut cfg = ServerCfg::new("127.0.0.1:0");
+        cfg.slow_ms = Some(0); // everything is "slow"
+        let server = Server::bind_cfg(cfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        std::thread::spawn(move || server.serve());
+        assert!(roundtrip(addr, "MATCH family=uniform n=150 seed=1 algo=hk").starts_with("OK "));
+        let reply = roundtrip(addr, "STATS");
+        assert!(reply.contains("slow=1"), "{reply}");
     }
 }

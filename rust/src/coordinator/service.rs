@@ -163,9 +163,11 @@ impl Service {
     /// back, keeping `submitted == completed + failed` an invariant. The
     /// counter is bumped *before* the push (and undone on rejection) so a
     /// fast worker can never make `completed + failed` overtake
-    /// `submitted` mid-submit.
-    pub fn submit(&self, job: MatchJob) -> Result<(), MatchJob> {
+    /// `submitted` mid-submit. The enqueue instant is stamped on the job
+    /// so a tracing executor can emit the `queue_wait` span.
+    pub fn submit(&self, mut job: MatchJob) -> Result<(), MatchJob> {
         use std::sync::atomic::Ordering;
+        job.submitted_at = Some(Instant::now());
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         match self.jobs.push(job) {
             Ok(()) => Ok(()),

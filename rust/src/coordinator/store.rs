@@ -32,8 +32,9 @@ pub struct CachedMatching {
 }
 
 /// Per-graph lifetime counters, reported by the server's `STATS`-adjacent
-/// update replies and asserted by the e2e tests.
-#[derive(Debug, Clone, Copy, Default)]
+/// update replies, the `STATS graph=<name>` breakdown, and the `METRICS`
+/// per-graph families; asserted by the e2e tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct GraphStats {
     pub updates: u64,
     pub edges_inserted: u64,
@@ -41,6 +42,15 @@ pub struct GraphStats {
     pub cols_added: u64,
     pub rows_added: u64,
     pub repairs: u64,
+    /// `MATCH name=…` jobs served against this graph
+    pub matches: u64,
+    /// solves run from scratch (cold or stale cache — the complement of
+    /// `repairs` in the repair-vs-recompute split)
+    pub recomputes: u64,
+    /// WAL frames fsync'd for this graph (LOAD/DROP markers + updates)
+    pub wal_appends: u64,
+    /// snapshot files written for this graph
+    pub snapshots: u64,
 }
 
 /// One stored graph: overlay graph + cached matching + stats.
@@ -213,6 +223,40 @@ impl GraphStore {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// One graph's counters, current version, and cached cardinality (if
+    /// a fresh cache is held) under one short entry lock — the payload of
+    /// the server's `STATS graph=<name>` breakdown.
+    pub fn graph_stats(&self, name: &str) -> Option<(GraphStats, u64, Option<usize>)> {
+        let entry = self.entry(name)?;
+        let e = lockorder::lock(LockClass::Entry, &entry);
+        let version = e.graph.version();
+        let cached = e
+            .matching
+            .as_ref()
+            .filter(|c| c.version == version)
+            .map(|c| c.matching.cardinality());
+        Some((e.stats, version, cached))
+    }
+
+    /// Counters for every stored graph, name-sorted (the `METRICS`
+    /// per-graph families). Handles are collected under the map lock and
+    /// each entry locked afterwards, preserving the entry → map order.
+    pub fn all_graph_stats(&self) -> Vec<(String, GraphStats)> {
+        let handles: Vec<(String, Arc<Mutex<StoreEntry>>)> = {
+            let map = lockorder::lock(LockClass::StoreMap, &self.inner);
+            map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut v: Vec<(String, GraphStats)> = handles
+            .into_iter()
+            .map(|(name, h)| {
+                let stats = lockorder::lock(LockClass::Entry, &h).stats;
+                (name, stats)
+            })
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     /// Stored graph names, sorted (for `GRAPHS`-style listings and tests).

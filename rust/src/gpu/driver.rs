@@ -145,6 +145,7 @@ impl GpuMatcher {
                     (g.nc - cardinality) * super::config::ADAPTIVE_DENSITY_DIV < g.nc
                 }
             };
+            let init_cycles0 = clock.cycles;
             if let Some(s) = pending_seeds.take() {
                 init_bfs_array_seeded(
                     &mut state,
@@ -163,11 +164,24 @@ impl GpuMatcher {
             } else {
                 init_bfs_array(&mut state, cfg, with_root, &mut clock);
             }
+            let init_dur = clock.cycles - init_cycles0;
+            if let Some(t) = ctx.trace() {
+                t.device_span(
+                    "init_bfs_array",
+                    "kernel",
+                    0,
+                    init_cycles0,
+                    init_dur,
+                    vec![("seeded", seeded_phase as u64)],
+                );
+            }
             state.augmenting_path_found = false;
             let mut bfs_level = L0;
             let mut launches = 0u32;
             loop {
                 state.vertex_inserted = false;
+                let kernel_cycles0 = clock.cycles;
+                let frontier_len = frontier.len() as u64;
                 let scanned = if compacted {
                     ctx.stats.frontier_total += frontier.len() as u64;
                     ctx.stats.frontier_peak =
@@ -206,6 +220,22 @@ impl GpuMatcher {
                 };
                 ctx.stats.edges_scanned += scanned;
                 launches += 1;
+                if let Some(t) = ctx.trace() {
+                    let name: &'static str = match (compacted, self.config.kernel) {
+                        (true, BfsKernel::GpuBfs) => "gpubfs_frontier",
+                        (true, BfsKernel::GpuBfsWr) => "gpubfs_wr_frontier",
+                        (false, BfsKernel::GpuBfs) => "gpubfs",
+                        (false, BfsKernel::GpuBfsWr) => "gpubfs_wr",
+                    };
+                    let mut args = vec![
+                        ("level", (bfs_level - L0) as u64),
+                        ("edges_scanned", scanned),
+                    ];
+                    if compacted {
+                        args.push(("frontier", frontier_len));
+                    }
+                    t.device_span(name, "kernel", 0, kernel_cycles0, clock.cycles - kernel_cycles0, args);
+                }
                 // Algorithm 1 lines 8–10: APsB stops at the first level
                 // with an augmenting path; APFB keeps going to the bottom.
                 if self.config.driver == ApDriver::Apsb && state.augmenting_path_found {
@@ -219,7 +249,7 @@ impl GpuMatcher {
                 }
                 bfs_level += 1;
             }
-            ctx.stats.record_phase(launches);
+            ctx.record_phase(launches);
             if !state.augmenting_path_found {
                 if seeded_phase {
                     // a quiet *seeded* phase only proves the seeds have no
@@ -235,6 +265,7 @@ impl GpuMatcher {
             if compacted {
                 ctx.stats.endpoints_total += endpoints.len() as u64;
             }
+            let alt_cycles0 = clock.cycles;
             if improved_wr {
                 let chosen = if compacted {
                     // filter the endpoint worklist instead of scanning
@@ -253,7 +284,23 @@ impl GpuMatcher {
             } else {
                 alternate(&mut state, cfg, None, &mut clock);
             }
+            let alt_dur = clock.cycles - alt_cycles0;
+            if let Some(t) = ctx.trace() {
+                t.device_span(
+                    "alternate",
+                    "kernel",
+                    0,
+                    alt_cycles0,
+                    alt_dur,
+                    vec![("endpoints", endpoints.len() as u64)],
+                );
+            }
+            let fix_cycles0 = clock.cycles;
             let (fixes, after) = fixmatching(&mut state, cfg, &mut clock);
+            let fix_dur = clock.cycles - fix_cycles0;
+            if let Some(t) = ctx.trace() {
+                t.device_span("fixmatching", "kernel", 0, fix_cycles0, fix_dur, vec![("fixes", fixes)]);
+            }
             ctx.stats.fixes += fixes;
             let after = after as usize;
             debug_assert_eq!(after, state.cardinality(), "incremental |M| diverged");

@@ -82,6 +82,7 @@ pub mod runtime;
 pub mod sanitize;
 pub mod seq;
 pub mod shard;
+pub mod trace;
 pub mod util;
 
 pub use coordinator::spec::{AlgoSpec, MulticoreKind, SeqKind, XlaKind};

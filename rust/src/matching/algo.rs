@@ -16,6 +16,7 @@
 
 use super::Matching;
 use crate::graph::csr::BipartiteCsr;
+use crate::trace::TraceBuf;
 use crate::util::pool::WorkspacePool;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -127,11 +128,21 @@ pub struct RunCtx {
     /// Counters the running algorithm records into; `finish`/`finish_with`
     /// move them into the returned [`RunResult`].
     pub stats: RunStats,
+    /// Span sink, armed per run by whoever wants a trace (executor,
+    /// profile subcommand, tests). `None` — the default — costs a single
+    /// branch at every instrumentation site; see `crate::trace`.
+    trace: Option<Box<TraceBuf>>,
 }
 
 impl RunCtx {
     pub fn new(pool: Arc<WorkspacePool>) -> Self {
-        Self { pool, deadline: None, cancel: CancelToken::new(), stats: RunStats::default() }
+        Self {
+            pool,
+            deadline: None,
+            cancel: CancelToken::new(),
+            stats: RunStats::default(),
+            trace: None,
+        }
     }
 
     /// A throwaway context: private pool, no deadline, fresh token. What
@@ -172,6 +183,42 @@ impl RunCtx {
             deadline: self.deadline,
             cancel: self.cancel.clone(),
             stats: RunStats::default(),
+            // span sinks are not forked: nested fallback runs merge into
+            // the caller's *stats*, and their phase structure is the
+            // caller's to narrate (a fork cannot own half the buffer)
+            trace: None,
+        }
+    }
+
+    // -- tracing ----------------------------------------------------------
+
+    /// Arm span recording for this run. The executor (or the profile
+    /// subcommand) hands the buffer in before `run` and takes it back
+    /// with [`RunCtx::take_trace`] after.
+    pub fn arm_trace(&mut self, buf: Box<TraceBuf>) {
+        self.trace = Some(buf);
+    }
+
+    pub fn take_trace(&mut self) -> Option<Box<TraceBuf>> {
+        self.trace.take()
+    }
+
+    /// The armed span sink, if any. Matcher instrumentation sites call
+    /// this and do nothing when it returns `None` — that single branch is
+    /// the entire disarmed cost.
+    pub fn trace(&mut self) -> Option<&mut TraceBuf> {
+        self.trace.as_deref_mut()
+    }
+
+    /// Record one completed matcher phase: updates the run's counters
+    /// (phases, kernel launches, the Fig. 2 `launches_per_phase` series)
+    /// and — when tracing is armed — emits the matching `"phase"` span.
+    /// Matchers call this instead of touching `stats.record_phase`
+    /// directly so the span and the counter can never disagree.
+    pub fn record_phase(&mut self, launches_this_phase: u32) {
+        self.stats.record_phase(launches_this_phase);
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.phase_span(self.stats.phases - 1, launches_this_phase);
         }
     }
 
@@ -358,6 +405,28 @@ mod tests {
         sub.give_i32(vec![0; 64]);
         let _ = ctx.lease_i32(64, -1);
         assert_eq!(ctx.pool().reuses(), 1);
+    }
+
+    #[test]
+    fn ctx_record_phase_emits_spans_agreeing_with_stats() {
+        let mut ctx = RunCtx::detached();
+        assert!(ctx.trace().is_none(), "disarmed by default");
+        ctx.arm_trace(crate::trace::TraceBuf::new());
+        ctx.record_phase(3);
+        ctx.record_phase(1);
+        let buf = ctx.take_trace().expect("armed buffer comes back");
+        let spans: Vec<_> = buf.spans().iter().filter(|s| s.cat == "phase").collect();
+        let launches: Vec<u64> = spans
+            .iter()
+            .map(|s| s.args.iter().find(|(k, _)| *k == "launches").unwrap().1)
+            .collect();
+        assert_eq!(launches, vec![3, 1]);
+        assert_eq!(ctx.stats.launches_per_phase, vec![3, 1]);
+        assert!(ctx.trace().is_none(), "take_trace disarms");
+        // fork never inherits the sink
+        ctx.arm_trace(crate::trace::TraceBuf::new());
+        let mut sub = ctx.fork();
+        assert!(sub.trace().is_none());
     }
 
     #[test]

@@ -116,7 +116,7 @@ impl MatchingAlgorithm for PDbfs {
             ctx.stats.edges_scanned += edges_scanned.load(Ordering::Relaxed);
             let aug = round_aug.load(Ordering::Relaxed);
             total_aug.fetch_add(aug, Ordering::Relaxed);
-            ctx.stats.record_phase(1);
+            ctx.record_phase(1);
             if aug == 0 {
                 break; // starvation or true maximality — certified below
             }

@@ -144,7 +144,7 @@ impl MatchingAlgorithm for PHk {
             if !found {
                 break; // certified maximum: no augmenting path exists
             }
-            ctx.stats.record_phase(launches);
+            ctx.record_phase(launches);
 
             // ---- parallel disjoint shortest-path DFS ----
             stamp += 1;

@@ -96,7 +96,7 @@ impl MatchingAlgorithm for PPfp {
                 scanned_total.fetch_add(scanned, Ordering::Relaxed);
             });
             ctx.stats.edges_scanned += scanned_total.load(Ordering::Relaxed);
-            ctx.stats.record_phase(0);
+            ctx.record_phase(0);
             let a = aug.load(Ordering::Relaxed);
             total_aug += a;
             if a == 0 {

@@ -16,7 +16,7 @@
 //! ```text
 //! Entry  →  Name  →  Recency  →  StoreMap
 //!   \______↘  ↓  ↘_____↘
-//!          NameTable,  Hub        (leaves: nothing acquired under them)
+//!          NameTable,  Hub,  SpecStats   (leaves: nothing under them)
 //! ```
 //!
 //! * [`LockClass::Entry`] — a graph's `Mutex<StoreEntry>`
@@ -35,6 +35,8 @@
 //!   handles; a leaf held only for the handle lookup.
 //! * [`LockClass::Hub`] — the replication hub's state; a leaf
 //!   (publishes happen under `Entry`/`Name`, nothing locks under it).
+//! * [`LockClass::SpecStats`] — the metrics per-spec aggregation map
+//!   (`coordinator/metrics.rs`); a leaf held only to bump counters.
 //!
 //! Same-class edges are not recorded: no code path holds two locks of
 //! one class at once (entries are processed one at a time everywhere),
@@ -62,6 +64,9 @@ pub enum LockClass {
     StoreMap,
     /// the replication hub state
     Hub,
+    /// the metrics per-spec aggregation map (leaf: held only to bump
+    /// counters, nothing acquired under it)
+    SpecStats,
     /// watchdog negative tests only
     TestA,
     /// watchdog negative tests only

@@ -72,7 +72,7 @@ impl MatchingAlgorithm for BfsSimple {
                 std::mem::swap(&mut frontier, &mut next);
                 next.clear();
             }
-            ctx.stats.record_phase(launches);
+            ctx.record_phase(launches);
             if let Some(mut r) = endpoint {
                 // walk predecessors back to c0, flipping edges
                 loop {

@@ -42,7 +42,7 @@ impl MatchingAlgorithm for DfsLookahead {
                 ctx.stats.augmentations += 1;
             }
         }
-        ctx.stats.record_phase(0);
+        ctx.record_phase(0);
         ctx.give_u32(look);
         ctx.give_u32(visited);
         ctx.finish_with(m, outcome)

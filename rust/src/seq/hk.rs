@@ -40,7 +40,7 @@ impl MatchingAlgorithm for Hk {
             let Some(_aug_level) = levels else {
                 break; // no augmenting path: maximum
             };
-            ctx.stats.record_phase(_aug_level + 1);
+            ctx.record_phase(_aug_level + 1);
 
             // DFS for a maximal set of disjoint shortest augmenting paths
             row_visited.iter_mut().for_each(|v| *v = false);

@@ -37,7 +37,7 @@ impl MatchingAlgorithm for Hkdw {
             let levels =
                 super::hk::bfs_levels(g, &m, &mut dist, &mut frontier, &mut next, &mut ctx.stats);
             let Some(aug_level) = levels else { break };
-            ctx.stats.record_phase(aug_level + 1);
+            ctx.record_phase(aug_level + 1);
 
             // HK phase: disjoint shortest paths (same as seq::hk)
             row_visited.iter_mut().for_each(|v| *v = false);

@@ -50,7 +50,7 @@ impl MatchingAlgorithm for Pfp {
                     unmatched_remaining += 1;
                 }
             }
-            ctx.stats.record_phase(0); // PFP has no BFS kernels; phases only
+            ctx.record_phase(0); // PFP has no BFS kernels; phases only
             if augmented_this_phase == 0 || unmatched_remaining == 0 {
                 break;
             }

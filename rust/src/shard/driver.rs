@@ -123,7 +123,17 @@ impl ShardedGpuMatcher {
             } else {
                 init_bfs_array(&mut state, cfg, with_root, &mut scratch);
             }
+            let init_par0 = clocks.makespan().parallel_cycles;
             clocks.charge_replicated(&scratch);
+            if let Some(t) = ctx.trace() {
+                let par1 = clocks.makespan().parallel_cycles;
+                t.bsp_span(
+                    "init_replicated",
+                    init_par0,
+                    par1 - init_par0,
+                    vec![("compacted", u64::from(compacted)), ("launches", scratch.launches)],
+                );
+            }
             endpoints.clear();
 
             state.augmenting_path_found = false;
@@ -131,6 +141,7 @@ impl ShardedGpuMatcher {
             let mut launches = 0u32;
             loop {
                 state.vertex_inserted = false;
+                let level_par0 = clocks.makespan().parallel_cycles;
                 if compacted {
                     let global: u64 = frontiers.iter().map(|f| f.len() as u64).sum();
                     ctx.stats.frontier_total += global;
@@ -140,6 +151,12 @@ impl ShardedGpuMatcher {
                 // legal serialization of the K concurrent devices)
                 for s in 0..k {
                     claims[s].clear();
+                    let shard_par0 = clocks.clock_mut(s).parallel_cycles;
+                    let items = if compacted {
+                        frontiers[s].len() as u64
+                    } else {
+                        part.range(s).len() as u64
+                    };
                     let scanned = if compacted {
                         if frontiers[s].is_empty() {
                             continue; // idle device: no launch, no charge
@@ -198,6 +215,27 @@ impl ShardedGpuMatcher {
                     };
                     ctx.stats.edges_scanned += scanned;
                     launches += 1;
+                    if let Some(t) = ctx.trace() {
+                        let name: &'static str = match (compacted, self.inner.kernel) {
+                            (true, BfsKernel::GpuBfs) => "gpubfs_frontier",
+                            (true, BfsKernel::GpuBfsWr) => "gpubfs_wr_frontier",
+                            (false, BfsKernel::GpuBfs) => "gpubfs_cols",
+                            (false, BfsKernel::GpuBfsWr) => "gpubfs_wr_cols",
+                        };
+                        let dur = clocks.clock_mut(s).parallel_cycles - shard_par0;
+                        t.device_span(
+                            name,
+                            "kernel",
+                            s,
+                            shard_par0,
+                            dur,
+                            vec![
+                                ("level", (bfs_level - L0) as u64),
+                                ("items", items),
+                                ("edges_scanned", scanned),
+                            ],
+                        );
+                    }
                 }
                 // ---- frontier exchange: route every claimed column to
                 // its owning shard. Claims of home-owned columns are free;
@@ -225,6 +263,22 @@ impl ShardedGpuMatcher {
                 }
                 clocks.charge_exchange(&per_source);
                 clocks.barrier();
+                if let Some(t) = ctx.trace() {
+                    let (msgs, words) = per_source
+                        .iter()
+                        .fold((0u64, 0u64), |(m, w), &(pm, pw)| (m + pm, w + pw));
+                    let par1 = clocks.makespan().parallel_cycles;
+                    t.bsp_span(
+                        "level",
+                        level_par0,
+                        par1 - level_par0,
+                        vec![
+                            ("level", (bfs_level - L0) as u64),
+                            ("exchange_msgs", msgs),
+                            ("exchange_words", words),
+                        ],
+                    );
+                }
                 if self.inner.driver == ApDriver::Apsb && state.augmenting_path_found {
                     break;
                 }
@@ -239,7 +293,7 @@ impl ShardedGpuMatcher {
                 }
                 bfs_level += 1;
             }
-            ctx.stats.record_phase(launches);
+            ctx.record_phase(launches);
             if !state.augmenting_path_found {
                 break; // Berge: no augmenting path ⇒ maximum
             }
@@ -278,7 +332,17 @@ impl ShardedGpuMatcher {
                 alternate(&mut state, cfg, Some(endpoints.as_slice()), &mut scratch);
             }
             let (fixes, after) = fixmatching(&mut state, cfg, &mut scratch);
+            let aug_par0 = clocks.makespan().parallel_cycles;
             clocks.charge_replicated(&scratch);
+            if let Some(t) = ctx.trace() {
+                let par1 = clocks.makespan().parallel_cycles;
+                t.bsp_span(
+                    "augment_replicated",
+                    aug_par0,
+                    par1 - aug_par0,
+                    vec![("endpoints", endpoints.len() as u64), ("fixes", fixes)],
+                );
+            }
             ctx.stats.fixes += fixes;
             let after = after as usize;
             debug_assert_eq!(after, state.cardinality(), "incremental |M| diverged");

@@ -1,0 +1,632 @@
+//! Span-based tracing for the serving stack: the measurement substrate
+//! the paper's per-phase argument needs at serve time.
+//!
+//! The paper's analysis is entirely *per-phase* and *per-kernel* (Fig. 2
+//! plots BFS kernel launches per phase; §5 attributes the GPU wins to
+//! launch counts and frontier dynamics), but until this module the
+//! coordinator could only report aggregate counters. The trace layer
+//! records **spans** — named, timed intervals with numeric args — at
+//! three granularities:
+//!
+//! * **root spans** per job (queue wait, graph load, init, solve,
+//!   certify, WAL fsync, snapshot write, replication-ack wait), recorded
+//!   by the executor in wall-clock µs;
+//! * **phase spans** inside every matcher ([`crate::RunCtx::record_phase`]
+//!   emits one per outer iteration, carrying the phase's kernel-launch
+//!   count — the Fig. 2 series, reconstructable from one traced run);
+//! * **kernel/level leaf spans** in the GPU and sharded drivers, recorded
+//!   in **modeled device cycles** on per-shard tracks, carrying frontier
+//!   sizes and (sharded) per-level exchange words — the BSP makespan
+//!   decomposition made visible.
+//!
+//! ## Two timebases
+//!
+//! Host spans (tracks `< DEVICE_TRACK_BASE`) are µs since the job
+//! started. Device spans (tracks `>= DEVICE_TRACK_BASE`) are *modeled
+//! device cycles* — the same unit as `gpu::device::DeviceClock`. The
+//! Chrome exporter places them in separate trace processes so the two
+//! timebases are never visually conflated (one modeled cycle renders as
+//! one µs on the device tracks).
+//!
+//! ## Cost model
+//!
+//! Recording is **armed per run**: a [`TraceBuf`] is handed to the
+//! `RunCtx` (or kept by the executor for root spans) only when tracing is
+//! enabled. Disarmed, every instrumentation site is a single
+//! `Option`-is-`None` branch — no allocation, no clock read, no atomic —
+//! which is what keeps `bench_ablation` device-cycle totals and
+//! `bench_persist` throughput byte-identical with tracing off.
+//!
+//! While a run executes, span recording is lock-free: spans go into the
+//! run's own `Vec` (bounded by [`TraceBuf::cap`]; overflow increments a
+//! drop counter instead of reallocating without bound). Publication into
+//! the shared [`TraceRing`] happens once, after the job completes: an
+//! atomic head reserves a slot and a brief per-slot mutex swaps the
+//! `Arc<JobTrace>` in — readers (`TRACE` verb) never block writers for
+//! longer than one pointer swap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Track id of the host (wall-clock) timeline.
+pub const HOST_TRACK: u32 = 0;
+/// Track id of the aggregated BSP (bulk-synchronous parallel) view of a
+/// sharded run: spans here measure the *parallel makespan* advance per
+/// level, so their durations sum to `ShardClocks::makespan().parallel_cycles`.
+pub const BSP_TRACK: u32 = 99;
+/// Device tracks: shard `s` records on `DEVICE_TRACK_BASE + s`
+/// (unsharded GPU runs use shard 0). Device-track timestamps are modeled
+/// cycles, not µs.
+pub const DEVICE_TRACK_BASE: u32 = 100;
+
+/// One named, timed interval. `ts`/`dur` are µs on host tracks and
+/// modeled device cycles on device tracks (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// coarse category: "job", "phase", "kernel", "level", "exchange",
+    /// "persist", "repl"
+    pub cat: &'static str,
+    pub track: u32,
+    pub ts: u64,
+    pub dur: u64,
+    /// numeric arguments (launch counts, frontier sizes, words moved, …)
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// Per-run span sink. Created by whoever arms tracing (the executor, the
+/// profile subcommand, a test), threaded through [`crate::RunCtx`] for
+/// the matcher-level spans, and drained into a [`JobTrace`] at the end.
+#[derive(Debug)]
+pub struct TraceBuf {
+    t0: Instant,
+    spans: Vec<SpanEvent>,
+    cap: usize,
+    dropped: u64,
+    /// host-µs mark where the current matcher phase began (reset by
+    /// [`TraceBuf::phase_span`]).
+    phase_mark_us: u64,
+}
+
+/// Default per-job span cap: generous for any realistic job (a phase
+/// emits one span, a kernel launch one leaf), bounded so a pathological
+/// run cannot grow the buffer without limit.
+pub const DEFAULT_SPAN_CAP: usize = 16384;
+
+impl TraceBuf {
+    pub fn new() -> Box<Self> {
+        Self::with_capacity(DEFAULT_SPAN_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Box<Self> {
+        Box::new(Self {
+            t0: Instant::now(),
+            spans: Vec::with_capacity(64.min(cap)),
+            cap: cap.max(1),
+            dropped: 0,
+            phase_mark_us: 0,
+        })
+    }
+
+    /// A buffer whose timebase starts at `t0` instead of now. The
+    /// executor backdates to the job's submit instant so the gap between
+    /// submission and execution shows up as a `queue_wait` span at the
+    /// start of the timeline.
+    pub fn with_origin(t0: Instant) -> Box<Self> {
+        let mut b = Self::with_capacity(DEFAULT_SPAN_CAP);
+        b.t0 = t0;
+        b
+    }
+
+    /// µs since this trace began — the host timebase.
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    pub fn push(&mut self, ev: SpanEvent) {
+        if self.spans.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.spans.push(ev);
+    }
+
+    /// Record a host-track span that began at `start_us` (from
+    /// [`TraceBuf::now_us`]) and ends now.
+    pub fn host_span(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        start_us: u64,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        let end = self.now_us();
+        self.push(SpanEvent {
+            name,
+            cat,
+            track: HOST_TRACK,
+            ts: start_us,
+            dur: end.saturating_sub(start_us),
+            args,
+        });
+    }
+
+    /// Record a device-track span in modeled cycles on shard `shard`'s
+    /// track.
+    pub fn device_span(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        shard: usize,
+        ts_cycles: u64,
+        dur_cycles: u64,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        self.push(SpanEvent {
+            name,
+            cat,
+            track: DEVICE_TRACK_BASE + shard as u32,
+            ts: ts_cycles,
+            dur: dur_cycles,
+            args,
+        });
+    }
+
+    /// Record a span on the aggregated BSP track (sharded runs): the
+    /// per-level advance of the parallel makespan, in modeled cycles.
+    pub fn bsp_span(
+        &mut self,
+        name: &'static str,
+        ts_cycles: u64,
+        dur_cycles: u64,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        self.push(SpanEvent { name, cat: "level", track: BSP_TRACK, ts: ts_cycles, dur: dur_cycles, args });
+    }
+
+    /// Close the current matcher phase: emits a host-track `"phase"` span
+    /// from the last phase mark to now, carrying the phase index and its
+    /// kernel-launch count (the Fig. 2 pair), then re-marks.
+    pub fn phase_span(&mut self, phase_index: u64, launches: u32) {
+        let start = self.phase_mark_us;
+        self.host_span("phase", "phase", start, vec![("phase", phase_index), ("launches", launches as u64)]);
+        self.phase_mark_us = self.now_us();
+    }
+
+    /// Spans recorded so far (primarily for tests and the exporters).
+    pub fn spans(&self) -> &[SpanEvent] {
+        &self.spans
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain the buffer into its final span list.
+    pub fn into_spans(self) -> (Vec<SpanEvent>, u64) {
+        (self.spans, self.dropped)
+    }
+}
+
+/// A completed job's trace: identity, outcome, the span list, and the
+/// summary counters the JSON line leads with.
+#[derive(Debug, Clone)]
+pub struct JobTrace {
+    pub job_id: u64,
+    /// "match" | "load" | "update" | "drop" | "save" | "profile"
+    pub op: &'static str,
+    /// stored-graph name, when the job addressed one
+    pub graph: Option<String>,
+    /// resolved algorithm spec (empty for non-Match ops without a solve)
+    pub algo: String,
+    /// unix ms when the job started (for log correlation)
+    pub start_unix_ms: u64,
+    pub total_us: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub phases: u64,
+    pub launches: u64,
+    pub device_cycles: u64,
+    pub device_parallel_cycles: u64,
+    pub shards: u64,
+    pub exchange_words: u64,
+    pub cardinality: u64,
+    pub spans: Vec<SpanEvent>,
+    pub dropped_spans: u64,
+}
+
+impl JobTrace {
+    /// One JSON object on one line — the `TRACE` verb's wire format.
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(256 + self.spans.len() * 96);
+        s.push('{');
+        push_kv_u64(&mut s, "job", self.job_id);
+        push_kv_str(&mut s, "op", self.op);
+        match &self.graph {
+            Some(g) => push_kv_str(&mut s, "graph", g),
+            None => push_kv_raw(&mut s, "graph", "null"),
+        }
+        push_kv_str(&mut s, "algo", &self.algo);
+        push_kv_u64(&mut s, "start_ms", self.start_unix_ms);
+        push_kv_u64(&mut s, "total_us", self.total_us);
+        push_kv_raw(&mut s, "ok", if self.ok { "true" } else { "false" });
+        match &self.error {
+            Some(e) => push_kv_str(&mut s, "error", e),
+            None => push_kv_raw(&mut s, "error", "null"),
+        }
+        push_kv_u64(&mut s, "phases", self.phases);
+        push_kv_u64(&mut s, "launches", self.launches);
+        push_kv_u64(&mut s, "device_cycles", self.device_cycles);
+        push_kv_u64(&mut s, "device_parallel_cycles", self.device_parallel_cycles);
+        push_kv_u64(&mut s, "shards", self.shards);
+        push_kv_u64(&mut s, "exchange_words", self.exchange_words);
+        push_kv_u64(&mut s, "cardinality", self.cardinality);
+        push_kv_u64(&mut s, "dropped_spans", self.dropped_spans);
+        s.push_str("\"spans\":[");
+        for (i, sp) in self.spans.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('{');
+            push_kv_str(&mut s, "name", sp.name);
+            push_kv_str(&mut s, "cat", sp.cat);
+            push_kv_u64(&mut s, "track", sp.track as u64);
+            push_kv_u64(&mut s, "ts", sp.ts);
+            push_kv_u64(&mut s, "dur", sp.dur);
+            s.push_str("\"args\":{");
+            for (j, (k, v)) in sp.args.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&format!("\"{}\":{}", json_escape(k), v));
+            }
+            s.push_str("}}");
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// A complete Chrome `trace_event` document (the format
+    /// `chrome://tracing` and Perfetto load): host spans under one trace
+    /// process in real µs, device spans under a second process where one
+    /// modeled cycle renders as one µs.
+    pub fn to_chrome_trace(&self) -> String {
+        const HOST_PID: u32 = 1;
+        const DEVICE_PID: u32 = 2;
+        let mut s = String::with_capacity(512 + self.spans.len() * 128);
+        s.push_str("{\"traceEvents\":[");
+        // process/thread naming metadata first
+        s.push_str(&format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{HOST_PID},\"tid\":0,\
+             \"args\":{{\"name\":\"host (wall-clock \\u00b5s)\"}}}}"
+        ));
+        s.push_str(&format!(
+            ",{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{DEVICE_PID},\"tid\":0,\
+             \"args\":{{\"name\":\"device (modeled cycles)\"}}}}"
+        ));
+        let mut tracks: Vec<u32> = self.spans.iter().map(|sp| sp.track).collect();
+        tracks.sort_unstable();
+        tracks.dedup();
+        for t in &tracks {
+            let (pid, tid, name) = chrome_track(*t);
+            s.push_str(&format!(
+                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                json_escape(&name)
+            ));
+        }
+        for sp in &self.spans {
+            let (pid, tid, _) = chrome_track(sp.track);
+            s.push_str(&format!(
+                ",{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":{pid},\"tid\":{tid},\"args\":{{",
+                json_escape(sp.name),
+                json_escape(sp.cat),
+                sp.ts,
+                sp.dur
+            ));
+            for (j, (k, v)) in sp.args.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&format!("\"{}\":{}", json_escape(k), v));
+            }
+            s.push_str("}}");
+        }
+        s.push_str(&format!(
+            "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"job\":\"{}\",\"algo\":\"{}\",\
+             \"op\":\"{}\",\"cardinality\":\"{}\"}}}}",
+            self.job_id,
+            json_escape(&self.algo),
+            self.op,
+            self.cardinality
+        ));
+        s
+    }
+
+    /// Compact host-side breakdown for the slow-request log: host-track
+    /// span durations aggregated by name, first-seen order —
+    /// `queue_wait=0.1ms load=2.3ms solve=812.0ms certify=31.4ms`.
+    pub fn summary(&self) -> String {
+        let mut names: Vec<&'static str> = Vec::new();
+        let mut totals: Vec<u64> = Vec::new();
+        for sp in self.spans.iter().filter(|sp| sp.track == HOST_TRACK && sp.cat != "phase") {
+            match names.iter().position(|n| *n == sp.name) {
+                Some(i) => totals[i] += sp.dur,
+                None => {
+                    names.push(sp.name);
+                    totals.push(sp.dur);
+                }
+            }
+        }
+        names
+            .iter()
+            .zip(&totals)
+            .map(|(n, us)| format!("{n}={:.1}ms", *us as f64 / 1000.0))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Map a span track to a Chrome (pid, tid, thread name).
+fn chrome_track(track: u32) -> (u32, u32, String) {
+    if track == HOST_TRACK {
+        (1, 0, "host".to_string())
+    } else if track == BSP_TRACK {
+        (2, 99, "bsp makespan".to_string())
+    } else if track >= DEVICE_TRACK_BASE {
+        let shard = track - DEVICE_TRACK_BASE;
+        (2, shard + 1, format!("shard {shard}"))
+    } else {
+        (1, track, format!("host track {track}"))
+    }
+}
+
+fn push_kv_u64(s: &mut String, k: &str, v: u64) {
+    s.push_str(&format!("\"{k}\":{v},"));
+}
+
+fn push_kv_str(s: &mut String, k: &str, v: &str) {
+    s.push_str(&format!("\"{k}\":\"{}\",", json_escape(v)));
+}
+
+fn push_kv_raw(s: &mut String, k: &str, v: &str) {
+    s.push_str(&format!("\"{k}\":{v},"));
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Fixed-capacity ring of the most recent job traces, shared by the
+/// executor (writer) and the `TRACE` verb (reader). The head is an
+/// atomic counter — a publish reserves its slot with one `fetch_add` —
+/// and each slot holds its `Arc<JobTrace>` behind a mutex held only for
+/// the pointer swap, so readers and writers never serialize on the ring
+/// as a whole.
+pub struct TraceRing {
+    slots: Vec<Mutex<Option<(u64, Arc<JobTrace>)>>>,
+    head: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        let cap = capacity.max(1);
+        Arc::new(Self {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of traces published so far (monotonic, not clamped to
+    /// capacity).
+    pub fn published(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    pub fn publish(&self, trace: JobTrace) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        // brief per-slot lock: one Arc swap, never held across work
+        *self.slots[slot].lock().unwrap() = Some((seq, Arc::new(trace)));
+    }
+
+    /// The most recent `last` traces, newest first, optionally filtered
+    /// by stored-graph name.
+    pub fn recent(&self, graph: Option<&str>, last: usize) -> Vec<Arc<JobTrace>> {
+        let mut entries: Vec<(u64, Arc<JobTrace>)> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            if let Some((seq, t)) = slot.lock().unwrap().as_ref() {
+                if graph.map_or(true, |g| t.graph.as_deref() == Some(g)) {
+                    entries.push((*seq, t.clone()));
+                }
+            }
+        }
+        entries.sort_by(|a, b| b.0.cmp(&a.0));
+        entries.truncate(last);
+        entries.into_iter().map(|(_, t)| t).collect()
+    }
+}
+
+/// Unix wall-clock milliseconds (for trace timestamps in logs).
+pub fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_trace() -> JobTrace {
+        let mut buf = TraceBuf::with_capacity(8);
+        buf.phase_span(0, 3);
+        buf.device_span("gpubfs", "kernel", 0, 100, 4000, vec![("frontier", 17)]);
+        buf.bsp_span("bsp_level", 0, 900, vec![("level", 0)]);
+        let (spans, dropped) = buf.into_spans();
+        JobTrace {
+            job_id: 7,
+            op: "match",
+            graph: Some("g\"quoted".into()),
+            algo: "gpu:APFB-GPUBFS-WR-CT-FC".into(),
+            start_unix_ms: 1,
+            total_us: 1234,
+            ok: true,
+            error: None,
+            phases: 1,
+            launches: 3,
+            device_cycles: 4100,
+            device_parallel_cycles: 900,
+            shards: 0,
+            exchange_words: 0,
+            cardinality: 42,
+            spans,
+            dropped_spans: dropped,
+        }
+    }
+
+    /// Cheap structural JSON check (no serde in the tree): balanced
+    /// braces/brackets outside strings, no raw control chars.
+    fn assert_balanced_json(s: &str) {
+        let (mut depth_obj, mut depth_arr) = (0i64, 0i64);
+        let mut in_str = false;
+        let mut esc = false;
+        for c in s.chars() {
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    in_str = false;
+                } else {
+                    assert!((c as u32) >= 0x20, "raw control char in JSON string");
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' => depth_obj += 1,
+                '}' => depth_obj -= 1,
+                '[' => depth_arr += 1,
+                ']' => depth_arr -= 1,
+                _ => {}
+            }
+            assert!(depth_obj >= 0 && depth_arr >= 0, "unbalanced: {s}");
+        }
+        assert!(!in_str, "unterminated string");
+        assert_eq!(depth_obj, 0, "unbalanced objects");
+        assert_eq!(depth_arr, 0, "unbalanced arrays");
+    }
+
+    #[test]
+    fn span_cap_drops_instead_of_growing() {
+        let mut buf = TraceBuf::with_capacity(2);
+        for i in 0..5 {
+            buf.host_span("x", "job", i, vec![]);
+        }
+        assert_eq!(buf.spans().len(), 2);
+        assert_eq!(buf.dropped(), 3);
+    }
+
+    #[test]
+    fn phase_span_carries_fig2_pair_and_restarts_mark() {
+        let mut buf = TraceBuf::new();
+        buf.phase_span(0, 4);
+        buf.phase_span(1, 2);
+        let spans = buf.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].args, vec![("phase", 0), ("launches", 4)]);
+        assert_eq!(spans[1].args, vec![("phase", 1), ("launches", 2)]);
+        assert!(spans[1].ts >= spans[0].ts, "phases are ordered");
+    }
+
+    #[test]
+    fn json_line_is_escaped_and_balanced() {
+        let t = demo_trace();
+        let line = t.to_json_line();
+        assert!(!line.contains('\n'), "one line");
+        assert!(line.contains("\\\"quoted"), "graph name escaped: {line}");
+        assert!(line.contains("\"spans\":["));
+        assert_balanced_json(&line);
+    }
+
+    #[test]
+    fn chrome_trace_has_metadata_and_both_processes() {
+        let t = demo_trace();
+        let doc = t.to_chrome_trace();
+        assert!(doc.contains("\"traceEvents\":["));
+        assert!(doc.contains("process_name"));
+        assert!(doc.contains("\"ph\":\"X\""));
+        // host span on pid 1, device span on pid 2
+        assert!(doc.contains("\"pid\":1"));
+        assert!(doc.contains("\"pid\":2"));
+        assert_balanced_json(&doc);
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_filters_by_graph() {
+        let ring = TraceRing::new(3);
+        for i in 0..5u64 {
+            let mut t = demo_trace();
+            t.job_id = i;
+            t.graph = Some(if i % 2 == 0 { "even" } else { "odd" }.to_string());
+            ring.publish(t);
+        }
+        let recent = ring.recent(None, 10);
+        assert_eq!(recent.len(), 3, "capacity bounds retention");
+        assert_eq!(recent[0].job_id, 4, "newest first");
+        let odd = ring.recent(Some("odd"), 10);
+        assert!(odd.iter().all(|t| t.graph.as_deref() == Some("odd")));
+        assert_eq!(odd[0].job_id, 3);
+        let none = ring.recent(Some("absent"), 10);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn summary_aggregates_host_spans_by_name() {
+        let mut buf = TraceBuf::with_capacity(16);
+        buf.push(SpanEvent { name: "load", cat: "job", track: HOST_TRACK, ts: 0, dur: 1500, args: vec![] });
+        buf.push(SpanEvent { name: "solve", cat: "job", track: HOST_TRACK, ts: 1500, dur: 2000, args: vec![] });
+        buf.push(SpanEvent { name: "solve", cat: "job", track: HOST_TRACK, ts: 3500, dur: 500, args: vec![] });
+        // phase detail and device spans stay out of the one-liner
+        buf.push(SpanEvent { name: "phase", cat: "phase", track: HOST_TRACK, ts: 0, dur: 9, args: vec![] });
+        buf.device_span("gpubfs", "kernel", 0, 0, 999, vec![]);
+        let (spans, dropped) = buf.into_spans();
+        let t = JobTrace { spans, dropped_spans: dropped, ..demo_trace() };
+        assert_eq!(t.summary(), "load=1.5ms solve=2.5ms");
+    }
+
+    #[test]
+    fn with_origin_backdates_the_timebase() {
+        let t0 = Instant::now() - std::time::Duration::from_millis(50);
+        let buf = TraceBuf::with_origin(t0);
+        assert!(buf.now_us() >= 50_000, "origin is in the past: {}", buf.now_us());
+    }
+
+    #[test]
+    fn json_escape_handles_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,102 @@
+//! Golden-shape trace tests: an armed run's span timeline must tell the
+//! same story as the counters the matchers already report. Two anchors:
+//! the per-phase `launches` args of a `gpu:*-FC` run reproduce
+//! `RunStats.launches_per_phase` exactly (the paper's Fig. 2 pairing),
+//! and a `shard4:` run's BSP-track span durations telescope to the
+//! modeled parallel makespan (`RunStats.device_parallel_cycles`).
+
+use bimatch::coordinator::registry;
+use bimatch::graph::gen::Family;
+use bimatch::matching::init::InitHeuristic;
+use bimatch::trace::{TraceBuf, BSP_TRACK, DEVICE_TRACK_BASE, HOST_TRACK};
+use bimatch::{MatchingAlgorithm, RunCtx};
+
+#[test]
+fn gpu_fc_phase_spans_reproduce_launches_per_phase() {
+    let g = Family::Road.generate(1200, 7);
+    let init = InitHeuristic::Cheap.run(&g);
+    let algo = registry::build_named("gpu:APFB-GPUBFS-WR-CT-FC", None).unwrap();
+    let mut ctx = RunCtx::detached();
+    ctx.arm_trace(TraceBuf::new());
+    let r = algo.run(&g, init, &mut ctx);
+    r.matching.certify(&g).unwrap();
+    let buf = ctx.take_trace().expect("armed buffer comes back");
+    assert_eq!(buf.dropped(), 0, "default capacity must hold a full run");
+    // golden shape: one host "phase" span per phase, whose launches arg
+    // is launches_per_phase verbatim, in order
+    let phase_launches: Vec<u64> = buf
+        .spans()
+        .iter()
+        .filter(|s| s.cat == "phase" && s.track == HOST_TRACK)
+        .map(|s| s.args.iter().find(|(k, _)| *k == "launches").expect("launches arg").1)
+        .collect();
+    let want: Vec<u64> = r.stats.launches_per_phase.iter().map(|&l| l as u64).collect();
+    assert!(!want.is_empty(), "a real run has phases");
+    assert_eq!(phase_launches, want);
+    assert_eq!(phase_launches.len() as u64, r.stats.phases);
+    // kernel spans live on shard 0's device track, in modeled cycles that
+    // never overrun the run's total device bill
+    let kernels: Vec<_> = buf
+        .spans()
+        .iter()
+        .filter(|s| s.cat == "kernel" && s.track == DEVICE_TRACK_BASE)
+        .collect();
+    assert!(!kernels.is_empty());
+    for k in &kernels {
+        assert!(k.ts + k.dur <= r.stats.device_cycles, "{}: {}+{}", k.name, k.ts, k.dur);
+    }
+    for name in ["init_bfs_array", "gpubfs_wr_frontier", "alternate", "fixmatching"] {
+        assert!(kernels.iter().any(|k| k.name == name), "missing kernel span {name}");
+    }
+    // the compacted BFS sweeps carry their frontier sizes (Fig. 2's
+    // per-level workload), bounded by the run's recorded peak
+    let frontiers: Vec<u64> = kernels
+        .iter()
+        .filter(|k| k.name == "gpubfs_wr_frontier")
+        .filter_map(|k| k.args.iter().find(|(n, _)| *n == "frontier").map(|&(_, v)| v))
+        .collect();
+    assert!(!frontiers.is_empty(), "compacted sweeps must report frontier sizes");
+    assert_eq!(
+        frontiers.iter().copied().max().unwrap(),
+        r.stats.frontier_peak,
+        "largest traced frontier must be the recorded peak"
+    );
+}
+
+#[test]
+fn sharded_bsp_spans_telescope_to_the_parallel_makespan() {
+    let g = Family::Uniform.generate(1500, 11);
+    let init = InitHeuristic::Cheap.run(&g);
+    let algo = registry::build_named("shard4:gpu:APFB-GPUBFS-WR-CT-FC", None).unwrap();
+    let mut ctx = RunCtx::detached();
+    ctx.arm_trace(TraceBuf::new());
+    let r = algo.run(&g, init, &mut ctx);
+    r.matching.certify(&g).unwrap();
+    let buf = ctx.take_trace().expect("armed buffer comes back");
+    assert_eq!(buf.dropped(), 0, "default capacity must hold a sharded run");
+    assert_eq!(r.stats.shards, 4);
+    let bsp: Vec<_> = buf.spans().iter().filter(|s| s.track == BSP_TRACK).collect();
+    assert!(!bsp.is_empty());
+    // the BSP decomposition: spans are contiguous intervals on the
+    // makespan axis whose durations sum to the exact parallel bill —
+    // instrumentation only reads the clocks it narrates
+    let mut cursor = 0u64;
+    for sp in &bsp {
+        assert_eq!(sp.ts, cursor, "{}: BSP spans must tile without gaps", sp.name);
+        cursor += sp.dur;
+    }
+    assert_eq!(
+        bsp.iter().map(|s| s.dur).sum::<u64>(),
+        r.stats.device_parallel_cycles,
+        "BSP span durations must telescope to the modeled parallel makespan"
+    );
+    // the per-level exchange narration reproduces the interconnect bill
+    let words_traced: u64 = bsp
+        .iter()
+        .filter(|s| s.name == "level")
+        .filter_map(|s| s.args.iter().find(|(n, _)| *n == "exchange_words").map(|&(_, v)| v))
+        .sum();
+    assert_eq!(words_traced, r.stats.exchange_words);
+    // uniform random edges scatter claims across 4 shards: something moved
+    assert!(words_traced > 0, "uniform family must exchange");
+}
