@@ -62,6 +62,7 @@ fn main() {
         "wall recomp s",
     ]);
     let mut small_batch_cells = 0usize;
+    let mut telemetry = common::Report::new("bench_dynamic");
 
     for fam in FAMILIES {
         // the acceptance bar is per family: every family must contribute
@@ -140,6 +141,12 @@ fn main() {
                     );
                 }
             }
+            telemetry.metric(
+                &format!("repair_speedup_cycles.{}@{frac}", fam.name()),
+                fc as f64 / rc.max(1) as f64,
+                "x",
+                true,
+            );
             t.row(vec![
                 fam.name().to_string(),
                 format!("{}", 2 * k),
@@ -175,4 +182,6 @@ fn main() {
          serial device model in Mcycles.",
     ));
     common::emit("incremental repair vs from-scratch recompute (bench_dynamic)", &body);
+    telemetry.metric("small_batch_cells", small_batch_cells as f64, "count", true);
+    telemetry.finish();
 }

@@ -91,6 +91,7 @@ fn main() {
     let mut fc_parallel_wins = 0usize;
     let mut af_tracks_best = 0usize;
     let mut total = 0usize;
+    let mut telemetry = common::Report::new("bench_frontier");
 
     for fam in Family::ALL {
         let g = fam.generate(n, 13);
@@ -121,6 +122,12 @@ fn main() {
             if fc.device_parallel_ms < fs.device_parallel_ms {
                 fc_parallel_wins += 1;
             }
+            telemetry.metric(
+                &format!("compaction_speedup.{}.{dname}", fam.name()),
+                fs.device_ms / fc.device_ms.max(1e-9),
+                "x",
+                true,
+            );
             // the adaptive claim: switching per phase should land near
             // whichever pure mode is cheaper on this instance (10% slack;
             // the phase trajectories of the pure modes can differ, so
@@ -179,6 +186,10 @@ fn main() {
         "frontier compaction x execution mode ablation (FullScan/Compacted/Adaptive x serial/parallel)",
         &body,
     );
+
+    telemetry.metric("fc_win_cells", fc_wins as f64, "count", true);
+    telemetry.metric("af_tracks_best_cells", af_tracks_best as f64, "count", true);
+    telemetry.finish();
 
     assert!(
         fc_wins > 0,

@@ -59,6 +59,8 @@ fn main() {
     assert_eq!(records.len(), raw_appends, "every appended frame must read back");
     assert!(!torn);
     let _ = std::fs::remove_dir_all(&dir);
+    let mut telemetry = common::Report::new("bench_persist");
+    telemetry.metric("wal_appends_per_sec", raw_appends as f64 / raw_secs.max(1e-9), "ops/s", true);
 
     let mut t = Table::new(vec![
         "family",
@@ -165,6 +167,13 @@ fn main() {
             );
         }
 
+        telemetry.metric(
+            &format!("durable_updates_per_sec.{}", fam.name()),
+            batches as f64 / upd_secs.max(1e-9),
+            "ops/s",
+            true,
+        );
+        telemetry.metric(&format!("recover_secs.{}", fam.name()), rec_secs, "s", false);
         t.row(vec![
             fam.name().to_string(),
             n.to_string(),
@@ -193,4 +202,5 @@ fn main() {
         raw_appends as f64 / raw_secs.max(1e-9)
     ));
     common::emit("WAL append throughput + recovery-via-repair (bench_persist)", &body);
+    telemetry.finish();
 }

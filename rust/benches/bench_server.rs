@@ -1,0 +1,120 @@
+//! Server saturation study: sustained MATCH/UPDATE throughput against a
+//! live TCP server as the connection count climbs. One in-process server
+//! (in-memory, no durability — this measures the coordinator and wire
+//! path, not fsync) holds a preloaded graph; for each connection count
+//! C ∈ {1, 2, 4, 8} (smoke: {1, 2}) we run C client threads for a fixed
+//! window, each issuing a 3:1 MATCH:UPDATE mix on its own connection and
+//! requiring an `OK` acknowledgement before the next request, then
+//! report aggregate and per-connection ops/sec.
+//!
+//! The UPDATE is an insert of a fixed pair: the first one lands, every
+//! later one is a rejected no-op, so the graph is stable across the
+//! whole study and every MATCH answers for the same instance.
+//!
+//! Asserts: every reply on every connection is `OK`, and every window
+//! completes at least one request per connection.
+//!
+//! Run with: `cargo bench --bench bench_server` (BIMATCH_SMOKE=1 for the
+//! CI-sized run).
+
+mod common;
+
+use bimatch::coordinator::Server;
+use bimatch::util::table::Table;
+use bimatch::util::timer::Timer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn client_window(addr: SocketAddr, stop: &AtomicBool, seq: &mut u64) -> u64 {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_nodelay(true).ok();
+    let mut reader = BufReader::new(s.try_clone().expect("clone"));
+    let mut line = String::new();
+    let mut ops = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        *seq += 1;
+        let req = if *seq % 4 == 0 {
+            // rejected no-op after the very first landing — keeps the
+            // graph identical for every MATCH in the study
+            "UPDATE name=g add=0:0\n"
+        } else {
+            "MATCH name=g\n"
+        };
+        s.write_all(req.as_bytes()).expect("write");
+        line.clear();
+        reader.read_line(&mut line).expect("read");
+        assert!(line.starts_with("OK "), "request {req:?} got {line:?}");
+        ops += 1;
+    }
+    s.write_all(b"QUIT\n").ok();
+    ops
+}
+
+fn main() {
+    let smoke = std::env::var("BIMATCH_SMOKE").is_ok();
+    let n = if smoke { 300 } else { 1_500 };
+    let window = if smoke { Duration::from_millis(300) } else { Duration::from_secs(1) };
+    let conn_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    let server = Server::bind("127.0.0.1:0", None).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    std::thread::spawn(move || server.serve());
+
+    // preload the shared graph and wait for the server to answer
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(format!("LOAD name=g family=uniform n={n} seed=7\nQUIT\n").as_bytes())
+            .expect("load");
+        let mut reply = String::new();
+        BufReader::new(s).read_line(&mut reply).expect("load reply");
+        assert!(reply.starts_with("OK "), "LOAD got {reply:?}");
+    }
+
+    let mut t = Table::new(vec!["conns", "window s", "ops", "ops/s", "ops/s per conn"]);
+    let mut telemetry = common::Report::new("bench_server");
+
+    for &conns in conn_counts {
+        let stop = Arc::new(AtomicBool::new(false));
+        let timer = Timer::start();
+        let workers: Vec<_> = (0..conns)
+            .map(|i| {
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut seq = i as u64; // stagger the MATCH/UPDATE mix
+                    client_window(addr, &stop, &mut seq)
+                })
+            })
+            .collect();
+        std::thread::sleep(window);
+        stop.store(true, Ordering::Relaxed);
+        let per_conn: Vec<u64> = workers.into_iter().map(|w| w.join().expect("client")).collect();
+        let secs = timer.elapsed_secs();
+        let total: u64 = per_conn.iter().sum();
+        assert!(
+            per_conn.iter().all(|&c| c >= 1),
+            "every connection must complete at least one request ({per_conn:?})"
+        );
+        let rate = total as f64 / secs.max(1e-9);
+        telemetry.metric(&format!("ops_per_sec.C{conns}"), rate, "ops/s", true);
+        t.row(vec![
+            conns.to_string(),
+            format!("{secs:.3}"),
+            total.to_string(),
+            format!("{rate:.0}"),
+            format!("{:.0}", rate / conns as f64),
+        ]);
+    }
+
+    let mut body = t.render();
+    body.push_str(&format!(
+        "\nSustained MATCH/UPDATE (3:1 mix, one in-flight request per connection)\n\
+         against a live in-memory server on a preloaded uniform n={n} graph;\n\
+         every reply acknowledged OK. Each window ran {:.2}s.",
+        window.as_secs_f64()
+    ));
+    common::emit("server saturation: ops/sec vs connection count (bench_server)", &body);
+    telemetry.finish();
+}

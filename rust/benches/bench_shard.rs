@@ -85,6 +85,7 @@ fn main() {
     ]);
     let mut scaling_cells = 0usize;
     let mut total_multi = 0usize;
+    let mut telemetry = common::Report::new("bench_shard");
 
     for fam in Family::ALL {
         let g = fam.generate(n, 13);
@@ -106,6 +107,12 @@ fn main() {
                 if r.makespan_ms < base.makespan_ms {
                     scaling_cells += 1;
                 }
+                telemetry.metric(
+                    &format!("makespan_speedup.{}@K{k}", fam.name()),
+                    base.makespan_ms / r.makespan_ms.max(1e-9),
+                    "x",
+                    true,
+                );
             }
             t.row(vec![
                 fam.name().to_string(),
@@ -135,4 +142,6 @@ fn main() {
         cfg.name()
     ));
     common::emit("sharded execution scaling ablation (shard{K}:gpu, 1/2/4/8 devices)", &body);
+    telemetry.metric("scaling_cells", scaling_cells as f64, "count", true);
+    telemetry.finish();
 }

@@ -72,3 +72,68 @@ pub fn emit(section: &str, body: &str) {
         let _ = writeln!(f, "\n## {section}\n\n```\n{body}\n```");
     }
 }
+
+/// Machine-readable bench telemetry (schema `bimatch-bench/1`): each
+/// bench collects named metrics and [`Report::finish`] writes
+/// `target/bench/<bench>.json` — the input `bimatch bench-report`
+/// merges and gates against the committed baseline.
+pub struct Report {
+    bench: &'static str,
+    metrics: Vec<(String, f64, &'static str, bool)>,
+}
+
+impl Report {
+    pub fn new(bench: &'static str) -> Self {
+        Self { bench, metrics: Vec::new() }
+    }
+
+    /// Record one metric. `higher_is_better` drives the regression gate's
+    /// direction (ops/sec: true; seconds or bytes: false).
+    pub fn metric(&mut self, name: &str, value: f64, unit: &'static str, higher_is_better: bool) {
+        self.metrics.push((name.to_string(), value, unit, higher_is_better));
+    }
+
+    /// Write `target/bench/<bench>.json`. Hand-rolled JSON (serde is
+    /// unavailable offline); metric names are bench-chosen identifiers
+    /// and units are static strings, so only escaping-free content lands
+    /// here by construction — asserted, not assumed.
+    pub fn finish(self) {
+        let smoke = std::env::var("BIMATCH_SMOKE").is_ok();
+        let git = option_env!("BIMATCH_GIT_HASH").unwrap_or("unknown");
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut body = String::new();
+        for (name, value, unit, hib) in &self.metrics {
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || "_-./@:".contains(c)),
+                "metric name {name:?} needs JSON escaping"
+            );
+            if !body.is_empty() {
+                body.push(',');
+            }
+            let rendered = if value.fract() == 0.0 && value.abs() < 9.0e15 {
+                format!("{}", *value as i64)
+            } else {
+                format!("{value:.6}")
+            };
+            body.push_str(&format!(
+                "{{\"name\":\"{name}\",\"value\":{rendered},\"unit\":\"{unit}\",\
+                 \"higher_is_better\":{hib}}}"
+            ));
+        }
+        let doc = format!(
+            "{{\"schema\":\"bimatch-bench/1\",\"bench\":\"{}\",\"unix_ms\":{unix_ms},\
+             \"smoke\":{smoke},\"git\":\"{git}\",\"metrics\":[{body}]}}\n",
+            self.bench
+        );
+        let _ = std::fs::create_dir_all("target/bench");
+        let path = format!("target/bench/{}.json", self.bench);
+        if let Err(e) = std::fs::write(&path, doc) {
+            eprintln!("bench telemetry write {path} failed: {e}");
+        } else {
+            println!("telemetry: {path}");
+        }
+    }
+}

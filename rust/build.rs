@@ -1,0 +1,22 @@
+//! Stamps the build with the git revision so `HEALTH` replies and the
+//! Prometheus `bimatch_build_info` gauge can identify the running
+//! binary. Offline-safe: a missing `git` (or a non-repo checkout)
+//! degrades to "unknown" instead of failing the build.
+
+use std::process::Command;
+
+fn main() {
+    let hash = Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string());
+    println!("cargo:rustc-env=BIMATCH_GIT_HASH={hash}");
+    // re-stamp when HEAD moves (best-effort: the file may not exist in
+    // a tarball checkout, and that's fine)
+    println!("cargo:rerun-if-changed=../.git/HEAD");
+}

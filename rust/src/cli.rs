@@ -34,6 +34,7 @@ USAGE:
   bimatch serve  [--addr <ip:port>] [--data-dir <path>] [--max-graphs <n>]
                 [--replicate-from <ip:port>] [--ack-mode local|quorum]
                 [--snapshot-shards <k>] [--slow-ms <int>] [--trace-cap <n>]
+                [--log-level debug|info|warn|error|off]
                 TCP line-protocol matching service
                 (one-shot MATCH plus the incremental verbs: LOAD name=…
                 installs a graph server-side, UPDATE name=… add=r:c,…
@@ -64,9 +65,21 @@ USAGE:
                 TRACE [name=<g>] [last=<n>] streams the newest traces as
                 JSON lines, METRICS serves Prometheus text (process,
                 per-spec, and per-graph families), STATS graph=<g> gives
-                one graph's serving breakdown, and --slow-ms logs a
-                compact span summary to stderr for any job at or over
-                the threshold (counted as jobs: slow= in STATS).
+                one graph's serving breakdown, and --slow-ms emits a
+                warn-level slow_job event with a compact span summary
+                for any job at or over the threshold (counted as jobs:
+                slow= in STATS). Lifecycle events (connections, drain,
+                eviction, recovery, promotion, replication) are one JSON
+                object per line on stderr — and in
+                <data-dir>/events.jsonl when durable — filtered by
+                --log-level (default: BIMATCH_LOG or info). The flight
+                recorder keeps the most recent events in a ring
+                regardless of level: a panic dumps it to
+                <data-dir>/flightrec/, a background flusher refreshes
+                flightrec/latest.jsonl about once a second (so even
+                SIGKILL leaves a postmortem), and the DUMP verb writes a
+                dump on demand. HEALTH serves a one-line liveness
+                summary (role, epoch, version, git, uptime).
                 SIGTERM or SIGINT triggers a graceful stop:
                 in-flight requests drain, WALs fsync, then the process
                 exits)
@@ -89,6 +102,16 @@ USAGE:
                 superseded corrupt snapshots, unfinished DROPs) vs
                 FATAL (recovery would lose acknowledged state). Exit 0
                 when recoverable, 1 on any FATAL finding
+  bimatch bench-report [--dir <path>] [--out <path>] [--baseline <path>]
+                [--max-regress <fraction>]
+                merge the per-bench telemetry JSON the bench binaries
+                write under target/bench/ (schema bimatch-bench/1) into
+                one BENCH_<date>.json document (schema
+                bimatch-bench-report/1). With --baseline, compare every
+                shared metric against the committed baseline report and
+                exit 1 if any regresses by more than --max-regress
+                (default 0.20), respecting each metric's
+                higher_is_better direction
   bimatch algos                        list registered algorithms
                 (also: bimatch --list-algos — CI diffs this against the
                 registry-names.txt golden file)
@@ -146,6 +169,7 @@ pub fn main_with_args(args: Vec<String>) -> i32 {
         "serve" => cmd_serve(&flags),
         "profile" => cmd_profile(&flags),
         "fsck" => cmd_fsck(&flags),
+        "bench-report" => cmd_bench_report(&flags),
         "algos" | "--list-algos" => {
             for n in registry::all_names() {
                 println!("{n}");
@@ -490,6 +514,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
         None => None,
     };
+    let log_level = match flags.get("log-level") {
+        None => crate::obs::filter_from_env(),
+        Some(v) => match crate::obs::parse_filter(v) {
+            Some(f) => f,
+            None => {
+                eprintln!("bad --log-level {v} (debug|info|warn|error|off)");
+                return 2;
+            }
+        },
+    };
     let durable = data_dir.is_some();
     let mut cfg = ServerCfg::new(addr);
     cfg.engine = engine_if_available();
@@ -499,6 +533,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     cfg.replicate_from = replicate_from.clone();
     cfg.ack_mode = ack_mode;
     cfg.slow_ms = slow_ms;
+    cfg.log_level = log_level;
     if let Some(cap) = flags.get("trace-cap") {
         match cap.parse::<usize>() {
             Ok(n) => cfg.trace_capacity = n,
@@ -528,7 +563,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                  LOAD name=<g> family=..|mtx=.. | UPDATE name=<g> [add=r:c,..] [del=r:c,..] \
                  [addcols=r;r|..] [addrows=c;c|..] | MATCH name=<g> | DROP name=<g> | \
                  SAVE name=<g> | ALGOS | GRAPHS | STATS [graph=<g>] | \
-                 TRACE [name=<g>] [last=<n>] | METRICS | LAG | PROMOTE | QUIT"
+                 TRACE [name=<g>] [last=<n>] | METRICS | LAG | HEALTH | DUMP | \
+                 PROMOTE | QUIT"
             );
             // SIGTERM/SIGINT → graceful stop: the watcher flips the stop
             // handle, serve() drains in-flight requests and fsyncs WALs
@@ -581,6 +617,207 @@ fn cmd_fsck(flags: &HashMap<String, String>) -> i32 {
     } else {
         println!("fsck: clean ({repairable} repairable finding(s), 0 fatal)");
         0
+    }
+}
+
+/// Validate one per-bench telemetry document (`bimatch-bench/1` — what
+/// `benches/common::Report` writes) and return its bench name.
+fn validate_bench_doc(doc: &crate::util::json::Value) -> Result<String, String> {
+    use crate::util::json::Value;
+    match doc.get("schema").and_then(Value::as_str) {
+        Some("bimatch-bench/1") => {}
+        other => return Err(format!("schema must be \"bimatch-bench/1\", got {other:?}")),
+    }
+    let bench = doc
+        .get("bench")
+        .and_then(Value::as_str)
+        .ok_or("missing string field \"bench\"")?
+        .to_string();
+    doc.get("unix_ms").and_then(Value::as_f64).ok_or("missing numeric field \"unix_ms\"")?;
+    let metrics =
+        doc.get("metrics").and_then(Value::as_arr).ok_or("missing array field \"metrics\"")?;
+    for (i, m) in metrics.iter().enumerate() {
+        m.get("name").and_then(Value::as_str).ok_or(format!("metrics[{i}] missing name"))?;
+        m.get("value").and_then(Value::as_f64).ok_or(format!("metrics[{i}] missing value"))?;
+        m.get("unit").and_then(Value::as_str).ok_or(format!("metrics[{i}] missing unit"))?;
+        m.get("higher_is_better")
+            .and_then(Value::as_bool)
+            .ok_or(format!("metrics[{i}] missing higher_is_better"))?;
+    }
+    Ok(bench)
+}
+
+/// `name → (value, higher_is_better)` for one bench document.
+fn metric_map(doc: &crate::util::json::Value) -> std::collections::BTreeMap<String, (f64, bool)> {
+    use crate::util::json::Value;
+    let mut out = std::collections::BTreeMap::new();
+    if let Some(arr) = doc.get("metrics").and_then(Value::as_arr) {
+        for m in arr {
+            if let (Some(n), Some(v), Some(h)) = (
+                m.get("name").and_then(Value::as_str),
+                m.get("value").and_then(Value::as_f64),
+                m.get("higher_is_better").and_then(Value::as_bool),
+            ) {
+                out.insert(n.to_string(), (v, h));
+            }
+        }
+    }
+    out
+}
+
+/// `YYYY-MM-DD` from unix milliseconds (Gregorian civil-from-days; no
+/// chrono offline).
+fn civil_date(unix_ms: u64) -> String {
+    let days = (unix_ms / 86_400_000) as i64;
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Merge `target/bench/*.json` into one `BENCH_<date>.json` report and
+/// (optionally) gate against a committed baseline. Exit 0 clean, 1 on a
+/// schema violation, no input, or a regression beyond `--max-regress`,
+/// 2 on usage errors.
+fn cmd_bench_report(flags: &HashMap<String, String>) -> i32 {
+    use crate::util::json::{self, Value};
+    use std::collections::BTreeMap;
+    let default_dir = "target/bench".to_string();
+    let dir = flags.get("dir").unwrap_or(&default_dir);
+    let max_regress = match flags.get("max-regress").map(|v| v.parse::<f64>()) {
+        None => 0.20,
+        Some(Ok(f)) if f > 0.0 => f,
+        Some(other) => {
+            eprintln!("bad --max-regress {other:?} (positive fraction, e.g. 0.20)");
+            return 2;
+        }
+    };
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bench-report: cannot read {dir}: {e} (run the benches first)");
+            return 2;
+        }
+    };
+    let mut paths: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    let mut benches: BTreeMap<String, Value> = BTreeMap::new();
+    for path in &paths {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bench-report: read {}: {e}", path.display());
+                return 1;
+            }
+        };
+        let doc = match json::parse(&text) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bench-report: {} is not valid JSON: {e}", path.display());
+                return 1;
+            }
+        };
+        match validate_bench_doc(&doc) {
+            Ok(bench) => {
+                println!("  {} ← {}", bench, path.display());
+                benches.insert(bench, doc);
+            }
+            Err(e) => {
+                eprintln!("bench-report: {} violates bimatch-bench/1: {e}", path.display());
+                return 1;
+            }
+        }
+    }
+    if benches.is_empty() {
+        eprintln!("bench-report: no *.json telemetry under {dir} (run the benches first)");
+        return 1;
+    }
+    let now_ms = crate::trace::unix_ms();
+    let mut top = BTreeMap::new();
+    top.insert("schema".into(), Value::Str("bimatch-bench-report/1".into()));
+    top.insert("generated_unix_ms".into(), Value::Num(now_ms as f64));
+    top.insert("git".into(), Value::Str(env!("BIMATCH_GIT_HASH").into()));
+    top.insert("benches".into(), Value::Obj(benches.clone()));
+    let report = Value::Obj(top);
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("BENCH_{}.json", civil_date(now_ms)));
+    if let Err(e) = std::fs::write(&out, report.to_json() + "\n") {
+        eprintln!("bench-report: write {out}: {e}");
+        return 1;
+    }
+    println!("bench-report: merged {} bench(es) → {out}", benches.len());
+    let Some(baseline_path) = flags.get("baseline") else { return 0 };
+    let baseline = match std::fs::read_to_string(baseline_path)
+        .map_err(|e| e.to_string())
+        .and_then(|t| json::parse(&t))
+    {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("bench-report: baseline {baseline_path}: {e}");
+            return 2;
+        }
+    };
+    let Some(base_benches) = baseline.get("benches").and_then(Value::as_obj) else {
+        eprintln!("bench-report: baseline {baseline_path} has no \"benches\" object");
+        return 2;
+    };
+    let mut regressions = Vec::new();
+    for (name, old_doc) in base_benches {
+        let Some(new_doc) = benches.get(name) else {
+            println!("  {name}: in baseline but not in this run (skipped)");
+            continue;
+        };
+        // only compare like with like: a smoke-sized run against a
+        // full-sized baseline would gate on nothing but the size change
+        let smoke = |d: &Value| d.get("smoke").and_then(Value::as_bool);
+        if smoke(old_doc) != smoke(new_doc) {
+            println!("  {name}: smoke mode differs from baseline (skipped)");
+            continue;
+        }
+        let old_m = metric_map(old_doc);
+        let new_m = metric_map(new_doc);
+        for (metric, (old_v, hib)) in &old_m {
+            let Some((new_v, _)) = new_m.get(metric) else { continue };
+            if *old_v <= 0.0 {
+                continue;
+            }
+            let regressed = if *hib {
+                *new_v < old_v * (1.0 - max_regress)
+            } else {
+                *new_v > old_v * (1.0 + max_regress)
+            };
+            if regressed {
+                regressions.push(format!(
+                    "{name}/{metric}: {new_v:.3} vs baseline {old_v:.3} \
+                     ({}, allowed ±{:.0}%)",
+                    if *hib { "higher is better" } else { "lower is better" },
+                    max_regress * 100.0
+                ));
+            }
+        }
+    }
+    if regressions.is_empty() {
+        println!("bench-report: no metric regressed beyond {:.0}%", max_regress * 100.0);
+        0
+    } else {
+        for r in &regressions {
+            eprintln!("REGRESSION {r}");
+        }
+        eprintln!("bench-report: {} regression(s) vs {baseline_path}", regressions.len());
+        1
     }
 }
 
@@ -805,5 +1042,113 @@ mod tests {
     fn unknown_command_usage() {
         assert_eq!(main_with_args(vec!["wat".into()]), 2);
         assert_eq!(main_with_args(vec![]), 2);
+    }
+
+    #[test]
+    fn civil_date_matches_known_days() {
+        assert_eq!(civil_date(0), "1970-01-01");
+        assert_eq!(civil_date(86_400_000), "1970-01-02");
+        // 2000-03-01 (leap-century boundary): 11017 days
+        assert_eq!(civil_date(11_017 * 86_400_000), "2000-03-01");
+        // 2026-08-07: 20672 days
+        assert_eq!(civil_date(20_672 * 86_400_000), "2026-08-07");
+    }
+
+    fn bench_doc(bench: &str, value: f64, hib: bool) -> String {
+        format!(
+            "{{\"schema\":\"bimatch-bench/1\",\"bench\":\"{bench}\",\"unix_ms\":123,\
+             \"smoke\":true,\"git\":\"abc\",\"metrics\":[{{\"name\":\"ops\",\
+             \"value\":{value},\"unit\":\"ops/s\",\"higher_is_better\":{hib}}}]}}"
+        )
+    }
+
+    #[test]
+    fn bench_report_merges_and_gates() {
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_cli_benchreport_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let bench_dir = dir.join("bench");
+        std::fs::create_dir_all(&bench_dir).unwrap();
+        std::fs::write(bench_dir.join("a.json"), bench_doc("bench_a", 100.0, true)).unwrap();
+        std::fs::write(bench_dir.join("b.json"), bench_doc("bench_b", 5.0, false)).unwrap();
+        let out = dir.join("BENCH_test.json");
+        let base = |d: &str| {
+            flags(&[
+                ("dir", bench_dir.to_str().unwrap()),
+                ("out", out.to_str().unwrap()),
+                ("baseline", d),
+            ])
+        };
+        // merge without a baseline
+        assert_eq!(
+            cmd_bench_report(&flags(&[
+                ("dir", bench_dir.to_str().unwrap()),
+                ("out", out.to_str().unwrap()),
+            ])),
+            0
+        );
+        let report = crate::util::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            report.get("schema").and_then(crate::util::json::Value::as_str),
+            Some("bimatch-bench-report/1")
+        );
+        let merged = report.get("benches").and_then(crate::util::json::Value::as_obj).unwrap();
+        assert_eq!(merged.len(), 2, "both benches merged");
+        assert!(merged.contains_key("bench_a") && merged.contains_key("bench_b"));
+        // identical baseline: clean gate
+        let baseline = dir.join("baseline.json");
+        std::fs::copy(&out, &baseline).unwrap();
+        assert_eq!(cmd_bench_report(&base(baseline.to_str().unwrap())), 0);
+        // regress bench_a (higher_is_better drops 50% > 20% allowance)
+        std::fs::write(bench_dir.join("a.json"), bench_doc("bench_a", 50.0, true)).unwrap();
+        assert_eq!(cmd_bench_report(&base(baseline.to_str().unwrap())), 1);
+        // within the allowance passes
+        std::fs::write(bench_dir.join("a.json"), bench_doc("bench_a", 90.0, true)).unwrap();
+        assert_eq!(cmd_bench_report(&base(baseline.to_str().unwrap())), 0);
+        // lower_is_better regresses upward
+        std::fs::write(bench_dir.join("b.json"), bench_doc("bench_b", 50.0, false)).unwrap();
+        assert_eq!(cmd_bench_report(&base(baseline.to_str().unwrap())), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_report_rejects_schema_violations() {
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_cli_benchschema_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let args = |d: &std::path::Path| flags(&[("dir", d.to_str().unwrap())]);
+        // empty dir: nothing to merge
+        assert_eq!(cmd_bench_report(&args(&dir)), 1);
+        // wrong schema string
+        std::fs::write(dir.join("x.json"), "{\"schema\":\"other/9\",\"bench\":\"x\"}").unwrap();
+        assert_eq!(cmd_bench_report(&args(&dir)), 1);
+        // malformed JSON
+        std::fs::write(dir.join("x.json"), "{not json").unwrap();
+        assert_eq!(cmd_bench_report(&args(&dir)), 1);
+        // metrics entry missing a key
+        std::fs::write(
+            dir.join("x.json"),
+            "{\"schema\":\"bimatch-bench/1\",\"bench\":\"x\",\"unix_ms\":1,\
+             \"metrics\":[{\"name\":\"m\",\"value\":2}]}",
+        )
+        .unwrap();
+        assert_eq!(cmd_bench_report(&args(&dir)), 1);
+        // missing dir is a usage error
+        assert_eq!(cmd_bench_report(&args(&dir.join("nope"))), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_rejects_bad_log_level() {
+        // flag validation happens before any bind
+        let code = cmd_serve(&flags(&[("log-level", "loud")]));
+        assert_eq!(code, 2);
     }
 }

@@ -35,6 +35,7 @@ use crate::dynamic::{self, DeltaBatch, DynamicGraph};
 use crate::graph::csr::BipartiteCsr;
 use crate::matching::algo::{CancelToken, RunCtx, RunOutcome};
 use crate::matching::Matching;
+use crate::obs::{Level, Obs};
 use crate::persist::replicate::{self, AckMode, Event, EventKind, Hub, NodeRole};
 use crate::persist::{self, recover, snapshot, wal, Persistence, RecoveryReport};
 use crate::runtime::Engine;
@@ -78,6 +79,9 @@ pub struct Executor {
     /// compact span summary on stderr and count under `jobs_slow`.
     /// Arms span recording even without a ring.
     slow_threshold: Option<Duration>,
+    /// structured event log + flight recorder; `None` keeps every
+    /// emission site a single is-`None` branch (embedded `Service` use)
+    obs: Option<Arc<Obs>>,
 }
 
 /// The effective deadline for a job: `timeout` measured from `start`,
@@ -111,7 +115,21 @@ impl Executor {
             ack_timeout: DEFAULT_ACK_TIMEOUT,
             traces: None,
             slow_threshold: None,
+            obs: None,
         }
+    }
+
+    /// Attach the structured event log / flight recorder. Lifecycle
+    /// events (eviction, recovery, promotion, quorum timeouts, WAL
+    /// compaction, slow requests) are emitted through it from here on.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// The event log, if one is attached.
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref()
     }
 
     /// Arm span tracing: every job from here on records root/phase/kernel
@@ -122,9 +140,10 @@ impl Executor {
         self
     }
 
-    /// Log jobs that take `threshold` or longer to stderr with a compact
-    /// per-span breakdown, counting them under `jobs_slow`. Implies span
-    /// recording (a slow job's trace exists to be summarized).
+    /// Log jobs that take `threshold` or longer as a `slow_job` event
+    /// (warn level, compact per-span breakdown), counting them under
+    /// `jobs_slow`. Implies span recording (a slow job's trace exists to
+    /// be summarized).
     pub fn with_slow_threshold(mut self, threshold: Duration) -> Self {
         self.slow_threshold = Some(threshold);
         self
@@ -201,17 +220,43 @@ impl Executor {
             spans,
             dropped_spans,
         };
+        if let Some(obs) = &self.obs {
+            // every traced job leaves a one-line span summary in the
+            // flight recorder (debug level: the ring always records it,
+            // the sinks only under --log-level debug)
+            obs.event(Level::Debug, "job")
+                .field_u64("job", t.job_id)
+                .field("op", t.op)
+                .field("graph", t.graph.as_deref().unwrap_or("-"))
+                .field("algo", if t.algo.is_empty() { "-" } else { &t.algo })
+                .field_f64("total_ms", total_secs * 1e3)
+                .field("outcome", out.error.as_ref().map(JobError::kind).unwrap_or("complete"))
+                .field("spans", &t.summary())
+                .emit();
+        }
         if slow {
             self.metrics.jobs_slow.fetch_add(1, Ordering::Relaxed);
-            eprintln!(
-                "[bimatch] slow job #{} op={} graph={} algo={} total={:.1}ms: {}",
-                t.job_id,
-                t.op,
-                t.graph.as_deref().unwrap_or("-"),
-                if t.algo.is_empty() { "-" } else { &t.algo },
-                total_secs * 1e3,
-                t.summary(),
-            );
+            if let Some(obs) = &self.obs {
+                // the outcome rides along so a slow *failed* job (timeout,
+                // cancellation, a rolled-back update) is distinguishable
+                // from a slow success in the log stream
+                let outcome =
+                    out.error.as_ref().map(JobError::kind).unwrap_or("complete");
+                let mut ev = obs
+                    .event(Level::Warn, "slow_job")
+                    .field_u64("job", t.job_id)
+                    .field("op", t.op)
+                    .field("graph", t.graph.as_deref().unwrap_or("-"))
+                    .field("algo", if t.algo.is_empty() { "-" } else { &t.algo })
+                    .field_f64("total_ms", total_secs * 1e3)
+                    .field("outcome", outcome)
+                    .field("spans", &t.summary());
+                if t.op == "update" && out.error.is_some() {
+                    // every failed update rolls the stored graph back
+                    ev = ev.field_bool("rolled_back", true);
+                }
+                ev.emit();
+            }
         }
         if let Some(ring) = &self.traces {
             ring.publish(t);
@@ -224,6 +269,22 @@ impl Executor {
     /// families from the store's [`GraphStats`].
     pub fn prometheus(&self) -> String {
         let mut s = self.metrics.prometheus();
+        // build identity as a constant-1 info gauge (the standard
+        // Prometheus idiom): scrapes can join version/revision/role onto
+        // any other family without parsing STATS
+        s.push_str(&format!(
+            "# HELP bimatch_build_info build and role identity (constant 1)\n\
+             # TYPE bimatch_build_info gauge\n\
+             bimatch_build_info{{version=\"{}\",git=\"{}\",role=\"{}\"}} 1\n",
+            env!("CARGO_PKG_VERSION"),
+            env!("BIMATCH_GIT_HASH"),
+            self.role_name(),
+        ));
+        s.push_str(&format!(
+            "# HELP bimatch_node_epoch this node's fencing epoch\n\
+             # TYPE bimatch_node_epoch gauge\nbimatch_node_epoch {}\n",
+            self.role.epoch()
+        ));
         let graphs = self.store.all_graph_stats();
         if graphs.is_empty() {
             return s;
@@ -299,6 +360,18 @@ impl Executor {
         &self.role
     }
 
+    /// The role as its wire name (the `LAG`/`HEALTH` vocabulary):
+    /// `fenced` > `follower` > `primary`.
+    pub fn role_name(&self) -> &'static str {
+        if self.role.fenced.load(std::sync::atomic::Ordering::Relaxed) {
+            "fenced"
+        } else if self.role.is_replica() {
+            "follower"
+        } else {
+            "primary"
+        }
+    }
+
     /// The primary-side frame shipper.
     pub fn hub(&self) -> &Arc<Hub> {
         &self.hub
@@ -344,6 +417,16 @@ impl Executor {
                 }
             }
         }
+        if let Some(obs) = &self.obs {
+            let mut ev = obs
+                .event(Level::Info, "recovery")
+                .field_u64("recovered", report.recovered() as u64)
+                .field_u64("skipped", report.skipped.len() as u64);
+            if !report.skipped.is_empty() {
+                ev = ev.field("skipped_names", &report.skipped.join(","));
+            }
+            ev.emit();
+        }
         Ok(report)
     }
 
@@ -357,15 +440,23 @@ impl Executor {
             return true; // already gone
         };
         let mut e = lockorder::lock(LockClass::Entry, &entry);
+        let mut version = 0;
+        let snapshotted = self.persist.is_some();
         if let Some(p) = &self.persist {
             let g = e.graph.snapshot();
-            let version = e.graph.version();
+            version = e.graph.version();
             let matching = e
                 .matching
                 .as_ref()
                 .filter(|c| c.version == version)
                 .map(|c| c.matching.clone());
             if p.record_snapshot(name, &g, version, matching.as_ref()).is_err() {
+                if let Some(obs) = &self.obs {
+                    obs.event(Level::Warn, "evict_vetoed")
+                        .field("graph", name)
+                        .field_u64("version", version)
+                        .emit();
+                }
                 return false;
             }
             self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
@@ -376,6 +467,13 @@ impl Executor {
         self.store.drop_graph(name);
         drop(e);
         self.metrics.graphs_evicted.fetch_add(1, Ordering::Relaxed);
+        if let Some(obs) = &self.obs {
+            obs.event(Level::Info, "graph_evicted")
+                .field("graph", name)
+                .field_u64("version", version)
+                .field_bool("snapshotted", snapshotted)
+                .emit();
+        }
         true
     }
 
@@ -410,6 +508,9 @@ impl Executor {
         }
         let rec = p.recover_graph_locked(name).ok()??;
         recover::install_recovered(rec, &self.store, &self.metrics, self.engine.clone(), &self.pool);
+        if let Some(obs) = &self.obs {
+            obs.event(Level::Info, "graph_reloaded").field("graph", name).emit();
+        }
         // the cap sweep happens after releasing the name lock: eviction
         // snapshots the victim under the *victim's* name lock, and two
         // reloads evicting each other's graphs must not hold both locks
@@ -546,6 +647,13 @@ impl Executor {
         if self.hub.wait_acked(seq, self.ack_timeout) {
             self.metrics.repl_lag.store(self.hub.lag(), Ordering::Relaxed);
             return false;
+        }
+        if let Some(obs) = &self.obs {
+            obs.event(Level::Warn, "quorum_timeout")
+                .field_u64("seq", seq)
+                .field_u64("timeout_ms", self.ack_timeout.as_millis() as u64)
+                .field_u64("followers", self.hub.subscriber_count() as u64)
+                .emit();
         }
         self.fail(
             out,
@@ -954,6 +1062,13 @@ impl Executor {
         if let (Some(b), Some(m)) = (tbuf.as_mut(), snap_mark) {
             b.host_span("snapshot_write", "persist", m, vec![("edges", out.n_edges as u64)]);
         }
+        if let Some(obs) = &self.obs {
+            obs.event(Level::Info, "wal_compacted")
+                .field("graph", name)
+                .field_u64("version", version)
+                .field("trigger", "save")
+                .emit();
+        }
         self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.metrics.observe_latency(total.elapsed_secs());
@@ -1237,6 +1352,13 @@ impl Executor {
                     if let (Some(b), Some(m)) = (tbuf.as_mut(), snap_mark) {
                         b.host_span("snapshot_write", "persist", m, vec![]);
                     }
+                    if let Some(obs) = &self.obs {
+                        obs.event(Level::Info, "wal_compacted")
+                            .field("graph", name)
+                            .field_u64("version", version)
+                            .field("trigger", "rebuild")
+                            .emit();
+                    }
                 }
             }
         }
@@ -1317,6 +1439,12 @@ impl Executor {
         }
         self.role.read_only.store(false, Ordering::Relaxed);
         self.role.fenced.store(false, Ordering::Relaxed);
+        if let Some(obs) = &self.obs {
+            obs.event(Level::Warn, "promoted")
+                .field_u64("epoch", new_epoch)
+                .field_u64("graphs_rebased", rebased as u64)
+                .emit();
+        }
         Ok((new_epoch, rebased))
     }
 

@@ -193,6 +193,22 @@ pub enum JobError {
     Replication(String),
 }
 
+impl JobError {
+    /// Stable short name for structured logs — the `outcome=` field of a
+    /// slow-request event (a completed job logs `complete` instead).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobError::Load(_) => "load_failed",
+            JobError::Unavailable(_) => "unavailable",
+            JobError::Certify(_) => "certify_failed",
+            JobError::DeadlineExceeded { .. } => "timeout",
+            JobError::Cancelled => "cancelled",
+            JobError::ReadOnly => "read_only",
+            JobError::Replication(_) => "replication",
+        }
+    }
+}
+
 impl std::fmt::Display for JobError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {

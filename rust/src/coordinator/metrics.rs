@@ -60,6 +60,9 @@ pub struct Metrics {
     pub jobs_slow: AtomicU64,
     latency: [AtomicU64; N_BUCKETS],
     latency_sum_us: AtomicU64,
+    /// unix ms at construction (0 for a bare `Default` — uptime reads 0
+    /// then); the `bimatch_uptime_seconds` gauge and `HEALTH` use it
+    start_unix_ms: AtomicU64,
     /// per-algorithm-spec aggregates, keyed by the wire spec name
     /// (`"hk"`, `"gpu:APFB-GPUBFS-WR-CT-FC"`, ...); a lock-order leaf
     /// touched once per completed job, never on the matcher hot path
@@ -78,7 +81,19 @@ pub struct SpecStats {
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        let m = Self::default();
+        m.start_unix_ms.store(crate::trace::unix_ms(), Ordering::Relaxed);
+        m
+    }
+
+    /// Whole seconds since this process's metrics were created —
+    /// effectively since serve/executor startup.
+    pub fn uptime_seconds(&self) -> u64 {
+        let start = self.start_unix_ms.load(Ordering::Relaxed);
+        if start == 0 {
+            return 0;
+        }
+        crate::trace::unix_ms().saturating_sub(start) / 1000
     }
 
     /// Bucket index for a latency: `floor(log2(µs))`, clamped into
@@ -231,6 +246,11 @@ impl Metrics {
             "# HELP bimatch_repl_lag replication lag in events (published - acked)\n\
              # TYPE bimatch_repl_lag gauge\nbimatch_repl_lag {}\n",
             self.repl_lag.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "# HELP bimatch_uptime_seconds seconds since process startup\n\
+             # TYPE bimatch_uptime_seconds gauge\nbimatch_uptime_seconds {}\n",
+            self.uptime_seconds()
         ));
 
         // cumulative histogram: bucket i spans [2^i, 2^{i+1}) µs, so the

@@ -22,6 +22,9 @@
 //! METRICS                     → Prometheus text exposition (multi-line)
 //! LAG                         → LAG role=.. epoch=.. followers=.. shipped=..
 //!                                   acked=.. lag=.. applied=.. connected=..
+//! HEALTH                      → HEALTH role=.. epoch=.. version=.. git=..
+//!                                   uptime_s=.. graphs=..
+//! DUMP                        flight-recorder dump now → OK dump=<path> events=<n>
 //! PROMOTE                     replica → writable primary (fences the old one)
 //! REPLICA epoch=<e>           upgrade this connection to the event stream
 //! QUIT
@@ -34,8 +37,21 @@
 //! one blank line so line-oriented clients can frame them. The server
 //! records spans for every job by default ([`ServerCfg::trace_capacity`]
 //! ring; set 0 to disarm), and [`ServerCfg::slow_ms`] adds the
-//! slow-request log: any job at or over the threshold prints a compact
-//! span breakdown to stderr and counts under `jobs: slow=` in `STATS`.
+//! slow-request log: any job at or over the threshold emits a warn-level
+//! `slow_job` event (compact span breakdown, see [`crate::obs`]) and
+//! counts under `jobs: slow=` in `STATS`.
+//!
+//! ## Observability ([`crate::obs`])
+//!
+//! Every server owns an [`Obs`] handle: lifecycle events (connections,
+//! drain, eviction, recovery, promotion/fencing, follower traffic, WAL
+//! compaction, slow jobs) go to stderr and — with a data dir — to
+//! `<data-dir>/events.jsonl`, filtered by [`ServerCfg::log_level`].
+//! The flight recorder rides along: a background flusher refreshes
+//! `<data-dir>/flightrec/latest.jsonl` about once a second and a panic
+//! hook writes a final dump, so a crashed or SIGKILL'd server leaves a
+//! postmortem artifact. `DUMP` forces a dump on demand; `HEALTH` serves
+//! the one-line liveness summary (role, epoch, build, uptime).
 //!
 //! `algo=` accepts any registry name (`AlgoSpec` wire format, including
 //! `p-hk@<threads>`); malformed names are rejected before execution.
@@ -114,6 +130,7 @@ use super::spec::AlgoSpec;
 use crate::dynamic::DeltaBatch;
 use crate::graph::gen::Family;
 use crate::matching::init::InitHeuristic;
+use crate::obs::{self, flightrec, Level, Obs};
 use crate::persist::replicate::{
     self, AckMode, Event, EventKind, LineIo, LineReader, TailerCfg,
 };
@@ -154,8 +171,11 @@ pub struct ServerCfg {
     /// capacity); 0 disarms span recording entirely
     pub trace_capacity: usize,
     /// slow-request log threshold in ms (`--slow-ms`): jobs at or over it
-    /// get a span summary on stderr and count under `jobs_slow`
+    /// emit a warn-level `slow_job` event and count under `jobs_slow`
     pub slow_ms: Option<u64>,
+    /// event-log sink threshold (`--log-level` / `BIMATCH_LOG`); see
+    /// [`crate::obs::parse_filter`]. The flight recorder ignores it.
+    pub log_level: u8,
 }
 
 impl ServerCfg {
@@ -173,9 +193,17 @@ impl ServerCfg {
             snapshot_shards: 1,
             trace_capacity: 256,
             slow_ms: None,
+            log_level: obs::filter_from_env(),
         }
     }
 }
+
+/// Flight-recorder ring capacity: enough recent events for a useful
+/// postmortem while keeping the per-event cost one short ring write.
+const FLIGHTREC_CAPACITY: usize = 1024;
+
+/// How often the background flusher refreshes `flightrec/latest.jsonl`.
+const FLIGHTREC_FLUSH_EVERY: Duration = Duration::from_secs(1);
 
 pub struct Server {
     listener: TcpListener,
@@ -187,6 +215,8 @@ pub struct Server {
     idle_timeout: Duration,
     max_line_len: usize,
     tailer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    obs: Arc<Obs>,
+    flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Server {
@@ -216,7 +246,10 @@ impl Server {
     /// read replica (`replicate_from`) or switch the ack mode.
     pub fn bind_cfg(cfg: ServerCfg) -> std::io::Result<Self> {
         let listener = TcpListener::bind(&cfg.addr)?;
-        let mut executor = Executor::new(cfg.engine, Arc::new(Metrics::new()));
+        let obs = Obs::open(cfg.log_level, cfg.data_dir.clone(), FLIGHTREC_CAPACITY)?;
+        flightrec::register_panic_dump(&obs);
+        let mut executor =
+            Executor::new(cfg.engine, Arc::new(Metrics::new())).with_obs(obs.clone());
         if let Some(dir) = &cfg.data_dir {
             let p = crate::persist::Persistence::open(dir)?;
             p.set_snapshot_shards(cfg.snapshot_shards);
@@ -251,6 +284,7 @@ impl Server {
                 role: executor.role().clone(),
                 shutdown: stop.clone(),
                 epoch_dir: cfg.data_dir.clone(),
+                obs: Some(obs.clone()),
             };
             let exec = executor.clone();
             tailer = Some(
@@ -262,6 +296,41 @@ impl Server {
                     .expect("spawn tailer"),
             );
         }
+        // the black box opens before the first accept: a crash during the
+        // very first request still leaves `flightrec/latest.jsonl`
+        obs.event(Level::Info, "server_started")
+            .field("addr", &listener.local_addr().map_or_else(|_| cfg.addr.clone(), |a| a.to_string()))
+            .field("role", executor.role_name())
+            .field("log_level", obs::filter_name(cfg.log_level))
+            .field_bool("durable", obs.data_dir().is_some())
+            .emit();
+        obs.flush_latest()?;
+        let flusher = if obs.data_dir().is_some() {
+            let o = obs.clone();
+            let stop2 = stop.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("bimatch-flightrec".into())
+                    .spawn(move || {
+                        // short poll so a stop is noticed promptly; the
+                        // flush itself is skipped whenever the ring is
+                        // clean since the last write
+                        let mut since_flush = Duration::ZERO;
+                        let poll = Duration::from_millis(100);
+                        while !stop2.load(Ordering::Relaxed) {
+                            std::thread::sleep(poll);
+                            since_flush += poll;
+                            if since_flush >= FLIGHTREC_FLUSH_EVERY {
+                                since_flush = Duration::ZERO;
+                                let _ = o.flush_latest();
+                            }
+                        }
+                    })
+                    .expect("spawn flight-recorder flusher"),
+            )
+        } else {
+            None
+        };
         Ok(Self {
             listener,
             executor,
@@ -271,6 +340,8 @@ impl Server {
             idle_timeout: cfg.idle_timeout,
             max_line_len: cfg.max_line_len,
             tailer: Mutex::new(tailer),
+            obs,
+            flusher: Mutex::new(flusher),
         })
     }
 
@@ -336,6 +407,10 @@ impl Server {
         }
         // drain: connection threads notice `stop` within one read-poll and
         // exit after finishing (and replying to) their current request
+        self.obs
+            .event(Level::Info, "drain")
+            .field_u64("in_flight", self.active.load(Ordering::Relaxed))
+            .emit();
         let deadline = Instant::now() + Duration::from_secs(10);
         while self.active.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(10));
@@ -348,6 +423,14 @@ impl Server {
         if let Some(h) = self.tailer.lock().unwrap().take() {
             let _ = h.join();
         }
+        self.obs
+            .event(Level::Info, "server_stopped")
+            .field_u64("drained_in_flight", self.active.load(Ordering::Relaxed))
+            .emit();
+        if let Some(h) = self.flusher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.obs.flush_latest()?;
         Ok(())
     }
 }
@@ -374,42 +457,76 @@ fn handle_conn(
     // noticed promptly; LineReader accumulates partial lines across polls
     let poll = Duration::from_millis(200).min(idle_timeout.max(Duration::from_millis(1)));
     stream.set_read_timeout(Some(poll))?;
+    let peer = stream.peer_addr().map_or_else(|_| "?".into(), |a| a.to_string());
+    let conn_event = |level: Level, kind: &'static str| {
+        if let Some(o) = executor.obs() {
+            o.event(level, kind).field("peer", &peer).emit();
+        }
+    };
+    conn_event(Level::Debug, "conn_accept");
+    // names the close cause in `conn_close` (eof/quit/idle/stop/
+    // line_too_long/io_error); set before every exit path
+    let close = |reason: &str, requests: u64| {
+        if let Some(o) = executor.obs() {
+            o.event(Level::Debug, "conn_close")
+                .field("peer", &peer)
+                .field("reason", reason)
+                .field_u64("requests", requests)
+                .emit();
+        }
+    };
     let mut lines = LineReader::new(BufReader::new(stream.try_clone()?));
     let mut stream = stream;
     let mut idle = Duration::ZERO;
-    loop {
-        match lines.next_line(max_line_len)? {
-            LineIo::Eof => return Ok(()), // client closed
-            LineIo::TooLong => {
+    let mut requests: u64 = 0;
+    let result = loop {
+        match lines.next_line(max_line_len) {
+            Err(e) => {
+                close("io_error", requests);
+                return Err(e);
+            }
+            Ok(LineIo::Eof) => break "eof", // client closed
+            Ok(LineIo::TooLong) => {
                 let _ = stream.write_all(
                     format!("ERR line too long (max {max_line_len} bytes)\n").as_bytes(),
                 );
-                return Ok(());
+                break "line_too_long";
             }
-            LineIo::Idle => {
+            Ok(LineIo::Idle) => {
                 idle += poll;
-                if stop.load(Ordering::Relaxed) || idle >= idle_timeout {
-                    return Ok(());
+                if stop.load(Ordering::Relaxed) {
+                    break "stop";
+                }
+                if idle >= idle_timeout {
+                    break "idle";
                 }
             }
-            LineIo::Line(line) => {
+            Ok(LineIo::Line(line)) => {
                 idle = Duration::ZERO;
                 let line = line.trim();
                 if line.split_whitespace().next() == Some("REPLICA") {
                     // the connection upgrades to a one-way event stream
                     return serve_replica(stream, lines, line, &executor, &stop);
                 }
+                requests += 1;
                 active.fetch_add(1, Ordering::Relaxed);
                 let _guard = ActiveGuard(active.clone());
                 let reply = match handle_line(line, &executor, &next_id) {
                     Command::Reply(s) => s,
-                    Command::Quit => return Ok(()),
+                    Command::Quit => break "quit",
                 };
-                stream.write_all(reply.as_bytes())?;
-                stream.write_all(b"\n")?;
+                let wrote = stream
+                    .write_all(reply.as_bytes())
+                    .and_then(|()| stream.write_all(b"\n"));
+                if let Err(e) = wrote {
+                    close("io_error", requests);
+                    return Err(e);
+                }
             }
         }
-    }
+    };
+    close(result, requests);
+    Ok(())
 }
 
 /// The primary half of the replication stream: handshake (epoch fencing
@@ -430,11 +547,19 @@ fn serve_replica(
     let role = executor.role();
     role.primary_epoch_seen.fetch_max(remote_epoch, Ordering::Relaxed);
     let local_epoch = role.epoch();
+    let peer = stream.peer_addr().map_or_else(|_| "?".into(), |a| a.to_string());
     if remote_epoch > local_epoch {
         // the peer outranks us: a promotion happened behind our back.
         // Refuse the stream AND fence ourselves — an ex-primary that
         // keeps accepting writes would split-brain.
         role.fenced.store(true, Ordering::Relaxed);
+        if let Some(o) = executor.obs() {
+            o.event(Level::Warn, "self_fenced")
+                .field("peer", &peer)
+                .field_u64("peer_epoch", remote_epoch)
+                .field_u64("local_epoch", local_epoch)
+                .emit();
+        }
         stream.write_all(
             format!(
                 "ERR fenced: peer epoch {remote_epoch} > local {local_epoch} \
@@ -450,6 +575,13 @@ fn serve_replica(
     // is a no-op (≤-version skip) — no gap, no double-apply
     let hub = executor.hub().clone();
     let (floor_seq, sub_id, rx) = hub.subscribe();
+    if let Some(o) = executor.obs() {
+        o.event(Level::Info, "follower_connect")
+            .field("peer", &peer)
+            .field_u64("epoch", remote_epoch)
+            .field_u64("floor_seq", floor_seq)
+            .emit();
+    }
     stream.write_all(format!("OK epoch={local_epoch}\n").as_bytes())?;
     let result = (|| -> std::io::Result<()> {
         for name in executor.store().names() {
@@ -486,6 +618,12 @@ fn serve_replica(
         }
     })();
     hub.unsubscribe(sub_id);
+    if let Some(o) = executor.obs() {
+        o.event(Level::Info, "follower_disconnect")
+            .field("peer", &peer)
+            .field_u64("lag", hub.lag())
+            .emit();
+    }
     result
 }
 
@@ -523,6 +661,18 @@ fn handle_line(line: &str, executor: &Executor, next_id: &AtomicU64) -> Command 
         }
         Some("METRICS") => return Command::Reply(executor.prometheus()),
         Some("LAG") => return Command::Reply(render_lag(executor)),
+        Some("HEALTH") => return Command::Reply(render_health(executor)),
+        Some("DUMP") => {
+            return Command::Reply(match executor.obs() {
+                None => "ERR no event log attached".into(),
+                Some(o) => match o.dump("request") {
+                    Ok((path, events)) => {
+                        format!("OK dump={} events={events}", path.display())
+                    }
+                    Err(e) => format!("ERR dump failed: {e}"),
+                },
+            })
+        }
         Some("PROMOTE") => {
             return Command::Reply(match executor.promote() {
                 Ok((epoch, graphs)) => {
@@ -606,20 +756,27 @@ fn render_traces(executor: &Executor, kv: &[(&str, &str)]) -> String {
     s
 }
 
+/// The `HEALTH` reply: liveness + identity in one line — what a probe
+/// or a fleet dashboard wants without parsing the Prometheus text.
+fn render_health(executor: &Executor) -> String {
+    format!(
+        "HEALTH role={} epoch={} version={} git={} uptime_s={} graphs={}",
+        executor.role_name(),
+        executor.role().epoch(),
+        env!("CARGO_PKG_VERSION"),
+        env!("BIMATCH_GIT_HASH"),
+        executor.metrics.uptime_seconds(),
+        executor.store().names().len(),
+    )
+}
+
 /// The `LAG` reply: both sides of the replication stream in one line.
 fn render_lag(executor: &Executor) -> String {
     let role = executor.role();
     let hub = executor.hub();
-    let role_name = if role.fenced.load(Ordering::Relaxed) {
-        "fenced"
-    } else if role.is_replica() {
-        "follower"
-    } else {
-        "primary"
-    };
     format!(
         "LAG role={} epoch={} followers={} shipped={} acked={} lag={} applied={} connected={}",
-        role_name,
+        executor.role_name(),
         role.epoch(),
         hub.subscriber_count(),
         hub.last_seq(),

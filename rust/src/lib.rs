@@ -77,6 +77,7 @@ pub mod graph;
 pub mod harness;
 pub mod matching;
 pub mod multicore;
+pub mod obs;
 pub mod persist;
 pub mod runtime;
 pub mod sanitize;

@@ -1,0 +1,230 @@
+//! The flight recorder: a bounded ring of recent event lines that can
+//! be turned into an on-disk postmortem three ways — a panic hook, the
+//! `DUMP` wire verb, and a once-a-second background flush of
+//! `flightrec/latest.jsonl` (so even SIGKILL, which runs no hooks,
+//! leaves the last flushed ring behind).
+//!
+//! Same slot discipline as [`crate::trace::TraceRing`]: an atomic head
+//! plus brief per-slot mutexes, never held across I/O. Recording is the
+//! only hot-path cost; everything file-shaped happens on dump/flush.
+
+use super::Obs;
+use crate::trace::{json_escape, unix_ms};
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once, Weak};
+
+/// Bounded ring of pre-rendered JSONL event lines.
+pub struct FlightRecorder {
+    slots: Vec<Mutex<Option<(u64, String)>>>,
+    head: AtomicU64,
+    /// head value at the last `latest.jsonl` flush (skip no-op flushes)
+    flushed: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Self {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            flushed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Lines recorded so far (monotonic, not clamped to capacity).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    pub fn record(&self, line: &str) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        // brief per-slot lock: one String swap, never held across work
+        *self.slots[slot].lock().unwrap() = Some((seq, line.to_string()));
+    }
+
+    /// The ring's current contents, oldest → newest.
+    pub fn snapshot(&self) -> Vec<String> {
+        let mut entries: Vec<(u64, String)> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            if let Some((seq, line)) = slot.lock().unwrap().as_ref() {
+                entries.push((*seq, line.clone()));
+            }
+        }
+        entries.sort_by_key(|(seq, _)| *seq);
+        entries.into_iter().map(|(_, l)| l).collect()
+    }
+}
+
+fn header(reason: &str, events: usize) -> String {
+    format!(
+        "{{\"schema\":\"bimatch-flightrec/1\",\"reason\":\"{}\",\"ts_ms\":{},\"events\":{}}}",
+        json_escape(reason),
+        unix_ms(),
+        events
+    )
+}
+
+/// Write a one-shot dump `dump-<reason>-<ts>.jsonl` under `dir`
+/// (creating it): a schema header line, then the ring oldest → newest.
+pub fn dump_to(ring: &FlightRecorder, dir: &Path, reason: &str) -> io::Result<(PathBuf, usize)> {
+    fs::create_dir_all(dir)?;
+    let events = ring.snapshot();
+    // filename-safe reason; uniqueness from the wall clock + recorded count
+    let tag: String =
+        reason.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '-' }).collect();
+    let path = dir.join(format!("dump-{tag}-{}-{}.jsonl", unix_ms(), ring.recorded()));
+    let mut f = fs::File::create(&path)?;
+    writeln!(f, "{}", header(reason, events.len()))?;
+    for line in &events {
+        writeln!(f, "{line}")?;
+    }
+    f.sync_all()?;
+    Ok((path, events.len()))
+}
+
+/// Refresh `latest.jsonl` under `dir` via tmp + atomic rename; skipped
+/// when nothing was recorded since the previous flush (so an idle
+/// server doesn't rewrite the file every tick).
+pub fn flush_latest(ring: &FlightRecorder, dir: &Path) -> io::Result<()> {
+    let head = ring.recorded();
+    if ring.flushed.swap(head, Ordering::Relaxed) == head && dir.join("latest.jsonl").exists() {
+        return Ok(());
+    }
+    fs::create_dir_all(dir)?;
+    let events = ring.snapshot();
+    let tmp = dir.join("latest.jsonl.tmp");
+    {
+        let mut f = fs::File::create(&tmp)?;
+        writeln!(f, "{}", header("flush", events.len()))?;
+        for line in &events {
+            writeln!(f, "{line}")?;
+        }
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, dir.join("latest.jsonl"))
+}
+
+static PANIC_SINKS: Mutex<Vec<Weak<Obs>>> = Mutex::new(Vec::new());
+static PANIC_HOOK: Once = Once::new();
+
+/// Register `obs` with the process-wide panic hook: a panic anywhere
+/// records a `panic` event and dumps every registered recorder that has
+/// a data dir. The hook chains the previous one (the backtrace still
+/// prints), installs once, and holds only weak handles — a server torn
+/// down by tests stops being dumped.
+pub fn register_panic_dump(obs: &Arc<Obs>) {
+    {
+        let mut sinks = PANIC_SINKS.lock().unwrap();
+        sinks.retain(|w| w.strong_count() > 0);
+        sinks.push(Arc::downgrade(obs));
+    }
+    PANIC_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            // a poisoned registry must not abort inside the hook
+            if let Ok(sinks) = PANIC_SINKS.lock() {
+                for obs in sinks.iter().filter_map(Weak::upgrade) {
+                    obs.event(super::Level::Error, "panic")
+                        .field("message", &info.to_string())
+                        .emit();
+                    if obs.data_dir().is_some() {
+                        let _ = obs.dump("panic");
+                    }
+                }
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Level;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bimatch_flightrec_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_capacity_lines_in_order() {
+        let ring = FlightRecorder::new(4);
+        for i in 0..10 {
+            ring.record(&format!("{{\"n\":{i}}}"));
+        }
+        assert_eq!(ring.recorded(), 10);
+        let snap = ring.snapshot();
+        assert_eq!(snap, vec!["{\"n\":6}", "{\"n\":7}", "{\"n\":8}", "{\"n\":9}"]);
+    }
+
+    #[test]
+    fn dump_writes_header_plus_events() {
+        let dir = tempdir("dump");
+        let ring = FlightRecorder::new(8);
+        ring.record("{\"event\":\"a\"}");
+        ring.record("{\"event\":\"b\"}");
+        let (path, n) = dump_to(&ring, &dir, "unit test").unwrap();
+        assert_eq!(n, 2);
+        let text = fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"schema\":\"bimatch-flightrec/1\""), "{}", lines[0]);
+        assert!(lines[0].contains("\"reason\":\"unit test\""));
+        assert!(lines[0].contains("\"events\":2"));
+        assert_eq!(lines[1], "{\"event\":\"a\"}");
+        assert_eq!(lines[2], "{\"event\":\"b\"}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flush_latest_is_atomic_and_skips_when_clean() {
+        let dir = tempdir("flush");
+        let ring = FlightRecorder::new(8);
+        ring.record("{\"event\":\"x\"}");
+        flush_latest(&ring, &dir).unwrap();
+        let latest = dir.join("latest.jsonl");
+        let first = fs::read_to_string(&latest).unwrap();
+        assert!(first.lines().count() == 2 && first.contains("\"x\""));
+        let mtime = fs::metadata(&latest).unwrap().modified().unwrap();
+        // nothing recorded since: the file is left untouched
+        flush_latest(&ring, &dir).unwrap();
+        assert_eq!(fs::metadata(&latest).unwrap().modified().unwrap(), mtime);
+        ring.record("{\"event\":\"y\"}");
+        flush_latest(&ring, &dir).unwrap();
+        assert!(fs::read_to_string(&latest).unwrap().contains("\"y\""));
+        assert!(!dir.join("latest.jsonl.tmp").exists(), "tmp renamed away");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn obs_dump_lands_under_flightrec() {
+        let dir = tempdir("obsdump");
+        let obs = Obs::open(Level::Info.sev(), Some(dir.clone()), 8).unwrap();
+        obs.capture_sink();
+        obs.event(Level::Info, "hello").emit();
+        let (path, n) = obs.dump("verb").unwrap();
+        assert_eq!(n, 1);
+        assert!(path.starts_with(dir.join("flightrec")));
+        assert!(fs::read_to_string(&path).unwrap().contains("\"hello\""));
+        assert!(
+            Obs::in_memory(Level::Info.sev(), 4).dump("x").is_err(),
+            "dumps need a data dir"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,417 @@
+//! Fleet-level observability: the structured event log and the
+//! always-on flight recorder.
+//!
+//! PR 9's span tracer answers "where did *this job's* time go"; this
+//! layer answers "what has *this process* been doing" — the questions an
+//! operator asks a fleet. Two halves share one [`Obs`] handle:
+//!
+//! * **Structured event log** — every server-lifecycle event
+//!   (connection accepted/dropped, drain, eviction, recovery,
+//!   promotion/fencing, follower connect/disconnect, WAL compaction,
+//!   slow request, panic) is one JSONL object
+//!   (`{"ts_ms":…,"level":"…","event":"…",…}`) written to stderr and,
+//!   when the server has a data dir, appended to
+//!   `<data-dir>/events.jsonl`. Levels follow the usual ladder
+//!   (`debug < info < warn < error`); the sink threshold comes from
+//!   `serve --log-level` or the `BIMATCH_LOG` env var (`off` silences
+//!   the sinks entirely). Each event kind is token-bucketed
+//!   ([`RATE_LIMIT_PER_SEC`] per second) so a misbehaving client
+//!   cannot turn the log into the bottleneck — suppressed counts are
+//!   reported when the window rolls over, never silently dropped.
+//! * **Flight recorder** ([`flightrec`]) — a bounded ring that records
+//!   *every* event line regardless of level or rate limit (the ring
+//!   write is the only cost), plus a one-line span summary per job.
+//!   The ring is dumped to `<data-dir>/flightrec/` by a panic hook, on
+//!   demand via the `DUMP` wire verb, and once a second by a background
+//!   flusher (`latest.jsonl`, tmp+rename) — so even a SIGKILL'd server
+//!   leaves a parseable postmortem of its last moments.
+//!
+//! Everything is hand-rolled JSON (serde is unavailable offline),
+//! escaping through [`crate::trace::json_escape`] — the same encoder
+//! the trace layer's `TRACE` verb uses.
+
+pub mod flightrec;
+
+pub use flightrec::FlightRecorder;
+
+use crate::sanitize::lockorder::{self, LockClass};
+use crate::trace::{json_escape, unix_ms};
+use std::collections::HashMap;
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Severity of one event. Ordered: `Debug < Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    fn sev(self) -> u8 {
+        match self {
+            Level::Debug => 0,
+            Level::Info => 1,
+            Level::Warn => 2,
+            Level::Error => 3,
+        }
+    }
+}
+
+/// Sink threshold: events below it skip the sinks (never the ring).
+/// `0..=3` map to [`Level`]; [`FILTER_OFF`] silences the sinks.
+pub const FILTER_OFF: u8 = 4;
+
+/// Parse a `--log-level` / `BIMATCH_LOG` value.
+pub fn parse_filter(s: &str) -> Option<u8> {
+    match s {
+        "debug" => Some(Level::Debug.sev()),
+        "info" => Some(Level::Info.sev()),
+        "warn" => Some(Level::Warn.sev()),
+        "error" => Some(Level::Error.sev()),
+        "off" => Some(FILTER_OFF),
+        _ => None,
+    }
+}
+
+pub fn filter_name(f: u8) -> &'static str {
+    match f {
+        0 => "debug",
+        1 => "info",
+        2 => "warn",
+        3 => "error",
+        _ => "off",
+    }
+}
+
+/// The default sink threshold: `BIMATCH_LOG` when set and valid,
+/// otherwise `info`.
+pub fn filter_from_env() -> u8 {
+    std::env::var("BIMATCH_LOG")
+        .ok()
+        .and_then(|v| parse_filter(&v))
+        .unwrap_or_else(|| Level::Info.sev())
+}
+
+/// Per-kind sink budget: at most this many lines of one event kind
+/// reach stderr/the file per second. The ring is never limited.
+pub const RATE_LIMIT_PER_SEC: u32 = 50;
+
+struct Window {
+    start: Instant,
+    emitted: u32,
+    suppressed: u64,
+}
+
+struct SinkState {
+    /// `<data-dir>/events.jsonl`, append mode; `None` without a data dir
+    file: Option<fs::File>,
+    /// per-kind rate-limit windows
+    windows: HashMap<&'static str, Window>,
+    /// tests: capture sink lines instead of writing stderr
+    capture: Option<Vec<String>>,
+}
+
+/// The process-wide observability handle: event log sinks + flight
+/// recorder ring. Cheap to clone via `Arc`; every component (server
+/// accept loop, executor, replication tailer) shares one.
+pub struct Obs {
+    filter: AtomicU8,
+    sink: Mutex<SinkState>,
+    ring: FlightRecorder,
+    data_dir: Option<PathBuf>,
+}
+
+impl Obs {
+    /// Open the full handle: sink threshold `filter`, a ring of
+    /// `ring_capacity` lines, and — when `data_dir` is set — the
+    /// `events.jsonl` append sink plus the `flightrec/` dump target.
+    pub fn open(
+        filter: u8,
+        data_dir: Option<PathBuf>,
+        ring_capacity: usize,
+    ) -> io::Result<Arc<Self>> {
+        let file = match &data_dir {
+            Some(dir) => {
+                fs::create_dir_all(dir)?;
+                Some(fs::OpenOptions::new().create(true).append(true).open(dir.join("events.jsonl"))?)
+            }
+            None => None,
+        };
+        Ok(Arc::new(Self {
+            filter: AtomicU8::new(filter),
+            sink: Mutex::new(SinkState { file, windows: HashMap::new(), capture: None }),
+            ring: FlightRecorder::new(ring_capacity),
+            data_dir,
+        }))
+    }
+
+    /// A sink-less handle (ring only) for embedded/test use.
+    pub fn in_memory(filter: u8, ring_capacity: usize) -> Arc<Self> {
+        Self::open(filter, None, ring_capacity).expect("no I/O without a data dir")
+    }
+
+    /// Divert sink output into an in-memory buffer (tests assert on
+    /// exactly what an operator would have seen on stderr).
+    pub fn capture_sink(&self) {
+        lockorder::lock(LockClass::Obs, &self.sink).capture = Some(Vec::new());
+    }
+
+    /// Drain the capture buffer set up by [`Obs::capture_sink`].
+    pub fn captured(&self) -> Vec<String> {
+        lockorder::lock(LockClass::Obs, &self.sink)
+            .capture
+            .as_mut()
+            .map(std::mem::take)
+            .unwrap_or_default()
+    }
+
+    pub fn data_dir(&self) -> Option<&Path> {
+        self.data_dir.as_deref()
+    }
+
+    pub fn filter(&self) -> u8 {
+        self.filter.load(Ordering::Relaxed)
+    }
+
+    pub fn set_filter(&self, f: u8) {
+        self.filter.store(f, Ordering::Relaxed);
+    }
+
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.ring
+    }
+
+    /// Start one event. Finish with [`EventBuilder::emit`]:
+    ///
+    /// ```ignore
+    /// obs.event(Level::Info, "graph_evicted")
+    ///     .field("graph", name)
+    ///     .field_u64("version", v)
+    ///     .emit();
+    /// ```
+    pub fn event(&self, level: Level, kind: &'static str) -> EventBuilder<'_> {
+        EventBuilder { obs: self, level, kind, fields: String::new() }
+    }
+
+    fn submit(&self, level: Level, kind: &'static str, fields: &str) {
+        let line = format!(
+            "{{\"ts_ms\":{},\"level\":\"{}\",\"event\":\"{}\"{}}}",
+            unix_ms(),
+            level.name(),
+            kind,
+            fields
+        );
+        // the ring records everything — postmortems must not depend on
+        // the sink threshold or the rate limiter
+        self.ring.record(&line);
+        if level.sev() < self.filter.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut st = lockorder::lock(LockClass::Obs, &self.sink);
+        let now = Instant::now();
+        let w = st
+            .windows
+            .entry(kind)
+            .or_insert(Window { start: now, emitted: 0, suppressed: 0 });
+        let mut rollover = None;
+        if now.duration_since(w.start).as_secs() >= 1 {
+            if w.suppressed > 0 {
+                rollover = Some(w.suppressed);
+            }
+            *w = Window { start: now, emitted: 0, suppressed: 0 };
+        }
+        if w.emitted >= RATE_LIMIT_PER_SEC {
+            w.suppressed += 1;
+            return;
+        }
+        w.emitted += 1;
+        if let Some(count) = rollover {
+            let summary = format!(
+                "{{\"ts_ms\":{},\"level\":\"warn\",\"event\":\"log_suppressed\",\
+                 \"of\":\"{kind}\",\"count\":{count}}}",
+                unix_ms()
+            );
+            write_sinks(&mut st, &summary);
+        }
+        write_sinks(&mut st, &line);
+    }
+
+    /// Write a flight-recorder dump to
+    /// `<data-dir>/flightrec/dump-<reason>-<ts>.jsonl` (header line,
+    /// then the ring oldest→newest). Errors without a data dir.
+    pub fn dump(&self, reason: &str) -> io::Result<(PathBuf, usize)> {
+        let dir = self.data_dir.as_ref().ok_or_else(|| {
+            io::Error::new(io::ErrorKind::NotFound, "flight recorder dumps require a data dir")
+        })?;
+        flightrec::dump_to(&self.ring, &dir.join("flightrec"), reason)
+    }
+
+    /// Refresh `<data-dir>/flightrec/latest.jsonl` (tmp + atomic
+    /// rename): the black-box artifact a SIGKILL leaves behind. No-op
+    /// without a data dir or when nothing was recorded since last time.
+    pub fn flush_latest(&self) -> io::Result<()> {
+        let Some(dir) = &self.data_dir else { return Ok(()) };
+        flightrec::flush_latest(&self.ring, &dir.join("flightrec"))
+    }
+}
+
+fn write_sinks(st: &mut SinkState, line: &str) {
+    if let Some(buf) = &mut st.capture {
+        buf.push(line.to_string());
+    } else {
+        let mut err = io::stderr().lock();
+        let _ = writeln!(err, "{line}");
+    }
+    if let Some(f) = &mut st.file {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+/// One event under construction; fields append in call order.
+pub struct EventBuilder<'a> {
+    obs: &'a Obs,
+    level: Level,
+    kind: &'static str,
+    fields: String,
+}
+
+impl EventBuilder<'_> {
+    pub fn field(mut self, key: &str, value: &str) -> Self {
+        self.fields.push_str(&format!(",\"{key}\":\"{}\"", json_escape(value)));
+        self
+    }
+
+    pub fn field_u64(mut self, key: &str, value: u64) -> Self {
+        self.fields.push_str(&format!(",\"{key}\":{value}"));
+        self
+    }
+
+    pub fn field_f64(mut self, key: &str, value: f64) -> Self {
+        if value.is_finite() {
+            self.fields.push_str(&format!(",\"{key}\":{value:.3}"));
+        } else {
+            self.fields.push_str(&format!(",\"{key}\":null"));
+        }
+        self
+    }
+
+    pub fn field_bool(mut self, key: &str, value: bool) -> Self {
+        self.fields.push_str(&format!(",\"{key}\":{value}"));
+        self
+    }
+
+    pub fn emit(self) {
+        self.obs.submit(self.level, self.kind, &self.fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_parses_and_orders() {
+        assert_eq!(parse_filter("debug"), Some(0));
+        assert_eq!(parse_filter("info"), Some(1));
+        assert_eq!(parse_filter("warn"), Some(2));
+        assert_eq!(parse_filter("error"), Some(3));
+        assert_eq!(parse_filter("off"), Some(FILTER_OFF));
+        assert_eq!(parse_filter("verbose"), None);
+        assert!(Level::Debug < Level::Error);
+        assert_eq!(filter_name(FILTER_OFF), "off");
+    }
+
+    #[test]
+    fn events_render_as_one_json_object_per_line() {
+        let obs = Obs::in_memory(Level::Debug.sev(), 8);
+        obs.capture_sink();
+        obs.event(Level::Info, "conn_accept")
+            .field("peer", "127.0.0.1:5\"quoted\"")
+            .field_u64("conn", 3)
+            .field_f64("total_ms", 1.25)
+            .field_bool("ok", true)
+            .emit();
+        let lines = obs.captured();
+        assert_eq!(lines.len(), 1);
+        let l = &lines[0];
+        assert!(l.starts_with("{\"ts_ms\":"), "{l}");
+        assert!(l.contains("\"event\":\"conn_accept\""), "{l}");
+        assert!(l.contains("\"peer\":\"127.0.0.1:5\\\"quoted\\\"\""), "{l}");
+        assert!(l.contains("\"conn\":3"), "{l}");
+        assert!(l.contains("\"total_ms\":1.250"), "{l}");
+        assert!(l.contains("\"ok\":true"), "{l}");
+        assert!(l.ends_with('}'), "{l}");
+        assert!(!l.contains('\n'));
+    }
+
+    #[test]
+    fn sink_threshold_filters_but_ring_records_everything() {
+        let obs = Obs::in_memory(Level::Warn.sev(), 8);
+        obs.capture_sink();
+        obs.event(Level::Debug, "noise").emit();
+        obs.event(Level::Info, "noise").emit();
+        obs.event(Level::Error, "loud").emit();
+        let lines = obs.captured();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        assert!(lines[0].contains("\"loud\""));
+        assert_eq!(obs.recorder().recorded(), 3, "the ring sees every level");
+        let ring = obs.recorder().snapshot();
+        assert!(ring[0].contains("\"noise\"") && ring[2].contains("\"loud\""));
+    }
+
+    #[test]
+    fn off_silences_sinks_entirely() {
+        let obs = Obs::in_memory(FILTER_OFF, 4);
+        obs.capture_sink();
+        obs.event(Level::Error, "anything").emit();
+        assert!(obs.captured().is_empty());
+        assert_eq!(obs.recorder().recorded(), 1);
+    }
+
+    #[test]
+    fn per_kind_rate_limit_caps_the_sink_not_the_ring() {
+        let obs = Obs::in_memory(Level::Debug.sev(), 512);
+        obs.capture_sink();
+        for _ in 0..(RATE_LIMIT_PER_SEC + 25) {
+            obs.event(Level::Info, "chatty").emit();
+        }
+        // a different kind has its own budget
+        obs.event(Level::Info, "quiet").emit();
+        let lines = obs.captured();
+        let chatty = lines.iter().filter(|l| l.contains("\"chatty\"")).count();
+        assert_eq!(chatty, RATE_LIMIT_PER_SEC as usize);
+        assert_eq!(lines.iter().filter(|l| l.contains("\"quiet\"")).count(), 1);
+        assert_eq!(obs.recorder().recorded() as u32, RATE_LIMIT_PER_SEC + 26);
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let dir = std::env::temp_dir().join(format!("bimatch_obs_file_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let obs = Obs::open(Level::Info.sev(), Some(dir.clone()), 8).unwrap();
+        obs.capture_sink();
+        obs.event(Level::Info, "first").field_u64("n", 1).emit();
+        obs.event(Level::Warn, "second").emit();
+        let text = std::fs::read_to_string(dir.join("events.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"first\"") && lines[1].contains("\"second\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -453,6 +453,9 @@ pub struct TailerCfg {
     /// where to persist an epoch adopted from the primary (the
     /// follower's data dir), when durable
     pub epoch_dir: Option<PathBuf>,
+    /// event log for tailer connect/disconnect lifecycle (optional so
+    /// embedded tailers can run without one)
+    pub obs: Option<Arc<crate::obs::Obs>>,
 }
 
 enum StreamEnd {
@@ -481,6 +484,20 @@ where
         }
         let end = stream_once(cfg, &mut apply);
         let was_streaming = cfg.role.tailer_connected.swap(false, Ordering::Relaxed);
+        if was_streaming {
+            if let Some(o) = &cfg.obs {
+                let reason = match &end {
+                    Ok(StreamEnd::Fenced) => "fenced",
+                    Ok(StreamEnd::Disconnected) => "disconnected",
+                    Ok(StreamEnd::ApplyError) => "apply_error",
+                    Err(_) => "io_error",
+                };
+                o.event(crate::obs::Level::Warn, "tailer_disconnect")
+                    .field("primary", &cfg.primary)
+                    .field("reason", reason)
+                    .emit();
+            }
+        }
         if matches!(end, Ok(StreamEnd::Fenced)) {
             return;
         }
@@ -540,6 +557,12 @@ where
         }
     }
     cfg.role.tailer_connected.store(true, Ordering::Relaxed);
+    if let Some(o) = &cfg.obs {
+        o.event(crate::obs::Level::Info, "tailer_connect")
+            .field("primary", &cfg.primary)
+            .field_u64("epoch", cfg.role.epoch())
+            .emit();
+    }
     // short timeout from here on so shutdown/promotion are noticed fast
     stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     loop {

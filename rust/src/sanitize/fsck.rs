@@ -98,7 +98,41 @@ pub fn fsck_dir(dir: &Path) -> io::Result<FsckReport> {
         fsck_graph(&p, &name, &mut report)?;
         report.graphs.push(name);
     }
+    fsck_observability(dir, &mut report);
     Ok(report)
+}
+
+/// The observability artifacts a server leaves next to the durability
+/// files (`events.jsonl`, `flightrec/` — see [`crate::obs`]) are known
+/// residents of a data dir: surface them as info, never as orphaned or
+/// damaged state.
+fn fsck_observability(dir: &Path, out: &mut FsckReport) {
+    let events = dir.join("events.jsonl");
+    if let Ok(meta) = events.metadata() {
+        out.push(
+            "-",
+            Severity::Info,
+            format!("event log events.jsonl present ({} bytes)", meta.len()),
+        );
+    }
+    let flightrec = dir.join("flightrec");
+    if flightrec.is_dir() {
+        let dumps = std::fs::read_dir(&flightrec)
+            .map(|entries| {
+                entries
+                    .filter_map(|e| e.ok())
+                    .filter(|e| {
+                        e.path().extension().is_some_and(|x| x == "jsonl")
+                    })
+                    .count()
+            })
+            .unwrap_or(0);
+        out.push(
+            "-",
+            Severity::Info,
+            format!("flight recorder flightrec/ present ({dumps} dump file(s))"),
+        );
+    }
 }
 
 fn fsck_graph(p: &Persistence, name: &str, out: &mut FsckReport) -> io::Result<()> {
@@ -594,5 +628,37 @@ mod tests {
     #[test]
     fn missing_dir_errors() {
         assert!(fsck_dir(Path::new("/no/such/bimatch-dir")).is_err());
+    }
+
+    #[test]
+    fn observability_artifacts_are_info_never_fatal() {
+        let (_p, d, _dg) = seeded("obsfiles");
+        // what a server leaves behind: the event log and a flight
+        // recorder dir with one postmortem dump plus a stray temp file
+        std::fs::write(d.join("events.jsonl"), "{\"ts_ms\":1,\"event\":\"x\"}\n").unwrap();
+        std::fs::create_dir_all(d.join("flightrec")).unwrap();
+        std::fs::write(d.join("flightrec/latest.jsonl"), "{}\n").unwrap();
+        std::fs::write(d.join("flightrec/latest.jsonl.tmp"), "").unwrap();
+        let report = fsck_dir(&d).unwrap();
+        assert_eq!(report.fatal_count(), 0, "{:?}", report.findings);
+        assert_eq!(report.repairable_count(), 0, "{:?}", report.findings);
+        assert!(
+            report.findings.iter().any(|f| {
+                f.severity == Severity::Info && f.message.contains("events.jsonl present")
+            }),
+            "{:?}",
+            report.findings
+        );
+        assert!(
+            report.findings.iter().any(|f| {
+                f.severity == Severity::Info
+                    && f.message.contains("flightrec/ present (1 dump file(s))")
+            }),
+            "{:?}",
+            report.findings
+        );
+        // the graph findings are untouched by the extra files
+        assert_eq!(report.graphs, vec!["g".to_string()]);
+        let _ = std::fs::remove_dir_all(&d);
     }
 }

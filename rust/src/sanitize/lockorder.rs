@@ -67,6 +67,9 @@ pub enum LockClass {
     /// the metrics per-spec aggregation map (leaf: held only to bump
     /// counters, nothing acquired under it)
     SpecStats,
+    /// the event-log sink state (leaf: held only to rate-limit and
+    /// write one line, nothing acquired under it)
+    Obs,
     /// watchdog negative tests only
     TestA,
     /// watchdog negative tests only

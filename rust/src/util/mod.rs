@@ -3,6 +3,7 @@
 //! timing, a scoped thread pool, evaluation statistics, a mini
 //! property-testing framework, and ASCII/Markdown table rendering.
 
+pub mod json;
 pub mod pool;
 pub mod qcheck;
 pub mod rng;

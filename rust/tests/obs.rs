@@ -1,0 +1,189 @@
+//! Observability integration: the slow-request event log across
+//! non-Complete outcomes, and the `HEALTH` / `DUMP` wire verbs plus the
+//! flight-recorder artifacts against a live server.
+
+use bimatch::coordinator::job::{GraphSource, MatchJob};
+use bimatch::coordinator::{Executor, Metrics, Server, ServerCfg};
+use bimatch::dynamic::DeltaBatch;
+use bimatch::graph::gen::Family;
+use bimatch::obs::{parse_filter, Obs};
+use bimatch::util::json::{parse, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "bimatch_obs_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn slow_executor() -> (Executor, Arc<Obs>, Arc<Metrics>) {
+    let obs = Obs::in_memory(parse_filter("debug").unwrap(), 64);
+    obs.capture_sink();
+    let metrics = Arc::new(Metrics::new());
+    let e = Executor::new(None, metrics.clone())
+        .with_obs(obs.clone())
+        .with_slow_threshold(Duration::ZERO);
+    (e, obs, metrics)
+}
+
+/// The `slow_job` lines an operator would have seen, parsed.
+fn slow_events(obs: &Obs) -> Vec<Value> {
+    obs.captured()
+        .into_iter()
+        .map(|l| parse(&l).unwrap_or_else(|e| panic!("unparseable event {l:?}: {e}")))
+        .filter(|v| v.get("event").and_then(Value::as_str) == Some("slow_job"))
+        .collect()
+}
+
+fn str_field<'a>(v: &'a Value, key: &str) -> &'a str {
+    v.get(key).and_then(Value::as_str).unwrap_or_else(|| panic!("{key} missing in {v:?}"))
+}
+
+#[test]
+fn slow_log_carries_timeout_outcome() {
+    let (e, obs, metrics) = slow_executor();
+    let job = MatchJob::new(1, GraphSource::Generate { family: Family::Uniform, n: 400, seed: 3, permute: false })
+        .with_timeout_ms(0);
+    let out = e.execute(&job);
+    assert!(out.error.is_some(), "a zero deadline must trip");
+    assert_eq!(metrics.jobs_slow.load(Ordering::Relaxed), 1);
+    let slow = slow_events(&obs);
+    assert_eq!(slow.len(), 1, "{slow:?}");
+    assert_eq!(str_field(&slow[0], "outcome"), "timeout");
+    assert_eq!(str_field(&slow[0], "level"), "warn");
+    assert_eq!(str_field(&slow[0], "op"), "match");
+}
+
+#[test]
+fn slow_log_carries_cancelled_outcome() {
+    let (e, obs, metrics) = slow_executor();
+    e.cancel_token().cancel();
+    let job = MatchJob::new(1, GraphSource::Generate { family: Family::Uniform, n: 400, seed: 3, permute: false });
+    let out = e.execute(&job);
+    assert!(out.error.is_some(), "a cancelled executor must fail the job");
+    assert_eq!(metrics.jobs_slow.load(Ordering::Relaxed), 1);
+    let slow = slow_events(&obs);
+    assert_eq!(slow.len(), 1, "{slow:?}");
+    assert_eq!(str_field(&slow[0], "outcome"), "cancelled");
+}
+
+#[test]
+fn slow_log_marks_rolled_back_updates() {
+    let (e, obs, metrics) = slow_executor();
+    let g = Arc::new(Family::Uniform.generate(400, 3));
+    let out = e.execute(&MatchJob::load_graph(1, "g", GraphSource::InMemory(g)));
+    assert!(out.error.is_none(), "{:?}", out.error);
+    let slow_before = metrics.jobs_slow.load(Ordering::Relaxed);
+    let _ = obs.captured(); // discard the load's own slow line
+
+    // a zero deadline fails the repair and rolls the stored graph back
+    let batch = DeltaBatch::new().insert(0, 1).insert(1, 0);
+    let out = e.execute(&MatchJob::update_graph(2, "g", batch).with_timeout_ms(0));
+    assert!(out.error.is_some(), "a zero deadline must trip the update");
+    assert_eq!(metrics.jobs_slow.load(Ordering::Relaxed), slow_before + 1);
+    let slow = slow_events(&obs);
+    assert_eq!(slow.len(), 1, "{slow:?}");
+    assert_eq!(str_field(&slow[0], "op"), "update");
+    assert_eq!(str_field(&slow[0], "outcome"), "timeout");
+    assert_eq!(
+        slow[0].get("rolled_back").and_then(Value::as_bool),
+        Some(true),
+        "{:?}",
+        slow[0]
+    );
+}
+
+fn start_server(data_dir: Option<PathBuf>) -> (Server, SocketAddr) {
+    let mut cfg = ServerCfg::new("127.0.0.1:0");
+    cfg.data_dir = data_dir;
+    let server = Server::bind_cfg(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    (server, addr)
+}
+
+fn roundtrip(addr: SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+#[test]
+fn health_verb_reports_identity() {
+    let (server, addr) = start_server(None);
+    std::thread::spawn(move || server.serve());
+    roundtrip(addr, "LOAD name=g family=uniform n=300 seed=5");
+    let reply = roundtrip(addr, "HEALTH");
+    assert!(reply.starts_with("HEALTH role=primary epoch="), "{reply}");
+    for key in ["version=", "git=", "uptime_s=", "graphs=1"] {
+        assert!(reply.contains(key), "{key} missing in {reply}");
+    }
+}
+
+#[test]
+fn dump_verb_writes_a_parseable_flight_record() {
+    let dir = tempdir("dump");
+    let (server, addr) = start_server(Some(dir.clone()));
+    std::thread::spawn(move || server.serve());
+    roundtrip(addr, "LOAD name=g family=uniform n=300 seed=5");
+    roundtrip(addr, "MATCH name=g");
+
+    let reply = roundtrip(addr, "DUMP");
+    assert!(reply.starts_with("OK dump="), "{reply}");
+    let path = reply
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix("dump="))
+        .unwrap()
+        .to_string();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 2, "header plus at least one event: {lines:?}");
+    let header = parse(lines[0]).unwrap();
+    assert_eq!(str_field(&header, "schema"), "bimatch-flightrec/1");
+    assert_eq!(str_field(&header, "reason"), "request");
+    for l in &lines[1..] {
+        let v = parse(l).unwrap_or_else(|e| panic!("unparseable dump line {l:?}: {e}"));
+        assert!(v.get("event").is_some(), "{l}");
+    }
+    // the server also left an events.jsonl trail of the same activity
+    let events = std::fs::read_to_string(dir.join("events.jsonl")).unwrap();
+    assert!(events.lines().any(|l| l.contains("\"server_started\"")), "{events}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn clean_shutdown_leaves_latest_flight_record() {
+    let dir = tempdir("latest");
+    let (server, addr) = start_server(Some(dir.clone()));
+    let stop = server.stop_handle();
+    let serve = std::thread::spawn(move || server.serve());
+    roundtrip(addr, "LOAD name=g family=uniform n=300 seed=5");
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+
+    let text = std::fs::read_to_string(dir.join("flightrec").join("latest.jsonl")).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let header = parse(lines[0]).unwrap();
+    assert_eq!(str_field(&header, "schema"), "bimatch-flightrec/1");
+    assert!(
+        lines[1..].iter().any(|l| l.contains("\"server_started\"")),
+        "the flushed ring must hold the lifecycle events: {lines:?}"
+    );
+    for l in &lines[1..] {
+        parse(l).unwrap_or_else(|e| panic!("unparseable line {l:?}: {e}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
